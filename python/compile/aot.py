@@ -1,0 +1,114 @@
+"""AOT bundle builder: corpus → tokenizer → trained weights → HLO text.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Emits into the output directory:
+  tokenizer.json        — BPE merges (shared format with rust/src/tokenizer)
+  weights.npz           — trained parameters, names per `model.param_manifest`
+  model_config.json     — architecture + exported variants + input order
+  model_b{B}_c{C}.hlo.txt — one HLO-text executable per (batch, chunk) shape
+  train_log.json        — loss curve of the build-time training run
+
+HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+
+# (batch, chunk) executable variants: decode step, speculation verify,
+# prefill — each at B=1 (latency path) and B=4 (batched serving).
+VARIANTS = [(1, 1), (1, 8), (1, 16), (4, 1), (4, 8), (4, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(cfg, params, batch, chunk, use_pallas=True):
+    fn = model_mod.make_chunk_fn(cfg, use_pallas=use_pallas)
+    leaves = model_mod.params_to_list(cfg, params)
+    k_cache, v_cache = model_mod.init_cache(cfg, batch)
+    example = (
+        *[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves],
+        jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+        jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch, chunk), jnp.int32),
+        jax.ShapeDtypeStruct((batch, cfg.vocab_size), jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*example)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("DOMINO_TRAIN_STEPS", 400)))
+    ap.add_argument("--vocab-size", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--docs-per-kind", type=int, default=600)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    t0 = time.time()
+    print("== corpus ==")
+    docs = data_mod.make_corpus(seed=0, docs_per_kind=args.docs_per_kind)
+    corpus_bytes = "\n".join(docs).encode()
+    print(f"{len(docs)} docs, {len(corpus_bytes)} bytes")
+
+    print("== tokenizer ==")
+    # BPE training is quadratic-ish in python; a 100 KiB sample is plenty
+    # for 253 merges.
+    tok = data_mod.train_bpe(corpus_bytes[:100_000], args.vocab_size)
+    tok.save(os.path.join(args.out, "tokenizer.json"))
+    print(f"vocab {tok.vocab_size} ({time.time() - t0:.0f}s)")
+
+    print("== train ==")
+    cfg = model_mod.Config(vocab_size=tok.vocab_size)
+    params, history = train_mod.train(
+        cfg, tok, docs, steps=args.steps, seq_len=args.seq_len
+    )
+    train_mod.save_log(history, os.path.join(args.out, "train_log.json"))
+    train_mod.save_weights(cfg, params, os.path.join(args.out, "weights.npz"))
+
+    print("== export ==")
+    variants = []
+    for batch, chunk in VARIANTS:
+        name = f"model_b{batch}_c{chunk}.hlo.txt"
+        text = export_variant(cfg, params, batch, chunk)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        variants.append({"batch": batch, "chunk": chunk, "file": name})
+        print(f"{name}: {len(text)} chars")
+
+    config = {
+        "model": cfg.to_json(),
+        "variants": variants,
+        "param_order": [name for name, _ in model_mod.param_manifest(cfg)],
+        "input_order": ["<params...>", "k_cache", "v_cache", "kv_len", "tokens", "mask"],
+        "output_order": ["logprobs", "k_cache", "v_cache"],
+    }
+    with open(os.path.join(args.out, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+    print(f"done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Synthetic corpus + byte-level BPE (build-time data substrate).
+
+The paper evaluates on GSM8K / CoNLL-2003 with Mistral-7B; neither the
+datasets' licenses nor a 7B model fit this testbed, so we *simulate* (see
+DESIGN.md §Substitutions): a seeded generator produces structured tasks in
+the paper's exact output schemas (App. D), a small transformer is trained
+on them at build time, and the rust eval harness generates held-out
+problems from the same templates with known answers.
+
+The BPE here mirrors ``rust/src/tokenizer`` exactly (same id layout:
+0=EOS, 1=BOS, 2=PAD, 3..258 bytes, then merges; same greedy
+most-frequent-pair trainer) and emits the shared ``tokenizer.json``.
+"""
+
+import json
+import random
+
+EOS_ID, BOS_ID, PAD_ID, NUM_SPECIAL = 0, 1, 2, 3
+
+NAMES = ["Tom", "Anna", "Ben", "Mia", "Sam", "Lily", "Max", "Ruth", "Ivan", "Nora"]
+ITEMS = ["apples", "books", "coins", "pens", "cards", "shells", "stamps", "rocks"]
+JOBS = ["engineer", "doctor", "teacher", "artist", "pilot", "farmer", "writer", "nurse"]
+CITIES = ["Paris", "Zurich", "Boston", "Tokyo", "Oslo", "Madrid", "Cairo", "Lima"]
+ORGS = ["Acme Corp", "Globex", "Initech", "Umbrella", "Stark Labs", "Wayne Co"]
+SURNAMES = ["Smith", "Doe", "Chen", "Garcia", "Patel", "Novak", "Kim", "Rossi"]
+
+
+# --------------------------------------------------------------------------
+# Task generators (formats shared with rust/src/eval/workload.rs)
+# --------------------------------------------------------------------------
+
+def gsm8k_task(rng: random.Random):
+    """One synthetic math word problem + its schema answer (App. D)."""
+    name = rng.choice(NAMES)
+    item = rng.choice(ITEMS)
+    kind = rng.randrange(3)
+    if kind == 0:
+        a, b = rng.randint(2, 12), rng.randint(2, 12)
+        q = f"{name} has {a} {item} and buys {b} more. How many {item} does {name} have now?"
+        step, calc, ans = f"Add the {item}", f"{a} + {b}", a + b
+    elif kind == 1:
+        a = rng.randint(4, 15)
+        b = rng.randint(1, a - 1)
+        q = f"{name} has {a} {item} and gives away {b}. How many {item} are left?"
+        step, calc, ans = f"Subtract the given {item}", f"{a} - {b}", a - b
+    else:
+        a, b = rng.randint(2, 6), rng.randint(2, 6)
+        q = f"{name} has {a} bags with {b} {item} each. How many {item} in total?"
+        step, calc, ans = "Multiply bags by items", f"{a} * {b}", a * b
+    answer = (
+        '{"thoughts": [{"step": "%s", "calculation": "%s", "result": %d}], "answer": %d}'
+        % (step, calc, ans, ans)
+    )
+    return q, answer, ans
+
+
+def conll_task(rng: random.Random):
+    """One synthetic NER sentence + its schema answer (App. D)."""
+    person = f"{rng.choice(NAMES)} {rng.choice(SURNAMES)}"
+    city = rng.choice(CITIES)
+    org = rng.choice(ORGS)
+    form = rng.randrange(3)
+    if form == 0:
+        sent = f"{person} works at {org} in {city}."
+        ents = [(person, "PER"), (org, "ORG"), (city, "LOC")]
+    elif form == 1:
+        sent = f"{person} visited {city} last week."
+        ents = [(person, "PER"), (city, "LOC")]
+    else:
+        sent = f"{org} opened an office in {city}."
+        ents = [(org, "ORG"), (city, "LOC")]
+    answer = (
+        '{"entities": ['
+        + ", ".join('{"entity": "%s", "type": "%s"}' % e for e in ents)
+        + "]}"
+    )
+    return sent, answer, ents
+
+
+def person_json(rng: random.Random) -> str:
+    name = f"{rng.choice(NAMES)} {rng.choice(SURNAMES)}"
+    age = rng.randint(18, 70)
+    job = rng.choice(JOBS)
+    if rng.random() < 0.5:
+        return '{"name": "%s", "age": %d, "occupation": "%s"}' % (name, age, job)
+    return '{\n  "name": "%s",\n  "age": %d,\n  "occupation": "%s"\n}' % (name, age, job)
+
+
+def person_xml(rng: random.Random) -> str:
+    name = f"{rng.choice(NAMES)} {rng.choice(SURNAMES)}"
+    age = rng.randint(18, 70)
+    job = rng.choice(JOBS)
+    salary = rng.randint(30, 200) * 1000
+    return (
+        "<person>\n  <name>%s</name>\n  <age>%d</age>\n  <job>\n    <title>%s</title>\n"
+        "    <salary>%d</salary>\n  </job>\n</person>" % (name, age, job, salary)
+    )
+
+
+def rpg_json(rng: random.Random) -> str:
+    return (
+        '{\n  "id": %d,\n  "description": "A nimble fighter",\n  "name": "%s",\n'
+        '  "age": %d,\n  "armor": "%s",\n  "weapon": "%s",\n  "class": "%s",\n'
+        '  "mantra": "%s",\n  "strength": %d,\n  "items": ["%s", "%s"]\n}'
+        % (
+            rng.randint(1, 99),
+            rng.choice(NAMES),
+            rng.randint(18, 60),
+            rng.choice(["leather", "chainmail", "plate"]),
+            rng.choice(["sword", "axe", "bow"]),
+            rng.choice(["fighter", "ranger", "rogue"]),
+            rng.choice(["strike true", "stay swift", "hold fast"]),
+            rng.randint(3, 18),
+            rng.choice(ITEMS),
+            rng.choice(ITEMS),
+        )
+    )
+
+
+def c_snippet(rng: random.Random) -> str:
+    a, b = rng.randint(1, 9), rng.randint(1, 9)
+    name = rng.choice(["main", "run", "calc"])
+    variants = [
+        'int %s() {\n  int a = %d;\n  int b = %d;\n  return a + b;\n}' % (name, a, b),
+        'int %s() {\n  int x = %d;\n  x = x * %d;\n  return x;\n}' % (name, a, b),
+        'int %s() {\n  int i = 0;\n  while (i < %d) {\n    i = i + 1;\n  }\n  return i;\n}'
+        % (name, a + b),
+    ]
+    return rng.choice(variants)
+
+
+# Prompt wrappers — the serving-side convention (rust mirrors these).
+GSM8K_PROMPT = "Q: {q}\nA: "
+CONLL_PROMPT = "Sentence: {s}\nEntities: "
+PERSON_PROMPT = "A person encoded as JSON object:\n"
+XML_PROMPT = "An XML file describing a person:\n"
+RPG_PROMPT = "A character profile for an RPG game in JSON format:\n"
+C_PROMPT = "A simple C function:\n"
+
+
+def make_corpus(seed: int = 0, docs_per_kind: int = 600) -> list[str]:
+    """The training documents (prompt + answer, one doc per task)."""
+    rng = random.Random(seed)
+    docs = []
+    for _ in range(docs_per_kind):
+        q, answer, _ = gsm8k_task(rng)
+        docs.append(GSM8K_PROMPT.format(q=q) + answer)
+        s, answer, _ = conll_task(rng)
+        docs.append(CONLL_PROMPT.format(s=s) + answer)
+        docs.append(PERSON_PROMPT + person_json(rng))
+    for _ in range(docs_per_kind // 3):
+        docs.append(XML_PROMPT + person_xml(rng))
+        docs.append(RPG_PROMPT + rpg_json(rng))
+        docs.append(C_PROMPT + c_snippet(rng))
+    rng.shuffle(docs)
+    return docs
+
+
+# --------------------------------------------------------------------------
+# Byte-level BPE (mirror of rust/src/tokenizer)
+# --------------------------------------------------------------------------
+
+class Tokenizer:
+    def __init__(self, merges: list[tuple[int, int]]):
+        self.tokens: list[bytes] = [b""] * NUM_SPECIAL + [bytes([i]) for i in range(256)]
+        self.merges: list[tuple[int, int]] = []
+        self.merge_map: dict[tuple[int, int], int] = {}
+        for a, b in merges:
+            self._push_merge(a, b)
+
+    def _push_merge(self, a: int, b: int) -> int:
+        new_id = len(self.tokens)
+        self.tokens.append(self.tokens[a] + self.tokens[b])
+        self.merge_map[(a, b)] = new_id
+        self.merges.append((a, b))
+        return new_id
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.tokens)
+
+    def encode(self, data: bytes) -> list[int]:
+        ids = [b + NUM_SPECIAL for b in data]
+        while len(ids) >= 2:
+            best, best_i = None, -1
+            for i in range(len(ids) - 1):
+                m = self.merge_map.get((ids[i], ids[i + 1]))
+                if m is not None and (best is None or m < best):
+                    best, best_i = m, i
+            if best is None:
+                break
+            pair = self.merges[best - NUM_SPECIAL - 256]
+            out, i = [], 0
+            while i < len(ids):
+                if i + 1 < len(ids) and (ids[i], ids[i + 1]) == pair:
+                    out.append(best)
+                    i += 2
+                else:
+                    out.append(ids[i])
+                    i += 1
+            ids = out
+        return ids
+
+    def decode(self, ids: list[int]) -> bytes:
+        return b"".join(self.tokens[i] for i in ids)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"merges": [list(m) for m in self.merges]}, f)
+
+    @staticmethod
+    def load(path: str) -> "Tokenizer":
+        with open(path) as f:
+            data = json.load(f)
+        return Tokenizer([tuple(m) for m in data["merges"]])
+
+
+def train_bpe(corpus: bytes, vocab_size: int, max_token_len: int = 10) -> Tokenizer:
+    """Greedy most-frequent-pair BPE (ties → smallest pair, as in rust).
+
+    ``max_token_len`` caps merged-token byte length: the synthetic corpus
+    is repetitive enough that unbounded BPE merges 30-byte tokens spanning
+    the prompt/answer boundary, which both defeats the alignment problem
+    under study and starves the model of boundary contexts.
+    """
+    tok = Tokenizer([])
+    ids = [b + NUM_SPECIAL for b in corpus]
+    while tok.vocab_size < vocab_size:
+        counts: dict[tuple[int, int], int] = {}
+        for i in range(len(ids) - 1):
+            p = (ids[i], ids[i + 1])
+            if len(tok.tokens[p[0]]) + len(tok.tokens[p[1]]) > max_token_len:
+                continue
+            counts[p] = counts.get(p, 0) + 1
+        if not counts:
+            break
+        pair, cnt = max(counts.items(), key=lambda kv: (kv[1], (-kv[0][0], -kv[0][1])))
+        if cnt < 2:
+            break
+        new_id = tok._push_merge(*pair)
+        out, i = [], 0
+        while i < len(ids):
+            if i + 1 < len(ids) and (ids[i], ids[i + 1]) == pair:
+                out.append(new_id)
+                i += 2
+            else:
+                out.append(ids[i])
+                i += 1
+        ids = out
+    return tok

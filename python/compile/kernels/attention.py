@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: blocked decode attention with online softmax.
+
+TPU adaptation of the GPU flash-decode pattern (DESIGN.md
+§Hardware-Adaptation): the KV cache is tiled into VMEM-sized blocks via
+``BlockSpec`` (the HBM↔VMEM schedule GPU kernels express with
+threadblocks), the q·Kᵀ product is MXU-shaped ([C, D] × [D, BS]), and the
+running max / normalizer / accumulator live in VMEM scratch across the
+KV-block grid dimension (the online-softmax carry).
+
+Always lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; numerics are identical (pytest asserts vs ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# KV block size (lane-dim multiple of 128 is the MXU-friendly choice; the
+# fixed-size caches we serve are 256–512 entries → 2–4 blocks).
+DEFAULT_BLOCK = 128
+
+
+def _attn_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block: int, scale: float):
+    """One (batch, head, kv-block) grid step.
+
+    Block shapes: q [1,1,C,D] · k,v [1,1,BS,D] · o [1,1,C,D];
+    scratch: m,l [C,1], acc [C,D].
+    """
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # [C, D]
+    k = k_ref[0, 0]  # [BS, D]
+    v = v_ref[0, 0]  # [BS, D]
+    c = q.shape[0]
+
+    scores = jnp.dot(q, k.T) * scale  # [C, BS] — the MXU product
+    # Visibility: key global position t < kv_len + (query index) + 1.
+    tpos = si * block + jax.lax.broadcasted_iota(jnp.int32, (c, block), 1)
+    limit = kvlen_ref[0] + jax.lax.broadcasted_iota(jnp.int32, (c, block), 0) + 1
+    scores = jnp.where(tpos < limit, scores, -jnp.inf)
+
+    # Online softmax update (carries in VMEM scratch).
+    m_prev = m_ref[...]  # [C, 1]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # exp with -inf rows guarded (fully-masked block → contributes zero).
+    p = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m_new), 0.0)  # [C, BS]
+    correction = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def decode_attention(q, k, v, kv_len, *, block: int = DEFAULT_BLOCK):
+    """Pallas decode attention. Same contract as
+    :func:`compile.kernels.ref.decode_attention_ref`.
+
+    q: [B,H,C,D], k/v: [B,H,S,D], kv_len: [B] int32 → [B,H,C,D].
+    """
+    b, h, c, d = q.shape
+    s = k.shape[2]
+    if s % block != 0:
+        raise ValueError(f"cache length {s} must be a multiple of block {block}")
+    scale = 1.0 / (d**0.5)
+    grid = (b, h, s // block)
+    kernel = functools.partial(_attn_kernel, block=block, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,)),
+            pl.BlockSpec((1, 1, c, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, block, d), lambda bi, hi, si: (bi, hi, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, c, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((c, 1), jnp.float32),
+            pltpu.VMEM((c, 1), jnp.float32),
+            pltpu.VMEM((c, d), jnp.float32),
+        ],
+        interpret=True,
+    )(kv_len, q, k, v)

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: fused constraint-mask + log-softmax over the vocab.
+
+The final op of every served forward pass (Algorithm 1 line 7 fused with
+normalization): the logit row never round-trips to HBM between masking and
+the log-softmax reduction. Vocab is padded to a 128-lane multiple by the
+model config, so one [1, V] VMEM block per batch lane is both VPU-friendly
+and small (V ≤ 2048 → ≤ 8 KiB f32).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logits_ref, mask_ref, o_ref):
+    logits = logits_ref[...]
+    mask = mask_ref[...] > 0
+    masked = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.where(mask, jnp.exp(masked - m), 0.0)
+    lse = jnp.log(jnp.sum(ex, axis=-1, keepdims=True)) + m
+    o_ref[...] = jnp.where(mask, logits - lse, -jnp.inf).astype(o_ref.dtype)
+
+
+@jax.jit
+def masked_log_softmax(logits, mask):
+    """Same contract as :func:`compile.kernels.ref.masked_log_softmax_ref`.
+
+    logits: [B, V], mask: [B, V] {0., 1.} → [B, V] log-probs.
+    """
+    b, v = logits.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, v), lambda i: (i, 0)),
+            pl.BlockSpec((1, v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, v), logits.dtype),
+        interpret=True,
+    )(logits, mask)

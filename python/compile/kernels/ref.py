@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+These are also the functions the *training* path uses (training runs the
+plain-jnp model; the AOT inference path swaps in the Pallas kernels, and
+``python/tests/test_kernels.py`` asserts the two agree to float tolerance).
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """Multi-query decode attention over a fixed-size KV cache.
+
+    Args:
+      q: [B, H, C, D]   — C query positions (C=1 for single-token decode).
+      k: [B, H, S, D]   — key cache (padded to S).
+      v: [B, H, S, D]   — value cache.
+      kv_len: [B] int32 — per-lane number of valid cache entries *before*
+        these C queries; query j may attend to keys < kv_len + j + 1.
+
+    Returns:
+      [B, H, C, D] attention output.
+    """
+    b, h, c, d = q.shape
+    s = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.array(d, q.dtype))
+    scores = jnp.einsum("bhcd,bhsd->bhcs", q, k) * scale
+    # Causal-with-offset mask: key position t visible to query j iff
+    # t < kv_len + j + 1.
+    tpos = jnp.arange(s)[None, None, None, :]
+    limit = kv_len[:, None, None, None] + jnp.arange(c)[None, None, :, None] + 1
+    scores = jnp.where(tpos < limit, scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhcs,bhsd->bhcd", probs, v)
+
+
+def masked_log_softmax_ref(logits, mask):
+    """Fused constraint-mask + log-softmax (Algorithm 1 line 7).
+
+    Args:
+      logits: [B, V] raw logits.
+      mask: [B, V] {0., 1.} — 1 = token allowed.
+
+    Returns:
+      [B, V] log-probabilities; masked-out entries are -inf.
+    """
+    masked = jnp.where(mask > 0, logits, -jnp.inf)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    # Guard the all-masked row: max is -inf there; shift by 0 instead.
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.where(mask > 0, jnp.exp(masked - m), 0.0)
+    lse = jnp.log(jnp.sum(ex, axis=-1, keepdims=True)) + m
+    return jnp.where(mask > 0, logits - lse, -jnp.inf)

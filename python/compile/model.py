@@ -1,0 +1,237 @@
+"""L2: the JAX serving model — a small decoder-only transformer.
+
+Two forward paths over the SAME parameters:
+
+* :func:`forward_train` — full-sequence causal forward (plain jnp; used by
+  ``train.py`` where Pallas-interpret would be needlessly slow).
+* :func:`forward_chunk` — the *served* path: C tokens appended to a
+  fixed-size functional KV cache, per-lane positions, calling the L1
+  Pallas kernels (``kernels.attention``, ``kernels.masked_logits``), and
+  returning log-probs with the constraint mask fused into the final
+  normalization. ``use_pallas=False`` swaps in the ``ref.py`` oracles —
+  pytest asserts both paths agree.
+
+The KV cache is functional (inputs → outputs), so speculative rollback is
+free: the coordinator just reuses the pre-call buffers (§3.6).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import masked_logits as ml_kernel
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab_size: int = 512          # multiple of 128 (VPU lanes)
+    d_model: int = 128
+    n_layers: int = 3
+    n_heads: int = 4
+    d_ff: int = 288
+    max_seq: int = 384             # KV cache size; multiple of the KV block
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "Config":
+        return Config(**d)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_manifest(cfg: Config):
+    """Ordered (name, shape) list — the executable input order contract
+    shared with the rust runtime (weights.npz uses these names)."""
+    out = [("emb", (cfg.vocab_size, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        out += [
+            (p + "norm1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "norm2", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    out.append(("norm_f", (cfg.d_model,)))
+    return out
+
+
+def init_params(cfg: Config, key) -> dict:
+    params = {}
+    for name, shape in param_manifest(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("norm1", "norm2", "norm_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (fan_in**-0.5)
+    return params
+
+
+def params_to_list(cfg: Config, params: dict):
+    return [params[name] for name, _ in param_manifest(cfg)]
+
+
+def params_from_list(cfg: Config, leaves):
+    return {name: leaf for (name, _), leaf in zip(param_manifest(cfg), leaves)}
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding. x: [..., T, H, Dh], positions: [..., T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+# --------------------------------------------------------------------------
+# Training path (full sequence, no cache)
+# --------------------------------------------------------------------------
+
+def forward_train(params: dict, cfg: Config, tokens):
+    """tokens [B, T] → logits [B, T, V] (plain jnp, causal)."""
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["emb"][tokens]  # [B, T, D]
+    positions = jnp.arange(t)[None, :].repeat(b, axis=0)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        y = rmsnorm(x, params[p + "norm1"])
+        q = _rope((y @ params[p + "wq"]).reshape(b, t, h, dh), positions, cfg.rope_theta)
+        k = _rope((y @ params[p + "wk"]).reshape(b, t, h, dh), positions, cfg.rope_theta)
+        v = (y @ params[p + "wv"]).reshape(b, t, h, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (dh**0.5)
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, cfg.d_model)
+        x = x + o @ params[p + "wo"]
+        y = rmsnorm(x, params[p + "norm2"])
+        x = x + _swiglu(y, params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"])
+    x = rmsnorm(x, params["norm_f"])
+    return x @ params["emb"].T  # tied head
+
+
+# --------------------------------------------------------------------------
+# Serving path (chunked, functional KV cache, L1 kernels)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: Config, batch: int):
+    shape = (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def forward_chunk(params: dict, cfg: Config, k_cache, v_cache, kv_len, tokens, mask,
+                  use_pallas: bool = True):
+    """Append C tokens per lane; return per-position log-probs.
+
+    Args:
+      k_cache, v_cache: [L, B, H, S, Dh] functional caches.
+      kv_len: [B] int32 — tokens already in each lane.
+      tokens: [B, C] int32.
+      mask: [B, V] {0,1} — constraint mask for the *last* position
+        (earlier positions get all-ones: they are scored, not constrained).
+
+    Returns:
+      (logprobs [B, C, V], k_cache', v_cache').
+    """
+    b, c = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["emb"][tokens]  # [B, C, D]
+    positions = kv_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
+
+    attn = attn_kernel.decode_attention if use_pallas else kref.decode_attention_ref
+    mls = ml_kernel.masked_log_softmax if use_pallas else kref.masked_log_softmax_ref
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        y = rmsnorm(x, params[p + "norm1"])
+        q = _rope((y @ params[p + "wq"]).reshape(b, c, h, dh), positions, cfg.rope_theta)
+        k = _rope((y @ params[p + "wk"]).reshape(b, c, h, dh), positions, cfg.rope_theta)
+        v = (y @ params[p + "wv"]).reshape(b, c, h, dh)
+        # Scatter the C new entries at each lane's offset (per-lane starts →
+        # vmapped dynamic_update_slice).
+        upd = jax.vmap(lambda cache, new, p0: jax.lax.dynamic_update_slice(cache, new, (0, p0, 0)))
+        kc = upd(k_cache[i], k.transpose(0, 2, 1, 3), kv_len)  # [B, H, S, Dh]
+        vc = upd(v_cache[i], v.transpose(0, 2, 1, 3), kv_len)
+        new_k.append(kc)
+        new_v.append(vc)
+        o = attn(q.transpose(0, 2, 1, 3), kc, vc, kv_len)  # [B, H, C, Dh]
+        o = o.transpose(0, 2, 1, 3).reshape(b, c, cfg.d_model)
+        x = x + o @ params[p + "wo"]
+        y = rmsnorm(x, params[p + "norm2"])
+        x = x + _swiglu(y, params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"])
+
+    x = rmsnorm(x, params["norm_f"])
+    logits = x @ params["emb"].T  # [B, C, V]
+    # Fused mask+log-softmax: all-ones for positions < C-1, `mask` for the
+    # last (the only position a new token is decoded from).
+    v_sz = cfg.vocab_size
+    full_mask = jnp.concatenate(
+        [jnp.ones((b, c - 1, v_sz), logits.dtype), mask[:, None, :]], axis=1
+    ) if c > 1 else mask[:, None, :]
+    logprobs = mls(logits.reshape(b * c, v_sz), full_mask.reshape(b * c, v_sz))
+    return (
+        logprobs.reshape(b, c, v_sz),
+        jnp.stack(new_k),
+        jnp.stack(new_v),
+    )
+
+
+def make_chunk_fn(cfg: Config, use_pallas: bool = True):
+    """The function lowered to HLO for one (B, C) shape: takes the flat
+    parameter list followed by the runtime inputs (the rust side's calling
+    convention)."""
+    n_params = len(param_manifest(cfg))
+
+    def fn(*args):
+        leaves = args[:n_params]
+        k_cache, v_cache, kv_len, tokens, mask = args[n_params:]
+        params = params_from_list(cfg, leaves)
+        return forward_chunk(params, cfg, k_cache, v_cache, kv_len, tokens, mask,
+                             use_pallas=use_pallas)
+
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def loss_fn(params: dict, cfg: Config, tokens, targets, loss_mask):
+    """Mean next-token cross-entropy (targets = tokens shifted by 1)."""
+    logits = forward_train(params, cfg, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)

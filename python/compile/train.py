@@ -1,0 +1,98 @@
+"""Build-time training of the serving model (hand-rolled AdamW — the image
+has no optax).
+
+Trains the plain-jnp path (``forward_train``) on the synthetic corpus and
+records the loss curve to ``train_log.json`` (EXPERIMENTS.md's end-to-end
+evidence). The resulting weights are served through the Pallas-kernel path
+— ``tests/test_model.py`` asserts the two paths agree.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+def build_stream(tok, docs, seq_len):
+    """Concatenate EOS-separated docs and window into [N, seq_len+1]."""
+    ids = []
+    for doc in docs:
+        ids.extend(tok.encode(doc.encode()))
+        ids.append(data_mod.EOS_ID)
+    n = (len(ids) - 1) // seq_len
+    windows = np.zeros((n, seq_len + 1), np.int32)
+    for i in range(n):
+        windows[i] = ids[i * seq_len : i * seq_len + seq_len + 1]
+    return windows
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, wd=0.01, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr1 = 1 - b1**tf
+    corr2 = 1 - b2**tf
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / corr1 / (jnp.sqrt(v_ / corr2) + eps) + wd * p),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: model_mod.Config, tok, docs, *, steps=400, batch=16, seq_len=128,
+          lr=3e-3, seed=0, log_every=20, log=print):
+    windows = build_stream(tok, docs, seq_len)
+    log(f"corpus: {len(docs)} docs -> {windows.shape[0]} windows of {seq_len}")
+    key = jax.random.PRNGKey(seed)
+    params = model_mod.init_params(cfg, key)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, batch_tokens, lr_now):
+        tokens = batch_tokens[:, :-1]
+        targets = batch_tokens[:, 1:]
+        mask = jnp.ones_like(targets, jnp.float32)
+        loss, grads = jax.value_and_grad(
+            lambda p: model_mod.loss_fn(p, cfg, tokens, targets, mask)
+        )(params)
+        params, opt = adamw_update(params, grads, opt, lr_now)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, windows.shape[0], size=batch)
+        lr_now = lr * 0.5 * (1 + np.cos(np.pi * step / steps))
+        # Short warmup.
+        if step < 20:
+            lr_now = lr * (step + 1) / 20
+        params, opt, loss = step_fn(params, opt, jnp.asarray(windows[idx]), jnp.float32(lr_now))
+        if step % log_every == 0 or step == steps - 1:
+            loss_v = float(loss)
+            history.append({"step": step, "loss": loss_v, "elapsed_s": time.time() - t0})
+            log(f"step {step:4d}  loss {loss_v:.4f}  ({time.time() - t0:.0f}s)")
+    return params, history
+
+
+def save_weights(cfg, params, path):
+    manifest = model_mod.param_manifest(cfg)
+    np.savez(path, **{name: np.asarray(params[name]) for name, _ in manifest})
+
+
+def save_log(history, path):
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)

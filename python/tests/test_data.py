@@ -1,0 +1,59 @@
+"""Data substrate tests: task generators produce checkable answers in the
+paper's schemas; the python BPE round-trips and matches the rust id
+layout."""
+
+import json
+import random
+
+from compile import data as data_mod
+
+
+def test_gsm8k_answers_are_correct():
+    rng = random.Random(7)
+    for _ in range(50):
+        q, answer, ans = data_mod.gsm8k_task(rng)
+        obj = json.loads(answer)
+        assert obj["answer"] == ans
+        assert obj["thoughts"], q
+        th = obj["thoughts"][0]
+        # The calculation evaluates to the result.
+        assert eval(th["calculation"]) == th["result"] == ans
+
+
+def test_conll_entities_in_sentence():
+    rng = random.Random(8)
+    for _ in range(50):
+        sent, answer, ents = data_mod.conll_task(rng)
+        obj = json.loads(answer)
+        got = [(e["entity"], e["type"]) for e in obj["entities"]]
+        assert got == ents
+        for name, _ in ents:
+            assert name in sent
+
+
+def test_corpus_docs_parse():
+    docs = data_mod.make_corpus(seed=1, docs_per_kind=10)
+    assert len(docs) > 30
+    json_docs = [d for d in docs if d.startswith(data_mod.PERSON_PROMPT)]
+    assert json_docs
+    for d in json_docs:
+        json.loads(d[len(data_mod.PERSON_PROMPT):])
+
+
+def test_bpe_roundtrip_and_layout():
+    corpus = b'{"name": "John Doe", "age": 35} ' * 50
+    tok = data_mod.train_bpe(corpus, 300)
+    assert tok.vocab_size > data_mod.NUM_SPECIAL + 256
+    ids = tok.encode(corpus)
+    assert tok.decode(ids) == corpus
+    assert len(ids) < len(corpus)
+    # id layout: specials then bytes.
+    assert tok.tokens[data_mod.NUM_SPECIAL + ord("a")] == b"a"
+
+
+def test_bpe_save_load(tmp_path):
+    tok = data_mod.train_bpe(b"abab" * 40, 280)
+    p = tmp_path / "tok.json"
+    tok.save(str(p))
+    tok2 = data_mod.Tokenizer.load(str(p))
+    assert tok2.encode(b"ababab") == tok.encode(b"ababab")

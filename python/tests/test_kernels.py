@@ -1,0 +1,103 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the session's testing contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.masked_logits import masked_log_softmax
+from compile.kernels.ref import decode_attention_ref, masked_log_softmax_ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    c=st.sampled_from([1, 2, 8]),
+    d=st.sampled_from([8, 16, 32]),
+    blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(b, h, c, d, blocks, seed):
+    block = 128
+    s = block * blocks
+    q = rand(seed, (b, h, c, d))
+    k = rand(seed + 1, (b, h, s, d))
+    v = rand(seed + 2, (b, h, s, d))
+    rng = np.random.default_rng(seed)
+    kv_len = jnp.asarray(rng.integers(0, s - c, size=b), jnp.int32)
+    got = decode_attention(q, k, v, kv_len, block=block)
+    want = decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_zero_kvlen():
+    # Query 0 attends only to itself (kv_len=0, key 0 is its own slot).
+    b, h, c, d, s = 1, 2, 1, 16, 128
+    q = rand(0, (b, h, c, d))
+    k = rand(1, (b, h, s, d))
+    v = rand(2, (b, h, s, d))
+    kv_len = jnp.zeros((b,), jnp.int32)
+    got = decode_attention(q, k, v, kv_len)
+    want = decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # Attending to exactly one key → output equals that value row.
+    np.testing.assert_allclose(np.asarray(got[0, :, 0]), np.asarray(v[0, :, 0]), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_rejects_bad_block():
+    q = rand(0, (1, 1, 1, 8))
+    k = rand(1, (1, 1, 100, 8))
+    v = rand(2, (1, 1, 100, 8))
+    with pytest.raises(ValueError):
+        decode_attention(q, k, v, jnp.zeros((1,), jnp.int32), block=128)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    v=st.sampled_from([128, 256, 512]),
+    density=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_log_softmax_matches_ref(b, v, density, seed):
+    logits = rand(seed, (b, v))
+    rng = np.random.default_rng(seed)
+    mask = (rng.random((b, v)) < density).astype(np.float32)
+    mask[:, 0] = 1.0  # keep at least one token alive per row
+    mask = jnp.asarray(mask)
+    got = masked_log_softmax(logits, mask)
+    want = masked_log_softmax_ref(logits, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_masked_log_softmax_normalizes():
+    logits = rand(3, (2, 256))
+    mask = jnp.ones((2, 256))
+    out = masked_log_softmax(logits, mask)
+    sums = jnp.sum(jnp.exp(out), axis=-1)
+    np.testing.assert_allclose(np.asarray(sums), np.ones(2), rtol=1e-5)
+    # Masked entries are exactly -inf.
+    mask = mask.at[:, 100:].set(0.0)
+    out = masked_log_softmax(logits, mask)
+    assert bool(jnp.all(jnp.isinf(out[:, 100:])))
+    sums = jnp.sum(jnp.exp(out[:, :100]), axis=-1)
+    np.testing.assert_allclose(np.asarray(sums), np.ones(2), rtol=1e-5)
+
+
+def test_masked_log_softmax_preserves_argmax():
+    # Masking must not change the argmax among allowed tokens, and the
+    # log-prob ordering must match the raw logits ordering.
+    logits = rand(7, (1, 128))
+    mask = jnp.ones((1, 128))
+    out = masked_log_softmax(logits, mask)
+    assert int(jnp.argmax(out)) == int(jnp.argmax(logits))

@@ -1,0 +1,85 @@
+//! Mask-computation micro-benchmark — the §Perf L3 hot path.
+//!
+//! Compares, per decode step and per grammar state:
+//! * DOMINO tree-traversal mask (`compute_mask`, k=∞),
+//! * DOMINO single-token check (`check_token` — the opportunistic path),
+//! * online full-vocab scan (the llama.cpp-style baseline cost),
+//! * decoder `advance` (state update).
+//!
+//! The paper's claim is that tree size ≪ vocab size makes the first two
+//! cheap; this bench quantifies it on this vocab.
+//!
+//! `cargo bench --bench mask_micro`
+
+use domino::baselines::OnlineChecker;
+use domino::domino::decoder::{Engine, Lookahead};
+use domino::domino::{Checker, DominoDecoder};
+use domino::eval::Setup;
+use domino::grammar::builtin;
+use domino::util::bench::{time_it, Table};
+use domino::util::Rng;
+
+fn main() {
+    let setup = Setup::load();
+    println!("== Mask micro-benchmarks (vocab {}) ==\n", setup.vocab.len());
+    let mut table = Table::new(&[
+        "grammar", "state", "domino mask (us)", "check_token (us)", "online mask (us)", "advance (us)",
+    ]);
+
+    for name in ["json", "gsm8k", "c"] {
+        let engine = Engine::compile(builtin::by_name(name).unwrap(), setup.vocab.clone()).unwrap();
+        // Advance a decoder to a few representative states via random walk.
+        let mut rng = Rng::new(5);
+        let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let mut states = vec![dec.clone()];
+        for _ in 0..24 {
+            let mask = dec.compute_mask();
+            let allowed: Vec<_> = mask.iter().filter(|&t| t != 0).collect();
+            if allowed.is_empty() {
+                break;
+            }
+            let t = *rng.choose(&allowed);
+            dec.advance(t).unwrap();
+            states.push(dec.clone());
+        }
+        for (label, idx) in [("start", 0usize), ("mid", states.len() / 2), ("deep", states.len() - 1)] {
+            let base = &states[idx];
+            let mask_t = time_it(3, 20, || {
+                let mut d = base.clone();
+                std::hint::black_box(d.compute_mask());
+            });
+            let check_t = time_it(3, 20, || {
+                let mut d = base.clone();
+                for tok in [5u32, 100, 300] {
+                    std::hint::black_box(d.check_token(tok));
+                }
+            });
+            let online_t = time_it(1, 5, || {
+                let mut o = OnlineChecker::new(engine.clone());
+                // Bring online checker to the same state.
+                std::hint::black_box(o.compute_mask());
+            });
+            let mask = {
+                let mut d = base.clone();
+                d.compute_mask()
+            };
+            let some_tok = mask.iter().find(|&t| t != 0);
+            let adv_t = time_it(3, 20, || {
+                if let Some(t) = some_tok {
+                    let mut d = base.clone();
+                    let _ = d.advance(t);
+                }
+            });
+            table.row(&[
+                name.to_string(),
+                label.to_string(),
+                format!("{:.1}", mask_t.mean_us()),
+                format!("{:.1}", check_t.mean_us() / 3.0),
+                format!("{:.1}", online_t.mean_us()),
+                format!("{:.1}", adv_t.mean_us()),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nnote: online mask is measured at the START state only (cloning deep online state is expensive by construction).");
+}

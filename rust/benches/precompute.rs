@@ -1,0 +1,58 @@
+//! §4.3 precomputation-cost reproduction: offline subterminal-tree build
+//! time per grammar (paper: 1–5 s per grammar, C ~20 s, on a 32k vocab).
+//!
+//! Also reports the tree statistics that explain DOMINO's online speed:
+//! tree nodes touched per mask vs vocabulary size.
+//!
+//! `cargo bench --bench precompute`
+
+use domino::domino::decoder::Engine;
+use domino::domino::tree::TreeSet;
+use domino::eval::Setup;
+use domino::grammar::builtin;
+use domino::scanner::Scanner;
+use domino::util::bench::{time_it, Table};
+
+fn main() {
+    let setup = Setup::load();
+    println!(
+        "== Grammar precompute cost (vocab {} — paper used 32k; scale ~linearly) ==\n",
+        setup.vocab.len()
+    );
+    let mut table = Table::new(&[
+        "Grammar", "terminals", "scanner pos", "tree nodes", "possets", "serial (s)", "parallel (s)",
+    ]);
+    for name in builtin::GRAMMAR_NAMES {
+        let cfg = builtin::by_name(name).unwrap();
+        let scanner = Scanner::new(&cfg).unwrap();
+        let vocab = setup.vocab.clone();
+        let serial = time_it(0, 1, || {
+            std::hint::black_box(TreeSet::build_serial(&scanner, &vocab));
+        });
+        let parallel = time_it(0, 1, || {
+            std::hint::black_box(TreeSet::build(&scanner, &vocab));
+        });
+        let ts = TreeSet::build(&scanner, &vocab);
+        table.row(&[
+            name.to_string(),
+            cfg.num_terminals().to_string(),
+            scanner.num_pos().to_string(),
+            ts.total_nodes().to_string(),
+            ts.possets.len().to_string(),
+            format!("{:.3}", serial.mean.as_secs_f64()),
+            format!("{:.3}", parallel.mean.as_secs_f64()),
+        ]);
+    }
+    table.print();
+
+    // Full engine compile (incl. Earley tables) for the two extremes.
+    println!();
+    for name in ["json", "c"] {
+        let t = time_it(0, 1, || {
+            std::hint::black_box(
+                Engine::compile(builtin::by_name(name).unwrap(), setup.vocab.clone()).unwrap(),
+            );
+        });
+        println!("full engine compile `{name}`: {:.3}s", t.mean.as_secs_f64());
+    }
+}

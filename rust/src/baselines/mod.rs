@@ -1,0 +1,20 @@
+//! The constrained-decoding baselines the paper evaluates against (§2, §4).
+//!
+//! * [`online`] — llama.cpp/GCD/PICARD-style **online parser-guided**
+//!   masking: scanner + parser in lock-step with the LLM, but no
+//!   precomputation — every mask is a full-vocabulary scan. Minimally
+//!   invasive, high per-step cost (Table 1 row "llama.cpp"/"GCD").
+//! * [`template`] — GUIDANCE-style **template programs**: fixed structure
+//!   injected via external tokenization (the source of template-induced
+//!   misalignment, Fig. 2), generated holes under regex constraints,
+//!   optional token healing, and the whitespace-flexible `WS` variant of
+//!   App. A.
+//! * **Naive/greedy** constraining (Fig. 1) is `DominoDecoder` with
+//!   `Lookahead::K(0)`: only single-subterminal tokens, no bridge tokens —
+//!   exercised directly by the Table 4 ablation.
+
+pub mod online;
+pub mod template;
+
+pub use online::OnlineChecker;
+pub use template::{healed_prefix, Segment, TemplateProgram, TemplateResult, TemplateRuntime};

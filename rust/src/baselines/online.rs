@@ -1,0 +1,93 @@
+//! Online parser-guided constraining (llama.cpp grammars, PICARD, GCD,
+//! SYNCHROMESH).
+//!
+//! Same scanner/parser state tracking as DOMINO, but **no precomputed
+//! subterminal trees**: `compute_mask` checks every vocabulary token by
+//! running its bytes through the scanner and parser ("in the worst case,
+//! they have to check the entire model vocabulary at each step" — §2).
+//!
+//! Masks are semantically identical to `DominoDecoder` at `k = ∞` (both
+//! are minimally invasive); only the cost differs. That equivalence is a
+//! property test (`rust/tests/prop_invariants.rs`).
+
+use crate::domino::decoder::{DominoDecoder, Engine, Lookahead};
+use crate::domino::{Checker, TokenMask};
+use crate::TokenId;
+use std::sync::Arc;
+
+/// The online checker: DOMINO's state machinery, a full-vocab scan per
+/// mask.
+pub struct OnlineChecker {
+    inner: DominoDecoder,
+    vocab_size: usize,
+}
+
+impl OnlineChecker {
+    pub fn new(engine: Arc<Engine>) -> OnlineChecker {
+        let vocab_size = engine.vocab.len();
+        // k = ∞: online parsers check full tokens, so they admit every
+        // parser-viable token (minimally invasive).
+        OnlineChecker { inner: DominoDecoder::new(engine, Lookahead::Infinite), vocab_size }
+    }
+}
+
+impl Checker for OnlineChecker {
+    fn advance(&mut self, token: TokenId) -> crate::Result<()> {
+        self.inner.advance(token)
+    }
+
+    fn compute_mask(&mut self) -> TokenMask {
+        // The defining cost: one scanner+parser traversal per vocab token.
+        let mut mask = TokenMask::none(self.vocab_size);
+        for id in 0..self.vocab_size as TokenId {
+            if self.inner.check_token(id) {
+                mask.allow(id);
+            }
+        }
+        mask
+    }
+
+    fn check_token(&mut self, token: TokenId) -> bool {
+        // Opportunistic mode (llama.cpp always runs with it — Table 3
+        // footnote): single-token check is cheap even online.
+        self.inner.check_token(token)
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset()
+    }
+
+    fn state_key(&self) -> Option<u64> {
+        self.inner.state_key()
+    }
+
+    fn check_bytes(&mut self, bytes: &[u8]) -> bool {
+        self.inner.check_bytes(bytes)
+    }
+
+    fn advance_bytes(&mut self, bytes: &[u8]) -> crate::Result<()> {
+        self.inner.advance_bytes(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::builtin::json;
+    use crate::tokenizer;
+
+    #[test]
+    fn online_mask_equals_domino_infinite() {
+        let vocab = Arc::new(tokenizer::bpe::synthetic_json_vocab(512));
+        let eng = Engine::compile(json(), vocab.clone()).unwrap();
+        let mut online = OnlineChecker::new(eng.clone());
+        let mut domino = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let ids = vocab.encode(b"{\"name\": \"Jo");
+        for &id in &ids {
+            assert_eq!(online.compute_mask(), domino.compute_mask(), "at token {id}");
+            online.advance(id).unwrap();
+            domino.advance(id).unwrap();
+        }
+        assert_eq!(online.compute_mask(), domino.compute_mask());
+    }
+}

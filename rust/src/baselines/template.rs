@@ -1,0 +1,620 @@
+//! GUIDANCE-style template programs (§2 "Template-Based Approaches",
+//! App. A).
+//!
+//! A program is a sequence of segments: fixed **literals** (injected via
+//! external tokenization — no model calls, but also the source of
+//! template-induced misalignment, Fig. 2), **gen** holes constrained by a
+//! regex (`stop='c'` desugars to `[^c\n]+`), and **select** choices
+//! (desugared to a regex alternation).
+//!
+//! *Token healing* (Lundberg & Ribeiro): before each hole, the last token
+//! of the preceding literal is stripped and its bytes are enforced as a
+//! byte-prefix on generation, so bridge tokens spanning the
+//! literal→generation boundary become available.
+//!
+//! The App. A **WS-flexible** variant ([`TemplateProgram::ws_flexible`])
+//! replaces every literal whitespace run by a `gen(/[ \t\n]+/?)` hole, so
+//! the model chooses its own formatting — higher accuracy, more model
+//! calls (Table 2 "GUIDANCE WS").
+
+use crate::domino::decoder::{DominoDecoder, Engine, Lookahead};
+use crate::domino::Checker;
+use crate::grammar::parse_ebnf;
+use crate::runtime::sampler::{decode, log_prob, Sampling};
+use crate::runtime::LmSession;
+use crate::tokenizer::{Vocab, EOS_ID};
+use crate::util::Rng;
+use crate::TokenId;
+use anyhow::{bail, Context};
+use std::sync::Arc;
+
+/// One template segment.
+#[derive(Clone, Debug)]
+pub enum Segment {
+    /// Fixed text, injected with the external tokenizer.
+    Literal(String),
+    /// A generated hole constrained by `regex` (field name for capture).
+    Gen { name: String, regex: String, max_tokens: usize },
+    /// One of the given literal options.
+    Select { name: String, options: Vec<String> },
+}
+
+/// A GUIDANCE-like program.
+#[derive(Clone, Debug, Default)]
+pub struct TemplateProgram {
+    pub segments: Vec<Segment>,
+}
+
+impl TemplateProgram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn lit(mut self, s: &str) -> Self {
+        self.segments.push(Segment::Literal(s.to_string()));
+        self
+    }
+
+    pub fn gen(mut self, name: &str, regex: &str) -> Self {
+        self.segments.push(Segment::Gen {
+            name: name.to_string(),
+            regex: regex.to_string(),
+            max_tokens: 48,
+        });
+        self
+    }
+
+    /// `gen(stop='c')` — free text until the (single-char) stop.
+    pub fn gen_stop(mut self, name: &str, stop: char) -> Self {
+        let esc = escape_regex(&stop.to_string());
+        self.segments.push(Segment::Gen {
+            name: name.to_string(),
+            regex: format!("[^{esc}\\n]+"),
+            max_tokens: 48,
+        });
+        self
+    }
+
+    pub fn select(mut self, name: &str, options: &[&str]) -> Self {
+        self.segments.push(Segment::Select {
+            name: name.to_string(),
+            options: options.iter().map(|s| s.to_string()).collect(),
+        });
+        self
+    }
+
+    /// §3.5: "DOMINO can also be extended to other forms of constraining,
+    /// e.g. to execute GUIDANCE programs" — compile this template into a
+    /// CFG and run it through the DOMINO decoder instead of the template
+    /// executor. Literals become literal terminals, holes become regex
+    /// terminals; DOMINO then executes the program *minimally invasively*
+    /// (bridge tokens across every literal/hole boundary, no external
+    /// tokenization at all — strictly better than token healing).
+    pub fn to_grammar(&self) -> crate::Result<crate::grammar::Cfg> {
+        use crate::grammar::{CfgBuilder, Symbol};
+        anyhow::ensure!(!self.segments.is_empty(), "empty template");
+        let mut b = CfgBuilder::new();
+        let root = b.nonterminal("root");
+        let mut rhs = Vec::new();
+        for (i, seg) in self.segments.iter().enumerate() {
+            match seg {
+                Segment::Literal(text) => rhs.push(Symbol::T(b.literal(text))),
+                Segment::Gen { name, regex, .. } => {
+                    rhs.push(Symbol::T(b.regex_term(&format!("{name}#{i}"), regex)))
+                }
+                Segment::Select { name, options } => {
+                    let alts: Vec<String> =
+                        options.iter().map(|o| format!("({})", escape_regex(o))).collect();
+                    rhs.push(Symbol::T(b.regex_term(&format!("{name}#{i}"), &alts.join("|"))));
+                }
+            }
+        }
+        b.production(root, rhs);
+        b.build(root)
+    }
+
+    /// App. A: replace literal whitespace runs with generated-whitespace
+    /// holes.
+    pub fn ws_flexible(&self) -> TemplateProgram {
+        let mut out = TemplateProgram::new();
+        let mut ws_id = 0usize;
+        for seg in &self.segments {
+            match seg {
+                Segment::Literal(s) => {
+                    let mut chunk = String::new();
+                    for c in s.chars() {
+                        if c == ' ' || c == '\t' || c == '\n' {
+                            if !chunk.is_empty() {
+                                out.segments.push(Segment::Literal(std::mem::take(&mut chunk)));
+                            }
+                            // Merge consecutive ws into one hole.
+                            if !matches!(out.segments.last(), Some(Segment::Gen { name, .. }) if name.starts_with("%ws"))
+                            {
+                                ws_id += 1;
+                                out.segments.push(Segment::Gen {
+                                    name: format!("%ws{ws_id}"),
+                                    regex: "[ \\t\\n]+".to_string(),
+                                    max_tokens: 8,
+                                });
+                            }
+                        } else {
+                            chunk.push(c);
+                        }
+                    }
+                    if !chunk.is_empty() {
+                        out.segments.push(Segment::Literal(chunk));
+                    }
+                }
+                other => out.segments.push(other.clone()),
+            }
+        }
+        out
+    }
+}
+
+/// Escape a literal for embedding in our regex dialect.
+pub fn escape_regex(s: &str) -> String {
+    let mut out = String::new();
+    for c in s.chars() {
+        if "\\.*+?()[]{}|/\"'-^$".contains(c) {
+            out.push('\\');
+        }
+        if c == '\n' {
+            out.push_str("\\n");
+        } else if c == '\t' {
+            out.push_str("\\t");
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Compiled program: a regex-constraint engine per hole.
+pub struct TemplateRuntime {
+    pub program: TemplateProgram,
+    vocab: Arc<Vocab>,
+    /// Engine per segment index (None for literals).
+    engines: Vec<Option<Arc<Engine>>>,
+    /// Token healing on?
+    pub healing: bool,
+}
+
+/// Outcome of a template run.
+#[derive(Clone, Debug, Default)]
+pub struct TemplateResult {
+    pub tokens: Vec<TokenId>,
+    pub text: String,
+    pub logprob_sum: f64,
+    pub forced_tokens: usize,
+    pub gen_tokens: usize,
+    pub model_calls: usize,
+    pub fields: Vec<(String, String)>,
+}
+
+impl TemplateResult {
+    pub fn perplexity(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return f64::NAN;
+        }
+        (-self.logprob_sum / self.tokens.len() as f64).exp()
+    }
+}
+
+/// Split `(healed literal, healed-away suffix)` at the second-to-last
+/// token boundary of `text` under `vocab`.
+pub fn healed_prefix(vocab: &Vocab, text: &str) -> (Vec<TokenId>, Vec<u8>) {
+    let mut ids = vocab.encode(text.as_bytes());
+    if let Some(last) = ids.pop() {
+        (ids, vocab.token_bytes(last).to_vec())
+    } else {
+        (ids, Vec::new())
+    }
+}
+
+impl TemplateRuntime {
+    pub fn compile(
+        program: TemplateProgram,
+        vocab: Arc<Vocab>,
+        healing: bool,
+    ) -> crate::Result<TemplateRuntime> {
+        let mut engines = Vec::with_capacity(program.segments.len());
+        for seg in &program.segments {
+            let engine = match seg {
+                Segment::Literal(_) => None,
+                Segment::Gen { regex, name, .. } => {
+                    let src = format!("root ::= /{}/", regex.replace('/', "\\/"));
+                    let g = parse_ebnf(&src)
+                        .with_context(|| format!("gen `{name}` regex /{regex}/"))?;
+                    Some(Engine::compile(g, vocab.clone())?)
+                }
+                Segment::Select { options, name } => {
+                    if options.is_empty() {
+                        bail!("select `{name}` has no options");
+                    }
+                    let alts: Vec<String> =
+                        options.iter().map(|o| format!("({})", escape_regex(o))).collect();
+                    let src = format!("root ::= /{}/", alts.join("|").replace('/', "\\/"));
+                    let g = parse_ebnf(&src)
+                        .with_context(|| format!("select `{name}`"))?;
+                    Some(Engine::compile(g, vocab.clone())?)
+                }
+            };
+            engines.push(engine);
+        }
+        Ok(TemplateRuntime { program, vocab, engines, healing })
+    }
+
+    /// Execute the program after `prompt` token ids (no prompt-boundary
+    /// healing — see [`TemplateRuntime::run_with_prompt`]).
+    pub fn run(
+        &self,
+        lm: &mut dyn LmSession,
+        prompt: &[TokenId],
+        sampling: Sampling,
+        rng: &mut Rng,
+    ) -> crate::Result<TemplateResult> {
+        let mut last_logits = lm.append(prompt)?;
+        let mut res = TemplateResult::default();
+        res.model_calls += 1;
+        self.run_segments(lm, 0, sampling, rng, &mut last_logits, &mut res)?;
+        Ok(res)
+    }
+
+    /// Execute the program after a *text* prompt, healing the
+    /// prompt→template boundary by tokenizing the prompt jointly with the
+    /// first literal (GUIDANCE-style: the template text is part of the
+    /// same string as the prompt).
+    pub fn run_with_prompt(
+        &self,
+        lm: &mut dyn LmSession,
+        prompt_text: &str,
+        sampling: Sampling,
+        rng: &mut Rng,
+    ) -> crate::Result<TemplateResult> {
+        let mut res = TemplateResult::default();
+        let (first_lit, rest_start) = match self.program.segments.first() {
+            Some(Segment::Literal(text)) => (text.as_str(), 1usize),
+            _ => ("", 0usize),
+        };
+        // Joint tokenization of prompt + first literal.
+        let joint = format!("{prompt_text}{first_lit}");
+        let ids = self.vocab.encode(joint.as_bytes());
+        let pbytes = prompt_text.len();
+        // Split at the first token extending past the prompt bytes.
+        let mut off = 0usize;
+        let mut split = ids.len();
+        for (j, &id) in ids.iter().enumerate() {
+            let l = self.vocab.token_bytes(id).len();
+            if off + l > pbytes {
+                split = j;
+                break;
+            }
+            off += l;
+        }
+        let mut last_logits = lm.append(&ids[..split.max(1)])?;
+        res.model_calls += 1;
+        // Forced template tokens (incl. the one straddling the boundary).
+        let forced = &ids[split.max(1)..];
+        if !forced.is_empty() {
+            let rows = lm.append_scored(forced)?;
+            res.model_calls += 1;
+            let mut boff = {
+                // bytes of context consumed so far
+                ids[..split.max(1)].iter().map(|&t| self.vocab.token_bytes(t).len()).sum::<usize>()
+            };
+            for (j, &id) in forced.iter().enumerate() {
+                let row = if j == 0 { &last_logits } else { &rows[j - 1] };
+                res.logprob_sum += log_prob(row, id);
+                res.tokens.push(id);
+                // Only the part beyond the prompt belongs to the output.
+                let b = self.vocab.token_bytes(id);
+                let out_from = pbytes.saturating_sub(boff).min(b.len());
+                res.text.push_str(&String::from_utf8_lossy(&b[out_from..]));
+                boff += b.len();
+            }
+            res.forced_tokens += forced.len();
+            last_logits = rows.last().cloned().unwrap_or(last_logits);
+        }
+        self.run_segments(lm, rest_start, sampling, rng, &mut last_logits, &mut res)?;
+        Ok(res)
+    }
+
+    /// Run segments from `start` onward.
+    fn run_segments(
+        &self,
+        lm: &mut dyn LmSession,
+        start: usize,
+        sampling: Sampling,
+        rng: &mut Rng,
+        last_logits: &mut Vec<f32>,
+        res: &mut TemplateResult,
+    ) -> crate::Result<()> {
+        let mut i = start;
+        while i < self.program.segments.len() {
+            match &self.program.segments[i] {
+                Segment::Literal(text) => {
+                    // Heal: hold back the literal's last token if a hole
+                    // follows.
+                    let next_is_hole = matches!(
+                        self.program.segments.get(i + 1),
+                        Some(Segment::Gen { .. }) | Some(Segment::Select { .. })
+                    );
+                    let (ids, healed) = if self.healing && next_is_hole {
+                        healed_prefix(&self.vocab, text)
+                    } else {
+                        (self.vocab.encode(text.as_bytes()), Vec::new())
+                    };
+                    if !ids.is_empty() {
+                        // Score + inject in one chunked call — this is the
+                        // template speedup: len(ids) tokens, 1 model call.
+                        let rows = lm.append_scored(&ids)?;
+                        res.model_calls += 1;
+                        for (j, &id) in ids.iter().enumerate() {
+                            let row = if j == 0 { &*last_logits } else { &rows[j - 1] };
+                            res.logprob_sum += log_prob(row, id);
+                            res.tokens.push(id);
+                        }
+                        res.forced_tokens += ids.len();
+                        if let Some(r) = rows.last() {
+                            *last_logits = r.clone();
+                        }
+                        res.text.push_str(
+                            &String::from_utf8_lossy(&self.vocab.decode(&ids)),
+                        );
+                    }
+                    // Run the following hole with the healed prefix.
+                    if next_is_hole {
+                        i += 1;
+                        self.run_hole(lm, i, &healed, sampling, rng, last_logits, res)?;
+                    }
+                }
+                Segment::Gen { .. } | Segment::Select { .. } => {
+                    self.run_hole(lm, i, &[], sampling, rng, last_logits, res)?;
+                }
+            }
+            i += 1;
+        }
+        Ok(())
+    }
+
+    /// Generate one hole, with `forced` byte-prefix (token healing).
+    #[allow(clippy::too_many_arguments)]
+    fn run_hole(
+        &self,
+        lm: &mut dyn LmSession,
+        idx: usize,
+        forced: &[u8],
+        sampling: Sampling,
+        rng: &mut Rng,
+        last_logits: &mut Vec<f32>,
+        res: &mut TemplateResult,
+    ) -> crate::Result<()> {
+        let engine = self.engines[idx].as_ref().expect("hole has an engine");
+        let (name, max_tokens) = match &self.program.segments[idx] {
+            Segment::Gen { name, max_tokens, .. } => (name.clone(), *max_tokens),
+            Segment::Select { name, .. } => (name.clone(), 32),
+            Segment::Literal(_) => unreachable!(),
+        };
+        let mut decoder = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let mut pending: Vec<u8> = forced.to_vec();
+        let mut field_text = Vec::new();
+        let mut generated = 0usize;
+
+        // Legality under prefix forcing: the token must agree with the
+        // remaining forced bytes; any overhang must be accepted by the
+        // hole's regex decoder.
+        let check = |dec: &DominoDecoder, pending: &[u8], bytes: &[u8]| -> bool {
+            if bytes.is_empty() {
+                return false;
+            }
+            if bytes.len() <= pending.len() {
+                pending.starts_with(bytes)
+            } else {
+                bytes.starts_with(pending) && dec.check_bytes(&bytes[pending.len()..])
+            }
+        };
+
+        while generated < max_tokens {
+            // Propose from raw logits (lazy coupling).
+            let proposal = decode(last_logits, sampling, rng);
+            let pbytes = self.vocab.token_bytes(proposal).to_vec();
+            let ok = proposal != EOS_ID && check(&decoder, &pending, &pbytes);
+            // Can the hole end here? Only when the forced prefix is fully
+            // consumed and the regex accepts.
+            let may_stop = pending.is_empty() && decoder.check_token(EOS_ID);
+            let chosen = if ok {
+                proposal
+            } else if may_stop {
+                break; // hole ends; the proposal belongs to the next literal
+            } else {
+                // Masked re-pick.
+                let mut mask = crate::domino::TokenMask::none(self.vocab.len());
+                for id in 0..self.vocab.len() as TokenId {
+                    if check(&decoder, &pending, self.vocab.token_bytes(id)) {
+                        mask.allow(id);
+                    }
+                }
+                if mask.is_empty() {
+                    bail!("template hole `{name}` deadlocked");
+                }
+                let mut masked = last_logits.clone();
+                mask.apply(&mut masked);
+                decode(&masked, sampling, rng)
+            };
+            res.logprob_sum += log_prob(last_logits, chosen);
+            let bytes = self.vocab.token_bytes(chosen).to_vec();
+            if bytes.len() <= pending.len() {
+                pending.drain(..bytes.len());
+            } else {
+                let overhang = bytes[pending.len()..].to_vec();
+                pending.clear();
+                decoder.advance_bytes(&overhang)?;
+                field_text.extend_from_slice(&overhang);
+            }
+            res.tokens.push(chosen);
+            res.gen_tokens += 1;
+            generated += 1;
+            res.text.push_str(&String::from_utf8_lossy(&bytes));
+            *last_logits = lm.append(&[chosen])?;
+            res.model_calls += 1;
+        }
+        if !pending.is_empty() {
+            bail!("template hole `{name}`: forced prefix not consumed");
+        }
+        res.fields.push((name, String::from_utf8_lossy(&field_text).into_owned()));
+        Ok(())
+    }
+}
+
+/// The paper's GSM8K template (App. D structure, fixed two-step variant —
+/// templates cannot express variable-length lists, which is precisely
+/// their accuracy limitation).
+pub fn gsm8k_program(steps: usize) -> TemplateProgram {
+    let mut p = TemplateProgram::new().lit("{\n  \"thoughts\": [\n");
+    for i in 0..steps {
+        p = p
+            .lit("    {\"step\": \"")
+            .gen_stop(&format!("step{i}"), '"')
+            .lit("\", \"calculation\": \"")
+            .gen_stop(&format!("calc{i}"), '"')
+            .lit("\", \"result\": ")
+            .gen(&format!("result{i}"), "-?[0-9]+");
+        p = p.lit(if i + 1 < steps { "},\n" } else { "}\n" });
+    }
+    p.lit("  ],\n  \"answer\": ").gen("answer", "-?[0-9]+").lit("\n}")
+}
+
+/// CoNLL NER template (fixed number of entity slots).
+pub fn conll_program(entities: usize) -> TemplateProgram {
+    let mut p = TemplateProgram::new().lit("{\"entities\": [");
+    for i in 0..entities {
+        if i > 0 {
+            p = p.lit(", ");
+        }
+        p = p
+            .lit("{\"entity\": \"")
+            .gen_stop(&format!("entity{i}"), '"')
+            .lit("\", \"type\": \"")
+            .select(&format!("type{i}"), &["PER", "LOC", "ORG", "MISC"])
+            .lit("\"}");
+    }
+    p.lit("]}")
+}
+
+/// Listing 1: the RPG character profile template.
+pub fn rpg_program() -> TemplateProgram {
+    TemplateProgram::new()
+        .lit("{\n  \"id\": ")
+        .gen("id", "[1-9][0-9]*")
+        .lit(",\n  \"description\": \"A nimble fighter\",\n  \"name\": \"")
+        .gen_stop("name", '"')
+        .lit("\",\n  \"age\": ")
+        .gen("age", "[1-9][0-9]*")
+        .lit(",\n  \"armor\": \"")
+        .select("armor", &["leather", "chainmail", "plate"])
+        .lit("\",\n  \"weapon\": \"")
+        .select("weapon", &["sword", "axe", "bow"])
+        .lit("\",\n  \"class\": \"")
+        .gen_stop("class", '"')
+        .lit("\",\n  \"mantra\": \"")
+        .gen_stop("mantra", '"')
+        .lit("\",\n  \"strength\": ")
+        .gen("strength", "[1-9][0-9]*")
+        .lit(",\n  \"items\": [\"")
+        .gen_stop("item1", '"')
+        .lit("\", \"")
+        .gen_stop("item2", '"')
+        .lit("\"]\n}")
+}
+
+/// Simple person-JSON template used by the Fig. 2 misalignment example.
+pub fn person_program() -> TemplateProgram {
+    TemplateProgram::new()
+        .lit("{\"name\": \"")
+        .gen_stop("name", '"')
+        .lit("\", \"age\": ")
+        .gen("age", "[1-9][0-9]*")
+        .lit(", \"occupation\": \"")
+        .gen_stop("occupation", '"')
+        .lit("\"}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::{json_mock, MockLm};
+
+    #[test]
+    fn ws_flexible_transform() {
+        let p = TemplateProgram::new().lit("{\n  \"a\": ").gen("a", "[0-9]+");
+        let ws = p.ws_flexible();
+        // Literals split around whitespace; ws holes inserted.
+        let holes = ws
+            .segments
+            .iter()
+            .filter(|s| matches!(s, Segment::Gen { name, .. } if name.starts_with("%ws")))
+            .count();
+        assert!(holes >= 1, "{:?}", ws.segments);
+        let has_brace = ws
+            .segments
+            .iter()
+            .any(|s| matches!(s, Segment::Literal(l) if l == "{"));
+        assert!(has_brace);
+    }
+
+    #[test]
+    fn escape_regex_roundtrip() {
+        let s = "a+b (c) [d]";
+        let pat = escape_regex(s);
+        assert!(crate::regex::matches(&pat, s).unwrap());
+        assert!(!crate::regex::matches(&pat, "aab (c) [d]").unwrap());
+    }
+
+    #[test]
+    fn runs_person_template_on_mock() {
+        let (vocab, model) = json_mock(512);
+        let rt = TemplateRuntime::compile(person_program(), vocab.clone(), false).unwrap();
+        let mut lm = MockLm::new(model);
+        let mut rng = crate::util::Rng::new(7);
+        let res = rt.run(&mut lm, &[], Sampling::Greedy, &mut rng).unwrap();
+        // Output is well-formed JSON with the three fields.
+        let v = crate::util::Json::parse(&res.text).unwrap_or_else(|e| panic!("{e}: {}", res.text));
+        assert!(v.get("name").is_some() && v.get("age").is_some());
+        assert!(res.forced_tokens > 0 && res.gen_tokens > 0);
+        // Far fewer model calls than tokens (the template speedup).
+        assert!(res.model_calls < res.tokens.len());
+    }
+
+    #[test]
+    fn healing_enables_bridge_tokens() {
+        let (vocab, model) = json_mock(512);
+        // With healing, the literal's trailing `"` is healed away and the
+        // hole may start with a `"J`-style bridge token.
+        let rt = TemplateRuntime::compile(person_program(), vocab.clone(), true).unwrap();
+        let mut lm = MockLm::new(model);
+        let mut rng = crate::util::Rng::new(7);
+        let res = rt.run(&mut lm, &[], Sampling::Greedy, &mut rng).unwrap();
+        let v = crate::util::Json::parse(&res.text).unwrap_or_else(|e| panic!("{e}: {}", res.text));
+        assert!(v.get("name").is_some());
+    }
+
+    #[test]
+    fn select_only_yields_an_option() {
+        let (vocab, model) = json_mock(512);
+        let p = TemplateProgram::new().lit("{\"armor\": \"").select("armor", &["leather", "plate"]).lit("\"}");
+        let rt = TemplateRuntime::compile(p, vocab, false).unwrap();
+        let mut lm = MockLm::new(model);
+        let mut rng = crate::util::Rng::new(1);
+        let res = rt.run(&mut lm, &[], Sampling::Greedy, &mut rng).unwrap();
+        let field = &res.fields.iter().find(|(n, _)| n == "armor").unwrap().1;
+        assert!(field == "leather" || field == "plate", "{field}");
+    }
+
+    #[test]
+    fn gsm8k_program_compiles() {
+        let (vocab, _) = json_mock(512);
+        TemplateRuntime::compile(gsm8k_program(2), vocab.clone(), true).unwrap();
+        TemplateRuntime::compile(gsm8k_program(2).ws_flexible(), vocab, true).unwrap();
+    }
+}

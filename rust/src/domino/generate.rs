@@ -1,0 +1,513 @@
+//! The constrained decoding loop (Algorithm 1) and its speculative variant
+//! (§3.6), with prompt-boundary token healing (§3.5).
+//!
+//! Two cost modes:
+//! * **FullMask** — compute `C.mask()` every step, apply, sample
+//!   (Algorithm 1 verbatim).
+//! * **Opportunistic** — sample from the raw logits first and only compute
+//!   the mask when the checker rejects the proposal (§3.5 "opportunistic
+//!   masking"; llama.cpp's default).
+//!
+//! Both use *lazy coupling* for sampling: the unconstrained proposal is
+//! kept whenever it is legal, so a minimally-invasive checker reproduces
+//! unconstrained output exactly (Def. 2.1) and `interventions` counts
+//! every divergence.
+//!
+//! ## Prompt healing
+//!
+//! A prompt's own tokenization ends at an arbitrary token boundary the
+//! model may never have seen ("all other boundaries are embedded
+//! seamlessly into the grammar, [healing] is only relevant for the first
+//! boundary with the prompt" — §3.5). [`Prompt::healed`] strips the
+//! trailing tokens and re-emits their bytes as a *forced byte prefix*:
+//! generation starts a few bytes early, constrained to reproduce the
+//! stripped text, and naturally crosses the boundary with the model's own
+//! preferred (possibly bridging) tokens.
+
+use super::spec::SpeculativeModel;
+use super::{Checker, DominoDecoder, TokenMask};
+use crate::runtime::sampler::{decode, log_prob, Sampling};
+use crate::runtime::LmSession;
+use crate::tokenizer::{Vocab, EOS_ID};
+use crate::util::Rng;
+use crate::TokenId;
+use anyhow::bail;
+
+/// Masking cost mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskMode {
+    FullMask,
+    Opportunistic,
+}
+
+/// Generation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    pub max_tokens: usize,
+    pub sampling: Sampling,
+    pub mode: MaskMode,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { max_tokens: 128, sampling: Sampling::Greedy, mode: MaskMode::Opportunistic }
+    }
+}
+
+/// A (possibly healed) prompt.
+#[derive(Clone, Debug, Default)]
+pub struct Prompt {
+    pub ids: Vec<TokenId>,
+    /// Bytes generation must reproduce before free decoding starts.
+    pub forced: Vec<u8>,
+}
+
+/// Heal back at least this many bytes (longer than most merged tokens, so
+/// the context never ends mid-mega-token).
+const HEAL_BYTES: usize = 6;
+
+impl Prompt {
+    pub fn plain(vocab: &Vocab, text: &str) -> Prompt {
+        Prompt { ids: vocab.encode(text.as_bytes()), forced: Vec::new() }
+    }
+
+    pub fn from_ids(ids: Vec<TokenId>) -> Prompt {
+        Prompt { ids, forced: Vec::new() }
+    }
+
+    /// Token healing: strip trailing tokens until ≥ [`HEAL_BYTES`] bytes
+    /// are forced. At least one prompt token is kept (the LM session needs
+    /// a non-empty context).
+    pub fn healed(vocab: &Vocab, text: &str) -> Prompt {
+        let mut ids = vocab.encode(text.as_bytes());
+        let mut forced: Vec<u8> = Vec::new();
+        while forced.len() < HEAL_BYTES && ids.len() > 1 {
+            let last = ids.pop().expect("len > 1");
+            let mut b = vocab.token_bytes(last).to_vec();
+            b.extend_from_slice(&forced);
+            forced = b;
+        }
+        Prompt { ids, forced }
+    }
+}
+
+/// Outcome of one generation.
+#[derive(Clone, Debug, Default)]
+pub struct GenResult {
+    /// Committed generation-phase tokens (healing tokens included — their
+    /// leading bytes reproduce stripped prompt text).
+    pub tokens: Vec<TokenId>,
+    /// The *output* text bytes (prompt text excluded even when a healing
+    /// token straddles the boundary).
+    pub text_bytes: Vec<u8>,
+    /// Sum of `log P(token)` under the *unmasked* model — perplexity =
+    /// `exp(-logprob_sum / tokens.len())`.
+    pub logprob_sum: f64,
+    /// Steps where the mask rejected the model's proposal (invasiveness).
+    pub interventions: usize,
+    /// Model forward calls (chunked calls count once).
+    pub model_calls: usize,
+    /// Total full-mask computations performed.
+    pub masks_computed: usize,
+    /// Speculative statistics (zero unless [`generate_speculative`]).
+    pub spec_proposed: usize,
+    pub spec_accepted: usize,
+    /// True iff generation ended with a legal EOS (not the length cap).
+    pub stopped: bool,
+}
+
+impl GenResult {
+    pub fn perplexity(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return f64::NAN;
+        }
+        (-self.logprob_sum / self.tokens.len() as f64).exp()
+    }
+
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.text_bytes).into_owned()
+    }
+}
+
+/// Shared state of one decoding run.
+struct Loop<'a> {
+    lm: &'a mut dyn LmSession,
+    checker: &'a mut dyn Checker,
+    vocab: &'a Vocab,
+    cfg: &'a GenConfig,
+    rng: &'a mut Rng,
+    res: GenResult,
+    logits: Vec<f32>,
+}
+
+impl<'a> Loop<'a> {
+    /// Consume the healed prompt suffix: pick (sampled) tokens compatible
+    /// with the forced bytes, route overhangs into the checker + output.
+    fn heal(&mut self, forced: &[u8]) -> crate::Result<()> {
+        let mut forced = forced.to_vec();
+        while !forced.is_empty() {
+            let mut mask = TokenMask::none(self.vocab.len());
+            for id in 0..self.vocab.len() as TokenId {
+                let b = self.vocab.token_bytes(id);
+                if b.is_empty() {
+                    continue;
+                }
+                let ok = if b.len() <= forced.len() {
+                    forced.starts_with(b)
+                } else {
+                    b.starts_with(&forced) && self.checker.check_bytes(&b[forced.len()..])
+                };
+                if ok {
+                    mask.allow(id);
+                }
+            }
+            if mask.is_empty() {
+                bail!("prompt healing deadlocked on {:?}", String::from_utf8_lossy(&forced));
+            }
+            let mut masked = self.logits.clone();
+            mask.apply(&mut masked);
+            let t = decode(&masked, self.cfg.sampling, self.rng);
+            self.res.logprob_sum += log_prob(&self.logits, t);
+            let b = self.vocab.token_bytes(t).to_vec();
+            if b.len() <= forced.len() {
+                forced.drain(..b.len());
+            } else {
+                let overhang = b[forced.len()..].to_vec();
+                forced.clear();
+                self.checker.advance_bytes(&overhang)?;
+                self.res.text_bytes.extend_from_slice(&overhang);
+            }
+            self.res.tokens.push(t);
+            self.logits = self.lm.append(&[t])?;
+            self.res.model_calls += 1;
+        }
+        Ok(())
+    }
+
+    /// One constrained choice from the current logits (lazy coupling).
+    /// Returns `None` on a dead end.
+    fn choose(&mut self) -> Option<TokenId> {
+        match self.cfg.mode {
+            MaskMode::Opportunistic => {
+                let proposal = decode(&self.logits, self.cfg.sampling, self.rng);
+                if self.checker.check_token(proposal) {
+                    Some(proposal)
+                } else {
+                    self.res.interventions += 1;
+                    let mask = self.checker.compute_mask();
+                    self.res.masks_computed += 1;
+                    if mask.is_empty() {
+                        return None;
+                    }
+                    let mut masked = self.logits.clone();
+                    mask.apply(&mut masked);
+                    Some(decode(&masked, self.cfg.sampling, self.rng))
+                }
+            }
+            MaskMode::FullMask => {
+                let mask = self.checker.compute_mask();
+                self.res.masks_computed += 1;
+                if mask.is_empty() {
+                    return None;
+                }
+                let proposal = decode(&self.logits, self.cfg.sampling, self.rng);
+                if mask.allowed(proposal) {
+                    Some(proposal)
+                } else {
+                    self.res.interventions += 1;
+                    let mut masked = self.logits.clone();
+                    mask.apply(&mut masked);
+                    Some(decode(&masked, self.cfg.sampling, self.rng))
+                }
+            }
+        }
+    }
+
+    /// Commit `chosen`; returns true when generation is finished.
+    fn commit(&mut self, chosen: TokenId) -> crate::Result<bool> {
+        self.res.logprob_sum += log_prob(&self.logits, chosen);
+        if chosen == EOS_ID {
+            self.res.stopped = true;
+            return Ok(true);
+        }
+        self.checker.advance(chosen)?;
+        self.res.tokens.push(chosen);
+        self.res.text_bytes.extend_from_slice(self.vocab.token_bytes(chosen));
+        self.logits = self.lm.append(&[chosen])?;
+        self.res.model_calls += 1;
+        Ok(self.res.tokens.len() >= self.cfg.max_tokens)
+    }
+}
+
+/// Run Algorithm 1 after `prompt` (healing phase included).
+pub fn generate(
+    lm: &mut dyn LmSession,
+    checker: &mut dyn Checker,
+    vocab: &Vocab,
+    prompt: &Prompt,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> crate::Result<GenResult> {
+    let logits = lm.append(&prompt.ids)?;
+    let mut l = Loop { lm, checker, vocab, cfg, rng, res: GenResult::default(), logits };
+    l.res.model_calls += 1;
+    l.heal(&prompt.forced)?;
+    while l.res.tokens.len() < cfg.max_tokens {
+        let Some(chosen) = l.choose() else { break };
+        if l.commit(chosen)? {
+            break;
+        }
+    }
+    Ok(l.res)
+}
+
+/// §3.6: the speculative loop. Proposals come from the count model
+/// conditioned on `(α, β)`; a single chunked forward pass verifies them.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_speculative(
+    lm: &mut dyn LmSession,
+    decoder: &mut DominoDecoder,
+    spec: &mut SpeculativeModel,
+    vocab: &Vocab,
+    prompt: &Prompt,
+    s: usize,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> crate::Result<GenResult> {
+    let mut res = GenResult::default();
+    let mut logits = lm.append(&prompt.ids)?;
+    res.model_calls += 1;
+
+    // Healing phase (plain, unspeculated).
+    {
+        let mut l = Loop { lm, checker: decoder, vocab, cfg, rng, res, logits };
+        l.heal(&prompt.forced)?;
+        res = l.res;
+        logits = l.logits;
+    }
+
+    'outer: while res.tokens.len() < cfg.max_tokens {
+        let proposal = spec.propose(decoder, s);
+        if proposal.is_empty() {
+            // One plain opportunistic step; teach the count model.
+            let chosen = {
+                let p = decode(&logits, cfg.sampling, rng);
+                if decoder.check_token(p) {
+                    p
+                } else {
+                    res.interventions += 1;
+                    let mask = decoder.compute_mask();
+                    res.masks_computed += 1;
+                    if mask.is_empty() {
+                        break;
+                    }
+                    let mut masked = logits.clone();
+                    mask.apply(&mut masked);
+                    decode(&masked, cfg.sampling, rng)
+                }
+            };
+            res.logprob_sum += log_prob(&logits, chosen);
+            if chosen == EOS_ID {
+                res.stopped = true;
+                break;
+            }
+            if let Some(key) = decoder.state_key() {
+                spec.observe(key, chosen);
+            }
+            decoder.advance(chosen)?;
+            res.tokens.push(chosen);
+            res.text_bytes.extend_from_slice(vocab.token_bytes(chosen));
+            logits = lm.append(&[chosen])?;
+            res.model_calls += 1;
+            continue;
+        }
+
+        // One chunked pass scores the whole proposal.
+        res.spec_proposed += proposal.len();
+        let rows = lm.append_scored(&proposal)?;
+        res.model_calls += 1;
+        let mut accepted = 0usize;
+        let mut cur = logits;
+        for (i, &p) in proposal.iter().enumerate() {
+            let choice = {
+                let c = decode(&cur, cfg.sampling, rng);
+                if decoder.check_token(c) {
+                    c
+                } else {
+                    res.interventions += 1;
+                    res.masks_computed += 1;
+                    let mask = decoder.compute_mask();
+                    if mask.is_empty() {
+                        break;
+                    }
+                    let mut masked = cur.clone();
+                    mask.apply(&mut masked);
+                    decode(&masked, cfg.sampling, rng)
+                }
+            };
+            if choice == p {
+                res.logprob_sum += log_prob(&cur, p);
+                if let Some(key) = decoder.state_key() {
+                    spec.observe(key, p);
+                }
+                decoder.advance(p)?;
+                res.tokens.push(p);
+                res.text_bytes.extend_from_slice(vocab.token_bytes(p));
+                res.spec_accepted += 1;
+                accepted += 1;
+                cur = rows[i].clone();
+                if res.tokens.len() >= cfg.max_tokens {
+                    lm.rollback(proposal.len() - accepted)?;
+                    break 'outer;
+                }
+            } else {
+                // Reject the rest; commit the model's own choice instead.
+                lm.rollback(proposal.len() - accepted)?;
+                res.logprob_sum += log_prob(&cur, choice);
+                if choice == EOS_ID {
+                    res.stopped = true;
+                    break 'outer;
+                }
+                if let Some(key) = decoder.state_key() {
+                    spec.observe(key, choice);
+                }
+                decoder.advance(choice)?;
+                res.tokens.push(choice);
+                res.text_bytes.extend_from_slice(vocab.token_bytes(choice));
+                logits = lm.append(&[choice])?;
+                res.model_calls += 1;
+                continue 'outer;
+            }
+        }
+        logits = cur;
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domino::decoder::{Engine, Lookahead};
+    use crate::domino::Unconstrained;
+    use crate::grammar::builtin::json;
+    use crate::runtime::mock::{json_mock, MockLm};
+    use crate::util::Rng;
+
+    fn setup() -> (std::sync::Arc<Engine>, std::sync::Arc<crate::runtime::mock::MockModel>) {
+        let (vocab, model) = json_mock(512);
+        let eng = Engine::compile(json(), vocab.clone()).unwrap();
+        (eng, model)
+    }
+
+    #[test]
+    fn unconstrained_vs_domino_greedy_identical() {
+        // The mock LM was trained on valid JSON, so greedy unconstrained
+        // output is valid — a minimally invasive decoder must match it
+        // token for token (Def. 2.1).
+        let (eng, model) = setup();
+        let cfg = GenConfig { max_tokens: 64, sampling: Sampling::Greedy, mode: MaskMode::Opportunistic };
+        let prompt = Prompt::default();
+
+        let mut lm1 = MockLm::new(model.clone());
+        let mut unc = Unconstrained::new(eng.vocab.len());
+        let r1 = generate(&mut lm1, &mut unc, &eng.vocab, &prompt, &cfg, &mut Rng::new(1)).unwrap();
+
+        let mut lm2 = MockLm::new(model);
+        let mut dec = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let r2 = generate(&mut lm2, &mut dec, &eng.vocab, &prompt, &cfg, &mut Rng::new(1)).unwrap();
+
+        assert_eq!(r1.text(), r2.text(), "minimally invasive must equal unconstrained");
+        assert_eq!(r2.interventions, 0);
+        assert!(crate::util::Json::parse(&r2.text()).is_ok(), "{}", r2.text());
+    }
+
+    #[test]
+    fn healed_prompt_reproduces_stripped_text() {
+        // Healing must regenerate exactly the stripped prompt bytes before
+        // free generation, whatever tokenization it picks.
+        let (eng, model) = setup();
+        let cfg = GenConfig { max_tokens: 24, sampling: Sampling::Greedy, mode: MaskMode::Opportunistic };
+        let text = "{\"name\": \"John Doe\", \"ag";
+        let healed = Prompt::healed(&eng.vocab, text);
+        assert!(!healed.forced.is_empty());
+        let plain = Prompt::plain(&eng.vocab, text);
+
+        let mut lm = MockLm::new(model.clone());
+        let mut dec = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        // Pre-advance the decoder over the *visible* prompt: the decoder
+        // state tracks output only, and here the whole text is "output".
+        dec.advance_bytes(&eng.vocab.decode(&healed.ids)).unwrap();
+        let r = generate(&mut lm, &mut dec, &eng.vocab, &healed, &cfg, &mut Rng::new(3)).unwrap();
+        // Output bytes continue the prompt text seamlessly.
+        let full = format!("{}{}", String::from_utf8_lossy(&eng.vocab.decode(&healed.ids)), {
+            // forced bytes are prompt text, so text_bytes excludes them.
+            let mut s = String::from_utf8_lossy(&healed.forced).into_owned();
+            s.push_str(&r.text());
+            s
+        });
+        assert!(full.starts_with(text), "healed generation must reproduce {text:?}: {full:?}");
+        let _ = plain;
+    }
+
+    #[test]
+    fn speculative_output_matches_plain() {
+        // Schema-driven grammar: the skeleton is deterministic enough for
+        // proposals to clear MIN_PROPOSAL.
+        let (vocab, model) = json_mock(512);
+        let eng = Engine::compile(crate::grammar::builtin::gsm8k_schema(), vocab).unwrap();
+        let cfg = GenConfig { max_tokens: 64, sampling: Sampling::Greedy, mode: MaskMode::Opportunistic };
+        let prompt = Prompt::default();
+
+        let mut lm1 = MockLm::new(model.clone());
+        let mut d1 = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let plain = generate(&mut lm1, &mut d1, &eng.vocab, &prompt, &cfg, &mut Rng::new(5)).unwrap();
+
+        let mut spec = SpeculativeModel::new(0.5);
+        {
+            let mut lm = MockLm::new(model.clone());
+            let mut d = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+            generate_speculative(&mut lm, &mut d, &mut spec, &eng.vocab, &prompt, 8, &cfg, &mut Rng::new(5))
+                .unwrap();
+        }
+        spec.frozen = true;
+        let mut lm2 = MockLm::new(model);
+        let mut d2 = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let specd = generate_speculative(
+            &mut lm2, &mut d2, &mut spec, &eng.vocab, &prompt, 8, &cfg, &mut Rng::new(5),
+        )
+        .unwrap();
+
+        assert_eq!(plain.tokens, specd.tokens);
+        assert!(specd.spec_accepted > 0);
+        assert!(specd.model_calls < plain.model_calls);
+    }
+
+    #[test]
+    fn k0_distorts_output() {
+        let (eng, model) = setup();
+        let cfg = GenConfig { max_tokens: 64, sampling: Sampling::Greedy, mode: MaskMode::FullMask };
+        let prompt = Prompt::default();
+
+        let mut lm1 = MockLm::new(model.clone());
+        let mut dinf = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let rinf = generate(&mut lm1, &mut dinf, &eng.vocab, &prompt, &cfg, &mut Rng::new(2)).unwrap();
+
+        let mut lm2 = MockLm::new(model);
+        let mut d0 = DominoDecoder::new(eng.clone(), Lookahead::K(0));
+        let r0 = generate(&mut lm2, &mut d0, &eng.vocab, &prompt, &cfg, &mut Rng::new(2)).unwrap();
+
+        assert!(r0.interventions > rinf.interventions);
+        assert!(r0.perplexity() >= rinf.perplexity());
+    }
+
+    #[test]
+    fn max_tokens_cap_reported() {
+        let (eng, model) = setup();
+        let mut lm = MockLm::new(model);
+        let mut dec = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let cfg = GenConfig { max_tokens: 3, sampling: Sampling::Greedy, mode: MaskMode::Opportunistic };
+        let r = generate(&mut lm, &mut dec, &eng.vocab, &Prompt::default(), &cfg, &mut Rng::new(0)).unwrap();
+        assert_eq!(r.tokens.len(), 3);
+        assert!(!r.stopped);
+    }
+}

@@ -1,0 +1,138 @@
+//! Token masks: bitsets over the vocabulary (EOS = bit 0).
+
+use crate::TokenId;
+
+/// The `m` of Algorithm 1 — one bit per vocabulary token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenMask {
+    words: Vec<u64>,
+    size: usize,
+}
+
+impl TokenMask {
+    pub fn none(size: usize) -> TokenMask {
+        TokenMask { words: vec![0; size.div_ceil(64)], size }
+    }
+
+    pub fn all(size: usize) -> TokenMask {
+        let mut m = TokenMask { words: vec![u64::MAX; size.div_ceil(64)], size };
+        // Clear bits beyond `size`.
+        let extra = m.words.len() * 64 - size;
+        if extra > 0 {
+            let last = m.words.len() - 1;
+            m.words[last] >>= extra;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn allow(&mut self, t: TokenId) {
+        let i = t as usize;
+        debug_assert!(i < self.size);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn forbid(&mut self, t: TokenId) {
+        let i = t as usize;
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn allowed(&self, t: TokenId) -> bool {
+        let i = t as usize;
+        i < self.size && self.words[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn union(&mut self, other: &TokenMask) {
+        debug_assert_eq!(self.size, other.size);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = TokenId> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            let mut out = Vec::with_capacity(w.count_ones() as usize);
+            while w != 0 {
+                let b = w.trailing_zeros();
+                out.push((wi * 64 + b as usize) as TokenId);
+                w &= w - 1;
+            }
+            out
+        })
+    }
+
+    /// Apply to a logits row: disallowed entries become `-inf`
+    /// (Algorithm 1 line 7, `m ⊙ v`).
+    pub fn apply(&self, logits: &mut [f32]) {
+        for (i, l) in logits.iter_mut().enumerate() {
+            if !self.allowed(i as TokenId) {
+                *l = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_query() {
+        let mut m = TokenMask::none(100);
+        assert!(m.is_empty());
+        m.allow(0);
+        m.allow(63);
+        m.allow(64);
+        m.allow(99);
+        assert_eq!(m.count(), 4);
+        assert!(m.allowed(0) && m.allowed(63) && m.allowed(64) && m.allowed(99));
+        assert!(!m.allowed(1) && !m.allowed(100));
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![0, 63, 64, 99]);
+        m.forbid(63);
+        assert!(!m.allowed(63));
+    }
+
+    #[test]
+    fn all_respects_size() {
+        let m = TokenMask::all(70);
+        assert_eq!(m.count(), 70);
+        assert!(m.allowed(69));
+        assert!(!m.allowed(70));
+    }
+
+    #[test]
+    fn apply_to_logits() {
+        let mut m = TokenMask::none(4);
+        m.allow(2);
+        let mut logits = vec![1.0f32, 2.0, 3.0, 4.0];
+        m.apply(&mut logits);
+        assert_eq!(logits[2], 3.0);
+        assert!(logits[0].is_infinite() && logits[1].is_infinite() && logits[3].is_infinite());
+    }
+
+    #[test]
+    fn union() {
+        let mut a = TokenMask::none(10);
+        a.allow(1);
+        let mut b = TokenMask::none(10);
+        b.allow(8);
+        a.union(&b);
+        assert!(a.allowed(1) && a.allowed(8));
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,98 @@
+//! DOMINO (§3.5) — minimally-invasive constrained decoding.
+//!
+//! * [`mask`] — vocabulary bitmasks (the `m` of Algorithm 1),
+//! * [`tree`] — vocabulary-aligned subterminal trees (Algorithm 2),
+//!   precomputed offline per scanner position,
+//! * [`decoder`] — the inference-time decoder: advances scanner + parser
+//!   hypotheses per generated token, computes lookahead-`k` masks by
+//!   parser-pruned tree traversal (Fig. 3 (e)), checks single tokens for
+//!   opportunistic masking,
+//! * [`spec`] — the count-based speculative model `P(l | α, β)` of §3.6.
+//!
+//! The [`Checker`] trait is Algorithm 1's `C`: baselines implement it too,
+//! so the eval harness and server are decoder-agnostic.
+
+pub mod decoder;
+pub mod generate;
+pub mod mask;
+pub mod spec;
+pub mod tree;
+
+pub use decoder::{DominoDecoder, Engine, Lookahead};
+pub use generate::{generate, generate_speculative, GenConfig, GenResult, MaskMode};
+pub use mask::TokenMask;
+pub use spec::SpeculativeModel;
+pub use tree::TreeSet;
+
+use crate::TokenId;
+
+/// Algorithm 1's checker interface.
+///
+/// `advance` is the incremental form of `C.update(o)`; `compute_mask` is
+/// `C.mask()`. `check_token` supports opportunistic masking: it must agree
+/// with `compute_mask` (`check_token(t) ⇔ compute_mask().allowed(t)`), but
+/// may be much cheaper for a single token.
+pub trait Checker: Send {
+    /// Consume one committed output token.
+    fn advance(&mut self, token: TokenId) -> crate::Result<()>;
+
+    /// Mask of legal next tokens (EOS included, as token id 0).
+    fn compute_mask(&mut self) -> TokenMask;
+
+    /// Is this single token a legal continuation?
+    fn check_token(&mut self, token: TokenId) -> bool;
+
+    /// Reset to the initial state (empty output).
+    fn reset(&mut self);
+
+    /// Has the output reached a state where generation may stop (EOS
+    /// legal)?
+    fn can_stop(&mut self) -> bool {
+        self.check_token(crate::tokenizer::EOS_ID)
+    }
+
+    /// A fingerprint of the checker state `(α, β)` used by the speculative
+    /// model (§3.6). `None` = speculation unsupported.
+    fn state_key(&self) -> Option<u64> {
+        None
+    }
+
+    /// Byte-level legality check (token healing at the prompt boundary
+    /// commits partial tokens, §3.5). Unconstrained checkers accept
+    /// everything.
+    fn check_bytes(&mut self, _bytes: &[u8]) -> bool {
+        true
+    }
+
+    /// Byte-level advance (see [`Checker::check_bytes`]).
+    fn advance_bytes(&mut self, _bytes: &[u8]) -> crate::Result<()> {
+        Ok(())
+    }
+}
+
+/// The trivial checker: everything allowed (unconstrained decoding).
+pub struct Unconstrained {
+    vocab_size: usize,
+}
+
+impl Unconstrained {
+    pub fn new(vocab_size: usize) -> Self {
+        Unconstrained { vocab_size }
+    }
+}
+
+impl Checker for Unconstrained {
+    fn advance(&mut self, _token: TokenId) -> crate::Result<()> {
+        Ok(())
+    }
+
+    fn compute_mask(&mut self) -> TokenMask {
+        TokenMask::all(self.vocab_size)
+    }
+
+    fn check_token(&mut self, _token: TokenId) -> bool {
+        true
+    }
+
+    fn reset(&mut self) {}
+}

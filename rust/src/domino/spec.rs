@@ -1,0 +1,157 @@
+//! Count-based speculative decoding (§3.6).
+//!
+//! Conditioned on the joint scanner/parser state `(α, β)` (exposed by
+//! [`super::Checker::state_key`]), a count model estimates
+//!
+//! ```text
+//! P(l | α, β) = #{LLM chose l in state (α, β)} / #{reached state (α, β)}
+//! ```
+//!
+//! Proposals: while the argmax token's estimated probability is ≥ the
+//! confidence threshold, propose it and advance a *cloned* decoder — up to
+//! `s` tokens per step. The LLM then validates the whole proposal with one
+//! chunked forward pass; the accepted prefix is committed, the rest
+//! discarded (no backtracking, as in Chen et al. 2023).
+//!
+//! Because counts are keyed on parser state, only grammar-legal tokens are
+//! ever learned — structured formats (schema-driven JSON, XML) become
+//! near-deterministic and speculation shines; free-form C does not (§4.3).
+
+use super::decoder::DominoDecoder;
+use super::Checker;
+use crate::TokenId;
+use std::collections::HashMap;
+
+/// Minimum proposal length worth a chunked verification call.
+pub const MIN_PROPOSAL: usize = 3;
+
+/// Count table for `P(l | α, β)`.
+#[derive(Default, Clone)]
+pub struct SpeculativeModel {
+    /// state key → (total visits, per-token counts).
+    counts: HashMap<u64, StateCounts>,
+    /// Confidence threshold τ: propose only while `P ≥ τ`.
+    pub threshold: f64,
+    /// Learning enabled? (The paper freezes priors after warmup.)
+    pub frozen: bool,
+}
+
+#[derive(Default, Clone)]
+struct StateCounts {
+    total: u64,
+    tokens: HashMap<TokenId, u64>,
+}
+
+impl SpeculativeModel {
+    pub fn new(threshold: f64) -> SpeculativeModel {
+        SpeculativeModel { counts: HashMap::new(), threshold, frozen: false }
+    }
+
+    /// Record that the LLM chose `token` in state `key`.
+    pub fn observe(&mut self, key: u64, token: TokenId) {
+        if self.frozen {
+            return;
+        }
+        let sc = self.counts.entry(key).or_default();
+        sc.total += 1;
+        *sc.tokens.entry(token).or_insert(0) += 1;
+    }
+
+    /// Best prediction for state `key`, if confident enough.
+    pub fn predict(&self, key: u64) -> Option<TokenId> {
+        let sc = self.counts.get(&key)?;
+        if sc.total == 0 {
+            return None;
+        }
+        let (&tok, &cnt) = sc.tokens.iter().max_by_key(|(_, &c)| c)?;
+        ((cnt as f64 / sc.total as f64) >= self.threshold).then_some(tok)
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Propose up to `s` tokens from `decoder`'s current state by chaining
+    /// confident predictions through a cloned decoder.
+    ///
+    /// Proposals shorter than [`MIN_PROPOSAL`] are suppressed: verifying a
+    /// chunk costs about one model call, so a 1–2 token proposal cannot
+    /// pay for itself.
+    pub fn propose(&self, decoder: &DominoDecoder, s: usize) -> Vec<TokenId> {
+        let mut clone = decoder.clone();
+        let mut out = Vec::new();
+        for _ in 0..s {
+            let Some(key) = clone.state_key() else { break };
+            let Some(tok) = self.predict(key) else { break };
+            // Only propose grammar-legal tokens (they should be legal by
+            // construction — counts are keyed on parser state — but a hash
+            // collision must not poison the proposal).
+            if clone.advance(tok).is_err() {
+                break;
+            }
+            out.push(tok);
+        }
+        if out.len() < MIN_PROPOSAL {
+            out.clear();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domino::decoder::{Engine, Lookahead};
+    use crate::grammar::builtin::fixed_template;
+    use crate::tokenizer;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_and_threshold() {
+        let mut m = SpeculativeModel::new(0.6);
+        for _ in 0..7 {
+            m.observe(42, 5);
+        }
+        for _ in 0..3 {
+            m.observe(42, 6);
+        }
+        assert_eq!(m.predict(42), Some(5)); // 0.7 ≥ 0.6
+        m.threshold = 0.8;
+        assert_eq!(m.predict(42), None);
+        assert_eq!(m.predict(99), None); // unseen state
+    }
+
+    #[test]
+    fn frozen_stops_learning() {
+        let mut m = SpeculativeModel::new(0.5);
+        m.observe(1, 2);
+        m.frozen = true;
+        m.observe(1, 3);
+        m.observe(1, 3);
+        assert_eq!(m.predict(1), Some(2));
+    }
+
+    #[test]
+    fn proposes_deterministic_template_prefix() {
+        // On the fixed-template grammar the opening tokens are forced;
+        // after observing one generation, the model should re-propose the
+        // same prefix.
+        let vocab = Arc::new(tokenizer::bpe::synthetic_json_vocab(512));
+        let eng = Engine::compile(fixed_template(), vocab.clone()).unwrap();
+        let text = "{\"id\"";
+        let ids = vocab.encode(text.as_bytes());
+
+        let mut m = SpeculativeModel::new(0.5);
+        let mut d = crate::domino::DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        for &id in &ids {
+            let key = d.state_key().unwrap();
+            m.observe(key, id);
+            d.advance(id).unwrap();
+        }
+        // Fresh decoder: proposal should replay the observed prefix.
+        let d2 = crate::domino::DominoDecoder::new(eng, Lookahead::Infinite);
+        let prop = m.propose(&d2, 8);
+        assert_eq!(&prop[..], &ids[..prop.len().min(ids.len())]);
+        assert!(!prop.is_empty());
+    }
+}

@@ -1,0 +1,316 @@
+//! Vocabulary-aligned subterminal trees (§3.3, Algorithm 2).
+//!
+//! For every scanner position `q` we enumerate, for every vocabulary token
+//! `l`, all subterminal sequences the scanner can read `l` as
+//! (`q.traverse(l)`), and organize them into a prefix tree over the
+//! *completed-terminal* sequences. Tokens land on the node for their
+//! completed sequence, grouped by the final pending position set (the
+//! trailing start/continuation subterminal).
+//!
+//! At inference time the decoder walks a tree with the parser, pruning
+//! edges whose terminal the parser rejects — mask computation then touches
+//! only the (small) tree instead of the whole vocabulary (§3.5).
+
+use crate::grammar::TermId;
+use crate::scanner::{Pos, Scanner};
+use crate::tokenizer::Vocab;
+use crate::TokenId;
+use std::collections::HashMap;
+
+/// Interned final-position sets, shared across all trees.
+#[derive(Debug, Default)]
+pub struct PosSets {
+    sets: Vec<PosSetInfo>,
+    ids: HashMap<Vec<Pos>, u32>,
+}
+
+/// A deduplicated pending-position set plus derived lookups.
+#[derive(Debug)]
+pub struct PosSetInfo {
+    pub positions: Vec<Pos>,
+    /// Distinct pending terminals (tags of `positions`).
+    pub terms: Vec<TermId>,
+    /// Pending terminals that are complete at their current state
+    /// (acceptable close points) — used for the EOS check.
+    pub accepting_terms: Vec<TermId>,
+}
+
+impl PosSets {
+    fn intern(&mut self, scanner: &Scanner, mut set: Vec<Pos>) -> u32 {
+        set.sort_unstable();
+        set.dedup();
+        if let Some(&id) = self.ids.get(&set) {
+            return id;
+        }
+        let mut terms: Vec<TermId> = Vec::new();
+        let mut accepting: Vec<TermId> = Vec::new();
+        for &p in &set {
+            if let Pos::In(t, _) = p {
+                terms.push(t);
+                if scanner.accepting(p) {
+                    accepting.push(t);
+                }
+            }
+        }
+        terms.sort_unstable();
+        terms.dedup();
+        accepting.sort_unstable();
+        accepting.dedup();
+        let id = self.sets.len() as u32;
+        self.ids.insert(set.clone(), id);
+        self.sets.push(PosSetInfo { positions: set, terms, accepting_terms: accepting });
+        id
+    }
+
+    pub fn get(&self, id: u32) -> &PosSetInfo {
+        &self.sets[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+}
+
+/// One prefix-tree node (path = sequence of completed terminals).
+#[derive(Debug, Default)]
+pub struct TreeNode {
+    /// Child edges, labeled by the completed terminal.
+    pub children: Vec<(TermId, u32)>,
+    /// Tokens whose traversal ends here, grouped by interned pending set.
+    pub entries: Vec<(u32, Vec<TokenId>)>,
+}
+
+/// The subterminal tree `T_q` for one scanner position.
+#[derive(Debug)]
+pub struct Tree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl Tree {
+    pub fn root(&self) -> &TreeNode {
+        &self.nodes[0]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// All trees for a (grammar, vocabulary) pair + interned position sets —
+/// the offline precomputation of §3.5.
+pub struct TreeSet {
+    /// Indexed by [`Scanner::pos_id`].
+    pub trees: Vec<Tree>,
+    pub possets: PosSets,
+    pub vocab_size: usize,
+}
+
+impl TreeSet {
+    /// Algorithm 2, for all scanner positions. Single-threaded; see
+    /// [`TreeSet::build`] for the parallel entry point.
+    pub fn build_serial(scanner: &Scanner, vocab: &Vocab) -> TreeSet {
+        let positions = scanner.reachable_positions();
+        let mut possets = PosSets::default();
+        let mut trees: Vec<Tree> = Vec::with_capacity(positions.len());
+        for pos in positions {
+            trees.push(Self::build_tree(scanner, vocab, pos, &mut possets));
+        }
+        TreeSet { trees, possets, vocab_size: vocab.len() }
+    }
+
+    /// Parallel build: positions are independent, so trees build on worker
+    /// threads; position-set interning is merged afterwards.
+    pub fn build(scanner: &Scanner, vocab: &Vocab) -> TreeSet {
+        let positions = scanner.reachable_positions();
+        let workers = std::thread::available_parallelism().map_or(4, |n| n.get()).min(positions.len().max(1));
+        if workers <= 1 || positions.len() < 8 {
+            return Self::build_serial(scanner, vocab);
+        }
+        // Each worker builds (tree, local posset) pairs for a stripe.
+        let chunks: Vec<Vec<Pos>> = positions
+            .chunks(positions.len().div_ceil(workers))
+            .map(|c| c.to_vec())
+            .collect();
+        let results: Vec<Vec<(Pos, Tree, PosSets)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    s.spawn(move || {
+                        chunk
+                            .into_iter()
+                            .map(|pos| {
+                                let mut local = PosSets::default();
+                                let t = Self::build_tree(scanner, vocab, pos, &mut local);
+                                (pos, t, local)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("tree worker")).collect()
+        });
+        // Merge: re-intern local posset ids into the global table.
+        let mut possets = PosSets::default();
+        let mut by_pos: HashMap<Pos, Tree> = HashMap::new();
+        for batch in results {
+            for (pos, mut tree, local) in batch {
+                let remap: Vec<u32> = local
+                    .sets
+                    .iter()
+                    .map(|info| possets.intern(scanner, info.positions.clone()))
+                    .collect();
+                for node in &mut tree.nodes {
+                    for (set_id, _) in &mut node.entries {
+                        *set_id = remap[*set_id as usize];
+                    }
+                }
+                by_pos.insert(pos, tree);
+            }
+        }
+        let trees = scanner
+            .reachable_positions()
+            .into_iter()
+            .map(|pos| by_pos.remove(&pos).expect("tree built for every position"))
+            .collect();
+        TreeSet { trees, possets, vocab_size: vocab.len() }
+    }
+
+    fn build_tree(scanner: &Scanner, vocab: &Vocab, pos: Pos, possets: &mut PosSets) -> Tree {
+        let mut nodes: Vec<TreeNode> = vec![TreeNode::default()];
+        // entries collected as (node, posset) -> tokens, then flattened.
+        let mut entry_map: HashMap<(u32, u32), Vec<TokenId>> = HashMap::new();
+        let start = [pos];
+        for id in 0..vocab.len() as TokenId {
+            let bytes = vocab.token_bytes(id);
+            if bytes.is_empty() {
+                continue; // specials
+            }
+            for (seq, posset) in scanner.traverse(&start, bytes) {
+                // Walk/extend the trie along the completed sequence.
+                let mut node = 0u32;
+                for &t in &seq {
+                    node = match nodes[node as usize].children.iter().find(|(tt, _)| *tt == t) {
+                        Some(&(_, child)) => child,
+                        None => {
+                            let child = nodes.len() as u32;
+                            nodes.push(TreeNode::default());
+                            nodes[node as usize].children.push((t, child));
+                            child
+                        }
+                    };
+                }
+                let set_id = possets.intern(scanner, posset);
+                entry_map.entry((node, set_id)).or_default().push(id);
+            }
+        }
+        for ((node, set_id), tokens) in entry_map {
+            nodes[node as usize].entries.push((set_id, tokens));
+        }
+        Tree { nodes }
+    }
+
+    pub fn tree(&self, scanner: &Scanner, pos: Pos) -> &Tree {
+        &self.trees[scanner.pos_id(pos) as usize]
+    }
+
+    /// Total node count across all trees (the §4.3 size statistic).
+    pub fn total_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.num_nodes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::builtin::fig3_expr;
+    use crate::tokenizer::Vocab;
+
+    /// Fig. 3 (c)-style mini vocabulary on top of raw bytes: tokens
+    /// "12", "+1", "1 (" etc. come from merges.
+    fn mini_vocab() -> Vocab {
+        let corpus = b"(12+1)(12+1)1 (1 (0+0)12+34+56".repeat(8);
+        crate::tokenizer::train(&corpus, 300)
+    }
+
+    #[test]
+    fn builds_trees_for_all_positions() {
+        let g = fig3_expr();
+        let s = Scanner::new(&g).unwrap();
+        let v = mini_vocab();
+        let ts = TreeSet::build(&s, &v);
+        assert_eq!(ts.trees.len(), s.num_pos());
+        assert!(ts.total_nodes() >= s.num_pos()); // at least a root each
+        assert!(ts.possets.len() > 0);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let g = fig3_expr();
+        let s = Scanner::new(&g).unwrap();
+        let v = mini_vocab();
+        let a = TreeSet::build(&s, &v);
+        let b = TreeSet::build_serial(&s, &v);
+        assert_eq!(a.trees.len(), b.trees.len());
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta.num_nodes(), tb.num_nodes());
+            // Same token multiset at the root.
+            let count = |t: &Tree| -> usize {
+                t.nodes.iter().map(|n| n.entries.iter().map(|(_, ts)| ts.len()).sum::<usize>()).sum()
+            };
+            assert_eq!(count(ta), count(tb));
+        }
+    }
+
+    #[test]
+    fn boundary_tree_contains_single_byte_starts() {
+        let g = fig3_expr();
+        let s = Scanner::new(&g).unwrap();
+        let v = Vocab::byte_level();
+        let ts = TreeSet::build(&s, &v);
+        let root = ts.tree(&s, Pos::Boundary).root();
+        // Tokens '(' ')' '+' '0'..'9' all end at the root (no completed
+        // terminal) with a pending position.
+        let mut root_tokens: Vec<TokenId> = root
+            .entries
+            .iter()
+            .flat_map(|(_, toks)| toks.iter().copied())
+            .collect();
+        root_tokens.sort_unstable();
+        let expect_byte = |c: u8| (c as usize + crate::tokenizer::NUM_SPECIAL) as TokenId;
+        for c in [b'(', b')', b'+', b'0', b'5', b'9'] {
+            assert!(root_tokens.contains(&expect_byte(c)), "{}", c as char);
+        }
+        // 'x' matches nothing.
+        assert!(!root_tokens.contains(&expect_byte(b'x')));
+        // Boundary tree has no children (single bytes never complete a
+        // terminal AND start another).
+        assert!(root.children.is_empty());
+    }
+
+    #[test]
+    fn bridge_token_lands_at_depth_two() {
+        // Token ")+" from inside int: completes int, completes +, nothing
+        // pending... no — ')' closes int and starts ')'; '+' closes ')'
+        // and starts '+': seq [int, ')'], pending {'+'}.
+        let g = fig3_expr();
+        let s = Scanner::new(&g).unwrap();
+        let corpus = b")+)+)+)+)+".repeat(4);
+        let v = crate::tokenizer::train(&corpus, 270);
+        let bridge = (0..v.len() as TokenId).find(|&id| v.token_bytes(id) == b")+").unwrap();
+        let ts = TreeSet::build(&s, &v);
+        // From a mid-int position:
+        let mid = s.traverse(&[Pos::Boundary], b"12").into_iter().find(|(q, _)| q.is_empty()).unwrap().1;
+        let int_pos = mid[0];
+        let tree = ts.tree(&s, int_pos);
+        // Walk: root --int--> n1 --')'--> n2; ")+" should be in n2's entries.
+        let int_id = g.terminals.iter().position(|t| t.name == "int").unwrap() as TermId;
+        let rp_id = g.terminals.iter().position(|t| t.name == "')'").unwrap() as TermId;
+        let n1 = tree.root().children.iter().find(|(t, _)| *t == int_id).expect("int edge").1;
+        let n2 = tree.nodes[n1 as usize].children.iter().find(|(t, _)| *t == rp_id).expect("rp edge").1;
+        let found = tree.nodes[n2 as usize]
+            .entries
+            .iter()
+            .any(|(_, toks)| toks.contains(&bridge));
+        assert!(found, "bridge token should land at depth 2");
+    }
+}

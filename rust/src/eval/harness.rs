@@ -1,0 +1,393 @@
+//! Method × task runners shared by the benches (one per paper table).
+
+use super::score;
+use super::workload;
+use crate::baselines::template::{conll_program, gsm8k_program, TemplateRuntime};
+use crate::baselines::OnlineChecker;
+use crate::domino::decoder::{Engine as GrammarEngine, Lookahead};
+use crate::domino::generate::Prompt;
+use crate::domino::{
+    generate, generate_speculative, DominoDecoder, GenConfig, MaskMode, SpeculativeModel,
+    Unconstrained,
+};
+use crate::grammar::builtin;
+use crate::runtime::mock::{json_mock, MockLm, MockModel};
+use crate::runtime::pjrt::{artifacts_dir, load_vocab, PjrtLm, PjrtModel};
+use crate::runtime::sampler::Sampling;
+use crate::runtime::LmSession;
+use crate::tokenizer::Vocab;
+use crate::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Model backend: the AOT bundle if present, the mock otherwise (so
+/// benches/tests run on a fresh checkout; the bench banner says which).
+pub enum Backend {
+    Pjrt(Arc<PjrtModel>),
+    Mock(Arc<MockModel>),
+}
+
+pub struct Setup {
+    pub vocab: Arc<Vocab>,
+    pub backend: Backend,
+    pub backend_name: &'static str,
+}
+
+impl Setup {
+    /// Load artifacts if available, else fall back to the mock LM.
+    pub fn load() -> Setup {
+        let dir = artifacts_dir();
+        if dir.join("model_config.json").exists() {
+            match (PjrtModel::load(&dir), load_vocab(&dir)) {
+                (Ok(model), Ok(vocab)) => {
+                    return Setup { vocab, backend: Backend::Pjrt(model), backend_name: "pjrt-aot" };
+                }
+                (a, b) => {
+                    eprintln!(
+                        "warn: artifacts load failed ({:?} / {:?}); using mock",
+                        a.err().map(|e| e.to_string()),
+                        b.err().map(|e| e.to_string())
+                    );
+                }
+            }
+        }
+        let (vocab, model) = json_mock(512);
+        Setup { vocab, backend: Backend::Mock(model), backend_name: "mock-trigram" }
+    }
+
+    pub fn session(&self) -> crate::Result<Box<dyn LmSession>> {
+        Ok(match &self.backend {
+            Backend::Pjrt(m) => Box::new(PjrtLm::new(m.clone())?),
+            Backend::Mock(m) => Box::new(MockLm::new(m.clone())),
+        })
+    }
+
+    pub fn engine(&self, grammar: &str) -> crate::Result<Arc<GrammarEngine>> {
+        let cfg = builtin::by_name(grammar)
+            .ok_or_else(|| anyhow::anyhow!("unknown grammar {grammar}"))?;
+        GrammarEngine::compile(cfg, self.vocab.clone())
+    }
+}
+
+/// The decoding methods of Tables 2–4.
+#[derive(Clone, Debug)]
+pub enum Method {
+    Unconstrained,
+    /// GUIDANCE-style template program; `ws` = App. A whitespace-flexible.
+    Guidance { ws: bool },
+    /// Online parser-guided masking, no precomputation.
+    /// `opportunistic=true` = llama.cpp (check the proposal first, Table 3
+    /// footnote); `false` = GCD/PICARD-style full-vocabulary mask every
+    /// step.
+    Online { opportunistic: bool },
+    /// DOMINO at lookahead `k`, optionally with §3.6 speculation;
+    /// `opportunistic=false` = Algorithm 1's full mask every step.
+    Domino { k: Lookahead, spec: Option<usize>, opportunistic: bool },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Unconstrained => "Unconstrained".into(),
+            Method::Guidance { ws: false } => "Guidance".into(),
+            Method::Guidance { ws: true } => "Guidance WS".into(),
+            Method::Online { opportunistic: true } => "llama.cpp (online, opp.)".into(),
+            Method::Online { opportunistic: false } => "GCD (online, full mask)".into(),
+            Method::Domino { k, spec, opportunistic } => {
+                let k = match k {
+                    Lookahead::K(k) => format!("k={k}"),
+                    Lookahead::Infinite => "k=inf".into(),
+                };
+                match (spec, opportunistic) {
+                    (Some(s), _) => format!("Domino ({k}, spec s={s})"),
+                    (None, true) => format!("Domino ({k}, opp.)"),
+                    (None, false) => format!("Domino ({k})"),
+                }
+            }
+        }
+    }
+
+    /// The mask cost mode this method runs under.
+    pub fn mask_mode(&self) -> MaskMode {
+        match self {
+            Method::Online { opportunistic: false } => MaskMode::FullMask,
+            Method::Domino { opportunistic: false, spec: None, .. } => MaskMode::FullMask,
+            _ => MaskMode::Opportunistic,
+        }
+    }
+}
+
+/// One table row's measurements.
+#[derive(Clone, Debug, Default)]
+pub struct RowMetrics {
+    pub n: usize,
+    pub accuracy: f64,
+    pub well_formed: f64,
+    pub perplexity: f64,
+    pub tokens: usize,
+    pub toks_per_s: f64,
+    pub interventions: usize,
+    pub model_calls: usize,
+    pub elapsed_s: f64,
+}
+
+struct TaskOutcome {
+    text: String,
+    tokens: usize,
+    logprob_sum: f64,
+    interventions: usize,
+    model_calls: usize,
+}
+
+/// Run one generation with `method` for a task-grammar; returns the text
+/// and stats.
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    setup: &Setup,
+    method: &Method,
+    grammar: &str,
+    engine: Option<&Arc<GrammarEngine>>,
+    spec_model: &mut SpeculativeModel,
+    prompt: &str,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> crate::Result<TaskOutcome> {
+    let mut lm = setup.session()?;
+    // Prompt-boundary token healing for every token-level method (§3.5);
+    // the template engine heals its own literal boundaries.
+    let healed = Prompt::healed(&setup.vocab, prompt);
+    match method {
+        Method::Unconstrained => {
+            let mut checker = Unconstrained::new(setup.vocab.len());
+            let r = generate(lm.as_mut(), &mut checker, &setup.vocab, &healed, cfg, rng)?;
+            Ok(TaskOutcome {
+                text: r.text(),
+                tokens: r.tokens.len(),
+                logprob_sum: r.logprob_sum,
+                interventions: r.interventions,
+                model_calls: r.model_calls,
+            })
+        }
+        Method::Guidance { ws } => {
+            let program = match grammar {
+                "gsm8k" => gsm8k_program(1),
+                "conll" => conll_program(2),
+                "template" => crate::baselines::template::rpg_program(),
+                _ => crate::baselines::template::person_program(),
+            };
+            let program = if *ws { program.ws_flexible() } else { program };
+            let rt = TemplateRuntime::compile(program, setup.vocab.clone(), true)?;
+            let r = rt.run_with_prompt(lm.as_mut(), prompt, cfg.sampling, rng)?;
+            Ok(TaskOutcome {
+                text: r.text.clone(),
+                tokens: r.tokens.len(),
+                logprob_sum: r.logprob_sum,
+                interventions: 0,
+                model_calls: r.model_calls,
+            })
+        }
+        Method::Online { .. } => {
+            let engine = engine.expect("grammar engine required");
+            let mut checker = OnlineChecker::new(engine.clone());
+            let r = generate(lm.as_mut(), &mut checker, &setup.vocab, &healed, cfg, rng)?;
+            Ok(TaskOutcome {
+                text: r.text(),
+                tokens: r.tokens.len(),
+                logprob_sum: r.logprob_sum,
+                interventions: r.interventions,
+                model_calls: r.model_calls,
+            })
+        }
+        Method::Domino { k, spec, .. } => {
+            let engine = engine.expect("grammar engine required");
+            let mut decoder = DominoDecoder::new(engine.clone(), *k);
+            let r = match spec {
+                Some(s) => generate_speculative(
+                    lm.as_mut(),
+                    &mut decoder,
+                    spec_model,
+                    &setup.vocab,
+                    &healed,
+                    *s,
+                    cfg,
+                    rng,
+                )?,
+                None => generate(lm.as_mut(), &mut decoder, &setup.vocab, &healed, cfg, rng)?,
+            };
+            Ok(TaskOutcome {
+                text: r.text(),
+                tokens: r.tokens.len(),
+                logprob_sum: r.logprob_sum,
+                interventions: r.interventions,
+                model_calls: r.model_calls,
+            })
+        }
+    }
+}
+
+/// Shared row runner: samples `n` tasks for `task_kind` ("gsm8k"/"conll"),
+/// runs `method`, scores accuracy/well-formedness/perplexity/throughput.
+pub fn eval_task(
+    setup: &Setup,
+    method: &Method,
+    task_kind: &str,
+    n: usize,
+    max_tokens: usize,
+    seed: u64,
+) -> crate::Result<RowMetrics> {
+    let engine = match method {
+        Method::Unconstrained | Method::Guidance { .. } => None,
+        _ => Some(setup.engine(task_kind)?),
+    };
+    let mut spec_model = SpeculativeModel::new(0.75);
+    let cfg = GenConfig { max_tokens, sampling: Sampling::Greedy, mode: method.mask_mode() };
+    let mut rng = Rng::new(seed);
+
+    // Speculation warmup (paper: priors over 10 samples, then frozen).
+    if matches!(method, Method::Domino { spec: Some(_), .. }) {
+        for _ in 0..10 {
+            let prompt = task_prompt(task_kind, &mut rng);
+            let _ = run_one(setup, method, task_kind, engine.as_ref(), &mut spec_model, &prompt, &cfg, &mut rng);
+        }
+        spec_model.frozen = true;
+    }
+
+    let mut row = RowMetrics { n, ..Default::default() };
+    let mut ppl_sum = 0.0;
+    let mut ppl_n = 0usize;
+    let t0 = Instant::now();
+    let mut task_rng = Rng::new(seed ^ 0xEEAA);
+    for _ in 0..n {
+        let (prompt, check): (String, Box<dyn Fn(&str) -> (bool, bool)>) = match task_kind {
+            "gsm8k" => {
+                let task = workload::math_task(&mut task_rng);
+                let p = task.prompt();
+                (p, Box::new(move |out: &str| {
+                    (score::math_correct(&task, out), score::well_formed_json(out, false))
+                }))
+            }
+            "conll" => {
+                let task = workload::ner_task(&mut task_rng);
+                let p = task.prompt();
+                (p, Box::new(move |out: &str| {
+                    let (_, exact) = score::ner_f1(&task, out);
+                    (exact, score::well_formed_json(out, false))
+                }))
+            }
+            other => panic!("unknown task kind {other}"),
+        };
+        let out = run_one(setup, method, task_kind, engine.as_ref(), &mut spec_model, &prompt, &cfg, &mut rng)?;
+        let (correct, wf) = check(&out.text);
+        row.accuracy += correct as usize as f64;
+        row.well_formed += wf as usize as f64;
+        row.tokens += out.tokens;
+        row.interventions += out.interventions;
+        row.model_calls += out.model_calls;
+        if out.tokens > 0 {
+            ppl_sum += (-out.logprob_sum / out.tokens as f64).exp();
+            ppl_n += 1;
+        }
+    }
+    row.elapsed_s = t0.elapsed().as_secs_f64();
+    row.accuracy /= n as f64;
+    row.well_formed /= n as f64;
+    row.perplexity = if ppl_n > 0 { ppl_sum / ppl_n as f64 } else { f64::NAN };
+    row.toks_per_s = row.tokens as f64 / row.elapsed_s.max(1e-9);
+    Ok(row)
+}
+
+fn task_prompt(task_kind: &str, rng: &mut Rng) -> String {
+    match task_kind {
+        "gsm8k" => workload::math_task(rng).prompt(),
+        "conll" => workload::ner_task(rng).prompt(),
+        other => workload::format_prompt(other, rng),
+    }
+}
+
+/// Table 3-style throughput run: free-format generation under `grammar`,
+/// temperature 1.0, `n` repetitions.
+pub fn eval_throughput(
+    setup: &Setup,
+    method: &Method,
+    grammar: &str,
+    n: usize,
+    max_tokens: usize,
+    seed: u64,
+) -> crate::Result<RowMetrics> {
+    let engine = match method {
+        Method::Unconstrained | Method::Guidance { .. } => None,
+        _ => Some(setup.engine(grammar)?),
+    };
+    let mut spec_model = SpeculativeModel::new(0.75);
+    let cfg = GenConfig {
+        max_tokens,
+        sampling: Sampling::Temperature(1.0),
+        mode: method.mask_mode(),
+    };
+    let mut rng = Rng::new(seed);
+    // Warmup (forms speculation priors; also warms PJRT).
+    for _ in 0..3 {
+        let prompt = task_prompt(grammar, &mut rng);
+        let _ = run_one(setup, method, grammar, engine.as_ref(), &mut spec_model, &prompt, &cfg, &mut rng);
+    }
+    spec_model.frozen = true;
+
+    let mut row = RowMetrics { n, ..Default::default() };
+    let mut wf = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let prompt = task_prompt(grammar, &mut rng);
+        let out = run_one(setup, method, grammar, engine.as_ref(), &mut spec_model, &prompt, &cfg, &mut rng)?;
+        row.tokens += out.tokens;
+        row.interventions += out.interventions;
+        row.model_calls += out.model_calls;
+        if score::well_formed_json(&out.text, false) || !grammar.contains("json") {
+            wf += 1;
+        }
+    }
+    row.elapsed_s = t0.elapsed().as_secs_f64();
+    row.well_formed = wf as f64 / n as f64;
+    row.toks_per_s = row.tokens as f64 / row.elapsed_s.max(1e-9);
+    Ok(row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A mock-backed setup for fast tests regardless of artifacts.
+    fn mock_setup() -> Setup {
+        let (vocab, model) = json_mock(512);
+        Setup { vocab, backend: Backend::Mock(model), backend_name: "mock" }
+    }
+
+    #[test]
+    fn eval_task_runs_all_methods() {
+        let setup = mock_setup();
+        for method in [
+            Method::Unconstrained,
+            Method::Domino { k: Lookahead::Infinite, spec: None, opportunistic: true },
+            Method::Domino { k: Lookahead::K(0), spec: None, opportunistic: false },
+            Method::Online { opportunistic: true },
+        ] {
+            let row = eval_task(&setup, &method, "gsm8k", 2, 48, 7).unwrap();
+            assert_eq!(row.n, 2);
+            assert!(row.toks_per_s >= 0.0, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn throughput_runs() {
+        let setup = mock_setup();
+        let row = eval_throughput(
+            &setup,
+            &Method::Domino { k: Lookahead::Infinite, spec: Some(8), opportunistic: true },
+            "json",
+            2,
+            32,
+            3,
+        )
+        .unwrap();
+        assert!(row.tokens > 0);
+    }
+}

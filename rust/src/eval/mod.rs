@@ -1,0 +1,20 @@
+//! Evaluation harness — everything needed to regenerate the paper's
+//! tables and figures (see DESIGN.md per-experiment index).
+//!
+//! * [`workload`] — synthetic GSM8K-style math problems and CoNLL-style
+//!   NER sentences with known answers, plus the App. C format prompts.
+//!   Formats mirror `python/compile/data.py` exactly; test problems are
+//!   freshly sampled (held out from the training corpus by seed).
+//! * [`score`] — well-formedness + answer extraction + task accuracy.
+//! * [`retokenize`] — Algorithm 3 (App. B): model-preferred retokenization
+//!   used by the Fig. 2 misalignment analysis.
+//! * [`harness`] — the method×task runners shared by `rust/benches/*`:
+//!   each returns the row metrics the paper reports (accuracy,
+//!   well-formed, perplexity, relative throughput).
+
+pub mod harness;
+pub mod retokenize;
+pub mod score;
+pub mod workload;
+
+pub use harness::{Method, Setup};

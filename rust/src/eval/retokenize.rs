@@ -1,0 +1,116 @@
+//! Algorithm 3 (App. B): model-based retokenization.
+//!
+//! Greedily re-encode a target text with the tokens the model itself
+//! would pick — the "naturalized" tokenization used to demonstrate
+//! template-induced misalignment (Fig. 2): forced template tokens often
+//! differ from the model-preferred tokens for the *same* text, and the
+//! model assigns them much lower probability.
+
+use crate::runtime::sampler::log_prob;
+use crate::runtime::LmSession;
+use crate::tokenizer::Vocab;
+use crate::TokenId;
+
+/// Result of a retokenization pass.
+#[derive(Clone, Debug)]
+pub struct Retokenized {
+    pub tokens: Vec<TokenId>,
+    /// Sum of `log P(token)` along the chosen tokenization.
+    pub logprob_sum: f64,
+}
+
+impl Retokenized {
+    pub fn perplexity(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return f64::NAN;
+        }
+        (-self.logprob_sum / self.tokens.len() as f64).exp()
+    }
+}
+
+/// Algorithm 3: after `prompt` (already appended to `lm`), re-encode
+/// `target` choosing at each step the highest-logit token that is a
+/// prefix of the remaining text.
+pub fn retokenize(
+    lm: &mut dyn LmSession,
+    vocab: &Vocab,
+    prompt: &[TokenId],
+    target: &[u8],
+) -> crate::Result<Retokenized> {
+    let mut logits = lm.append(prompt)?;
+    let mut out = Retokenized { tokens: Vec::new(), logprob_sum: 0.0 };
+    let mut rest: &[u8] = target;
+    while !rest.is_empty() {
+        // argmax over tokens that are a prefix of `rest`.
+        let mut best: Option<(TokenId, f32)> = None;
+        for id in 0..vocab.len() as TokenId {
+            let b = vocab.token_bytes(id);
+            if b.is_empty() || b.len() > rest.len() || &rest[..b.len()] != b {
+                continue;
+            }
+            let score = logits[id as usize];
+            if best.map_or(true, |(_, s)| score > s) {
+                best = Some((id, score));
+            }
+        }
+        let (tok, _) = best.expect("byte tokens make some prefix always available");
+        out.logprob_sum += log_prob(&logits, tok);
+        rest = &rest[vocab.token_bytes(tok).len()..];
+        logits = lm.append(&[tok])?;
+        out.tokens.push(tok);
+    }
+    Ok(out)
+}
+
+/// Score an *imposed* tokenization (e.g. the template-forced one): the
+/// model's log-probability of exactly that token sequence after `prompt`.
+pub fn score_tokenization(
+    lm: &mut dyn LmSession,
+    prompt: &[TokenId],
+    tokens: &[TokenId],
+) -> crate::Result<Retokenized> {
+    let mut logits = lm.append(prompt)?;
+    let mut sum = 0.0;
+    for &t in tokens {
+        sum += log_prob(&logits, t);
+        logits = lm.append(&[t])?;
+    }
+    Ok(Retokenized { tokens: tokens.to_vec(), logprob_sum: sum })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::{json_mock, MockLm};
+
+    #[test]
+    fn retokenization_covers_target() {
+        let (vocab, model) = json_mock(512);
+        let mut lm = MockLm::new(model);
+        let target = b"{\"name\": \"John Doe\"}";
+        let r = retokenize(&mut lm, &vocab, &[], target).unwrap();
+        assert_eq!(vocab.decode(&r.tokens), target);
+        assert!(r.logprob_sum.is_finite());
+    }
+
+    #[test]
+    fn model_preferred_beats_byte_by_byte() {
+        // The naturalized tokenization must score at least as well as the
+        // worst-case byte-level tokenization of the same text.
+        let (vocab, model) = json_mock(512);
+        let target = b"{\"name\": \"John Doe\"}";
+
+        let mut lm1 = MockLm::new(model.clone());
+        let natural = retokenize(&mut lm1, &vocab, &[], target).unwrap();
+
+        let bytes: Vec<crate::TokenId> = target
+            .iter()
+            .map(|&b| (b as usize + crate::tokenizer::NUM_SPECIAL) as crate::TokenId)
+            .collect();
+        let mut lm2 = MockLm::new(model);
+        let forced = score_tokenization(&mut lm2, &[], &bytes).unwrap();
+
+        // Compare per-byte normalized log-prob (different token counts).
+        assert!(natural.logprob_sum >= forced.logprob_sum - 1e-9);
+    }
+}

@@ -1,0 +1,104 @@
+//! Scoring: well-formedness + answer extraction + accuracy.
+
+use super::workload::{MathTask, NerTask};
+use crate::util::Json;
+
+/// Does the output parse as the expected structured format?
+/// Unconstrained models may ramble after a valid value — like the paper,
+/// we accept a valid *prefix* for unconstrained output but require the
+/// whole string to parse when a constraint claims to enforce it.
+pub fn well_formed_json(text: &str, strict: bool) -> bool {
+    if strict {
+        Json::parse(text.trim()).is_ok()
+    } else {
+        Json::parse_prefix(text).is_ok()
+    }
+}
+
+/// Extract the `answer` field of the GSM8K schema from (possibly noisy)
+/// output.
+pub fn extract_answer(text: &str) -> Option<i64> {
+    let (v, _) = Json::parse_prefix(text).ok()?;
+    let a = v.get("answer")?.as_f64()?;
+    Some(a as i64)
+}
+
+/// GSM8K-style accuracy: parsed answer equals gold.
+pub fn math_correct(task: &MathTask, output: &str) -> bool {
+    extract_answer(output) == Some(task.answer)
+}
+
+/// CoNLL-style scoring: exact-match F1 over (entity, type) pairs;
+/// `accuracy` in Table 2 terms = exact set match.
+pub fn ner_f1(task: &NerTask, output: &str) -> (f64, bool) {
+    let Some((v, _)) = Json::parse_prefix(output).ok() else {
+        return (0.0, false);
+    };
+    let Some(ents) = v.get("entities").and_then(|e| e.as_arr()) else {
+        return (0.0, false);
+    };
+    let got: Vec<(String, String)> = ents
+        .iter()
+        .filter_map(|e| {
+            Some((
+                e.get("entity")?.as_str()?.to_string(),
+                e.get("type")?.as_str()?.to_string(),
+            ))
+        })
+        .collect();
+    let gold = &task.entities;
+    let tp = got.iter().filter(|g| gold.contains(g)).count() as f64;
+    if got.is_empty() || gold.is_empty() {
+        return (0.0, false);
+    }
+    let p = tp / got.len() as f64;
+    let r = tp / gold.len() as f64;
+    let f1 = if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) };
+    let exact = got.len() == gold.len() && tp as usize == gold.len();
+    (f1, exact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn math_task() -> MathTask {
+        MathTask { question: "2+2?".into(), answer: 4 }
+    }
+
+    #[test]
+    fn extracts_answers() {
+        let out = r#"{"thoughts": [{"step": "add", "calculation": "2 + 2", "result": 4}], "answer": 4}"#;
+        assert!(math_correct(&math_task(), out));
+        assert!(!math_correct(&math_task(), r#"{"answer": 5}"#));
+        assert!(!math_correct(&math_task(), "not json"));
+        // Trailing rambles accepted (unconstrained case).
+        assert!(math_correct(&math_task(), r#"{"answer": 4} and then some text"#));
+    }
+
+    #[test]
+    fn well_formedness_modes() {
+        assert!(well_formed_json(r#"{"a": 1}"#, true));
+        assert!(!well_formed_json(r#"{"a": 1} extra"#, true));
+        assert!(well_formed_json(r#"{"a": 1} extra"#, false));
+        assert!(!well_formed_json("{", false));
+    }
+
+    #[test]
+    fn ner_scoring() {
+        let task = NerTask {
+            sentence: "Tom Smith visited Paris.".into(),
+            entities: vec![("Tom Smith".into(), "PER".into()), ("Paris".into(), "LOC".into())],
+        };
+        let perfect =
+            r#"{"entities": [{"entity": "Tom Smith", "type": "PER"}, {"entity": "Paris", "type": "LOC"}]}"#;
+        let (f1, exact) = ner_f1(&task, perfect);
+        assert!((f1 - 1.0).abs() < 1e-9 && exact);
+        let partial = r#"{"entities": [{"entity": "Tom Smith", "type": "PER"}]}"#;
+        let (f1, exact) = ner_f1(&task, partial);
+        assert!(f1 > 0.5 && f1 < 1.0 && !exact);
+        let (f1, exact) = ner_f1(&task, "garbage");
+        assert_eq!(f1, 0.0);
+        assert!(!exact);
+    }
+}

@@ -1,0 +1,268 @@
+//! The paper's evaluation grammars (App. C, Listings 3–7) plus the CoNLL
+//! NER schema (App. D, Listing 9) and the Fig. 3 running example.
+//!
+//! Translation notes (llama.cpp-style notation → our scanner/parser split):
+//!
+//! * character-level rules (`identifier ::= [a-zA-Z_] [a-zA-Z_0-9]*`)
+//!   become regex terminals (`identifier ::= /[a-zA-Z_][a-zA-Z_0-9]*/`);
+//! * the paper's recursive `ws ::= ([ \t\n] ws)?` is ε-or-nonempty
+//!   whitespace: we use a non-nullable `WS ::= /[ \t\n]+/` terminal and an
+//!   optional `ws ::= WS?` nonterminal (nullable terminals are rejected by
+//!   [`super::cfg::Cfg::new`] — optionality belongs to the CFG);
+//! * keyword/identifier overlap in the C grammar (`"int"` matches both the
+//!   keyword literal and the identifier regex) is kept: the scanner tracks
+//!   both sub-automata and the parser disambiguates — the edge case §3.3
+//!   calls out.
+
+use super::cfg::{Cfg, CfgBuilder, Symbol};
+use super::ebnf::parse_ebnf;
+
+/// Fig. 3 (a): `E ::= int | ( E ) | E + E`.
+pub fn fig3_expr() -> Cfg {
+    let mut b = CfgBuilder::new();
+    let e = b.nonterminal("E");
+    let int = b.regex_term("int", "(0+)|([1-9][0-9]*)");
+    let lp = b.literal("(");
+    let rp = b.literal(")");
+    let plus = b.literal("+");
+    b.production(e, vec![Symbol::T(int)]);
+    b.production(e, vec![Symbol::T(lp), Symbol::Nt(e), Symbol::T(rp)]);
+    b.production(e, vec![Symbol::Nt(e), Symbol::T(plus), Symbol::Nt(e)]);
+    b.build(e).expect("fig3 grammar is valid")
+}
+
+/// JSON string terminal with escapes — shared by several grammars
+/// (Listing 3 `string`).
+const JSON_STRING: &str =
+    r#"STRING ::= /"([^"\\]|\\(["\\\/bfnrt]|u[0-9a-fA-F]{4}))*"/"#;
+
+/// JSON number terminal (Listing 3 `number`).
+const JSON_NUMBER: &str =
+    r#"NUMBER ::= /-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][-+]?[0-9]+)?/"#;
+
+const WS: &str = r#"
+WS ::= /[ \t\n]+/
+ws ::= WS?
+"#;
+
+/// Listing 3: basic (schema-free) JSON.
+pub fn json() -> Cfg {
+    let src = format!(
+        r#"
+root ::= ws value
+value ::= object | array | STRING ws | NUMBER ws | "true" ws | "false" ws | "null" ws
+object ::= "{{" ws (pair ("," ws pair)*)? "}}" ws
+pair ::= STRING ws ":" ws value
+array ::= "[" ws (value ("," ws value)*)? "]" ws
+{JSON_STRING}
+{JSON_NUMBER}
+{WS}
+"#
+    );
+    parse_ebnf(&src).expect("json grammar is valid")
+}
+
+/// Listing 4: guided math reasoning schema for GSM8K —
+/// `{{"thoughts": [{{step, calculation, result}}...], "answer": n}}`.
+pub fn gsm8k_schema() -> Cfg {
+    let src = format!(
+        r#"
+root ::= ws object
+object ::= "{{" ws "\"thoughts\"" ws ":" ws "[" ws thought ("," ws thought)* "]" ws "," ws "\"answer\"" ws ":" ws INT ws "}}" ws
+thought ::= "{{" ws "\"step\"" ws ":" ws STRING ws "," ws "\"calculation\"" ws ":" ws STRING ws "," ws "\"result\"" ws ":" ws INT ws "}}" ws
+INT ::= /-?[0-9]+/
+{JSON_STRING}
+{WS}
+"#
+    );
+    parse_ebnf(&src).expect("gsm8k grammar is valid")
+}
+
+/// App. D (Listing 9): CoNLL-2003 NER output schema —
+/// `{{"entities": [{{"entity": s, "type": PER|LOC|ORG|MISC}}...]}}`.
+pub fn conll_schema() -> Cfg {
+    let src = format!(
+        r#"
+root ::= ws object
+object ::= "{{" ws "\"entities\"" ws ":" ws "[" ws (entity ("," ws entity)*)? "]" ws "}}" ws
+entity ::= "{{" ws "\"entity\"" ws ":" ws STRING ws "," ws "\"type\"" ws ":" ws type "}}" ws
+type ::= "\"PER\"" ws | "\"LOC\"" ws | "\"ORG\"" ws | "\"MISC\"" ws
+{JSON_STRING}
+{WS}
+"#
+    );
+    parse_ebnf(&src).expect("conll grammar is valid")
+}
+
+/// Listing 5: simple C program grammar.
+pub fn c_lang() -> Cfg {
+    let src = format!(
+        r#"
+root ::= ws declaration declaration*
+declaration ::= dataType identifier ws "(" ws (parameter ("," ws parameter)*)? ws ")" ws "{{" ws statement* "}}" ws
+dataType ::= "int" WS | "float" WS | "char" WS
+parameter ::= dataType identifier ws
+statement ::=
+      dataType identifier ws "=" ws expression ";" ws
+    | dataType identifier ws "[" ws expression ws "]" ws ("=" ws expression)? ";" ws
+    | identifier ws "=" ws expression ";" ws
+    | identifier ws "(" ws argList? ")" ws ";" ws
+    | "return" WS expression ";" ws
+    | "while" ws "(" ws condition ")" ws "{{" ws statement* "}}" ws
+    | "for" ws "(" ws forInit ";" ws condition ";" ws forUpdate ")" ws "{{" ws statement* "}}" ws
+    | "if" ws "(" ws condition ")" ws "{{" ws statement* "}}" ws ("else" ws "{{" ws statement* "}}" ws)?
+    | COMMENT ws
+    | MLCOMMENT ws
+forInit ::= dataType identifier ws "=" ws expression | identifier ws "=" ws expression
+forUpdate ::= identifier ws "=" ws expression
+condition ::= expression relationOperator ws expression
+relationOperator ::= "<=" | "<" | "==" | "!=" | ">=" | ">"
+expression ::= term (("+" | "-") ws term)*
+term ::= factor (("*" | "\/") ws factor)*
+factor ::= identifier ws | NUMBER ws | unaryTerm | funcCall | parenExpression | subscript | STRING ws
+unaryTerm ::= "-" factor
+funcCall ::= identifier "(" ws argList? ")" ws
+parenExpression ::= "(" ws expression ")" ws
+subscript ::= identifier "[" ws expression "]" ws
+argList ::= expression ("," ws expression)*
+identifier ::= /[a-zA-Z_][a-zA-Z_0-9]*/
+NUMBER ::= /-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][-+]?[0-9]+)?/
+{JSON_STRING}
+COMMENT ::= /\/\/[^\n]*\n/
+MLCOMMENT ::= /\/\*([^*]|(\*[^\/]))*\*\//
+{WS}
+"#
+    );
+    parse_ebnf(&src).expect("c grammar is valid")
+}
+
+/// Listing 6: XML with a person schema (recursive via `friends`).
+pub fn xml_schema() -> Cfg {
+    let src = format!(
+        r#"
+root ::= ws person
+person ::= "<person>" ws personattributes "</person>" ws
+personattributes ::= nameattribute ageattribute jobattribute friends?
+nameattribute ::= "<name>" TEXT "</name>" ws
+ageattribute ::= "<age>" TEXT "</age>" ws
+jobattribute ::= "<job>" ws jobinfo "</job>" ws
+jobinfo ::= jobtitle jobsalary
+jobtitle ::= "<title>" TEXT "</title>" ws
+jobsalary ::= "<salary>" TEXT "</salary>" ws
+friends ::= "<friends>" ws person person* "</friends>" ws
+TEXT ::= /[^<]+/
+{WS}
+"#
+    );
+    parse_ebnf(&src).expect("xml grammar is valid")
+}
+
+/// Listing 7: fixed-template RPG character profile (GUIDANCE-style —
+/// everything fixed except the generated fields).
+pub fn fixed_template() -> Cfg {
+    let src = r#"
+root ::= ws dict
+dict ::= "{" ws content ws "}" ws
+content ::= id_pair "," ws description_pair "," ws name_pair "," ws age_pair "," ws armor_pair "," ws weapon_pair "," ws class_pair "," ws mantra_pair "," ws strength_pair "," ws items_pair
+id_pair ::= "\"id\"" ws ":" ws NUMBER
+description_pair ::= "\"description\"" ws ":" ws "\"A nimble fighter\""
+name_pair ::= "\"name\"" ws ":" ws STRING
+age_pair ::= "\"age\"" ws ":" ws NUMBER
+armor_pair ::= "\"armor\"" ws ":" ws ("\"leather\"" | "\"chainmail\"" | "\"plate\"")
+weapon_pair ::= "\"weapon\"" ws ":" ws ("\"sword\"" | "\"axe\"" | "\"bow\"")
+class_pair ::= "\"class\"" ws ":" ws STRING
+mantra_pair ::= "\"mantra\"" ws ":" ws STRING
+strength_pair ::= "\"strength\"" ws ":" ws NUMBER
+items_pair ::= "\"items\"" ws ":" ws "[" ws item "," ws item "," ws item ws "]"
+item ::= STRING
+STRING ::= /"[^\n\r"]+"/
+NUMBER ::= /[0-9]+/
+WS ::= /[ \t\n]+/
+ws ::= WS?
+"#;
+    parse_ebnf(src).expect("template grammar is valid")
+}
+
+/// All named evaluation grammars, as used by benches and the CLI.
+pub fn by_name(name: &str) -> Option<Cfg> {
+    Some(match name {
+        "fig3" => fig3_expr(),
+        "json" => json(),
+        "gsm8k" => gsm8k_schema(),
+        "conll" => conll_schema(),
+        "c" => c_lang(),
+        "xml" => xml_schema(),
+        "template" => fixed_template(),
+        _ => return None,
+    })
+}
+
+/// Names accepted by [`by_name`].
+pub const GRAMMAR_NAMES: &[&str] = &["fig3", "json", "gsm8k", "conll", "c", "xml", "template"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtins_compile() {
+        for name in GRAMMAR_NAMES {
+            let g = by_name(name).unwrap();
+            assert!(g.num_terminals() > 0, "{name}");
+            // All terminal DFAs must compile too.
+            let dfas = g.terminal_dfas().unwrap();
+            assert_eq!(dfas.len(), g.num_terminals(), "{name}");
+        }
+    }
+
+    #[test]
+    fn json_terminals() {
+        let g = json();
+        let names: Vec<&str> = g.terminals.iter().map(|t| t.name.as_str()).collect();
+        assert!(names.contains(&"STRING"));
+        assert!(names.contains(&"NUMBER"));
+        assert!(names.contains(&"WS"));
+        let dfas = g.terminal_dfas().unwrap();
+        let string_id = g.terminals.iter().position(|t| t.name == "STRING").unwrap();
+        assert!(dfas[string_id].accepts(br#""hi there""#));
+        assert!(dfas[string_id].accepts("\"é\"".as_bytes()));
+        assert!(!dfas[string_id].accepts(br#""""#.strip_suffix(b"\"").unwrap()));
+    }
+
+    #[test]
+    fn c_keyword_identifier_overlap() {
+        let g = c_lang();
+        let dfas = g.terminal_dfas().unwrap();
+        let ident = g.terminals.iter().position(|t| t.name == "identifier").unwrap();
+        let int_kw = g
+            .terminals
+            .iter()
+            .position(|t| matches!(&t.kind, super::super::cfg::TerminalKind::Literal(b) if b == b"int"))
+            .unwrap();
+        // "int" is accepted by BOTH terminals — the ambiguity §3.3 mentions.
+        assert!(dfas[ident].accepts(b"int"));
+        assert!(dfas[int_kw].accepts(b"int"));
+    }
+
+    #[test]
+    fn c_comment_terminals() {
+        let g = c_lang();
+        let dfas = g.terminal_dfas().unwrap();
+        let ml = g.terminals.iter().position(|t| t.name == "MLCOMMENT").unwrap();
+        assert!(dfas[ml].accepts(b"/* hi */"));
+        assert!(dfas[ml].accepts(b"/* a * b */"));
+        assert!(!dfas[ml].accepts(b"/* unterminated"));
+        let sl = g.terminals.iter().position(|t| t.name == "COMMENT").unwrap();
+        assert!(dfas[sl].accepts(b"// c\n"));
+    }
+
+    #[test]
+    fn xml_text_terminal_merges() {
+        // NAME and NUMBER in the paper's listing share the regex [^<]+ —
+        // interning dedups them into one TEXT terminal.
+        let g = xml_schema();
+        let text_terms =
+            g.terminals.iter().filter(|t| matches!(&t.kind, super::super::cfg::TerminalKind::Regex(p) if p == "[^<]+")).count();
+        assert_eq!(text_terms, 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! CFG representation: interned terminals, productions, grammar analysis.
+
+use crate::regex;
+use anyhow::bail;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Terminal id (index into [`Cfg::terminals`]).
+pub type TermId = u32;
+/// Nonterminal id (index into [`Cfg::nonterminals`]).
+pub type NtId = u32;
+
+/// How a terminal is defined (§3.1: "terminals ... defined either by a
+/// regex or a literal string").
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum TerminalKind {
+    /// Fixed byte string, e.g. `"{"` or `"return"`.
+    Literal(Vec<u8>),
+    /// Regex over bytes, e.g. `/[1-9][0-9]*/`.
+    Regex(String),
+}
+
+/// A grammar terminal.
+#[derive(Clone, Debug)]
+pub struct Terminal {
+    /// Display name (auto-derived for anonymous literals).
+    pub name: String,
+    pub kind: TerminalKind,
+}
+
+/// Right-hand-side symbol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Symbol {
+    T(TermId),
+    Nt(NtId),
+}
+
+/// One production `lhs ::= rhs`.
+#[derive(Clone, Debug)]
+pub struct Production {
+    pub lhs: NtId,
+    pub rhs: Vec<Symbol>,
+}
+
+/// A context-free grammar over regex/literal terminals.
+#[derive(Clone, Debug)]
+pub struct Cfg {
+    pub terminals: Vec<Terminal>,
+    pub nonterminals: Vec<String>,
+    pub productions: Vec<Production>,
+    /// Productions grouped by lhs (indices into `productions`).
+    pub prods_by_lhs: Vec<Vec<usize>>,
+    pub start: NtId,
+    /// Nullable nonterminals (derive ε).
+    pub nullable: Vec<bool>,
+}
+
+impl Cfg {
+    /// Assemble + validate a grammar.
+    pub fn new(
+        terminals: Vec<Terminal>,
+        nonterminals: Vec<String>,
+        productions: Vec<Production>,
+        start: NtId,
+    ) -> crate::Result<Cfg> {
+        let nt_count = nonterminals.len();
+        let mut prods_by_lhs = vec![Vec::new(); nt_count];
+        for (i, p) in productions.iter().enumerate() {
+            if p.lhs as usize >= nt_count {
+                bail!("production {} has out-of-range lhs", i);
+            }
+            for s in &p.rhs {
+                match s {
+                    Symbol::T(t) if *t as usize >= terminals.len() => {
+                        bail!("production {} references unknown terminal", i)
+                    }
+                    Symbol::Nt(n) if *n as usize >= nt_count => {
+                        bail!("production {} references unknown nonterminal", i)
+                    }
+                    _ => {}
+                }
+            }
+            prods_by_lhs[p.lhs as usize].push(i);
+        }
+        for (nt, prods) in prods_by_lhs.iter().enumerate() {
+            if prods.is_empty() {
+                bail!("nonterminal `{}` has no productions", nonterminals[nt]);
+            }
+        }
+        // Reject nullable regex terminals: optionality belongs to the CFG
+        // (a nullable terminal would let the scanner's `r+` loop accept ε
+        // forever — see grammar/mod.rs).
+        for t in &terminals {
+            match &t.kind {
+                TerminalKind::Literal(b) if b.is_empty() => {
+                    bail!("terminal `{}` is the empty literal; use an ε-production instead", t.name)
+                }
+                TerminalKind::Regex(pat) => {
+                    let ast = regex::parse(pat)?;
+                    if ast.nullable() {
+                        bail!(
+                            "regex terminal `{}` (/{}/) is nullable; make it non-nullable and lift optionality into the grammar",
+                            t.name, pat
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        let nullable = compute_nullable(nt_count, &productions);
+        Ok(Cfg { terminals, nonterminals, productions, prods_by_lhs, start, nullable })
+    }
+
+    pub fn num_terminals(&self) -> usize {
+        self.terminals.len()
+    }
+
+    pub fn terminal_name(&self, t: TermId) -> &str {
+        &self.terminals[t as usize].name
+    }
+
+    /// Compile every terminal to its (minimized) DFA.
+    pub fn terminal_dfas(&self) -> crate::Result<Vec<regex::Dfa>> {
+        self.terminals
+            .iter()
+            .map(|t| {
+                let ast = match &t.kind {
+                    TerminalKind::Literal(bytes) => crate::regex::ast::Regex::Literal(bytes.clone()),
+                    TerminalKind::Regex(pat) => regex::parse(pat)?,
+                };
+                Ok(regex::Dfa::from_nfa(&regex::Nfa::from_regex(&ast)))
+            })
+            .collect()
+    }
+}
+
+fn compute_nullable(nt_count: usize, productions: &[Production]) -> Vec<bool> {
+    let mut nullable = vec![false; nt_count];
+    loop {
+        let mut changed = false;
+        for p in productions {
+            if nullable[p.lhs as usize] {
+                continue;
+            }
+            let all_nullable = p.rhs.iter().all(|s| match s {
+                Symbol::T(_) => false,
+                Symbol::Nt(n) => nullable[*n as usize],
+            });
+            if all_nullable {
+                nullable[p.lhs as usize] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            return nullable;
+        }
+    }
+}
+
+impl fmt::Display for Cfg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for p in &self.productions {
+            write!(f, "{} ::=", self.nonterminals[p.lhs as usize])?;
+            if p.rhs.is_empty() {
+                write!(f, " ε")?;
+            }
+            for s in &p.rhs {
+                match s {
+                    Symbol::T(t) => write!(f, " {}", self.terminals[*t as usize].name)?,
+                    Symbol::Nt(n) => write!(f, " {}", self.nonterminals[*n as usize])?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder used by the EBNF front-end and by tests.
+#[derive(Default)]
+pub struct CfgBuilder {
+    terminals: Vec<Terminal>,
+    term_ids: HashMap<TerminalKind, TermId>,
+    nonterminals: Vec<String>,
+    nt_ids: HashMap<String, NtId>,
+    productions: Vec<Production>,
+}
+
+impl CfgBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a terminal (deduped by kind).
+    pub fn terminal(&mut self, name: &str, kind: TerminalKind) -> TermId {
+        if let Some(&id) = self.term_ids.get(&kind) {
+            return id;
+        }
+        let id = self.terminals.len() as TermId;
+        self.terminals.push(Terminal { name: name.to_string(), kind: kind.clone() });
+        self.term_ids.insert(kind, id);
+        id
+    }
+
+    pub fn literal(&mut self, text: &str) -> TermId {
+        self.terminal(&format!("'{}'", text.escape_debug()), TerminalKind::Literal(text.as_bytes().to_vec()))
+    }
+
+    pub fn regex_term(&mut self, name: &str, pattern: &str) -> TermId {
+        self.terminal(name, TerminalKind::Regex(pattern.to_string()))
+    }
+
+    /// Intern a nonterminal by name.
+    pub fn nonterminal(&mut self, name: &str) -> NtId {
+        if let Some(&id) = self.nt_ids.get(name) {
+            return id;
+        }
+        let id = self.nonterminals.len() as NtId;
+        self.nonterminals.push(name.to_string());
+        self.nt_ids.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn has_nonterminal(&self, name: &str) -> bool {
+        self.nt_ids.contains_key(name)
+    }
+
+    pub fn production(&mut self, lhs: NtId, rhs: Vec<Symbol>) {
+        self.productions.push(Production { lhs, rhs });
+    }
+
+    pub fn build(self, start: NtId) -> crate::Result<Cfg> {
+        Cfg::new(self.terminals, self.nonterminals, self.productions, start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The running-example grammar from Fig. 3 (a):
+    /// `E ::= int | ( E ) | E + E` with `int = /(0+)|([1-9][0-9]*)/`.
+    pub fn fig3_grammar() -> Cfg {
+        let mut b = CfgBuilder::new();
+        let e = b.nonterminal("E");
+        let int = b.regex_term("int", "(0+)|([1-9][0-9]*)");
+        let lp = b.literal("(");
+        let rp = b.literal(")");
+        let plus = b.literal("+");
+        b.production(e, vec![Symbol::T(int)]);
+        b.production(e, vec![Symbol::T(lp), Symbol::Nt(e), Symbol::T(rp)]);
+        b.production(e, vec![Symbol::Nt(e), Symbol::T(plus), Symbol::Nt(e)]);
+        b.build(e).unwrap()
+    }
+
+    #[test]
+    fn builds_fig3() {
+        let g = fig3_grammar();
+        assert_eq!(g.num_terminals(), 4);
+        assert_eq!(g.nonterminals, vec!["E"]);
+        assert_eq!(g.productions.len(), 3);
+        assert!(!g.nullable[0]);
+    }
+
+    #[test]
+    fn terminal_dedup() {
+        let mut b = CfgBuilder::new();
+        let a = b.literal("+");
+        let c = b.literal("+");
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn nullable_computation() {
+        let mut b = CfgBuilder::new();
+        let s = b.nonterminal("S");
+        let a = b.nonterminal("A");
+        let x = b.literal("x");
+        b.production(s, vec![Symbol::Nt(a), Symbol::Nt(a)]);
+        b.production(a, vec![]);
+        b.production(a, vec![Symbol::T(x)]);
+        let g = b.build(s).unwrap();
+        assert!(g.nullable[0] && g.nullable[1]);
+    }
+
+    #[test]
+    fn rejects_nullable_regex_terminal() {
+        let mut b = CfgBuilder::new();
+        let s = b.nonterminal("S");
+        let ws = b.regex_term("ws", "[ \t]*");
+        b.production(s, vec![Symbol::T(ws)]);
+        assert!(b.build(s).is_err());
+    }
+
+    #[test]
+    fn rejects_undefined_nonterminal() {
+        let mut b = CfgBuilder::new();
+        let s = b.nonterminal("S");
+        let orphan = b.nonterminal("orphan");
+        b.production(s, vec![Symbol::Nt(orphan)]);
+        assert!(b.build(s).is_err());
+    }
+
+    #[test]
+    fn dfas_compile() {
+        let g = fig3_grammar();
+        let dfas = g.terminal_dfas().unwrap();
+        assert!(dfas[0].accepts(b"12"));
+        assert!(!dfas[0].accepts(b"012"));
+        assert!(dfas[1].accepts(b"("));
+    }
+}

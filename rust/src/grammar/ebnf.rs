@@ -1,0 +1,534 @@
+//! EBNF front-end for the paper's grammar notation.
+//!
+//! ```text
+//! # comment
+//! root   ::= value
+//! value  ::= object | array | STRING | "true" ws
+//! object ::= "{" ws (pair ("," ws pair)*)? "}" ws
+//! STRING ::= /"[^"]*"/          # a rule whose body is a single regex
+//!                               # defines a *terminal*, not a nonterminal
+//! ```
+//!
+//! * `"..."` — literal terminal (escapes: `\n \t \r \\ \" \u{...}`),
+//! * `/.../` — regex terminal (see [`crate::regex::parse`] for the dialect;
+//!   `\/` escapes the delimiter),
+//! * `|` alternation, `( )` grouping, `?` `*` `+` postfix operators,
+//! * EBNF operators are desugared to plain productions via synthetic
+//!   nonterminals (`name%opt`, `name%star`, ...),
+//! * the first rule is the start symbol.
+
+use super::cfg::{Cfg, CfgBuilder, Symbol};
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Name(String),
+    Define, // ::=
+    Pipe,
+    LParen,
+    RParen,
+    Quest,
+    Star,
+    Plus,
+    Literal(String),
+    RegexPat(String),
+}
+
+fn tokenize(src: &str) -> crate::Result<Vec<(Tok, usize)>> {
+    let mut toks = Vec::new();
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                }
+            }
+            ':' => {
+                if chars.get(i + 1) == Some(&':') && chars.get(i + 2) == Some(&'=') {
+                    toks.push((Tok::Define, line));
+                    i += 3;
+                } else {
+                    bail!("ebnf line {line}: stray `:`");
+                }
+            }
+            '|' => {
+                toks.push((Tok::Pipe, line));
+                i += 1;
+            }
+            '(' => {
+                toks.push((Tok::LParen, line));
+                i += 1;
+            }
+            ')' => {
+                toks.push((Tok::RParen, line));
+                i += 1;
+            }
+            '?' => {
+                toks.push((Tok::Quest, line));
+                i += 1;
+            }
+            '*' => {
+                toks.push((Tok::Star, line));
+                i += 1;
+            }
+            '+' => {
+                toks.push((Tok::Plus, line));
+                i += 1;
+            }
+            '"' => {
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    match chars.get(i) {
+                        None => bail!("ebnf line {line}: unterminated string literal"),
+                        Some('"') => {
+                            i += 1;
+                            break;
+                        }
+                        Some('\\') => {
+                            i += 1;
+                            let e = chars.get(i).context("dangling escape")?;
+                            s.push(match e {
+                                'n' => '\n',
+                                't' => '\t',
+                                'r' => '\r',
+                                '\\' => '\\',
+                                '"' => '"',
+                                '/' => '/',
+                                other => bail!("ebnf line {line}: unknown string escape \\{other}"),
+                            });
+                            i += 1;
+                        }
+                        Some(&c) => {
+                            if c == '\n' {
+                                line += 1;
+                            }
+                            s.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+                toks.push((Tok::Literal(s), line));
+            }
+            '/' => {
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    match chars.get(i) {
+                        None => bail!("ebnf line {line}: unterminated regex"),
+                        Some('/') => {
+                            i += 1;
+                            break;
+                        }
+                        Some('\\') if chars.get(i + 1) == Some(&'/') => {
+                            s.push('/');
+                            i += 2;
+                        }
+                        Some('\\') => {
+                            s.push('\\');
+                            if let Some(&n) = chars.get(i + 1) {
+                                s.push(n);
+                                i += 2;
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        Some(&c) => {
+                            if c == '\n' {
+                                line += 1;
+                            }
+                            s.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+                toks.push((Tok::RegexPat(s), line));
+            }
+            c if c.is_alphanumeric() || c == '_' || c == '%' => {
+                let start = i;
+                while i < chars.len()
+                    && (chars[i].is_alphanumeric() || chars[i] == '_' || chars[i] == '%')
+                {
+                    i += 1;
+                }
+                toks.push((Tok::Name(chars[start..i].iter().collect()), line));
+            }
+            other => bail!("ebnf line {line}: unexpected character `{other}`"),
+        }
+    }
+    Ok(toks)
+}
+
+/// Expression tree before desugaring.
+#[derive(Debug, Clone)]
+enum Expr {
+    Ref(String),
+    Literal(String),
+    RegexPat(String),
+    Seq(Vec<Expr>),
+    Alt(Vec<Expr>),
+    Opt(Box<Expr>),
+    Star(Box<Expr>),
+    Plus(Box<Expr>),
+}
+
+struct RuleParser {
+    toks: Vec<(Tok, usize)>,
+    pos: usize,
+}
+
+impl RuleParser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn line(&self) -> usize {
+        self.toks.get(self.pos).or_else(|| self.toks.last()).map_or(0, |(_, l)| *l)
+    }
+
+    /// Parse `name ::= alt` until the next `name ::=` or EOF.
+    fn rule(&mut self) -> crate::Result<Option<(String, Expr)>> {
+        let name = match self.peek() {
+            None => return Ok(None),
+            Some(Tok::Name(n)) => n.clone(),
+            Some(other) => bail!("ebnf line {}: expected rule name, got {:?}", self.line(), other),
+        };
+        self.pos += 1;
+        if self.peek() != Some(&Tok::Define) {
+            bail!("ebnf line {}: expected `::=` after `{name}`", self.line());
+        }
+        self.pos += 1;
+        let body = self.alt()?;
+        Ok(Some((name, body)))
+    }
+
+    fn alt(&mut self) -> crate::Result<Expr> {
+        let mut branches = vec![self.seq()?];
+        while self.peek() == Some(&Tok::Pipe) {
+            self.pos += 1;
+            branches.push(self.seq()?);
+        }
+        Ok(if branches.len() == 1 { branches.pop().unwrap() } else { Expr::Alt(branches) })
+    }
+
+    fn seq(&mut self) -> crate::Result<Expr> {
+        let mut parts = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::Name(_)) => {
+                    // A name followed by `::=` starts the next rule.
+                    if self.toks.get(self.pos + 1).map(|(t, _)| t) == Some(&Tok::Define) {
+                        break;
+                    }
+                    parts.push(self.postfix()?);
+                }
+                Some(Tok::Literal(_)) | Some(Tok::RegexPat(_)) | Some(Tok::LParen) => {
+                    parts.push(self.postfix()?)
+                }
+                _ => break,
+            }
+        }
+        Ok(match parts.len() {
+            0 => Expr::Seq(vec![]),
+            1 => parts.pop().unwrap(),
+            _ => Expr::Seq(parts),
+        })
+    }
+
+    fn postfix(&mut self) -> crate::Result<Expr> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Quest) => {
+                    self.pos += 1;
+                    e = Expr::Opt(Box::new(e));
+                }
+                Some(Tok::Star) => {
+                    self.pos += 1;
+                    e = Expr::Star(Box::new(e));
+                }
+                Some(Tok::Plus) => {
+                    self.pos += 1;
+                    e = Expr::Plus(Box::new(e));
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn atom(&mut self) -> crate::Result<Expr> {
+        let line = self.line();
+        match self.peek().cloned() {
+            Some(Tok::Name(n)) => {
+                self.pos += 1;
+                Ok(Expr::Ref(n))
+            }
+            Some(Tok::Literal(s)) => {
+                self.pos += 1;
+                Ok(Expr::Literal(s))
+            }
+            Some(Tok::RegexPat(s)) => {
+                self.pos += 1;
+                Ok(Expr::RegexPat(s))
+            }
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let inner = self.alt()?;
+                if self.peek() != Some(&Tok::RParen) {
+                    bail!("ebnf line {line}: unclosed group");
+                }
+                self.pos += 1;
+                Ok(inner)
+            }
+            other => bail!("ebnf line {line}: expected atom, got {other:?}"),
+        }
+    }
+}
+
+/// Parse an EBNF grammar source into a [`Cfg`]. The first rule is the start
+/// symbol.
+pub fn parse_ebnf(src: &str) -> crate::Result<Cfg> {
+    let toks = tokenize(src)?;
+    let mut parser = RuleParser { toks, pos: 0 };
+    let mut rules: Vec<(String, Expr)> = Vec::new();
+    while let Some(rule) = parser.rule()? {
+        rules.push(rule);
+    }
+    if rules.is_empty() {
+        bail!("ebnf: no rules");
+    }
+
+    // Pass 1: rules whose body is a single regex atom define terminals.
+    let mut term_defs: HashMap<String, String> = HashMap::new();
+    for (name, body) in &rules {
+        if let Expr::RegexPat(pat) = body {
+            term_defs.insert(name.clone(), pat.clone());
+        }
+    }
+
+    let mut b = CfgBuilder::new();
+    // Pre-intern nonterminals in declaration order so the start symbol is
+    // rule 0 and synthetic names can't collide (user names can't contain %).
+    for (name, _) in &rules {
+        if !term_defs.contains_key(name) {
+            b.nonterminal(name);
+        }
+    }
+
+    let mut lowerer = Lowerer { b, term_defs, anon: 0 };
+    let mut defined: HashMap<String, bool> = HashMap::new();
+    for (name, body) in &rules {
+        if lowerer.term_defs.contains_key(name) {
+            continue;
+        }
+        if defined.insert(name.clone(), true).is_some() {
+            bail!("ebnf: duplicate rule `{name}` (use `|` for alternatives)");
+        }
+        let lhs = lowerer.b.nonterminal(name);
+        lowerer.lower_rule(lhs, body)?;
+    }
+    // Start symbol: the first rule. If it defines a terminal, wrap it in a
+    // synthetic start nonterminal.
+    let start = if let Some(pat) = lowerer.term_defs.get(&rules[0].0).cloned() {
+        let nt = lowerer.b.nonterminal("%root");
+        let t = lowerer.b.regex_term(&rules[0].0, &pat);
+        lowerer.b.production(nt, vec![Symbol::T(t)]);
+        nt
+    } else {
+        lowerer.b.nonterminal(&rules[0].0)
+    };
+    lowerer.b.build(start)
+}
+
+struct Lowerer {
+    b: CfgBuilder,
+    term_defs: HashMap<String, String>,
+    anon: usize,
+}
+
+impl Lowerer {
+    /// Lower `lhs ::= body`, flattening top-level alternation into separate
+    /// productions.
+    fn lower_rule(&mut self, lhs: u32, body: &Expr) -> crate::Result<()> {
+        match body {
+            Expr::Alt(branches) => {
+                for br in branches {
+                    let rhs = self.lower_seq(br)?;
+                    self.b.production(lhs, rhs);
+                }
+            }
+            other => {
+                let rhs = self.lower_seq(other)?;
+                self.b.production(lhs, rhs);
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower an expression to a symbol sequence (introducing synthetic
+    /// nonterminals for nested operators).
+    fn lower_seq(&mut self, e: &Expr) -> crate::Result<Vec<Symbol>> {
+        match e {
+            Expr::Seq(parts) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend(self.lower_seq(p)?);
+                }
+                Ok(out)
+            }
+            other => Ok(vec![self.lower_symbol(other)?]),
+        }
+    }
+
+    fn lower_symbol(&mut self, e: &Expr) -> crate::Result<Symbol> {
+        match e {
+            Expr::Ref(name) => {
+                if let Some(pat) = self.term_defs.get(name).cloned() {
+                    Ok(Symbol::T(self.b.regex_term(name, &pat)))
+                } else if self.b.has_nonterminal(name) {
+                    Ok(Symbol::Nt(self.b.nonterminal(name)))
+                } else {
+                    bail!("ebnf: reference to undefined rule `{name}`")
+                }
+            }
+            Expr::Literal(s) => {
+                if s.is_empty() {
+                    bail!("ebnf: empty literal; use `( ... )?` for optionality");
+                }
+                Ok(Symbol::T(self.b.literal(s)))
+            }
+            Expr::RegexPat(pat) => {
+                let name = format!("/{pat}/");
+                Ok(Symbol::T(self.b.regex_term(&name, pat)))
+            }
+            Expr::Opt(inner) => {
+                let nt = self.fresh("opt");
+                let rhs = self.lower_seq(inner)?;
+                self.b.production(nt, rhs);
+                self.b.production(nt, vec![]);
+                Ok(Symbol::Nt(nt))
+            }
+            Expr::Star(inner) => {
+                // star ::= item star | ε  (right-recursive keeps Earley
+                // charts shallow for long lists)
+                let nt = self.fresh("star");
+                let mut rhs = self.lower_seq(inner)?;
+                rhs.push(Symbol::Nt(nt));
+                self.b.production(nt, rhs);
+                self.b.production(nt, vec![]);
+                Ok(Symbol::Nt(nt))
+            }
+            Expr::Plus(inner) => {
+                // plus ::= item plus | item
+                let nt = self.fresh("plus");
+                let item = self.lower_seq(inner)?;
+                let mut rec = item.clone();
+                rec.push(Symbol::Nt(nt));
+                self.b.production(nt, rec);
+                self.b.production(nt, item);
+                Ok(Symbol::Nt(nt))
+            }
+            Expr::Seq(_) => {
+                let nt = self.fresh("seq");
+                let rhs = self.lower_seq(e)?;
+                self.b.production(nt, rhs);
+                Ok(Symbol::Nt(nt))
+            }
+            Expr::Alt(branches) => {
+                let nt = self.fresh("alt");
+                for br in branches {
+                    let rhs = self.lower_seq(br)?;
+                    self.b.production(nt, rhs);
+                }
+                Ok(Symbol::Nt(nt))
+            }
+        }
+    }
+
+    fn fresh(&mut self, kind: &str) -> u32 {
+        self.anon += 1;
+        self.b.nonterminal(&format!("%{kind}{}", self.anon))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::TerminalKind;
+
+    #[test]
+    fn parses_fig3_running_example() {
+        let g = parse_ebnf(
+            r#"
+            # Fig. 3 (a)
+            E ::= int | "(" E ")" | E "+" E
+            int ::= /(0+)|([1-9][0-9]*)/
+            "#,
+        )
+        .unwrap();
+        assert_eq!(g.nonterminals[g.start as usize], "E");
+        assert_eq!(g.prods_by_lhs[g.start as usize].len(), 3);
+        assert_eq!(g.num_terminals(), 4);
+        let int = g.terminals.iter().find(|t| t.name == "int").unwrap();
+        assert!(matches!(&int.kind, TerminalKind::Regex(p) if p.contains("[1-9]")));
+    }
+
+    #[test]
+    fn desugars_operators() {
+        let g = parse_ebnf(
+            r#"
+            list ::= "[" (item ("," item)*)? "]"
+            item ::= /[a-z]+/
+            "#,
+        )
+        .unwrap();
+        // list, %opt, %star, item-as-terminal
+        assert!(g.nonterminals.iter().any(|n| n.starts_with("%opt")));
+        assert!(g.nonterminals.iter().any(|n| n.starts_with("%star")));
+        assert!(g.nullable.iter().any(|&n| n)); // %opt and %star are nullable
+    }
+
+    #[test]
+    fn literal_escapes() {
+        let g = parse_ebnf(r#"s ::= "a\nb\"c""#).unwrap();
+        match &g.terminals[0].kind {
+            TerminalKind::Literal(b) => assert_eq!(b, b"a\nb\"c"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn regex_with_escaped_slash() {
+        let g = parse_ebnf(r#"s ::= /a\/b/"#).unwrap();
+        match &g.terminals[0].kind {
+            TerminalKind::Regex(p) => assert_eq!(p, "a/b"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_ebnf("").is_err());
+        assert!(parse_ebnf("a ::= undefined_rule").is_err());
+        assert!(parse_ebnf("a ::= \"x\" a ::= \"y\"").is_err()); // duplicate
+        assert!(parse_ebnf("a ::= (\"x\"").is_err()); // unclosed group
+        assert!(parse_ebnf("a := \"x\"").is_err()); // bad define
+    }
+
+    #[test]
+    fn first_rule_is_start() {
+        let g = parse_ebnf("root ::= x \n x ::= \"x\"").unwrap();
+        assert_eq!(g.nonterminals[g.start as usize], "root");
+    }
+}

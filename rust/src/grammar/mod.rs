@@ -1,0 +1,27 @@
+//! Context-free grammar substrate.
+//!
+//! * [`cfg`] — the CFG representation DOMINO operates on: interned
+//!   **terminals** (each a literal string or a regex over bytes) and
+//!   **productions** over terminals + nonterminals.
+//! * [`ebnf`] — parser for the grammar notation used throughout the paper's
+//!   App. C (`::=` rules, `|`, `( )`, `?`, `*`, `+`, string literals and
+//!   slash-delimited regex terminals), with EBNF-operator desugaring to
+//!   plain productions.
+//! * [`builtin`] — the five evaluation grammars from the paper (JSON,
+//!   GSM8K-schema JSON, C subset, XML-with-schema, fixed template) plus the
+//!   CoNLL NER schema, translated into this notation.
+//!
+//! Design note: the paper's llama.cpp-style notation mixes character-level
+//! constructs into grammar rules (`identifier ::= [a-zA-Z_] [a-zA-Z_0-9]*`).
+//! DOMINO's architecture however is a *scanner/parser split* (§3.2): the
+//! scanner owns regular structure, the parser owns context-free structure.
+//! Our notation therefore makes the split explicit — character-level rules
+//! become regex terminals (`/[a-zA-Z_][a-zA-Z_0-9]*/`). `builtin.rs`
+//! documents each translation.
+
+pub mod builtin;
+pub mod cfg;
+pub mod ebnf;
+
+pub use cfg::{Cfg, CfgBuilder, Production, Symbol, TermId, Terminal, TerminalKind};
+pub use ebnf::parse_ebnf;

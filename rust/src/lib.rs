@@ -1,0 +1,40 @@
+//! # DOMINO — fast, non-invasive constrained generation
+//!
+//! Reproduction of *"Guiding LLMs The Right Way: Fast, Non-Invasive
+//! Constrained Generation"* (Beurer-Kellner, Fischer, Vechev — ICML 2024).
+//!
+//! The crate is organised in three tiers:
+//!
+//! 1. **Substrates** — [`regex`] (Thompson NFAs), [`grammar`] (EBNF → CFG),
+//!    [`tokenizer`] (byte-level BPE). Everything DOMINO depends on is built
+//!    from scratch here.
+//! 2. **The paper's contribution** — [`scanner`] (character-level union NFA,
+//!    §3.2), [`parser`] (incremental Earley, §3.4), [`domino`] (subterminal
+//!    trees per Alg. 2, lookahead-k masking, opportunistic masking and
+//!    count-based speculative decoding, §3.5–3.6), plus the [`baselines`]
+//!    the paper evaluates against.
+//! 3. **Serving runtime** — [`runtime`] (PJRT client over AOT-compiled JAX
+//!    HLO; python never runs on the request path), [`server`] (router +
+//!    dynamic batcher), [`eval`] (workloads, metrics, the paper's tables).
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod baselines;
+pub mod domino;
+pub mod eval;
+pub mod grammar;
+pub mod parser;
+pub mod regex;
+pub mod runtime;
+pub mod scanner;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+
+/// Token id within the LLM vocabulary.
+pub type TokenId = u32;
+
+/// Crate-wide error type.
+pub type Error = anyhow::Error;
+pub type Result<T> = anyhow::Result<T>;

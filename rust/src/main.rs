@@ -1,0 +1,176 @@
+//! `domino` — the serving CLI.
+//!
+//! ```text
+//! domino serve [--addr 127.0.0.1:7761] [--slots 4]
+//! domino generate --prompt "..." [--grammar json] [--method domino]
+//!                 [--k N] [--speculative S] [--max-tokens N]
+//!                 [--temperature T] [--seed N]
+//! domino grammar <name>         # inspect: terminals, tree sizes, precompute time
+//! domino grammars               # list builtin grammars
+//! ```
+//!
+//! Model artifacts are found via `$DOMINO_ARTIFACTS` (default
+//! `./artifacts`); `domino generate --mock` uses the test trigram LM
+//! instead.
+
+use domino::domino::decoder::Engine as GrammarEngine;
+use domino::grammar::builtin;
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
+use domino::scanner::Scanner;
+use domino::server::engine::{Constraint, EngineCtx, GenRequest, Server};
+use domino::server::tcp;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, positional)
+}
+
+fn start_server(flags: &HashMap<String, String>) -> Server {
+    let mock = flags.contains_key("mock");
+    let slots: usize = flags.get("slots").and_then(|s| s.parse().ok()).unwrap_or(4);
+    Server::start(
+        move || {
+            if mock {
+                let (vocab, model) = json_mock(512);
+                Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab))
+            } else {
+                let dir = artifacts_dir();
+                let model = PjrtModel::load(&dir)?;
+                let vocab = load_vocab(&dir)?;
+                Ok(EngineCtx::new(Box::new(PjrtFactory { model }), vocab))
+            }
+        },
+        slots,
+    )
+}
+
+fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
+    let server = start_server(&flags);
+    let method = flags.get("method").map(|s| s.as_str()).unwrap_or("domino");
+    let grammar = flags.get("grammar").cloned();
+    let constraint = match (method, grammar) {
+        ("unconstrained", _) | (_, None) => Constraint::None,
+        ("online", Some(g)) => Constraint::Online { grammar: g },
+        ("domino-full", Some(g)) => Constraint::Domino {
+            grammar: g,
+            k: flags.get("k").and_then(|k| k.parse().ok()),
+            speculative: None,
+            full_mask: true,
+        },
+        (_, Some(g)) => Constraint::Domino {
+            grammar: g,
+            k: flags.get("k").and_then(|k| k.parse().ok()),
+            speculative: flags.get("speculative").and_then(|s| s.parse().ok()),
+            full_mask: false,
+        },
+    };
+    let req = GenRequest {
+        prompt: flags.get("prompt").cloned().unwrap_or_default(),
+        constraint,
+        max_tokens: flags.get("max-tokens").and_then(|m| m.parse().ok()).unwrap_or(128),
+        temperature: flags.get("temperature").and_then(|t| t.parse().ok()),
+        seed: flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0),
+    };
+    let resp = server.generate(req)?;
+    if let Some(e) = resp.error {
+        anyhow::bail!("{e}");
+    }
+    println!("{}", resp.text);
+    eprintln!(
+        "# {} tokens in {:.2}s ({:.1} tok/s) | interventions {} | model calls {} | spec accepted {}",
+        resp.stats.tokens_out,
+        resp.elapsed_s,
+        resp.stats.tokens_out as f64 / resp.elapsed_s.max(1e-9),
+        resp.stats.interventions,
+        resp.stats.model_calls,
+        resp.stats.spec_accepted,
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_grammar(name: &str) -> domino::Result<()> {
+    let cfg = builtin::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown grammar `{name}` (try `domino grammars`)"))?;
+    println!("grammar `{name}`:");
+    println!("  nonterminals: {}", cfg.nonterminals.len());
+    println!("  productions:  {}", cfg.productions.len());
+    println!("  terminals:    {}", cfg.num_terminals());
+    let t0 = Instant::now();
+    let scanner = Scanner::new(&cfg)?;
+    println!("  scanner:      {} positions ({:.1} ms)", scanner.num_pos(), t0.elapsed().as_secs_f64() * 1e3);
+    // Tree precompute against the bundled (or synthetic) vocabulary.
+    let vocab = match load_vocab(&artifacts_dir()) {
+        Ok(v) => v,
+        Err(_) => std::sync::Arc::new(domino::tokenizer::bpe::synthetic_json_vocab(512)),
+    };
+    let t0 = Instant::now();
+    let engine = GrammarEngine::compile(cfg, vocab.clone())?;
+    println!(
+        "  trees:        {} nodes over {} positions, vocab {} ({:.2} s precompute)",
+        engine.trees.total_nodes(),
+        engine.scanner.num_pos(),
+        vocab.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let (flags, positional) = parse_flags(&args[args.len().min(1)..]);
+    let result = match cmd {
+        "serve" => {
+            let server = start_server(&flags);
+            let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
+            tcp::serve(server, &addr)
+        }
+        "generate" => cmd_generate(flags),
+        "grammar" => match positional.first() {
+            Some(name) => cmd_grammar(name),
+            None => Err(anyhow::anyhow!("usage: domino grammar <name>")),
+        },
+        "grammars" => {
+            for g in builtin::GRAMMAR_NAMES {
+                println!("{g}");
+            }
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: domino <serve|generate|grammar|grammars> [flags]\n\
+                 \n\
+                 serve     --addr HOST:PORT --slots N [--mock]\n\
+                 generate  --prompt STR [--grammar NAME] [--method domino|domino-full|online|unconstrained]\n\
+                 \u{20}          [--k N] [--speculative S] [--max-tokens N] [--temperature T] [--seed N] [--mock]\n\
+                 grammar   NAME    inspect a builtin grammar\n\
+                 grammars          list builtin grammars"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

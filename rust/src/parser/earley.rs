@@ -1,0 +1,381 @@
+//! Earley recognizer with persistent, checkpointable charts.
+
+use crate::grammar::{Cfg, Symbol, TermId};
+use std::sync::Arc;
+
+/// One Earley item: `prod` with the dot before `rhs[dot]`, started at
+/// terminal position `origin`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Item {
+    prod: u32,
+    dot: u32,
+    origin: u32,
+}
+
+/// A closed item set at one terminal position.
+#[derive(Debug)]
+pub struct ItemSet {
+    items: Vec<Item>,
+    /// Bitset over terminals: which may come next from this set.
+    expected: Vec<u64>,
+    /// Completed start production spanning from position 0?
+    complete: bool,
+}
+
+impl ItemSet {
+    fn expects(&self, t: TermId) -> bool {
+        let i = t as usize;
+        self.expected[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+}
+
+/// The Earley machine for one grammar.
+#[derive(Clone)]
+pub struct Earley {
+    g: Arc<Cfg>,
+    term_words: usize,
+}
+
+/// A parser state after consuming some terminal sequence. Cloning is cheap
+/// (persistent sets): this is the checkpoint used by tree traversal and
+/// speculative rollback.
+#[derive(Clone)]
+pub struct Chart {
+    sets: Vec<Arc<ItemSet>>,
+}
+
+impl Earley {
+    pub fn new(g: Arc<Cfg>) -> Earley {
+        let term_words = g.num_terminals().div_ceil(64);
+        Earley { g, term_words }
+    }
+
+    pub fn grammar(&self) -> &Arc<Cfg> {
+        &self.g
+    }
+
+    /// Initial chart (position 0): predictions from the start symbol.
+    pub fn start_chart(&self) -> Chart {
+        let mut items = Vec::new();
+        for &pi in &self.g.prods_by_lhs[self.g.start as usize] {
+            items.push(Item { prod: pi as u32, dot: 0, origin: 0 });
+        }
+        let set = self.close(items, &[], 0);
+        Chart { sets: vec![Arc::new(set)] }
+    }
+
+    /// Predict/complete closure of `seed` at position `pos`, given all
+    /// earlier sets.
+    fn close(&self, seed: Vec<Item>, earlier: &[Arc<ItemSet>], pos: u32) -> ItemSet {
+        let g = &self.g;
+        let mut items: Vec<Item> = Vec::with_capacity(seed.len() * 2);
+        let mut seen = std::collections::HashSet::with_capacity(seed.len() * 2);
+        let mut stack: Vec<Item> = Vec::with_capacity(seed.len());
+        for it in seed {
+            if seen.insert(it) {
+                items.push(it);
+                stack.push(it);
+            }
+        }
+        // Nonterminals already predicted at this position.
+        let mut predicted = vec![false; g.nonterminals.len()];
+        let mut complete = false;
+
+        while let Some(it) = stack.pop() {
+            let prod = &g.productions[it.prod as usize];
+            match prod.rhs.get(it.dot as usize) {
+                Some(Symbol::Nt(n)) => {
+                    // Predict.
+                    let n = *n as usize;
+                    if !predicted[n] {
+                        predicted[n] = true;
+                        for &pi in &g.prods_by_lhs[n] {
+                            let new = Item { prod: pi as u32, dot: 0, origin: pos };
+                            if seen.insert(new) {
+                                items.push(new);
+                                stack.push(new);
+                            }
+                        }
+                    }
+                    // Aycock–Horspool: a nullable nonterminal may be
+                    // skipped immediately.
+                    if g.nullable[n] {
+                        let adv = Item { prod: it.prod, dot: it.dot + 1, origin: it.origin };
+                        if seen.insert(adv) {
+                            items.push(adv);
+                            stack.push(adv);
+                        }
+                    }
+                }
+                Some(Symbol::T(_)) => {} // awaits a scan
+                None => {
+                    // Complete: advance items in the origin set expecting
+                    // this lhs.
+                    let lhs = prod.lhs;
+                    if prod.lhs == g.start && it.origin == 0 {
+                        complete = true;
+                    }
+                    let origin_items: Vec<Item> = if it.origin == pos {
+                        // Items in the set under construction.
+                        items.clone()
+                    } else {
+                        earlier[it.origin as usize].items.clone()
+                    };
+                    for oit in origin_items {
+                        let oprod = &g.productions[oit.prod as usize];
+                        if oprod.rhs.get(oit.dot as usize) == Some(&Symbol::Nt(lhs)) {
+                            let adv = Item { prod: oit.prod, dot: oit.dot + 1, origin: oit.origin };
+                            if seen.insert(adv) {
+                                items.push(adv);
+                                stack.push(adv);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Expected-terminal bitset.
+        let mut expected = vec![0u64; self.term_words];
+        for it in &items {
+            if let Some(Symbol::T(t)) = g.productions[it.prod as usize].rhs.get(it.dot as usize) {
+                let i = *t as usize;
+                expected[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        ItemSet { items, expected, complete }
+    }
+}
+
+impl Chart {
+    /// Number of terminals consumed.
+    pub fn pos(&self) -> usize {
+        self.sets.len() - 1
+    }
+
+    fn frontier(&self) -> &ItemSet {
+        self.sets.last().expect("chart has at least the start set")
+    }
+
+    /// May terminal `t` come next?
+    pub fn allows(&self, t: TermId) -> bool {
+        self.frontier().expects(t)
+    }
+
+    /// Bitset word-view of the allowed next terminals.
+    pub fn expected_bits(&self) -> &[u64] {
+        &self.frontier().expected
+    }
+
+    /// Is the sequence consumed so far a complete parse of the grammar?
+    pub fn accepts(&self) -> bool {
+        self.frontier().complete
+    }
+
+    /// Is the frontier non-empty (the consumed sequence a viable prefix)?
+    pub fn viable(&self) -> bool {
+        !self.frontier().items.is_empty()
+    }
+
+    /// Consume terminal `t`: returns the extended chart, or `None` if `t`
+    /// is not a legal continuation.
+    pub fn feed(&self, e: &Earley, t: TermId) -> Option<Chart> {
+        if !self.allows(t) {
+            return None;
+        }
+        let pos = self.sets.len() as u32;
+        let g = &e.g;
+        let mut seed = Vec::new();
+        for it in &self.frontier().items {
+            if g.productions[it.prod as usize].rhs.get(it.dot as usize) == Some(&Symbol::T(t)) {
+                seed.push(Item { prod: it.prod, dot: it.dot + 1, origin: it.origin });
+            }
+        }
+        let set = e.close(seed, &self.sets, pos);
+        if set.items.is_empty() {
+            return None;
+        }
+        let mut sets = self.sets.clone();
+        sets.push(Arc::new(set));
+        Some(Chart { sets })
+    }
+
+    /// Feed a whole terminal sequence.
+    pub fn feed_all(&self, e: &Earley, ts: &[TermId]) -> Option<Chart> {
+        let mut c = self.clone();
+        for &t in ts {
+            c = c.feed(e, t)?;
+        }
+        Some(c)
+    }
+
+    /// A compact fingerprint of the frontier (used to dedup decoder
+    /// hypotheses and as the speculation state β — §3.6's "substate of the
+    /// currently used parser").
+    ///
+    /// Item origins are hashed *relative* to the current position, so the
+    /// same local parse situation at different output offsets fingerprints
+    /// identically — that is what lets speculation priors learned on one
+    /// request fire on the next (§3.6). Dedup inside one request
+    /// additionally keys on `pos()`, so relativity is safe there too.
+    pub fn frontier_fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let pos = self.pos() as u32;
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for it in &self.frontier().items {
+            (it.prod, it.dot, pos - it.origin).hash(&mut h);
+        }
+        h.finish()
+    }
+}
+
+/// Convenience: recognize a full terminal sequence.
+pub fn recognize(e: &Earley, ts: &[TermId]) -> bool {
+    e.start_chart().feed_all(e, ts).map_or(false, |c| c.accepts())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::builtin::fig3_expr;
+    use crate::grammar::{CfgBuilder, Symbol};
+
+    fn fig3() -> (Arc<Cfg>, Earley) {
+        let g = Arc::new(fig3_expr());
+        let e = Earley::new(g.clone());
+        (g, e)
+    }
+
+    fn tid(g: &Cfg, name: &str) -> TermId {
+        g.terminals.iter().position(|t| t.name == name).unwrap() as TermId
+    }
+
+    #[test]
+    fn recognizes_fig3_sentences() {
+        let (g, e) = fig3();
+        let (int, lp, rp, plus) = (tid(&g, "int"), tid(&g, "'('"), tid(&g, "')'"), tid(&g, "'+'"));
+        assert!(recognize(&e, &[int]));
+        assert!(recognize(&e, &[lp, int, rp]));
+        assert!(recognize(&e, &[int, plus, int]));
+        assert!(recognize(&e, &[lp, int, plus, int, rp, plus, int]));
+        assert!(!recognize(&e, &[lp, int])); // viable prefix but incomplete
+        assert!(!recognize(&e, &[int, int]));
+        assert!(!recognize(&e, &[plus]));
+        assert!(!recognize(&e, &[]));
+    }
+
+    #[test]
+    fn viable_prefix_queries() {
+        let (g, e) = fig3();
+        let (int, lp, rp, plus) = (tid(&g, "int"), tid(&g, "'('"), tid(&g, "')'"), tid(&g, "'+'"));
+        let c = e.start_chart();
+        assert!(c.allows(int) && c.allows(lp));
+        assert!(!c.allows(rp) && !c.allows(plus));
+        let c = c.feed(&e, lp).unwrap().feed(&e, int).unwrap();
+        // After "( int": ) and + possible, int not.
+        assert!(c.allows(rp) && c.allows(plus));
+        assert!(!c.allows(int));
+        assert!(!c.accepts());
+        let c = c.feed(&e, rp).unwrap();
+        assert!(c.accepts());
+        // "( int )" is complete AND extensible: + still allowed.
+        assert!(c.allows(plus));
+    }
+
+    #[test]
+    fn feed_rejects_illegal() {
+        let (g, e) = fig3();
+        let rp = tid(&g, "')'");
+        assert!(e.start_chart().feed(&e, rp).is_none());
+    }
+
+    #[test]
+    fn nullable_rules() {
+        // S ::= A "x" ; A ::= "a" | ε — Aycock-Horspool case.
+        let mut b = CfgBuilder::new();
+        let s = b.nonterminal("S");
+        let a_nt = b.nonterminal("A");
+        let x = b.literal("x");
+        let a = b.literal("a");
+        b.production(s, vec![Symbol::Nt(a_nt), Symbol::T(x)]);
+        b.production(a_nt, vec![Symbol::T(a)]);
+        b.production(a_nt, vec![]);
+        let g = Arc::new(b.build(s).unwrap());
+        let e = Earley::new(g.clone());
+        assert!(recognize(&e, &[x]));
+        assert!(recognize(&e, &[a, x]));
+        assert!(!recognize(&e, &[a, a, x]));
+        // From the start, both "a" and "x" must be expected.
+        let c = e.start_chart();
+        assert!(c.allows(a) && c.allows(x));
+    }
+
+    #[test]
+    fn deeply_nullable_chain() {
+        // S ::= A B "x"; A ::= ε; B ::= A A — everything nullable.
+        let mut b = CfgBuilder::new();
+        let s = b.nonterminal("S");
+        let a_nt = b.nonterminal("A");
+        let b_nt = b.nonterminal("B");
+        let x = b.literal("x");
+        b.production(s, vec![Symbol::Nt(a_nt), Symbol::Nt(b_nt), Symbol::T(x)]);
+        b.production(a_nt, vec![]);
+        b.production(b_nt, vec![Symbol::Nt(a_nt), Symbol::Nt(a_nt)]);
+        let g = Arc::new(b.build(s).unwrap());
+        let e = Earley::new(g.clone());
+        assert!(recognize(&e, &[x]));
+    }
+
+    #[test]
+    fn ambiguous_grammar_ok() {
+        // E ::= E + E is ambiguous for "int + int + int" — recognizer must
+        // still accept (and not blow up).
+        let (g, e) = fig3();
+        let (int, plus) = (tid(&g, "int"), tid(&g, "'+'"));
+        let seq: Vec<TermId> = (0..21).map(|i| if i % 2 == 0 { int } else { plus }).collect();
+        assert!(recognize(&e, &seq));
+    }
+
+    #[test]
+    fn json_grammar_parses() {
+        let g = Arc::new(crate::grammar::builtin::json());
+        let e = Earley::new(g.clone());
+        // Tokenize `{"a": 1}` by hand: { STRING : NUMBER }
+        let lb = tid(&g, "'{'");
+        let rb = tid(&g, "'}'");
+        let colon = tid(&g, "':'");
+        let string = tid(&g, "STRING");
+        let number = tid(&g, "NUMBER");
+        assert!(recognize(&e, &[lb, string, colon, number, rb]));
+        assert!(recognize(&e, &[lb, rb]));
+        assert!(!recognize(&e, &[lb, string, colon, rb]));
+        // With interleaved whitespace terminals.
+        let ws = tid(&g, "WS");
+        assert!(recognize(&e, &[lb, ws, string, colon, ws, number, ws, rb, ws]));
+        // Two consecutive WS is NOT derivable (ws ::= WS?).
+        assert!(!recognize(&e, &[lb, ws, ws, rb]));
+    }
+
+    #[test]
+    fn checkpoint_clone_is_independent() {
+        let (g, e) = fig3();
+        let (int, plus) = (tid(&g, "int"), tid(&g, "'+'"));
+        let c0 = e.start_chart();
+        let c1 = c0.feed(&e, int).unwrap();
+        let c2 = c1.feed(&e, plus).unwrap();
+        // c1 still accepts; c2 doesn't.
+        assert!(c1.accepts());
+        assert!(!c2.accepts());
+        assert_eq!(c1.pos(), 1);
+        assert_eq!(c2.pos(), 2);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_states() {
+        let (g, e) = fig3();
+        let (int, lp) = (tid(&g, "int"), tid(&g, "'('"));
+        let a = e.start_chart().feed(&e, int).unwrap();
+        let b = e.start_chart().feed(&e, lp).unwrap();
+        assert_ne!(a.frontier_fingerprint(), b.frontier_fingerprint());
+    }
+}

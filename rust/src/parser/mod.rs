@@ -1,0 +1,22 @@
+//! Incremental Earley parser over terminal sequences (§3.4).
+//!
+//! The parser runs in lock-step with the scanner: the scanner emits
+//! completed terminals, the parser tracks "rules that can match the output
+//! so far" and answers, for subterminal-tree traversal,
+//!
+//! * [`Chart::allows`] — may terminal `t` come next? (viable-prefix query)
+//! * [`Chart::feed`] — consume terminal `t`, returning the new chart,
+//! * [`Chart::accepts`] — is the consumed sequence a complete parse?
+//!
+//! Earley (not LR) because the paper's grammars are arbitrary CFGs
+//! (including the ambiguous C grammar) and because viable-prefix queries
+//! and *checkpointing* are natural: a chart is a persistent
+//! `Vec<Arc<ItemSet>>`, so cloning a checkpoint for tree traversal or
+//! speculative decoding is O(sets), not O(items).
+//!
+//! ε-productions are handled with the Aycock–Horspool fix: predicting a
+//! nullable nonterminal also advances the predicting item.
+
+pub mod earley;
+
+pub use earley::{Chart, Earley};

@@ -1,0 +1,187 @@
+//! Regex abstract syntax tree.
+
+use std::fmt;
+
+/// A set of bytes, represented as a 256-bit bitmap.
+///
+/// Character classes (`[a-z0-9_]`, `[^<]`, `.`) compile to `ByteSet`s.
+/// Multi-byte UTF-8 characters never appear inside classes in the paper's
+/// grammars; negated classes are interpreted over all bytes except `\n`
+/// handling follows the grammar author's intent (`.` excludes `\n`).
+#[derive(Clone, PartialEq, Eq)]
+pub struct ByteSet {
+    bits: [u64; 4],
+}
+
+impl ByteSet {
+    pub const fn empty() -> Self {
+        ByteSet { bits: [0; 4] }
+    }
+
+    pub fn full() -> Self {
+        ByteSet { bits: [u64::MAX; 4] }
+    }
+
+    pub fn single(b: u8) -> Self {
+        let mut s = Self::empty();
+        s.insert(b);
+        s
+    }
+
+    pub fn range(lo: u8, hi: u8) -> Self {
+        let mut s = Self::empty();
+        for b in lo..=hi {
+            s.insert(b);
+        }
+        s
+    }
+
+    /// `.` — any byte except `\n`.
+    pub fn dot() -> Self {
+        let mut s = Self::full();
+        s.remove(b'\n');
+        s
+    }
+
+    pub fn insert(&mut self, b: u8) {
+        self.bits[(b >> 6) as usize] |= 1u64 << (b & 63);
+    }
+
+    pub fn remove(&mut self, b: u8) {
+        self.bits[(b >> 6) as usize] &= !(1u64 << (b & 63));
+    }
+
+    pub fn contains(&self, b: u8) -> bool {
+        self.bits[(b >> 6) as usize] & (1u64 << (b & 63)) != 0
+    }
+
+    pub fn union(&mut self, other: &ByteSet) {
+        for i in 0..4 {
+            self.bits[i] |= other.bits[i];
+        }
+    }
+
+    pub fn negate(&mut self) {
+        for i in 0..4 {
+            self.bits[i] = !self.bits[i];
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&b| b == 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+        (0u16..256).map(|b| b as u8).filter(move |&b| self.contains(b))
+    }
+}
+
+impl fmt::Debug for ByteSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        let mut i = 0u16;
+        while i < 256 {
+            let b = i as u8;
+            if self.contains(b) {
+                let start = b;
+                let mut end = b;
+                while (end as u16) < 255 && self.contains(end + 1) {
+                    end += 1;
+                }
+                if start == end {
+                    write!(f, "{}", escape_byte(start))?;
+                } else {
+                    write!(f, "{}-{}", escape_byte(start), escape_byte(end))?;
+                }
+                i = end as u16 + 1;
+            } else {
+                i += 1;
+            }
+        }
+        write!(f, "]")
+    }
+}
+
+fn escape_byte(b: u8) -> String {
+    if b.is_ascii_graphic() {
+        (b as char).to_string()
+    } else {
+        format!("\\x{b:02x}")
+    }
+}
+
+/// Regex syntax tree over bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Regex {
+    /// Matches the empty string.
+    Empty,
+    /// A single byte from the set.
+    Class(ByteSet),
+    /// A fixed byte sequence (a literal; multi-byte UTF-8 chars land here).
+    Literal(Vec<u8>),
+    /// Concatenation.
+    Concat(Vec<Regex>),
+    /// Alternation.
+    Alt(Vec<Regex>),
+    /// Kleene star.
+    Star(Box<Regex>),
+    /// One or more.
+    Plus(Box<Regex>),
+    /// Zero or one.
+    Opt(Box<Regex>),
+    /// Bounded repetition `{min, max}`; `max == None` means unbounded.
+    Repeat(Box<Regex>, u32, Option<u32>),
+}
+
+impl Regex {
+    /// Does this regex match the empty string?
+    pub fn nullable(&self) -> bool {
+        match self {
+            Regex::Empty => true,
+            Regex::Class(_) => false,
+            Regex::Literal(bytes) => bytes.is_empty(),
+            Regex::Concat(parts) => parts.iter().all(|p| p.nullable()),
+            Regex::Alt(parts) => parts.iter().any(|p| p.nullable()),
+            Regex::Star(_) | Regex::Opt(_) => true,
+            Regex::Plus(inner) => inner.nullable(),
+            Regex::Repeat(inner, min, _) => *min == 0 || inner.nullable(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byteset_ops() {
+        let mut s = ByteSet::range(b'a', b'z');
+        assert!(s.contains(b'm'));
+        assert!(!s.contains(b'A'));
+        assert_eq!(s.len(), 26);
+        s.negate();
+        assert!(!s.contains(b'm'));
+        assert!(s.contains(b'A'));
+        assert_eq!(s.len(), 256 - 26);
+    }
+
+    #[test]
+    fn dot_excludes_newline() {
+        let d = ByteSet::dot();
+        assert!(!d.contains(b'\n'));
+        assert!(d.contains(b'x'));
+        assert_eq!(d.len(), 255);
+    }
+
+    #[test]
+    fn nullable() {
+        assert!(Regex::Empty.nullable());
+        assert!(Regex::Star(Box::new(Regex::Class(ByteSet::single(b'a')))).nullable());
+        assert!(!Regex::Plus(Box::new(Regex::Class(ByteSet::single(b'a')))).nullable());
+        assert!(Regex::Repeat(Box::new(Regex::Class(ByteSet::single(b'a'))), 0, Some(3)).nullable());
+    }
+}

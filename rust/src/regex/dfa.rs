@@ -1,0 +1,184 @@
+//! Subset-construction DFA + Moore minimization.
+//!
+//! Individual terminal regexes are determinized (and minimized) before the
+//! scanner unions them: the union must stay an NFA so every active state
+//! remains attributable to its terminal (§3.2), but *within* a terminal a
+//! DFA keeps the simulated state sets small — this is the main lever on
+//! subterminal-tree precomputation time (§4.3 reports 1–5 s per grammar).
+
+use super::nfa::{Nfa, StateId};
+use std::collections::HashMap;
+
+/// Sentinel for "no transition".
+pub const DEAD: u32 = u32::MAX;
+
+/// A dense DFA over bytes.
+#[derive(Clone, Debug)]
+pub struct Dfa {
+    /// `trans[state * 256 + byte]` — next state or [`DEAD`].
+    pub trans: Vec<u32>,
+    pub accepting: Vec<bool>,
+    pub start: u32,
+}
+
+impl Dfa {
+    pub fn num_states(&self) -> usize {
+        self.accepting.len()
+    }
+
+    #[inline]
+    pub fn next(&self, state: u32, byte: u8) -> u32 {
+        self.trans[state as usize * 256 + byte as usize]
+    }
+
+    pub fn accepts(&self, input: &[u8]) -> bool {
+        let mut s = self.start;
+        for &b in input {
+            s = self.next(s, b);
+            if s == DEAD {
+                return false;
+            }
+        }
+        self.accepting[s as usize]
+    }
+
+    /// Subset construction from a Thompson NFA.
+    pub fn from_nfa(nfa: &Nfa) -> Dfa {
+        let start_set = nfa.start_set();
+        let mut ids: HashMap<Vec<StateId>, u32> = HashMap::new();
+        let mut sets: Vec<Vec<StateId>> = Vec::new();
+        let mut trans: Vec<u32> = Vec::new();
+        let mut accepting: Vec<bool> = Vec::new();
+
+        let intern = |set: Vec<StateId>,
+                          sets: &mut Vec<Vec<StateId>>,
+                          trans: &mut Vec<u32>,
+                          accepting: &mut Vec<bool>,
+                          ids: &mut HashMap<Vec<StateId>, u32>|
+         -> u32 {
+            if let Some(&id) = ids.get(&set) {
+                return id;
+            }
+            let id = sets.len() as u32;
+            accepting.push(set.contains(&nfa.accept));
+            sets.push(set.clone());
+            trans.extend(std::iter::repeat(DEAD).take(256));
+            ids.insert(set, id);
+            id
+        };
+
+        let start = intern(start_set, &mut sets, &mut trans, &mut accepting, &mut ids);
+        let mut work = vec![start];
+        while let Some(id) = work.pop() {
+            let set = sets[id as usize].clone();
+            let live = nfa.live_bytes(&set);
+            for b in live.iter() {
+                let next = nfa.step(&set, b);
+                if next.is_empty() {
+                    continue;
+                }
+                let existed = ids.contains_key(&next);
+                let nid = intern(next, &mut sets, &mut trans, &mut accepting, &mut ids);
+                if !existed {
+                    work.push(nid);
+                }
+                trans[id as usize * 256 + b as usize] = nid;
+            }
+        }
+        Dfa { trans, accepting, start }.minimize()
+    }
+
+    /// Moore partition-refinement minimization.
+    pub fn minimize(&self) -> Dfa {
+        let n = self.num_states();
+        // Initial partition: accepting vs non-accepting.
+        let mut class: Vec<u32> = self.accepting.iter().map(|&a| a as u32).collect();
+        let mut num_classes = 2;
+        loop {
+            // Signature of each state: (class, class of each byte target).
+            let mut sig_ids: HashMap<(u32, Vec<u32>), u32> = HashMap::new();
+            let mut new_class = vec![0u32; n];
+            for s in 0..n {
+                let targets: Vec<u32> = (0..256)
+                    .map(|b| {
+                        let t = self.trans[s * 256 + b];
+                        if t == DEAD {
+                            DEAD
+                        } else {
+                            class[t as usize]
+                        }
+                    })
+                    .collect();
+                let key = (class[s], targets);
+                let next_id = sig_ids.len() as u32;
+                let id = *sig_ids.entry(key).or_insert(next_id);
+                new_class[s] = id;
+            }
+            let new_num = sig_ids.len();
+            if new_num == num_classes {
+                class = new_class;
+                break;
+            }
+            num_classes = new_num;
+            class = new_class;
+        }
+        // Build minimized DFA.
+        let m = num_classes;
+        let mut trans = vec![DEAD; m * 256];
+        let mut accepting = vec![false; m];
+        for s in 0..n {
+            let c = class[s] as usize;
+            accepting[c] = accepting[c] || self.accepting[s];
+            for b in 0..256 {
+                let t = self.trans[s * 256 + b];
+                if t != DEAD {
+                    trans[c * 256 + b] = class[t as usize];
+                }
+            }
+        }
+        Dfa { trans, accepting, start: class[self.start as usize] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::parse;
+
+    fn dfa(pat: &str) -> Dfa {
+        Dfa::from_nfa(&Nfa::from_regex(&parse(pat).unwrap()))
+    }
+
+    #[test]
+    fn dfa_matches_nfa_semantics() {
+        let cases = [
+            ("(0+)|([1-9][0-9]*)", vec![("0", true), ("007", false), ("000", true), ("123", true), ("", false)]),
+            ("a*b|c", vec![("b", true), ("aab", true), ("c", true), ("ac", false)]),
+        ];
+        for (pat, tests) in cases {
+            let d = dfa(pat);
+            for (s, expect) in tests {
+                assert_eq!(d.accepts(s.as_bytes()), expect, "{pat} on {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn minimization_shrinks() {
+        // (a|b)* over separate branches has redundant NFA states; the
+        // minimal DFA has exactly 1 state.
+        let d = dfa("(a|b)*");
+        assert_eq!(d.num_states(), 1);
+        assert!(d.accepting[d.start as usize]);
+    }
+
+    #[test]
+    fn json_string_dfa() {
+        let d = dfa(r#""([^"\\]|\\(["\\/bfnrt]|u[0-9a-fA-F]{4}))*""#);
+        assert!(d.accepts(br#""ok""#));
+        assert!(d.accepts("\"ÿ\"".as_bytes()));
+        assert!(!d.accepts(br#""\u00f""#));
+        // Sanity: stays small after minimization.
+        assert!(d.num_states() < 16, "{} states", d.num_states());
+    }
+}

@@ -1,0 +1,82 @@
+//! Regular-expression substrate.
+//!
+//! DOMINO's scanner (§3.2 of the paper) is built from the NFAs of the
+//! grammar's terminal regexes. This module provides the full pipeline:
+//!
+//! * [`ast`] — the regex syntax tree,
+//! * [`parse`] — a parser for the regex dialect used by the paper's
+//!   grammars (App. C): literals, escapes, classes (`[a-z]`, `[^<]`),
+//!   `.`/`?`/`*`/`+`, bounded repeats `{m,n}`, groups and alternation,
+//! * [`nfa`] — Thompson construction with ε-closures (McNaughton &
+//!   Yamada 1960; Thompson 1968),
+//! * [`dfa`] — subset construction, used to determinise *individual*
+//!   terminal automata before they are unioned into the scanner (the union
+//!   itself stays an NFA so each sub-automaton remains attributable to its
+//!   terminal).
+//!
+//! All automata operate on **bytes**, matching the byte-level BPE
+//! vocabulary: a UTF-8 character in a pattern is compiled to its byte
+//! sequence.
+
+pub mod ast;
+pub mod dfa;
+pub mod nfa;
+pub mod parse;
+
+pub use ast::Regex;
+pub use dfa::Dfa;
+pub use nfa::{Nfa, StateId};
+pub use parse::parse;
+
+/// Compile a regex pattern string straight to an NFA.
+pub fn compile(pattern: &str) -> crate::Result<Nfa> {
+    Ok(nfa::Nfa::from_regex(&parse(pattern)?))
+}
+
+/// Convenience: does `pattern` match `input` exactly (full match)?
+pub fn matches(pattern: &str, input: &str) -> crate::Result<bool> {
+    let nfa = compile(pattern)?;
+    Ok(nfa.accepts(input.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_match() {
+        assert!(matches("abc", "abc").unwrap());
+        assert!(!matches("abc", "ab").unwrap());
+        assert!(!matches("abc", "abcd").unwrap());
+    }
+
+    #[test]
+    fn int_terminal_from_paper() {
+        // Fig. 4: positive integers without leading zeros, or zeros.
+        let p = "(0+)|([1-9][0-9]*)";
+        assert!(matches(p, "0").unwrap());
+        assert!(matches(p, "000").unwrap());
+        assert!(matches(p, "12").unwrap());
+        assert!(matches(p, "120").unwrap());
+        assert!(!matches(p, "012").unwrap());
+        assert!(!matches(p, "").unwrap());
+        assert!(!matches(p, "a").unwrap());
+    }
+
+    #[test]
+    fn json_string_terminal() {
+        let p = r#""([^"\\]|\\(["\\/bfnrt]|u[0-9a-fA-F]{4}))*""#;
+        assert!(matches(p, r#""hello""#).unwrap());
+        assert!(matches(p, r#""""#).unwrap());
+        assert!(matches(p, r#""a\nb""#).unwrap());
+        assert!(matches(p, r#""ÿ""#).unwrap());
+        assert!(!matches(p, r#""unterminated"#).unwrap());
+        assert!(!matches(p, r#""bad\escape""#).unwrap());
+    }
+
+    #[test]
+    fn unicode_literals_compile_to_bytes() {
+        assert!(matches("é+", "ééé").unwrap());
+        assert!(!matches("é", "e").unwrap());
+    }
+}

@@ -1,0 +1,262 @@
+//! Thompson NFA construction and simulation.
+
+use super::ast::{ByteSet, Regex};
+use std::collections::BTreeSet;
+
+pub type StateId = u32;
+
+/// One NFA state: byte-labelled transitions plus ε-transitions.
+#[derive(Clone, Debug, Default)]
+pub struct State {
+    /// `(byte set, target)` — taking any byte in the set moves to `target`.
+    pub byte_edges: Vec<(ByteSet, StateId)>,
+    /// ε-transitions.
+    pub eps: Vec<StateId>,
+}
+
+/// A Thompson NFA with one start state and one accepting state.
+///
+/// The single-accept invariant (guaranteed by the construction) is what the
+/// scanner's union construction (§3.2) relies on to attach per-terminal
+/// ε-exits.
+#[derive(Clone, Debug)]
+pub struct Nfa {
+    pub states: Vec<State>,
+    pub start: StateId,
+    pub accept: StateId,
+}
+
+impl Nfa {
+    /// Thompson construction.
+    pub fn from_regex(re: &Regex) -> Nfa {
+        let mut nfa = Nfa { states: Vec::new(), start: 0, accept: 0 };
+        let start = nfa.new_state();
+        let accept = nfa.new_state();
+        nfa.start = start;
+        nfa.accept = accept;
+        nfa.build(re, start, accept);
+        nfa
+    }
+
+    fn new_state(&mut self) -> StateId {
+        self.states.push(State::default());
+        (self.states.len() - 1) as StateId
+    }
+
+    fn add_eps(&mut self, from: StateId, to: StateId) {
+        self.states[from as usize].eps.push(to);
+    }
+
+    fn add_bytes(&mut self, from: StateId, set: ByteSet, to: StateId) {
+        self.states[from as usize].byte_edges.push((set, to));
+    }
+
+    /// Wire `re` between `from` and `to`.
+    fn build(&mut self, re: &Regex, from: StateId, to: StateId) {
+        match re {
+            Regex::Empty => self.add_eps(from, to),
+            Regex::Class(set) => self.add_bytes(from, set.clone(), to),
+            Regex::Literal(bytes) => {
+                let mut cur = from;
+                for (i, &b) in bytes.iter().enumerate() {
+                    let next = if i + 1 == bytes.len() { to } else { self.new_state() };
+                    self.add_bytes(cur, ByteSet::single(b), next);
+                    cur = next;
+                }
+                if bytes.is_empty() {
+                    self.add_eps(from, to);
+                }
+            }
+            Regex::Concat(parts) => {
+                let mut cur = from;
+                for (i, part) in parts.iter().enumerate() {
+                    let next = if i + 1 == parts.len() { to } else { self.new_state() };
+                    self.build(part, cur, next);
+                    cur = next;
+                }
+                if parts.is_empty() {
+                    self.add_eps(from, to);
+                }
+            }
+            Regex::Alt(branches) => {
+                for branch in branches {
+                    let s = self.new_state();
+                    let e = self.new_state();
+                    self.add_eps(from, s);
+                    self.build(branch, s, e);
+                    self.add_eps(e, to);
+                }
+            }
+            Regex::Star(inner) => {
+                let s = self.new_state();
+                self.add_eps(from, s);
+                self.add_eps(s, to);
+                let e = self.new_state();
+                self.build(inner, s, e);
+                self.add_eps(e, s);
+            }
+            Regex::Plus(inner) => {
+                let s = self.new_state();
+                let e = self.new_state();
+                self.add_eps(from, s);
+                self.build(inner, s, e);
+                self.add_eps(e, s);
+                self.add_eps(e, to);
+            }
+            Regex::Opt(inner) => {
+                self.add_eps(from, to);
+                self.build(inner, from, to);
+            }
+            Regex::Repeat(inner, min, max) => {
+                // Unroll: min mandatory copies, then (max-min) optional ones
+                // (or a star if unbounded).
+                let mut cur = from;
+                for _ in 0..*min {
+                    let next = self.new_state();
+                    self.build(inner, cur, next);
+                    cur = next;
+                }
+                match max {
+                    None => self.build(&Regex::Star(inner.clone()), cur, to),
+                    Some(max) => {
+                        for i in *min..*max {
+                            let next = if i + 1 == *max { to } else { self.new_state() };
+                            self.add_eps(cur, to);
+                            self.build(inner, cur, next);
+                            cur = next;
+                        }
+                        if max == min {
+                            self.add_eps(cur, to);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// ε-closure of a state set (in place, returned sorted + deduped).
+    pub fn eps_closure(&self, states: &mut Vec<StateId>) {
+        let mut seen: BTreeSet<StateId> = states.iter().copied().collect();
+        let mut stack: Vec<StateId> = states.clone();
+        while let Some(s) = stack.pop() {
+            for &t in &self.states[s as usize].eps {
+                if seen.insert(t) {
+                    stack.push(t);
+                }
+            }
+        }
+        states.clear();
+        states.extend(seen);
+    }
+
+    /// Advance a (closed) state set by one byte; result is ε-closed.
+    pub fn step(&self, states: &[StateId], byte: u8) -> Vec<StateId> {
+        let mut next: Vec<StateId> = Vec::new();
+        for &s in states {
+            for (set, t) in &self.states[s as usize].byte_edges {
+                if set.contains(byte) {
+                    next.push(*t);
+                }
+            }
+        }
+        self.eps_closure(&mut next);
+        next
+    }
+
+    /// Initial (ε-closed) state set.
+    pub fn start_set(&self) -> Vec<StateId> {
+        let mut v = vec![self.start];
+        self.eps_closure(&mut v);
+        v
+    }
+
+    /// Full-match test.
+    pub fn accepts(&self, input: &[u8]) -> bool {
+        let mut cur = self.start_set();
+        for &b in input {
+            cur = self.step(&cur, b);
+            if cur.is_empty() {
+                return false;
+            }
+        }
+        cur.contains(&self.accept)
+    }
+
+    /// All bytes with at least one outgoing edge from this state set.
+    pub fn live_bytes(&self, states: &[StateId]) -> ByteSet {
+        let mut out = ByteSet::empty();
+        for &s in states {
+            for (set, _) in &self.states[s as usize].byte_edges {
+                out.union(set);
+            }
+        }
+        out
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.states.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::parse;
+
+    fn accepts(pat: &str, s: &str) -> bool {
+        Nfa::from_regex(&parse(pat).unwrap()).accepts(s.as_bytes())
+    }
+
+    #[test]
+    fn star_and_plus() {
+        assert!(accepts("a*", ""));
+        assert!(accepts("a*", "aaaa"));
+        assert!(!accepts("a+", ""));
+        assert!(accepts("a+b", "aab"));
+    }
+
+    #[test]
+    fn bounded_repeat() {
+        assert!(!accepts("a{2,3}", "a"));
+        assert!(accepts("a{2,3}", "aa"));
+        assert!(accepts("a{2,3}", "aaa"));
+        assert!(!accepts("a{2,3}", "aaaa"));
+        assert!(accepts("a{0,2}b", "b"));
+        assert!(accepts("(ab){2}", "abab"));
+        assert!(!accepts("(ab){2}", "ab"));
+    }
+
+    #[test]
+    fn unbounded_repeat() {
+        assert!(accepts("a{2,}", "aaaaa"));
+        assert!(!accepts("a{2,}", "a"));
+    }
+
+    #[test]
+    fn ws_recursion_from_paper() {
+        // ws ::= ([ \t\n] ws)? expressed as a regex: [ \t\n]*
+        assert!(accepts("[ \t\n]*", " \t\n "));
+        assert!(accepts("[ \t\n]*", ""));
+        assert!(!accepts("[ \t\n]*", "x"));
+    }
+
+    #[test]
+    fn c_number_terminal() {
+        let p = r"(-?(0|[1-9][0-9]*))(\.[0-9]+)?([eE][-+]?[0-9]+)?";
+        assert!(accepts(p, "0"));
+        assert!(accepts(p, "-42"));
+        assert!(accepts(p, "3.14"));
+        assert!(accepts(p, "1e10"));
+        assert!(accepts(p, "-2.5E-3"));
+        assert!(!accepts(p, "01"));
+        assert!(!accepts(p, "."));
+    }
+
+    #[test]
+    fn live_bytes() {
+        let nfa = Nfa::from_regex(&parse("[ab]c").unwrap());
+        let start = nfa.start_set();
+        let live = nfa.live_bytes(&start);
+        assert!(live.contains(b'a') && live.contains(b'b') && !live.contains(b'c'));
+    }
+}

@@ -1,0 +1,372 @@
+//! Recursive-descent regex parser.
+//!
+//! Dialect (matches the terminal regexes in the paper's App. C grammars):
+//!
+//! ```text
+//! alt    ::= concat ('|' concat)*
+//! concat ::= repeat*
+//! repeat ::= atom ('*' | '+' | '?' | '{' m (',' n?)? '}')*
+//! atom   ::= '(' alt ')' | '[' class ']' | '.' | escape | char
+//! class  ::= '^'? (char '-' char | char | escape)+
+//! escape ::= '\' (n t r f b 0 \ . * + ? ( ) [ ] { } | / " ' - ^ $ | x HH | u HHHH)
+//! ```
+//!
+//! Anchors are implicit: the automata built from these regexes always
+//! perform *full* matches, so `^`/`$` are not part of the dialect.
+
+use super::ast::{ByteSet, Regex};
+use anyhow::{bail, Context};
+
+struct Parser<'a> {
+    /// Pattern as characters (unicode-aware; chars compile to UTF-8 bytes).
+    chars: Vec<char>,
+    pos: usize,
+    pattern: &'a str,
+}
+
+/// Parse a regex pattern into its AST.
+pub fn parse(pattern: &str) -> crate::Result<Regex> {
+    let mut p = Parser { chars: pattern.chars().collect(), pos: 0, pattern };
+    let re = p.alt()?;
+    if p.pos != p.chars.len() {
+        bail!("regex `{}`: trailing input at char {}", pattern, p.pos);
+    }
+    Ok(re)
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn alt(&mut self) -> crate::Result<Regex> {
+        let mut branches = vec![self.concat()?];
+        while self.eat('|') {
+            branches.push(self.concat()?);
+        }
+        Ok(if branches.len() == 1 { branches.pop().unwrap() } else { Regex::Alt(branches) })
+    }
+
+    fn concat(&mut self) -> crate::Result<Regex> {
+        let mut parts = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            parts.push(self.repeat()?);
+        }
+        Ok(match parts.len() {
+            0 => Regex::Empty,
+            1 => parts.pop().unwrap(),
+            _ => Regex::Concat(parts),
+        })
+    }
+
+    fn repeat(&mut self) -> crate::Result<Regex> {
+        let mut atom = self.atom()?;
+        loop {
+            match self.peek() {
+                Some('*') => {
+                    self.pos += 1;
+                    atom = Regex::Star(Box::new(atom));
+                }
+                Some('+') => {
+                    self.pos += 1;
+                    atom = Regex::Plus(Box::new(atom));
+                }
+                Some('?') => {
+                    self.pos += 1;
+                    atom = Regex::Opt(Box::new(atom));
+                }
+                Some('{') => {
+                    self.pos += 1;
+                    let min = self.number()?;
+                    let max = if self.eat(',') {
+                        if self.peek() == Some('}') {
+                            None
+                        } else {
+                            Some(self.number()?)
+                        }
+                    } else {
+                        Some(min)
+                    };
+                    if !self.eat('}') {
+                        bail!("regex `{}`: expected `}}` at char {}", self.pattern, self.pos);
+                    }
+                    if let Some(max) = max {
+                        if max < min {
+                            bail!("regex `{}`: repeat max < min", self.pattern);
+                        }
+                    }
+                    atom = Regex::Repeat(Box::new(atom), min, max);
+                }
+                _ => break,
+            }
+        }
+        Ok(atom)
+    }
+
+    fn number(&mut self) -> crate::Result<u32> {
+        let start = self.pos;
+        while self.peek().map_or(false, |c| c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            bail!("regex `{}`: expected number at char {}", self.pattern, start);
+        }
+        self.chars[start..self.pos]
+            .iter()
+            .collect::<String>()
+            .parse()
+            .with_context(|| format!("regex `{}`: bad repeat count", self.pattern))
+    }
+
+    fn atom(&mut self) -> crate::Result<Regex> {
+        match self.bump() {
+            Some('(') => {
+                let inner = self.alt()?;
+                if !self.eat(')') {
+                    bail!("regex `{}`: unclosed group at char {}", self.pattern, self.pos);
+                }
+                Ok(inner)
+            }
+            Some('[') => self.class(),
+            Some('.') => Ok(Regex::Class(ByteSet::dot())),
+            Some('\\') => {
+                let set = self.escape_set()?;
+                Ok(Regex::Class(set))
+            }
+            Some(c) if c == '*' || c == '+' || c == '?' || c == ')' || c == ']' || c == '}' || c == '{' => {
+                bail!("regex `{}`: unexpected `{}` at char {}", self.pattern, c, self.pos - 1)
+            }
+            Some(c) => Ok(char_regex(c)),
+            None => bail!("regex `{}`: unexpected end of pattern", self.pattern),
+        }
+    }
+
+    /// An escape sequence, as a byte set (single byte).
+    fn escape_set(&mut self) -> crate::Result<ByteSet> {
+        let c = self
+            .bump()
+            .with_context(|| format!("regex `{}`: dangling escape", self.pattern))?;
+        let b = match c {
+            'n' => b'\n',
+            't' => b'\t',
+            'r' => b'\r',
+            'f' => 0x0c,
+            'b' => 0x08,
+            '0' => 0x00,
+            'x' => {
+                let hi = self.hex_digit()?;
+                let lo = self.hex_digit()?;
+                (hi << 4) | lo
+            }
+            'u' => {
+                // \uHHHH — compile to the UTF-8 bytes of the code point; only
+                // single-byte code points yield a class, otherwise error (the
+                // paper's grammars only use \u inside literal escape handling
+                // for JSON, which our class-based form covers).
+                let mut v: u32 = 0;
+                for _ in 0..4 {
+                    v = (v << 4) | self.hex_digit()? as u32;
+                }
+                if v > 0x7f {
+                    bail!("regex `{}`: \\u escape above ASCII unsupported in class position", self.pattern);
+                }
+                v as u8
+            }
+            // Identity escapes for metacharacters.
+            '\\' | '.' | '*' | '+' | '?' | '(' | ')' | '[' | ']' | '{' | '}' | '|' | '/'
+            | '"' | '\'' | '-' | '^' | '$' | ' ' => {
+                let mut buf = [0u8; 4];
+                let s = c.encode_utf8(&mut buf);
+                s.as_bytes()[0]
+            }
+            other => bail!("regex `{}`: unknown escape `\\{}`", self.pattern, other),
+        };
+        Ok(ByteSet::single(b))
+    }
+
+    fn hex_digit(&mut self) -> crate::Result<u8> {
+        let c = self
+            .bump()
+            .with_context(|| format!("regex `{}`: truncated hex escape", self.pattern))?;
+        c.to_digit(16)
+            .map(|d| d as u8)
+            .with_context(|| format!("regex `{}`: bad hex digit `{}`", self.pattern, c))
+    }
+
+    fn class(&mut self) -> crate::Result<Regex> {
+        let negated = self.eat('^');
+        let mut set = ByteSet::empty();
+        let mut first = true;
+        loop {
+            let c = match self.peek() {
+                None => bail!("regex `{}`: unclosed class", self.pattern),
+                Some(']') if !first => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(c) => c,
+            };
+            first = false;
+            self.pos += 1;
+            let lo: u8 = if c == '\\' {
+                self.pos -= 1;
+                self.pos += 1; // re-consume the backslash
+                let s = self.escape_set()?;
+                let b = s.iter().next().unwrap();
+                b
+            } else {
+                char_byte(c, self.pattern)?
+            };
+            // Range?
+            if self.peek() == Some('-') && self.chars.get(self.pos + 1) != Some(&']') && self.chars.get(self.pos + 1).is_some() {
+                self.pos += 1; // '-'
+                let hc = self.bump().unwrap();
+                let hi: u8 = if hc == '\\' {
+                    let s = self.escape_set()?;
+                    let b = s.iter().next().unwrap();
+                    b
+                } else {
+                    char_byte(hc, self.pattern)?
+                };
+                if hi < lo {
+                    bail!("regex `{}`: inverted class range", self.pattern);
+                }
+                set.union(&ByteSet::range(lo, hi));
+            } else {
+                set.insert(lo);
+            }
+        }
+        if negated {
+            set.negate();
+        }
+        if set.is_empty() {
+            bail!("regex `{}`: empty character class", self.pattern);
+        }
+        Ok(Regex::Class(set))
+    }
+}
+
+fn char_byte(c: char, pattern: &str) -> crate::Result<u8> {
+    let mut buf = [0u8; 4];
+    let s = c.encode_utf8(&mut buf);
+    if s.len() != 1 {
+        bail!("regex `{}`: multi-byte char `{}` not allowed inside a class", pattern, c);
+    }
+    Ok(s.as_bytes()[0])
+}
+
+/// A bare character: single-byte chars become classes, multi-byte UTF-8
+/// characters become byte-sequence literals.
+fn char_regex(c: char) -> Regex {
+    let mut buf = [0u8; 4];
+    let s = c.encode_utf8(&mut buf);
+    if s.len() == 1 {
+        Regex::Class(ByteSet::single(s.as_bytes()[0]))
+    } else {
+        Regex::Literal(s.as_bytes().to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_alternation_precedence() {
+        // a|bc == a | (bc)
+        let re = parse("a|bc").unwrap();
+        match re {
+            Regex::Alt(branches) => {
+                assert_eq!(branches.len(), 2);
+                assert!(matches!(branches[1], Regex::Concat(_)));
+            }
+            other => panic!("expected Alt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_bounded_repeat() {
+        let re = parse("a{2,4}").unwrap();
+        assert!(matches!(re, Regex::Repeat(_, 2, Some(4))));
+        let re = parse("a{3}").unwrap();
+        assert!(matches!(re, Regex::Repeat(_, 3, Some(3))));
+        let re = parse("a{1,}").unwrap();
+        assert!(matches!(re, Regex::Repeat(_, 1, None)));
+    }
+
+    #[test]
+    fn parses_negated_class() {
+        let re = parse("[^<]").unwrap();
+        match re {
+            Regex::Class(s) => {
+                assert!(!s.contains(b'<'));
+                assert!(s.contains(b'a'));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn class_with_leading_bracket() {
+        // []] — a literal ']' as the first class member.
+        let re = parse("[]]").unwrap();
+        match re {
+            Regex::Class(s) => {
+                assert!(s.contains(b']'));
+                assert_eq!(s.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn escapes() {
+        for (pat, byte) in [(r"\n", b'\n'), (r"\t", b'\t'), (r"\\", b'\\'), (r"\x41", b'A')] {
+            match parse(pat).unwrap() {
+                Regex::Class(s) => assert!(s.contains(byte), "pattern {pat}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("(").is_err());
+        assert!(parse("a{4,2}").is_err());
+        assert!(parse("*a").is_err());
+        assert!(parse("[z-a]").is_err());
+        assert!(parse("a\\").is_err());
+    }
+
+    #[test]
+    fn dash_at_class_end_is_literal() {
+        match parse("[a-]").unwrap() {
+            Regex::Class(s) => {
+                assert!(s.contains(b'a'));
+                assert!(s.contains(b'-'));
+                assert_eq!(s.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

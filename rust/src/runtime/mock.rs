@@ -1,0 +1,211 @@
+//! Deterministic n-gram mock LM.
+//!
+//! Tests and artifact-less bench fallbacks need an LM whose "natural"
+//! distribution (a) follows the structured formats the grammars describe,
+//! (b) is reproducible. A trigram model with interpolated backoff over a
+//! synthetic corpus does both — and, crucially for the invasiveness
+//! experiments, it has *tokenization preferences* (it assigns high
+//! probability to corpus-typical token sequences), so misaligned
+//! constraining measurably degrades it just like a real LLM.
+
+use super::{LmFactory, LmSession};
+use crate::tokenizer::Vocab;
+use crate::TokenId;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Shared trigram tables.
+pub struct MockModel {
+    vocab_size: usize,
+    unigram: Vec<f32>,
+    bigram: HashMap<TokenId, HashMap<TokenId, f32>>,
+    trigram: HashMap<(TokenId, TokenId), HashMap<TokenId, f32>>,
+}
+
+impl MockModel {
+    /// Train on raw text: encode with `vocab`, count n-grams. Documents
+    /// are separated by EOS so the model learns to stop.
+    pub fn train(vocab: &Vocab, documents: &[&str]) -> Arc<MockModel> {
+        let mut unigram = vec![0f32; vocab.len()];
+        let mut bigram: HashMap<TokenId, HashMap<TokenId, f32>> = HashMap::new();
+        let mut trigram: HashMap<(TokenId, TokenId), HashMap<TokenId, f32>> = HashMap::new();
+        for doc in documents {
+            let mut ids = vec![crate::tokenizer::BOS_ID];
+            ids.extend(vocab.encode(doc.as_bytes()));
+            ids.push(crate::tokenizer::EOS_ID);
+            for w in ids.windows(2) {
+                unigram[w[1] as usize] += 1.0;
+                *bigram.entry(w[0]).or_default().entry(w[1]).or_insert(0.0) += 1.0;
+            }
+            for w in ids.windows(3) {
+                *trigram.entry((w[0], w[1])).or_default().entry(w[2]).or_insert(0.0) += 1.0;
+            }
+        }
+        Arc::new(MockModel { vocab_size: vocab.len(), unigram, bigram, trigram })
+    }
+
+    /// Logits for the next token after `context` (interpolated trigram →
+    /// bigram → unigram → uniform smoothing).
+    pub fn next_logits(&self, context: &[TokenId]) -> Vec<f32> {
+        let n = self.vocab_size as f32;
+        let uni_total: f32 = self.unigram.iter().sum::<f32>().max(1.0);
+        let mut probs: Vec<f32> = self
+            .unigram
+            .iter()
+            .map(|&c| 0.05 * (c + 0.1) / (uni_total + 0.1 * n))
+            .collect();
+        let last = context.last().copied().unwrap_or(crate::tokenizer::BOS_ID);
+        if let Some(m) = self.bigram.get(&last) {
+            let total: f32 = m.values().sum();
+            for (&t, &c) in m {
+                probs[t as usize] += 0.25 * c / total;
+            }
+        }
+        if context.len() >= 1 {
+            let prev = if context.len() >= 2 {
+                context[context.len() - 2]
+            } else {
+                crate::tokenizer::BOS_ID
+            };
+            if let Some(m) = self.trigram.get(&(prev, last)) {
+                let total: f32 = m.values().sum();
+                for (&t, &c) in m {
+                    probs[t as usize] += 0.70 * c / total;
+                }
+            }
+        }
+        probs.iter().map(|&p| p.max(1e-9).ln()).collect()
+    }
+}
+
+/// A session over the shared model: context vector + logits on demand.
+pub struct MockLm {
+    model: Arc<MockModel>,
+    context: Vec<TokenId>,
+}
+
+impl MockLm {
+    pub fn new(model: Arc<MockModel>) -> MockLm {
+        MockLm { model, context: Vec::new() }
+    }
+}
+
+impl LmSession for MockLm {
+    fn vocab_size(&self) -> usize {
+        self.model.vocab_size
+    }
+
+    fn len(&self) -> usize {
+        self.context.len()
+    }
+
+    fn append(&mut self, tokens: &[TokenId]) -> crate::Result<Vec<f32>> {
+        self.context.extend_from_slice(tokens);
+        Ok(self.model.next_logits(&self.context))
+    }
+
+    fn append_scored(&mut self, tokens: &[TokenId]) -> crate::Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            self.context.push(t);
+            out.push(self.model.next_logits(&self.context));
+        }
+        Ok(out)
+    }
+
+    fn rollback(&mut self, n: usize) -> crate::Result<()> {
+        anyhow::ensure!(n <= self.context.len(), "rollback past start");
+        self.context.truncate(self.context.len() - n);
+        Ok(())
+    }
+}
+
+/// Factory over a shared mock model.
+pub struct MockFactory {
+    pub model: Arc<MockModel>,
+}
+
+impl LmFactory for MockFactory {
+    fn vocab_size(&self) -> usize {
+        self.model.vocab_size
+    }
+
+    fn new_session(&self) -> crate::Result<Box<dyn LmSession>> {
+        Ok(Box::new(MockLm::new(self.model.clone())))
+    }
+}
+
+/// A ready-made mock setup over JSON-ish documents — the shared fixture
+/// for tests and artifact-less benches.
+pub fn json_mock(vocab_size: usize) -> (Arc<Vocab>, Arc<MockModel>) {
+    let vocab = Arc::new(crate::tokenizer::bpe::synthetic_json_vocab(vocab_size));
+    let docs: Vec<String> = (0..60)
+        .map(|i| {
+            let names = ["John Doe", "Jane Roe", "Alice Li", "Bob Iger", "Eve Fox"];
+            let jobs = ["engineer", "doctor", "teacher", "artist", "pilot"];
+            format!(
+                "{{\"name\": \"{}\", \"age\": {}, \"occupation\": \"{}\"}}",
+                names[i % 5],
+                20 + (i % 50),
+                jobs[(i / 5) % 5]
+            )
+        })
+        .collect();
+    let doc_refs: Vec<&str> = docs.iter().map(|s| s.as_str()).collect();
+    let model = MockModel::train(&vocab, &doc_refs);
+    (vocab, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sampler::argmax;
+
+    #[test]
+    fn deterministic_and_rollback() {
+        let (vocab, model) = json_mock(512);
+        let mut s = MockLm::new(model.clone());
+        let ids = vocab.encode(b"{\"name\": ");
+        let a = s.append(&ids).unwrap();
+        s.rollback(ids.len()).unwrap();
+        let b = s.append(&ids).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.len(), ids.len());
+    }
+
+    #[test]
+    fn learns_corpus_structure() {
+        let (vocab, model) = json_mock(512);
+        let mut s = MockLm::new(model);
+        // Feeding a corpus-typical prefix (in the corpus' own
+        // tokenization), the model must continue it as in the corpus.
+        let doc = b"{\"name\": \"John Doe\", \"age\": 35, \"occupation\": \"doctor\"}";
+        let ids = vocab.encode(doc);
+        assert!(ids.len() >= 4, "corpus docs must be multi-token");
+        let logits = s.append(&ids[..2]).unwrap();
+        let top = argmax(&logits);
+        assert_eq!(top, ids[2], "expected {:?}, got {:?}", vocab.token_str(ids[2]), vocab.token_str(top));
+    }
+
+    #[test]
+    fn append_scored_matches_append() {
+        let (vocab, model) = json_mock(512);
+        let ids = vocab.encode(b"{\"age\": 4");
+        let mut a = MockLm::new(model.clone());
+        let rows = a.append_scored(&ids).unwrap();
+        let mut b = MockLm::new(model);
+        let last = b.append(&ids).unwrap();
+        assert_eq!(rows.last().unwrap(), &last);
+        assert_eq!(rows.len(), ids.len());
+    }
+
+    #[test]
+    fn eos_learned_at_document_end() {
+        let (vocab, model) = json_mock(512);
+        let mut s = MockLm::new(model);
+        let logits = s
+            .append(&vocab.encode(b"{\"name\": \"John Doe\", \"age\": 35, \"occupation\": \"doctor\"}"))
+            .unwrap();
+        assert_eq!(argmax(&logits), crate::tokenizer::EOS_ID);
+    }
+}

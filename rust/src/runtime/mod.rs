@@ -1,0 +1,57 @@
+//! Model runtime — the L3↔L2 boundary.
+//!
+//! [`LmSession`] is the contract every decoder, baseline, server slot and
+//! bench speaks: an append-only token context with per-step logits, chunk
+//! scoring (for speculative verification) and KV rollback.
+//!
+//! Implementations:
+//! * [`pjrt::PjrtLm`] — the real thing: loads the AOT-compiled JAX model
+//!   (`artifacts/*.hlo.txt` + `weights.npz`) and executes it on the PJRT
+//!   CPU client via the `xla` crate. Python never runs here.
+//! * [`mock::MockLm`] — a deterministic n-gram LM over a synthetic corpus;
+//!   used by unit/integration tests and baselines benches so the grammar
+//!   machinery can be exercised without artifacts.
+
+pub mod mock;
+pub mod pjrt;
+pub mod sampler;
+
+use crate::TokenId;
+
+/// An autoregressive LM session: an append-only token context.
+///
+/// The session owns its KV cache; `append` costs one model step per token
+/// (or one chunked step, implementation-defined), `rollback` undoes
+/// context without recomputation (functional KV caches make this free).
+///
+/// Deliberately NOT `Send`: the `xla` crate's PJRT handles are `Rc`-based,
+/// so all model interaction lives on one engine thread (the server's
+/// engine-loop architecture — see `server/`).
+pub trait LmSession {
+    fn vocab_size(&self) -> usize;
+
+    /// Number of tokens currently in the context.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append tokens; return the logits row following the *last* token.
+    fn append(&mut self, tokens: &[TokenId]) -> crate::Result<Vec<f32>>;
+
+    /// Append tokens; return the logits row following *each* token
+    /// (`result[i]` = distribution over token `i+1`). Used to verify
+    /// speculative proposals with a single forward pass (§3.6).
+    fn append_scored(&mut self, tokens: &[TokenId]) -> crate::Result<Vec<Vec<f32>>>;
+
+    /// Remove the last `n` tokens from the context.
+    fn rollback(&mut self, n: usize) -> crate::Result<()>;
+}
+
+/// Factory for per-request sessions (the engine thread spawns one per
+/// slot).
+pub trait LmFactory {
+    fn vocab_size(&self) -> usize;
+    fn new_session(&self) -> crate::Result<Box<dyn LmSession>>;
+}

@@ -1,0 +1,421 @@
+//! PJRT runtime: load the AOT bundle, execute it from the request path.
+//!
+//! * Weights (`weights.npz`) are uploaded to device buffers **once** per
+//!   process; every call passes them by reference (`execute_b`).
+//! * The KV cache is functional: each call consumes the previous cache
+//!   buffers and yields new ones. Rollback (speculative rejection, §3.6)
+//!   is free — keep the pre-call `kv_len` and let later writes overwrite.
+//! * Executable variants `model_b{B}_c{C}.hlo.txt` cover decode (C=1),
+//!   speculation verify (C=8) and prefill (C=16); [`PjrtLm::append`]
+//!   greedily chunks arbitrary token runs over the available Cs.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why not serialized protos).
+
+use super::{LmFactory, LmSession};
+use crate::util::Json;
+use crate::TokenId;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Parsed `model_config.json`.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub param_order: Vec<String>,
+    /// (batch, chunk, hlo file name).
+    pub variants: Vec<(usize, usize, String)>,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<ModelConfig> {
+        let text = std::fs::read_to_string(dir.join("model_config.json"))
+            .with_context(|| format!("reading model_config.json in {}", dir.display()))?;
+        let v = Json::parse(&text)?;
+        let model = v.get("model").context("model key")?;
+        let get = |k: &str| -> crate::Result<usize> {
+            Ok(model.get(k).and_then(|x| x.as_f64()).with_context(|| format!("model.{k}"))?
+                as usize)
+        };
+        let param_order = v
+            .get("param_order")
+            .and_then(|x| x.as_arr())
+            .context("param_order")?
+            .iter()
+            .map(|s| s.as_str().unwrap_or_default().to_string())
+            .collect();
+        let variants = v
+            .get("variants")
+            .and_then(|x| x.as_arr())
+            .context("variants")?
+            .iter()
+            .map(|e| {
+                let b = e.get("batch").and_then(|x| x.as_f64()).unwrap_or(0.0) as usize;
+                let c = e.get("chunk").and_then(|x| x.as_f64()).unwrap_or(0.0) as usize;
+                let f = e.get("file").and_then(|x| x.as_str()).unwrap_or_default().to_string();
+                (b, c, f)
+            })
+            .collect();
+        Ok(ModelConfig {
+            vocab_size: get("vocab_size")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            max_seq: get("max_seq")?,
+            param_order,
+            variants,
+        })
+    }
+}
+
+/// Locate the artifacts directory: `$DOMINO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DOMINO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The loaded model: client + compiled variants + device-resident weights.
+///
+/// PJRT executions are serialized behind a mutex — serving concurrency
+/// comes from batching *inside* a call (the B=4 variants), not from
+/// concurrent executions.
+pub struct PjrtModel {
+    client: PjRtClient,
+    pub config: ModelConfig,
+    exes: HashMap<(usize, usize), PjRtLoadedExecutable>,
+    params: Vec<PjRtBuffer>,
+    /// Host copies of the weights: `buffer_from_host_literal` transfers
+    /// ASYNCHRONOUSLY on the TFRT CPU client, so the literals must stay
+    /// alive as long as the device buffers (use-after-free segfault
+    /// otherwise).
+    _param_literals: Vec<Literal>,
+    lock: Mutex<()>,
+}
+
+impl PjrtModel {
+    /// Load + compile everything in `dir`.
+    pub fn load(dir: &Path) -> crate::Result<Arc<PjrtModel>> {
+        let config = ModelConfig::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        // Weights: host → device once, in manifest order. (Via `Literal`:
+        // the vendored crate's `PjRtBuffer::read_npz` mis-types f32 arrays
+        // as F16.)
+        let names: Vec<&str> = config.param_order.iter().map(|s| s.as_str()).collect();
+        let literals = Literal::read_npz_by_name(dir.join("weights.npz"), &(), &names)?;
+        let params = literals
+            .iter()
+            .map(|l| Ok(client.buffer_from_host_literal(None, l)?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        // One-time: force the uploads so dropping an unused model can
+        // never race the async copies.
+        for p in &params {
+            p.to_literal_sync()?;
+        }
+        let mut exes = HashMap::new();
+        for (b, c, file) in &config.variants {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert((*b, *c), exe);
+        }
+        if exes.is_empty() {
+            bail!("no executable variants in {}", dir.display());
+        }
+        Ok(Arc::new(PjrtModel {
+            client,
+            config,
+            exes,
+            params,
+            _param_literals: literals,
+            lock: Mutex::new(()),
+        }))
+    }
+
+    /// Load from [`artifacts_dir`], or explain how to build it.
+    pub fn load_default() -> crate::Result<Arc<PjrtModel>> {
+        let dir = artifacts_dir();
+        Self::load(&dir).with_context(|| {
+            format!(
+                "loading AOT bundle from {} (run `make artifacts`, or set DOMINO_ARTIFACTS)",
+                dir.display()
+            )
+        })
+    }
+
+    /// Chunk sizes available at batch width `b`, descending.
+    pub fn chunk_sizes(&self, b: usize) -> Vec<usize> {
+        let mut cs: Vec<usize> =
+            self.exes.keys().filter(|(eb, _)| *eb == b).map(|(_, c)| *c).collect();
+        cs.sort_unstable_by(|a, b| b.cmp(a));
+        cs
+    }
+
+    pub fn batch_widths(&self) -> Vec<usize> {
+        let mut bs: Vec<usize> = self.exes.keys().map(|(b, _)| *b).collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+
+    /// Fresh zeroed KV cache buffers for batch width `b`.
+    pub fn new_cache(&self, b: usize) -> crate::Result<CacheBufs> {
+        let cfg = &self.config;
+        let dims: Vec<usize> =
+            vec![cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.head_dim()];
+        let k_lit = Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+        let v_lit = Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+        let k = self.client.buffer_from_host_literal(None, &k_lit)?;
+        let v = self.client.buffer_from_host_literal(None, &v_lit)?;
+        Ok(CacheBufs { k, v, _host: Some((k_lit, v_lit)), used: std::cell::Cell::new(false) })
+    }
+
+    /// Execute one (b, c) variant. Returns host logprobs `[B*C*V]` and
+    /// the successor cache buffers.
+    pub fn run(
+        &self,
+        b: usize,
+        c: usize,
+        cache: &CacheBufs,
+        kv_len: &[i32],
+        tokens: &[i32],
+        mask: Option<&[f32]>,
+    ) -> crate::Result<(Vec<f32>, CacheBufs)> {
+        let cfg = &self.config;
+        assert_eq!(kv_len.len(), b);
+        assert_eq!(tokens.len(), b * c);
+        let exe = self
+            .exes
+            .get(&(b, c))
+            .with_context(|| format!("no executable variant for (batch={b}, chunk={c})"))?;
+        let _guard = self.lock.lock().expect("pjrt lock");
+        let kv_len_buf = self.client.buffer_from_host_buffer(kv_len, &[b], None)?;
+        let tokens_buf = self.client.buffer_from_host_buffer(tokens, &[b, c], None)?;
+        let ones;
+        let mask_host: &[f32] = match mask {
+            Some(m) => m,
+            None => {
+                ones = vec![1f32; b * cfg.vocab_size];
+                &ones
+            }
+        };
+        let mask_buf =
+            self.client.buffer_from_host_buffer(mask_host, &[b, cfg.vocab_size], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
+        args.push(&cache.k);
+        args.push(&cache.v);
+        args.push(&kv_len_buf);
+        args.push(&tokens_buf);
+        args.push(&mask_buf);
+
+        let mut outs = exe.execute_b(&args)?;
+        let mut replica = outs.swap_remove(0);
+        if replica.len() == 3 {
+            // Untupled outputs: logprobs, k', v' — caches stay on device.
+            let v_new = replica.pop().unwrap();
+            let k_new = replica.pop().unwrap();
+            let logprobs_buf = replica.pop().unwrap();
+            cache.used.set(true); // execution completed → uploads consumed
+            let logprobs = logprobs_buf.to_literal_sync()?.to_vec::<f32>()?;
+            Ok((logprobs, CacheBufs { k: k_new, v: v_new, _host: None, used: std::cell::Cell::new(false) }))
+        } else {
+            // Single tuple output: split on host, re-upload the caches.
+            // The host literals are kept alive inside `CacheBufs`: the
+            // TFRT CPU client copies from them ASYNCHRONOUSLY and reads
+            // them at the next execute (use-after-free segfault if
+            // dropped here).
+            let tuple = replica.pop().context("no outputs")?.to_literal_sync()?;
+            cache.used.set(true); // execution completed → uploads consumed
+            let parts = tuple.to_tuple()?;
+            let [lp, k_new, v_new]: [Literal; 3] =
+                parts.try_into().map_err(|_| anyhow::anyhow!("expected 3 outputs"))?;
+            let logprobs = lp.to_vec::<f32>()?;
+            let k_buf = self.client.buffer_from_host_literal(None, &k_new)?;
+            let v_buf = self.client.buffer_from_host_literal(None, &v_new)?;
+            Ok((
+                logprobs,
+                CacheBufs {
+                    k: k_buf,
+                    v: v_buf,
+                    _host: Some((k_new, v_new)),
+                    used: std::cell::Cell::new(false),
+                },
+            ))
+        }
+    }
+}
+
+/// KV cache device buffers + (when needed) the host literals backing a
+/// pending async upload.
+///
+/// Lifecycle contract: the TFRT CPU client enqueues host→device copies
+/// asynchronously. A `CacheBufs` whose buffers were consumed by a
+/// *completed* execution is safe to drop (the execution forced the
+/// copies). One that was never executed must block on the pending copies
+/// before freeing the backing literals — `Drop` does that via a forced
+/// readback when `used` was never set.
+pub struct CacheBufs {
+    k: PjRtBuffer,
+    v: PjRtBuffer,
+    _host: Option<(Literal, Literal)>,
+    used: std::cell::Cell<bool>,
+}
+
+impl Drop for CacheBufs {
+    fn drop(&mut self) {
+        if self._host.is_some() && !self.used.get() {
+            // Force the pending async uploads to finish while the host
+            // literals are still alive.
+            let _ = self.k.to_literal_sync();
+            let _ = self.v.to_literal_sync();
+        }
+    }
+}
+
+/// A single-lane (B=1) session over the shared model.
+pub struct PjrtLm {
+    model: Arc<PjrtModel>,
+    cache: CacheBufs,
+    len: usize,
+    chunk_sizes: Vec<usize>,
+}
+
+impl PjrtLm {
+    pub fn new(model: Arc<PjrtModel>) -> crate::Result<PjrtLm> {
+        let cache = model.new_cache(1)?;
+        let chunk_sizes = model.chunk_sizes(1);
+        anyhow::ensure!(!chunk_sizes.is_empty(), "no B=1 executables in bundle");
+        Ok(PjrtLm { model, cache, len: 0, chunk_sizes })
+    }
+
+    /// Run one exact-C chunk (padded if needed); returns the logprob rows
+    /// for the real tokens.
+    fn run_chunk(&mut self, tokens: &[i32], c: usize) -> crate::Result<Vec<Vec<f32>>> {
+        let v_sz = self.model.config.vocab_size;
+        let mut padded = tokens.to_vec();
+        padded.resize(c, crate::tokenizer::PAD_ID as i32);
+        let (lp, cache) =
+            self.model.run(1, c, &self.cache, &[self.len as i32], &padded, None)?;
+        self.cache = cache;
+        self.len += tokens.len();
+        Ok(lp.chunks(v_sz).take(tokens.len()).map(|r| r.to_vec()).collect())
+    }
+
+    fn check_capacity(&self, n: usize) -> crate::Result<()> {
+        // Headroom: padded chunk tails may write past the logical end.
+        let max_c = self.chunk_sizes.first().copied().unwrap_or(1);
+        anyhow::ensure!(
+            self.len + n + max_c < self.model.config.max_seq,
+            "context overflow: {} + {} exceeds max_seq {}",
+            self.len,
+            n,
+            self.model.config.max_seq
+        );
+        Ok(())
+    }
+
+    /// Plan `(take, exe_chunk)` pieces for `n` tokens.
+    ///
+    /// One padded chunk beats several small calls on this backend (the
+    /// per-call overhead dominates: C=1 ≈ 1.8 ms, C=8 ≈ 2.5 ms, C=16 ≈
+    /// 3.2 ms — §Perf), so: full max-size chunks while they fit, then ONE
+    /// call in the smallest executable that holds the remainder.
+    fn plan(&self, mut n: usize) -> Vec<(usize, usize)> {
+        let max_c = self.chunk_sizes.first().copied().unwrap_or(1);
+        let mut out = Vec::new();
+        while n > 0 {
+            if n >= max_c {
+                out.push((max_c, max_c));
+                n -= max_c;
+            } else {
+                // Smallest executable chunk that holds the remainder.
+                let exe_c =
+                    self.chunk_sizes.iter().rev().copied().find(|&c| c >= n).unwrap_or(n);
+                out.push((n, exe_c));
+                n = 0;
+            }
+        }
+        out
+    }
+}
+
+impl LmSession for PjrtLm {
+    fn vocab_size(&self) -> usize {
+        self.model.config.vocab_size
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn append(&mut self, tokens: &[TokenId]) -> crate::Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("append of zero tokens has no fresh logits row");
+        }
+        self.check_capacity(tokens.len())?;
+        let ids: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let mut i = 0;
+        let mut last_row: Option<Vec<f32>> = None;
+        for (take, exe_c) in self.plan(ids.len()) {
+            let rows = self.run_chunk(&ids[i..i + take], exe_c)?;
+            last_row = rows.into_iter().last();
+            i += take;
+        }
+        last_row.context("no logits row produced")
+    }
+
+    fn append_scored(&mut self, tokens: &[TokenId]) -> crate::Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.check_capacity(tokens.len())?;
+        let ids: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let mut rows = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        for (take, exe_c) in self.plan(ids.len()) {
+            rows.extend(self.run_chunk(&ids[i..i + take], exe_c)?);
+            i += take;
+        }
+        Ok(rows)
+    }
+
+    fn rollback(&mut self, n: usize) -> crate::Result<()> {
+        anyhow::ensure!(n <= self.len, "rollback past start");
+        // Functional cache: entries past `len` are invisible to the
+        // attention mask and overwritten by later appends.
+        self.len -= n;
+        Ok(())
+    }
+}
+
+/// Factory for serving: one session per request slot.
+pub struct PjrtFactory {
+    pub model: Arc<PjrtModel>,
+}
+
+impl LmFactory for PjrtFactory {
+    fn vocab_size(&self) -> usize {
+        self.model.config.vocab_size
+    }
+
+    fn new_session(&self) -> crate::Result<Box<dyn LmSession>> {
+        Ok(Box::new(PjrtLm::new(self.model.clone())?))
+    }
+}
+
+/// Load the tokenizer that ships with the bundle.
+pub fn load_vocab(dir: &Path) -> crate::Result<Arc<crate::tokenizer::Vocab>> {
+    Ok(Arc::new(crate::tokenizer::Vocab::load(&dir.join("tokenizer.json"))?))
+}

@@ -1,0 +1,98 @@
+//! Sampling: Algorithm 1's `decode(v')` — argmax or temperature sampling
+//! over (masked) logits, plus log-softmax utilities used for perplexity.
+
+use crate::util::Rng;
+use crate::TokenId;
+
+/// Decoding strategy.
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    Greedy,
+    /// Temperature sampling (1.0 = the model's distribution).
+    Temperature(f32),
+}
+
+/// Pick the next token from a (possibly masked) logits row.
+pub fn decode(logits: &[f32], sampling: Sampling, rng: &mut Rng) -> TokenId {
+    match sampling {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let probs = softmax_with_temp(logits, t);
+            rng.weighted(&probs) as TokenId
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> TokenId {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as TokenId
+}
+
+fn softmax_with_temp(logits: &[f32], t: f32) -> Vec<f64> {
+    let t = t.max(1e-4) as f64;
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    logits
+        .iter()
+        .map(|&v| {
+            if v.is_finite() {
+                ((v as f64 - max) / t).exp()
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// `log P(token)` under the (unmasked) logits row — perplexity accounting.
+pub fn log_prob(logits: &[f32], token: TokenId) -> f64 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits
+        .iter()
+        .map(|&v| if v.is_finite() { (v as f64 - max).exp() } else { 0.0 })
+        .sum::<f64>()
+        .ln()
+        + max;
+    logits[token as usize] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -5.0]), 1);
+    }
+
+    #[test]
+    fn greedy_deterministic() {
+        let mut rng = Rng::new(0);
+        assert_eq!(decode(&[1.0, 9.0, 2.0], Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_respects_mask() {
+        // -inf entries must never be sampled.
+        let mut rng = Rng::new(0);
+        let logits = [f32::NEG_INFINITY, 1.0, f32::NEG_INFINITY, 0.5];
+        for _ in 0..200 {
+            let t = decode(&logits, Sampling::Temperature(1.0), &mut rng);
+            assert!(t == 1 || t == 3, "sampled masked token {t}");
+        }
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,294 @@
+//! Character scanner (§3.2) — the union automaton over terminal regexes.
+//!
+//! Every legal program is a sequence of terminals (Lemma 3.1): the scanner
+//! recognizes `R = (r_1 | … | r_n)+` while **tracking which terminal
+//! sub-automaton each active state belongs to**, so completed terminals can
+//! be fed to the parser and partial (sub)terminals classified (§3.3).
+//!
+//! Each terminal's regex is determinized and minimized individually
+//! ([`crate::regex::Dfa`]); the union is simulated as a set of
+//! [`Pos`]itions. Segmentation is *nondeterministic*: at an accepting
+//! state the scanner may close the terminal and start a new one on the
+//! same byte, or keep extending — both paths are kept and the parser
+//! prunes (maximal munch is never assumed; this is what makes bridge
+//! tokens like `",` representable).
+
+use crate::grammar::{Cfg, TermId};
+use crate::regex::dfa::{Dfa, DEAD};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A scanner position: at a terminal boundary, or inside terminal `t` at
+/// DFA state `s`.
+///
+/// `In(t, s)` with `dfas[t].accepting[s]` means the terminal *may* close
+/// here (a Full subterminal, possibly extendable — the two accepting
+/// states of Fig. 4); closing is deferred until the next byte forces it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Pos {
+    /// At a terminal boundary (only before the first byte of generation).
+    Boundary,
+    /// Inside terminal `.0`'s DFA at state `.1`.
+    In(TermId, u32),
+}
+
+/// Dense id for a [`Pos`] (`0` = Boundary, then per-terminal DFA states).
+pub type PosId = u32;
+
+/// The compiled scanner: per-terminal DFAs + dense `Pos` numbering.
+#[derive(Clone)]
+pub struct Scanner {
+    pub dfas: Vec<Dfa>,
+    /// `pos_offset[t] + s + 1` = PosId of `In(t, s)`.
+    pos_offset: Vec<u32>,
+    num_pos: u32,
+}
+
+impl Scanner {
+    pub fn new(cfg: &Cfg) -> crate::Result<Scanner> {
+        let dfas = cfg.terminal_dfas()?;
+        let mut pos_offset = Vec::with_capacity(dfas.len());
+        let mut next = 0u32;
+        for d in &dfas {
+            pos_offset.push(next);
+            next += d.num_states() as u32;
+        }
+        Ok(Scanner { dfas, pos_offset, num_pos: next + 1 })
+    }
+
+    /// Total number of distinct positions (Boundary + all DFA states).
+    pub fn num_pos(&self) -> usize {
+        self.num_pos as usize
+    }
+
+    pub fn pos_id(&self, pos: Pos) -> PosId {
+        match pos {
+            Pos::Boundary => 0,
+            Pos::In(t, s) => 1 + self.pos_offset[t as usize] + s,
+        }
+    }
+
+    pub fn pos_of_id(&self, id: PosId) -> Pos {
+        if id == 0 {
+            return Pos::Boundary;
+        }
+        let id = id - 1;
+        // pos_offset is sorted; find the terminal owning this id.
+        let t = match self.pos_offset.binary_search(&id) {
+            Ok(mut i) => {
+                // Later terminals may share the offset only if a DFA had
+                // zero states (impossible — every DFA has ≥ 1 state), but
+                // be safe and take the last offset equal to `id`.
+                while i + 1 < self.pos_offset.len() && self.pos_offset[i + 1] == id {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        };
+        Pos::In(t as TermId, id - self.pos_offset[t])
+    }
+
+    /// Can the terminal close at this position?
+    pub fn accepting(&self, pos: Pos) -> bool {
+        match pos {
+            Pos::Boundary => false,
+            Pos::In(t, s) => self.dfas[t as usize].accepting[s as usize],
+        }
+    }
+
+    /// All positions reachable by starting a fresh terminal with byte `b`.
+    fn starts(&self, b: u8) -> impl Iterator<Item = Pos> + '_ {
+        self.dfas.iter().enumerate().filter_map(move |(t, d)| {
+            let s = d.next(d.start, b);
+            (s != DEAD).then_some(Pos::In(t as TermId, s))
+        })
+    }
+
+    /// Advance one position by one byte. Produces `(emitted terminal, new
+    /// position)` pairs: `None` = continued within the current terminal,
+    /// `Some(t)` = closed terminal `t` and started a new one on `b`.
+    pub fn step_pos(&self, pos: Pos, b: u8, out: &mut Vec<(Option<TermId>, Pos)>) {
+        match pos {
+            Pos::Boundary => {
+                for p in self.starts(b) {
+                    out.push((None, p));
+                }
+            }
+            Pos::In(t, s) => {
+                let d = &self.dfas[t as usize];
+                let s2 = d.next(s, b);
+                if s2 != DEAD {
+                    out.push((None, Pos::In(t, s2)));
+                }
+                if d.accepting[s as usize] {
+                    for p in self.starts(b) {
+                        out.push((Some(t), p));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run a byte string through the scanner from a set of start positions,
+    /// tracking every segmentation. Returns each distinct
+    /// `(completed terminal sequence, final position set)` hypothesis.
+    ///
+    /// This is the `q.traverse(l)` of Algorithm 2.
+    pub fn traverse(&self, start: &[Pos], bytes: &[u8]) -> Vec<(Vec<TermId>, Vec<Pos>)> {
+        // Map: completed-terminal-sequence -> set of positions.
+        let mut hyps: HashMap<Vec<TermId>, Vec<Pos>> = HashMap::new();
+        let mut sorted_start: Vec<Pos> = start.to_vec();
+        sorted_start.sort_unstable();
+        sorted_start.dedup();
+        hyps.insert(Vec::new(), sorted_start);
+        let mut scratch: Vec<(Option<TermId>, Pos)> = Vec::new();
+        for &b in bytes {
+            let mut next: HashMap<Vec<TermId>, Vec<Pos>> = HashMap::new();
+            for (seq, posset) in hyps {
+                for &pos in &posset {
+                    scratch.clear();
+                    self.step_pos(pos, b, &mut scratch);
+                    for &(emitted, p2) in &scratch {
+                        let key = match emitted {
+                            None => seq.clone(),
+                            Some(t) => {
+                                let mut k = seq.clone();
+                                k.push(t);
+                                k
+                            }
+                        };
+                        next.entry(key).or_default().push(p2);
+                    }
+                }
+            }
+            for posset in next.values_mut() {
+                posset.sort_unstable();
+                posset.dedup();
+            }
+            hyps = next;
+            if hyps.is_empty() {
+                break;
+            }
+        }
+        hyps.into_iter().collect()
+    }
+
+    /// Positions for which subterminal trees are precomputed: Boundary plus
+    /// every state of every terminal DFA (all are reachable — subset
+    /// construction only creates reachable states).
+    pub fn reachable_positions(&self) -> Vec<Pos> {
+        let mut out = vec![Pos::Boundary];
+        for (t, d) in self.dfas.iter().enumerate() {
+            for s in 0..d.num_states() as u32 {
+                out.push(Pos::In(t as TermId, s));
+            }
+        }
+        out
+    }
+}
+
+/// Shared handle used across trees / decoders.
+pub type ScannerRef = Arc<Scanner>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grammar::builtin::fig3_expr;
+
+    fn fig3_scanner() -> (crate::grammar::Cfg, Scanner) {
+        let g = fig3_expr();
+        let s = Scanner::new(&g).unwrap();
+        (g, s)
+    }
+
+    fn term(g: &crate::grammar::Cfg, name: &str) -> TermId {
+        g.terminals.iter().position(|t| t.name == name).unwrap() as TermId
+    }
+
+    #[test]
+    fn pos_id_roundtrip() {
+        let (_, s) = fig3_scanner();
+        for pos in s.reachable_positions() {
+            assert_eq!(s.pos_of_id(s.pos_id(pos)), pos);
+        }
+        assert_eq!(s.num_pos(), s.reachable_positions().len());
+    }
+
+    #[test]
+    fn traverse_single_terminal() {
+        let (g, s) = fig3_scanner();
+        let int = term(&g, "int");
+        let res = s.traverse(&[Pos::Boundary], b"12");
+        // Unsplit segmentation: inside int("12"), nothing completed.
+        let empty_seq: Vec<_> = res.iter().filter(|(seq, _)| seq.is_empty()).collect();
+        assert_eq!(empty_seq.len(), 1);
+        let (_, posset) = empty_seq[0];
+        assert!(posset.iter().all(|p| matches!(p, Pos::In(t, _) if *t == int)));
+        // Split segmentation int("1") | int("2") is also tracked.
+        assert!(res.iter().any(|(seq, _)| seq == &vec![int]));
+    }
+
+    #[test]
+    fn traverse_bridge_token() {
+        // ")+(" spans three terminals — the bridge-token case.
+        let (g, s) = fig3_scanner();
+        let (rp, plus, lp) = (term(&g, "')'"), term(&g, "'+'"), term(&g, "'('"));
+        let res = s.traverse(&[Pos::Boundary], b")+(");
+        assert_eq!(res.len(), 1);
+        let (seq, posset) = &res[0];
+        assert_eq!(seq, &vec![rp, plus]);
+        assert_eq!(posset.len(), 1);
+        assert!(matches!(posset[0], Pos::In(t, _) if t == lp));
+        assert!(s.accepting(posset[0]));
+    }
+
+    #[test]
+    fn traverse_from_mid_terminal() {
+        // From inside int("12"), token "+3" closes int and ends inside a
+        // fresh int.
+        let (g, s) = fig3_scanner();
+        let int = term(&g, "int");
+        let plus = term(&g, "'+'");
+        let mid = {
+            let res = s.traverse(&[Pos::Boundary], b"12");
+            res.into_iter().find(|(seq, _)| seq.is_empty()).unwrap().1
+        };
+        let res = s.traverse(&mid, b"+3");
+        assert_eq!(res.len(), 1);
+        let (seq, posset) = &res[0];
+        assert_eq!(seq, &vec![int, plus]);
+        assert!(posset.iter().all(|p| matches!(p, Pos::In(t, _) if *t == int)));
+    }
+
+    #[test]
+    fn traverse_illegal_bytes() {
+        let (_, s) = fig3_scanner();
+        assert!(s.traverse(&[Pos::Boundary], b"x").is_empty());
+        // "012" is not one int (no leading zeros) but IS int("0") int("12")
+        // and int("0") int("1") int("2") — splits with ≥ 1 completion.
+        let res = s.traverse(&[Pos::Boundary], b"012");
+        assert!(!res.is_empty());
+        assert!(res.iter().all(|(seq, _)| !seq.is_empty()));
+    }
+
+    #[test]
+    fn c_identifier_keyword_ambiguity() {
+        let g = crate::grammar::builtin::c_lang();
+        let s = Scanner::new(&g).unwrap();
+        let res = s.traverse(&[Pos::Boundary], b"int");
+        // The zero-completions hypothesis must be live in BOTH the
+        // identifier and the "int" keyword sub-automata (§3.3's edge case).
+        let (_, posset) = res.iter().find(|(seq, _)| seq.is_empty()).unwrap();
+        let terms: Vec<TermId> = posset
+            .iter()
+            .filter_map(|p| match p {
+                Pos::In(t, _) => Some(*t),
+                _ => None,
+            })
+            .collect();
+        let ident = g.terminals.iter().position(|t| t.name == "identifier").unwrap() as TermId;
+        assert!(terms.contains(&ident));
+        assert!(terms.len() >= 2, "keyword + identifier both live: {terms:?}");
+    }
+}

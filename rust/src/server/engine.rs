@@ -1,0 +1,344 @@
+//! The engine thread: request admission, slot stepping, completion.
+//!
+//! All model/PJRT state is created ON the engine thread (the `xla` handles
+//! are not `Send`); clients talk to it over an mpsc channel. The loop is
+//! a continuous batcher: every tick admits queued requests into free
+//! slots and steps every active slot by one decode iteration, so long
+//! requests don't block short ones (iteration-level scheduling, as in
+//! Orca/vLLM).
+
+use super::metrics::Metrics;
+use super::slot::{DecodeMode, Slot, SlotStats};
+use crate::domino::decoder::{Engine as GrammarEngine, Lookahead};
+use crate::domino::{DominoDecoder, SpeculativeModel};
+use crate::grammar::builtin;
+use crate::runtime::sampler::Sampling;
+use crate::runtime::LmFactory;
+use crate::tokenizer::Vocab;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Constraint selection for a request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Constraint {
+    None,
+    /// Grammar by builtin name, DOMINO decoder.
+    Domino { grammar: String, k: Option<u32>, speculative: Option<usize>, full_mask: bool },
+    /// Grammar by builtin name, online full-vocab baseline.
+    Online { grammar: String },
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub constraint: Constraint,
+    pub max_tokens: usize,
+    pub temperature: Option<f32>,
+    pub seed: u64,
+}
+
+impl Default for GenRequest {
+    fn default() -> Self {
+        GenRequest {
+            prompt: String::new(),
+            constraint: Constraint::None,
+            max_tokens: 128,
+            temperature: None,
+            seed: 0,
+        }
+    }
+}
+
+/// The response.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub text: String,
+    pub stats: SlotStats,
+    pub error: Option<String>,
+    /// Wall time spent generating, seconds.
+    pub elapsed_s: f64,
+}
+
+/// Everything the engine thread owns; built by the init closure on the
+/// engine thread itself.
+pub struct EngineCtx {
+    pub factory: Box<dyn LmFactory>,
+    pub vocab: Arc<Vocab>,
+    /// Precompiled grammar engines (name → engine), lazily extended.
+    pub grammars: HashMap<String, Arc<GrammarEngine>>,
+    /// Shared speculation priors per grammar (§4.2: priors formed over
+    /// warmup requests, then reused).
+    pub specs: HashMap<String, Arc<Mutex<SpeculativeModel>>>,
+}
+
+impl EngineCtx {
+    pub fn new(factory: Box<dyn LmFactory>, vocab: Arc<Vocab>) -> EngineCtx {
+        EngineCtx { factory, vocab, grammars: HashMap::new(), specs: HashMap::new() }
+    }
+
+    fn grammar_engine(&mut self, name: &str) -> crate::Result<Arc<GrammarEngine>> {
+        if let Some(e) = self.grammars.get(name) {
+            return Ok(e.clone());
+        }
+        let cfg = builtin::by_name(name).with_context(|| format!("unknown grammar `{name}`"))?;
+        let engine = GrammarEngine::compile(cfg, self.vocab.clone())?;
+        self.grammars.insert(name.to_string(), engine.clone());
+        Ok(engine)
+    }
+
+    fn spec_model(&mut self, name: &str) -> Arc<Mutex<SpeculativeModel>> {
+        self.specs
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(SpeculativeModel::new(0.75))))
+            .clone()
+    }
+
+    fn build_mode(&mut self, c: &Constraint) -> crate::Result<DecodeMode> {
+        Ok(match c {
+            Constraint::None => DecodeMode::Unconstrained,
+            Constraint::Domino { grammar, k, speculative, full_mask } => {
+                let engine = self.grammar_engine(grammar)?;
+                let lookahead = match k {
+                    Some(k) => Lookahead::K(*k),
+                    None => Lookahead::Infinite,
+                };
+                let decoder = DominoDecoder::new(engine, lookahead);
+                match speculative {
+                    Some(s) => DecodeMode::Speculative {
+                        decoder,
+                        spec: self.spec_model(grammar),
+                        s: *s,
+                    },
+                    None if *full_mask => DecodeMode::FullMask(Box::new(decoder)),
+                    None => DecodeMode::Opportunistic(Box::new(decoder)),
+                }
+            }
+            Constraint::Online { grammar } => {
+                let engine = self.grammar_engine(grammar)?;
+                DecodeMode::Opportunistic(Box::new(crate::baselines::OnlineChecker::new(engine)))
+            }
+        })
+    }
+}
+
+enum Job {
+    Generate(GenRequest, mpsc::Sender<GenResponse>),
+    Stats(mpsc::Sender<Metrics>),
+    Shutdown,
+}
+
+/// Handle to a running engine thread.
+pub struct Server {
+    tx: mpsc::Sender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the engine; `init` runs on the engine thread and builds all
+    /// model state.
+    pub fn start<F>(init: F, max_slots: usize) -> Server
+    where
+        F: FnOnce() -> crate::Result<EngineCtx> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("domino-engine".into())
+            .spawn(move || {
+                let ctx = match init() {
+                    Ok(ctx) => ctx,
+                    Err(e) => {
+                        eprintln!("engine init failed: {e:#}");
+                        // Drain jobs with failures.
+                        for job in rx.iter() {
+                            if let Job::Generate(_, resp) = job {
+                                let _ = resp.send(GenResponse {
+                                    text: String::new(),
+                                    stats: SlotStats::default(),
+                                    error: Some(format!("engine init failed: {e:#}")),
+                                    elapsed_s: 0.0,
+                                });
+                            }
+                        }
+                        return;
+                    }
+                };
+                engine_loop(ctx, rx, max_slots);
+            })
+            .expect("spawn engine thread");
+        Server { tx, handle: Some(handle) }
+    }
+
+    /// Enqueue a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenResponse> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Job::Generate(req, tx));
+        rx
+    }
+
+    /// Generate synchronously.
+    pub fn generate(&self, req: GenRequest) -> crate::Result<GenResponse> {
+        let rx = self.submit(req);
+        Ok(rx.recv()?)
+    }
+
+    pub fn metrics(&self) -> crate::Result<Metrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Job::Stats(tx)).ok().context("engine gone")?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Active {
+    slot: Slot,
+    resp: mpsc::Sender<GenResponse>,
+    started: Instant,
+    first_token_at: Option<Instant>,
+}
+
+fn engine_loop(mut ctx: EngineCtx, rx: mpsc::Receiver<Job>, max_slots: usize) {
+    let mut queue: Vec<(GenRequest, mpsc::Sender<GenResponse>)> = Vec::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut metrics = Metrics::default();
+    let mut next_id = 0u64;
+
+    loop {
+        // Drain the channel (block only when idle).
+        if active.is_empty() && queue.is_empty() {
+            match rx.recv() {
+                Ok(job) => match job {
+                    Job::Generate(r, tx) => queue.push((r, tx)),
+                    Job::Stats(tx) => {
+                        let _ = tx.send(metrics.clone());
+                        continue;
+                    }
+                    Job::Shutdown => return,
+                },
+                Err(_) => return,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Job::Generate(r, tx)) => queue.push((r, tx)),
+                Ok(Job::Stats(tx)) => {
+                    let _ = tx.send(metrics.clone());
+                }
+                Ok(Job::Shutdown) => return,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+
+        // Admit.
+        while active.len() < max_slots && !queue.is_empty() {
+            let (req, resp) = queue.remove(0);
+            next_id += 1;
+            let admit = (|| -> crate::Result<Slot> {
+                let mode = ctx.build_mode(&req.constraint)?;
+                let session = ctx.factory.new_session()?;
+                let prompt = crate::domino::generate::Prompt::healed(&ctx.vocab, &req.prompt);
+                let sampling = match req.temperature {
+                    Some(t) => Sampling::Temperature(t),
+                    None => Sampling::Greedy,
+                };
+                Slot::new(
+                    next_id,
+                    session,
+                    mode,
+                    ctx.vocab.clone(),
+                    &prompt,
+                    sampling,
+                    req.max_tokens,
+                    req.seed,
+                )
+            })();
+            match admit {
+                Ok(slot) => active.push(Active {
+                    slot,
+                    resp,
+                    started: Instant::now(),
+                    first_token_at: None,
+                }),
+                Err(e) => {
+                    metrics.requests_failed += 1;
+                    let _ = resp.send(GenResponse {
+                        text: String::new(),
+                        stats: SlotStats::default(),
+                        error: Some(format!("{e:#}")),
+                        elapsed_s: 0.0,
+                    });
+                }
+            }
+        }
+
+        // Step every active slot once (iteration-level scheduling).
+        for a in active.iter_mut() {
+            let before_tokens = a.slot.stats.tokens_out;
+            let before_calls = a.slot.stats.model_calls;
+            let t0 = Instant::now();
+            if let Err(e) = a.slot.step() {
+                metrics.requests_failed += 1;
+                a.slot.done = true;
+                let _ = a.resp.send(GenResponse {
+                    text: a.slot.text(),
+                    stats: a.slot.stats.clone(),
+                    error: Some(format!("{e:#}")),
+                    elapsed_s: a.started.elapsed().as_secs_f64(),
+                });
+                a.slot.stats.stopped = false;
+                continue;
+            }
+            metrics.model_time += t0.elapsed();
+            metrics.tokens_generated += (a.slot.stats.tokens_out - before_tokens) as u64;
+            metrics.model_calls += (a.slot.stats.model_calls - before_calls) as u64;
+            if a.first_token_at.is_none() && a.slot.stats.tokens_out > 0 {
+                a.first_token_at = Some(Instant::now());
+                metrics.ttft.record(a.started.elapsed().as_secs_f64());
+            }
+        }
+
+        // Complete.
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].slot.done {
+                let a = active.swap_remove(i);
+                let elapsed = a.started.elapsed().as_secs_f64();
+                metrics.requests_completed += 1;
+                metrics.interventions += a.slot.stats.interventions as u64;
+                metrics.masks_computed += a.slot.stats.masks_computed as u64;
+                metrics.spec_proposed += a.slot.stats.spec_proposed as u64;
+                metrics.spec_accepted += a.slot.stats.spec_accepted as u64;
+                if elapsed > 0.0 {
+                    metrics.req_tps.record(a.slot.stats.tokens_out as f64 / elapsed);
+                }
+                let _ = a.resp.send(GenResponse {
+                    text: a.slot.text(),
+                    stats: a.slot.stats.clone(),
+                    error: None,
+                    elapsed_s: elapsed,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}

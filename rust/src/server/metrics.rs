@@ -1,0 +1,118 @@
+//! Serving metrics: counters + latency/throughput summaries.
+
+use std::time::Duration;
+
+/// A streaming summary (count/mean/min/max/p50-ish via reservoir).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn record(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        // Simple capped reservoir for percentiles.
+        if self.samples.len() < 4096 {
+            self.samples.push(v);
+        } else {
+            let i = (self.count % 4096) as usize;
+            self.samples[i] = v;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+}
+
+/// Aggregate serving metrics (owned by the engine thread).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub requests_failed: u64,
+    pub tokens_generated: u64,
+    pub model_calls: u64,
+    pub interventions: u64,
+    pub masks_computed: u64,
+    pub spec_proposed: u64,
+    pub spec_accepted: u64,
+    /// Time to first token, seconds.
+    pub ttft: Summary,
+    /// Per-request tokens/second.
+    pub req_tps: Summary,
+    /// Mask computation time, microseconds.
+    pub mask_us: Summary,
+    /// Engine wall time spent in model calls, seconds.
+    pub model_time: Duration,
+}
+
+impl Metrics {
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} ok / {} failed | tokens: {} | model calls: {} | \
+             interventions: {} | masks: {} | spec: {}/{} accepted | \
+             ttft p50 {:.1} ms | req tps mean {:.1}",
+            self.requests_completed,
+            self.requests_failed,
+            self.tokens_generated,
+            self.model_calls,
+            self.interventions,
+            self.masks_computed,
+            self.spec_accepted,
+            self.spec_proposed,
+            self.ttft.percentile(0.5) * 1e3,
+            self.req_tps.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::default();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.percentile(0.5), 3.0);
+        assert_eq!(s.percentile(1.0), 5.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = Metrics::default();
+        assert!(m.report().contains("requests"));
+    }
+}

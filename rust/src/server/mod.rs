@@ -1,0 +1,33 @@
+//! Serving layer: request router + dynamic batcher over the DOMINO engine.
+//!
+//! Architecture (vLLM-router-like, adapted to thread-pinned PJRT state —
+//! the `xla` crate's handles are `Rc`-based, so **all** model state lives
+//! on one *engine thread*):
+//!
+//! ```text
+//!  clients ──TCP/JSONL──▶ router threads ──mpsc──▶ engine thread
+//!                                                   │  slots: [S0 S1 …]
+//!                                                   │  each loop tick:
+//!                                                   │   admit new jobs
+//!                                                   │   step every slot
+//!                                                   ▼
+//!                                           response channels
+//! ```
+//!
+//! * [`engine`] — the engine loop: admission, per-slot decode stepping
+//!   (opportunistic / full-mask / speculative §3.6), completion.
+//! * [`slot`] — one in-flight request: LM session + checker + sampling
+//!   state; `step()` advances by one decode iteration (which commits
+//!   multiple tokens under speculation).
+//! * [`metrics`] — counters + latency/throughput summaries.
+//! * [`tcp`] — a JSONL-over-TCP front end (std::net, thread per
+//!   connection; the vendored crate set has no tokio).
+
+pub mod engine;
+pub mod metrics;
+pub mod slot;
+pub mod tcp;
+
+pub use engine::{EngineCtx, GenRequest, GenResponse, Server};
+pub use metrics::Metrics;
+pub use slot::DecodeMode;

@@ -1,0 +1,358 @@
+//! One in-flight request slot.
+
+use crate::domino::generate::Prompt;
+use crate::domino::{Checker, DominoDecoder, SpeculativeModel, TokenMask};
+use crate::runtime::sampler::{decode, log_prob, Sampling};
+use crate::runtime::LmSession;
+use crate::tokenizer::{Vocab, EOS_ID};
+use crate::util::Rng;
+use crate::TokenId;
+use std::sync::Arc;
+
+/// How this request is constrained/decoded.
+pub enum DecodeMode {
+    /// No constraint.
+    Unconstrained,
+    /// Any checker, opportunistic masking (check proposal, mask on
+    /// rejection).
+    Opportunistic(Box<dyn Checker>),
+    /// Any checker, full mask every step (Algorithm 1 verbatim).
+    FullMask(Box<dyn Checker>),
+    /// DOMINO with count-based speculation (§3.6). The model is shared
+    /// across requests of the same grammar (that is what makes the priors
+    /// useful).
+    Speculative { decoder: DominoDecoder, spec: Arc<std::sync::Mutex<SpeculativeModel>>, s: usize },
+}
+
+impl DecodeMode {
+    fn checker(&mut self) -> Option<&mut dyn Checker> {
+        match self {
+            DecodeMode::Unconstrained => None,
+            DecodeMode::Opportunistic(c) | DecodeMode::FullMask(c) => Some(c.as_mut()),
+            DecodeMode::Speculative { decoder, .. } => Some(decoder),
+        }
+    }
+}
+
+/// Per-slot progress/statistics (mirrors `GenResult`).
+#[derive(Clone, Debug, Default)]
+pub struct SlotStats {
+    pub tokens_out: usize,
+    pub logprob_sum: f64,
+    pub interventions: usize,
+    pub model_calls: usize,
+    pub masks_computed: usize,
+    pub spec_proposed: usize,
+    pub spec_accepted: usize,
+    pub stopped: bool,
+}
+
+/// A running request.
+pub struct Slot {
+    pub id: u64,
+    pub session: Box<dyn LmSession>,
+    pub mode: DecodeMode,
+    pub vocab: Arc<Vocab>,
+    pub sampling: Sampling,
+    pub max_tokens: usize,
+    pub rng: Rng,
+    pub out: Vec<TokenId>,
+    pub stats: SlotStats,
+    logits: Vec<f32>,
+    pub done: bool,
+    /// Output bytes produced by the healing phase (token overhang).
+    text_prefix: Vec<u8>,
+}
+
+impl Slot {
+    /// Create the slot, run the prefill and the prompt-healing phase
+    /// (§3.5: the prompt boundary is the one place healing matters).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: u64,
+        mut session: Box<dyn LmSession>,
+        mode: DecodeMode,
+        vocab: Arc<Vocab>,
+        prompt: &Prompt,
+        sampling: Sampling,
+        max_tokens: usize,
+        seed: u64,
+    ) -> crate::Result<Slot> {
+        let logits = session.append(&prompt.ids)?;
+        let mut stats = SlotStats::default();
+        stats.model_calls += 1;
+        let mut slot = Slot {
+            id,
+            session,
+            mode,
+            vocab,
+            sampling,
+            max_tokens,
+            rng: Rng::new(seed),
+            out: Vec::new(),
+            stats,
+            logits,
+            done: false,
+            text_prefix: Vec::new(),
+        };
+        slot.heal(&prompt.forced)?;
+        Ok(slot)
+    }
+
+    /// Consume the healed prompt suffix (cf. `generate::Loop::heal`).
+    fn heal(&mut self, forced: &[u8]) -> crate::Result<()> {
+        let mut forced = forced.to_vec();
+        while !forced.is_empty() {
+            let mut mask = TokenMask::none(self.vocab.len());
+            for id in 0..self.vocab.len() as crate::TokenId {
+                let b = self.vocab.token_bytes(id);
+                if b.is_empty() {
+                    continue;
+                }
+                let ok = if b.len() <= forced.len() {
+                    forced.starts_with(b)
+                } else if b.starts_with(&forced) {
+                    match self.mode.checker() {
+                        Some(c) => c.check_bytes(&b[forced.len()..]),
+                        None => true,
+                    }
+                } else {
+                    false
+                };
+                if ok {
+                    mask.allow(id);
+                }
+            }
+            anyhow::ensure!(!mask.is_empty(), "prompt healing deadlocked");
+            let mut masked = self.logits.clone();
+            mask.apply(&mut masked);
+            let t = decode(&masked, self.sampling, &mut self.rng);
+            let b = self.vocab.token_bytes(t).to_vec();
+            if b.len() <= forced.len() {
+                forced.drain(..b.len());
+            } else {
+                let overhang = b[forced.len()..].to_vec();
+                forced.clear();
+                if let Some(c) = self.mode.checker() {
+                    c.advance_bytes(&overhang)?;
+                }
+                self.out_text_prefix(&overhang);
+            }
+            self.logits = self.session.append(&[t])?;
+            self.stats.model_calls += 1;
+        }
+        Ok(())
+    }
+
+    /// Bytes produced during healing that belong to the OUTPUT (the
+    /// overhang past the prompt text). Kept separately: `out` holds whole
+    /// tokens only.
+    fn out_text_prefix(&mut self, bytes: &[u8]) {
+        self.text_prefix.extend_from_slice(bytes);
+    }
+
+    /// Pick a (possibly masked) next token from `logits` with lazy
+    /// coupling; records interventions.
+    fn choose(
+        logits: &[f32],
+        checker: Option<&mut dyn Checker>,
+        sampling: Sampling,
+        rng: &mut Rng,
+        stats: &mut SlotStats,
+        full_mask: bool,
+    ) -> Option<TokenId> {
+        let Some(checker) = checker else {
+            return Some(decode(logits, sampling, rng));
+        };
+        if full_mask {
+            let mask = checker.compute_mask();
+            stats.masks_computed += 1;
+            if mask.is_empty() {
+                return None;
+            }
+            let proposal = decode(logits, sampling, rng);
+            if mask.allowed(proposal) {
+                return Some(proposal);
+            }
+            stats.interventions += 1;
+            let mut masked = logits.to_vec();
+            mask.apply(&mut masked);
+            Some(decode(&masked, sampling, rng))
+        } else {
+            let proposal = decode(logits, sampling, rng);
+            if checker.check_token(proposal) {
+                return Some(proposal);
+            }
+            stats.interventions += 1;
+            let mask = checker.compute_mask();
+            stats.masks_computed += 1;
+            if mask.is_empty() {
+                return None;
+            }
+            let mut masked = logits.to_vec();
+            mask.apply(&mut masked);
+            Some(decode(&masked, sampling, rng))
+        }
+    }
+
+    /// Commit one chosen token (advance checker + LM).
+    fn commit(&mut self, chosen: TokenId) -> crate::Result<bool> {
+        self.stats.logprob_sum += log_prob(&self.logits, chosen);
+        if chosen == EOS_ID {
+            self.stats.stopped = true;
+            self.done = true;
+            return Ok(true);
+        }
+        if let Some(c) = self.mode.checker() {
+            c.advance(chosen)?;
+        }
+        self.out.push(chosen);
+        self.stats.tokens_out += 1;
+        self.logits = self.session.append(&[chosen])?;
+        self.stats.model_calls += 1;
+        if self.out.len() >= self.max_tokens {
+            self.done = true;
+        }
+        Ok(self.done)
+    }
+
+    /// One decode iteration. Under speculation this may commit several
+    /// tokens (one chunked verify); otherwise exactly one.
+    pub fn step(&mut self) -> crate::Result<()> {
+        if self.done {
+            return Ok(());
+        }
+        // Speculative fast path.
+        if let DecodeMode::Speculative { decoder, spec, s } = &mut self.mode {
+            let proposal = {
+                let spec_guard = spec.lock().expect("spec lock");
+                spec_guard.propose(decoder, *s)
+            };
+            if !proposal.is_empty() {
+                self.stats.spec_proposed += proposal.len();
+                let rows = self.session.append_scored(&proposal)?;
+                self.stats.model_calls += 1;
+                let mut accepted = 0;
+                for (i, &p) in proposal.iter().enumerate() {
+                    let choice = decode(&self.logits, self.sampling, &mut self.rng);
+                    let choice = if decoder.check_token(choice) {
+                        choice
+                    } else {
+                        self.stats.interventions += 1;
+                        let mask = decoder.compute_mask();
+                        self.stats.masks_computed += 1;
+                        if mask.is_empty() {
+                            break;
+                        }
+                        let mut masked = self.logits.clone();
+                        mask.apply(&mut masked);
+                        decode(&masked, self.sampling, &mut self.rng)
+                    };
+                    if choice == p {
+                        self.stats.logprob_sum += log_prob(&self.logits, p);
+                        {
+                            let mut spec_guard = spec.lock().expect("spec lock");
+                            if let Some(key) = decoder.state_key() {
+                                spec_guard.observe(key, p);
+                            }
+                        }
+                        decoder.advance(p)?;
+                        self.out.push(p);
+                        self.stats.tokens_out += 1;
+                        self.stats.spec_accepted += 1;
+                        accepted += 1;
+                        self.logits = rows[i].clone();
+                        if self.out.len() >= self.max_tokens {
+                            self.session.rollback(proposal.len() - accepted)?;
+                            self.done = true;
+                            return Ok(());
+                        }
+                    } else {
+                        self.session.rollback(proposal.len() - accepted)?;
+                        self.stats.logprob_sum += log_prob(&self.logits, choice);
+                        if choice == EOS_ID {
+                            self.stats.stopped = true;
+                            self.done = true;
+                            return Ok(());
+                        }
+                        {
+                            let mut spec_guard = spec.lock().expect("spec lock");
+                            if let Some(key) = decoder.state_key() {
+                                spec_guard.observe(key, choice);
+                            }
+                        }
+                        decoder.advance(choice)?;
+                        self.out.push(choice);
+                        self.stats.tokens_out += 1;
+                        self.logits = self.session.append(&[choice])?;
+                        self.stats.model_calls += 1;
+                        if self.out.len() >= self.max_tokens {
+                            self.done = true;
+                        }
+                        return Ok(());
+                    }
+                }
+                return Ok(());
+            }
+            // No confident proposal: fall through to a plain step, and
+            // teach the count model what the LLM chose.
+            let chosen = {
+                let proposal = decode(&self.logits, self.sampling, &mut self.rng);
+                if decoder.check_token(proposal) {
+                    proposal
+                } else {
+                    self.stats.interventions += 1;
+                    let mask = decoder.compute_mask();
+                    self.stats.masks_computed += 1;
+                    if mask.is_empty() {
+                        self.done = true;
+                        return Ok(());
+                    }
+                    let mut masked = self.logits.clone();
+                    mask.apply(&mut masked);
+                    decode(&masked, self.sampling, &mut self.rng)
+                }
+            };
+            {
+                let mut spec_guard = spec.lock().expect("spec lock");
+                if let Some(key) = decoder.state_key() {
+                    spec_guard.observe(key, chosen);
+                }
+            }
+            self.commit(chosen)?;
+            return Ok(());
+        }
+
+        // Plain modes.
+        let full_mask = matches!(self.mode, DecodeMode::FullMask(_));
+        let chosen = Self::choose(
+            &self.logits.clone(),
+            self.mode.checker(),
+            self.sampling,
+            &mut self.rng,
+            &mut self.stats,
+            full_mask,
+        );
+        match chosen {
+            Some(t) => {
+                self.commit(t)?;
+            }
+            None => {
+                self.done = true; // dead end
+            }
+        }
+        Ok(())
+    }
+
+    /// The decoded output text (healing overhang + committed tokens).
+    pub fn text(&self) -> String {
+        let mut bytes = self.text_prefix.clone();
+        bytes.extend_from_slice(&self.vocab.decode(&self.out));
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Mask utility for tests: current full mask if constrained.
+    pub fn current_mask(&mut self) -> Option<TokenMask> {
+        self.mode.checker().map(|c| c.compute_mask())
+    }
+}

@@ -1,0 +1,143 @@
+//! JSONL-over-TCP front end.
+//!
+//! Protocol: one JSON object per line.
+//!
+//! Request:
+//! ```json
+//! {"prompt": "...", "grammar": "json", "method": "domino",
+//!  "k": null, "speculative": 8, "max_tokens": 128,
+//!  "temperature": 1.0, "seed": 7}
+//! ```
+//! `method`: "unconstrained" | "domino" | "domino-full" | "online".
+//!
+//! Response:
+//! ```json
+//! {"text": "...", "tokens": 42, "interventions": 0, "model_calls": 40,
+//!  "elapsed_s": 0.8, "error": null}
+//! ```
+
+use super::engine::{Constraint, GenRequest, GenResponse, Server};
+use crate::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> crate::Result<GenRequest> {
+    let v = Json::parse(line)?;
+    let prompt = v.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string();
+    let grammar = v.get("grammar").and_then(|g| g.as_str()).map(|s| s.to_string());
+    let method = v.get("method").and_then(|m| m.as_str()).unwrap_or("domino");
+    let k = v.get("k").and_then(|k| k.as_f64()).map(|k| k as u32);
+    let speculative = v.get("speculative").and_then(|s| s.as_f64()).map(|s| s as usize);
+    let constraint = match (method, grammar) {
+        ("unconstrained", _) | (_, None) => Constraint::None,
+        ("online", Some(g)) => Constraint::Online { grammar: g },
+        ("domino-full", Some(g)) => {
+            Constraint::Domino { grammar: g, k, speculative: None, full_mask: true }
+        }
+        (_, Some(g)) => Constraint::Domino { grammar: g, k, speculative, full_mask: false },
+    };
+    Ok(GenRequest {
+        prompt,
+        constraint,
+        max_tokens: v.get("max_tokens").and_then(|m| m.as_f64()).unwrap_or(128.0) as usize,
+        temperature: v.get("temperature").and_then(|t| t.as_f64()).map(|t| t as f32),
+        seed: v.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64,
+    })
+}
+
+/// Format one response line.
+pub fn format_response(resp: &GenResponse) -> String {
+    let mut obj = vec![
+        ("text", Json::str(resp.text.clone())),
+        ("tokens", Json::Num(resp.stats.tokens_out as f64)),
+        ("interventions", Json::Num(resp.stats.interventions as f64)),
+        ("model_calls", Json::Num(resp.stats.model_calls as f64)),
+        ("spec_accepted", Json::Num(resp.stats.spec_accepted as f64)),
+        ("stopped", Json::Bool(resp.stats.stopped)),
+        ("elapsed_s", Json::Num(resp.elapsed_s)),
+    ];
+    match &resp.error {
+        Some(e) => obj.push(("error", Json::str(e.clone()))),
+        None => obj.push(("error", Json::Null)),
+    }
+    Json::obj(obj).to_string()
+}
+
+fn handle_conn(stream: TcpStream, server: Arc<Server>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut out = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Ok(req) => match server.generate(req) {
+                Ok(resp) => format_response(&resp),
+                Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
+            },
+            Err(e) => Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))])
+                .to_string(),
+        };
+        if writeln!(out, "{reply}").is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7761").
+pub fn serve(server: Server, addr: &str) -> crate::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("domino: serving on {addr}");
+    let server = Arc::new(server);
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let server = server.clone();
+        std::thread::spawn(move || handle_conn(stream, server));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::engine::Constraint;
+
+    #[test]
+    fn parses_request_variants() {
+        let r = parse_request(r#"{"prompt": "hi", "grammar": "json", "speculative": 8}"#).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(
+            r.constraint,
+            Constraint::Domino {
+                grammar: "json".into(),
+                k: None,
+                speculative: Some(8),
+                full_mask: false
+            }
+        );
+        let r = parse_request(r#"{"prompt": "x", "method": "unconstrained"}"#).unwrap();
+        assert_eq!(r.constraint, Constraint::None);
+        let r = parse_request(r#"{"prompt": "x", "grammar": "c", "method": "online"}"#).unwrap();
+        assert_eq!(r.constraint, Constraint::Online { grammar: "c".into() });
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn formats_response() {
+        let resp = GenResponse {
+            text: "{\"a\": 1}".into(),
+            stats: Default::default(),
+            error: None,
+            elapsed_s: 0.25,
+        };
+        let line = format_response(&resp);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "{\"a\": 1}");
+        assert_eq!(v.get("error"), Some(&Json::Null));
+    }
+}

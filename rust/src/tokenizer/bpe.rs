@@ -1,0 +1,127 @@
+//! BPE trainer (greedy pair-frequency merging).
+//!
+//! Used by tests and benches to build deterministic synthetic vocabularies;
+//! the serving vocabulary is trained by `python/compile/train.py` with the
+//! same algorithm and loaded via [`super::Vocab::load`].
+
+use super::vocab::{Vocab, NUM_SPECIAL};
+use crate::TokenId;
+use std::collections::HashMap;
+
+/// Train a byte-level BPE on `corpus`, producing `vocab_size` total tokens
+/// (specials + bytes + merges). Deterministic: ties broken by pair id.
+/// Merged tokens are capped at 10 bytes (mirrors `data.py`: unbounded BPE
+/// on a repetitive corpus merges boundary-spanning mega-tokens).
+pub fn train(corpus: &[u8], vocab_size: usize) -> Vocab {
+    const MAX_TOKEN_LEN: usize = 10;
+    let mut vocab = Vocab::byte_level();
+    let mut ids: Vec<TokenId> =
+        corpus.iter().map(|&b| (b as usize + NUM_SPECIAL) as TokenId).collect();
+
+    while vocab.len() < vocab_size {
+        // Count adjacent pairs.
+        let mut counts: HashMap<(TokenId, TokenId), usize> = HashMap::new();
+        for w in ids.windows(2) {
+            if vocab.token_bytes(w[0]).len() + vocab.token_bytes(w[1]).len() > MAX_TOKEN_LEN {
+                continue;
+            }
+            *counts.entry((w[0], w[1])).or_insert(0) += 1;
+        }
+        // Most frequent pair; deterministic tie-break.
+        let Some((&pair, &count)) = counts
+            .iter()
+            .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+        else {
+            break;
+        };
+        if count < 2 {
+            break; // nothing worth merging
+        }
+        let merged = vocab.push_merge(pair.0, pair.1).expect("valid merge");
+        // Apply the merge to the working sequence.
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(merged);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        ids = out;
+    }
+    vocab
+}
+
+/// A deterministic synthetic vocabulary trained on JSON-ish text — used by
+/// unit tests and benches that need a realistic token inventory without the
+/// build-time artifacts.
+pub fn synthetic_json_vocab(vocab_size: usize) -> Vocab {
+    let mut corpus = String::new();
+    let names = ["John Doe", "Jane Roe", "Alice Li", "Bob Iger", "Eve Fox"];
+    let jobs = ["engineer", "doctor", "teacher", "artist", "pilot"];
+    for i in 0..200 {
+        let name = names[i % names.len()];
+        let job = jobs[(i / 5) % jobs.len()];
+        corpus.push_str(&format!(
+            "{{\n  \"name\": \"{name}\",\n  \"age\": {},\n  \"occupation\": \"{job}\",\n  \"score\": {}\n}}\n",
+            20 + (i % 50),
+            i * 3 % 100,
+        ));
+        corpus.push_str(&format!(
+            "{{\"thoughts\": [{{\"step\": \"add {i}\", \"calculation\": \"{i} + {}\", \"result\": {}}}], \"answer\": {}}}\n",
+            i + 1,
+            2 * i + 1,
+            2 * i + 1,
+        ));
+    }
+    train(corpus.as_bytes(), vocab_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trains_and_roundtrips() {
+        let corpus = b"the cat sat on the mat. the cat sat on the hat.".repeat(10);
+        let v = train(&corpus, 300);
+        assert!(v.len() > NUM_SPECIAL + 256, "learned at least one merge");
+        assert!(v.len() <= 300);
+        let ids = v.encode(&corpus);
+        assert_eq!(v.decode(&ids), corpus);
+        // Compression happened.
+        assert!(ids.len() < corpus.len());
+    }
+
+    #[test]
+    fn deterministic() {
+        let corpus = b"abcabcabd".repeat(20);
+        let a = train(&corpus, 280);
+        let b = train(&corpus, 280);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.encode(b"abcabd"), b.encode(b"abcabd"));
+    }
+
+    #[test]
+    fn synthetic_vocab_has_structural_tokens() {
+        let v = synthetic_json_vocab(512);
+        assert_eq!(v.len(), 512);
+        // Multi-byte structural tokens must exist — these are exactly the
+        // bridge tokens DOMINO's alignment is about (e.g. `":` or `",`).
+        let has_bridge = (0..v.len() as TokenId).any(|id| {
+            let b = v.token_bytes(id);
+            b.len() >= 2 && b.iter().any(|&c| c == b'"') && b.iter().any(|&c| c == b':' || c == b',')
+        });
+        assert!(has_bridge, "expected a JSON bridge token in the synthetic vocab");
+    }
+
+    #[test]
+    fn stops_when_no_repeats() {
+        let v = train(b"abcdefg", 10_000);
+        // No pair occurs twice → no merges.
+        assert_eq!(v.len(), NUM_SPECIAL + 256);
+    }
+}

@@ -1,0 +1,20 @@
+//! Byte-level BPE tokenizer substrate.
+//!
+//! The LLM vocabulary is what DOMINO aligns grammars against, so the
+//! tokenizer is a first-class substrate: a byte-level BPE with
+//!
+//! * a trainer ([`bpe::train`]) used by tests/benches to build synthetic
+//!   vocabularies of any size,
+//! * a merge-rank encoder and byte-concat decoder,
+//! * JSON (de)serialization of the exact format `python/compile/aot.py`
+//!   emits (`artifacts/tokenizer.json`) — python trains the serving
+//!   tokenizer at build time, rust loads it at serve time.
+//!
+//! Token ids: `0 = EOS`, `1 = BOS`, `2 = PAD`, `3..259 = raw bytes`,
+//! `259.. = merges`.
+
+pub mod bpe;
+pub mod vocab;
+
+pub use bpe::train;
+pub use vocab::{Vocab, EOS_ID, BOS_ID, PAD_ID, NUM_SPECIAL};

@@ -1,0 +1,226 @@
+//! Vocabulary: token id ↔ byte-string mapping + BPE merge-rank encoder.
+
+use crate::util::Json;
+use crate::TokenId;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub const EOS_ID: TokenId = 0;
+pub const BOS_ID: TokenId = 1;
+pub const PAD_ID: TokenId = 2;
+/// Number of special tokens preceding the 256 byte tokens.
+pub const NUM_SPECIAL: usize = 3;
+
+// Serialized form (`artifacts/tokenizer.json`), shared with python:
+// `{"merges": [[a, b], ...]}` — merge pairs in rank order, elements are
+// token ids.
+
+/// A byte-level BPE vocabulary.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    /// Byte string of every token. Specials have empty byte strings.
+    tokens: Vec<Vec<u8>>,
+    /// Merge pair → resulting token id, with rank = id (lower id = earlier
+    /// merge = higher priority).
+    merge_map: HashMap<(TokenId, TokenId), TokenId>,
+    merges: Vec<(TokenId, TokenId)>,
+}
+
+impl Vocab {
+    /// Base vocabulary: specials + 256 byte tokens, no merges.
+    pub fn byte_level() -> Vocab {
+        let mut tokens = vec![Vec::new(); NUM_SPECIAL];
+        for b in 0u16..256 {
+            tokens.push(vec![b as u8]);
+        }
+        Vocab { tokens, merge_map: HashMap::new(), merges: Vec::new() }
+    }
+
+    /// Rebuild from a merge list (the serialized form).
+    pub fn from_merges(merges: Vec<(TokenId, TokenId)>) -> crate::Result<Vocab> {
+        let mut v = Vocab::byte_level();
+        for (a, b) in merges {
+            v.push_merge(a, b)?;
+        }
+        Ok(v)
+    }
+
+    pub(crate) fn push_merge(&mut self, a: TokenId, b: TokenId) -> crate::Result<TokenId> {
+        let (au, bu) = (a as usize, b as usize);
+        if au >= self.tokens.len() || bu >= self.tokens.len() {
+            bail!("merge references unknown token ({a}, {b})");
+        }
+        if au < NUM_SPECIAL || bu < NUM_SPECIAL {
+            bail!("merge references special token");
+        }
+        let mut bytes = self.tokens[au].clone();
+        bytes.extend_from_slice(&self.tokens[bu]);
+        let id = self.tokens.len() as TokenId;
+        self.tokens.push(bytes);
+        self.merge_map.insert((a, b), id);
+        self.merges.push((a, b));
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Byte string of a token (empty for specials).
+    pub fn token_bytes(&self, id: TokenId) -> &[u8] {
+        &self.tokens[id as usize]
+    }
+
+    /// Lossy display form of a token.
+    pub fn token_str(&self, id: TokenId) -> String {
+        match id {
+            EOS_ID => "<eos>".to_string(),
+            BOS_ID => "<bos>".to_string(),
+            PAD_ID => "<pad>".to_string(),
+            _ => String::from_utf8_lossy(self.token_bytes(id)).into_owned(),
+        }
+    }
+
+    /// BPE-encode a byte string: start from byte tokens, repeatedly apply
+    /// the highest-priority (lowest-id) applicable merge.
+    pub fn encode(&self, input: &[u8]) -> Vec<TokenId> {
+        let mut ids: Vec<TokenId> =
+            input.iter().map(|&b| (b as usize + NUM_SPECIAL) as TokenId).collect();
+        if ids.len() < 2 {
+            return ids;
+        }
+        loop {
+            // Find the applicable merge with the lowest resulting id.
+            let mut best: Option<(TokenId, usize)> = None;
+            for i in 0..ids.len() - 1 {
+                if let Some(&m) = self.merge_map.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(bm, _)| m < bm) {
+                        best = Some((m, i));
+                    }
+                }
+            }
+            let Some((merged, _)) = best else { break };
+            // Apply this merge at every applicable position (left to right).
+            let pair = self.merges[(merged as usize) - NUM_SPECIAL - 256];
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(merged);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+            if ids.len() < 2 {
+                break;
+            }
+        }
+        ids
+    }
+
+    /// Decode token ids back to bytes (specials decode to nothing).
+    pub fn decode(&self, ids: &[TokenId]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            out.extend_from_slice(self.token_bytes(id));
+        }
+        out
+    }
+
+    pub fn decode_str(&self, ids: &[TokenId]) -> String {
+        String::from_utf8_lossy(&self.decode(ids)).into_owned()
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        let merges = Json::Arr(
+            self.merges
+                .iter()
+                .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                .collect(),
+        );
+        let file = Json::obj(vec![("merges", merges)]);
+        std::fs::write(path, file.to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Vocab> {
+        let data = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let file = Json::parse(&data)?;
+        let merges = file
+            .get("merges")
+            .and_then(|m| m.as_arr())
+            .context("tokenizer.json: missing `merges`")?;
+        let pairs = merges
+            .iter()
+            .map(|p| {
+                let p = p.as_arr().context("merge entry must be a pair")?;
+                if p.len() != 2 {
+                    bail!("merge entry must have 2 elements");
+                }
+                let a = p[0].as_f64().context("merge id")? as TokenId;
+                let b = p[1].as_f64().context("merge id")? as TokenId;
+                Ok((a, b))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Vocab::from_merges(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let v = Vocab::byte_level();
+        assert_eq!(v.len(), NUM_SPECIAL + 256);
+        let ids = v.encode(b"hello \xff");
+        assert_eq!(ids.len(), 7);
+        assert_eq!(v.decode(&ids), b"hello \xff");
+    }
+
+    #[test]
+    fn merges_apply_in_rank_order() {
+        let mut v = Vocab::byte_level();
+        let h = (b'h' as usize + NUM_SPECIAL) as TokenId;
+        let e = (b'e' as usize + NUM_SPECIAL) as TokenId;
+        let l = (b'l' as usize + NUM_SPECIAL) as TokenId;
+        let he = v.push_merge(h, e).unwrap();
+        let ll = v.push_merge(l, l).unwrap();
+        let hell = v.push_merge(he, ll).unwrap();
+        let ids = v.encode(b"hello");
+        let o = (b'o' as usize + NUM_SPECIAL) as TokenId;
+        assert_eq!(ids, vec![hell, o]);
+        assert_eq!(v.decode(&ids), b"hello");
+        assert_eq!(v.token_bytes(hell), b"hell");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut v = Vocab::byte_level();
+        let a = (b'a' as usize + NUM_SPECIAL) as TokenId;
+        v.push_merge(a, a).unwrap();
+        let p = std::env::temp_dir().join(format!("domino_tok_test_{}.json", std::process::id()));
+        v.save(&p).unwrap();
+        let v2 = Vocab::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(v2.len(), v.len());
+        assert_eq!(v2.encode(b"aaaa"), v.encode(b"aaaa"));
+    }
+
+    #[test]
+    fn rejects_bad_merges() {
+        assert!(Vocab::from_merges(vec![(0, 5)]).is_err()); // special
+        assert!(Vocab::from_merges(vec![(9999, 5)]).is_err()); // unknown
+    }
+}

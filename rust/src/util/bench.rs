@@ -1,0 +1,106 @@
+//! Bench-table infrastructure (the vendored crate set has no criterion).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` main that measures its
+//! workloads and prints a markdown table mirroring the corresponding table
+//! or figure of the paper. [`Table`] handles alignment; [`time_it`] does
+//! warmup + repeated timing.
+
+use std::time::{Duration, Instant};
+
+/// Markdown-ish aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Measurement result.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: u32,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Warm up then time `f` for `iters` iterations.
+pub fn time_it(warmup: u32, iters: u32, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut min = Duration::MAX;
+    let mut max = Duration::ZERO;
+    let mut total = Duration::ZERO;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        min = min.min(dt);
+        max = max.max(dt);
+        total += dt;
+    }
+    Timing { mean: total / iters.max(1), min, max, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.min <= t.mean && t.mean <= t.max.max(t.mean));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["grammar", "throughput"]);
+        t.row(&["json".into(), "1.77x".into()]);
+        t.print();
+    }
+}

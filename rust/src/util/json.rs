@@ -1,0 +1,350 @@
+//! Minimal JSON value type + parser + serializer.
+//!
+//! Serves three roles: (a) the serialization format for
+//! `artifacts/tokenizer.json` / `model_config.json`, (b) the *semantic
+//! oracle* the eval harness uses to check well-formedness and extract
+//! answers from generated output (independent of the JSON *grammar* used
+//! for constraining), (c) config/CLI plumbing.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(src: &str) -> crate::Result<Json> {
+        let bytes = src.as_bytes();
+        let mut p = P { b: bytes, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != bytes.len() {
+            bail!("json: trailing input at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Parse a JSON value from the *start* of `src`, ignoring trailing text
+    /// (what an unconstrained LLM emits after the closing brace). Returns
+    /// the value and the number of bytes consumed.
+    pub fn parse_prefix(src: &str) -> crate::Result<(Json, usize)> {
+        let mut p = P { b: src.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        Ok((v, p.i))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> crate::Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("json: expected `{}` at byte {}", c as char, self.i)
+        }
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("json: unexpected {:?} at byte {}", other.map(|c| c as char), self.i),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> crate::Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("json: bad literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> crate::Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                other => bail!("json: expected , or }} got {:?} at byte {}", other.map(|c| c as char), self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> crate::Result<Json> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            self.ws();
+            a.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                other => bail!("json: expected , or ] got {:?} at byte {}", other.map(|c| c as char), self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("json: unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let e = self.peek().context("json: dangling escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("json: truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("json: bad escape \\{}", other as char),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 character (bytes copied verbatim).
+                    let start = self.i;
+                    self.i += 1;
+                    while self.i < self.b.len() && (self.b[self.i] & 0xc0) == 0x80 {
+                        self.i += 1;
+                    }
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i]).unwrap_or("\u{fffd}"));
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self.peek().map_or(false, |c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while self.peek().map_or(false, |c| c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            while self.peek().map_or(false, |c| c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(text.parse().with_context(|| format!("json: bad number `{text}`"))?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"answer": 42, "thoughts": [{"step": "a\nb", "result": -1.5}], "ok": true, "x": null}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("answer").unwrap().as_f64(), Some(42.0));
+        let reparsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, reparsed);
+    }
+
+    #[test]
+    fn prefix_parse_ignores_trailing() {
+        let (v, n) = Json::parse_prefix("{\"a\": 1} and then the model rambles").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(&"{\"a\": 1} and then the model rambles"[..n], "{\"a\": 1}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["{", "{\"a\" 1}", "[1,]", "tru", "\"unterminated", "{\"a\":1}x"] {
+            assert!(Json::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unicode_and_escapes() {
+        let v = Json::parse(r#""café ✓""#).unwrap();
+        assert_eq!(v.as_str(), Some("café ✓"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline-build utility substrate: JSON, PRNG, property-test driver,
+//! bench table printer. (The image's vendored crate set has no serde_json /
+//! rand / proptest / criterion — see Cargo.toml.)
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

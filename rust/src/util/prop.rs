@@ -1,0 +1,42 @@
+//! Tiny property-test driver (the vendored crate set has no proptest).
+//!
+//! Runs a closure over many seeded cases; on failure reports the seed so
+//! the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` seeded RNGs. Panics with the failing seed.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xD0111_u64.wrapping_mul(seed + 1));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.range(-1000, 1000);
+            let b = rng.range(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed at seed 0")]
+    fn reports_failing_seed() {
+        check("always-fails", 5, |_| panic!("boom"));
+    }
+}

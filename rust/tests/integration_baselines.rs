@@ -1,0 +1,179 @@
+//! Baseline integration: online checker equivalence during generation,
+//! template programs end-to-end (± healing, ± WS), Fig. 1/2 phenomena.
+
+use domino::baselines::template::{
+    conll_program, gsm8k_program, person_program, rpg_program, TemplateRuntime,
+};
+use domino::baselines::OnlineChecker;
+use domino::domino::decoder::{Engine, Lookahead};
+use domino::domino::{generate, Checker, DominoDecoder, GenConfig, MaskMode};
+use domino::grammar::builtin;
+use domino::runtime::mock::{json_mock, MockLm};
+use domino::runtime::sampler::Sampling;
+use domino::util::{Json, Rng};
+
+#[test]
+fn online_and_domino_generate_identically() {
+    // Same grammar, same model, same seed → identical outputs (both are
+    // minimally invasive); they differ only in cost.
+    let (vocab, model) = json_mock(512);
+    let engine = Engine::compile(builtin::json(), vocab.clone()).unwrap();
+    let cfg = GenConfig { max_tokens: 48, sampling: Sampling::Temperature(0.8), mode: MaskMode::FullMask };
+
+    let mut lm = MockLm::new(model.clone());
+    let mut dom = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+    let a = generate(&mut lm, &mut dom, &vocab, &domino::domino::generate::Prompt::default(), &cfg, &mut Rng::new(11)).unwrap();
+
+    let mut lm = MockLm::new(model);
+    let mut online = OnlineChecker::new(engine);
+    let b = generate(&mut lm, &mut online, &vocab, &domino::domino::generate::Prompt::default(), &cfg, &mut Rng::new(11)).unwrap();
+
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.interventions, b.interventions);
+}
+
+#[test]
+fn template_programs_produce_parseable_output() {
+    let (vocab, model) = json_mock(512);
+    for (name, program) in [
+        ("person", person_program()),
+        ("rpg", rpg_program()),
+        ("gsm8k", gsm8k_program(1)),
+        ("conll", conll_program(2)),
+    ] {
+        for healing in [false, true] {
+            let rt = TemplateRuntime::compile(program.clone(), vocab.clone(), healing).unwrap();
+            let mut lm = MockLm::new(model.clone());
+            let r = rt
+                .run(&mut lm, &[], Sampling::Greedy, &mut Rng::new(5))
+                .unwrap_or_else(|e| panic!("{name} healing={healing}: {e:#}"));
+            Json::parse(&r.text)
+                .unwrap_or_else(|e| panic!("{name} healing={healing}: {e:#}\n{}", r.text));
+            assert!(r.model_calls < r.tokens.len() + 2, "{name}: template must save calls");
+        }
+    }
+}
+
+#[test]
+fn ws_flexible_uses_more_model_calls() {
+    // App. A: the WS variant generates whitespace with the model → more
+    // calls, fewer forced tokens (that is why Table 2 shows ~0.5-0.8×
+    // throughput for GUIDANCE WS).
+    let (vocab, model) = json_mock(512);
+    let fixed = TemplateRuntime::compile(rpg_program(), vocab.clone(), true).unwrap();
+    let ws = TemplateRuntime::compile(rpg_program().ws_flexible(), vocab.clone(), true).unwrap();
+
+    let mut lm = MockLm::new(model.clone());
+    let a = fixed.run(&mut lm, &[], Sampling::Greedy, &mut Rng::new(1)).unwrap();
+    let mut lm = MockLm::new(model);
+    let b = ws.run(&mut lm, &[], Sampling::Greedy, &mut Rng::new(1)).unwrap();
+
+    assert!(b.model_calls > a.model_calls, "{} vs {}", b.model_calls, a.model_calls);
+    // The WS holes are generated, not forced.
+    assert!(b.gen_tokens > a.gen_tokens, "{} vs {}", b.gen_tokens, a.gen_tokens);
+}
+
+#[test]
+fn fig1_greedy_constraining_distorts() {
+    // The Fig. 1 phenomenon end-to-end: k=0 output differs from
+    // unconstrained/k=∞ output and the model likes it less (perplexity).
+    let (vocab, model) = json_mock(512);
+    let engine = Engine::compile(builtin::json(), vocab.clone()).unwrap();
+    let cfg = GenConfig { max_tokens: 48, sampling: Sampling::Greedy, mode: MaskMode::FullMask };
+
+    let mut lm = MockLm::new(model.clone());
+    let mut d_inf = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+    let r_inf = generate(&mut lm, &mut d_inf, &vocab, &domino::domino::generate::Prompt::default(), &cfg, &mut Rng::new(7)).unwrap();
+
+    let mut lm = MockLm::new(model);
+    let mut d0 = DominoDecoder::new(engine, Lookahead::K(0));
+    let r0 = generate(&mut lm, &mut d0, &vocab, &domino::domino::generate::Prompt::default(), &cfg, &mut Rng::new(7)).unwrap();
+
+    assert!(r0.interventions > 0);
+    assert!(r0.perplexity() > r_inf.perplexity(), "{} vs {}", r0.perplexity(), r_inf.perplexity());
+}
+
+#[test]
+fn fig2_template_output_has_higher_perplexity_than_natural() {
+    // Fig. 2: the template-forced tokenization scores worse under the
+    // model than the model-preferred (retokenized) form of the same text.
+    let (vocab, model) = json_mock(512);
+    let rt = TemplateRuntime::compile(person_program(), vocab.clone(), false).unwrap();
+    let mut lm = MockLm::new(model.clone());
+    let r = rt.run(&mut lm, &[], Sampling::Greedy, &mut Rng::new(3)).unwrap();
+
+    // Naturalize the same text (Alg. 3): the model-preferred tokenization
+    // must DIFFER from the template's externally-forced one — that
+    // divergence is precisely template-induced misalignment (the paper
+    // does not claim greedy retokenization is globally optimal, only that
+    // it reveals the model's preference).
+    let mut lm2 = MockLm::new(model);
+    let nat = domino::eval::retokenize::retokenize(&mut lm2, &vocab, &[], r.text.as_bytes()).unwrap();
+    assert_eq!(vocab.decode(&nat.tokens), r.text.as_bytes(), "same text");
+    assert_ne!(nat.tokens, r.tokens, "tokenizations must diverge (misalignment)");
+}
+
+#[test]
+fn online_checker_agrees_with_domino_across_grammars() {
+    let (vocab, model) = json_mock(512);
+    for name in ["gsm8k", "xml"] {
+        let engine = Engine::compile(builtin::by_name(name).unwrap(), vocab.clone()).unwrap();
+        let mut online = OnlineChecker::new(engine.clone());
+        let mut dom = DominoDecoder::new(engine, Lookahead::Infinite);
+        // Drive both through whatever the model emits under DOMINO.
+        let cfg = GenConfig { max_tokens: 24, sampling: Sampling::Greedy, mode: MaskMode::FullMask };
+        let mut lm = MockLm::new(model.clone());
+        let r = generate(&mut lm, &mut dom, &vocab, &domino::domino::generate::Prompt::default(), &cfg, &mut Rng::new(1)).unwrap();
+        let mut dom2 = DominoDecoder::new(
+            Engine::compile(builtin::by_name(name).unwrap(), vocab.clone()).unwrap(),
+            Lookahead::Infinite,
+        );
+        for &t in &r.tokens {
+            assert_eq!(online.compute_mask(), dom2.compute_mask(), "{name} @ {t}");
+            online.advance(t).unwrap();
+            dom2.advance(t).unwrap();
+        }
+    }
+}
+
+#[test]
+fn template_as_grammar_runs_under_domino() {
+    // §3.5: execute a GUIDANCE program via DOMINO — the template compiles
+    // to a CFG and the decoder enforces it minimally invasively.
+    let (vocab, model) = json_mock(512);
+    let grammar = person_program().to_grammar().unwrap();
+    let engine = Engine::compile(grammar, vocab.clone()).unwrap();
+    let cfg = GenConfig { max_tokens: 64, sampling: Sampling::Greedy, mode: MaskMode::FullMask };
+    let mut lm = MockLm::new(model);
+    let mut dec = DominoDecoder::new(engine, Lookahead::Infinite);
+    let r = generate(
+        &mut lm,
+        &mut dec,
+        &vocab,
+        &domino::domino::generate::Prompt::default(),
+        &cfg,
+        &mut Rng::new(3),
+    )
+    .unwrap();
+    // Output satisfies the template structure AND parses as JSON.
+    let v = Json::parse(&r.text()).unwrap_or_else(|e| panic!("{e:#}: {}", r.text()));
+    assert!(v.get("name").is_some() && v.get("age").is_some() && v.get("occupation").is_some());
+    // Unlike the template executor, every token is model-chosen: the
+    // decoder can intervene, but never injects externally-tokenized text.
+    assert!(r.tokens.len() > 0);
+}
+
+#[test]
+fn template_grammar_rejects_wrong_structure() {
+    let grammar = person_program().to_grammar().unwrap();
+    let (vocab, _) = json_mock(512);
+    let engine = Engine::compile(grammar, vocab).unwrap();
+    let mut dec = DominoDecoder::new(engine, Lookahead::Infinite);
+    // The RPG field order is wrong for the person template.
+    assert!(dec.advance_bytes(b"{\"id\": 3").is_err());
+    let mut dec2 = DominoDecoder::new(
+        Engine::compile(person_program().to_grammar().unwrap(), std::sync::Arc::new(domino::tokenizer::Vocab::byte_level())).unwrap(),
+        Lookahead::Infinite,
+    );
+    dec2.advance_bytes(b"{\"name\": \"Jo").unwrap();
+}

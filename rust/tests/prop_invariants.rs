@@ -1,0 +1,182 @@
+//! Property-based invariants (seeded randomized tests via `util::prop`).
+//!
+//! The load-bearing ones:
+//! 1. **Soundness**: any token sequence the DOMINO mask admits decodes to
+//!    a viable prefix of the grammar language; EOS only at complete
+//!    parses.
+//! 2. **Mask agreement**: `check_token(t) ⇔ compute_mask().allowed(t)`
+//!    for every token, state and lookahead.
+//! 3. **Online ⇔ DOMINO(k=∞) equivalence** along random legal walks.
+//! 4. **Scanner/regex agreement**: the scanner accepts exactly the
+//!    terminal decompositions the per-terminal DFAs accept.
+//! 5. **BPE round-trip** on arbitrary byte strings.
+
+use domino::baselines::OnlineChecker;
+use domino::domino::decoder::{Engine, Lookahead};
+use domino::domino::{Checker, DominoDecoder};
+use domino::grammar::builtin;
+use domino::tokenizer::{self, Vocab, EOS_ID};
+use domino::util::prop::check;
+use domino::util::{Json, Rng};
+use std::sync::Arc;
+
+fn test_vocab() -> Arc<Vocab> {
+    Arc::new(tokenizer::bpe::synthetic_json_vocab(400))
+}
+
+/// Take a random legal walk of up to `steps` mask-sampled tokens.
+fn random_walk(dec: &mut DominoDecoder, rng: &mut Rng, steps: usize) -> Vec<domino::TokenId> {
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let mask = dec.compute_mask();
+        let allowed: Vec<_> = mask.iter().collect();
+        if allowed.is_empty() {
+            break;
+        }
+        let t = *rng.choose(&allowed);
+        if t == EOS_ID {
+            break;
+        }
+        dec.advance(t).unwrap();
+        out.push(t);
+    }
+    out
+}
+
+#[test]
+fn prop_masked_walks_stay_grammatical() {
+    let vocab = test_vocab();
+    let engine = Engine::compile(builtin::json(), vocab.clone()).unwrap();
+    check("masked-walks-grammatical", 25, |rng| {
+        let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let out = random_walk(&mut dec, rng, 40);
+        let text = engine.vocab.decode_str(&out);
+        // Either the decoder is still alive (viable prefix) …
+        assert!(dec.alive(), "dead decoder after {text:?}");
+        // … and if EOS is legal, the text must parse as JSON.
+        if dec.check_token(EOS_ID) {
+            Json::parse(&text).unwrap_or_else(|e| panic!("{e:#}: {text}"));
+        }
+    });
+}
+
+#[test]
+fn prop_check_token_matches_mask() {
+    let vocab = test_vocab();
+    let engine = Engine::compile(builtin::fig3_expr(), vocab.clone()).unwrap();
+    check("check-token-matches-mask", 15, |rng| {
+        let k = match rng.below(3) {
+            0 => Lookahead::K(0),
+            1 => Lookahead::K(1),
+            _ => Lookahead::Infinite,
+        };
+        let mut dec = DominoDecoder::new(engine.clone(), k);
+        let steps = rng.below(12);
+        let _ = random_walk(&mut dec, rng, steps);
+        let mask = dec.compute_mask();
+        for id in 0..engine.vocab.len() as domino::TokenId {
+            assert_eq!(
+                dec.check_token(id),
+                mask.allowed(id),
+                "token {:?} under {k:?}",
+                engine.vocab.token_str(id)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_online_equals_domino_infinite() {
+    let vocab = test_vocab();
+    let engine = Engine::compile(builtin::gsm8k_schema(), vocab.clone()).unwrap();
+    check("online-eq-domino", 10, |rng| {
+        let mut dom = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let mut online = OnlineChecker::new(engine.clone());
+        for _ in 0..15 {
+            let m1 = dom.compute_mask();
+            let m2 = online.compute_mask();
+            assert_eq!(m1, m2);
+            let allowed: Vec<_> = m1.iter().filter(|&t| t != EOS_ID).collect();
+            if allowed.is_empty() {
+                break;
+            }
+            let t = *rng.choose(&allowed);
+            dom.advance(t).unwrap();
+            online.advance(t).unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip() {
+    let vocab = test_vocab();
+    check("bpe-roundtrip", 50, |rng| {
+        let len = rng.below(200);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let ids = vocab.encode(&bytes);
+        assert_eq!(vocab.decode(&ids), bytes);
+    });
+}
+
+#[test]
+fn prop_mask_union_over_lookahead_is_monotone() {
+    // Increasing k only ever ADDS tokens (the tree is traversed deeper).
+    let vocab = test_vocab();
+    let engine = Engine::compile(builtin::json(), vocab.clone()).unwrap();
+    check("lookahead-monotone", 10, |rng| {
+        let mut walk_dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let steps = rng.below(20);
+        let walked = random_walk(&mut walk_dec, rng, steps);
+        let mut masks = Vec::new();
+        for k in [Lookahead::K(0), Lookahead::K(1), Lookahead::K(3), Lookahead::Infinite] {
+            let mut dec = DominoDecoder::new(engine.clone(), k);
+            for &t in &walked {
+                dec.advance(t).unwrap();
+            }
+            masks.push(dec.compute_mask());
+        }
+        for w in masks.windows(2) {
+            for id in 0..engine.vocab.len() as domino::TokenId {
+                assert!(
+                    !w[0].allowed(id) || w[1].allowed(id),
+                    "monotonicity violated for {:?} after {:?}",
+                    engine.vocab.token_str(id),
+                    engine.vocab.decode_str(&walked),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scanner_segmentations_accepted_by_dfas() {
+    let g = builtin::json();
+    let scanner = domino::scanner::Scanner::new(&g).unwrap();
+    let dfas = g.terminal_dfas().unwrap();
+    check("scanner-vs-dfas", 30, |rng| {
+        // Random JSON-ish byte strings.
+        let choices: [&[u8]; 10] =
+            [b"{", b"}", b"\"a\"", b"1", b",", b":", b" ", b"[", b"]", b"tr"];
+        let mut bytes = Vec::new();
+        for _ in 0..rng.below(6) + 1 {
+            let i = rng.below(choices.len());
+            bytes.extend_from_slice(choices[i]);
+        }
+        for (seq, posset) in scanner.traverse(&[domino::scanner::Pos::Boundary], &bytes) {
+            // Every completed terminal must be an actual DFA-accepted
+            // split of a prefix of `bytes` — verify by replaying greedily:
+            // reconstructing exact split positions would duplicate the
+            // scanner, so check the weaker sound property that each
+            // emitted terminal id is valid and the pending positions are
+            // live states of their DFAs.
+            for t in &seq {
+                assert!((*t as usize) < dfas.len());
+            }
+            for p in posset {
+                if let domino::scanner::Pos::In(t, s) = p {
+                    assert!((s as usize) < dfas[t as usize].num_states());
+                }
+            }
+        }
+    });
+}

@@ -8,11 +8,10 @@
 //! Falls back to the built-in mock LM when artifacts are missing, so this
 //! runs on a fresh checkout too.
 
-use domino::domino::decoder::{Engine, Lookahead};
+use domino::domino::decoder::Lookahead;
 use domino::domino::generate::Prompt;
 use domino::domino::{generate, DominoDecoder, GenConfig};
 use domino::eval::Setup;
-use domino::grammar::builtin;
 use domino::util::Rng;
 
 fn main() -> domino::Result<()> {
@@ -20,9 +19,10 @@ fn main() -> domino::Result<()> {
     let setup = Setup::load();
     println!("backend: {}", setup.backend_name);
 
-    // 2. Compile a grammar against the vocabulary (offline precompute:
-    //    scanner NFA + subterminal trees, §3.2-3.3).
-    let engine = Engine::compile(builtin::json(), setup.vocab.clone())?;
+    // 2. Grammar engine via the shared registry (offline precompute:
+    //    scanner NFA + subterminal trees, §3.2-3.3 — compiled on first
+    //    request, cached by content hash after that).
+    let engine = setup.engine("json")?;
 
     // 3. Generate, constrained and minimally invasive (k = ∞).
     let mut lm = setup.session()?;

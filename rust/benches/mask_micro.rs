@@ -12,12 +12,14 @@
 //! `cargo bench --bench mask_micro`
 
 use domino::baselines::OnlineChecker;
+use domino::constraint::{CachedChecker, MaskCache};
 use domino::domino::decoder::{Engine, Lookahead};
 use domino::domino::{Checker, DominoDecoder};
 use domino::eval::Setup;
 use domino::grammar::builtin;
 use domino::util::bench::{time_it, Table};
 use domino::util::Rng;
+use std::sync::Arc;
 
 fn main() {
     let setup = Setup::load();
@@ -82,4 +84,40 @@ fn main() {
     }
     table.print();
     println!("\nnote: online mask is measured at the START state only (cloning deep online state is expensive by construction).");
+
+    // The serving-path mask cache: replay the same random walk twice
+    // through a CachedChecker sharing one MaskCache — the second pass
+    // (a second slot/request in the same grammar states) should be ~all
+    // hits, replacing tree traversals with hash probes.
+    println!("\n== State-keyed mask cache (json, k=inf, walk replayed) ==\n");
+    let engine = Engine::compile(builtin::json(), setup.vocab.clone()).unwrap();
+    let cache = Arc::new(MaskCache::new(1024));
+    for pass in 0..2 {
+        let mut checker = CachedChecker::new(
+            Box::new(DominoDecoder::new(engine.clone(), Lookahead::Infinite)),
+            cache.clone(),
+            MaskCache::variant(Lookahead::Infinite),
+        );
+        let mut rng = Rng::new(9);
+        let before = cache.stats();
+        let t0 = std::time::Instant::now();
+        for _ in 0..32 {
+            let mask = checker.compute_mask();
+            let allowed: Vec<_> = mask.iter().filter(|&t| t != 0).collect();
+            if allowed.is_empty() {
+                break;
+            }
+            let t = *rng.choose(&allowed);
+            checker.advance(t).unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let s = cache.stats();
+        println!(
+            "pass {pass}: {} hits / {} misses this pass ({:.0}% lifetime hit rate) in {:.1} us",
+            s.hits - before.hits,
+            s.misses - before.misses,
+            100.0 * s.hit_rate(),
+            elapsed.as_secs_f64() * 1e6,
+        );
+    }
 }

@@ -6,12 +6,14 @@
 //!
 //! `cargo bench --bench precompute`
 
+use domino::constraint::{ConstraintSpec, EngineRegistry};
 use domino::domino::decoder::Engine;
 use domino::domino::tree::TreeSet;
 use domino::eval::Setup;
 use domino::grammar::builtin;
 use domino::scanner::Scanner;
 use domino::util::bench::{time_it, Table};
+use std::time::Instant;
 
 fn main() {
     let setup = Setup::load();
@@ -55,4 +57,35 @@ fn main() {
         });
         println!("full engine compile `{name}`: {:.3}s", t.mean.as_secs_f64());
     }
+
+    // The serving-path amortization: a cold registry lookup pays the full
+    // compile; every warm lookup is a hash probe. This is the per-request
+    // cost difference between rebuilding engines and the shared registry.
+    println!("\n== EngineRegistry: cold vs warm lookups ==\n");
+    let registry = EngineRegistry::new(8);
+    let mut table = Table::new(&["grammar", "cold (s)", "warm (us)", "speedup"]);
+    for name in ["json", "gsm8k", "c"] {
+        let spec = ConstraintSpec::builtin(name);
+        let t0 = Instant::now();
+        registry.get_or_compile(&spec, &setup.vocab).unwrap();
+        let cold = t0.elapsed().as_secs_f64();
+        let warm_iters = 1000u32;
+        let t0 = Instant::now();
+        for _ in 0..warm_iters {
+            std::hint::black_box(registry.get_or_compile(&spec, &setup.vocab).unwrap());
+        }
+        let warm = t0.elapsed().as_secs_f64() / warm_iters as f64;
+        table.row(&[
+            name.to_string(),
+            format!("{cold:.3}"),
+            format!("{:.2}", warm * 1e6),
+            format!("{:.0}x", cold / warm.max(1e-12)),
+        ]);
+    }
+    table.print();
+    let s = registry.stats();
+    println!(
+        "\nregistry counters: {} hits / {} misses / {} evictions / {} coalesced / {} ms compiling",
+        s.hits, s.misses, s.evictions, s.coalesced, s.compile_ms
+    );
 }

@@ -61,6 +61,10 @@ impl Checker for OnlineChecker {
         self.inner.state_key()
     }
 
+    fn mask_key(&self) -> Option<u64> {
+        self.inner.mask_key()
+    }
+
     fn check_bytes(&mut self, bytes: &[u8]) -> bool {
         self.inner.check_bytes(bytes)
     }

@@ -1,0 +1,292 @@
+//! State-keyed token-mask cache, shared across slots and requests.
+//!
+//! Structured output keeps revisiting the same checker states: every JSON
+//! object in a batch passes through the same `(α, β)` fingerprints
+//! (§3.6's speculation keys). A mask computed once for such a state is
+//! valid for every other slot/request in the same state, so the engine
+//! registry attaches one [`MaskCache`] to each compiled engine and
+//! [`CachedChecker`] consults it before traversing trees (DOMINO) or
+//! scanning the vocabulary (the online baseline).
+//!
+//! Cache keys are `(variant, state)`:
+//! * `variant` encodes what *besides* checker state determines the mask —
+//!   today the lookahead `k` ([`MaskCache::variant`]). DOMINO at `k = ∞`
+//!   and the online baseline produce identical masks (property-tested in
+//!   `rust/tests/prop_invariants.rs`), so they deliberately share the
+//!   `∞` variant and each other's cached masks.
+//! * `state` is [`Checker::mask_key`]'s fingerprint of the scanner +
+//!   parser state (the mask-determining subset of `state_key` — DOMINO
+//!   drops the last committed token, so states reached via different
+//!   tokenizations of the same text share masks). It is a hash, so
+//!   distinct states could in principle collide — the same trade the
+//!   §3.6 speculation model already makes.
+//!
+//! Eviction is LRU by logical tick, scanned lazily on insert; the cache
+//! is bounded, so a pathological workload degrades to recomputation, not
+//! memory growth.
+
+use crate::domino::decoder::Lookahead;
+use crate::domino::{Checker, TokenMask};
+use crate::TokenId;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counters for one cache (or an aggregate over several — see
+/// [`MaskCacheStats::merge`]).
+#[derive(Clone, Debug, Default)]
+pub struct MaskCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl MaskCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &MaskCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.entries += other.entries;
+    }
+}
+
+struct MaskEntry {
+    mask: TokenMask,
+    tick: u64,
+}
+
+struct MaskInner {
+    map: HashMap<(u64, u64), MaskEntry>,
+    tick: u64,
+}
+
+/// A bounded, concurrent `(variant, state) → TokenMask` cache.
+pub struct MaskCache {
+    capacity: usize,
+    inner: Mutex<MaskInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl MaskCache {
+    pub fn new(capacity: usize) -> MaskCache {
+        assert!(capacity >= 1, "mask cache needs capacity >= 1");
+        MaskCache {
+            capacity,
+            inner: Mutex::new(MaskInner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The cache variant for a DOMINO lookahead depth. The online
+    /// baseline's masks equal DOMINO's at `k = ∞`, so it uses
+    /// `variant(Lookahead::Infinite)`.
+    pub fn variant(k: Lookahead) -> u64 {
+        match k {
+            Lookahead::K(k) => k as u64,
+            Lookahead::Infinite => u64::MAX,
+        }
+    }
+
+    /// Look up a mask, counting a hit or miss.
+    pub fn get(&self, variant: u64, state: u64) -> Option<TokenMask> {
+        let mut inner = self.inner.lock().expect("mask cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&(variant, state)) {
+            Some(e) => {
+                e.tick = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.mask.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Look up without touching the hit/miss counters (used by
+    /// single-token checks, which probe on every sampled token: counting
+    /// those would drown the compute-path hit rate the metrics exist to
+    /// report — absence here falls through to a cheap direct check, not a
+    /// mask computation).
+    pub fn peek(&self, variant: u64, state: u64) -> Option<TokenMask> {
+        let mut inner = self.inner.lock().expect("mask cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(&(variant, state)).map(|e| {
+            e.tick = tick;
+            e.mask.clone()
+        })
+    }
+
+    /// Insert a computed mask, evicting the least-recently-used entries
+    /// if the cache is full. Eviction drops the oldest ~1/8 of entries in
+    /// one pass so the scan cost amortizes to O(log n) per insert instead
+    /// of a full scan on every miss once the cache fills (this sits on
+    /// the decode hot path, under the lock every slot shares).
+    pub fn put(&self, variant: u64, state: u64, mask: TokenMask) {
+        let mut inner = self.inner.lock().expect("mask cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if inner.map.len() >= self.capacity && !inner.map.contains_key(&(variant, state)) {
+            let evict = (self.capacity / 8).max(1);
+            let mut ticks: Vec<((u64, u64), u64)> =
+                inner.map.iter().map(|(k, e)| (*k, e.tick)).collect();
+            ticks.sort_unstable_by_key(|&(_, t)| t);
+            for (k, _) in ticks.into_iter().take(evict) {
+                inner.map.remove(&k);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.map.insert((variant, state), MaskEntry { mask, tick });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("mask cache lock").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> MaskCacheStats {
+        MaskCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+/// A [`Checker`] wrapper that reuses cached masks for states the shared
+/// [`MaskCache`] has already seen. Wrap any checker whose
+/// [`mask_key`](Checker::mask_key) is `Some`; checkers without a state
+/// fingerprint pass straight through.
+pub struct CachedChecker {
+    inner: Box<dyn Checker>,
+    cache: Arc<MaskCache>,
+    variant: u64,
+}
+
+impl CachedChecker {
+    pub fn new(inner: Box<dyn Checker>, cache: Arc<MaskCache>, variant: u64) -> CachedChecker {
+        CachedChecker { inner, cache, variant }
+    }
+
+    pub fn cache(&self) -> &Arc<MaskCache> {
+        &self.cache
+    }
+}
+
+impl Checker for CachedChecker {
+    fn advance(&mut self, token: TokenId) -> crate::Result<()> {
+        self.inner.advance(token)
+    }
+
+    fn compute_mask(&mut self) -> TokenMask {
+        let Some(state) = self.inner.mask_key() else {
+            return self.inner.compute_mask();
+        };
+        if let Some(mask) = self.cache.get(self.variant, state) {
+            return mask;
+        }
+        let mask = self.inner.compute_mask();
+        self.cache.put(self.variant, state, mask.clone());
+        mask
+    }
+
+    fn check_token(&mut self, token: TokenId) -> bool {
+        // A cached mask answers single-token checks too — for the online
+        // baseline this turns a scanner traversal into a bit test.
+        if let Some(state) = self.inner.mask_key() {
+            if let Some(mask) = self.cache.peek(self.variant, state) {
+                return mask.allowed(token);
+            }
+        }
+        self.inner.check_token(token)
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset()
+    }
+
+    fn state_key(&self) -> Option<u64> {
+        self.inner.state_key()
+    }
+
+    fn mask_key(&self) -> Option<u64> {
+        self.inner.mask_key()
+    }
+
+    fn check_bytes(&mut self, bytes: &[u8]) -> bool {
+        self.inner.check_bytes(bytes)
+    }
+
+    fn advance_bytes(&mut self, bytes: &[u8]) -> crate::Result<()> {
+        self.inner.advance_bytes(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_with(size: usize, bits: &[TokenId]) -> TokenMask {
+        let mut m = TokenMask::none(size);
+        for &b in bits {
+            m.allow(b);
+        }
+        m
+    }
+
+    #[test]
+    fn get_put_roundtrip() {
+        let c = MaskCache::new(4);
+        assert!(c.get(0, 1).is_none());
+        c.put(0, 1, mask_with(70, &[0, 64]));
+        assert_eq!(c.get(0, 1).unwrap(), mask_with(70, &[0, 64]));
+        // Same state under a different variant is a different entry.
+        assert!(c.get(1, 1).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let c = MaskCache::new(2);
+        c.put(0, 1, mask_with(8, &[1]));
+        c.put(0, 2, mask_with(8, &[2]));
+        assert!(c.get(0, 1).is_some()); // touch 1 → 2 is now oldest
+        c.put(0, 3, mask_with(8, &[3]));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.get(0, 2).is_none(), "entry 2 was LRU");
+        assert!(c.get(0, 1).is_some());
+        assert!(c.get(0, 3).is_some());
+    }
+
+    #[test]
+    fn variant_encodes_lookahead() {
+        assert_ne!(
+            MaskCache::variant(Lookahead::K(0)),
+            MaskCache::variant(Lookahead::Infinite)
+        );
+        assert_ne!(MaskCache::variant(Lookahead::K(0)), MaskCache::variant(Lookahead::K(1)));
+    }
+}

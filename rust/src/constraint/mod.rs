@@ -1,0 +1,398 @@
+//! The first-class constraint pipeline.
+//!
+//! DOMINO's headline speed comes from moving work *offline* (§3.5–3.6:
+//! scanner tables, subterminal trees, Earley tables) — but that only pays
+//! off under load if the compiled [`Engine`](crate::domino::Engine) is
+//! **reused** across requests. This module makes constraints cacheable,
+//! shareable values instead of stringly-typed request fields:
+//!
+//! * [`ConstraintSpec`] — *what* constrains the output: a builtin grammar
+//!   by name, inline EBNF, a regex, stop sequences, or nothing. Specs
+//!   normalize and hash to a stable 64-bit fingerprint — the cache key.
+//! * [`EngineRegistry`] (in [`registry`]) — a concurrent, content-hash-
+//!   keyed cache of compiled engines with size-bounded LRU eviction and
+//!   build deduplication: concurrent requests for the same grammar
+//!   compile it exactly once, everyone else waits for that build.
+//! * [`MaskCache`] + [`CachedChecker`] (in [`mask_cache`]) — state-keyed
+//!   reuse of computed token masks across slots and requests. Structured
+//!   output revisits the same `(α, β)` checker states (§3.6) constantly;
+//!   a cached mask turns a tree traversal (or, for the online baseline, a
+//!   full-vocabulary scan) into a hash lookup.
+//! * [`StopChecker`] (in [`stop`]) — plain stop-sequence constraints with
+//!   no grammar machinery at all.
+//! * [`Constraint`] / [`Enforcement`] — the request-level pairing of a
+//!   spec with *how* it is enforced (DOMINO lookahead-`k`, optionally
+//!   speculative or full-mask, or the online full-vocab baseline).
+//!
+//! See `rust/DESIGN.md` for how the server, eval harness and benches
+//! thread these types through.
+
+pub mod mask_cache;
+pub mod registry;
+pub mod stop;
+
+pub use mask_cache::{CachedChecker, MaskCache, MaskCacheStats};
+pub use registry::{EngineRegistry, RegistryStats};
+pub use stop::StopChecker;
+
+use crate::grammar::{builtin, parse_ebnf, Cfg, CfgBuilder, Symbol};
+use anyhow::{bail, Context};
+
+/// What a generation request is constrained by. Hashable/normalizable so
+/// compiled artifacts can be cached by content ([`ConstraintSpec::fingerprint`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum ConstraintSpec {
+    /// No constraint.
+    #[default]
+    Unconstrained,
+    /// One of the paper's builtin evaluation grammars, by name
+    /// (see [`builtin::GRAMMAR_NAMES`]).
+    Builtin { name: String },
+    /// Inline EBNF in the crate's grammar notation (see [`parse_ebnf`]).
+    Ebnf { source: String },
+    /// Output must be exactly one match of this regex (the crate's
+    /// dialect, compiled to a single-terminal grammar).
+    Regex { pattern: String },
+    /// Free generation until any of these byte sequences appears in the
+    /// output, then EOS is forced.
+    Stop { sequences: Vec<String> },
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+impl ConstraintSpec {
+    pub fn builtin(name: impl Into<String>) -> ConstraintSpec {
+        ConstraintSpec::Builtin { name: name.into() }
+    }
+
+    pub fn ebnf(source: impl Into<String>) -> ConstraintSpec {
+        ConstraintSpec::Ebnf { source: source.into() }
+    }
+
+    pub fn regex(pattern: impl Into<String>) -> ConstraintSpec {
+        ConstraintSpec::Regex { pattern: pattern.into() }
+    }
+
+    pub fn stop(sequences: Vec<String>) -> ConstraintSpec {
+        ConstraintSpec::Stop { sequences }
+    }
+
+    /// Canonical form: builtin names are trimmed + lowercased, EBNF
+    /// sources and regex patterns are trimmed. Two specs with equal
+    /// normalized forms share one compiled engine.
+    pub fn normalized(&self) -> ConstraintSpec {
+        match self {
+            ConstraintSpec::Unconstrained => ConstraintSpec::Unconstrained,
+            ConstraintSpec::Builtin { name } => {
+                ConstraintSpec::Builtin { name: name.trim().to_ascii_lowercase() }
+            }
+            ConstraintSpec::Ebnf { source } => {
+                ConstraintSpec::Ebnf { source: source.trim().to_string() }
+            }
+            ConstraintSpec::Regex { pattern } => {
+                ConstraintSpec::Regex { pattern: pattern.trim().to_string() }
+            }
+            ConstraintSpec::Stop { sequences } => {
+                ConstraintSpec::Stop { sequences: sequences.clone() }
+            }
+        }
+    }
+
+    /// Does this spec compile to a grammar [`Engine`](crate::domino::Engine)?
+    pub fn is_grammar_backed(&self) -> bool {
+        matches!(
+            self,
+            ConstraintSpec::Builtin { .. }
+                | ConstraintSpec::Ebnf { .. }
+                | ConstraintSpec::Regex { .. }
+        )
+    }
+
+    /// Deterministic 64-bit content hash of the normalized spec (FNV-1a
+    /// over a variant tag + length-prefixed fields). Stable across
+    /// processes — usable as an on-disk or cross-node cache key too.
+    pub fn fingerprint(&self) -> u64 {
+        let norm = self.normalized();
+        let mut h = FNV_OFFSET;
+        let field = |h: &mut u64, bytes: &[u8]| {
+            fnv1a(h, &(bytes.len() as u64).to_le_bytes());
+            fnv1a(h, bytes);
+        };
+        match &norm {
+            ConstraintSpec::Unconstrained => fnv1a(&mut h, &[0]),
+            ConstraintSpec::Builtin { name } => {
+                fnv1a(&mut h, &[1]);
+                field(&mut h, name.as_bytes());
+            }
+            ConstraintSpec::Ebnf { source } => {
+                fnv1a(&mut h, &[2]);
+                field(&mut h, source.as_bytes());
+            }
+            ConstraintSpec::Regex { pattern } => {
+                fnv1a(&mut h, &[3]);
+                field(&mut h, pattern.as_bytes());
+            }
+            ConstraintSpec::Stop { sequences } => {
+                fnv1a(&mut h, &[4]);
+                for s in sequences {
+                    field(&mut h, s.as_bytes());
+                }
+            }
+        }
+        h
+    }
+
+    /// Compile the normalized spec to the CFG DOMINO consumes. Errors for
+    /// specs with no grammar ([`Unconstrained`](ConstraintSpec::Unconstrained),
+    /// [`Stop`](ConstraintSpec::Stop)).
+    pub fn to_cfg(&self) -> crate::Result<Cfg> {
+        match self.normalized() {
+            ConstraintSpec::Unconstrained | ConstraintSpec::Stop { .. } => {
+                bail!("constraint {:?} is not grammar-backed", self)
+            }
+            ConstraintSpec::Builtin { name } => builtin::by_name(&name)
+                .with_context(|| format!("unknown builtin grammar `{name}`")),
+            ConstraintSpec::Ebnf { source } => {
+                parse_ebnf(&source).context("parsing inline EBNF constraint")
+            }
+            ConstraintSpec::Regex { pattern } => regex_cfg(&pattern),
+        }
+    }
+}
+
+/// A regex constraint as a single-terminal grammar: `root ::= /pattern/`.
+fn regex_cfg(pattern: &str) -> crate::Result<Cfg> {
+    // Pre-validate for a focused error (and to reject ε: nullable
+    // terminals are illegal in the scanner split — optionality belongs to
+    // the CFG, see grammar::builtin's translation notes).
+    let nfa = crate::regex::compile(pattern)
+        .with_context(|| format!("compiling regex constraint /{pattern}/"))?;
+    if nfa.accepts(b"") {
+        bail!("regex constraint /{pattern}/ matches the empty string; anchor it to require at least one character");
+    }
+    let mut b = CfgBuilder::new();
+    let root = b.nonterminal("root");
+    let t = b.regex_term("pattern", pattern);
+    b.production(root, vec![Symbol::T(t)]);
+    b.build(root)
+}
+
+/// How a grammar-backed constraint is enforced on the hot path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Enforcement {
+    /// DOMINO decoder over precomputed subterminal trees. `k = None` is
+    /// lookahead-∞ (minimally invasive); `speculative = Some(s)` enables
+    /// §3.6 count-based speculation with chunk size `s`; `full_mask`
+    /// computes the mask every step (Algorithm 1 verbatim) instead of
+    /// opportunistically.
+    Domino { k: Option<u32>, speculative: Option<usize>, full_mask: bool },
+    /// Online full-vocabulary baseline (llama.cpp/GCD-style): same masks
+    /// as DOMINO at k = ∞, no precomputation.
+    Online,
+}
+
+impl Default for Enforcement {
+    fn default() -> Self {
+        Enforcement::Domino { k: None, speculative: None, full_mask: false }
+    }
+}
+
+/// A request's constraint: *what* ([`ConstraintSpec`]) plus *how*
+/// ([`Enforcement`]). The enforcement is ignored for specs that need no
+/// grammar engine (`Unconstrained`, `Stop`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Constraint {
+    pub spec: ConstraintSpec,
+    pub enforcement: Enforcement,
+}
+
+impl Constraint {
+    /// No constraint.
+    pub fn none() -> Constraint {
+        Constraint::default()
+    }
+
+    /// DOMINO enforcement at lookahead ∞, opportunistic masking.
+    pub fn domino(spec: ConstraintSpec) -> Constraint {
+        Constraint { spec, enforcement: Enforcement::default() }
+    }
+
+    /// Online full-vocab baseline enforcement.
+    pub fn online(spec: ConstraintSpec) -> Constraint {
+        Constraint { spec, enforcement: Enforcement::Online }
+    }
+
+    /// Stop-sequence constraint (no grammar engine involved).
+    pub fn stop(sequences: Vec<String>) -> Constraint {
+        Constraint::domino(ConstraintSpec::stop(sequences))
+    }
+
+    /// Set the DOMINO lookahead (`None` = ∞). No-op for [`Enforcement::Online`].
+    pub fn with_lookahead(mut self, k: Option<u32>) -> Constraint {
+        if let Enforcement::Domino { k: slot, .. } = &mut self.enforcement {
+            *slot = k;
+        }
+        self
+    }
+
+    /// Enable §3.6 speculation with chunk size `s`. No-op for online.
+    pub fn with_speculation(mut self, s: usize) -> Constraint {
+        if let Enforcement::Domino { speculative, .. } = &mut self.enforcement {
+            *speculative = Some(s);
+        }
+        self
+    }
+
+    /// Compute the full mask every step (Algorithm 1 verbatim). No-op for
+    /// online.
+    pub fn with_full_mask(mut self) -> Constraint {
+        if let Enforcement::Domino { full_mask, .. } = &mut self.enforcement {
+            *full_mask = true;
+        }
+        self
+    }
+
+    /// Assemble a constraint from the front-end vocabulary shared by the
+    /// TCP protocol and the CLI: a `method` string (`"unconstrained"` |
+    /// `"domino"` | `"domino-full"` | `"online"`), an optional spec, the
+    /// lookahead `k` and the speculation chunk size. One implementation so
+    /// the wire protocol and CLI can never drift apart.
+    pub fn from_parts(
+        method: &str,
+        spec: Option<ConstraintSpec>,
+        k: Option<u32>,
+        speculative: Option<usize>,
+    ) -> Constraint {
+        match (method, spec) {
+            ("unconstrained", _) | (_, None) => Constraint::none(),
+            ("online", Some(spec)) => Constraint::online(spec),
+            ("domino-full", Some(spec)) => {
+                Constraint::domino(spec).with_lookahead(k).with_full_mask()
+            }
+            (_, Some(spec)) => {
+                let c = Constraint::domino(spec).with_lookahead(k);
+                match speculative {
+                    Some(s) => c.with_speculation(s),
+                    None => c,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_content_keyed() {
+        let a = ConstraintSpec::builtin("json");
+        let b = ConstraintSpec::builtin("json");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), ConstraintSpec::builtin("gsm8k").fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_normalizes() {
+        assert_eq!(
+            ConstraintSpec::builtin("  JSON ").fingerprint(),
+            ConstraintSpec::builtin("json").fingerprint()
+        );
+        assert_eq!(
+            ConstraintSpec::ebnf("root ::= \"a\"\n").fingerprint(),
+            ConstraintSpec::ebnf("root ::= \"a\"").fingerprint()
+        );
+        assert_eq!(
+            ConstraintSpec::regex(" [0-9]+ ").fingerprint(),
+            ConstraintSpec::regex("[0-9]+").fingerprint()
+        );
+    }
+
+    #[test]
+    fn fingerprint_separates_variants_and_fields() {
+        // Same payload, different constraint kind → different key.
+        let payloads =
+            [ConstraintSpec::ebnf("x"), ConstraintSpec::regex("x"), ConstraintSpec::builtin("x")];
+        for (i, a) in payloads.iter().enumerate() {
+            for b in payloads.iter().skip(i + 1) {
+                assert_ne!(a.fingerprint(), b.fingerprint(), "{a:?} vs {b:?}");
+            }
+        }
+        // Length-prefixed fields: ["a","b"] must differ from ["ab"].
+        assert_ne!(
+            ConstraintSpec::stop(vec!["a".into(), "b".into()]).fingerprint(),
+            ConstraintSpec::stop(vec!["ab".into()]).fingerprint()
+        );
+    }
+
+    #[test]
+    fn regex_spec_compiles_to_single_terminal_cfg() {
+        let cfg = ConstraintSpec::regex("[0-9]{4}").to_cfg().unwrap();
+        assert_eq!(cfg.num_terminals(), 1);
+        let dfas = cfg.terminal_dfas().unwrap();
+        assert!(dfas[0].accepts(b"1234"));
+        assert!(!dfas[0].accepts(b"123"));
+        assert!(!dfas[0].accepts(b"12345"));
+    }
+
+    #[test]
+    fn nullable_regex_rejected() {
+        assert!(ConstraintSpec::regex("[0-9]*").to_cfg().is_err());
+    }
+
+    #[test]
+    fn non_grammar_specs_do_not_compile() {
+        assert!(ConstraintSpec::Unconstrained.to_cfg().is_err());
+        assert!(ConstraintSpec::stop(vec!["x".into()]).to_cfg().is_err());
+    }
+
+    #[test]
+    fn ebnf_spec_compiles() {
+        let cfg = ConstraintSpec::ebnf("root ::= \"ab\" | \"cd\"").to_cfg().unwrap();
+        assert_eq!(cfg.num_terminals(), 2);
+    }
+
+    #[test]
+    fn from_parts_covers_every_method() {
+        let spec = || Some(ConstraintSpec::builtin("json"));
+        assert_eq!(Constraint::from_parts("unconstrained", spec(), None, None), Constraint::none());
+        assert_eq!(Constraint::from_parts("domino", None, Some(1), Some(8)), Constraint::none());
+        assert_eq!(
+            Constraint::from_parts("online", spec(), Some(1), Some(8)),
+            Constraint::online(ConstraintSpec::builtin("json"))
+        );
+        assert_eq!(
+            Constraint::from_parts("domino-full", spec(), Some(1), Some(8)),
+            Constraint::domino(ConstraintSpec::builtin("json"))
+                .with_lookahead(Some(1))
+                .with_full_mask(),
+            "domino-full ignores speculation"
+        );
+        assert_eq!(
+            Constraint::from_parts("domino", spec(), None, Some(8)),
+            Constraint::domino(ConstraintSpec::builtin("json")).with_speculation(8)
+        );
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = Constraint::domino(ConstraintSpec::builtin("json"))
+            .with_lookahead(Some(2))
+            .with_speculation(8);
+        assert_eq!(
+            c.enforcement,
+            Enforcement::Domino { k: Some(2), speculative: Some(8), full_mask: false }
+        );
+        let c = Constraint::online(ConstraintSpec::builtin("json")).with_full_mask();
+        assert_eq!(c.enforcement, Enforcement::Online, "online ignores domino knobs");
+        assert_eq!(Constraint::none().spec, ConstraintSpec::Unconstrained);
+    }
+}

@@ -1,0 +1,323 @@
+//! The shared engine registry: compile each grammar once, serve it
+//! everywhere.
+//!
+//! A compiled [`Engine`] is the expensive artifact of the whole system —
+//! scanner union NFA, vocabulary-aligned subterminal trees (Algorithm 2),
+//! Earley tables. The paper's premise is that this cost is paid *offline*
+//! (§3.5, Table: 1–20 s per grammar); a serving path that rebuilds it per
+//! request forfeits the entire headline win. The registry makes the
+//! amortization real:
+//!
+//! * keyed by **content hash** ([`ConstraintSpec::fingerprint`]) × vocab
+//!   identity, so a builtin name, an inline EBNF body and a regex all
+//!   cache uniformly;
+//! * **build-deduplicated**: when N requests race on an uncached grammar,
+//!   one thread compiles, the rest block on that build and share the
+//!   result (no thundering-herd compile);
+//! * **size-bounded** with LRU eviction — an adversarial stream of
+//!   distinct inline grammars degrades to recompilation, not unbounded
+//!   memory;
+//! * each entry carries the engine's shared [`MaskCache`], so state-keyed
+//!   mask reuse follows the engine around for free;
+//! * counters (hits/misses/evictions/coalesced builds/compile-time) are
+//!   exported through `server::metrics` for amortization reporting.
+
+use super::mask_cache::{MaskCache, MaskCacheStats};
+use super::ConstraintSpec;
+use crate::domino::decoder::Engine;
+use crate::tokenizer::Vocab;
+use anyhow::bail;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Per-engine mask-cache capacity (distinct `(variant, state)` entries).
+const MASK_CACHE_CAPACITY: usize = 4096;
+
+/// Registry counters, readable without blocking builds.
+#[derive(Clone, Debug, Default)]
+pub struct RegistryStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that triggered a compile.
+    pub misses: u64,
+    /// Entries dropped by LRU eviction.
+    pub evictions: u64,
+    /// Lookups that waited on a concurrent build instead of compiling.
+    pub coalesced: u64,
+    /// Total wall time spent compiling engines, milliseconds.
+    pub compile_ms: u64,
+    /// Live entries.
+    pub entries: usize,
+}
+
+struct Entry {
+    engine: Arc<Engine>,
+    masks: Arc<MaskCache>,
+    tick: u64,
+}
+
+enum BuildState {
+    Pending,
+    Ready(Arc<Engine>, Arc<MaskCache>),
+    Failed(String),
+}
+
+struct Build {
+    state: Mutex<BuildState>,
+    cv: Condvar,
+}
+
+struct Inner {
+    map: HashMap<u64, Entry>,
+    building: HashMap<u64, Arc<Build>>,
+    tick: u64,
+    /// Mask-cache counters of evicted/cleared entries, folded in so the
+    /// aggregate in [`EngineRegistry::mask_stats`] is monotonic (metrics
+    /// consumers compute deltas between snapshots).
+    retired_masks: MaskCacheStats,
+}
+
+/// A concurrent, content-hash-keyed cache of compiled grammar engines.
+pub struct EngineRegistry {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    coalesced: AtomicU64,
+    compile_ms: AtomicU64,
+}
+
+impl EngineRegistry {
+    pub fn new(capacity: usize) -> Arc<EngineRegistry> {
+        assert!(capacity >= 1, "registry needs capacity >= 1");
+        Arc::new(EngineRegistry {
+            capacity,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                building: HashMap::new(),
+                tick: 0,
+                retired_masks: MaskCacheStats::default(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            compile_ms: AtomicU64::new(0),
+        })
+    }
+
+    /// The cache key: spec content fingerprint × vocab identity. Vocab
+    /// identity is the `Arc` address — sound because every live entry
+    /// keeps its vocab alive (the engine holds the `Arc`), so the address
+    /// cannot be reused while the entry exists.
+    pub fn key_for(spec: &ConstraintSpec, vocab: &Arc<Vocab>) -> u64 {
+        spec.fingerprint()
+            ^ (Arc::as_ptr(vocab) as usize as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Fetch the compiled engine for `spec`, compiling it (exactly once,
+    /// even under concurrency) on a miss. Returns the engine plus its
+    /// shared mask cache.
+    pub fn get_or_compile(
+        &self,
+        spec: &ConstraintSpec,
+        vocab: &Arc<Vocab>,
+    ) -> crate::Result<(Arc<Engine>, Arc<MaskCache>)> {
+        if !spec.is_grammar_backed() {
+            bail!("constraint {spec:?} has no grammar engine");
+        }
+        let key = Self::key_for(spec, vocab);
+
+        let build = {
+            let mut inner = self.inner.lock().expect("registry lock");
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.tick = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((e.engine.clone(), e.masks.clone()));
+            }
+            if let Some(b) = inner.building.get(&key) {
+                // Someone else is compiling this grammar right now: wait
+                // for their build instead of duplicating it.
+                let b = b.clone();
+                drop(inner);
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                let mut st = b.state.lock().expect("build lock");
+                loop {
+                    match &*st {
+                        BuildState::Pending => {}
+                        BuildState::Ready(e, m) => return Ok((e.clone(), m.clone())),
+                        BuildState::Failed(msg) => bail!("engine compile failed: {msg}"),
+                    }
+                    st = b.cv.wait(st).expect("build wait");
+                }
+            }
+            let build =
+                Arc::new(Build { state: Mutex::new(BuildState::Pending), cv: Condvar::new() });
+            inner.building.insert(key, build.clone());
+            build
+        };
+
+        // Miss: compile outside the registry lock.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let result = spec.to_cfg().and_then(|cfg| Engine::compile(cfg, vocab.clone()));
+        self.compile_ms.fetch_add(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+
+        match result {
+            Ok(engine) => {
+                let masks = Arc::new(MaskCache::new(MASK_CACHE_CAPACITY));
+                {
+                    let mut inner = self.inner.lock().expect("registry lock");
+                    inner.building.remove(&key);
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    if inner.map.len() >= self.capacity {
+                        let victim =
+                            inner.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| *k);
+                        if let Some(old) = victim {
+                            if let Some(entry) = inner.map.remove(&old) {
+                                let mut s = entry.masks.stats();
+                                s.entries = 0; // retired entries are no longer live
+                                inner.retired_masks.merge(&s);
+                            }
+                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    inner.map.insert(
+                        key,
+                        Entry { engine: engine.clone(), masks: masks.clone(), tick },
+                    );
+                }
+                let mut st = build.state.lock().expect("build lock");
+                *st = BuildState::Ready(engine.clone(), masks.clone());
+                drop(st);
+                build.cv.notify_all();
+                Ok((engine, masks))
+            }
+            Err(e) => {
+                {
+                    let mut inner = self.inner.lock().expect("registry lock");
+                    inner.building.remove(&key);
+                }
+                let mut st = build.state.lock().expect("build lock");
+                *st = BuildState::Failed(format!("{e:#}"));
+                drop(st);
+                build.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Is this spec's engine currently cached (no compile triggered)?
+    pub fn contains(&self, spec: &ConstraintSpec, vocab: &Arc<Vocab>) -> bool {
+        let key = Self::key_for(spec, vocab);
+        self.inner.lock().expect("registry lock").map.contains_key(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("registry lock").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached engine (counters are kept; the dropped entries'
+    /// mask-cache counters are folded into the retired aggregate).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        let entries: Vec<Entry> = inner.map.drain().map(|(_, e)| e).collect();
+        for e in entries {
+            let mut s = e.masks.stats();
+            s.entries = 0;
+            inner.retired_masks.merge(&s);
+        }
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            compile_ms: self.compile_ms.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    /// Aggregate mask-cache counters: live entries plus a snapshot of
+    /// every evicted/cleared entry's counters at retirement time, so the
+    /// totals are monotonic across snapshots. (Hits an in-flight slot
+    /// scores on an already-evicted engine's cache after its retirement
+    /// snapshot are the one thing not counted.)
+    pub fn mask_stats(&self) -> MaskCacheStats {
+        let inner = self.inner.lock().expect("registry lock");
+        let mut agg = inner.retired_masks.clone();
+        for e in inner.map.values() {
+            agg.merge(&e.masks.stats());
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer;
+
+    fn vocab() -> Arc<Vocab> {
+        Arc::new(tokenizer::bpe::synthetic_json_vocab(256))
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let v = vocab();
+        let reg = EngineRegistry::new(4);
+        let spec = ConstraintSpec::builtin("fig3");
+        assert!(!reg.contains(&spec, &v));
+        let (e1, _) = reg.get_or_compile(&spec, &v).unwrap();
+        assert!(reg.contains(&spec, &v));
+        let (e2, _) = reg.get_or_compile(&spec, &v).unwrap();
+        assert!(Arc::ptr_eq(&e1, &e2), "second lookup must reuse the engine");
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn normalized_specs_share_an_entry() {
+        let v = vocab();
+        let reg = EngineRegistry::new(4);
+        reg.get_or_compile(&ConstraintSpec::builtin("fig3"), &v).unwrap();
+        reg.get_or_compile(&ConstraintSpec::builtin(" FIG3 "), &v).unwrap();
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn distinct_vocabs_do_not_collide() {
+        let v1 = vocab();
+        let v2 = Arc::new(tokenizer::bpe::synthetic_json_vocab(320));
+        let reg = EngineRegistry::new(4);
+        let spec = ConstraintSpec::builtin("fig3");
+        let (e1, _) = reg.get_or_compile(&spec, &v1).unwrap();
+        let (e2, _) = reg.get_or_compile(&spec, &v2).unwrap();
+        assert!(!Arc::ptr_eq(&e1, &e2));
+        assert_eq!(reg.stats().misses, 2);
+    }
+
+    #[test]
+    fn compile_failure_reported_and_not_cached() {
+        let v = vocab();
+        let reg = EngineRegistry::new(4);
+        let bad = ConstraintSpec::builtin("no-such-grammar");
+        assert!(reg.get_or_compile(&bad, &v).is_err());
+        assert!(!reg.contains(&bad, &v));
+        // A failed build must not wedge later lookups of the same key.
+        assert!(reg.get_or_compile(&bad, &v).is_err());
+    }
+}

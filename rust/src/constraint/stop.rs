@@ -1,0 +1,173 @@
+//! Stop-sequence constraints: free generation until a byte sequence
+//! appears in the output, then EOS is forced.
+//!
+//! This is the workhorse constraint of production serving APIs ("stop":
+//! ["\n\n", "```"]) and needs none of the grammar machinery: the checker
+//! keeps a rolling tail of emitted bytes (long enough to catch sequences
+//! straddling token boundaries) and flips to EOS-only once any sequence
+//! matches. The completed stop text is *included* in the output — the
+//! standard API semantics.
+
+use crate::domino::{Checker, TokenMask};
+use crate::tokenizer::{Vocab, EOS_ID};
+use crate::TokenId;
+use anyhow::bail;
+use std::sync::Arc;
+
+/// A [`Checker`] enforcing stop sequences over the output byte stream.
+pub struct StopChecker {
+    vocab: Arc<Vocab>,
+    sequences: Vec<Vec<u8>>,
+    /// Rolling tail of emitted bytes (longest sequence − 1, plus the
+    /// bytes of the token being fed).
+    tail: Vec<u8>,
+    hit: bool,
+    keep: usize,
+}
+
+impl StopChecker {
+    /// Empty sequences are dropped; with no (non-empty) sequences this
+    /// degenerates to an unconstrained checker.
+    pub fn new(vocab: Arc<Vocab>, sequences: &[String]) -> StopChecker {
+        let sequences: Vec<Vec<u8>> =
+            sequences.iter().filter(|s| !s.is_empty()).map(|s| s.as_bytes().to_vec()).collect();
+        let keep = sequences.iter().map(|s| s.len()).max().unwrap_or(1).saturating_sub(1);
+        StopChecker { vocab, sequences, tail: Vec::new(), hit: false, keep }
+    }
+
+    /// Has a stop sequence been completed?
+    pub fn hit(&self) -> bool {
+        self.hit
+    }
+
+    fn feed(&mut self, bytes: &[u8]) {
+        if self.hit || bytes.is_empty() {
+            return;
+        }
+        self.tail.extend_from_slice(bytes);
+        if self.sequences.iter().any(|s| self.tail.windows(s.len()).any(|w| w == &s[..])) {
+            self.hit = true;
+            return;
+        }
+        if self.tail.len() > self.keep {
+            let cut = self.tail.len() - self.keep;
+            self.tail.drain(..cut);
+        }
+    }
+}
+
+impl Checker for StopChecker {
+    fn advance(&mut self, token: TokenId) -> crate::Result<()> {
+        if self.hit {
+            bail!("generation already hit a stop sequence; only EOS is legal");
+        }
+        let bytes = self.vocab.token_bytes(token).to_vec();
+        self.feed(&bytes);
+        Ok(())
+    }
+
+    fn compute_mask(&mut self) -> TokenMask {
+        if self.hit {
+            let mut m = TokenMask::none(self.vocab.len());
+            m.allow(EOS_ID);
+            m
+        } else {
+            TokenMask::all(self.vocab.len())
+        }
+    }
+
+    fn check_token(&mut self, token: TokenId) -> bool {
+        !self.hit || token == EOS_ID
+    }
+
+    fn reset(&mut self) {
+        self.tail.clear();
+        self.hit = false;
+    }
+
+    fn check_bytes(&mut self, _bytes: &[u8]) -> bool {
+        true
+    }
+
+    fn advance_bytes(&mut self, bytes: &[u8]) -> crate::Result<()> {
+        self.feed(bytes);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{self, NUM_SPECIAL};
+
+    fn byte_tok(b: u8) -> TokenId {
+        (b as usize + NUM_SPECIAL) as TokenId
+    }
+
+    fn checker(sequences: &[&str]) -> StopChecker {
+        let seqs: Vec<String> = sequences.iter().map(|s| s.to_string()).collect();
+        StopChecker::new(Arc::new(tokenizer::Vocab::byte_level()), &seqs)
+    }
+
+    #[test]
+    fn stops_on_sequence_across_token_boundaries() {
+        let mut c = checker(&["END"]);
+        for b in b"some text EN" {
+            assert!(c.check_token(byte_tok(*b)));
+            c.advance(byte_tok(*b)).unwrap();
+        }
+        assert!(!c.hit(), "EN alone is not END");
+        c.advance(byte_tok(b'D')).unwrap();
+        assert!(c.hit());
+        // Only EOS is legal now; mask agrees with check_token.
+        assert!(c.check_token(EOS_ID));
+        assert!(!c.check_token(byte_tok(b'x')));
+        let m = c.compute_mask();
+        assert_eq!(m.count(), 1);
+        assert!(m.allowed(EOS_ID));
+        assert!(c.advance(byte_tok(b'x')).is_err());
+    }
+
+    #[test]
+    fn multiple_sequences_any_triggers() {
+        let mut c = checker(&["\n\n", "}"]);
+        for b in b"{\"a\": 1}" {
+            c.advance(byte_tok(*b)).unwrap();
+        }
+        assert!(c.hit());
+    }
+
+    #[test]
+    fn healing_bytes_count_toward_stop() {
+        let mut c = checker(&["ab"]);
+        assert!(c.check_bytes(b"whatever"));
+        c.advance_bytes(b"xa").unwrap();
+        assert!(!c.hit());
+        c.advance_bytes(b"b").unwrap();
+        assert!(c.hit());
+    }
+
+    #[test]
+    fn reset_and_degenerate_cases() {
+        let mut c = checker(&["X"]);
+        c.advance(byte_tok(b'X')).unwrap();
+        assert!(c.hit());
+        c.reset();
+        assert!(!c.hit());
+        assert_eq!(c.compute_mask().count(), c.vocab.len());
+
+        // No sequences → never stops.
+        let mut c = checker(&[]);
+        for b in b"anything at all" {
+            c.advance(byte_tok(*b)).unwrap();
+        }
+        assert!(!c.hit());
+
+        // Empty strings are dropped, not instant-stops.
+        let mut c = checker(&["", "Z"]);
+        c.advance(byte_tok(b'a')).unwrap();
+        assert!(!c.hit());
+        c.advance(byte_tok(b'Z')).unwrap();
+        assert!(c.hit());
+    }
+}

@@ -219,10 +219,30 @@ impl DominoDecoder {
         false
     }
 
+    /// Fold the live hypotheses (parser frontiers + pending scanner
+    /// positions) into a hasher — the mask-determining part of the state.
+    fn hash_hyps(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        for hyp in &self.hyps {
+            hyp.chart.frontier_fingerprint().hash(h);
+            for p in &hyp.posset {
+                p.hash(h);
+            }
+        }
+    }
+
     /// Check a single token without a full mask (opportunistic masking,
     /// §3.5: find the nodes linked to the proposed token, then check a
     /// parser-allowed path from the root — realized by direct scanner
     /// traversal of the token's bytes, which is equivalent and O(|token|)).
+    ///
+    /// Traverses per starting position so the mid-terminal discount is
+    /// attributed exactly as in [`Self::traverse_tree`]: with a mixed
+    /// posset ({Boundary, In(..)}), a path starting at the Boundary gets
+    /// no discount even though a sibling position is mid-terminal —
+    /// otherwise `check_token` would admit tokens at finite `k` that
+    /// `compute_mask` rejects, breaking the trait contract (and making
+    /// cached-mask answers disagree with direct checks).
     fn check_token_inner(&self, token: TokenId) -> bool {
         if token == EOS_ID {
             return self.eos_allowed();
@@ -232,20 +252,39 @@ impl DominoDecoder {
         if bytes.is_empty() {
             return false;
         }
-        for hyp in &self.hyps {
-            let mid_terminal = hyp.posset.iter().any(|p| matches!(p, Pos::In(..)));
-            for (seq, posset) in eng.scanner.traverse(&hyp.posset, bytes) {
-                let depth = seq.len() as u32;
-                let discount = (mid_terminal && depth >= 1) as u32;
-                if !self.k.admits(depth - discount + 1) {
-                    continue;
+        if self.k == Lookahead::Infinite {
+            // k = ∞ admits every parser-viable token, so discount
+            // attribution is irrelevant — keep the joint traversal, which
+            // dedups converging segmentations across start positions.
+            for hyp in &self.hyps {
+                for (seq, posset) in eng.scanner.traverse(&hyp.posset, bytes) {
+                    let Some(chart) = hyp.chart.feed_all(&eng.earley, &seq) else { continue };
+                    if posset.iter().any(|p| match p {
+                        Pos::In(t, _) => chart.allows(*t),
+                        Pos::Boundary => false,
+                    }) {
+                        return true;
+                    }
                 }
-                let Some(chart) = hyp.chart.feed_all(&eng.earley, &seq) else { continue };
-                if posset.iter().any(|p| match p {
-                    Pos::In(t, _) => chart.allows(*t),
-                    Pos::Boundary => false,
-                }) {
-                    return true;
+            }
+            return false;
+        }
+        for hyp in &self.hyps {
+            for &start in &hyp.posset {
+                let mid_terminal = matches!(start, Pos::In(..));
+                for (seq, posset) in eng.scanner.traverse(&[start], bytes) {
+                    let depth = seq.len() as u32;
+                    let discount = (mid_terminal && depth >= 1) as u32;
+                    if !self.k.admits(depth - discount + 1) {
+                        continue;
+                    }
+                    let Some(chart) = hyp.chart.feed_all(&eng.earley, &seq) else { continue };
+                    if posset.iter().any(|p| match p {
+                        Pos::In(t, _) => chart.allows(*t),
+                        Pos::Boundary => false,
+                    }) {
+                        return true;
+                    }
                 }
             }
         }
@@ -311,16 +350,23 @@ impl Checker for DominoDecoder {
 
     fn state_key(&self) -> Option<u64> {
         // (α, β) of §3.6: α = the pending subterminal set, β = the parser
-        // frontier — folded into one fingerprint.
+        // frontier — folded into one fingerprint, plus the last committed
+        // token (it pins the tokenization phase, which matters for
+        // speculation but not for mask legality).
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         self.last_token.hash(&mut h);
-        for hyp in &self.hyps {
-            hyp.chart.frontier_fingerprint().hash(&mut h);
-            for p in &hyp.posset {
-                p.hash(&mut h);
-            }
-        }
+        self.hash_hyps(&mut h);
+        Some(h.finish())
+    }
+
+    fn mask_key(&self) -> Option<u64> {
+        // Masks depend only on the live hypotheses (and the lookahead k,
+        // which the cache encodes separately), so states reached via
+        // different tokenizations of the same text share cached masks.
+        use std::hash::Hasher;
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash_hyps(&mut h);
         Some(h.finish())
     }
 }
@@ -494,6 +540,23 @@ mod tests {
         assert!(d.check_token(quote_colon), "\": = string starting with colon");
         let comma = (b',' as usize + tokenizer::NUM_SPECIAL) as TokenId;
         assert!(!d.check_token(comma), ", illegal right after {{");
+    }
+
+    #[test]
+    fn mask_key_shared_across_tokenizations() {
+        // Reaching the same text via different tokenizations ("(" "1" "2"
+        // vs "(" "12") must share a mask_key (masks are identical) while
+        // state_key differs (the last token matters for speculation).
+        let eng = fig3_engine();
+        let v = &eng.vocab;
+        let mut by_bytes = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        advance_str(&mut by_bytes, "(12");
+        let mut by_merge = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        by_merge.advance(tok(v, "(")).unwrap();
+        by_merge.advance(tok(v, "12")).unwrap();
+        assert_eq!(by_bytes.mask_key(), by_merge.mask_key());
+        assert_ne!(by_bytes.state_key(), by_merge.state_key());
+        assert_eq!(by_bytes.compute_mask(), by_merge.compute_mask());
     }
 
     #[test]

@@ -116,6 +116,63 @@ mod tests {
     }
 
     #[test]
+    fn all_handles_every_word_edge() {
+        // Non-multiple-of-64 sizes must not leak bits past `size` (those
+        // ghost bits would corrupt count()/is_empty() and cache equality).
+        for size in [1usize, 63, 64, 65, 127, 128, 130, 512] {
+            let m = TokenMask::all(size);
+            assert_eq!(m.count(), size, "size {size}");
+            assert!(m.allowed((size - 1) as TokenId), "top bit of size {size}");
+            assert!(!m.allowed(size as TokenId), "first ghost bit of size {size}");
+            assert_eq!(m.iter().count(), size, "iter agrees for size {size}");
+            assert!(!m.is_empty());
+        }
+    }
+
+    #[test]
+    fn allow_allowed_roundtrip_at_word_boundaries() {
+        let mut m = TokenMask::none(192);
+        let probes: [TokenId; 7] = [0, 63, 64, 65, 127, 128, 191];
+        for &t in &probes {
+            assert!(!m.allowed(t));
+            m.allow(t);
+            assert!(m.allowed(t), "allow({t}) must round-trip");
+        }
+        assert_eq!(m.iter().collect::<Vec<_>>(), probes.to_vec());
+        assert_eq!(m.count(), probes.len());
+        m.forbid(63);
+        m.forbid(128);
+        assert!(!m.allowed(63) && !m.allowed(128));
+        assert_eq!(m.count(), probes.len() - 2);
+        // Out-of-range queries are false, never a panic.
+        assert!(!m.allowed(192));
+        assert!(!m.allowed(10_000));
+    }
+
+    #[test]
+    fn equality_is_cache_key_safe() {
+        // TokenMask is stored/compared by the mask cache: masks built by
+        // different operation orders but with the same bits are equal.
+        let mut a = TokenMask::none(130);
+        let mut b = TokenMask::none(130);
+        for t in [1u32, 64, 129] {
+            a.allow(t);
+        }
+        for t in [129u32, 1, 64] {
+            b.allow(t);
+        }
+        assert_eq!(a, b);
+        b.forbid(64);
+        assert_ne!(a, b);
+        // all() equals an explicitly-filled mask of the same size.
+        let mut c = TokenMask::none(70);
+        for t in 0..70u32 {
+            c.allow(t);
+        }
+        assert_eq!(c, TokenMask::all(70));
+    }
+
+    #[test]
     fn apply_to_logits() {
         let mut m = TokenMask::none(4);
         m.allow(2);

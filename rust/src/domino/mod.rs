@@ -57,6 +57,17 @@ pub trait Checker: Send {
         None
     }
 
+    /// A fingerprint of the state as it determines [`compute_mask`]
+    /// (`Checker::compute_mask`) — i.e. excluding anything mask-irrelevant
+    /// that `state_key` folds in for speculation (DOMINO's last committed
+    /// token pins the tokenization phase, which matters for predicting the
+    /// next token but not for which tokens are legal). Used as the
+    /// mask-cache key: states reached via different tokenizations share
+    /// cached masks. Defaults to [`state_key`](Checker::state_key).
+    fn mask_key(&self) -> Option<u64> {
+        self.state_key()
+    }
+
     /// Byte-level legality check (token healing at the prompt boundary
     /// commits partial tokens, §3.5). Unconstrained checkers accept
     /// everything.

@@ -4,13 +4,13 @@ use super::score;
 use super::workload;
 use crate::baselines::template::{conll_program, gsm8k_program, TemplateRuntime};
 use crate::baselines::OnlineChecker;
+use crate::constraint::{ConstraintSpec, EngineRegistry};
 use crate::domino::decoder::{Engine as GrammarEngine, Lookahead};
 use crate::domino::generate::Prompt;
 use crate::domino::{
     generate, generate_speculative, DominoDecoder, GenConfig, MaskMode, SpeculativeModel,
     Unconstrained,
 };
-use crate::grammar::builtin;
 use crate::runtime::mock::{json_mock, MockLm, MockModel};
 use crate::runtime::pjrt::{artifacts_dir, load_vocab, PjrtLm, PjrtModel};
 use crate::runtime::sampler::Sampling;
@@ -31,16 +31,28 @@ pub struct Setup {
     pub vocab: Arc<Vocab>,
     pub backend: Backend,
     pub backend_name: &'static str,
+    /// Shared compiled-engine cache: bench tables request the same
+    /// grammar row after row, so precompute is paid once per grammar.
+    pub registry: Arc<EngineRegistry>,
 }
+
+/// Engines kept hot by the harness registry (≥ the builtin grammar set).
+const REGISTRY_CAPACITY: usize = 16;
 
 impl Setup {
     /// Load artifacts if available, else fall back to the mock LM.
     pub fn load() -> Setup {
+        let registry = EngineRegistry::new(REGISTRY_CAPACITY);
         let dir = artifacts_dir();
         if dir.join("model_config.json").exists() {
             match (PjrtModel::load(&dir), load_vocab(&dir)) {
                 (Ok(model), Ok(vocab)) => {
-                    return Setup { vocab, backend: Backend::Pjrt(model), backend_name: "pjrt-aot" };
+                    return Setup {
+                        vocab,
+                        backend: Backend::Pjrt(model),
+                        backend_name: "pjrt-aot",
+                        registry,
+                    };
                 }
                 (a, b) => {
                     eprintln!(
@@ -52,7 +64,7 @@ impl Setup {
             }
         }
         let (vocab, model) = json_mock(512);
-        Setup { vocab, backend: Backend::Mock(model), backend_name: "mock-trigram" }
+        Setup { vocab, backend: Backend::Mock(model), backend_name: "mock-trigram", registry }
     }
 
     pub fn session(&self) -> crate::Result<Box<dyn LmSession>> {
@@ -62,10 +74,11 @@ impl Setup {
         })
     }
 
+    /// Compiled engine for a builtin grammar, via the shared registry.
     pub fn engine(&self, grammar: &str) -> crate::Result<Arc<GrammarEngine>> {
-        let cfg = builtin::by_name(grammar)
-            .ok_or_else(|| anyhow::anyhow!("unknown grammar {grammar}"))?;
-        GrammarEngine::compile(cfg, self.vocab.clone())
+        let (engine, _masks) =
+            self.registry.get_or_compile(&ConstraintSpec::builtin(grammar), &self.vocab)?;
+        Ok(engine)
     }
 }
 
@@ -358,7 +371,22 @@ mod tests {
     /// A mock-backed setup for fast tests regardless of artifacts.
     fn mock_setup() -> Setup {
         let (vocab, model) = json_mock(512);
-        Setup { vocab, backend: Backend::Mock(model), backend_name: "mock" }
+        Setup {
+            vocab,
+            backend: Backend::Mock(model),
+            backend_name: "mock",
+            registry: EngineRegistry::new(REGISTRY_CAPACITY),
+        }
+    }
+
+    #[test]
+    fn setup_engine_is_cached() {
+        let setup = mock_setup();
+        let e1 = setup.engine("json").unwrap();
+        let e2 = setup.engine("json").unwrap();
+        assert!(Arc::ptr_eq(&e1, &e2), "registry must dedupe engine compiles");
+        let s = setup.registry.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
     }
 
     #[test]

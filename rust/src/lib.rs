@@ -13,14 +13,20 @@
 //!    trees per Alg. 2, lookahead-k masking, opportunistic masking and
 //!    count-based speculative decoding, §3.5–3.6), plus the [`baselines`]
 //!    the paper evaluates against.
-//! 3. **Serving runtime** — [`runtime`] (PJRT client over AOT-compiled JAX
-//!    HLO; python never runs on the request path), [`server`] (router +
-//!    dynamic batcher), [`eval`] (workloads, metrics, the paper's tables).
+//! 3. **Serving runtime** — [`constraint`] (first-class constraint specs,
+//!    the shared [`EngineRegistry`](constraint::EngineRegistry) that
+//!    amortizes grammar precomputation across requests, and the
+//!    state-keyed mask cache), [`runtime`] (PJRT client over AOT-compiled
+//!    JAX HLO; python never runs on the request path — gated behind the
+//!    `xla` cargo feature, with the mock backend as the default),
+//!    [`server`] (router + dynamic batcher), [`eval`] (workloads,
+//!    metrics, the paper's tables).
 //!
-//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
-//! measured results.
+//! See `DESIGN.md` for the per-experiment index and the constraint
+//! pipeline's architecture notes.
 
 pub mod baselines;
+pub mod constraint;
 pub mod domino;
 pub mod eval;
 pub mod grammar;

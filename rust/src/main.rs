@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! domino serve [--addr 127.0.0.1:7761] [--slots 4]
-//! domino generate --prompt "..." [--grammar json] [--method domino]
+//! domino generate --prompt "..." [--grammar json | --ebnf SRC |
+//!                 --ebnf-file PATH | --regex PATTERN | --stop "a,b"]
+//!                 [--method domino|domino-full|online|unconstrained]
 //!                 [--k N] [--speculative S] [--max-tokens N]
 //!                 [--temperature T] [--seed N]
 //! domino grammar <name>         # inspect: terminals, tree sizes, precompute time
@@ -13,12 +15,13 @@
 //! `./artifacts`); `domino generate --mock` uses the test trigram LM
 //! instead.
 
+use domino::constraint::{Constraint, ConstraintSpec};
 use domino::domino::decoder::Engine as GrammarEngine;
 use domino::grammar::builtin;
 use domino::runtime::mock::{json_mock, MockFactory};
 use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
 use domino::scanner::Scanner;
-use domino::server::engine::{Constraint, EngineCtx, GenRequest, Server};
+use domino::server::engine::{EngineCtx, GenRequest, Server};
 use domino::server::tcp;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -63,26 +66,36 @@ fn start_server(flags: &HashMap<String, String>) -> Server {
     )
 }
 
+/// Build the request constraint from CLI flags. The spec comes from one
+/// of `--ebnf-file` / `--ebnf` / `--regex` / `--grammar` / `--stop`
+/// (first present wins); the enforcement from `--method` / `--k` /
+/// `--speculative`.
+fn parse_constraint(flags: &HashMap<String, String>) -> domino::Result<Constraint> {
+    let method = flags.get("method").map(|s| s.as_str()).unwrap_or("domino");
+    let spec = if let Some(path) = flags.get("ebnf-file") {
+        Some(ConstraintSpec::ebnf(std::fs::read_to_string(path)?))
+    } else if let Some(src) = flags.get("ebnf") {
+        Some(ConstraintSpec::ebnf(src.clone()))
+    } else if let Some(p) = flags.get("regex") {
+        Some(ConstraintSpec::regex(p.clone()))
+    } else if let Some(g) = flags.get("grammar") {
+        Some(ConstraintSpec::builtin(g.clone()))
+    } else {
+        flags
+            .get("stop")
+            .map(|s| ConstraintSpec::stop(s.split(',').map(|x| x.to_string()).collect()))
+    };
+    Ok(Constraint::from_parts(
+        method,
+        spec,
+        flags.get("k").and_then(|k| k.parse().ok()),
+        flags.get("speculative").and_then(|s| s.parse().ok()),
+    ))
+}
+
 fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
     let server = start_server(&flags);
-    let method = flags.get("method").map(|s| s.as_str()).unwrap_or("domino");
-    let grammar = flags.get("grammar").cloned();
-    let constraint = match (method, grammar) {
-        ("unconstrained", _) | (_, None) => Constraint::None,
-        ("online", Some(g)) => Constraint::Online { grammar: g },
-        ("domino-full", Some(g)) => Constraint::Domino {
-            grammar: g,
-            k: flags.get("k").and_then(|k| k.parse().ok()),
-            speculative: None,
-            full_mask: true,
-        },
-        (_, Some(g)) => Constraint::Domino {
-            grammar: g,
-            k: flags.get("k").and_then(|k| k.parse().ok()),
-            speculative: flags.get("speculative").and_then(|s| s.parse().ok()),
-            full_mask: false,
-        },
-    };
+    let constraint = parse_constraint(&flags)?;
     let req = GenRequest {
         prompt: flags.get("prompt").cloned().unwrap_or_default(),
         constraint,
@@ -104,6 +117,15 @@ fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
         resp.stats.model_calls,
         resp.stats.spec_accepted,
     );
+    if let Ok(m) = server.metrics() {
+        eprintln!(
+            "# registry: {} hit / {} miss ({} ms compiling) | mask cache {:.0}% hit",
+            m.registry_hits,
+            m.registry_misses,
+            m.engine_compile_ms,
+            m.mask_cache_hit_rate() * 100.0,
+        );
+    }
     server.shutdown();
     Ok(())
 }
@@ -161,7 +183,9 @@ fn main() {
                 "usage: domino <serve|generate|grammar|grammars> [flags]\n\
                  \n\
                  serve     --addr HOST:PORT --slots N [--mock]\n\
-                 generate  --prompt STR [--grammar NAME] [--method domino|domino-full|online|unconstrained]\n\
+                 generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
+                 \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
+                 \u{20}          [--method domino|domino-full|online|unconstrained]\n\
                  \u{20}          [--k N] [--speculative S] [--max-tokens N] [--temperature T] [--seed N] [--mock]\n\
                  grammar   NAME    inspect a builtin grammar\n\
                  grammars          list builtin grammars"

@@ -1,0 +1,81 @@
+//! AOT-bundle metadata shared by the real PJRT backend and its stub.
+//!
+//! Everything here is `xla`-free: locating the artifacts directory,
+//! parsing `model_config.json`, loading the bundled tokenizer. The
+//! heavyweight parts (device buffers, executables) live in
+//! [`super::pjrt`], which is gated behind the `xla` cargo feature.
+
+use crate::util::Json;
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Parsed `model_config.json`.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub param_order: Vec<String>,
+    /// (batch, chunk, hlo file name).
+    pub variants: Vec<(usize, usize, String)>,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<ModelConfig> {
+        let text = std::fs::read_to_string(dir.join("model_config.json"))
+            .with_context(|| format!("reading model_config.json in {}", dir.display()))?;
+        let v = Json::parse(&text)?;
+        let model = v.get("model").context("model key")?;
+        let get = |k: &str| -> crate::Result<usize> {
+            Ok(model.get(k).and_then(|x| x.as_f64()).with_context(|| format!("model.{k}"))?
+                as usize)
+        };
+        let param_order = v
+            .get("param_order")
+            .and_then(|x| x.as_arr())
+            .context("param_order")?
+            .iter()
+            .map(|s| s.as_str().unwrap_or_default().to_string())
+            .collect();
+        let variants = v
+            .get("variants")
+            .and_then(|x| x.as_arr())
+            .context("variants")?
+            .iter()
+            .map(|e| {
+                let b = e.get("batch").and_then(|x| x.as_f64()).unwrap_or(0.0) as usize;
+                let c = e.get("chunk").and_then(|x| x.as_f64()).unwrap_or(0.0) as usize;
+                let f = e.get("file").and_then(|x| x.as_str()).unwrap_or_default().to_string();
+                (b, c, f)
+            })
+            .collect();
+        Ok(ModelConfig {
+            vocab_size: get("vocab_size")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            max_seq: get("max_seq")?,
+            param_order,
+            variants,
+        })
+    }
+}
+
+/// Locate the artifacts directory: `$DOMINO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DOMINO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Load the tokenizer that ships with the bundle.
+pub fn load_vocab(dir: &Path) -> crate::Result<Arc<crate::tokenizer::Vocab>> {
+    Ok(Arc::new(crate::tokenizer::Vocab::load(&dir.join("tokenizer.json"))?))
+}

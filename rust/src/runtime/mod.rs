@@ -7,12 +7,22 @@
 //! Implementations:
 //! * [`pjrt::PjrtLm`] — the real thing: loads the AOT-compiled JAX model
 //!   (`artifacts/*.hlo.txt` + `weights.npz`) and executes it on the PJRT
-//!   CPU client via the `xla` crate. Python never runs here.
+//!   CPU client via the `xla` crate. Python never runs here. Gated behind
+//!   the off-by-default `xla` cargo feature (the vendored `xla` crate is
+//!   not available offline); without it, `pjrt_stub.rs` keeps the same
+//!   API and fails at load time with a clear message.
 //! * [`mock::MockLm`] — a deterministic n-gram LM over a synthetic corpus;
 //!   used by unit/integration tests and baselines benches so the grammar
-//!   machinery can be exercised without artifacts.
+//!   machinery can be exercised without artifacts. The default backend.
+//! * [`artifacts`] — `xla`-free bundle metadata (model config, tokenizer),
+//!   shared by both pjrt variants.
 
+pub mod artifacts;
 pub mod mock;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod sampler;
 

@@ -1,0 +1,111 @@
+//! Stub PJRT backend, compiled when the `xla` cargo feature is OFF
+//! (the default — the vendored `xla` crate is not available offline).
+//!
+//! Presents the same API surface as the real `runtime::pjrt` so callers
+//! (CLI, eval harness, examples, integration tests) compile unchanged;
+//! loading the bundle reports a clear error and everything falls back to
+//! [`super::mock`]. Bundle *metadata* (config, tokenizer) still loads —
+//! that part is `xla`-free and lives in [`super::artifacts`].
+
+use super::{LmFactory, LmSession};
+use crate::TokenId;
+use anyhow::bail;
+use std::path::Path;
+use std::sync::Arc;
+
+pub use super::artifacts::{artifacts_dir, load_vocab, ModelConfig};
+
+const NO_XLA: &str = "this build has no PJRT backend (compiled without the `xla` cargo \
+                      feature); use the mock backend, or rebuild with `--features xla` \
+                      after adding the vendored `xla` crate to Cargo.toml";
+
+/// Stub of the loaded model. Never constructible: [`PjrtModel::load`]
+/// always fails in a no-`xla` build.
+pub struct PjrtModel {
+    pub config: ModelConfig,
+}
+
+impl PjrtModel {
+    pub fn load(_dir: &Path) -> crate::Result<Arc<PjrtModel>> {
+        bail!(NO_XLA)
+    }
+
+    pub fn load_default() -> crate::Result<Arc<PjrtModel>> {
+        bail!(NO_XLA)
+    }
+
+    pub fn chunk_sizes(&self, _b: usize) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn batch_widths(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn new_cache(&self, _b: usize) -> crate::Result<CacheBufs> {
+        bail!(NO_XLA)
+    }
+
+    pub fn run(
+        &self,
+        _b: usize,
+        _c: usize,
+        _cache: &CacheBufs,
+        _kv_len: &[i32],
+        _tokens: &[i32],
+        _mask: Option<&[f32]>,
+    ) -> crate::Result<(Vec<f32>, CacheBufs)> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Stub KV-cache handle.
+pub struct CacheBufs {}
+
+/// Stub session; never constructible.
+pub struct PjrtLm {
+    _model: Arc<PjrtModel>,
+}
+
+impl PjrtLm {
+    pub fn new(_model: Arc<PjrtModel>) -> crate::Result<PjrtLm> {
+        bail!(NO_XLA)
+    }
+}
+
+impl LmSession for PjrtLm {
+    fn vocab_size(&self) -> usize {
+        0
+    }
+
+    fn len(&self) -> usize {
+        0
+    }
+
+    fn append(&mut self, _tokens: &[TokenId]) -> crate::Result<Vec<f32>> {
+        bail!(NO_XLA)
+    }
+
+    fn append_scored(&mut self, _tokens: &[TokenId]) -> crate::Result<Vec<Vec<f32>>> {
+        bail!(NO_XLA)
+    }
+
+    fn rollback(&mut self, _n: usize) -> crate::Result<()> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Stub factory mirroring `pjrt::PjrtFactory`.
+pub struct PjrtFactory {
+    pub model: Arc<PjrtModel>,
+}
+
+impl LmFactory for PjrtFactory {
+    fn vocab_size(&self) -> usize {
+        self.model.config.vocab_size
+    }
+
+    fn new_session(&self) -> crate::Result<Box<dyn LmSession>> {
+        bail!(NO_XLA)
+    }
+}

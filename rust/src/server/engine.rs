@@ -6,12 +6,18 @@
 //! slots and steps every active slot by one decode iteration, so long
 //! requests don't block short ones (iteration-level scheduling, as in
 //! Orca/vLLM).
+//!
+//! Constraints arrive as first-class [`Constraint`] values (spec + how to
+//! enforce it — see [`crate::constraint`]). Admission resolves them
+//! through the shared [`EngineRegistry`], so the expensive per-grammar
+//! precomputation (§3.5) happens exactly once per distinct grammar, and
+//! checkers share each engine's state-keyed mask cache across slots.
 
 use super::metrics::Metrics;
 use super::slot::{DecodeMode, Slot, SlotStats};
-use crate::domino::decoder::{Engine as GrammarEngine, Lookahead};
+use crate::constraint::{CachedChecker, EngineRegistry, MaskCache, StopChecker};
+use crate::domino::decoder::Lookahead;
 use crate::domino::{DominoDecoder, SpeculativeModel};
-use crate::grammar::builtin;
 use crate::runtime::sampler::Sampling;
 use crate::runtime::LmFactory;
 use crate::tokenizer::Vocab;
@@ -21,15 +27,15 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Constraint selection for a request.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Constraint {
-    None,
-    /// Grammar by builtin name, DOMINO decoder.
-    Domino { grammar: String, k: Option<u32>, speculative: Option<usize>, full_mask: bool },
-    /// Grammar by builtin name, online full-vocab baseline.
-    Online { grammar: String },
-}
+pub use crate::constraint::{Constraint, ConstraintSpec, Enforcement};
+
+/// Compiled engines kept hot by default (per engine thread).
+const DEFAULT_REGISTRY_CAPACITY: usize = 32;
+
+/// Speculation-prior models kept per constraint fingerprint. Bounded for
+/// the same reason the registry is: inline constraints make the key space
+/// adversarial, and priors are a performance aid, not correctness.
+const SPEC_MODEL_CAPACITY: usize = 256;
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -45,7 +51,7 @@ impl Default for GenRequest {
     fn default() -> Self {
         GenRequest {
             prompt: String::new(),
-            constraint: Constraint::None,
+            constraint: Constraint::none(),
             max_tokens: 128,
             temperature: None,
             seed: 0,
@@ -68,60 +74,95 @@ pub struct GenResponse {
 pub struct EngineCtx {
     pub factory: Box<dyn LmFactory>,
     pub vocab: Arc<Vocab>,
-    /// Precompiled grammar engines (name → engine), lazily extended.
-    pub grammars: HashMap<String, Arc<GrammarEngine>>,
-    /// Shared speculation priors per grammar (§4.2: priors formed over
-    /// warmup requests, then reused).
-    pub specs: HashMap<String, Arc<Mutex<SpeculativeModel>>>,
+    /// Compiled-engine cache shared across requests (and, if the caller
+    /// passes one in, across engine threads / benches too).
+    pub registry: Arc<EngineRegistry>,
+    /// Shared speculation priors per constraint fingerprint (§4.2: priors
+    /// formed over warmup requests, then reused).
+    specs: HashMap<u64, Arc<Mutex<SpeculativeModel>>>,
 }
 
 impl EngineCtx {
     pub fn new(factory: Box<dyn LmFactory>, vocab: Arc<Vocab>) -> EngineCtx {
-        EngineCtx { factory, vocab, grammars: HashMap::new(), specs: HashMap::new() }
+        Self::with_registry(factory, vocab, EngineRegistry::new(DEFAULT_REGISTRY_CAPACITY))
     }
 
-    fn grammar_engine(&mut self, name: &str) -> crate::Result<Arc<GrammarEngine>> {
-        if let Some(e) = self.grammars.get(name) {
-            return Ok(e.clone());
+    pub fn with_registry(
+        factory: Box<dyn LmFactory>,
+        vocab: Arc<Vocab>,
+        registry: Arc<EngineRegistry>,
+    ) -> EngineCtx {
+        EngineCtx { factory, vocab, registry, specs: HashMap::new() }
+    }
+
+    fn spec_model(&mut self, fingerprint: u64) -> Arc<Mutex<SpeculativeModel>> {
+        if !self.specs.contains_key(&fingerprint) && self.specs.len() >= SPEC_MODEL_CAPACITY {
+            // Drop an arbitrary prior: losing one only costs warmup
+            // quality for that grammar, and it keeps a stream of distinct
+            // inline constraints from growing this map without bound.
+            let victim = self.specs.keys().next().copied();
+            if let Some(victim) = victim {
+                self.specs.remove(&victim);
+            }
         }
-        let cfg = builtin::by_name(name).with_context(|| format!("unknown grammar `{name}`"))?;
-        let engine = GrammarEngine::compile(cfg, self.vocab.clone())?;
-        self.grammars.insert(name.to_string(), engine.clone());
-        Ok(engine)
-    }
-
-    fn spec_model(&mut self, name: &str) -> Arc<Mutex<SpeculativeModel>> {
         self.specs
-            .entry(name.to_string())
+            .entry(fingerprint)
             .or_insert_with(|| Arc::new(Mutex::new(SpeculativeModel::new(0.75))))
             .clone()
     }
 
+    /// Resolve a request's constraint into a decode mode. Grammar-backed
+    /// specs go through the registry (compile once, reuse forever) and
+    /// their checkers share the engine's mask cache, so a warm-registry
+    /// request constructs no engine and often not even a mask.
     fn build_mode(&mut self, c: &Constraint) -> crate::Result<DecodeMode> {
-        Ok(match c {
-            Constraint::None => DecodeMode::Unconstrained,
-            Constraint::Domino { grammar, k, speculative, full_mask } => {
-                let engine = self.grammar_engine(grammar)?;
-                let lookahead = match k {
-                    Some(k) => Lookahead::K(*k),
-                    None => Lookahead::Infinite,
-                };
-                let decoder = DominoDecoder::new(engine, lookahead);
-                match speculative {
-                    Some(s) => DecodeMode::Speculative {
-                        decoder,
-                        spec: self.spec_model(grammar),
-                        s: *s,
-                    },
-                    None if *full_mask => DecodeMode::FullMask(Box::new(decoder)),
-                    None => DecodeMode::Opportunistic(Box::new(decoder)),
+        match &c.spec {
+            ConstraintSpec::Unconstrained => Ok(DecodeMode::Unconstrained),
+            ConstraintSpec::Stop { sequences } => Ok(DecodeMode::Opportunistic(Box::new(
+                StopChecker::new(self.vocab.clone(), sequences),
+            ))),
+            spec => {
+                let (engine, masks) = self.registry.get_or_compile(spec, &self.vocab)?;
+                match &c.enforcement {
+                    Enforcement::Online => {
+                        let checker = crate::baselines::OnlineChecker::new(engine);
+                        let cached = CachedChecker::new(
+                            Box::new(checker),
+                            masks,
+                            MaskCache::variant(Lookahead::Infinite),
+                        );
+                        Ok(DecodeMode::Opportunistic(Box::new(cached)))
+                    }
+                    Enforcement::Domino { k, speculative, full_mask } => {
+                        let lookahead = match k {
+                            Some(k) => Lookahead::K(*k),
+                            None => Lookahead::Infinite,
+                        };
+                        let decoder = DominoDecoder::new(engine, lookahead);
+                        if let Some(s) = speculative {
+                            Ok(DecodeMode::Speculative {
+                                decoder,
+                                spec: self.spec_model(spec.fingerprint()),
+                                s: *s,
+                                masks,
+                                variant: MaskCache::variant(lookahead),
+                            })
+                        } else {
+                            let cached = CachedChecker::new(
+                                Box::new(decoder),
+                                masks,
+                                MaskCache::variant(lookahead),
+                            );
+                            Ok(if *full_mask {
+                                DecodeMode::FullMask(Box::new(cached))
+                            } else {
+                                DecodeMode::Opportunistic(Box::new(cached))
+                            })
+                        }
+                    }
                 }
             }
-            Constraint::Online { grammar } => {
-                let engine = self.grammar_engine(grammar)?;
-                DecodeMode::Opportunistic(Box::new(crate::baselines::OnlineChecker::new(engine)))
-            }
-        })
+        }
     }
 }
 
@@ -215,6 +256,24 @@ struct Active {
     first_token_at: Option<Instant>,
 }
 
+/// Metrics snapshot: the engine-loop counters plus the registry's and
+/// mask caches' (pulled at read time — they live in concurrent caches,
+/// not the loop).
+fn metrics_snapshot(metrics: &Metrics, ctx: &EngineCtx) -> Metrics {
+    let mut m = metrics.clone();
+    let r = ctx.registry.stats();
+    m.registry_hits = r.hits;
+    m.registry_misses = r.misses;
+    m.registry_evictions = r.evictions;
+    m.registry_coalesced = r.coalesced;
+    m.engine_compile_ms = r.compile_ms;
+    let mc = ctx.registry.mask_stats();
+    m.mask_cache_hits = mc.hits;
+    m.mask_cache_misses = mc.misses;
+    m.mask_cache_evictions = mc.evictions;
+    m
+}
+
 fn engine_loop(mut ctx: EngineCtx, rx: mpsc::Receiver<Job>, max_slots: usize) {
     let mut queue: Vec<(GenRequest, mpsc::Sender<GenResponse>)> = Vec::new();
     let mut active: Vec<Active> = Vec::new();
@@ -228,7 +287,7 @@ fn engine_loop(mut ctx: EngineCtx, rx: mpsc::Receiver<Job>, max_slots: usize) {
                 Ok(job) => match job {
                     Job::Generate(r, tx) => queue.push((r, tx)),
                     Job::Stats(tx) => {
-                        let _ = tx.send(metrics.clone());
+                        let _ = tx.send(metrics_snapshot(&metrics, &ctx));
                         continue;
                     }
                     Job::Shutdown => return,
@@ -240,7 +299,7 @@ fn engine_loop(mut ctx: EngineCtx, rx: mpsc::Receiver<Job>, max_slots: usize) {
             match rx.try_recv() {
                 Ok(Job::Generate(r, tx)) => queue.push((r, tx)),
                 Ok(Job::Stats(tx)) => {
-                    let _ = tx.send(metrics.clone());
+                    let _ = tx.send(metrics_snapshot(&metrics, &ctx));
                 }
                 Ok(Job::Shutdown) => return,
                 Err(mpsc::TryRecvError::Empty) => break,

@@ -62,6 +62,22 @@ pub struct Metrics {
     pub masks_computed: u64,
     pub spec_proposed: u64,
     pub spec_accepted: u64,
+    /// Engine-registry lookups served from cache.
+    pub registry_hits: u64,
+    /// Engine-registry lookups that compiled a grammar.
+    pub registry_misses: u64,
+    /// Engines dropped by LRU eviction.
+    pub registry_evictions: u64,
+    /// Lookups that waited on a concurrent build instead of compiling.
+    pub registry_coalesced: u64,
+    /// Total wall time spent compiling grammar engines, milliseconds.
+    pub engine_compile_ms: u64,
+    /// State-keyed mask-cache hits (mask reused, no tree traversal).
+    pub mask_cache_hits: u64,
+    /// Mask-cache misses (mask computed and cached).
+    pub mask_cache_misses: u64,
+    /// Masks dropped by LRU eviction.
+    pub mask_cache_evictions: u64,
     /// Time to first token, seconds.
     pub ttft: Summary,
     /// Per-request tokens/second.
@@ -77,7 +93,9 @@ impl Metrics {
         format!(
             "requests: {} ok / {} failed | tokens: {} | model calls: {} | \
              interventions: {} | masks: {} | spec: {}/{} accepted | \
-             ttft p50 {:.1} ms | req tps mean {:.1}",
+             ttft p50 {:.1} ms | req tps mean {:.1} | \
+             registry: {} hit / {} miss / {} evict / {} coalesced ({} ms compiling) | \
+             mask cache: {} hit / {} miss ({:.0}% hit rate)",
             self.requests_completed,
             self.requests_failed,
             self.tokens_generated,
@@ -88,7 +106,25 @@ impl Metrics {
             self.spec_proposed,
             self.ttft.percentile(0.5) * 1e3,
             self.req_tps.mean(),
+            self.registry_hits,
+            self.registry_misses,
+            self.registry_evictions,
+            self.registry_coalesced,
+            self.engine_compile_ms,
+            self.mask_cache_hits,
+            self.mask_cache_misses,
+            self.mask_cache_hit_rate() * 100.0,
         )
+    }
+
+    /// Mask-cache hit rate in [0, 1] (0 when no lookups yet).
+    pub fn mask_cache_hit_rate(&self) -> f64 {
+        let total = self.mask_cache_hits + self.mask_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.mask_cache_hits as f64 / total as f64
+        }
     }
 }
 
@@ -112,7 +148,13 @@ mod tests {
 
     #[test]
     fn report_formats() {
-        let m = Metrics::default();
+        let mut m = Metrics::default();
         assert!(m.report().contains("requests"));
+        assert!(m.report().contains("registry"));
+        assert_eq!(m.mask_cache_hit_rate(), 0.0, "no lookups yet");
+        m.mask_cache_hits = 3;
+        m.mask_cache_misses = 1;
+        assert!((m.mask_cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(m.report().contains("75% hit rate"));
     }
 }

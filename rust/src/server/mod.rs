@@ -28,6 +28,6 @@ pub mod metrics;
 pub mod slot;
 pub mod tcp;
 
-pub use engine::{EngineCtx, GenRequest, GenResponse, Server};
+pub use engine::{Constraint, ConstraintSpec, Enforcement, EngineCtx, GenRequest, GenResponse, Server};
 pub use metrics::Metrics;
 pub use slot::DecodeMode;

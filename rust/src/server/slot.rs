@@ -1,5 +1,6 @@
 //! One in-flight request slot.
 
+use crate::constraint::MaskCache;
 use crate::domino::generate::Prompt;
 use crate::domino::{Checker, DominoDecoder, SpeculativeModel, TokenMask};
 use crate::runtime::sampler::{decode, log_prob, Sampling};
@@ -10,6 +11,11 @@ use crate::TokenId;
 use std::sync::Arc;
 
 /// How this request is constrained/decoded.
+///
+/// Grammar-backed checkers arrive here wrapped in
+/// [`crate::constraint::CachedChecker`], so mask computations hit the
+/// engine's shared state-keyed cache before traversing trees (or, for
+/// the online baseline, scanning the vocabulary).
 pub enum DecodeMode {
     /// No constraint.
     Unconstrained,
@@ -20,8 +26,33 @@ pub enum DecodeMode {
     FullMask(Box<dyn Checker>),
     /// DOMINO with count-based speculation (§3.6). The model is shared
     /// across requests of the same grammar (that is what makes the priors
-    /// useful).
-    Speculative { decoder: DominoDecoder, spec: Arc<std::sync::Mutex<SpeculativeModel>>, s: usize },
+    /// useful), and so is the engine's mask cache — speculation needs the
+    /// concrete decoder (no [`crate::constraint::CachedChecker`] wrapper),
+    /// so its mask computations go through the cache explicitly.
+    Speculative {
+        decoder: DominoDecoder,
+        spec: Arc<std::sync::Mutex<SpeculativeModel>>,
+        s: usize,
+        masks: Arc<MaskCache>,
+        variant: u64,
+    },
+}
+
+/// A mask for `decoder`'s current state via the shared cache (compute and
+/// fill on miss) — the speculative path's equivalent of
+/// [`crate::constraint::CachedChecker::compute_mask`].
+fn cached_mask(decoder: &mut DominoDecoder, masks: &MaskCache, variant: u64) -> TokenMask {
+    match decoder.mask_key() {
+        Some(state) => match masks.get(variant, state) {
+            Some(m) => m,
+            None => {
+                let m = decoder.compute_mask();
+                masks.put(variant, state, m.clone());
+                m
+            }
+        },
+        None => decoder.compute_mask(),
+    }
 }
 
 impl DecodeMode {
@@ -223,7 +254,7 @@ impl Slot {
             return Ok(());
         }
         // Speculative fast path.
-        if let DecodeMode::Speculative { decoder, spec, s } = &mut self.mode {
+        if let DecodeMode::Speculative { decoder, spec, s, masks, variant } = &mut self.mode {
             let proposal = {
                 let spec_guard = spec.lock().expect("spec lock");
                 spec_guard.propose(decoder, *s)
@@ -239,7 +270,7 @@ impl Slot {
                         choice
                     } else {
                         self.stats.interventions += 1;
-                        let mask = decoder.compute_mask();
+                        let mask = cached_mask(decoder, masks, *variant);
                         self.stats.masks_computed += 1;
                         if mask.is_empty() {
                             break;
@@ -302,7 +333,7 @@ impl Slot {
                     proposal
                 } else {
                     self.stats.interventions += 1;
-                    let mask = decoder.compute_mask();
+                    let mask = cached_mask(decoder, masks, *variant);
                     self.stats.masks_computed += 1;
                     if mask.is_empty() {
                         self.done = true;

@@ -10,13 +10,20 @@
 //! ```
 //! `method`: "unconstrained" | "domino" | "domino-full" | "online".
 //!
+//! The constraint itself is any ONE of (first match wins):
+//! * `"ebnf": "root ::= ..."` — an inline grammar in the crate's EBNF
+//!   notation, compiled on first sight and cached by content hash;
+//! * `"regex": "[0-9]+"` — output is exactly one match of the pattern;
+//! * `"grammar": "json"` — a builtin evaluation grammar by name;
+//! * `"stop": ["\n\n"]` — free generation until a stop sequence appears.
+//!
 //! Response:
 //! ```json
 //! {"text": "...", "tokens": 42, "interventions": 0, "model_calls": 40,
-//!  "elapsed_s": 0.8, "error": null}
+//!  "masks": 3, "elapsed_s": 0.8, "error": null}
 //! ```
 
-use super::engine::{Constraint, GenRequest, GenResponse, Server};
+use super::engine::{Constraint, ConstraintSpec, GenRequest, GenResponse, Server};
 use crate::util::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,18 +33,36 @@ use std::sync::Arc;
 pub fn parse_request(line: &str) -> crate::Result<GenRequest> {
     let v = Json::parse(line)?;
     let prompt = v.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string();
-    let grammar = v.get("grammar").and_then(|g| g.as_str()).map(|s| s.to_string());
     let method = v.get("method").and_then(|m| m.as_str()).unwrap_or("domino");
     let k = v.get("k").and_then(|k| k.as_f64()).map(|k| k as u32);
     let speculative = v.get("speculative").and_then(|s| s.as_f64()).map(|s| s as usize);
-    let constraint = match (method, grammar) {
-        ("unconstrained", _) | (_, None) => Constraint::None,
-        ("online", Some(g)) => Constraint::Online { grammar: g },
-        ("domino-full", Some(g)) => {
-            Constraint::Domino { grammar: g, k, speculative: None, full_mask: true }
+    // `stop` accepts the scalar form common to serving APIs as well as an
+    // array; anything else is an error rather than a silent no-constraint.
+    let stop: Option<Vec<String>> = match v.get("stop") {
+        None => None,
+        Some(Json::Str(s)) => Some(vec![s.clone()]),
+        Some(Json::Arr(a)) => {
+            let mut seqs = Vec::with_capacity(a.len());
+            for x in a {
+                match x.as_str() {
+                    Some(s) => seqs.push(s.to_string()),
+                    None => anyhow::bail!("stop entries must be strings"),
+                }
+            }
+            Some(seqs)
         }
-        (_, Some(g)) => Constraint::Domino { grammar: g, k, speculative, full_mask: false },
+        Some(_) => anyhow::bail!("stop must be a string or an array of strings"),
     };
+    let spec = if let Some(src) = v.get("ebnf").and_then(|g| g.as_str()) {
+        Some(ConstraintSpec::ebnf(src))
+    } else if let Some(p) = v.get("regex").and_then(|g| g.as_str()) {
+        Some(ConstraintSpec::regex(p))
+    } else if let Some(g) = v.get("grammar").and_then(|g| g.as_str()) {
+        Some(ConstraintSpec::builtin(g))
+    } else {
+        stop.map(ConstraintSpec::stop)
+    };
+    let constraint = Constraint::from_parts(method, spec, k, speculative);
     Ok(GenRequest {
         prompt,
         constraint,
@@ -54,6 +79,7 @@ pub fn format_response(resp: &GenResponse) -> String {
         ("tokens", Json::Num(resp.stats.tokens_out as f64)),
         ("interventions", Json::Num(resp.stats.interventions as f64)),
         ("model_calls", Json::Num(resp.stats.model_calls as f64)),
+        ("masks", Json::Num(resp.stats.masks_computed as f64)),
         ("spec_accepted", Json::Num(resp.stats.spec_accepted as f64)),
         ("stopped", Json::Bool(resp.stats.stopped)),
         ("elapsed_s", Json::Num(resp.elapsed_s)),
@@ -105,7 +131,6 @@ pub fn serve(server: Server, addr: &str) -> crate::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::server::engine::Constraint;
 
     #[test]
     fn parses_request_variants() {
@@ -113,18 +138,44 @@ mod tests {
         assert_eq!(r.prompt, "hi");
         assert_eq!(
             r.constraint,
-            Constraint::Domino {
-                grammar: "json".into(),
-                k: None,
-                speculative: Some(8),
-                full_mask: false
-            }
+            Constraint::domino(ConstraintSpec::builtin("json")).with_speculation(8)
         );
         let r = parse_request(r#"{"prompt": "x", "method": "unconstrained"}"#).unwrap();
-        assert_eq!(r.constraint, Constraint::None);
+        assert_eq!(r.constraint, Constraint::none());
         let r = parse_request(r#"{"prompt": "x", "grammar": "c", "method": "online"}"#).unwrap();
-        assert_eq!(r.constraint, Constraint::Online { grammar: "c".into() });
+        assert_eq!(r.constraint, Constraint::online(ConstraintSpec::builtin("c")));
+        let r = parse_request(r#"{"prompt": "x", "grammar": "json", "method": "domino-full", "k": 1}"#)
+            .unwrap();
+        assert_eq!(
+            r.constraint,
+            Constraint::domino(ConstraintSpec::builtin("json"))
+                .with_lookahead(Some(1))
+                .with_full_mask()
+        );
         assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn parses_inline_constraints() {
+        let r = parse_request(r#"{"prompt": "x", "ebnf": "root ::= \"a\""}"#).unwrap();
+        assert_eq!(r.constraint.spec, ConstraintSpec::ebnf("root ::= \"a\""));
+        let r = parse_request(r#"{"prompt": "x", "regex": "[0-9]+"}"#).unwrap();
+        assert_eq!(r.constraint.spec, ConstraintSpec::regex("[0-9]+"));
+        let r = parse_request(r#"{"prompt": "x", "stop": ["\n\n", "```"]}"#).unwrap();
+        assert_eq!(
+            r.constraint.spec,
+            ConstraintSpec::stop(vec!["\n\n".into(), "```".into()])
+        );
+        // The scalar form common to serving APIs works too.
+        let r = parse_request(r#"{"prompt": "x", "stop": "\n\n"}"#).unwrap();
+        assert_eq!(r.constraint.spec, ConstraintSpec::stop(vec!["\n\n".into()]));
+        // Malformed stop values are errors, not silent no-constraints.
+        assert!(parse_request(r#"{"prompt": "x", "stop": 42}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "stop": [42]}"#).is_err());
+        // Inline EBNF takes precedence over a builtin name on one line.
+        let r = parse_request(r#"{"prompt": "x", "ebnf": "root ::= \"a\"", "grammar": "json"}"#)
+            .unwrap();
+        assert!(matches!(r.constraint.spec, ConstraintSpec::Ebnf { .. }));
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Constraint-pipeline integration: ConstraintSpec → EngineRegistry →
+//! CachedChecker → serving engine, over the mock LM.
+//!
+//! Covers the PR's acceptance criteria: two requests with the same
+//! grammar compile the engine exactly once (asserted via registry
+//! counters), warm-registry requests build no engine on the hot path,
+//! and inline EBNF / regex / stop constraints work end-to-end through
+//! the TCP request format.
+
+use domino::constraint::{CachedChecker, Constraint, ConstraintSpec, EngineRegistry, MaskCache};
+use domino::domino::decoder::Lookahead;
+use domino::domino::{Checker, DominoDecoder};
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::server::engine::{EngineCtx, GenRequest, Server};
+use domino::server::tcp::parse_request;
+
+fn mock_server(slots: usize) -> Server {
+    Server::start(
+        move || {
+            let (vocab, model) = json_mock(512);
+            Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab))
+        },
+        slots,
+    )
+}
+
+#[test]
+fn same_grammar_compiles_exactly_once() {
+    let server = mock_server(2);
+    let req = GenRequest {
+        prompt: String::new(),
+        constraint: Constraint::domino(ConstraintSpec::builtin("json")),
+        max_tokens: 16,
+        ..Default::default()
+    };
+    let r1 = server.generate(req.clone()).unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    let r2 = server.generate(req.clone()).unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+    // A differently-phrased spec of the same grammar also hits the cache.
+    let r3 = server
+        .generate(GenRequest {
+            constraint: Constraint::domino(ConstraintSpec::builtin(" JSON ")),
+            max_tokens: 8,
+            ..req
+        })
+        .unwrap();
+    assert!(r3.error.is_none(), "{:?}", r3.error);
+
+    let m = server.metrics().unwrap();
+    assert_eq!(m.registry_misses, 1, "the grammar must compile exactly once");
+    assert_eq!(m.registry_hits, 2, "warm requests must reuse the engine");
+    assert!(m.engine_compile_ms < u64::MAX);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_builds_are_deduplicated() {
+    let (vocab, _) = json_mock(512);
+    let registry = EngineRegistry::new(8);
+    let spec = ConstraintSpec::builtin("json");
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let registry = registry.clone();
+        let vocab = vocab.clone();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            registry.get_or_compile(&spec, &vocab).unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = registry.stats();
+    assert_eq!(s.misses, 1, "exactly one compile under concurrency: {s:?}");
+    assert_eq!(s.hits + s.coalesced, 7, "everyone else reused it: {s:?}");
+    assert_eq!(s.entries, 1);
+}
+
+#[test]
+fn lru_eviction_is_bounded_and_counted() {
+    let (vocab, _) = json_mock(512);
+    let registry = EngineRegistry::new(2);
+    for name in ["fig3", "json", "gsm8k"] {
+        registry.get_or_compile(&ConstraintSpec::builtin(name), &vocab).unwrap();
+    }
+    let s = registry.stats();
+    assert_eq!((s.misses, s.evictions, s.entries), (3, 1, 2));
+    // The oldest entry (fig3) was evicted; the newer two are still warm.
+    assert!(!registry.contains(&ConstraintSpec::builtin("fig3"), &vocab));
+    assert!(registry.contains(&ConstraintSpec::builtin("json"), &vocab));
+    assert!(registry.contains(&ConstraintSpec::builtin("gsm8k"), &vocab));
+}
+
+#[test]
+fn inline_ebnf_end_to_end_via_tcp_format() {
+    let req = parse_request(
+        r#"{"prompt": "", "ebnf": "root ::= \"ab\"", "method": "domino-full", "max_tokens": 8}"#,
+    )
+    .unwrap();
+    let server = mock_server(1);
+    let r = server.generate(req).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.text, "ab", "grammar admits exactly the string `ab`");
+    assert!(r.stats.stopped, "EOS is forced once the parse completes");
+    let m = server.metrics().unwrap();
+    assert_eq!(m.registry_misses, 1, "inline grammar compiled via the registry");
+    server.shutdown();
+}
+
+#[test]
+fn regex_constraint_end_to_end_via_tcp_format() {
+    let req =
+        parse_request(r#"{"prompt": "", "regex": "[0-9]{4}", "max_tokens": 16}"#).unwrap();
+    let server = mock_server(1);
+    let r = server.generate(req).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert!(r.stats.stopped, "exactly-4-digits regex must complete: {:?}", r.text);
+    assert_eq!(r.text.len(), 4, "{:?}", r.text);
+    assert!(r.text.chars().all(|c| c.is_ascii_digit()), "{:?}", r.text);
+    server.shutdown();
+}
+
+#[test]
+fn stop_sequence_end_to_end_via_tcp_format() {
+    // The mock LM emits JSON-ish text; stop at the first closing brace.
+    let req = parse_request(r#"{"prompt": "", "stop": ["}"], "max_tokens": 64}"#).unwrap();
+    let server = mock_server(1);
+    let r = server.generate(req).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    if r.stats.stopped {
+        let first = r.text.find('}').expect("stopped output contains the stop sequence");
+        // Nothing but (at most) the tail of the final token follows it.
+        assert!(r.text.len() - first <= 16, "output continued past the stop: {:?}", r.text);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cached_masks_equal_uncached_and_hit() {
+    let (vocab, _) = json_mock(512);
+    let registry = EngineRegistry::new(4);
+    let (engine, masks) =
+        registry.get_or_compile(&ConstraintSpec::builtin("json"), &vocab).unwrap();
+    let mut plain = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+    let mut cached = CachedChecker::new(
+        Box::new(DominoDecoder::new(engine, Lookahead::Infinite)),
+        masks.clone(),
+        MaskCache::variant(Lookahead::Infinite),
+    );
+    let ids = vocab.encode(b"{\"name\": \"Jo");
+    for &id in &ids {
+        let want = plain.compute_mask();
+        assert_eq!(want, cached.compute_mask(), "first (miss) computation");
+        assert_eq!(want, cached.compute_mask(), "second (hit) lookup");
+        // Single-token checks answered from the cached mask agree too.
+        for t in [0u32, 5, 100, 300, id] {
+            assert_eq!(want.allowed(t), cached.check_token(t), "token {t}");
+        }
+        plain.advance(id).unwrap();
+        cached.advance(id).unwrap();
+    }
+    let s = masks.stats();
+    assert!(s.hits as usize >= ids.len(), "{s:?}");
+    assert!(s.misses >= 1, "{s:?}");
+    assert!(registry.mask_stats().hits >= s.hits, "registry aggregates live caches");
+}
+
+#[test]
+fn mask_cache_is_shared_across_requests() {
+    // Two identical constrained requests: the second should mostly hit
+    // masks cached by the first (mock LM + greedy → same states).
+    let server = mock_server(1);
+    let req = GenRequest {
+        prompt: String::new(),
+        // k=0 forces interventions → per-step mask computations.
+        constraint: Constraint::domino(ConstraintSpec::builtin("json"))
+            .with_lookahead(Some(0))
+            .with_full_mask(),
+        max_tokens: 12,
+        ..Default::default()
+    };
+    let r1 = server.generate(req.clone()).unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    let m1 = server.metrics().unwrap();
+    let r2 = server.generate(req).unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+    let m2 = server.metrics().unwrap();
+    let new_hits = m2.mask_cache_hits - m1.mask_cache_hits;
+    let new_misses = m2.mask_cache_misses - m1.mask_cache_misses;
+    assert!(
+        new_hits > new_misses,
+        "second request should reuse the first one's masks: +{new_hits} hits, +{new_misses} misses"
+    );
+    server.shutdown();
+}

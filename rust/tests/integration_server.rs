@@ -2,7 +2,7 @@
 //! generation, continuous batching fairness, metrics, TCP protocol.
 
 use domino::runtime::mock::{json_mock, MockFactory};
-use domino::server::engine::{Constraint, EngineCtx, GenRequest, Server};
+use domino::server::engine::{Constraint, ConstraintSpec, EngineCtx, GenRequest, Server};
 use domino::server::tcp::{format_response, parse_request};
 use domino::util::Json;
 
@@ -22,7 +22,7 @@ fn serves_unconstrained_and_constrained() {
     let r = server
         .generate(GenRequest {
             prompt: "{\"name\": ".into(),
-            constraint: Constraint::None,
+            constraint: Constraint::none(),
             max_tokens: 32,
             ..Default::default()
         })
@@ -32,12 +32,7 @@ fn serves_unconstrained_and_constrained() {
     let r = server
         .generate(GenRequest {
             prompt: String::new(),
-            constraint: Constraint::Domino {
-                grammar: "json".into(),
-                k: None,
-                speculative: None,
-                full_mask: false,
-            },
+            constraint: Constraint::domino(ConstraintSpec::builtin("json")),
             max_tokens: 64,
             ..Default::default()
         })
@@ -54,12 +49,7 @@ fn speculative_requests_share_priors() {
     let server = mock_server(1);
     let req = GenRequest {
         prompt: String::new(),
-        constraint: Constraint::Domino {
-            grammar: "gsm8k".into(),
-            k: None,
-            speculative: Some(8),
-            full_mask: false,
-        },
+        constraint: Constraint::domino(ConstraintSpec::builtin("gsm8k")).with_speculation(8),
         max_tokens: 48,
         ..Default::default()
     };
@@ -82,12 +72,7 @@ fn concurrent_requests_complete() {
     for i in 0..6 {
         receivers.push(server.submit(GenRequest {
             prompt: String::new(),
-            constraint: Constraint::Domino {
-                grammar: "json".into(),
-                k: None,
-                speculative: None,
-                full_mask: false,
-            },
+            constraint: Constraint::domino(ConstraintSpec::builtin("json")),
             max_tokens: 24,
             seed: i,
             temperature: Some(1.0),
@@ -108,12 +93,7 @@ fn bad_grammar_reports_error() {
     let server = mock_server(1);
     let r = server
         .generate(GenRequest {
-            constraint: Constraint::Domino {
-                grammar: "no-such-grammar".into(),
-                k: None,
-                speculative: None,
-                full_mask: false,
-            },
+            constraint: Constraint::domino(ConstraintSpec::builtin("no-such-grammar")),
             ..Default::default()
         })
         .unwrap();

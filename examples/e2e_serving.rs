@@ -14,35 +14,58 @@ use domino::constraint::{Constraint, ConstraintSpec};
 use domino::eval::{score, workload};
 use domino::runtime::mock::{json_mock, MockFactory};
 use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
-use domino::server::engine::{EngineCtx, GenRequest, Server};
+use domino::server::engine::{EngineCtx, GenRequest};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
 use domino::util::bench::Table;
 use domino::util::Rng;
 use std::time::Instant;
 
 fn main() -> domino::Result<()> {
     let have_artifacts = artifacts_dir().join("model_config.json").exists();
-    let server = Server::start(
-        move || {
-            if have_artifacts {
-                let dir = artifacts_dir();
+    // Shard count: DOMINO_ENGINES overrides; default 2 on the mock LM
+    // (cheap per-shard state), 1 with real artifacts (each shard loads
+    // its own thread-pinned PJRT model).
+    let engines: usize = std::env::var("DOMINO_ENGINES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if have_artifacts { 1 } else { 2 });
+    let cfg = SchedulerConfig {
+        engines,
+        slots_per_engine: 4, // serving slots per shard (continuous batching)
+        queue_depth: 256,
+        ..SchedulerConfig::default()
+    };
+    // One vocab Arc shared by every shard: registry keys are fingerprint
+    // × vocab identity, so shard-local vocab copies would defeat the
+    // cross-shard engine dedup this example demonstrates.
+    let server = if have_artifacts {
+        let dir = artifacts_dir();
+        let vocab = load_vocab(&dir)?;
+        eprintln!("loading AOT bundle on {engines} shard(s): vocab {}", vocab.len());
+        Scheduler::start(
+            move |_shard, registry| {
                 let model = PjrtModel::load(&dir)?;
-                let vocab = load_vocab(&dir)?;
-                eprintln!(
-                    "loaded AOT bundle: vocab {}, d_model {}, {} layers, {} executables",
-                    vocab.len(),
-                    model.config.d_model,
-                    model.config.n_layers,
-                    model.config.variants.len()
-                );
-                Ok(EngineCtx::new(Box::new(PjrtFactory { model }), vocab))
-            } else {
-                eprintln!("no artifacts — using mock LM (run `make artifacts` for the real model)");
-                let (vocab, model) = json_mock(512);
-                Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab))
-            }
-        },
-        4, // serving slots (continuous batching)
-    );
+                let factory = Box::new(PjrtFactory { model });
+                Ok(EngineCtx::with_registry(factory, vocab.clone(), registry))
+            },
+            cfg,
+        )
+    } else {
+        eprintln!(
+            "no artifacts — using mock LM on {engines} shard(s) (run `make artifacts` for the real model)"
+        );
+        let (vocab, model) = json_mock(512);
+        Scheduler::start(
+            move |_shard, registry| {
+                Ok(EngineCtx::with_registry(
+                    Box::new(MockFactory { model: model.clone() }),
+                    vocab.clone(),
+                    registry,
+                ))
+            },
+            cfg,
+        )
+    };
 
     // Warm the PJRT executables (first executions trigger TFRT lazy
     // initialization and would otherwise penalize the first method).
@@ -98,6 +121,7 @@ fn main() -> domino::Result<()> {
                 max_tokens: 96,
                 temperature: None,
                 seed: rng.next_u64(),
+                ..Default::default()
             };
             tasks.push(task);
             pending.push(server.submit(req));
@@ -134,10 +158,12 @@ fn main() -> domino::Result<()> {
         ]);
     }
 
-    println!("\n== e2e serving: GSM8K-style workload, {n} requests/method, 4 slots ==\n");
+    println!(
+        "\n== e2e serving: GSM8K-style workload, {n} requests/method, {engines} shard(s) × 4 slots ==\n"
+    );
     table.print();
     let m = server.metrics()?;
-    println!("\nengine metrics: {}", m.report());
+    println!("\nengine metrics (all shards): {}", m.report());
     server.shutdown();
     Ok(())
 }

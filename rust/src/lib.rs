@@ -19,7 +19,9 @@
 //!    state-keyed mask cache), [`runtime`] (PJRT client over AOT-compiled
 //!    JAX HLO; python never runs on the request path — gated behind the
 //!    `xla` cargo feature, with the mock backend as the default),
-//!    [`server`] (router + dynamic batcher), [`eval`] (workloads,
+//!    [`server`] (sharded scheduler: N engine threads sharing the
+//!    registry, grammar-affinity routing, bounded queues with overload
+//!    shedding, deadlines/cancellation, streaming), [`eval`] (workloads,
 //!    metrics, the paper's tables).
 //!
 //! See `DESIGN.md` for the per-experiment index and the constraint

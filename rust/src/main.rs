@@ -1,7 +1,8 @@
 //! `domino` — the serving CLI.
 //!
 //! ```text
-//! domino serve [--addr 127.0.0.1:7761] [--slots 4]
+//! domino serve [--addr 127.0.0.1:7761] [--engines 1] [--slots 4]
+//!              [--queue-depth 64] [--deadline-ms N] [--mock]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --regex PATTERN | --stop "a,b"]
 //!                 [--method domino|domino-full|online|unconstrained]
@@ -11,9 +12,11 @@
 //! domino grammars               # list builtin grammars
 //! ```
 //!
-//! Model artifacts are found via `$DOMINO_ARTIFACTS` (default
-//! `./artifacts`); `domino generate --mock` uses the test trigram LM
-//! instead.
+//! `--engines N` shards the server across N engine threads sharing one
+//! compiled-grammar registry (grammar-affinity routing, bounded queues
+//! with overload shedding — see `server::scheduler`). Model artifacts
+//! are found via `$DOMINO_ARTIFACTS` (default `./artifacts`);
+//! `--mock` uses the test trigram LM instead.
 
 use domino::constraint::{Constraint, ConstraintSpec};
 use domino::domino::decoder::Engine as GrammarEngine;
@@ -21,10 +24,11 @@ use domino::grammar::builtin;
 use domino::runtime::mock::{json_mock, MockFactory};
 use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
 use domino::scanner::Scanner;
-use domino::server::engine::{EngineCtx, GenRequest, Server};
+use domino::server::engine::{EngineCtx, GenRequest};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
 use domino::server::tcp;
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     let mut flags = HashMap::new();
@@ -47,23 +51,47 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (flags, positional)
 }
 
-fn start_server(flags: &HashMap<String, String>) -> Server {
+fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler> {
     let mock = flags.contains_key("mock");
-    let slots: usize = flags.get("slots").and_then(|s| s.parse().ok()).unwrap_or(4);
-    Server::start(
-        move || {
-            if mock {
-                let (vocab, model) = json_mock(512);
-                Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab))
-            } else {
-                let dir = artifacts_dir();
+    let cfg = SchedulerConfig {
+        engines: flags.get("engines").and_then(|s| s.parse().ok()).unwrap_or(1),
+        slots_per_engine: flags.get("slots").and_then(|s| s.parse().ok()).unwrap_or(4),
+        queue_depth: flags.get("queue-depth").and_then(|s| s.parse().ok()).unwrap_or(64),
+        default_deadline: flags
+            .get("deadline-ms")
+            .and_then(|s| s.parse().ok())
+            .map(Duration::from_millis),
+        ..SchedulerConfig::default()
+    };
+    // The vocab must be ONE shared Arc across shards: registry keys are
+    // fingerprint × vocab identity, so per-shard vocab copies would
+    // defeat cross-shard engine dedup. Models stay per-shard (PJRT
+    // handles are thread-pinned; each shard init loads its own on its
+    // thread).
+    if mock {
+        let (vocab, model) = json_mock(512);
+        Ok(Scheduler::start(
+            move |_shard, registry| {
+                Ok(EngineCtx::with_registry(
+                    Box::new(MockFactory { model: model.clone() }),
+                    vocab.clone(),
+                    registry,
+                ))
+            },
+            cfg,
+        ))
+    } else {
+        let dir = artifacts_dir();
+        let vocab = load_vocab(&dir)?;
+        Ok(Scheduler::start(
+            move |_shard, registry| {
                 let model = PjrtModel::load(&dir)?;
-                let vocab = load_vocab(&dir)?;
-                Ok(EngineCtx::new(Box::new(PjrtFactory { model }), vocab))
-            }
-        },
-        slots,
-    )
+                let factory = Box::new(PjrtFactory { model });
+                Ok(EngineCtx::with_registry(factory, vocab.clone(), registry))
+            },
+            cfg,
+        ))
+    }
 }
 
 /// Build the request constraint from CLI flags. The spec comes from one
@@ -94,7 +122,7 @@ fn parse_constraint(flags: &HashMap<String, String>) -> domino::Result<Constrain
 }
 
 fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
-    let server = start_server(&flags);
+    let server = start_scheduler(&flags)?;
     let constraint = parse_constraint(&flags)?;
     let req = GenRequest {
         prompt: flags.get("prompt").cloned().unwrap_or_default(),
@@ -102,6 +130,7 @@ fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
         max_tokens: flags.get("max-tokens").and_then(|m| m.parse().ok()).unwrap_or(128),
         temperature: flags.get("temperature").and_then(|t| t.parse().ok()),
         seed: flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0),
+        ..Default::default()
     };
     let resp = server.generate(req)?;
     if let Some(e) = resp.error {
@@ -162,11 +191,13 @@ fn main() {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let (flags, positional) = parse_flags(&args[args.len().min(1)..]);
     let result = match cmd {
-        "serve" => {
-            let server = start_server(&flags);
-            let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
-            tcp::serve(server, &addr)
-        }
+        "serve" => match start_scheduler(&flags) {
+            Ok(sched) => {
+                let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
+                tcp::serve(sched, &addr)
+            }
+            Err(e) => Err(e),
+        },
         "generate" => cmd_generate(flags),
         "grammar" => match positional.first() {
             Some(name) => cmd_grammar(name),
@@ -182,7 +213,8 @@ fn main() {
             eprintln!(
                 "usage: domino <serve|generate|grammar|grammars> [flags]\n\
                  \n\
-                 serve     --addr HOST:PORT --slots N [--mock]\n\
+                 serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
+                 \u{20}          [--deadline-ms N] [--mock]\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
                  \u{20}          [--method domino|domino-full|online|unconstrained]\n\

@@ -1,36 +1,43 @@
-//! The engine thread: request admission, slot stepping, completion.
+//! The engine core: request admission, slot stepping, completion.
 //!
-//! All model/PJRT state is created ON the engine thread (the `xla` handles
-//! are not `Send`); clients talk to it over an mpsc channel. The loop is
-//! a continuous batcher: every tick admits queued requests into free
+//! All model/PJRT state is created ON an engine thread (the `xla` handles
+//! are not `Send`); clients talk to it over an mpsc channel. Each engine
+//! is a continuous batcher: every tick admits queued requests into free
 //! slots and steps every active slot by one decode iteration, so long
 //! requests don't block short ones (iteration-level scheduling, as in
 //! Orca/vLLM).
 //!
+//! This module owns the *reusable pieces* of that loop — [`EngineCore`]
+//! with `admit` / `step_all` / `reap` — which the sharded
+//! [`Scheduler`](super::scheduler::Scheduler) drives once per shard. The
+//! single-engine [`Server`] is a thin compatibility wrapper over a
+//! one-shard scheduler.
+//!
 //! Constraints arrive as first-class [`Constraint`] values (spec + how to
 //! enforce it — see [`crate::constraint`]). Admission resolves them
 //! through the shared [`EngineRegistry`], so the expensive per-grammar
-//! precomputation (§3.5) happens exactly once per distinct grammar, and
-//! checkers share each engine's state-keyed mask cache across slots.
+//! precomputation (§3.5) happens exactly once per distinct grammar
+//! across every shard, and checkers share the state-keyed mask cache.
 
 use super::metrics::Metrics;
-use super::slot::{DecodeMode, Slot, SlotStats};
+use super::scheduler::{RequestHandle, Scheduler, SchedulerConfig};
+use super::slot::{DecodeMode, Slot, SlotStats, StreamEvent};
 use crate::constraint::{CachedChecker, EngineRegistry, MaskCache, StopChecker};
 use crate::domino::decoder::Lookahead;
 use crate::domino::{DominoDecoder, SpeculativeModel};
 use crate::runtime::sampler::Sampling;
 use crate::runtime::LmFactory;
 use crate::tokenizer::Vocab;
-use anyhow::Context;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use crate::constraint::{Constraint, ConstraintSpec, Enforcement};
 
-/// Compiled engines kept hot by default (per engine thread).
-const DEFAULT_REGISTRY_CAPACITY: usize = 32;
+/// Compiled engines kept hot by default (shared across engine shards).
+pub(super) const DEFAULT_REGISTRY_CAPACITY: usize = 32;
 
 /// Speculation-prior models kept per constraint fingerprint. Bounded for
 /// the same reason the registry is: inline constraints make the key space
@@ -45,6 +52,13 @@ pub struct GenRequest {
     pub max_tokens: usize,
     pub temperature: Option<f32>,
     pub seed: u64,
+    /// Abort the request (queued or mid-decode) once this much wall time
+    /// has passed since submission. `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// Wire-level streaming flag (`"stream": true`): the TCP front end
+    /// attaches a per-step token sink when set. In-process callers use
+    /// [`Scheduler::submit_streaming`] directly.
+    pub stream: bool,
 }
 
 impl Default for GenRequest {
@@ -55,6 +69,8 @@ impl Default for GenRequest {
             max_tokens: 128,
             temperature: None,
             seed: 0,
+            deadline: None,
+            stream: false,
         }
     }
 }
@@ -69,16 +85,34 @@ pub struct GenResponse {
     pub elapsed_s: f64,
 }
 
-/// Everything the engine thread owns; built by the init closure on the
-/// engine thread itself.
+impl GenResponse {
+    pub(super) fn failure(error: impl Into<String>) -> GenResponse {
+        GenResponse {
+            text: String::new(),
+            stats: SlotStats::default(),
+            error: Some(error.into()),
+            elapsed_s: 0.0,
+        }
+    }
+
+    /// The structured reply for load-shed requests.
+    pub(super) fn overloaded() -> GenResponse {
+        GenResponse::failure("overloaded")
+    }
+}
+
+/// Everything one engine shard owns; built by the init closure on the
+/// shard thread itself.
 pub struct EngineCtx {
     pub factory: Box<dyn LmFactory>,
     pub vocab: Arc<Vocab>,
-    /// Compiled-engine cache shared across requests (and, if the caller
-    /// passes one in, across engine threads / benches too).
+    /// Compiled-engine cache shared across requests and engine shards
+    /// (the scheduler hands every shard the same registry).
     pub registry: Arc<EngineRegistry>,
     /// Shared speculation priors per constraint fingerprint (§4.2: priors
-    /// formed over warmup requests, then reused).
+    /// formed over warmup requests, then reused). Per-shard: affinity
+    /// routing keeps same-grammar requests on one shard so these stay
+    /// warm without cross-shard locking.
     specs: HashMap<u64, Arc<Mutex<SpeculativeModel>>>,
 }
 
@@ -166,85 +200,48 @@ impl EngineCtx {
     }
 }
 
-enum Job {
-    Generate(GenRequest, mpsc::Sender<GenResponse>),
-    Stats(mpsc::Sender<Metrics>),
-    Shutdown,
+/// One unit of admitted work: the request plus every channel the engine
+/// needs to answer, stream, and abort it.
+pub struct Work {
+    pub req: GenRequest,
+    pub resp: mpsc::Sender<GenResponse>,
+    /// Per-step token sink (streaming requests).
+    pub sink: Option<mpsc::Sender<StreamEvent>>,
+    /// Set by the client (or the front end, on disconnect) to abort the
+    /// request whether it is still queued or already decoding.
+    pub cancel: Arc<AtomicBool>,
+    /// Submission time (queue-wait metric + deadline base).
+    pub enqueued: Instant,
+    /// Absolute deadline resolved at submission.
+    pub deadline: Option<Instant>,
 }
 
-/// Handle to a running engine thread.
-pub struct Server {
-    tx: mpsc::Sender<Job>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
-impl Server {
-    /// Start the engine; `init` runs on the engine thread and builds all
-    /// model state.
-    pub fn start<F>(init: F, max_slots: usize) -> Server
-    where
-        F: FnOnce() -> crate::Result<EngineCtx> + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let handle = std::thread::Builder::new()
-            .name("domino-engine".into())
-            .spawn(move || {
-                let ctx = match init() {
-                    Ok(ctx) => ctx,
-                    Err(e) => {
-                        eprintln!("engine init failed: {e:#}");
-                        // Drain jobs with failures.
-                        for job in rx.iter() {
-                            if let Job::Generate(_, resp) = job {
-                                let _ = resp.send(GenResponse {
-                                    text: String::new(),
-                                    stats: SlotStats::default(),
-                                    error: Some(format!("engine init failed: {e:#}")),
-                                    elapsed_s: 0.0,
-                                });
-                            }
-                        }
-                        return;
-                    }
-                };
-                engine_loop(ctx, rx, max_slots);
-            })
-            .expect("spawn engine thread");
-        Server { tx, handle: Some(handle) }
-    }
-
-    /// Enqueue a request; returns a receiver for the response.
-    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenResponse> {
-        let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(Job::Generate(req, tx));
-        rx
-    }
-
-    /// Generate synchronously.
-    pub fn generate(&self, req: GenRequest) -> crate::Result<GenResponse> {
-        let rx = self.submit(req);
-        Ok(rx.recv()?)
-    }
-
-    pub fn metrics(&self) -> crate::Result<Metrics> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Job::Stats(tx)).ok().context("engine gone")?;
-        Ok(rx.recv()?)
-    }
-
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+impl Work {
+    /// Is this work item dead before admission (cancelled or past its
+    /// deadline)? Returns the abort reason when so.
+    pub(super) fn dead_reason(&self) -> Option<Abort> {
+        if self.cancel.load(Ordering::Relaxed) {
+            return Some(Abort::Cancelled);
+        }
+        match self.deadline {
+            Some(d) if Instant::now() >= d => Some(Abort::DeadlineExceeded),
+            _ => None,
         }
     }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+/// Why a request was aborted without running to completion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(super) enum Abort {
+    Cancelled,
+    DeadlineExceeded,
+}
+
+impl Abort {
+    fn message(self) -> &'static str {
+        match self {
+            Abort::Cancelled => "cancelled",
+            Abort::DeadlineExceeded => "deadline exceeded",
         }
     }
 }
@@ -252,142 +249,189 @@ impl Drop for Server {
 struct Active {
     slot: Slot,
     resp: mpsc::Sender<GenResponse>,
+    cancel: Arc<AtomicBool>,
+    deadline: Option<Instant>,
     started: Instant,
     first_token_at: Option<Instant>,
+    /// A response was already sent (step error or abort); `reap` must
+    /// not send a second one.
+    responded: bool,
 }
 
-/// Metrics snapshot: the engine-loop counters plus the registry's and
-/// mask caches' (pulled at read time — they live in concurrent caches,
-/// not the loop).
-fn metrics_snapshot(metrics: &Metrics, ctx: &EngineCtx) -> Metrics {
-    let mut m = metrics.clone();
-    let r = ctx.registry.stats();
-    m.registry_hits = r.hits;
-    m.registry_misses = r.misses;
-    m.registry_evictions = r.evictions;
-    m.registry_coalesced = r.coalesced;
-    m.engine_compile_ms = r.compile_ms;
-    let mc = ctx.registry.mask_stats();
-    m.mask_cache_hits = mc.hits;
-    m.mask_cache_misses = mc.misses;
-    m.mask_cache_evictions = mc.evictions;
-    m
+/// One engine shard's state: the model context, the active slots, and the
+/// loop-local metrics. The scheduler's shard loop drives it as
+/// `admit* → step_all → reap` per tick.
+pub struct EngineCore {
+    pub ctx: EngineCtx,
+    active: Vec<Active>,
+    pub metrics: Metrics,
+    next_id: u64,
+    max_slots: usize,
 }
 
-fn engine_loop(mut ctx: EngineCtx, rx: mpsc::Receiver<Job>, max_slots: usize) {
-    let mut queue: Vec<(GenRequest, mpsc::Sender<GenResponse>)> = Vec::new();
-    let mut active: Vec<Active> = Vec::new();
-    let mut metrics = Metrics::default();
-    let mut next_id = 0u64;
-
-    loop {
-        // Drain the channel (block only when idle).
-        if active.is_empty() && queue.is_empty() {
-            match rx.recv() {
-                Ok(job) => match job {
-                    Job::Generate(r, tx) => queue.push((r, tx)),
-                    Job::Stats(tx) => {
-                        let _ = tx.send(metrics_snapshot(&metrics, &ctx));
-                        continue;
-                    }
-                    Job::Shutdown => return,
-                },
-                Err(_) => return,
-            }
+impl EngineCore {
+    pub fn new(ctx: EngineCtx, max_slots: usize) -> EngineCore {
+        EngineCore {
+            ctx,
+            active: Vec::new(),
+            metrics: Metrics::default(),
+            next_id: 0,
+            max_slots: max_slots.max(1),
         }
-        loop {
-            match rx.try_recv() {
-                Ok(Job::Generate(r, tx)) => queue.push((r, tx)),
-                Ok(Job::Stats(tx)) => {
-                    let _ = tx.send(metrics_snapshot(&metrics, &ctx));
+    }
+
+    /// Number of slots currently decoding.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Can another request be admitted this tick?
+    pub fn has_capacity(&self) -> bool {
+        self.active.len() < self.max_slots
+    }
+
+    /// Answer `work` without admitting it (pre-admission cancellation,
+    /// deadline expiry in the queue).
+    pub(super) fn reject(&mut self, work: Work, abort: Abort) {
+        match abort {
+            Abort::Cancelled => self.metrics.requests_cancelled += 1,
+            Abort::DeadlineExceeded => self.metrics.requests_deadline_exceeded += 1,
+        }
+        let _ = work.resp.send(GenResponse::failure(abort.message()));
+    }
+
+    /// Admit one request into a free slot: resolve the constraint through
+    /// the shared registry, build the LM session, run prefill + healing.
+    /// Failures answer the request instead of killing the engine.
+    pub fn admit(&mut self, work: Work) {
+        debug_assert!(self.has_capacity(), "admit called without capacity");
+        if let Some(abort) = work.dead_reason() {
+            self.reject(work, abort);
+            return;
+        }
+        let Work { req, resp, sink, cancel, enqueued, deadline } = work;
+        self.metrics.queue_wait.record(enqueued.elapsed().as_secs_f64());
+        self.next_id += 1;
+        let next_id = self.next_id;
+        let ctx = &mut self.ctx;
+        let admit = (|| -> crate::Result<Slot> {
+            let mode = ctx.build_mode(&req.constraint)?;
+            let session = ctx.factory.new_session()?;
+            let prompt = crate::domino::generate::Prompt::healed(&ctx.vocab, &req.prompt);
+            let sampling = match req.temperature {
+                Some(t) => Sampling::Temperature(t),
+                None => Sampling::Greedy,
+            };
+            Slot::new(
+                next_id,
+                session,
+                mode,
+                ctx.vocab.clone(),
+                &prompt,
+                sampling,
+                req.max_tokens,
+                req.seed,
+            )
+        })();
+        match admit {
+            Ok(mut slot) => {
+                if let Some(sink) = sink {
+                    slot.attach_sink(sink);
                 }
-                Ok(Job::Shutdown) => return,
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => return,
-            }
-        }
-
-        // Admit.
-        while active.len() < max_slots && !queue.is_empty() {
-            let (req, resp) = queue.remove(0);
-            next_id += 1;
-            let admit = (|| -> crate::Result<Slot> {
-                let mode = ctx.build_mode(&req.constraint)?;
-                let session = ctx.factory.new_session()?;
-                let prompt = crate::domino::generate::Prompt::healed(&ctx.vocab, &req.prompt);
-                let sampling = match req.temperature {
-                    Some(t) => Sampling::Temperature(t),
-                    None => Sampling::Greedy,
-                };
-                Slot::new(
-                    next_id,
-                    session,
-                    mode,
-                    ctx.vocab.clone(),
-                    &prompt,
-                    sampling,
-                    req.max_tokens,
-                    req.seed,
-                )
-            })();
-            match admit {
-                Ok(slot) => active.push(Active {
+                self.active.push(Active {
                     slot,
                     resp,
+                    cancel,
+                    deadline,
                     started: Instant::now(),
                     first_token_at: None,
-                }),
-                Err(e) => {
-                    metrics.requests_failed += 1;
-                    let _ = resp.send(GenResponse {
-                        text: String::new(),
-                        stats: SlotStats::default(),
-                        error: Some(format!("{e:#}")),
-                        elapsed_s: 0.0,
-                    });
-                }
+                    responded: false,
+                });
+            }
+            Err(e) => {
+                self.metrics.requests_failed += 1;
+                let _ = resp.send(GenResponse::failure(format!("{e:#}")));
             }
         }
+    }
 
-        // Step every active slot once (iteration-level scheduling).
-        for a in active.iter_mut() {
+    /// Step every active slot once (iteration-level scheduling), checking
+    /// cancellation and deadlines first so an abandoned request stops
+    /// burning engine ticks mid-decode instead of running to
+    /// `max_tokens`.
+    pub fn step_all(&mut self) {
+        for a in self.active.iter_mut() {
+            if a.slot.done {
+                continue;
+            }
+            let abort = if a.cancel.load(Ordering::Relaxed) || a.slot.client_gone() {
+                Some(Abort::Cancelled)
+            } else if a.deadline.map_or(false, |d| Instant::now() >= d) {
+                Some(Abort::DeadlineExceeded)
+            } else {
+                None
+            };
+            if let Some(abort) = abort {
+                a.slot.abort();
+                a.slot.finish_stream();
+                match abort {
+                    Abort::Cancelled => self.metrics.requests_cancelled += 1,
+                    Abort::DeadlineExceeded => self.metrics.requests_deadline_exceeded += 1,
+                }
+                a.responded = true;
+                let _ = a.resp.send(GenResponse {
+                    text: a.slot.text(),
+                    stats: a.slot.stats.clone(),
+                    error: Some(abort.message().into()),
+                    elapsed_s: a.started.elapsed().as_secs_f64(),
+                });
+                continue;
+            }
             let before_tokens = a.slot.stats.tokens_out;
             let before_calls = a.slot.stats.model_calls;
             let t0 = Instant::now();
             if let Err(e) = a.slot.step() {
-                metrics.requests_failed += 1;
+                self.metrics.requests_failed += 1;
                 a.slot.done = true;
+                a.slot.finish_stream();
+                a.responded = true;
                 let _ = a.resp.send(GenResponse {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: Some(format!("{e:#}")),
                     elapsed_s: a.started.elapsed().as_secs_f64(),
                 });
-                a.slot.stats.stopped = false;
                 continue;
             }
-            metrics.model_time += t0.elapsed();
-            metrics.tokens_generated += (a.slot.stats.tokens_out - before_tokens) as u64;
-            metrics.model_calls += (a.slot.stats.model_calls - before_calls) as u64;
+            self.metrics.model_time += t0.elapsed();
+            self.metrics.tokens_generated += (a.slot.stats.tokens_out - before_tokens) as u64;
+            self.metrics.model_calls += (a.slot.stats.model_calls - before_calls) as u64;
             if a.first_token_at.is_none() && a.slot.stats.tokens_out > 0 {
                 a.first_token_at = Some(Instant::now());
-                metrics.ttft.record(a.started.elapsed().as_secs_f64());
+                self.metrics.ttft.record(a.started.elapsed().as_secs_f64());
             }
         }
+    }
 
-        // Complete.
+    /// Retire finished slots, answering the ones that still owe a
+    /// response.
+    pub fn reap(&mut self) {
         let mut i = 0;
-        while i < active.len() {
-            if active[i].slot.done {
-                let a = active.swap_remove(i);
+        while i < self.active.len() {
+            if self.active[i].slot.done {
+                let mut a = self.active.swap_remove(i);
+                if a.responded {
+                    continue;
+                }
+                a.slot.finish_stream();
                 let elapsed = a.started.elapsed().as_secs_f64();
-                metrics.requests_completed += 1;
-                metrics.interventions += a.slot.stats.interventions as u64;
-                metrics.masks_computed += a.slot.stats.masks_computed as u64;
-                metrics.spec_proposed += a.slot.stats.spec_proposed as u64;
-                metrics.spec_accepted += a.slot.stats.spec_accepted as u64;
+                self.metrics.requests_completed += 1;
+                self.metrics.interventions += a.slot.stats.interventions as u64;
+                self.metrics.masks_computed += a.slot.stats.masks_computed as u64;
+                self.metrics.spec_proposed += a.slot.stats.spec_proposed as u64;
+                self.metrics.spec_accepted += a.slot.stats.spec_accepted as u64;
                 if elapsed > 0.0 {
-                    metrics.req_tps.record(a.slot.stats.tokens_out as f64 / elapsed);
+                    self.metrics.req_tps.record(a.slot.stats.tokens_out as f64 / elapsed);
                 }
                 let _ = a.resp.send(GenResponse {
                     text: a.slot.text(),
@@ -399,5 +443,80 @@ fn engine_loop(mut ctx: EngineCtx, rx: mpsc::Receiver<Job>, max_slots: usize) {
                 i += 1;
             }
         }
+    }
+
+    /// Metrics snapshot: the loop counters plus the shared registry's and
+    /// mask caches' (pulled at read time — they live in concurrent
+    /// caches, not the loop). Aggregating snapshots from shards that
+    /// share one registry must therefore use [`Metrics::merge`], which
+    /// maxes rather than sums the registry fields.
+    pub fn snapshot(&self) -> Metrics {
+        let mut m = self.metrics.clone();
+        let r = self.ctx.registry.stats();
+        m.registry_hits = r.hits;
+        m.registry_misses = r.misses;
+        m.registry_evictions = r.evictions;
+        m.registry_coalesced = r.coalesced;
+        m.engine_compile_ms = r.compile_ms;
+        let mc = self.ctx.registry.mask_stats();
+        m.mask_cache_hits = mc.hits;
+        m.mask_cache_misses = mc.misses;
+        m.mask_cache_evictions = mc.evictions;
+        m
+    }
+}
+
+/// Handle to a single-engine scheduler — the pre-sharding API, kept for
+/// callers that want exactly one engine thread with an effectively
+/// unbounded queue (CLI one-shots, tests). New code should use
+/// [`Scheduler`] directly.
+pub struct Server {
+    sched: Scheduler,
+}
+
+impl Server {
+    /// Start the engine; `init` runs on the engine thread and builds all
+    /// model state.
+    pub fn start<F>(init: F, max_slots: usize) -> Server
+    where
+        F: FnOnce() -> crate::Result<EngineCtx> + Send + 'static,
+    {
+        let init = Mutex::new(Some(init));
+        let sched = Scheduler::start(
+            move |_shard, _registry| {
+                let init = init.lock().expect("server init lock").take();
+                (init.expect("single-shard init runs once"))()
+            },
+            SchedulerConfig {
+                engines: 1,
+                slots_per_engine: max_slots,
+                queue_depth: usize::MAX,
+                ..SchedulerConfig::default()
+            },
+        );
+        Server { sched }
+    }
+
+    /// Enqueue a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenResponse> {
+        self.sched.submit(req).into_receiver()
+    }
+
+    /// Enqueue a request, keeping the cancellation handle.
+    pub fn submit_handle(&self, req: GenRequest) -> RequestHandle {
+        self.sched.submit(req)
+    }
+
+    /// Generate synchronously.
+    pub fn generate(&self, req: GenRequest) -> crate::Result<GenResponse> {
+        self.sched.generate(req)
+    }
+
+    pub fn metrics(&self) -> crate::Result<Metrics> {
+        self.sched.metrics()
+    }
+
+    pub fn shutdown(self) {
+        self.sched.shutdown()
     }
 }

@@ -49,6 +49,29 @@ impl Summary {
         let idx = ((s.len() - 1) as f64 * p).round() as usize;
         s[idx]
     }
+
+    /// Fold `other` into this summary (cross-shard aggregation). Exact for
+    /// count/sum/min/max; the percentile reservoir keeps as many of the
+    /// other side's samples as fit under the cap.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+        for &v in &other.samples {
+            if self.samples.len() >= 4096 {
+                break;
+            }
+            self.samples.push(v);
+        }
+    }
 }
 
 /// Aggregate serving metrics (owned by the engine thread).
@@ -56,6 +79,15 @@ impl Summary {
 pub struct Metrics {
     pub requests_completed: u64,
     pub requests_failed: u64,
+    /// Requests aborted mid-decode because the client cancelled or
+    /// disconnected (the slot stops burning engine ticks immediately).
+    pub requests_cancelled: u64,
+    /// Requests aborted because their deadline passed (queued or
+    /// mid-decode).
+    pub requests_deadline_exceeded: u64,
+    /// Requests shed at admission because every eligible shard's queue
+    /// was at capacity (the structured `"error":"overloaded"` reply).
+    pub requests_shed: u64,
     pub tokens_generated: u64,
     pub model_calls: u64,
     pub interventions: u64,
@@ -80,6 +112,8 @@ pub struct Metrics {
     pub mask_cache_evictions: u64,
     /// Time to first token, seconds.
     pub ttft: Summary,
+    /// Admission-queue wait (submit → slot admission), seconds.
+    pub queue_wait: Summary,
     /// Per-request tokens/second.
     pub req_tps: Summary,
     /// Mask computation time, microseconds.
@@ -89,15 +123,54 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fold another shard's snapshot into this one (cross-shard
+    /// aggregation for `Scheduler::metrics` and the TCP `stats` op).
+    ///
+    /// Engine-loop counters and summaries are per-shard and sum; the
+    /// registry/mask-cache counters are pulled from the **shared**
+    /// registry by every shard's snapshot, so summing would multiply
+    /// them by the shard count — they aggregate by `max` instead (the
+    /// counters are monotonic, so the max is the freshest snapshot).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_completed += other.requests_completed;
+        self.requests_failed += other.requests_failed;
+        self.requests_cancelled += other.requests_cancelled;
+        self.requests_deadline_exceeded += other.requests_deadline_exceeded;
+        self.requests_shed += other.requests_shed;
+        self.tokens_generated += other.tokens_generated;
+        self.model_calls += other.model_calls;
+        self.interventions += other.interventions;
+        self.masks_computed += other.masks_computed;
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
+        self.registry_hits = self.registry_hits.max(other.registry_hits);
+        self.registry_misses = self.registry_misses.max(other.registry_misses);
+        self.registry_evictions = self.registry_evictions.max(other.registry_evictions);
+        self.registry_coalesced = self.registry_coalesced.max(other.registry_coalesced);
+        self.engine_compile_ms = self.engine_compile_ms.max(other.engine_compile_ms);
+        self.mask_cache_hits = self.mask_cache_hits.max(other.mask_cache_hits);
+        self.mask_cache_misses = self.mask_cache_misses.max(other.mask_cache_misses);
+        self.mask_cache_evictions = self.mask_cache_evictions.max(other.mask_cache_evictions);
+        self.ttft.merge(&other.ttft);
+        self.queue_wait.merge(&other.queue_wait);
+        self.req_tps.merge(&other.req_tps);
+        self.mask_us.merge(&other.mask_us);
+        self.model_time += other.model_time;
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests: {} ok / {} failed | tokens: {} | model calls: {} | \
+            "requests: {} ok / {} failed / {} cancelled / {} deadline / {} shed | \
+             tokens: {} | model calls: {} | \
              interventions: {} | masks: {} | spec: {}/{} accepted | \
              ttft p50 {:.1} ms | req tps mean {:.1} | \
              registry: {} hit / {} miss / {} evict / {} coalesced ({} ms compiling) | \
              mask cache: {} hit / {} miss ({:.0}% hit rate)",
             self.requests_completed,
             self.requests_failed,
+            self.requests_cancelled,
+            self.requests_deadline_exceeded,
+            self.requests_shed,
             self.tokens_generated,
             self.model_calls,
             self.interventions,
@@ -144,6 +217,45 @@ mod tests {
         assert!((s.mean() - 3.0).abs() < 1e-12);
         assert_eq!(s.percentile(0.5), 3.0);
         assert_eq!(s.percentile(1.0), 5.0);
+    }
+
+    #[test]
+    fn merge_sums_loop_counters_and_maxes_shared_caches() {
+        let mut a = Metrics {
+            requests_completed: 2,
+            requests_shed: 1,
+            tokens_generated: 10,
+            registry_misses: 3, // shared-registry counter: same registry...
+            ..Default::default()
+        };
+        a.ttft.record(0.5);
+        let mut b = Metrics {
+            requests_completed: 4,
+            tokens_generated: 20,
+            registry_misses: 3, // ...seen from another shard's snapshot
+            ..Default::default()
+        };
+        b.ttft.record(1.5);
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 6);
+        assert_eq!(a.requests_shed, 1);
+        assert_eq!(a.tokens_generated, 30);
+        assert_eq!(a.registry_misses, 3, "shared registry must not double-count");
+        assert_eq!(a.ttft.count, 2);
+        assert_eq!(a.ttft.min, 0.5);
+        assert_eq!(a.ttft.max, 1.5);
+    }
+
+    #[test]
+    fn summary_merge_empty_sides() {
+        let mut a = Summary::default();
+        let mut b = Summary::default();
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!((a.count, a.min, a.max), (1, 2.0, 2.0));
+        let empty = Summary::default();
+        a.merge(&empty);
+        assert_eq!(a.count, 1);
     }
 
     #[test]

@@ -1,33 +1,50 @@
-//! Serving layer: request router + dynamic batcher over the DOMINO engine.
+//! Serving layer: sharded scheduler + dynamic batchers over the DOMINO
+//! engine.
 //!
 //! Architecture (vLLM-router-like, adapted to thread-pinned PJRT state —
-//! the `xla` crate's handles are `Rc`-based, so **all** model state lives
-//! on one *engine thread*):
+//! the `xla` crate's handles are `Rc`-based, so each shard's model state
+//! lives on its own *engine thread*):
 //!
 //! ```text
-//!  clients ──TCP/JSONL──▶ router threads ──mpsc──▶ engine thread
-//!                                                   │  slots: [S0 S1 …]
-//!                                                   │  each loop tick:
-//!                                                   │   admit new jobs
-//!                                                   │   step every slot
-//!                                                   ▼
-//!                                           response channels
+//!  clients ──TCP/JSONL──▶ router threads ──▶ Scheduler
+//!                                             │ affinity route / spill /
+//!                                             │ shed ("overloaded")
+//!                        ┌────────────────────┼──────────────┐
+//!                        ▼                    ▼              ▼
+//!                  shard 0 thread       shard 1 thread    … shard N-1
+//!                  queue→[S0 S1 …]      queue→[S0 S1 …]
+//!                        │  each tick: purge dead, admit, step, reap
+//!                        └───────── shared EngineRegistry ───┘
+//!                                   (one compile per grammar)
 //! ```
 //!
-//! * [`engine`] — the engine loop: admission, per-slot decode stepping
-//!   (opportunistic / full-mask / speculative §3.6), completion.
+//! * [`scheduler`] — the sharded front: grammar-affinity routing with
+//!   least-loaded spill, bounded per-shard queues with overload shedding,
+//!   per-request deadlines + cancellation, streaming submission, and
+//!   cross-shard metrics aggregation.
+//! * [`engine`] — one shard's core: admission, per-slot decode stepping
+//!   (opportunistic / full-mask / speculative §3.6), completion — the
+//!   reusable `admit`/`step_all`/`reap` pieces the scheduler drives. Also
+//!   the single-engine [`Server`](engine::Server) compatibility wrapper.
 //! * [`slot`] — one in-flight request: LM session + checker + sampling
 //!   state; `step()` advances by one decode iteration (which commits
-//!   multiple tokens under speculation).
-//! * [`metrics`] — counters + latency/throughput summaries.
+//!   multiple tokens under speculation); supports mid-decode abort and a
+//!   per-step token sink for streaming.
+//! * [`metrics`] — counters + latency/throughput summaries, mergeable
+//!   across shards.
 //! * [`tcp`] — a JSONL-over-TCP front end (std::net, thread per
-//!   connection; the vendored crate set has no tokio).
+//!   connection; the vendored crate set has no tokio) with streaming,
+//!   `stats`, input validation and disconnect cancellation.
 
 pub mod engine;
 pub mod metrics;
+pub mod scheduler;
 pub mod slot;
 pub mod tcp;
 
-pub use engine::{Constraint, ConstraintSpec, Enforcement, EngineCtx, GenRequest, GenResponse, Server};
+pub use engine::{
+    Constraint, ConstraintSpec, EngineCore, EngineCtx, Enforcement, GenRequest, GenResponse, Server,
+};
 pub use metrics::Metrics;
-pub use slot::DecodeMode;
+pub use scheduler::{CancelToken, RequestHandle, Scheduler, SchedulerConfig};
+pub use slot::{DecodeMode, StreamEvent};

@@ -1,0 +1,420 @@
+//! The sharded scheduler: N engine threads behind one admission front.
+//!
+//! DOMINO's serving pitch is constrained generation at serving speed —
+//! but one engine thread caps throughput at one core no matter how cheap
+//! masking gets. The scheduler owns **N engine shards** (each an
+//! [`EngineCore`] on its own thread, as PJRT handles are thread-pinned)
+//! that share one [`EngineRegistry`], so the expensive per-grammar
+//! precomputation (§3.5) still happens exactly once per distinct grammar
+//! process-wide:
+//!
+//! ```text
+//!  clients ──▶ Scheduler::submit ──route──▶ shard 0: [queue]→[S0 S1 …]
+//!              │ affinity: fingerprint % N  shard 1: [queue]→[S0 S1 …]
+//!              │ spill:    least-loaded     …        (shared registry,
+//!              │ full:     shed (overload)            shared mask cache)
+//!              ▼
+//!        RequestHandle { response rx, cancel }
+//! ```
+//!
+//! * **Grammar-affinity routing** — a request's constraint fingerprint
+//!   hashes to a preferred shard, so per-shard speculation priors and the
+//!   per-engine mask caches stay warm for that grammar. When the
+//!   preferred shard's queue is full (or the request has no grammar), it
+//!   spills to the least-loaded shard (queued + active) instead.
+//! * **Bounded admission + backpressure** — each shard's queue holds at
+//!   most [`SchedulerConfig::queue_depth`] requests. When every eligible
+//!   shard is full the request is **shed** immediately with the
+//!   structured `"overloaded"` reply rather than queueing forever.
+//! * **Deadlines + cancellation** — every submission carries a cancel
+//!   flag ([`RequestHandle::cancel`] / [`CancelToken`]) and an optional
+//!   deadline. Both are honored while queued *and* mid-decode: the shard
+//!   loop aborts the slot at the next tick instead of burning engine
+//!   ticks to `max_tokens`. A streaming request whose sink consumer
+//!   disappeared (client disconnect) aborts the same way.
+//! * **Streaming** — [`Scheduler::submit_streaming`] attaches a per-step
+//!   token sink; one [`StreamEvent`](super::slot::StreamEvent) arrives
+//!   per committed token, then the final [`GenResponse`].
+//! * **Cross-shard metrics** — [`Scheduler::metrics`] merges every
+//!   shard's snapshot ([`Metrics::merge`]) and folds in scheduler-level
+//!   shed counts; `shard_metrics` exposes the per-shard view.
+
+use super::engine::{EngineCore, EngineCtx, GenRequest, GenResponse, Work};
+use super::metrics::Metrics;
+use super::slot::StreamEvent;
+use crate::constraint::EngineRegistry;
+use anyhow::Context;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Scheduler shape knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Engine shards (threads). Each runs its own model state.
+    pub engines: usize,
+    /// Concurrent decode slots per shard (continuous batching width).
+    pub slots_per_engine: usize,
+    /// Max requests waiting (unadmitted) per shard before shedding.
+    pub queue_depth: usize,
+    /// Deadline applied to requests that don't carry their own.
+    pub default_deadline: Option<Duration>,
+    /// Capacity of the shared compiled-engine registry.
+    pub registry_capacity: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            engines: 1,
+            slots_per_engine: 4,
+            queue_depth: 64,
+            default_deadline: None,
+            registry_capacity: super::engine::DEFAULT_REGISTRY_CAPACITY,
+        }
+    }
+}
+
+enum Job {
+    Work(Work),
+    Stats(mpsc::Sender<Metrics>),
+    Shutdown,
+}
+
+struct Shard {
+    tx: mpsc::Sender<Job>,
+    /// Requests submitted to this shard but not yet admitted to a slot.
+    queued: Arc<AtomicUsize>,
+    /// Slots currently decoding on this shard.
+    active: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Shard {
+    fn queue_len(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    fn load(&self) -> usize {
+        self.queued.load(Ordering::Relaxed) + self.active.load(Ordering::Relaxed)
+    }
+}
+
+/// Client-side handle for one submitted request: the response receiver
+/// plus the cancellation flag the shard loops poll.
+pub struct RequestHandle {
+    rx: mpsc::Receiver<GenResponse>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    /// Block for the final response.
+    pub fn recv(&self) -> crate::Result<GenResponse> {
+        self.rx.recv().context("engine gone")
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<GenResponse, mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+
+    pub fn try_recv(&self) -> Result<GenResponse, mpsc::TryRecvError> {
+        self.rx.try_recv()
+    }
+
+    /// Abort the request (queued or mid-decode). The engine still sends
+    /// a final response (error `"cancelled"`, partial text/stats).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// A detachable cancel flag (e.g. for a disconnect watcher thread).
+    pub fn cancel_token(&self) -> CancelToken {
+        CancelToken(self.cancel.clone())
+    }
+
+    /// Drop the cancellation side and keep only the response receiver
+    /// (the pre-scheduler `Server::submit` shape).
+    pub fn into_receiver(self) -> mpsc::Receiver<GenResponse> {
+        self.rx
+    }
+}
+
+/// Clonable cancellation flag for one request.
+#[derive(Clone)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a running shard fleet.
+pub struct Scheduler {
+    shards: Vec<Shard>,
+    cfg: SchedulerConfig,
+    registry: Arc<EngineRegistry>,
+    shed: AtomicU64,
+}
+
+impl Scheduler {
+    /// Start `cfg.engines` shard threads. `init` runs once per shard ON
+    /// that shard's thread (model state is thread-pinned) and receives
+    /// the shared registry — build the context with
+    /// [`EngineCtx::with_registry`] so grammar compiles dedupe across
+    /// shards. NOTE: for cross-shard engine reuse the init must also
+    /// return the **same** `Arc<Vocab>` on every shard (registry keys
+    /// are fingerprint × vocab identity).
+    pub fn start<F>(init: F, cfg: SchedulerConfig) -> Scheduler
+    where
+        F: Fn(usize, Arc<EngineRegistry>) -> crate::Result<EngineCtx> + Send + Sync + 'static,
+    {
+        let mut cfg = cfg;
+        cfg.engines = cfg.engines.max(1);
+        cfg.slots_per_engine = cfg.slots_per_engine.max(1);
+        cfg.queue_depth = cfg.queue_depth.max(1);
+        let registry = EngineRegistry::new(cfg.registry_capacity.max(1));
+        let init = Arc::new(init);
+        let mut shards = Vec::with_capacity(cfg.engines);
+        for i in 0..cfg.engines {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let queued = Arc::new(AtomicUsize::new(0));
+            let active = Arc::new(AtomicUsize::new(0));
+            let init = init.clone();
+            let registry = registry.clone();
+            let slots = cfg.slots_per_engine;
+            let (q, a) = (queued.clone(), active.clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("domino-shard-{i}"))
+                .spawn(move || {
+                    let ctx = match init(i, registry) {
+                        Ok(ctx) => ctx,
+                        Err(e) => {
+                            eprintln!("shard {i} init failed: {e:#}");
+                            // Drain jobs with failures.
+                            for job in rx.iter() {
+                                if let Job::Work(w) = job {
+                                    q.fetch_sub(1, Ordering::Relaxed);
+                                    let msg = format!("engine init failed: {e:#}");
+                                    let _ = w.resp.send(GenResponse::failure(msg));
+                                }
+                            }
+                            return;
+                        }
+                    };
+                    shard_loop(EngineCore::new(ctx, slots), rx, q, a);
+                })
+                .expect("spawn shard thread");
+            shards.push(Shard { tx, queued, active, handle: Some(handle) });
+        }
+        Scheduler { shards, cfg, registry, shed: AtomicU64::new(0) }
+    }
+
+    /// Number of engine shards.
+    pub fn engines(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shared compiled-engine registry (passed to every shard init).
+    pub fn registry(&self) -> Arc<EngineRegistry> {
+        self.registry.clone()
+    }
+
+    /// Pick the shard for `req`: preferred = constraint fingerprint mod
+    /// N (keeps that grammar's speculation priors and mask-cache states
+    /// hot on one shard); spill to the least-loaded shard when the
+    /// preferred queue is full or the request has no grammar; `None`
+    /// when every eligible queue is full (shed).
+    fn route(&self, req: &GenRequest) -> Option<usize> {
+        let n = self.shards.len();
+        let spec = &req.constraint.spec;
+        if spec.is_grammar_backed() {
+            let preferred = (spec.fingerprint() % n as u64) as usize;
+            if self.shards[preferred].queue_len() < self.cfg.queue_depth {
+                return Some(preferred);
+            }
+        }
+        // Spill: least-loaded among the shards that still have queue
+        // room (shed only when every queue is full).
+        (0..n)
+            .filter(|&i| self.shards[i].queue_len() < self.cfg.queue_depth)
+            .min_by_key(|&i| self.shards[i].load())
+    }
+
+    /// Submit a request. Always returns a handle: overload and routing
+    /// failures arrive as structured error responses on the handle's
+    /// channel (`"overloaded"`), mirroring the wire protocol.
+    pub fn submit(&self, req: GenRequest) -> RequestHandle {
+        self.submit_with(req, None)
+    }
+
+    /// Submit a streaming request: one event per decode step lands on
+    /// `sink`, then the final response on the returned handle. If the
+    /// sink's receiver is dropped mid-decode the request is aborted
+    /// (client-disconnect cancellation).
+    pub fn submit_streaming(
+        &self,
+        req: GenRequest,
+        sink: mpsc::Sender<StreamEvent>,
+    ) -> RequestHandle {
+        self.submit_with(req, Some(sink))
+    }
+
+    fn submit_with(
+        &self,
+        mut req: GenRequest,
+        sink: Option<mpsc::Sender<StreamEvent>>,
+    ) -> RequestHandle {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let handle = RequestHandle { rx, cancel: cancel.clone() };
+        if req.deadline.is_none() {
+            req.deadline = self.cfg.default_deadline;
+        }
+        match self.route(&req) {
+            None => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(GenResponse::overloaded());
+            }
+            Some(i) => {
+                let deadline = req.deadline.map(|d| Instant::now() + d);
+                let work = Work {
+                    req,
+                    resp: tx.clone(),
+                    sink,
+                    cancel,
+                    enqueued: Instant::now(),
+                    deadline,
+                };
+                self.shards[i].queued.fetch_add(1, Ordering::Relaxed);
+                if self.shards[i].tx.send(Job::Work(work)).is_err() {
+                    self.shards[i].queued.fetch_sub(1, Ordering::Relaxed);
+                    let _ = tx.send(GenResponse::failure("engine gone"));
+                }
+            }
+        }
+        handle
+    }
+
+    /// Generate synchronously.
+    pub fn generate(&self, req: GenRequest) -> crate::Result<GenResponse> {
+        self.submit(req).recv()
+    }
+
+    /// Per-shard metrics snapshots (loop counters + shared-cache view).
+    pub fn shard_metrics(&self) -> crate::Result<Vec<Metrics>> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let (tx, rx) = mpsc::channel();
+            s.tx.send(Job::Stats(tx)).ok().context("shard gone")?;
+            out.push(rx.recv().context("shard gone")?);
+        }
+        Ok(out)
+    }
+
+    /// Aggregated cross-shard metrics: shard snapshots merged (loop
+    /// counters sum; shared registry/mask counters max — see
+    /// [`Metrics::merge`]) plus scheduler-level shed counts.
+    pub fn metrics(&self) -> crate::Result<Metrics> {
+        let mut agg = Metrics::default();
+        for m in self.shard_metrics()? {
+            agg.merge(&m);
+        }
+        agg.requests_shed += self.shed.load(Ordering::Relaxed);
+        Ok(agg)
+    }
+
+    /// Requests shed at admission so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for s in &self.shards {
+            let _ = s.tx.send(Job::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// One shard's loop: drain the channel, purge dead queued work, admit
+/// into free slots (FIFO, O(1) `VecDeque` pops), step every slot one
+/// decode iteration, retire finished slots. Blocks on the channel only
+/// when fully idle.
+fn shard_loop(
+    mut core: EngineCore,
+    rx: mpsc::Receiver<Job>,
+    queued_gauge: Arc<AtomicUsize>,
+    active_gauge: Arc<AtomicUsize>,
+) {
+    let mut queue: VecDeque<Work> = VecDeque::new();
+    loop {
+        // Drain the channel (block only when idle).
+        if core.active_len() == 0 && queue.is_empty() {
+            match rx.recv() {
+                Ok(Job::Work(w)) => queue.push_back(w),
+                Ok(Job::Stats(tx)) => {
+                    let _ = tx.send(core.snapshot());
+                    continue;
+                }
+                Ok(Job::Shutdown) | Err(_) => return,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Job::Work(w)) => queue.push_back(w),
+                Ok(Job::Stats(tx)) => {
+                    let _ = tx.send(core.snapshot());
+                }
+                Ok(Job::Shutdown) => return,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+
+        // Purge queued work that died waiting (cancelled / deadline
+        // passed) so it neither occupies queue depth nor gets admitted.
+        for _ in 0..queue.len() {
+            let w = queue.pop_front().expect("len-bounded pop");
+            match w.dead_reason() {
+                Some(abort) => {
+                    queued_gauge.fetch_sub(1, Ordering::Relaxed);
+                    core.reject(w, abort);
+                }
+                None => queue.push_back(w),
+            }
+        }
+
+        // Admit.
+        while core.has_capacity() {
+            let Some(work) = queue.pop_front() else { break };
+            queued_gauge.fetch_sub(1, Ordering::Relaxed);
+            core.admit(work);
+        }
+        active_gauge.store(core.active_len(), Ordering::Relaxed);
+
+        // Step every active slot once; retire the finished.
+        core.step_all();
+        core.reap();
+        active_gauge.store(core.active_len(), Ordering::Relaxed);
+    }
+}

@@ -1,4 +1,5 @@
-//! One in-flight request slot.
+//! One in-flight request slot: decode state, per-step token streaming,
+//! and an abort path for cancellation/deadlines.
 
 use crate::constraint::MaskCache;
 use crate::domino::generate::Prompt;
@@ -8,7 +9,85 @@ use crate::runtime::LmSession;
 use crate::tokenizer::{Vocab, EOS_ID};
 use crate::util::Rng;
 use crate::TokenId;
+use std::sync::mpsc;
 use std::sync::Arc;
+
+/// One streamed chunk of output text: the bytes a committed token (or the
+/// prompt-healing overhang) contributed to the output. Tokens are byte
+/// sequences, so a token may end mid-way through a multi-byte UTF-8
+/// character; the stream buffers such an incomplete tail and emits it
+/// with the next token's bytes, keeping the concatenation of all `text`
+/// fields equal to the final response text.
+#[derive(Clone, Debug)]
+pub struct StreamEvent {
+    /// Output text contributed by this step.
+    pub text: String,
+    /// 1-based index of this event within the request's stream.
+    pub index: usize,
+}
+
+/// Per-slot streaming state, kept separate from [`Slot`]'s decode state so
+/// the speculative path (which holds `&mut self.mode`) can still emit.
+#[derive(Default)]
+struct Stream {
+    sink: Option<mpsc::Sender<StreamEvent>>,
+    events: usize,
+    gone: bool,
+    /// Bytes held back because they end in an incomplete UTF-8 sequence
+    /// (a token boundary split a multi-byte character).
+    pending: Vec<u8>,
+}
+
+impl Stream {
+    fn emit_bytes(&mut self, bytes: &[u8]) {
+        if self.sink.is_none() {
+            return;
+        }
+        self.pending.extend_from_slice(bytes);
+        // Emit the longest prefix that ends on a character boundary; an
+        // incomplete trailing sequence waits for the next token's bytes.
+        let emit_to = match std::str::from_utf8(&self.pending) {
+            Ok(_) => self.pending.len(),
+            // Incomplete final sequence: hold the tail back.
+            Err(e) if e.error_len().is_none() => e.valid_up_to(),
+            // Genuinely invalid bytes: flush everything lossily (matches
+            // the final text's lossy decode).
+            Err(_) => self.pending.len(),
+        };
+        if emit_to == 0 {
+            return;
+        }
+        let chunk: Vec<u8> = self.pending.drain(..emit_to).collect();
+        self.send(String::from_utf8_lossy(&chunk).into_owned());
+    }
+
+    fn emit_token(&mut self, vocab: &Vocab, t: TokenId) {
+        if self.sink.is_some() {
+            self.emit_bytes(vocab.token_bytes(t));
+        }
+    }
+
+    /// Flush any held-back incomplete tail (stream is ending).
+    fn flush(&mut self) {
+        if self.sink.is_some() && !self.pending.is_empty() {
+            let tail = std::mem::take(&mut self.pending);
+            self.send(String::from_utf8_lossy(&tail).into_owned());
+        }
+    }
+
+    fn send(&mut self, text: String) {
+        if let Some(sink) = &self.sink {
+            self.events += 1;
+            let ev = StreamEvent { text, index: self.events };
+            if sink.send(ev).is_err() {
+                // The stream consumer hung up: flag it so the engine loop
+                // aborts this slot instead of decoding to the end.
+                self.gone = true;
+                self.sink = None;
+            }
+        }
+    }
+}
 
 /// How this request is constrained/decoded.
 ///
@@ -91,6 +170,11 @@ pub struct Slot {
     pub stats: SlotStats,
     logits: Vec<f32>,
     pub done: bool,
+    /// Aborted by cancellation or deadline (set via [`Slot::abort`]); the
+    /// output is the partial text produced so far.
+    pub aborted: bool,
+    /// Per-step streaming state (token sink + consumer liveness).
+    stream: Stream,
     /// Output bytes produced by the healing phase (token overhang).
     text_prefix: Vec<u8>,
 }
@@ -124,10 +208,43 @@ impl Slot {
             stats,
             logits,
             done: false,
+            aborted: false,
+            stream: Stream::default(),
             text_prefix: Vec::new(),
         };
         slot.heal(&prompt.forced)?;
         Ok(slot)
+    }
+
+    /// Attach a per-step token sink (streaming). Output text already
+    /// produced (the healing overhang) is flushed as the first event so
+    /// the stream's concatenation equals the final `text()`.
+    pub fn attach_sink(&mut self, sink: mpsc::Sender<StreamEvent>) {
+        self.stream.sink = Some(sink);
+        if !self.text_prefix.is_empty() {
+            let prefix = self.text_prefix.clone();
+            self.stream.emit_bytes(&prefix);
+        }
+    }
+
+    /// Abort this slot mid-decode (cancellation or deadline). The slot
+    /// stops consuming engine ticks; the partial output stays readable.
+    pub fn abort(&mut self) {
+        self.done = true;
+        self.aborted = true;
+    }
+
+    /// Did the streaming consumer disappear (a sink send failed)? The
+    /// driving loop treats this as a client disconnect and aborts.
+    pub fn client_gone(&self) -> bool {
+        self.stream.gone
+    }
+
+    /// Flush any buffered incomplete-UTF-8 tail to the stream. Called by
+    /// the engine when the slot retires (complete or aborted), before
+    /// the final response is sent.
+    pub fn finish_stream(&mut self) {
+        self.stream.flush();
     }
 
     /// Consume the healed prompt suffix (cf. `generate::Loop::heal`).
@@ -239,6 +356,7 @@ impl Slot {
         }
         self.out.push(chosen);
         self.stats.tokens_out += 1;
+        self.stream.emit_token(&self.vocab, chosen);
         self.logits = self.session.append(&[chosen])?;
         self.stats.model_calls += 1;
         if self.out.len() >= self.max_tokens {
@@ -290,6 +408,7 @@ impl Slot {
                         decoder.advance(p)?;
                         self.out.push(p);
                         self.stats.tokens_out += 1;
+                        self.stream.emit_token(&self.vocab, p);
                         self.stats.spec_accepted += 1;
                         accepted += 1;
                         self.logits = rows[i].clone();
@@ -315,6 +434,7 @@ impl Slot {
                         decoder.advance(choice)?;
                         self.out.push(choice);
                         self.stats.tokens_out += 1;
+                        self.stream.emit_token(&self.vocab, choice);
                         self.logits = self.session.append(&[choice])?;
                         self.stats.model_calls += 1;
                         if self.out.len() >= self.max_tokens {

@@ -1,12 +1,13 @@
 //! JSONL-over-TCP front end.
 //!
-//! Protocol: one JSON object per line.
+//! Protocol: one JSON object per line, one JSON object (or event stream)
+//! per reply.
 //!
-//! Request:
+//! Generation request:
 //! ```json
 //! {"prompt": "...", "grammar": "json", "method": "domino",
 //!  "k": null, "speculative": 8, "max_tokens": 128,
-//!  "temperature": 1.0, "seed": 7}
+//!  "temperature": 1.0, "seed": 7, "stream": false, "deadline_ms": 2000}
 //! ```
 //! `method`: "unconstrained" | "domino" | "domino-full" | "online".
 //!
@@ -17,25 +18,92 @@
 //! * `"grammar": "json"` — a builtin evaluation grammar by name;
 //! * `"stop": ["\n\n"]` — free generation until a stop sequence appears.
 //!
-//! Response:
+//! Validation: `k` / `speculative` / `max_tokens` / `seed` /
+//! `temperature` / `deadline_ms` must be non-negative finite numbers
+//! (anything else is a `bad request` error, not a silent cast), and
+//! `max_tokens` is clamped to the server-side cap [`MAX_TOKENS_CAP`].
+//!
+//! Non-streaming response (also the terminator of a streaming response):
 //! ```json
 //! {"text": "...", "tokens": 42, "interventions": 0, "model_calls": 40,
 //!  "masks": 3, "elapsed_s": 0.8, "error": null}
 //! ```
+//! `error` is `null` on success; notable values: `"overloaded"` (the
+//! scheduler shed the request at admission — bounded-queue backpressure),
+//! `"cancelled"` (client disconnected mid-decode), `"deadline exceeded"`.
+//!
+//! Streaming: with `"stream": true`, each decode step emits one event
+//! line before the final stats object:
+//! ```json
+//! {"token": "...", "index": 1}
+//! ```
+//! Concatenating every `token` field yields the final `text`. If the
+//! client disconnects mid-stream the request is aborted at the next
+//! engine tick instead of decoding to `max_tokens`.
+//!
+//! Stats request — returns the aggregated cross-shard metrics snapshot:
+//! ```json
+//! {"op": "stats"}
+//! ```
 
-use super::engine::{Constraint, ConstraintSpec, GenRequest, GenResponse, Server};
+use super::engine::{Constraint, ConstraintSpec, GenRequest, GenResponse};
+use super::metrics::Metrics;
+use super::scheduler::Scheduler;
+use super::slot::StreamEvent;
 use crate::util::Json;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
-/// Parse one request line.
-pub fn parse_request(line: &str) -> crate::Result<GenRequest> {
+/// Server-side ceiling on `max_tokens`: wire requests are clamped here so
+/// a single request cannot pin a slot arbitrarily long.
+pub const MAX_TOKENS_CAP: usize = 4096;
+
+/// One parsed request line.
+pub enum Request {
+    Generate(GenRequest),
+    /// `{"op": "stats"}` — aggregated cross-shard metrics.
+    Stats,
+}
+
+/// Parse one request line (generation or `stats` op).
+pub fn parse_line(line: &str) -> crate::Result<Request> {
     let v = Json::parse(line)?;
+    if let Some(op) = v.get("op").and_then(|o| o.as_str()) {
+        return match op {
+            "stats" => Ok(Request::Stats),
+            "generate" => Ok(Request::Generate(parse_request_value(&v)?)),
+            other => anyhow::bail!("unknown op `{other}`"),
+        };
+    }
+    Ok(Request::Generate(parse_request_value(&v)?))
+}
+
+/// Parse one generation-request line.
+pub fn parse_request(line: &str) -> crate::Result<GenRequest> {
+    parse_request_value(&Json::parse(line)?)
+}
+
+/// Fetch `name` as a non-negative finite number, rejecting (rather than
+/// silently casting) negative, non-finite and non-numeric values.
+fn non_negative(v: &Json, name: &str) -> crate::Result<Option<f64>> {
+    match v.get(name) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => match x.as_f64() {
+            Some(f) if f.is_finite() && f >= 0.0 => Ok(Some(f)),
+            Some(f) => anyhow::bail!("`{name}` must be non-negative and finite, got {f}"),
+            None => anyhow::bail!("`{name}` must be a number"),
+        },
+    }
+}
+
+fn parse_request_value(v: &Json) -> crate::Result<GenRequest> {
     let prompt = v.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string();
     let method = v.get("method").and_then(|m| m.as_str()).unwrap_or("domino");
-    let k = v.get("k").and_then(|k| k.as_f64()).map(|k| k as u32);
-    let speculative = v.get("speculative").and_then(|s| s.as_f64()).map(|s| s as usize);
+    let k = non_negative(v, "k")?.map(|k| k as u32);
+    let speculative = non_negative(v, "speculative")?.map(|s| s as usize);
+    let max_tokens = non_negative(v, "max_tokens")?.map(|m| m as usize).unwrap_or(128);
     // `stop` accepts the scalar form common to serving APIs as well as an
     // array; anything else is an error rather than a silent no-constraint.
     let stop: Option<Vec<String>> = match v.get("stop") {
@@ -66,9 +134,11 @@ pub fn parse_request(line: &str) -> crate::Result<GenRequest> {
     Ok(GenRequest {
         prompt,
         constraint,
-        max_tokens: v.get("max_tokens").and_then(|m| m.as_f64()).unwrap_or(128.0) as usize,
-        temperature: v.get("temperature").and_then(|t| t.as_f64()).map(|t| t as f32),
-        seed: v.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64,
+        max_tokens: max_tokens.min(MAX_TOKENS_CAP),
+        temperature: non_negative(v, "temperature")?.map(|t| t as f32),
+        seed: non_negative(v, "seed")?.unwrap_or(0.0) as u64,
+        deadline: non_negative(v, "deadline_ms")?.map(|ms| Duration::from_millis(ms as u64)),
+        stream: v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false),
     })
 }
 
@@ -91,39 +161,192 @@ pub fn format_response(resp: &GenResponse) -> String {
     Json::obj(obj).to_string()
 }
 
-fn handle_conn(stream: TcpStream, server: Arc<Server>) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+/// Format one streaming token event line.
+pub fn format_event(ev: &StreamEvent) -> String {
+    Json::obj(vec![
+        ("token", Json::str(ev.text.clone())),
+        ("index", Json::Num(ev.index as f64)),
+    ])
+    .to_string()
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Format the `{"op":"stats"}` reply: the aggregated cross-shard metrics
+/// snapshot.
+pub fn format_stats(m: &Metrics, engines: usize) -> String {
+    Json::obj(vec![
+        ("engines", Json::Num(engines as f64)),
+        ("requests_completed", Json::Num(m.requests_completed as f64)),
+        ("requests_failed", Json::Num(m.requests_failed as f64)),
+        ("requests_cancelled", Json::Num(m.requests_cancelled as f64)),
+        ("requests_deadline_exceeded", Json::Num(m.requests_deadline_exceeded as f64)),
+        ("requests_shed", Json::Num(m.requests_shed as f64)),
+        ("tokens_generated", Json::Num(m.tokens_generated as f64)),
+        ("model_calls", Json::Num(m.model_calls as f64)),
+        ("interventions", Json::Num(m.interventions as f64)),
+        ("masks_computed", Json::Num(m.masks_computed as f64)),
+        ("spec_proposed", Json::Num(m.spec_proposed as f64)),
+        ("spec_accepted", Json::Num(m.spec_accepted as f64)),
+        ("registry_hits", Json::Num(m.registry_hits as f64)),
+        ("registry_misses", Json::Num(m.registry_misses as f64)),
+        ("registry_evictions", Json::Num(m.registry_evictions as f64)),
+        ("registry_coalesced", Json::Num(m.registry_coalesced as f64)),
+        ("engine_compile_ms", Json::Num(m.engine_compile_ms as f64)),
+        ("mask_cache_hits", Json::Num(m.mask_cache_hits as f64)),
+        ("mask_cache_misses", Json::Num(m.mask_cache_misses as f64)),
+        ("mask_cache_hit_rate", Json::Num(m.mask_cache_hit_rate())),
+        ("ttft_p50_s", num_or_null(m.ttft.percentile(0.5))),
+        ("queue_wait_p50_s", num_or_null(m.queue_wait.percentile(0.5))),
+        ("req_tps_mean", num_or_null(m.req_tps.mean())),
+        ("model_time_s", Json::Num(m.model_time.as_secs_f64())),
+    ])
+    .to_string()
+}
+
+/// Has the peer's connection *errored* (reset / broken pipe)? Used to
+/// cancel in-flight work whose client is gone.
+///
+/// Deliberately tolerant of read-side EOF: a client may half-close after
+/// sending its request (`echo req | nc host port`) and still be waiting
+/// for the reply, so `Ok(0)` is NOT treated as a disconnect. A fully
+/// closed peer is detected once writes start failing — immediately for
+/// streaming responses; for non-streaming ones the request is otherwise
+/// bounded by `max_tokens` (capped) and any deadline.
+fn client_disconnected(stream: &TcpStream) -> bool {
+    let mut buf = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let r = stream.peek(&mut buf);
+    let _ = stream.set_nonblocking(false);
+    match r {
+        Ok(_) => false, // pending bytes, or tolerated half-close EOF
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true, // reset / broken pipe
+    }
+}
+
+fn error_line(prefix: &str, e: impl std::fmt::Display) -> String {
+    Json::obj(vec![("error", Json::str(format!("{prefix}{e}")))]).to_string()
+}
+
+/// Serve one generation request, blocking until the final response while
+/// watching the connection so a disconnected client cancels the work.
+fn handle_generate(req: GenRequest, sched: &Scheduler, out: &mut TcpStream) -> std::io::Result<()> {
+    if req.stream {
+        let (stx, srx) = mpsc::channel::<StreamEvent>();
+        let handle = sched.submit_streaming(req, stx);
+        let mut write_failed = false;
+        // Drain events until the engine drops the sink (slot retired);
+        // buffered events are delivered before the disconnect.
+        loop {
+            match srx.recv_timeout(Duration::from_millis(25)) {
+                Ok(ev) => {
+                    if !write_failed && writeln!(out, "{}", format_event(&ev)).is_err() {
+                        write_failed = true;
+                        handle.cancel();
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if !write_failed && client_disconnected(out) {
+                        write_failed = true;
+                        handle.cancel();
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let line = match handle.recv() {
+            Ok(resp) => format_response(&resp),
+            Err(e) => error_line("", format!("{e:#}")),
+        };
+        if write_failed {
+            return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "client gone"));
+        }
+        writeln!(out, "{line}")
+    } else {
+        let handle = sched.submit(req);
+        let resp = loop {
+            match handle.recv_timeout(Duration::from_millis(50)) {
+                Ok(resp) => break resp,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if client_disconnected(out) {
+                        // Abort the in-flight work; the engine's final
+                        // (cancelled) response still arrives below.
+                        handle.cancel();
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return writeln!(out, "{}", error_line("", "engine gone"));
+                }
+            }
+        };
+        writeln!(out, "{}", format_response(&resp))
+    }
+}
+
+fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>) {
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
     let mut out = stream;
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line) {
-            Ok(req) => match server.generate(req) {
-                Ok(resp) => format_response(&resp),
-                Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
-            },
-            Err(e) => Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))])
-                .to_string(),
+        let result = match parse_line(&line) {
+            Ok(Request::Stats) => {
+                let reply = match sched.metrics() {
+                    Ok(m) => format_stats(&m, sched.engines()),
+                    Err(e) => error_line("stats failed: ", format!("{e:#}")),
+                };
+                writeln!(out, "{reply}")
+            }
+            Ok(Request::Generate(req)) => handle_generate(req, &sched, &mut out),
+            Err(e) => writeln!(out, "{}", error_line("bad request: ", format!("{e:#}"))),
         };
-        if writeln!(out, "{reply}").is_err() {
+        if result.is_err() {
             break;
         }
     }
-    let _ = peer;
+}
+
+/// Bind `addr` and serve on a background accept thread; returns the bound
+/// address (use port 0 for an OS-assigned port — handy for tests).
+pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("domino-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let sched = sched.clone();
+                std::thread::spawn(move || handle_conn(stream, sched));
+            }
+        })
+        .expect("spawn accept thread");
+    Ok(local)
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7761").
-pub fn serve(server: Server, addr: &str) -> crate::Result<()> {
+pub fn serve(sched: Scheduler, addr: &str) -> crate::Result<()> {
     let listener = TcpListener::bind(addr)?;
-    eprintln!("domino: serving on {addr}");
-    let server = Arc::new(server);
+    eprintln!("domino: serving on {addr} ({} engine shard(s))", sched.engines());
+    let sched = Arc::new(sched);
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
-        let server = server.clone();
-        std::thread::spawn(move || handle_conn(stream, server));
+        let sched = sched.clone();
+        std::thread::spawn(move || handle_conn(stream, sched));
     }
     Ok(())
 }
@@ -179,6 +402,48 @@ mod tests {
     }
 
     #[test]
+    fn rejects_negative_and_non_numeric_knobs() {
+        assert!(parse_request(r#"{"prompt": "x", "k": -1}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "speculative": -8}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "max_tokens": -5}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "seed": -7}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "deadline_ms": -100}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "temperature": -2}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "max_tokens": "many"}"#).is_err());
+        // Explicit nulls mean "absent", as before.
+        let r = parse_request(r#"{"prompt": "x", "grammar": "json", "k": null}"#).unwrap();
+        assert_eq!(r.constraint, Constraint::domino(ConstraintSpec::builtin("json")));
+    }
+
+    #[test]
+    fn clamps_max_tokens_to_cap() {
+        let r = parse_request(r#"{"prompt": "x", "max_tokens": 1000000}"#).unwrap();
+        assert_eq!(r.max_tokens, MAX_TOKENS_CAP);
+        let r = parse_request(r#"{"prompt": "x", "max_tokens": 16}"#).unwrap();
+        assert_eq!(r.max_tokens, 16);
+    }
+
+    #[test]
+    fn parses_stream_and_deadline() {
+        let r = parse_request(r#"{"prompt": "x", "stream": true, "deadline_ms": 1500}"#).unwrap();
+        assert!(r.stream);
+        assert_eq!(r.deadline, Some(Duration::from_millis(1500)));
+        let r = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert!(!r.stream);
+        assert_eq!(r.deadline, None);
+    }
+
+    #[test]
+    fn parses_stats_op() {
+        assert!(matches!(parse_line(r#"{"op": "stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(
+            parse_line(r#"{"prompt": "x"}"#).unwrap(),
+            Request::Generate(_)
+        ));
+        assert!(parse_line(r#"{"op": "nope"}"#).is_err());
+    }
+
+    #[test]
     fn formats_response() {
         let resp = GenResponse {
             text: "{\"a\": 1}".into(),
@@ -190,5 +455,21 @@ mod tests {
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("text").unwrap().as_str().unwrap(), "{\"a\": 1}");
         assert_eq!(v.get("error"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn formats_event_and_stats() {
+        let line = format_event(&StreamEvent { text: "ab".into(), index: 3 });
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("token").unwrap().as_str().unwrap(), "ab");
+        assert_eq!(v.get("index").unwrap().as_f64().unwrap(), 3.0);
+
+        let m = Metrics::default();
+        let line = format_stats(&m, 4);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("engines").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(v.get("requests_shed").unwrap().as_f64().unwrap(), 0.0);
+        // Empty summaries serialize as null, not NaN (which isn't JSON).
+        assert_eq!(v.get("ttft_p50_s"), Some(&Json::Null));
     }
 }

@@ -1,0 +1,438 @@
+//! Sharded-scheduler integration over the mock LM: cross-shard registry
+//! dedup + grammar-affinity routing, work-stealing spill, queue-overflow
+//! shedding, per-request deadlines, cancellation (in-process and via TCP
+//! disconnect), streaming, and the stats op.
+
+use domino::constraint::{Constraint, ConstraintSpec};
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::runtime::{LmFactory, LmSession};
+use domino::server::engine::{EngineCtx, GenRequest};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::server::tcp;
+use domino::util::Json;
+use domino::TokenId;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn cfg(engines: usize, slots: usize, depth: usize) -> SchedulerConfig {
+    SchedulerConfig {
+        engines,
+        slots_per_engine: slots,
+        queue_depth: depth,
+        ..SchedulerConfig::default()
+    }
+}
+
+/// Mock-LM scheduler; one vocab Arc shared across shards (registry keys
+/// are fingerprint × vocab identity).
+fn mock_sched(engines: usize, slots: usize, depth: usize) -> Scheduler {
+    let (vocab, model) = json_mock(512);
+    Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(MockFactory { model: model.clone() }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        cfg(engines, slots, depth),
+    )
+}
+
+/// An LM whose every forward pass takes `delay` — makes decodes slow
+/// enough to observe queues, cancellation and deadlines mid-flight.
+struct SlowFactory {
+    inner: MockFactory,
+    delay: Duration,
+}
+
+struct SlowSession {
+    inner: Box<dyn LmSession>,
+    delay: Duration,
+}
+
+impl LmFactory for SlowFactory {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn new_session(&self) -> domino::Result<Box<dyn LmSession>> {
+        Ok(Box::new(SlowSession { inner: self.inner.new_session()?, delay: self.delay }))
+    }
+}
+
+impl LmSession for SlowSession {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn append(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.append(tokens)
+    }
+
+    fn append_scored(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.append_scored(tokens)
+    }
+
+    fn rollback(&mut self, n: usize) -> domino::Result<()> {
+        self.inner.rollback(n)
+    }
+}
+
+fn slow_sched(engines: usize, slots: usize, depth: usize, delay_ms: u64) -> Scheduler {
+    let (vocab, model) = json_mock(512);
+    Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(SlowFactory {
+                    inner: MockFactory { model: model.clone() },
+                    delay: Duration::from_millis(delay_ms),
+                }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        cfg(engines, slots, depth),
+    )
+}
+
+/// An LM that errors after `fail_after` forward passes — exercises the
+/// mid-step slot-error path.
+struct FailingFactory {
+    inner: MockFactory,
+    fail_after: usize,
+}
+
+struct FailingSession {
+    inner: Box<dyn LmSession>,
+    calls: usize,
+    fail_after: usize,
+}
+
+impl LmFactory for FailingFactory {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn new_session(&self) -> domino::Result<Box<dyn LmSession>> {
+        Ok(Box::new(FailingSession {
+            inner: self.inner.new_session()?,
+            calls: 0,
+            fail_after: self.fail_after,
+        }))
+    }
+}
+
+impl LmSession for FailingSession {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn append(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<f32>> {
+        self.calls += 1;
+        anyhow::ensure!(self.calls <= self.fail_after, "injected model failure");
+        self.inner.append(tokens)
+    }
+
+    fn append_scored(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<Vec<f32>>> {
+        self.calls += 1;
+        anyhow::ensure!(self.calls <= self.fail_after, "injected model failure");
+        self.inner.append_scored(tokens)
+    }
+
+    fn rollback(&mut self, n: usize) -> domino::Result<()> {
+        self.inner.rollback(n)
+    }
+}
+
+fn req(grammar: &str, max_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        prompt: String::new(),
+        constraint: Constraint::domino(ConstraintSpec::builtin(grammar)),
+        max_tokens,
+        temperature: Some(1.0),
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn shards_share_one_registry_compile_per_grammar() {
+    let sched = mock_sched(4, 2, 64);
+    let grammars = ["json", "gsm8k", "c"];
+    let handles: Vec<_> =
+        (0..12).map(|i| sched.submit(req(grammars[i % 3], 12, i as u64))).collect();
+    for h in handles {
+        let r = h.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let m = sched.metrics().unwrap();
+    assert_eq!(m.requests_completed, 12);
+    assert_eq!(
+        m.registry_misses, 3,
+        "one shared compile per distinct grammar across all shards: {m:?}"
+    );
+    assert_eq!(m.registry_hits, 9, "warm shards must reuse the shared engines");
+
+    // Affinity: each grammar hashes to one preferred shard, and nothing
+    // spilled (queues far under depth) — so at most 3 shards saw work.
+    let shards = sched.shard_metrics().unwrap();
+    let used = shards.iter().filter(|s| s.requests_completed > 0).count();
+    assert!(used <= 3, "affinity routing must not scatter 3 grammars over {used} shards");
+    sched.shutdown();
+}
+
+#[test]
+fn affinity_pins_one_grammar_to_one_shard() {
+    let sched = mock_sched(4, 2, 64);
+    let handles: Vec<_> = (0..8).map(|i| sched.submit(req("json", 8, i as u64))).collect();
+    for h in handles {
+        assert!(h.recv().unwrap().error.is_none());
+    }
+    let shards = sched.shard_metrics().unwrap();
+    let used = shards.iter().filter(|s| s.requests_completed > 0).count();
+    assert_eq!(used, 1, "one grammar under light load must stay on its preferred shard");
+    sched.shutdown();
+}
+
+#[test]
+fn full_preferred_shard_spills_to_least_loaded() {
+    // Shard count 2, one slot and queue depth 2 per shard, slow decodes.
+    let sched = slow_sched(2, 1, 2, 5);
+    let preferred = (ConstraintSpec::builtin("json").fingerprint() % 2) as usize;
+    // Occupy the preferred shard's slot with a long request...
+    let long = sched.submit(req("json", 100, 0));
+    std::thread::sleep(Duration::from_millis(60)); // until it is admitted
+    // ...then fill its queue (depth 2) and two more that must spill.
+    let fillers: Vec<_> = (0..4).map(|i| sched.submit(req("json", 2, i + 1))).collect();
+    for f in fillers {
+        let r = f.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let shards = sched.shard_metrics().unwrap();
+    assert!(
+        shards[1 - preferred].requests_completed >= 1,
+        "overflow past the preferred queue must spill to the other shard: {shards:?}"
+    );
+    let r = long.recv().unwrap();
+    assert!(r.error.is_none());
+    sched.shutdown();
+}
+
+#[test]
+fn admission_error_reports_to_client() {
+    let sched = mock_sched(2, 2, 16);
+    let r = sched.generate(req("no-such-grammar", 8, 0)).unwrap();
+    assert!(r.error.is_some(), "unknown grammar must fail the request");
+    let m = sched.metrics().unwrap();
+    assert_eq!(m.requests_failed, 1);
+    assert_eq!(m.requests_completed, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn mid_step_slot_error_fails_request_not_engine() {
+    let (vocab, model) = json_mock(512);
+    let sched = Scheduler::start(
+        move |_shard, registry| {
+            let factory = Box::new(FailingFactory {
+                inner: MockFactory { model: model.clone() },
+                fail_after: 3,
+            });
+            Ok(EngineCtx::with_registry(factory, vocab.clone(), registry))
+        },
+        cfg(1, 2, 16),
+    );
+    let r = sched
+        .generate(GenRequest { max_tokens: 32, ..Default::default() })
+        .unwrap();
+    assert!(r.error.as_deref().unwrap_or("").contains("injected model failure"), "{:?}", r.error);
+    assert!(r.stats.tokens_out < 32, "the slot must die mid-decode");
+    // The engine survives: a session that doesn't hit the injected limit
+    // still completes.
+    let r2 = sched.generate(GenRequest { max_tokens: 1, ..Default::default() }).unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+    let m = sched.metrics().unwrap();
+    assert_eq!(m.requests_failed, 1);
+    assert_eq!(m.requests_completed, 1);
+    sched.shutdown();
+}
+
+#[test]
+fn queue_overflow_sheds_with_structured_error() {
+    let sched = slow_sched(1, 1, 1, 10);
+    let handles: Vec<_> = (0..6).map(|i| sched.submit(req("json", 16, i))).collect();
+    let mut ok = 0;
+    let mut shed = 0;
+    for h in handles {
+        let r = h.recv().unwrap();
+        match r.error.as_deref() {
+            None => ok += 1,
+            Some("overloaded") => shed += 1,
+            Some(other) => panic!("unexpected error: {other}"),
+        }
+    }
+    assert!(ok >= 1, "at least the first request must be served");
+    assert!(shed >= 1, "a bounded queue must shed under burst load");
+    let m = sched.metrics().unwrap();
+    assert_eq!(m.requests_shed, shed as u64);
+    assert_eq!(m.requests_completed, ok as u64);
+    sched.shutdown();
+}
+
+#[test]
+fn cancellation_aborts_mid_decode() {
+    let sched = slow_sched(1, 1, 4, 5);
+    let handle = sched.submit(req("json", 400, 0));
+    std::thread::sleep(Duration::from_millis(60));
+    handle.cancel();
+    let r = handle.recv().unwrap();
+    assert_eq!(r.error.as_deref(), Some("cancelled"));
+    assert!(
+        r.stats.tokens_out < 400,
+        "the slot must abort well before max_tokens, got {}",
+        r.stats.tokens_out
+    );
+    let m = sched.metrics().unwrap();
+    assert_eq!(m.requests_cancelled, 1);
+    assert_eq!(m.requests_completed, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn deadline_aborts_queued_and_running_work() {
+    let sched = slow_sched(1, 1, 8, 5);
+    // Running request: deadline fires mid-decode.
+    let mut running = req("json", 400, 0);
+    running.deadline = Some(Duration::from_millis(100));
+    // Queued request: sits behind the first, deadline fires in queue.
+    let mut queued = req("json", 4, 1);
+    queued.deadline = Some(Duration::from_millis(30));
+    let h1 = sched.submit(running);
+    let h2 = sched.submit(queued);
+    let r1 = h1.recv().unwrap();
+    assert_eq!(r1.error.as_deref(), Some("deadline exceeded"));
+    assert!(r1.stats.tokens_out < 400);
+    let r2 = h2.recv().unwrap();
+    assert_eq!(r2.error.as_deref(), Some("deadline exceeded"));
+    assert_eq!(r2.stats.tokens_out, 0, "queued request must die before admission");
+    let m = sched.metrics().unwrap();
+    assert_eq!(m.requests_deadline_exceeded, 2);
+    sched.shutdown();
+}
+
+#[test]
+fn streaming_events_concatenate_to_final_text() {
+    let sched = mock_sched(1, 2, 16);
+    let (stx, srx) = mpsc::channel();
+    let handle = sched.submit_streaming(req("json", 32, 7), stx);
+    let mut streamed = String::new();
+    let mut count = 0usize;
+    for ev in srx.iter() {
+        count += 1;
+        assert_eq!(ev.index, count, "events must arrive in order");
+        streamed.push_str(&ev.text);
+    }
+    let r = handle.recv().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(streamed, r.text, "stream concatenation must equal the final text");
+    assert_eq!(count, r.stats.tokens_out, "one event per committed token");
+    sched.shutdown();
+}
+
+#[test]
+fn tcp_stream_disconnect_cancels_slot() {
+    let sched = Arc::new(slow_sched(1, 1, 8, 5));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(
+            conn,
+            r#"{{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 400, "temperature": 1.0}}"#
+        )
+        .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // Read a couple of token events to prove decoding started...
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let v = Json::parse(&line).unwrap();
+            assert!(v.get("token").is_some(), "expected a token event, got {line}");
+        }
+        // ...then hang up mid-stream.
+    }
+    let t0 = Instant::now();
+    loop {
+        let m = sched.metrics().unwrap();
+        if m.requests_cancelled >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "disconnect must cancel the in-flight slot: {m:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn tcp_stats_op_returns_cross_shard_snapshot() {
+    let sched = Arc::new(mock_sched(2, 2, 16));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"prompt": "", "grammar": "json", "max_tokens": 8}}"#).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("error"), Some(&Json::Null), "{line}");
+
+    writeln!(conn, r#"{{"op": "stats"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("engines").unwrap().as_f64().unwrap(), 2.0);
+    assert!(v.get("requests_completed").unwrap().as_f64().unwrap() >= 1.0, "{line}");
+    assert!(v.get("registry_misses").unwrap().as_f64().unwrap() >= 1.0, "{line}");
+}
+
+#[test]
+fn streaming_over_tcp_terminates_with_stats_object() {
+    let sched = Arc::new(mock_sched(1, 2, 16));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(
+        conn,
+        r#"{{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 16, "temperature": 1.0}}"#
+    )
+    .unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    let mut streamed = String::new();
+    let mut finished = false;
+    for line in reader.lines() {
+        let line = line.unwrap();
+        let v = Json::parse(&line).unwrap();
+        if let Some(tok) = v.get("token") {
+            streamed.push_str(tok.as_str().unwrap());
+        } else {
+            // The final stats object ends the stream.
+            assert_eq!(v.get("error"), Some(&Json::Null), "{line}");
+            assert_eq!(v.get("text").unwrap().as_str().unwrap(), streamed, "{line}");
+            finished = true;
+            break;
+        }
+    }
+    assert!(finished, "stream must terminate with the final stats object");
+}

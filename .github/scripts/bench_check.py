@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Fail CI when a bench metric regresses more than THRESHOLD vs the
+checked-in baseline.
+
+Usage: bench_check.py BASELINE.json FRESH.json
+
+Orientation is inferred from the metric name: ``*_ms`` metrics are
+lower-is-better; everything else (``tok_s_*``, ``speedup``) is
+higher-is-better. Metrics present on only one side are reported but not
+gated, so a newly added bench seeds the baseline on the next refresh
+instead of breaking the build. The top-level ``meta`` section is
+documentation, not data.
+
+Only the Python standard library is used.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.25
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} BASELINE.json FRESH.json")
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    failures = []
+    for section, metrics in sorted(fresh.items()):
+        if section == "meta" or not isinstance(metrics, dict):
+            continue
+        base_section = base.get(section, {})
+        if not isinstance(base_section, dict):
+            base_section = {}
+        for name, value in sorted(metrics.items()):
+            baseline = base_section.get(name)
+            if not isinstance(baseline, (int, float)) or not isinstance(value, (int, float)):
+                print(f"  {section}.{name} = {value} (no baseline - not gated)")
+                continue
+            lower_is_better = name.endswith("_ms")
+            if baseline <= 0:
+                print(f"  {section}.{name}: baseline {baseline} unusable - not gated")
+                continue
+            if lower_is_better:
+                regressed = value > baseline * (1 + THRESHOLD)
+                delta = (value - baseline) / baseline
+            else:
+                regressed = value < baseline * (1 - THRESHOLD)
+                delta = (baseline - value) / baseline
+            status = "REGRESSED" if regressed else "ok"
+            arrow = "higher=worse" if lower_is_better else "lower=worse"
+            print(
+                f"  {section}.{name}: baseline {baseline:.2f} -> {value:.2f} "
+                f"[{arrow}] ({status})"
+            )
+            if regressed:
+                failures.append(
+                    f"{section}.{name} regressed {delta:.0%} "
+                    f"(baseline {baseline:.2f}, now {value:.2f})"
+                )
+
+    # A baseline metric missing from the fresh report means a bench
+    # stopped emitting (or its emit_json write failed) — exactly the
+    # silent rot this gate exists to catch, so it fails too.
+    for section, metrics in sorted(base.items()):
+        if section == "meta" or not isinstance(metrics, dict):
+            continue
+        fresh_section = fresh.get(section)
+        if not isinstance(fresh_section, dict):
+            fresh_section = {}
+        for name, baseline in sorted(metrics.items()):
+            if isinstance(baseline, (int, float)) and name not in fresh_section:
+                failures.append(
+                    f"{section}.{name} is in the baseline but missing from the "
+                    f"fresh report - did a bench stop emitting?"
+                )
+
+    if failures:
+        print(f"\nbench regression gate FAILED (threshold {THRESHOLD:.0%}):")
+        for failure in failures:
+            print(f"  {failure}")
+        sys.exit(1)
+    print(f"\nbench regression gate passed (threshold {THRESHOLD:.0%})")
+
+
+if __name__ == "__main__":
+    main()

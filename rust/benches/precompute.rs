@@ -67,12 +67,12 @@ fn main() {
     for name in ["json", "gsm8k", "c"] {
         let spec = ConstraintSpec::builtin(name);
         let t0 = Instant::now();
-        registry.get_or_compile(&spec, &setup.vocab).unwrap();
+        registry.get_or_compile(&spec, &setup.vocab, None).unwrap();
         let cold = t0.elapsed().as_secs_f64();
         let warm_iters = 1000u32;
         let t0 = Instant::now();
         for _ in 0..warm_iters {
-            std::hint::black_box(registry.get_or_compile(&spec, &setup.vocab).unwrap());
+            std::hint::black_box(registry.get_or_compile(&spec, &setup.vocab, None).unwrap());
         }
         let warm = t0.elapsed().as_secs_f64() / warm_iters as f64;
         table.row(&[

@@ -15,7 +15,7 @@ use domino::runtime::mock::{json_mock, MockFactory, MockModel};
 use domino::server::engine::{EngineCtx, GenRequest};
 use domino::server::scheduler::{Scheduler, SchedulerConfig};
 use domino::tokenizer::Vocab;
-use domino::util::bench::Table;
+use domino::util::bench::{emit_json, Table};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -63,6 +63,7 @@ fn main() {
         "engines", "requests", "ok", "wall (s)", "agg tok/s", "speedup", "registry misses",
     ]);
     let mut base_tps: Option<f64> = None;
+    let mut json_fields: Vec<(String, f64)> = Vec::new();
     for engines in [1usize, 2, 4] {
         let (vocab, model) = json_mock(512);
         let sched = start(engines, vocab, model);
@@ -104,9 +105,12 @@ fn main() {
             format!("{speedup:.2}x"),
             misses.to_string(),
         ]);
+        json_fields.push((format!("tok_s_{engines}"), tps));
         sched.shutdown();
     }
     table.print();
+    let fields: Vec<(&str, f64)> = json_fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    emit_json("shard_scaling", &fields);
     println!(
         "\nexpected: aggregate tok/s grows with shards on multi-core hosts \
          (each shard is one engine thread); registry misses stay at {} per \

@@ -1,0 +1,83 @@
+//! Cold-vs-warm boot bench: full engine compile vs persistent-artifact
+//! warm start for the builtin JSON grammar.
+//!
+//! "Cold" is what every server restart paid before the artifact store:
+//! `spec → CFG → scanner DFAs → subterminal trees` (§3.5's offline cost)
+//! on the first constrained request. "Warm" is the new boot path: scan
+//! `--artifact-dir`, deserialize, validate fingerprints, serve. The
+//! acceptance bar (ISSUE 3) is warm ≥ 5× faster than cold; the bench
+//! exits non-zero below that so CI catches regressions.
+//!
+//! `cargo bench --bench warm_start` (env `DOMINO_BENCH_ITERS` overrides
+//! the repetition count; `DOMINO_BENCH_JSON` appends machine-readable
+//! results for the CI trend file).
+
+use domino::constraint::{ArtifactStore, ConstraintSpec, EngineRegistry};
+use domino::tokenizer;
+use domino::util::bench::{emit_json, Table};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let iters: u32 =
+        std::env::var("DOMINO_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(3).max(1);
+    let vocab = Arc::new(tokenizer::bpe::synthetic_json_vocab(512));
+    let spec = ConstraintSpec::builtin("json");
+    let dir = std::env::temp_dir().join(format!("domino_warm_start_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "== warm-start: builtin `json`, vocab {}, best of {iters} boots ==\n",
+        vocab.len()
+    );
+
+    // Cold boot: fresh in-memory registry — the first request pays the
+    // full grammar compile.
+    let mut cold_ms = f64::MAX;
+    for _ in 0..iters {
+        let reg = EngineRegistry::new(4);
+        let t0 = Instant::now();
+        reg.get_or_compile(&spec, &vocab, None).unwrap();
+        cold_ms = cold_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // Offline precompile (what `domino precompile` does once per deploy).
+    {
+        let reg = EngineRegistry::with_store(4, ArtifactStore::new(&dir).unwrap());
+        reg.get_or_compile(&spec, &vocab, None).unwrap();
+    }
+
+    // Warm boot: fresh registry + warm-start scan, then the first
+    // request — which must be a pure in-memory hit (no compile).
+    let mut warm_ms = f64::MAX;
+    for _ in 0..iters {
+        let reg = EngineRegistry::with_store(4, ArtifactStore::new(&dir).unwrap());
+        let t0 = Instant::now();
+        let loaded = reg.warm_start(&vocab);
+        reg.get_or_compile(&spec, &vocab, None).unwrap();
+        warm_ms = warm_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(loaded, 1, "the artifact must load on a warm boot");
+        let s = reg.stats();
+        assert_eq!(s.misses, 0, "warm boot must not compile: {s:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let speedup = cold_ms / warm_ms.max(1e-9);
+    let mut table = Table::new(&["boot", "first request ready (ms)", "vs cold"]);
+    table.row(&["cold (compile)".into(), format!("{cold_ms:.2}"), "1.00x".into()]);
+    table.row(&["warm (artifact)".into(), format!("{warm_ms:.2}"), format!("{speedup:.1}x")]);
+    table.print();
+
+    emit_json(
+        "warm_start",
+        &[("cold_boot_ms", cold_ms), ("warm_boot_ms", warm_ms), ("speedup", speedup)],
+    );
+
+    let pass = speedup >= 5.0;
+    println!(
+        "\nwarm-start speedup: {speedup:.1}x (acceptance bar: >= 5x) — {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    if !pass {
+        std::process::exit(1);
+    }
+}

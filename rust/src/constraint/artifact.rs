@@ -1,0 +1,711 @@
+//! Persistent precompute artifacts: compiled engines that survive the
+//! process.
+//!
+//! DOMINO's speed comes from per-grammar precomputation (§3.5: scanner
+//! DFAs, vocabulary-aligned subterminal trees, 1–20 s per grammar), but
+//! an in-memory [`EngineRegistry`](super::EngineRegistry) loses that work
+//! on every restart — a fleet pays the cold-start tax per deploy. This
+//! module snapshots a compiled [`Engine`] (plus the hot entries of its
+//! [`MaskCache`](super::MaskCache)) to a versioned, checksummed binary
+//! file so a restarted process serves its first constrained request with
+//! zero compile latency.
+//!
+//! ## File layout (`<artifact-dir>/<key:016x>.domino`)
+//!
+//! ```text
+//! magic    b"DOMA"
+//! version  u32    — ARTIFACT_VERSION; any mismatch = rebuild
+//! checksum u64    — FNV-1a 64 over every byte after this field
+//! key      u64    — ConstraintSpec::build_fingerprint(vocab_fp, k)
+//! vocab_fp u64    — Vocab::fingerprint() of the build vocabulary
+//! vocab_len u64
+//! label    str    — human tag ("builtin:json"), diagnostics only
+//! payload_len u64
+//! payload         — grammar, scanner DFAs, subterminal trees, hot masks
+//! ```
+//!
+//! ## Invalidation rules
+//!
+//! An artifact is used only if **all** of these hold; otherwise the load
+//! reports [`ArtifactLoad::Invalid`] and the caller rebuilds from source
+//! (never errors out, never serves a stale engine):
+//!
+//! * magic + version match this build,
+//! * the checksum verifies over the complete remainder of the file (so a
+//!   truncated or bit-flipped file — header fields included — is caught
+//!   before any field is trusted),
+//! * the vocab fingerprint and length match the live vocabulary,
+//! * the header key matches the requested build fingerprint,
+//! * every index decoded from the payload is in range.
+//!
+//! ## Atomic write-back
+//!
+//! [`ArtifactStore::save`] writes to a `.tmp-<pid>-<seq>` sibling, syncs,
+//! then renames over the final name — rename is atomic within a
+//! directory, so concurrent readers (and crashed writers) only ever see
+//! complete files. The warm-start scan skips non-`.domino` files.
+
+use super::ConstraintSpec;
+use crate::domino::decoder::Engine;
+use crate::domino::tree::{PosSets, Tree, TreeNode, TreeSet};
+use crate::domino::TokenMask;
+use crate::grammar::{Cfg, Production, Symbol, Terminal, TerminalKind};
+use crate::regex::dfa::{Dfa, DEAD};
+use crate::scanner::{Pos, Scanner};
+use crate::tokenizer::Vocab;
+use crate::util::binio::{fnv1a_64, ByteReader, ByteWriter};
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Bump on any change to the header or payload layout.
+pub const ARTIFACT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 4] = b"DOMA";
+
+/// One persisted mask-cache entry (see
+/// [`MaskCache::hot_entries`](super::MaskCache::hot_entries)).
+#[derive(Clone, Debug)]
+pub struct MaskSeed {
+    pub variant: u64,
+    pub state: u64,
+    pub mask: TokenMask,
+}
+
+/// Outcome of a targeted artifact lookup.
+pub enum ArtifactLoad {
+    /// Deserialized and fully validated.
+    Hit { engine: Arc<Engine>, masks: Vec<MaskSeed>, label: String },
+    /// No artifact on disk for this key.
+    Miss,
+    /// An artifact exists but is unusable (truncated, corrupt, version or
+    /// vocab mismatch). The caller must rebuild and overwrite.
+    Invalid { reason: String },
+}
+
+/// One artifact recovered by the warm-start scan.
+pub struct LoadedArtifact {
+    pub key: u64,
+    pub label: String,
+    pub engine: Arc<Engine>,
+    pub masks: Vec<MaskSeed>,
+}
+
+/// An on-disk directory of engine artifacts, keyed by build fingerprint.
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+/// Uniquifies temp names across threads within one process.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl ArtifactStore {
+    pub fn new(dir: impl Into<PathBuf>) -> crate::Result<ArtifactStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        Ok(ArtifactStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The artifact path for a build fingerprint.
+    pub fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.domino"))
+    }
+
+    /// Persist a compiled engine (and optionally its warm masks) under
+    /// the spec's build fingerprint. Atomic: write temp + rename.
+    pub fn save(
+        &self,
+        spec: &ConstraintSpec,
+        vocab: &Arc<Vocab>,
+        k: Option<u32>,
+        engine: &Engine,
+        masks: &[MaskSeed],
+    ) -> crate::Result<PathBuf> {
+        let key = spec.build_fingerprint(vocab.fingerprint(), k);
+        self.save_keyed(key, &spec.label(), engine, masks)
+    }
+
+    /// [`Self::save`] for callers that already hold the key (re-saves of
+    /// registry entries, whose original spec is no longer around).
+    pub fn save_keyed(
+        &self,
+        key: u64,
+        label: &str,
+        engine: &Engine,
+        masks: &[MaskSeed],
+    ) -> crate::Result<PathBuf> {
+        let data = encode_artifact(key, label, engine, masks);
+        let path = self.path_for(key);
+        let tmp = self.dir.join(format!(
+            "{key:016x}.tmp-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = (|| -> std::io::Result<()> {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&data)?;
+            f.sync_all()
+        })();
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("writing artifact {}", tmp.display()));
+        }
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("publishing artifact {}", path.display()));
+        }
+        Ok(path)
+    }
+
+    /// Look up the artifact for `(spec, vocab, k)`.
+    pub fn load(&self, spec: &ConstraintSpec, vocab: &Arc<Vocab>, k: Option<u32>) -> ArtifactLoad {
+        self.load_keyed(spec.build_fingerprint(vocab.fingerprint(), k), vocab)
+    }
+
+    /// Look up an artifact by its build fingerprint.
+    pub fn load_keyed(&self, key: u64, vocab: &Arc<Vocab>) -> ArtifactLoad {
+        let path = self.path_for(key);
+        let data = match std::fs::read(&path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return ArtifactLoad::Miss,
+            Err(e) => {
+                return ArtifactLoad::Invalid { reason: format!("reading {}: {e}", path.display()) }
+            }
+            Ok(d) => d,
+        };
+        match decode_artifact(&data, key, vocab) {
+            Ok((engine, masks, label)) => ArtifactLoad::Hit { engine, masks, label },
+            Err(e) => ArtifactLoad::Invalid { reason: format!("{e:#}") },
+        }
+    }
+
+    /// Load up to `limit` artifacts that validate against `vocab` — the
+    /// warm-start scan. Artifacts for other vocabularies are skipped
+    /// cheaply after the header check (a shared store may serve several
+    /// models); unusable files are counted in the second return value.
+    /// The limit keeps a large shared store from deserializing engines a
+    /// capacity-bounded registry would immediately discard.
+    pub fn scan(&self, vocab: &Arc<Vocab>, limit: usize) -> (Vec<LoadedArtifact>, usize) {
+        let mut out = Vec::new();
+        let mut invalid = 0usize;
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return (out, invalid) };
+        for entry in entries.flatten() {
+            if out.len() >= limit {
+                break;
+            }
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("domino") {
+                continue; // temp files and foreign files are not artifacts
+            }
+            let Ok(data) = std::fs::read(&path) else {
+                invalid += 1;
+                continue;
+            };
+            // read_header checksum-verifies everything, so the payload
+            // can be decoded directly — no second parse of the file.
+            let Ok((header, payload)) = read_header(&data) else {
+                invalid += 1;
+                continue;
+            };
+            if header.vocab_fp != vocab.fingerprint() || header.vocab_len != vocab.len() as u64 {
+                continue; // another model's artifact — not ours to judge
+            }
+            match decode_payload(payload, vocab) {
+                Ok((engine, masks)) => {
+                    out.push(LoadedArtifact { key: header.key, label: header.label, engine, masks })
+                }
+                Err(_) => invalid += 1,
+            }
+        }
+        (out, invalid)
+    }
+}
+
+struct Header {
+    key: u64,
+    vocab_fp: u64,
+    vocab_len: u64,
+    label: String,
+}
+
+/// Parse + integrity-check the envelope; returns the header and the
+/// payload slice. After this returns `Ok`, every header field and payload
+/// byte is checksum-verified.
+fn read_header(data: &[u8]) -> crate::Result<(Header, &[u8])> {
+    let mut r = ByteReader::new(data);
+    if r.raw(4)? != MAGIC {
+        bail!("not a domino artifact (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != ARTIFACT_VERSION {
+        bail!("artifact version {version}; this build reads {ARTIFACT_VERSION}");
+    }
+    let checksum = r.u64()?;
+    let body = r.rest();
+    if fnv1a_64(body) != checksum {
+        bail!("checksum mismatch (truncated or corrupt artifact)");
+    }
+    let mut r = ByteReader::new(body);
+    let key = r.u64()?;
+    let vocab_fp = r.u64()?;
+    let vocab_len = r.u64()?;
+    let label = r.str()?;
+    let payload_len = r.u64()?;
+    let payload = r.rest();
+    if payload.len() as u64 != payload_len {
+        bail!("payload length field disagrees: {} of {} bytes", payload.len(), payload_len);
+    }
+    Ok((Header { key, vocab_fp, vocab_len, label }, payload))
+}
+
+fn encode_artifact(key: u64, label: &str, engine: &Engine, masks: &[MaskSeed]) -> Vec<u8> {
+    let payload = encode_payload(engine, masks);
+    let mut body = ByteWriter::new();
+    body.u64(key);
+    body.u64(engine.vocab.fingerprint());
+    body.u64(engine.vocab.len() as u64);
+    body.str(label);
+    body.u64(payload.len() as u64);
+    body.raw(&payload);
+    let body = body.into_inner();
+    let mut w = ByteWriter::new();
+    w.raw(MAGIC);
+    w.u32(ARTIFACT_VERSION);
+    w.u64(fnv1a_64(&body));
+    w.raw(&body);
+    w.into_inner()
+}
+
+/// Targeted decode: header + vocab + expected-key validation, then the
+/// payload. (The warm-start scan validates the header itself and calls
+/// [`decode_payload`] directly.)
+fn decode_artifact(
+    data: &[u8],
+    expect_key: u64,
+    vocab: &Arc<Vocab>,
+) -> crate::Result<(Arc<Engine>, Vec<MaskSeed>, String)> {
+    let (h, payload) = read_header(data)?;
+    // Vocab identity first: "built for another vocabulary" is the right
+    // diagnosis even when the key also disagrees (renamed/copied files).
+    if h.vocab_fp != vocab.fingerprint() || h.vocab_len != vocab.len() as u64 {
+        bail!(
+            "vocab fingerprint mismatch: artifact {:016x}/{} vs live {:016x}/{}",
+            h.vocab_fp,
+            h.vocab_len,
+            vocab.fingerprint(),
+            vocab.len()
+        );
+    }
+    if h.key != expect_key {
+        bail!("artifact key {:016x} does not match expected {expect_key:016x}", h.key);
+    }
+    let (engine, masks) = decode_payload(payload, vocab)?;
+    Ok((engine, masks, h.label))
+}
+
+fn encode_payload(engine: &Engine, masks: &[MaskSeed]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    // --- grammar ---
+    let g = &engine.grammar;
+    w.u32(g.terminals.len() as u32);
+    for t in &g.terminals {
+        w.str(&t.name);
+        match &t.kind {
+            TerminalKind::Literal(b) => {
+                w.u8(0);
+                w.bytes(b);
+            }
+            TerminalKind::Regex(p) => {
+                w.u8(1);
+                w.str(p);
+            }
+        }
+    }
+    w.u32(g.nonterminals.len() as u32);
+    for n in &g.nonterminals {
+        w.str(n);
+    }
+    w.u32(g.productions.len() as u32);
+    for p in &g.productions {
+        w.u32(p.lhs);
+        w.u32(p.rhs.len() as u32);
+        for s in &p.rhs {
+            match s {
+                Symbol::T(t) => {
+                    w.u8(0);
+                    w.u32(*t);
+                }
+                Symbol::Nt(n) => {
+                    w.u8(1);
+                    w.u32(*n);
+                }
+            }
+        }
+    }
+    w.u32(g.start);
+    // --- scanner DFAs ---
+    w.u32(engine.scanner.dfas.len() as u32);
+    for d in &engine.scanner.dfas {
+        w.u32(d.start);
+        w.u32(d.num_states() as u32);
+        for &a in &d.accepting {
+            w.u8(a as u8);
+        }
+        for &t in &d.trans {
+            w.u32(t);
+        }
+    }
+    // --- subterminal trees ---
+    let ts = &engine.trees;
+    w.u64(ts.vocab_size as u64);
+    w.u32(ts.possets.len() as u32);
+    for i in 0..ts.possets.len() {
+        let info = ts.possets.get(i as u32);
+        w.u32(info.positions.len() as u32);
+        for &p in &info.positions {
+            match p {
+                Pos::Boundary => w.u8(0),
+                Pos::In(t, s) => {
+                    w.u8(1);
+                    w.u32(t);
+                    w.u32(s);
+                }
+            }
+        }
+    }
+    w.u32(ts.trees.len() as u32);
+    for tree in &ts.trees {
+        w.u32(tree.nodes.len() as u32);
+        for node in &tree.nodes {
+            w.u32(node.children.len() as u32);
+            for &(term, child) in &node.children {
+                w.u32(term);
+                w.u32(child);
+            }
+            w.u32(node.entries.len() as u32);
+            for (set_id, tokens) in &node.entries {
+                w.u32(*set_id);
+                w.u32(tokens.len() as u32);
+                for &t in tokens {
+                    w.u32(t);
+                }
+            }
+        }
+    }
+    // --- hot masks ---
+    w.u32(masks.len() as u32);
+    for m in masks {
+        w.u64(m.variant);
+        w.u64(m.state);
+        w.u64(m.mask.size() as u64);
+        let words = m.mask.words();
+        w.u32(words.len() as u32);
+        for &word in words {
+            w.u64(word);
+        }
+    }
+    w.into_inner()
+}
+
+fn decode_payload(
+    payload: &[u8],
+    vocab: &Arc<Vocab>,
+) -> crate::Result<(Arc<Engine>, Vec<MaskSeed>)> {
+    let mut r = ByteReader::new(payload);
+    // --- grammar ---
+    let nterm = r.u32()? as usize;
+    let mut terminals = Vec::new();
+    for _ in 0..nterm {
+        let name = r.str()?;
+        let kind = match r.u8()? {
+            0 => TerminalKind::Literal(r.bytes()?.to_vec()),
+            1 => TerminalKind::Regex(r.str()?),
+            t => bail!("unknown terminal kind tag {t}"),
+        };
+        terminals.push(Terminal { name, kind });
+    }
+    let nnt = r.u32()? as usize;
+    let mut nonterminals = Vec::new();
+    for _ in 0..nnt {
+        nonterminals.push(r.str()?);
+    }
+    let nprod = r.u32()? as usize;
+    let mut productions = Vec::new();
+    for _ in 0..nprod {
+        let lhs = r.u32()?;
+        let nrhs = r.u32()? as usize;
+        let mut rhs = Vec::new();
+        for _ in 0..nrhs {
+            rhs.push(match r.u8()? {
+                0 => Symbol::T(r.u32()?),
+                1 => Symbol::Nt(r.u32()?),
+                t => bail!("unknown symbol tag {t}"),
+            });
+        }
+        productions.push(Production { lhs, rhs });
+    }
+    let start = r.u32()?;
+    // Cfg::new re-validates all ids and recomputes the derived tables.
+    let cfg = Cfg::new(terminals, nonterminals, productions, start)
+        .context("artifact grammar failed validation")?;
+    // --- scanner DFAs ---
+    let ndfa = r.u32()? as usize;
+    if ndfa != cfg.num_terminals() {
+        bail!("artifact has {ndfa} DFAs for {} terminals", cfg.num_terminals());
+    }
+    let mut dfas = Vec::new();
+    for _ in 0..ndfa {
+        let dfa_start = r.u32()?;
+        let n = r.u32()? as usize;
+        if n == 0 {
+            bail!("DFA with zero states");
+        }
+        if dfa_start as usize >= n {
+            bail!("DFA start state out of range");
+        }
+        let mut accepting = Vec::new();
+        for _ in 0..n {
+            accepting.push(match r.u8()? {
+                0 => false,
+                1 => true,
+                t => bail!("bad accepting flag {t}"),
+            });
+        }
+        let mut trans = Vec::new();
+        for _ in 0..n * 256 {
+            let t = r.u32()?;
+            if t != DEAD && t as usize >= n {
+                bail!("DFA transition out of range");
+            }
+            trans.push(t);
+        }
+        dfas.push(Dfa { trans, accepting, start: dfa_start });
+    }
+    let scanner = Scanner::from_dfas(dfas);
+    // --- subterminal trees ---
+    let vocab_size = r.u64()? as usize;
+    if vocab_size != vocab.len() {
+        bail!("artifact trees built for vocab of {vocab_size}, live vocab has {}", vocab.len());
+    }
+    let nsets = r.u32()? as usize;
+    let mut sets = Vec::new();
+    for _ in 0..nsets {
+        let np = r.u32()? as usize;
+        let mut set = Vec::new();
+        for _ in 0..np {
+            set.push(match r.u8()? {
+                0 => Pos::Boundary,
+                1 => {
+                    let t = r.u32()?;
+                    let s = r.u32()?;
+                    let states = scanner
+                        .dfas
+                        .get(t as usize)
+                        .map(|d| d.num_states())
+                        .unwrap_or(0);
+                    if s as usize >= states {
+                        bail!("posset position out of range");
+                    }
+                    Pos::In(t, s)
+                }
+                t => bail!("unknown position tag {t}"),
+            });
+        }
+        sets.push(set);
+    }
+    let possets = PosSets::from_positions(&scanner, sets)?;
+    let ntrees = r.u32()? as usize;
+    if ntrees != scanner.num_pos() {
+        bail!("artifact has {ntrees} trees for {} scanner positions", scanner.num_pos());
+    }
+    let mut trees = Vec::new();
+    for _ in 0..ntrees {
+        let nnodes = r.u32()? as usize;
+        if nnodes == 0 {
+            bail!("tree without a root node");
+        }
+        let mut nodes = Vec::new();
+        for _ in 0..nnodes {
+            let nchildren = r.u32()? as usize;
+            let mut children = Vec::new();
+            for _ in 0..nchildren {
+                let term = r.u32()?;
+                let child = r.u32()?;
+                if term as usize >= cfg.num_terminals() || child as usize >= nnodes {
+                    bail!("tree edge out of range");
+                }
+                children.push((term, child));
+            }
+            let nentries = r.u32()? as usize;
+            let mut entries = Vec::new();
+            for _ in 0..nentries {
+                let set_id = r.u32()?;
+                if set_id as usize >= possets.len() {
+                    bail!("tree entry references unknown posset");
+                }
+                let ntok = r.u32()? as usize;
+                let mut tokens = Vec::new();
+                for _ in 0..ntok {
+                    let t = r.u32()?;
+                    if t as usize >= vocab.len() {
+                        bail!("tree entry token out of vocab range");
+                    }
+                    tokens.push(t);
+                }
+                entries.push((set_id, tokens));
+            }
+            nodes.push(TreeNode { children, entries });
+        }
+        trees.push(Tree { nodes });
+    }
+    let trees = TreeSet { trees, possets, vocab_size };
+    // --- hot masks ---
+    let nmasks = r.u32()? as usize;
+    let mut masks = Vec::new();
+    for _ in 0..nmasks {
+        let variant = r.u64()?;
+        let state = r.u64()?;
+        let size = r.u64()? as usize;
+        if size != vocab.len() {
+            bail!("cached mask sized {size} for vocab {}", vocab.len());
+        }
+        let nwords = r.u32()? as usize;
+        let mut words = Vec::new();
+        for _ in 0..nwords {
+            words.push(r.u64()?);
+        }
+        masks.push(MaskSeed { variant, state, mask: TokenMask::from_words(size, words)? });
+    }
+    r.expect_end()?;
+    Ok((Engine::from_parts(cfg, scanner, trees, vocab.clone()), masks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domino::decoder::{DominoDecoder, Lookahead};
+    use crate::domino::Checker;
+    use crate::tokenizer;
+
+    fn temp_store(tag: &str) -> ArtifactStore {
+        let dir = std::env::temp_dir()
+            .join(format!("domino_artifact_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ArtifactStore::new(dir).unwrap()
+    }
+
+    fn vocab() -> Arc<Vocab> {
+        Arc::new(tokenizer::bpe::synthetic_json_vocab(256))
+    }
+
+    #[test]
+    fn save_load_roundtrip_produces_identical_masks() {
+        let store = temp_store("roundtrip");
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("fig3");
+        let engine =
+            Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        let seed = MaskSeed { variant: 7, state: 42, mask: TokenMask::all(v.len()) };
+        let path = store.save(&spec, &v, None, &engine, &[seed]).unwrap();
+        assert!(path.exists());
+        let ArtifactLoad::Hit { engine: loaded, masks, label } = store.load(&spec, &v, None)
+        else {
+            panic!("expected a hit");
+        };
+        assert_eq!(label, "builtin:fig3");
+        assert_eq!(masks.len(), 1);
+        assert_eq!((masks[0].variant, masks[0].state), (7, 42));
+        assert_eq!(masks[0].mask, TokenMask::all(v.len()));
+        // The loaded engine masks exactly like the fresh one, across a walk.
+        let mut a = DominoDecoder::new(engine, Lookahead::Infinite);
+        let mut b = DominoDecoder::new(loaded, Lookahead::Infinite);
+        for &id in &v.encode(b"(12+3)") {
+            assert_eq!(a.compute_mask(), b.compute_mask());
+            a.advance(id).unwrap();
+            b.advance(id).unwrap();
+        }
+        assert_eq!(a.compute_mask(), b.compute_mask());
+    }
+
+    #[test]
+    fn missing_and_key_scoped_lookups() {
+        let store = temp_store("miss");
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("fig3");
+        assert!(matches!(store.load(&spec, &v, None), ArtifactLoad::Miss));
+        let engine = Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        store.save(&spec, &v, Some(2), &engine, &[]).unwrap();
+        // Saved under k=2 only: k=None and k=3 are distinct builds.
+        assert!(matches!(store.load(&spec, &v, Some(2)), ArtifactLoad::Hit { .. }));
+        assert!(matches!(store.load(&spec, &v, None), ArtifactLoad::Miss));
+        assert!(matches!(store.load(&spec, &v, Some(3)), ArtifactLoad::Miss));
+    }
+
+    #[test]
+    fn every_corrupted_byte_is_detected() {
+        let store = temp_store("corrupt");
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("fig3");
+        let engine = Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        let path = store.save(&spec, &v, None, &engine, &[]).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Flip one byte at a spread of offsets (header and payload): the
+        // load must never panic and never report a hit.
+        for at in [0usize, 4, 8, 20, 40, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x5A;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(
+                matches!(store.load(&spec, &v, None), ArtifactLoad::Invalid { .. }),
+                "byte {at} flipped must invalidate"
+            );
+        }
+        std::fs::write(&path, &good).unwrap();
+        assert!(matches!(store.load(&spec, &v, None), ArtifactLoad::Hit { .. }));
+    }
+
+    #[test]
+    fn scan_finds_matching_vocab_only_and_skips_temp_files() {
+        let store = temp_store("scan");
+        let v = vocab();
+        let other = Arc::new(tokenizer::bpe::synthetic_json_vocab(320));
+        for (name, vv) in [("fig3", &v), ("json", &v), ("fig3", &other)] {
+            let spec = ConstraintSpec::builtin(name);
+            let engine = Engine::compile(spec.to_cfg().unwrap(), vv.clone()).unwrap();
+            store.save(&spec, vv, None, &engine, &[]).unwrap();
+        }
+        // A stray temp file and a corrupt artifact.
+        std::fs::write(store.dir().join("0000.tmp-1-1"), b"junk").unwrap();
+        std::fs::write(store.dir().join("ffffffffffffffff.domino"), b"junk").unwrap();
+        let (loaded, invalid) = store.scan(&v, usize::MAX);
+        assert_eq!(loaded.len(), 2, "two artifacts match this vocab");
+        assert_eq!(invalid, 1, "the corrupt .domino file is counted");
+        let (loaded, _) = store.scan(&other, usize::MAX);
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].label, "builtin:fig3");
+        // The limit caps deserialization work for bounded registries.
+        let (capped, _) = store.scan(&v, 1);
+        assert_eq!(capped.len(), 1);
+    }
+
+    #[test]
+    fn builtin_grammar_name_is_stable_in_label() {
+        // Labels travel through save/load for diagnostics; check the
+        // json grammar (regex-heavy) round-trips too.
+        let store = temp_store("label");
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("json");
+        let engine = Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        store.save(&spec, &v, Some(0), &engine, &[]).unwrap();
+        match store.load(&spec, &v, Some(0)) {
+            ArtifactLoad::Hit { label, .. } => assert_eq!(label, "builtin:json"),
+            _ => panic!("expected hit"),
+        }
+    }
+}

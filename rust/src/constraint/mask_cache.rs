@@ -156,6 +156,20 @@ impl MaskCache {
         inner.map.insert((variant, state), MaskEntry { mask, tick });
     }
 
+    /// Snapshot the hottest (most recently used) `limit` entries as
+    /// `(variant, state, mask)` triples — the warm set persisted into an
+    /// engine artifact so a restarted process starts with masks it
+    /// already paid for.
+    pub fn hot_entries(&self, limit: usize) -> Vec<(u64, u64, TokenMask)> {
+        let inner = self.inner.lock().expect("mask cache lock");
+        let mut all: Vec<(&(u64, u64), &MaskEntry)> = inner.map.iter().collect();
+        all.sort_by(|a, b| b.1.tick.cmp(&a.1.tick));
+        all.into_iter()
+            .take(limit)
+            .map(|(&(variant, state), e)| (variant, state, e.mask.clone()))
+            .collect()
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().expect("mask cache lock").map.len()
     }
@@ -279,6 +293,21 @@ mod tests {
         assert!(c.get(0, 2).is_none(), "entry 2 was LRU");
         assert!(c.get(0, 1).is_some());
         assert!(c.get(0, 3).is_some());
+    }
+
+    #[test]
+    fn hot_entries_are_mru_first_and_bounded() {
+        let c = MaskCache::new(8);
+        c.put(0, 1, mask_with(8, &[1]));
+        c.put(0, 2, mask_with(8, &[2]));
+        c.put(0, 3, mask_with(8, &[3]));
+        assert!(c.get(0, 1).is_some()); // touch 1 → hottest
+        let hot = c.hot_entries(2);
+        assert_eq!(hot.len(), 2);
+        assert_eq!((hot[0].0, hot[0].1), (0, 1), "MRU first");
+        assert_eq!((hot[1].0, hot[1].1), (0, 3));
+        assert_eq!(hot[0].2, mask_with(8, &[1]));
+        assert_eq!(c.hot_entries(100).len(), 3, "limit caps, never pads");
     }
 
     #[test]

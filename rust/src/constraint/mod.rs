@@ -18,6 +18,11 @@
 //!   output revisits the same `(α, β)` checker states (§3.6) constantly;
 //!   a cached mask turns a tree traversal (or, for the online baseline, a
 //!   full-vocabulary scan) into a hash lookup.
+//! * [`ArtifactStore`] (in [`artifact`]) — persistent precompute: a
+//!   compiled engine (plus the hot entries of its mask cache) snapshotted
+//!   to a versioned, checksummed on-disk file, keyed by
+//!   [`ConstraintSpec::build_fingerprint`], so a restarted process
+//!   warm-starts instead of recompiling every grammar.
 //! * [`StopChecker`] (in [`stop`]) — plain stop-sequence constraints with
 //!   no grammar machinery at all.
 //! * [`Constraint`] / [`Enforcement`] — the request-level pairing of a
@@ -27,10 +32,12 @@
 //! See `rust/DESIGN.md` for how the server, eval harness and benches
 //! thread these types through.
 
+pub mod artifact;
 pub mod mask_cache;
 pub mod registry;
 pub mod stop;
 
+pub use artifact::{ArtifactLoad, ArtifactStore, LoadedArtifact, MaskSeed};
 pub use mask_cache::{CachedChecker, MaskCache, MaskCacheStats};
 pub use registry::{EngineRegistry, RegistryStats};
 pub use stop::StopChecker;
@@ -148,6 +155,46 @@ impl ConstraintSpec {
             }
         }
         h
+    }
+
+    /// The full *build* fingerprint: everything a compiled engine (and
+    /// its on-disk artifact) depends on — the grammar content
+    /// ([`Self::fingerprint`]), the vocabulary content
+    /// ([`Vocab::fingerprint`](crate::tokenizer::Vocab::fingerprint)) and
+    /// the lookahead configuration (`None` = ∞). This is the key used by
+    /// [`EngineRegistry`] and the artifact store: folding the build
+    /// parameters in means the same grammar under a retrained vocabulary
+    /// or a different lookahead depth can never collide with (or serve) a
+    /// stale build.
+    pub fn build_fingerprint(&self, vocab_fingerprint: u64, k: Option<u32>) -> u64 {
+        let mut h = self.fingerprint();
+        fnv1a(&mut h, &vocab_fingerprint.to_le_bytes());
+        match k {
+            None => fnv1a(&mut h, &[0xFF]),
+            Some(k) => {
+                fnv1a(&mut h, &[0x01]);
+                fnv1a(&mut h, &k.to_le_bytes());
+            }
+        }
+        h
+    }
+
+    /// Short human-readable tag for logs, metrics and artifact headers
+    /// (NOT a key — use the fingerprints for identity).
+    pub fn label(&self) -> String {
+        match self.normalized() {
+            ConstraintSpec::Unconstrained => "unconstrained".to_string(),
+            ConstraintSpec::Builtin { name } => format!("builtin:{name}"),
+            ConstraintSpec::Ebnf { .. } => format!("ebnf:{:016x}", self.fingerprint()),
+            ConstraintSpec::Regex { pattern } => {
+                let mut p: String = pattern.chars().take(32).collect();
+                if p.len() < pattern.len() {
+                    p.push('…');
+                }
+                format!("regex:{p}")
+            }
+            ConstraintSpec::Stop { sequences } => format!("stop:{}", sequences.len()),
+        }
     }
 
     /// Compile the normalized spec to the CFG DOMINO consumes. Errors for
@@ -331,6 +378,30 @@ mod tests {
             ConstraintSpec::stop(vec!["a".into(), "b".into()]).fingerprint(),
             ConstraintSpec::stop(vec!["ab".into()]).fingerprint()
         );
+    }
+
+    #[test]
+    fn build_fingerprint_separates_build_parameters() {
+        let spec = ConstraintSpec::builtin("json");
+        // Same grammar, different vocab → different build.
+        assert_ne!(spec.build_fingerprint(1, None), spec.build_fingerprint(2, None));
+        // Same grammar + vocab, different lookahead → different build.
+        assert_ne!(spec.build_fingerprint(1, None), spec.build_fingerprint(1, Some(0)));
+        assert_ne!(spec.build_fingerprint(1, Some(0)), spec.build_fingerprint(1, Some(1)));
+        // Deterministic and normalization-aware, like `fingerprint`.
+        assert_eq!(
+            ConstraintSpec::builtin(" JSON ").build_fingerprint(7, Some(2)),
+            spec.build_fingerprint(7, Some(2))
+        );
+    }
+
+    #[test]
+    fn labels_are_short_and_total() {
+        assert_eq!(ConstraintSpec::builtin(" JSON ").label(), "builtin:json");
+        assert_eq!(ConstraintSpec::Unconstrained.label(), "unconstrained");
+        assert!(ConstraintSpec::ebnf("root ::= \"a\"").label().starts_with("ebnf:"));
+        assert!(ConstraintSpec::regex(&"x".repeat(100)).label().len() < 50);
+        assert_eq!(ConstraintSpec::stop(vec!["a".into()]).label(), "stop:1");
     }
 
     #[test]

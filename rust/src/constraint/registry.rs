@@ -1,5 +1,6 @@
 //! The shared engine registry: compile each grammar once, serve it
-//! everywhere.
+//! everywhere — and, with an [`ArtifactStore`] attached, keep that work
+//! across process restarts.
 //!
 //! A compiled [`Engine`] is the expensive artifact of the whole system —
 //! scanner union NFA, vocabulary-aligned subterminal trees (Algorithm 2),
@@ -8,39 +9,57 @@
 //! request forfeits the entire headline win. The registry makes the
 //! amortization real:
 //!
-//! * keyed by **content hash** ([`ConstraintSpec::fingerprint`]) × vocab
-//!   identity, so a builtin name, an inline EBNF body and a regex all
-//!   cache uniformly;
+//! * keyed by **build fingerprint** ([`ConstraintSpec::build_fingerprint`]:
+//!   grammar content × vocabulary content × lookahead config), so a
+//!   builtin name, an inline EBNF body and a regex all cache uniformly —
+//!   and the same grammar under different build parameters can never
+//!   collide (or, on disk, serve a stale build);
 //! * **build-deduplicated**: when N requests race on an uncached grammar,
 //!   one thread compiles, the rest block on that build and share the
 //!   result (no thundering-herd compile);
+//! * **load-or-build**: with a store attached, a miss first tries the
+//!   on-disk artifact (deserialize + validate version/checksum/vocab
+//!   fingerprints); only a miss or an invalid artifact compiles from
+//!   source, and fresh compiles are written back atomically. A corrupt
+//!   artifact is *never* an error — it increments `artifact_invalid` and
+//!   falls back to a clean rebuild;
+//! * **warm-startable**: [`EngineRegistry::warm_start`] scans the store
+//!   once per process and registers every artifact valid for the live
+//!   vocabulary, so a restarted server answers its first constrained
+//!   request with zero compile latency;
 //! * **size-bounded** with LRU eviction — an adversarial stream of
 //!   distinct inline grammars degrades to recompilation, not unbounded
 //!   memory;
 //! * each entry carries the engine's shared [`MaskCache`], so state-keyed
-//!   mask reuse follows the engine around for free;
-//! * counters (hits/misses/evictions/coalesced builds/compile-time) are
-//!   exported through `server::metrics` for amortization reporting.
+//!   mask reuse follows the engine around for free (artifacts persist the
+//!   hot entries; [`EngineRegistry::flush_artifacts`] re-saves them);
+//! * counters (hits/misses/evictions/coalesced builds/compile-time and
+//!   artifact hits/misses/invalid + warm-start timing) are exported
+//!   through `server::metrics` for amortization reporting.
 
+use super::artifact::{ArtifactLoad, ArtifactStore, MaskSeed};
 use super::mask_cache::{MaskCache, MaskCacheStats};
 use super::ConstraintSpec;
 use crate::domino::decoder::Engine;
 use crate::tokenizer::Vocab;
 use anyhow::bail;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Per-engine mask-cache capacity (distinct `(variant, state)` entries).
 const MASK_CACHE_CAPACITY: usize = 4096;
 
+/// Hot mask entries persisted per artifact by [`EngineRegistry::flush_artifacts`].
+const PERSIST_MASK_LIMIT: usize = 512;
+
 /// Registry counters, readable without blocking builds.
 #[derive(Clone, Debug, Default)]
 pub struct RegistryStats {
-    /// Lookups served from the cache.
+    /// Lookups served from the in-memory cache.
     pub hits: u64,
-    /// Lookups that triggered a compile.
+    /// Lookups not in memory (each either loads an artifact or compiles).
     pub misses: u64,
     /// Entries dropped by LRU eviction.
     pub evictions: u64,
@@ -48,6 +67,19 @@ pub struct RegistryStats {
     pub coalesced: u64,
     /// Total wall time spent compiling engines, milliseconds.
     pub compile_ms: u64,
+    /// Engines deserialized from the artifact store (on-demand loads and
+    /// warm-start scans).
+    pub artifact_hits: u64,
+    /// Store lookups that found no artifact (the compile then writes one
+    /// back).
+    pub artifact_misses: u64,
+    /// Artifacts rejected (truncated / checksum / version / vocab
+    /// fingerprint mismatch) — each fell back to a clean rebuild.
+    pub artifact_invalid: u64,
+    /// Engines registered by the warm-start scan.
+    pub warm_loaded: u64,
+    /// Wall time of the warm-start scan, milliseconds.
+    pub warm_start_ms: u64,
     /// Live entries.
     pub entries: usize,
 }
@@ -55,6 +87,8 @@ pub struct RegistryStats {
 struct Entry {
     engine: Arc<Engine>,
     masks: Arc<MaskCache>,
+    /// Human tag for diagnostics and artifact re-saves.
+    label: String,
     tick: u64,
 }
 
@@ -79,22 +113,43 @@ struct Inner {
     retired_masks: MaskCacheStats,
 }
 
-/// A concurrent, content-hash-keyed cache of compiled grammar engines.
+/// A concurrent, content-hash-keyed cache of compiled grammar engines,
+/// optionally backed by a persistent [`ArtifactStore`].
 pub struct EngineRegistry {
     capacity: usize,
+    store: Option<ArtifactStore>,
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     coalesced: AtomicU64,
     compile_ms: AtomicU64,
+    artifact_hits: AtomicU64,
+    artifact_misses: AtomicU64,
+    artifact_invalid: AtomicU64,
+    warm_loaded: AtomicU64,
+    warm_start_ms: AtomicU64,
+    /// Set by the first `warm_start` call; later calls are no-ops so every
+    /// shard init can invoke it unconditionally.
+    warmed: AtomicBool,
 }
 
 impl EngineRegistry {
     pub fn new(capacity: usize) -> Arc<EngineRegistry> {
+        Self::build(capacity, None)
+    }
+
+    /// A registry whose misses consult (and whose compiles write back to)
+    /// a persistent artifact store.
+    pub fn with_store(capacity: usize, store: ArtifactStore) -> Arc<EngineRegistry> {
+        Self::build(capacity, Some(store))
+    }
+
+    fn build(capacity: usize, store: Option<ArtifactStore>) -> Arc<EngineRegistry> {
         assert!(capacity >= 1, "registry needs capacity >= 1");
         Arc::new(EngineRegistry {
             capacity,
+            store,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 building: HashMap::new(),
@@ -106,30 +161,41 @@ impl EngineRegistry {
             evictions: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             compile_ms: AtomicU64::new(0),
+            artifact_hits: AtomicU64::new(0),
+            artifact_misses: AtomicU64::new(0),
+            artifact_invalid: AtomicU64::new(0),
+            warm_loaded: AtomicU64::new(0),
+            warm_start_ms: AtomicU64::new(0),
+            warmed: AtomicBool::new(false),
         })
     }
 
-    /// The cache key: spec content fingerprint × vocab identity. Vocab
-    /// identity is the `Arc` address — sound because every live entry
-    /// keeps its vocab alive (the engine holds the `Arc`), so the address
-    /// cannot be reused while the entry exists.
-    pub fn key_for(spec: &ConstraintSpec, vocab: &Arc<Vocab>) -> u64 {
-        spec.fingerprint()
-            ^ (Arc::as_ptr(vocab) as usize as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    /// The attached artifact store, if any.
+    pub fn store(&self) -> Option<&ArtifactStore> {
+        self.store.as_ref()
     }
 
-    /// Fetch the compiled engine for `spec`, compiling it (exactly once,
-    /// even under concurrency) on a miss. Returns the engine plus its
-    /// shared mask cache.
+    /// The cache key: the spec's build fingerprint over the vocabulary
+    /// *content* hash and the lookahead config (`None` = ∞). Stable
+    /// across processes — the same key names the on-disk artifact.
+    pub fn key_for(spec: &ConstraintSpec, vocab: &Arc<Vocab>, k: Option<u32>) -> u64 {
+        spec.build_fingerprint(vocab.fingerprint(), k)
+    }
+
+    /// Fetch the compiled engine for `(spec, k)`, loading it from the
+    /// artifact store or compiling it (exactly once, even under
+    /// concurrency) on a miss. Returns the engine plus its shared mask
+    /// cache.
     pub fn get_or_compile(
         &self,
         spec: &ConstraintSpec,
         vocab: &Arc<Vocab>,
+        k: Option<u32>,
     ) -> crate::Result<(Arc<Engine>, Arc<MaskCache>)> {
         if !spec.is_grammar_backed() {
             bail!("constraint {spec:?} has no grammar engine");
         }
-        let key = Self::key_for(spec, vocab);
+        let key = Self::key_for(spec, vocab, k);
 
         let build = {
             let mut inner = self.inner.lock().expect("registry lock");
@@ -141,8 +207,9 @@ impl EngineRegistry {
                 return Ok((e.engine.clone(), e.masks.clone()));
             }
             if let Some(b) = inner.building.get(&key) {
-                // Someone else is compiling this grammar right now: wait
-                // for their build instead of duplicating it.
+                // Someone else is compiling (or loading) this grammar
+                // right now: wait for their build instead of duplicating
+                // it.
                 let b = b.clone();
                 drop(inner);
                 self.coalesced.fetch_add(1, Ordering::Relaxed);
@@ -162,41 +229,65 @@ impl EngineRegistry {
             build
         };
 
-        // Miss: compile outside the registry lock.
+        // Miss: load or build outside the registry lock.
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let t0 = Instant::now();
-        let result = spec.to_cfg().and_then(|cfg| Engine::compile(cfg, vocab.clone()));
-        self.compile_ms.fetch_add(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+        let label = spec.label();
+        let loaded: Option<(Arc<Engine>, Vec<MaskSeed>)> = match &self.store {
+            None => None,
+            Some(store) => match store.load(spec, vocab, k) {
+                ArtifactLoad::Hit { engine, masks, .. } => {
+                    self.artifact_hits.fetch_add(1, Ordering::Relaxed);
+                    Some((engine, masks))
+                }
+                ArtifactLoad::Miss => {
+                    self.artifact_misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+                ArtifactLoad::Invalid { reason } => {
+                    self.artifact_invalid.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("domino: artifact for {label} unusable ({reason}); rebuilding");
+                    None
+                }
+            },
+        };
+        let from_store = loaded.is_some();
+        let result: crate::Result<(Arc<Engine>, Vec<MaskSeed>)> = match loaded {
+            Some(hit) => Ok(hit),
+            None => {
+                let t0 = Instant::now();
+                let r = spec.to_cfg().and_then(|cfg| Engine::compile(cfg, vocab.clone()));
+                self.compile_ms.fetch_add(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+                r.map(|engine| (engine, Vec::new()))
+            }
+        };
 
         match result {
-            Ok(engine) => {
+            Ok((engine, seeds)) => {
                 let masks = Arc::new(MaskCache::new(MASK_CACHE_CAPACITY));
-                {
-                    let mut inner = self.inner.lock().expect("registry lock");
-                    inner.building.remove(&key);
-                    inner.tick += 1;
-                    let tick = inner.tick;
-                    if inner.map.len() >= self.capacity {
-                        let victim =
-                            inner.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| *k);
-                        if let Some(old) = victim {
-                            if let Some(entry) = inner.map.remove(&old) {
-                                let mut s = entry.masks.stats();
-                                s.entries = 0; // retired entries are no longer live
-                                inner.retired_masks.merge(&s);
-                            }
-                            self.evictions.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    inner.map.insert(
-                        key,
-                        Entry { engine: engine.clone(), masks: masks.clone(), tick },
-                    );
+                for s in seeds {
+                    masks.put(s.variant, s.state, s.mask);
                 }
+                // Publish first: coalesced waiters and new lookups get
+                // the engine before any disk work happens.
+                self.insert_entry(key, engine.clone(), masks.clone(), label.clone());
                 let mut st = build.state.lock().expect("build lock");
                 *st = BuildState::Ready(engine.clone(), masks.clone());
                 drop(st);
                 build.cv.notify_all();
+                {
+                    let mut inner = self.inner.lock().expect("registry lock");
+                    inner.building.remove(&key);
+                }
+                if !from_store {
+                    // Write-back: the next process boots warm. Only the
+                    // thread that compiled pays the disk; failures
+                    // degrade to cold starts, never to request errors.
+                    if let Some(store) = &self.store {
+                        if let Err(e) = store.save(spec, vocab, k, &engine, &[]) {
+                            eprintln!("domino: artifact write-back for {label} failed: {e:#}");
+                        }
+                    }
+                }
                 Ok((engine, masks))
             }
             Err(e) => {
@@ -213,9 +304,98 @@ impl EngineRegistry {
         }
     }
 
-    /// Is this spec's engine currently cached (no compile triggered)?
-    pub fn contains(&self, spec: &ConstraintSpec, vocab: &Arc<Vocab>) -> bool {
-        let key = Self::key_for(spec, vocab);
+    /// Register an engine under `key`, evicting LRU entries past capacity.
+    fn insert_entry(&self, key: u64, engine: Arc<Engine>, masks: Arc<MaskCache>, label: String) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if inner.map.len() >= self.capacity && !inner.map.contains_key(&key) {
+            let victim = inner.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| *k);
+            if let Some(old) = victim {
+                if let Some(entry) = inner.map.remove(&old) {
+                    let mut s = entry.masks.stats();
+                    s.entries = 0; // retired entries are no longer live
+                    inner.retired_masks.merge(&s);
+                }
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.map.insert(key, Entry { engine, masks, label, tick });
+    }
+
+    /// Scan the artifact store and register every engine valid for
+    /// `vocab`, so the first request for each pre-compiled grammar is an
+    /// in-memory hit. Idempotent per process (only the first call scans;
+    /// every shard init may invoke it unconditionally) and bounded by the
+    /// registry capacity. Returns the number of engines loaded by *this*
+    /// call.
+    pub fn warm_start(&self, vocab: &Arc<Vocab>) -> usize {
+        let Some(store) = &self.store else { return 0 };
+        if self.warmed.swap(true, Ordering::SeqCst) {
+            return 0;
+        }
+        let t0 = Instant::now();
+        let room = self.capacity.saturating_sub(self.len());
+        let (artifacts, invalid) = store.scan(vocab, room);
+        self.artifact_invalid.fetch_add(invalid as u64, Ordering::Relaxed);
+        let mut loaded = 0usize;
+        for a in artifacts {
+            if self.len() >= self.capacity {
+                break; // respect the bound; later artifacts load on demand
+            }
+            let already = {
+                let inner = self.inner.lock().expect("registry lock");
+                inner.map.contains_key(&a.key)
+            };
+            if already {
+                continue;
+            }
+            let masks = Arc::new(MaskCache::new(MASK_CACHE_CAPACITY));
+            for s in a.masks {
+                masks.put(s.variant, s.state, s.mask);
+            }
+            self.insert_entry(a.key, a.engine, masks, a.label);
+            loaded += 1;
+        }
+        self.artifact_hits.fetch_add(loaded as u64, Ordering::Relaxed);
+        self.warm_loaded.fetch_add(loaded as u64, Ordering::Relaxed);
+        self.warm_start_ms.store(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+        loaded
+    }
+
+    /// Re-save every cached engine's artifact including the current hot
+    /// mask-cache entries (call at shutdown, or after warmup traffic):
+    /// the next boot then starts with the masks this process paid for.
+    /// Returns the number of artifacts written.
+    pub fn flush_artifacts(&self) -> usize {
+        let Some(store) = &self.store else { return 0 };
+        let entries: Vec<_> = {
+            let inner = self.inner.lock().expect("registry lock");
+            inner
+                .map
+                .iter()
+                .map(|(k, e)| {
+                    (*k, e.label.clone(), e.engine.clone(), e.masks.hot_entries(PERSIST_MASK_LIMIT))
+                })
+                .collect()
+        };
+        let mut written = 0usize;
+        for (key, label, engine, hot) in entries {
+            let seeds: Vec<MaskSeed> = hot
+                .into_iter()
+                .map(|(variant, state, mask)| MaskSeed { variant, state, mask })
+                .collect();
+            match store.save_keyed(key, &label, &engine, &seeds) {
+                Ok(_) => written += 1,
+                Err(e) => eprintln!("domino: artifact flush for {label} failed: {e:#}"),
+            }
+        }
+        written
+    }
+
+    /// Is this build's engine currently cached (no compile triggered)?
+    pub fn contains(&self, spec: &ConstraintSpec, vocab: &Arc<Vocab>, k: Option<u32>) -> bool {
+        let key = Self::key_for(spec, vocab, k);
         self.inner.lock().expect("registry lock").map.contains_key(&key)
     }
 
@@ -246,6 +426,11 @@ impl EngineRegistry {
             evictions: self.evictions.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             compile_ms: self.compile_ms.load(Ordering::Relaxed),
+            artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
+            artifact_misses: self.artifact_misses.load(Ordering::Relaxed),
+            artifact_invalid: self.artifact_invalid.load(Ordering::Relaxed),
+            warm_loaded: self.warm_loaded.load(Ordering::Relaxed),
+            warm_start_ms: self.warm_start_ms.load(Ordering::Relaxed),
             entries: self.len(),
         }
     }
@@ -279,21 +464,22 @@ mod tests {
         let v = vocab();
         let reg = EngineRegistry::new(4);
         let spec = ConstraintSpec::builtin("fig3");
-        assert!(!reg.contains(&spec, &v));
-        let (e1, _) = reg.get_or_compile(&spec, &v).unwrap();
-        assert!(reg.contains(&spec, &v));
-        let (e2, _) = reg.get_or_compile(&spec, &v).unwrap();
+        assert!(!reg.contains(&spec, &v, None));
+        let (e1, _) = reg.get_or_compile(&spec, &v, None).unwrap();
+        assert!(reg.contains(&spec, &v, None));
+        let (e2, _) = reg.get_or_compile(&spec, &v, None).unwrap();
         assert!(Arc::ptr_eq(&e1, &e2), "second lookup must reuse the engine");
         let s = reg.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.artifact_hits, 0, "no store attached");
     }
 
     #[test]
     fn normalized_specs_share_an_entry() {
         let v = vocab();
         let reg = EngineRegistry::new(4);
-        reg.get_or_compile(&ConstraintSpec::builtin("fig3"), &v).unwrap();
-        reg.get_or_compile(&ConstraintSpec::builtin(" FIG3 "), &v).unwrap();
+        reg.get_or_compile(&ConstraintSpec::builtin("fig3"), &v, None).unwrap();
+        reg.get_or_compile(&ConstraintSpec::builtin(" FIG3 "), &v, None).unwrap();
         let s = reg.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
     }
@@ -304,10 +490,26 @@ mod tests {
         let v2 = Arc::new(tokenizer::bpe::synthetic_json_vocab(320));
         let reg = EngineRegistry::new(4);
         let spec = ConstraintSpec::builtin("fig3");
-        let (e1, _) = reg.get_or_compile(&spec, &v1).unwrap();
-        let (e2, _) = reg.get_or_compile(&spec, &v2).unwrap();
+        let (e1, _) = reg.get_or_compile(&spec, &v1, None).unwrap();
+        let (e2, _) = reg.get_or_compile(&spec, &v2, None).unwrap();
         assert!(!Arc::ptr_eq(&e1, &e2));
         assert_eq!(reg.stats().misses, 2);
+    }
+
+    #[test]
+    fn distinct_lookaheads_do_not_collide() {
+        // Same grammar, different build parameter `k` → distinct entries
+        // (their artifacts and speculation priors are k-specific).
+        let v = vocab();
+        let reg = EngineRegistry::new(4);
+        let spec = ConstraintSpec::builtin("fig3");
+        reg.get_or_compile(&spec, &v, None).unwrap();
+        reg.get_or_compile(&spec, &v, Some(0)).unwrap();
+        reg.get_or_compile(&spec, &v, Some(1)).unwrap();
+        let s = reg.stats();
+        assert_eq!((s.misses, s.entries), (3, 3));
+        assert!(reg.contains(&spec, &v, Some(0)));
+        assert!(!reg.contains(&spec, &v, Some(2)));
     }
 
     #[test]
@@ -315,9 +517,18 @@ mod tests {
         let v = vocab();
         let reg = EngineRegistry::new(4);
         let bad = ConstraintSpec::builtin("no-such-grammar");
-        assert!(reg.get_or_compile(&bad, &v).is_err());
-        assert!(!reg.contains(&bad, &v));
+        assert!(reg.get_or_compile(&bad, &v, None).is_err());
+        assert!(!reg.contains(&bad, &v, None));
         // A failed build must not wedge later lookups of the same key.
-        assert!(reg.get_or_compile(&bad, &v).is_err());
+        assert!(reg.get_or_compile(&bad, &v, None).is_err());
+    }
+
+    #[test]
+    fn warm_start_without_store_is_a_noop() {
+        let v = vocab();
+        let reg = EngineRegistry::new(4);
+        assert_eq!(reg.warm_start(&v), 0);
+        assert_eq!(reg.flush_artifacts(), 0);
+        assert_eq!(reg.stats().warm_loaded, 0);
     }
 }

@@ -74,6 +74,26 @@ impl Engine {
         let earley = Arc::new(Earley::new(grammar.clone()));
         Ok(Arc::new(Engine { grammar, scanner, trees, earley, vocab }))
     }
+
+    /// Reassemble an engine from already-precomputed parts (the artifact
+    /// load path): no scanner determinization, no tree build — only the
+    /// (cheap) Earley machine is derived fresh from the grammar.
+    pub fn from_parts(
+        grammar: Cfg,
+        scanner: Scanner,
+        trees: TreeSet,
+        vocab: Arc<Vocab>,
+    ) -> Arc<Engine> {
+        let grammar = Arc::new(grammar);
+        let earley = Arc::new(Earley::new(grammar.clone()));
+        Arc::new(Engine {
+            grammar,
+            scanner: Arc::new(scanner),
+            trees: Arc::new(trees),
+            earley,
+            vocab,
+        })
+    }
 }
 
 /// The inference-time DOMINO decoder. Cheap to create from a shared

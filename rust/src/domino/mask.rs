@@ -48,6 +48,28 @@ impl TokenMask {
         self.size
     }
 
+    /// The raw bit words (serialization; bit `i` of word `i/64` = token `i`).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words (deserialization). Rejects a word count that
+    /// doesn't match `size` and set bits past `size` — ghost bits would
+    /// break the equality the mask cache keys on.
+    pub fn from_words(size: usize, words: Vec<u64>) -> crate::Result<TokenMask> {
+        if words.len() != size.div_ceil(64) {
+            anyhow::bail!("mask has {} words, size {size} needs {}", words.len(), size.div_ceil(64));
+        }
+        let extra = words.len() * 64 - size;
+        if extra > 0 {
+            let last = words[words.len() - 1];
+            if last >> (64 - extra) != 0 {
+                anyhow::bail!("mask has bits set past its size {size}");
+            }
+        }
+        Ok(TokenMask { words, size })
+    }
+
     pub fn count(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
@@ -170,6 +192,23 @@ mod tests {
             c.allow(t);
         }
         assert_eq!(c, TokenMask::all(70));
+    }
+
+    #[test]
+    fn words_roundtrip_rejects_ghost_bits() {
+        let mut m = TokenMask::none(70);
+        m.allow(0);
+        m.allow(69);
+        let back = TokenMask::from_words(70, m.words().to_vec()).unwrap();
+        assert_eq!(back, m);
+        // Wrong word count.
+        assert!(TokenMask::from_words(70, vec![0u64]).is_err());
+        // A bit past `size` is corrupt, not silently carried.
+        let mut words = m.words().to_vec();
+        words[1] |= 1u64 << 63;
+        assert!(TokenMask::from_words(70, words).is_err());
+        // Exact multiples of 64 have no ghost range.
+        assert!(TokenMask::from_words(128, vec![u64::MAX, u64::MAX]).is_ok());
     }
 
     #[test]

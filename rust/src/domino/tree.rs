@@ -69,6 +69,25 @@ impl PosSets {
     pub fn len(&self) -> usize {
         self.sets.len()
     }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Rebuild an interned table from its serialized position sets, in id
+    /// order (the artifact load path). Derived lookups (`terms`,
+    /// `accepting_terms`) are recomputed against `scanner`; ids must come
+    /// out exactly as stored, so duplicate sets are an error.
+    pub fn from_positions(scanner: &Scanner, sets: Vec<Vec<Pos>>) -> crate::Result<PosSets> {
+        let mut ps = PosSets::default();
+        for (i, set) in sets.into_iter().enumerate() {
+            let id = ps.intern(scanner, set);
+            if id as usize != i {
+                anyhow::bail!("posset table corrupt: set {i} re-interned as {id}");
+            }
+        }
+        Ok(ps)
+    }
 }
 
 /// One prefix-tree node (path = sequence of completed terminals).

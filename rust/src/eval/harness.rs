@@ -75,9 +75,12 @@ impl Setup {
     }
 
     /// Compiled engine for a builtin grammar, via the shared registry.
+    /// The harness deliberately shares one engine build (k = ∞ key)
+    /// across its lookahead rows — the compiled tables are identical and
+    /// the tables compare per-`k` *decode* behavior, not builds.
     pub fn engine(&self, grammar: &str) -> crate::Result<Arc<GrammarEngine>> {
         let (engine, _masks) =
-            self.registry.get_or_compile(&ConstraintSpec::builtin(grammar), &self.vocab)?;
+            self.registry.get_or_compile(&ConstraintSpec::builtin(grammar), &self.vocab, None)?;
         Ok(engine)
     }
 }

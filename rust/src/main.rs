@@ -2,12 +2,15 @@
 //!
 //! ```text
 //! domino serve [--addr 127.0.0.1:7761] [--engines 1] [--slots 4]
-//!              [--queue-depth 64] [--deadline-ms N] [--mock]
+//!              [--queue-depth 64] [--deadline-ms N] [--artifact-dir DIR] [--mock]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --regex PATTERN | --stop "a,b"]
 //!                 [--method domino|domino-full|online|unconstrained]
 //!                 [--k N] [--speculative S] [--max-tokens N]
-//!                 [--temperature T] [--seed N]
+//!                 [--temperature T] [--seed N] [--artifact-dir DIR]
+//! domino precompile --artifact-dir DIR [--manifest FILE]
+//!                 [--grammar NAME | --ebnf SRC | --ebnf-file PATH | --regex P]
+//!                 [--k N] [--mock]   # batch-compile constraints offline
 //! domino grammar <name>         # inspect: terminals, tree sizes, precompute time
 //! domino grammars               # list builtin grammars
 //! ```
@@ -17,8 +20,18 @@
 //! with overload shedding — see `server::scheduler`). Model artifacts
 //! are found via `$DOMINO_ARTIFACTS` (default `./artifacts`);
 //! `--mock` uses the test trigram LM instead.
+//!
+//! `--artifact-dir DIR` (or `$DOMINO_ARTIFACT_DIR`) enables the
+//! persistent *precompute* artifact store: compiled grammar engines are
+//! loaded from DIR at boot (warm start), written back after fresh
+//! compiles, and their hot mask-cache entries re-saved at shutdown — a
+//! restarted server answers its first constrained request with zero
+//! compile latency. `domino precompile` fills the store offline from a
+//! manifest — a JSON array (or `{"constraints": [...]}`) of entries like
+//! `{"grammar": "json"}`, `{"ebnf": "root ::= ...", "k": 2}`,
+//! `{"ebnf_file": "g.ebnf"}` or `{"regex": "[0-9]+"}`.
 
-use domino::constraint::{Constraint, ConstraintSpec};
+use domino::constraint::{ArtifactStore, Constraint, ConstraintSpec, EngineRegistry};
 use domino::domino::decoder::Engine as GrammarEngine;
 use domino::grammar::builtin;
 use domino::runtime::mock::{json_mock, MockFactory};
@@ -27,7 +40,9 @@ use domino::scanner::Scanner;
 use domino::server::engine::{EngineCtx, GenRequest};
 use domino::server::scheduler::{Scheduler, SchedulerConfig};
 use domino::server::tcp;
+use domino::util::Json;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
@@ -51,6 +66,16 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (flags, positional)
 }
 
+/// The persistent precompute-artifact directory: `--artifact-dir` beats
+/// `$DOMINO_ARTIFACT_DIR`; absent = no persistence (pure in-memory
+/// registry). Distinct from `$DOMINO_ARTIFACTS`, the *model* bundle dir.
+fn constraint_artifact_dir(flags: &HashMap<String, String>) -> Option<PathBuf> {
+    flags
+        .get("artifact-dir")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var_os("DOMINO_ARTIFACT_DIR").map(PathBuf::from))
+}
+
 fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler> {
     let mock = flags.contains_key("mock");
     let cfg = SchedulerConfig {
@@ -61,13 +86,13 @@ fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler>
             .get("deadline-ms")
             .and_then(|s| s.parse().ok())
             .map(Duration::from_millis),
+        artifact_dir: constraint_artifact_dir(flags),
         ..SchedulerConfig::default()
     };
-    // The vocab must be ONE shared Arc across shards: registry keys are
-    // fingerprint × vocab identity, so per-shard vocab copies would
-    // defeat cross-shard engine dedup. Models stay per-shard (PJRT
-    // handles are thread-pinned; each shard init loads its own on its
-    // thread).
+    // One vocab Arc shared by every shard (registry keys hash the vocab
+    // *content*, so equal copies would dedupe too — sharing just avoids
+    // redundant fingerprinting). Models stay per-shard (PJRT handles are
+    // thread-pinned; each shard init loads its own on its thread).
     if mock {
         let (vocab, model) = json_mock(512);
         Ok(Scheduler::start(
@@ -94,13 +119,10 @@ fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler>
     }
 }
 
-/// Build the request constraint from CLI flags. The spec comes from one
-/// of `--ebnf-file` / `--ebnf` / `--regex` / `--grammar` / `--stop`
-/// (first present wins); the enforcement from `--method` / `--k` /
-/// `--speculative`.
-fn parse_constraint(flags: &HashMap<String, String>) -> domino::Result<Constraint> {
-    let method = flags.get("method").map(|s| s.as_str()).unwrap_or("domino");
-    let spec = if let Some(path) = flags.get("ebnf-file") {
+/// The constraint spec named by CLI flags: one of `--ebnf-file` /
+/// `--ebnf` / `--regex` / `--grammar` / `--stop` (first present wins).
+fn parse_spec(flags: &HashMap<String, String>) -> domino::Result<Option<ConstraintSpec>> {
+    Ok(if let Some(path) = flags.get("ebnf-file") {
         Some(ConstraintSpec::ebnf(std::fs::read_to_string(path)?))
     } else if let Some(src) = flags.get("ebnf") {
         Some(ConstraintSpec::ebnf(src.clone()))
@@ -112,10 +134,17 @@ fn parse_constraint(flags: &HashMap<String, String>) -> domino::Result<Constrain
         flags
             .get("stop")
             .map(|s| ConstraintSpec::stop(s.split(',').map(|x| x.to_string()).collect()))
-    };
+    })
+}
+
+/// Build the request constraint from CLI flags: the spec from
+/// [`parse_spec`], the enforcement from `--method` / `--k` /
+/// `--speculative`.
+fn parse_constraint(flags: &HashMap<String, String>) -> domino::Result<Constraint> {
+    let method = flags.get("method").map(|s| s.as_str()).unwrap_or("domino");
     Ok(Constraint::from_parts(
         method,
-        spec,
+        parse_spec(flags)?,
         flags.get("k").and_then(|k| k.parse().ok()),
         flags.get("speculative").and_then(|s| s.parse().ok()),
     ))
@@ -148,14 +177,119 @@ fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
     );
     if let Ok(m) = server.metrics() {
         eprintln!(
-            "# registry: {} hit / {} miss ({} ms compiling) | mask cache {:.0}% hit",
+            "# registry: {} hit / {} miss ({} ms compiling) | artifacts {} hit / {} invalid | \
+             mask cache {:.0}% hit",
             m.registry_hits,
             m.registry_misses,
             m.engine_compile_ms,
+            m.artifact_hits,
+            m.artifact_invalid,
             m.mask_cache_hit_rate() * 100.0,
         );
     }
     server.shutdown();
+    Ok(())
+}
+
+/// `(spec, k)` pairs from a precompile manifest: a JSON array (or
+/// `{"constraints": [...]}`) of objects with one of `grammar` / `ebnf` /
+/// `ebnf_file` / `regex`, plus an optional `k` (lookahead; null/absent = ∞).
+fn manifest_entries(v: &Json) -> domino::Result<Vec<(ConstraintSpec, Option<u32>)>> {
+    let arr: &[Json] = if let Json::Arr(a) = v {
+        a
+    } else {
+        v.get("constraints").and_then(|c| c.as_arr()).ok_or_else(|| {
+            anyhow::anyhow!("manifest must be a JSON array or {{\"constraints\": [...]}}")
+        })?
+    };
+    let mut out = Vec::new();
+    for (i, e) in arr.iter().enumerate() {
+        let spec = if let Some(src) = e.get("ebnf").and_then(|x| x.as_str()) {
+            ConstraintSpec::ebnf(src)
+        } else if let Some(path) = e.get("ebnf_file").and_then(|x| x.as_str()) {
+            ConstraintSpec::ebnf(std::fs::read_to_string(path)?)
+        } else if let Some(p) = e.get("regex").and_then(|x| x.as_str()) {
+            ConstraintSpec::regex(p)
+        } else if let Some(g) = e.get("grammar").and_then(|x| x.as_str()) {
+            ConstraintSpec::builtin(g)
+        } else {
+            anyhow::bail!("manifest entry {i} needs one of `grammar`, `ebnf`, `ebnf_file`, `regex`");
+        };
+        let k = match e.get("k") {
+            None | Some(Json::Null) => None,
+            Some(x) => match x.as_f64() {
+                Some(f) if f.is_finite() && f >= 0.0 => Some(f as u32),
+                _ => anyhow::bail!("manifest entry {i}: `k` must be a non-negative number"),
+            },
+        };
+        out.push((spec, k));
+    }
+    Ok(out)
+}
+
+/// `domino precompile`: batch-compile a manifest of constraints into the
+/// artifact store, so servers pointed at the same `--artifact-dir` boot
+/// warm. Already-valid artifacts are left alone (reported as cached).
+fn cmd_precompile(flags: HashMap<String, String>) -> domino::Result<()> {
+    let dir = constraint_artifact_dir(&flags).ok_or_else(|| {
+        anyhow::anyhow!("precompile needs --artifact-dir DIR (or $DOMINO_ARTIFACT_DIR)")
+    })?;
+    // Compile against the vocabulary the server will use: the AOT
+    // bundle's tokenizer, or the mock vocab with --mock (artifacts are
+    // validated by vocab fingerprint, so this must match `serve`).
+    let vocab = if flags.contains_key("mock") {
+        json_mock(512).0
+    } else {
+        load_vocab(&artifacts_dir())?
+    };
+    let mut entries: Vec<(ConstraintSpec, Option<u32>)> = Vec::new();
+    if let Some(path) = flags.get("manifest") {
+        let src = std::fs::read_to_string(path)?;
+        entries.extend(manifest_entries(&Json::parse(&src)?)?);
+    }
+    if let Some(spec) = parse_spec(&flags)? {
+        entries.push((spec, flags.get("k").and_then(|k| k.parse().ok())));
+    }
+    if entries.is_empty() {
+        anyhow::bail!("nothing to precompile: pass --manifest FILE and/or --grammar/--ebnf/--regex");
+    }
+    let store = ArtifactStore::new(&dir)?;
+    let registry = EngineRegistry::with_store(entries.len().max(8), store);
+    println!("precompiling {} constraint(s) into {}", entries.len(), dir.display());
+    let mut failures = 0usize;
+    for (spec, k) in entries {
+        let label = spec.label();
+        let kstr = k.map_or("inf".to_string(), |k| k.to_string());
+        let t0 = Instant::now();
+        let hits_before = registry.stats().artifact_hits;
+        match registry.get_or_compile(&spec, &vocab, k) {
+            Ok((engine, _)) => {
+                let cached = registry.stats().artifact_hits > hits_before;
+                println!(
+                    "  {label} (k={kstr}): {} nodes, {:.2}s{}",
+                    engine.trees.total_nodes(),
+                    t0.elapsed().as_secs_f64(),
+                    if cached { " [artifact already valid]" } else { "" },
+                );
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("  {label} (k={kstr}): FAILED: {e:#}");
+            }
+        }
+    }
+    let s = registry.stats();
+    println!(
+        "done: {} compiled ({} ms), {} already on disk, {} invalid replaced, {} failed",
+        s.misses - s.artifact_hits,
+        s.compile_ms,
+        s.artifact_hits,
+        s.artifact_invalid,
+        failures
+    );
+    if failures > 0 {
+        anyhow::bail!("{failures} constraint(s) failed to precompile");
+    }
     Ok(())
 }
 
@@ -199,6 +333,7 @@ fn main() {
             Err(e) => Err(e),
         },
         "generate" => cmd_generate(flags),
+        "precompile" => cmd_precompile(flags),
         "grammar" => match positional.first() {
             Some(name) => cmd_grammar(name),
             None => Err(anyhow::anyhow!("usage: domino grammar <name>")),
@@ -211,16 +346,23 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: domino <serve|generate|grammar|grammars> [flags]\n\
+                "usage: domino <serve|generate|precompile|grammar|grammars> [flags]\n\
                  \n\
                  serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
-                 \u{20}          [--deadline-ms N] [--mock]\n\
+                 \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--mock]\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
                  \u{20}          [--method domino|domino-full|online|unconstrained]\n\
-                 \u{20}          [--k N] [--speculative S] [--max-tokens N] [--temperature T] [--seed N] [--mock]\n\
+                 \u{20}          [--k N] [--speculative S] [--max-tokens N] [--temperature T] [--seed N]\n\
+                 \u{20}          [--artifact-dir DIR] [--mock]\n\
+                 precompile --artifact-dir DIR [--manifest FILE]\n\
+                 \u{20}          [--grammar NAME | --ebnf SRC | --ebnf-file PATH | --regex P] [--k N] [--mock]\n\
+                 \u{20}          batch-compile constraints into the persistent artifact store\n\
+                 \u{20}          (servers with the same --artifact-dir then boot warm)\n\
                  grammar   NAME    inspect a builtin grammar\n\
-                 grammars          list builtin grammars"
+                 grammars          list builtin grammars\n\
+                 \n\
+                 --artifact-dir defaults to $DOMINO_ARTIFACT_DIR when unset."
             );
             Ok(())
         }

@@ -46,14 +46,21 @@ pub struct Scanner {
 
 impl Scanner {
     pub fn new(cfg: &Cfg) -> crate::Result<Scanner> {
-        let dfas = cfg.terminal_dfas()?;
+        Ok(Self::from_dfas(cfg.terminal_dfas()?))
+    }
+
+    /// Assemble a scanner from per-terminal DFAs determinized elsewhere
+    /// (the artifact load path: deserialized DFAs skip the regex → NFA →
+    /// DFA → minimize pipeline). `dfas[t]` must be terminal `t`'s
+    /// automaton in the owning grammar's terminal order.
+    pub fn from_dfas(dfas: Vec<Dfa>) -> Scanner {
         let mut pos_offset = Vec::with_capacity(dfas.len());
         let mut next = 0u32;
         for d in &dfas {
             pos_offset.push(next);
             next += d.num_states() as u32;
         }
-        Ok(Scanner { dfas, pos_offset, num_pos: next + 1 })
+        Scanner { dfas, pos_offset, num_pos: next + 1 }
     }
 
     /// Total number of distinct positions (Boundary + all DFA states).

@@ -109,8 +109,10 @@ pub struct EngineCtx {
     /// Compiled-engine cache shared across requests and engine shards
     /// (the scheduler hands every shard the same registry).
     pub registry: Arc<EngineRegistry>,
-    /// Shared speculation priors per constraint fingerprint (§4.2: priors
-    /// formed over warmup requests, then reused). Per-shard: affinity
+    /// Shared speculation priors per *build* fingerprint (grammar ×
+    /// vocab × lookahead — priors learned at one depth don't leak into
+    /// another; §4.2: priors formed over warmup requests, then reused).
+    /// Per-shard: affinity
     /// routing keeps same-grammar requests on one shard so these stay
     /// warm without cross-shard locking.
     specs: HashMap<u64, Arc<Mutex<SpeculativeModel>>>,
@@ -126,6 +128,18 @@ impl EngineCtx {
         vocab: Arc<Vocab>,
         registry: Arc<EngineRegistry>,
     ) -> EngineCtx {
+        // Warm-start from the registry's artifact store (idempotent: the
+        // first shard to get here scans, the rest no-op), so a restarted
+        // process serves its first constrained request with zero compile
+        // latency. No-op for registries without a store.
+        let loaded = registry.warm_start(&vocab);
+        if loaded > 0 {
+            let s = registry.stats();
+            eprintln!(
+                "domino: warm-started {loaded} engine(s) from artifacts in {} ms",
+                s.warm_start_ms
+            );
+        }
         EngineCtx { factory, vocab, registry, specs: HashMap::new() }
     }
 
@@ -156,7 +170,15 @@ impl EngineCtx {
                 StopChecker::new(self.vocab.clone(), sequences),
             ))),
             spec => {
-                let (engine, masks) = self.registry.get_or_compile(spec, &self.vocab)?;
+                // The build parameter `k` (lookahead depth; Online = ∞)
+                // is part of the registry/artifact key, so the same
+                // grammar at different depths can never share (or
+                // persist) colliding builds or speculation priors.
+                let build_k = match &c.enforcement {
+                    Enforcement::Online => None,
+                    Enforcement::Domino { k, .. } => *k,
+                };
+                let (engine, masks) = self.registry.get_or_compile(spec, &self.vocab, build_k)?;
                 match &c.enforcement {
                     Enforcement::Online => {
                         let checker = crate::baselines::OnlineChecker::new(engine);
@@ -174,9 +196,11 @@ impl EngineCtx {
                         };
                         let decoder = DominoDecoder::new(engine, lookahead);
                         if let Some(s) = speculative {
+                            let prior_key =
+                                spec.build_fingerprint(self.vocab.fingerprint(), build_k);
                             Ok(DecodeMode::Speculative {
                                 decoder,
-                                spec: self.spec_model(spec.fingerprint()),
+                                spec: self.spec_model(prior_key),
                                 s: *s,
                                 masks,
                                 variant: MaskCache::variant(lookahead),
@@ -458,6 +482,11 @@ impl EngineCore {
         m.registry_evictions = r.evictions;
         m.registry_coalesced = r.coalesced;
         m.engine_compile_ms = r.compile_ms;
+        m.artifact_hits = r.artifact_hits;
+        m.artifact_misses = r.artifact_misses;
+        m.artifact_invalid = r.artifact_invalid;
+        m.warm_start_loaded = r.warm_loaded;
+        m.warm_start_ms = r.warm_start_ms;
         let mc = self.ctx.registry.mask_stats();
         m.mask_cache_hits = mc.hits;
         m.mask_cache_misses = mc.misses;

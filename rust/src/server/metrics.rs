@@ -104,6 +104,19 @@ pub struct Metrics {
     pub registry_coalesced: u64,
     /// Total wall time spent compiling grammar engines, milliseconds.
     pub engine_compile_ms: u64,
+    /// Engines deserialized from the persistent artifact store (warm
+    /// starts + on-demand loads) instead of compiled.
+    pub artifact_hits: u64,
+    /// Artifact-store lookups that found nothing (the compile wrote one
+    /// back).
+    pub artifact_misses: u64,
+    /// Artifacts rejected as unusable (truncated / checksum / version /
+    /// vocab mismatch); each fell back to a clean rebuild.
+    pub artifact_invalid: u64,
+    /// Engines registered by the boot-time warm-start scan.
+    pub warm_start_loaded: u64,
+    /// Wall time of the boot-time warm-start scan, milliseconds.
+    pub warm_start_ms: u64,
     /// State-keyed mask-cache hits (mask reused, no tree traversal).
     pub mask_cache_hits: u64,
     /// Mask-cache misses (mask computed and cached).
@@ -148,6 +161,11 @@ impl Metrics {
         self.registry_evictions = self.registry_evictions.max(other.registry_evictions);
         self.registry_coalesced = self.registry_coalesced.max(other.registry_coalesced);
         self.engine_compile_ms = self.engine_compile_ms.max(other.engine_compile_ms);
+        self.artifact_hits = self.artifact_hits.max(other.artifact_hits);
+        self.artifact_misses = self.artifact_misses.max(other.artifact_misses);
+        self.artifact_invalid = self.artifact_invalid.max(other.artifact_invalid);
+        self.warm_start_loaded = self.warm_start_loaded.max(other.warm_start_loaded);
+        self.warm_start_ms = self.warm_start_ms.max(other.warm_start_ms);
         self.mask_cache_hits = self.mask_cache_hits.max(other.mask_cache_hits);
         self.mask_cache_misses = self.mask_cache_misses.max(other.mask_cache_misses);
         self.mask_cache_evictions = self.mask_cache_evictions.max(other.mask_cache_evictions);
@@ -165,6 +183,7 @@ impl Metrics {
              interventions: {} | masks: {} | spec: {}/{} accepted | \
              ttft p50 {:.1} ms | req tps mean {:.1} | \
              registry: {} hit / {} miss / {} evict / {} coalesced ({} ms compiling) | \
+             artifacts: {} hit / {} miss / {} invalid (warm start {} in {} ms) | \
              mask cache: {} hit / {} miss ({:.0}% hit rate)",
             self.requests_completed,
             self.requests_failed,
@@ -184,6 +203,11 @@ impl Metrics {
             self.registry_evictions,
             self.registry_coalesced,
             self.engine_compile_ms,
+            self.artifact_hits,
+            self.artifact_misses,
+            self.artifact_invalid,
+            self.warm_start_loaded,
+            self.warm_start_ms,
             self.mask_cache_hits,
             self.mask_cache_misses,
             self.mask_cache_hit_rate() * 100.0,
@@ -263,6 +287,7 @@ mod tests {
         let mut m = Metrics::default();
         assert!(m.report().contains("requests"));
         assert!(m.report().contains("registry"));
+        assert!(m.report().contains("artifacts"));
         assert_eq!(m.mask_cache_hit_rate(), 0.0, "no lookups yet");
         m.mask_cache_hits = 3;
         m.mask_cache_misses = 1;

@@ -42,7 +42,7 @@
 use super::engine::{EngineCore, EngineCtx, GenRequest, GenResponse, Work};
 use super::metrics::Metrics;
 use super::slot::StreamEvent;
-use crate::constraint::EngineRegistry;
+use crate::constraint::{ArtifactStore, EngineRegistry};
 use anyhow::Context;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -62,6 +62,12 @@ pub struct SchedulerConfig {
     pub default_deadline: Option<Duration>,
     /// Capacity of the shared compiled-engine registry.
     pub registry_capacity: usize,
+    /// Directory of persistent precompute artifacts (CLI `--artifact-dir`
+    /// / `$DOMINO_ARTIFACT_DIR`). When set, the shared registry loads
+    /// compiled engines from disk at boot (warm start), writes fresh
+    /// compiles back, and re-saves hot masks at shutdown. `None` = purely
+    /// in-memory registry, the pre-artifact behavior.
+    pub artifact_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for SchedulerConfig {
@@ -72,6 +78,7 @@ impl Default for SchedulerConfig {
             queue_depth: 64,
             default_deadline: None,
             registry_capacity: super::engine::DEFAULT_REGISTRY_CAPACITY,
+            artifact_dir: None,
         }
     }
 }
@@ -167,9 +174,8 @@ impl Scheduler {
     /// that shard's thread (model state is thread-pinned) and receives
     /// the shared registry — build the context with
     /// [`EngineCtx::with_registry`] so grammar compiles dedupe across
-    /// shards. NOTE: for cross-shard engine reuse the init must also
-    /// return the **same** `Arc<Vocab>` on every shard (registry keys
-    /// are fingerprint × vocab identity).
+    /// shards. Registry keys hash the vocabulary *content*, so shards
+    /// may share one `Arc<Vocab>` or load equal copies — both dedupe.
     pub fn start<F>(init: F, cfg: SchedulerConfig) -> Scheduler
     where
         F: Fn(usize, Arc<EngineRegistry>) -> crate::Result<EngineCtx> + Send + Sync + 'static,
@@ -178,7 +184,18 @@ impl Scheduler {
         cfg.engines = cfg.engines.max(1);
         cfg.slots_per_engine = cfg.slots_per_engine.max(1);
         cfg.queue_depth = cfg.queue_depth.max(1);
-        let registry = EngineRegistry::new(cfg.registry_capacity.max(1));
+        let capacity = cfg.registry_capacity.max(1);
+        let registry = match &cfg.artifact_dir {
+            None => EngineRegistry::new(capacity),
+            Some(dir) => match ArtifactStore::new(dir) {
+                Ok(store) => EngineRegistry::with_store(capacity, store),
+                Err(e) => {
+                    // An unusable store costs warm starts, not serving.
+                    eprintln!("domino: artifact store disabled: {e:#}");
+                    EngineRegistry::new(capacity)
+                }
+            },
+        };
         let init = Arc::new(init);
         let mut shards = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {
@@ -207,7 +224,7 @@ impl Scheduler {
                             return;
                         }
                     };
-                    shard_loop(EngineCore::new(ctx, slots), rx, q, a);
+                    shard_loop(EngineCore::new(ctx, slots), rx, q, a, i == 0);
                 })
                 .expect("spawn shard thread");
             shards.push(Shard { tx, queued, active, handle: Some(handle) });
@@ -359,13 +376,28 @@ impl Drop for Scheduler {
 /// One shard's loop: drain the channel, purge dead queued work, admit
 /// into free slots (FIFO, O(1) `VecDeque` pops), step every slot one
 /// decode iteration, retire finished slots. Blocks on the channel only
-/// when fully idle.
+/// when fully idle. On exit, the primary shard flushes its context's
+/// registry — the one that actually served engines, whether shared or
+/// built by the init closure — so warmed masks persist across restarts.
 fn shard_loop(
+    core: EngineCore,
+    rx: mpsc::Receiver<Job>,
+    queued_gauge: Arc<AtomicUsize>,
+    active_gauge: Arc<AtomicUsize>,
+    primary: bool,
+) {
+    let core = shard_loop_inner(core, rx, queued_gauge, active_gauge);
+    if primary {
+        core.ctx.registry.flush_artifacts();
+    }
+}
+
+fn shard_loop_inner(
     mut core: EngineCore,
     rx: mpsc::Receiver<Job>,
     queued_gauge: Arc<AtomicUsize>,
     active_gauge: Arc<AtomicUsize>,
-) {
+) -> EngineCore {
     let mut queue: VecDeque<Work> = VecDeque::new();
     loop {
         // Drain the channel (block only when idle).
@@ -376,7 +408,7 @@ fn shard_loop(
                     let _ = tx.send(core.snapshot());
                     continue;
                 }
-                Ok(Job::Shutdown) | Err(_) => return,
+                Ok(Job::Shutdown) | Err(_) => return core,
             }
         }
         loop {
@@ -385,9 +417,9 @@ fn shard_loop(
                 Ok(Job::Stats(tx)) => {
                     let _ = tx.send(core.snapshot());
                 }
-                Ok(Job::Shutdown) => return,
+                Ok(Job::Shutdown) => return core,
                 Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => return,
+                Err(mpsc::TryRecvError::Disconnected) => return core,
             }
         }
 

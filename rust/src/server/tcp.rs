@@ -199,6 +199,11 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("registry_evictions", Json::Num(m.registry_evictions as f64)),
         ("registry_coalesced", Json::Num(m.registry_coalesced as f64)),
         ("engine_compile_ms", Json::Num(m.engine_compile_ms as f64)),
+        ("artifact_hits", Json::Num(m.artifact_hits as f64)),
+        ("artifact_misses", Json::Num(m.artifact_misses as f64)),
+        ("artifact_invalid", Json::Num(m.artifact_invalid as f64)),
+        ("warm_start_loaded", Json::Num(m.warm_start_loaded as f64)),
+        ("warm_start_ms", Json::Num(m.warm_start_ms as f64)),
         ("mask_cache_hits", Json::Num(m.mask_cache_hits as f64)),
         ("mask_cache_misses", Json::Num(m.mask_cache_misses as f64)),
         ("mask_cache_hit_rate", Json::Num(m.mask_cache_hit_rate())),
@@ -464,11 +469,14 @@ mod tests {
         assert_eq!(v.get("token").unwrap().as_str().unwrap(), "ab");
         assert_eq!(v.get("index").unwrap().as_f64().unwrap(), 3.0);
 
-        let m = Metrics::default();
+        let m = Metrics { artifact_hits: 2, warm_start_ms: 12, ..Default::default() };
         let line = format_stats(&m, 4);
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("engines").unwrap().as_f64().unwrap(), 4.0);
         assert_eq!(v.get("requests_shed").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(v.get("artifact_hits").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("artifact_invalid").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(v.get("warm_start_ms").unwrap().as_f64().unwrap(), 12.0);
         // Empty summaries serialize as null, not NaN (which isn't JSON).
         assert_eq!(v.get("ttft_p50_s"), Some(&Json::Null));
     }

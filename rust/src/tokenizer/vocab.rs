@@ -25,6 +25,8 @@ pub struct Vocab {
     /// merge = higher priority).
     merge_map: HashMap<(TokenId, TokenId), TokenId>,
     merges: Vec<(TokenId, TokenId)>,
+    /// Cached content fingerprint (cleared by `push_merge`).
+    fp: std::sync::OnceLock<u64>,
 }
 
 impl Vocab {
@@ -34,7 +36,28 @@ impl Vocab {
         for b in 0u16..256 {
             tokens.push(vec![b as u8]);
         }
-        Vocab { tokens, merge_map: HashMap::new(), merges: Vec::new() }
+        Vocab {
+            tokens,
+            merge_map: HashMap::new(),
+            merges: Vec::new(),
+            fp: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Deterministic FNV-1a content hash of the vocabulary (token count +
+    /// every token's byte string, length-prefixed). Stable across
+    /// processes — the vocab-identity component of engine-registry keys
+    /// and on-disk artifact validation. Cached after the first call.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fp.get_or_init(|| {
+            let mut buf = Vec::with_capacity(self.tokens.len() * 8);
+            buf.extend_from_slice(&(self.tokens.len() as u64).to_le_bytes());
+            for t in &self.tokens {
+                buf.extend_from_slice(&(t.len() as u64).to_le_bytes());
+                buf.extend_from_slice(t);
+            }
+            crate::util::binio::fnv1a_64(&buf)
+        })
     }
 
     /// Rebuild from a merge list (the serialized form).
@@ -60,6 +83,7 @@ impl Vocab {
         self.tokens.push(bytes);
         self.merge_map.insert((a, b), id);
         self.merges.push((a, b));
+        self.fp = std::sync::OnceLock::new(); // content changed
         Ok(id)
     }
 
@@ -216,6 +240,20 @@ mod tests {
         std::fs::remove_file(&p).ok();
         assert_eq!(v2.len(), v.len());
         assert_eq!(v2.encode(b"aaaa"), v.encode(b"aaaa"));
+    }
+
+    #[test]
+    fn fingerprint_is_content_keyed_and_merge_sensitive() {
+        let a = Vocab::byte_level();
+        let b = Vocab::byte_level();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same content, same fingerprint");
+        let mut c = Vocab::byte_level();
+        let x = (b'x' as usize + NUM_SPECIAL) as TokenId;
+        let fp_before = c.fingerprint();
+        c.push_merge(x, x).unwrap();
+        assert_ne!(c.fingerprint(), fp_before, "push_merge must invalidate the cache");
+        // Clones carry the content (and thus the fingerprint).
+        assert_eq!(c.clone().fingerprint(), c.fingerprint());
     }
 
     #[test]

@@ -65,6 +65,31 @@ impl Timing {
     }
 }
 
+/// Merge one bench's metrics into the JSON report named by
+/// `$DOMINO_BENCH_JSON` (no-op when unset). Each bench writes its own
+/// top-level `section` object, so several benches can build one
+/// `BENCH_ci.json` sequentially — the machine-readable output CI uploads
+/// and diffs against the checked-in baseline.
+pub fn emit_json(section: &str, fields: &[(&str, f64)]) {
+    use crate::util::Json;
+    use std::collections::BTreeMap;
+    let Some(path) = std::env::var_os("DOMINO_BENCH_JSON") else { return };
+    let mut root = match std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    let mut obj = BTreeMap::new();
+    for &(name, value) in fields {
+        if value.is_finite() {
+            obj.insert(name.to_string(), Json::Num(value));
+        }
+    }
+    root.insert(section.to_string(), Json::Obj(obj));
+    if let Err(e) = std::fs::write(&path, Json::Obj(root).to_string()) {
+        eprintln!("warn: could not write bench json: {e}");
+    }
+}
+
 /// Warm up then time `f` for `iters` iterations.
 pub fn time_it(warmup: u32, iters: u32, mut f: impl FnMut()) -> Timing {
     for _ in 0..warmup {

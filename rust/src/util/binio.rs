@@ -1,0 +1,213 @@
+//! Tiny little-endian binary writer/reader for the on-disk artifact
+//! format (the vendored crate set has no serde/bincode — see Cargo.toml).
+//!
+//! Framing conventions, shared by every artifact section:
+//! * integers are little-endian (`u8`/`u32`/`u64`);
+//! * byte strings and UTF-8 strings are `u32` length + raw bytes;
+//! * readers never trust a length: every read is bounded by the remaining
+//!   buffer and fails with a `truncated` error instead of panicking, so a
+//!   cut-off file degrades to a clean load failure.
+
+use anyhow::bail;
+
+/// FNV-1a 64 over a byte slice — the artifact payload checksum (same
+/// constants as the constraint fingerprints).
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only buffer writer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix (fixed-layout sections).
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed byte string.
+    pub fn bytes(&mut self, bytes: &[u8]) {
+        self.u32(bytes.len() as u32);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Bounds-checked buffer reader.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// The rest of the buffer, without consuming it.
+    pub fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated: need {n} bytes, {} remain", self.remaining());
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Exactly `n` raw bytes (fixed-layout fields, e.g. magic numbers).
+    pub fn raw(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> crate::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> crate::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// A `u32`-length-prefixed byte string.
+    pub fn bytes(&mut self) -> crate::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// A `u32`-length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> crate::Result<String> {
+        let b = self.bytes()?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string field"))?
+            .to_string())
+    }
+
+    /// Fail unless the whole buffer was consumed (trailing garbage means
+    /// the encoder and decoder disagree about the layout).
+    pub fn expect_end(&self) -> crate::Result<()> {
+        if !self.is_empty() {
+            bail!("{} trailing bytes after decode", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.bytes(b"abc");
+        w.str("héllo");
+        w.raw(&[1, 2, 3]);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 3);
+        assert_eq!(r.u8().unwrap(), 1);
+        assert_eq!(r.u8().unwrap(), 2);
+        assert_eq!(r.u8().unwrap(), 3);
+        assert!(r.expect_end().is_ok());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.u64(42);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf[..5]);
+        assert!(r.u64().is_err());
+        // A length prefix larger than the buffer is rejected too.
+        let mut w = ByteWriter::new();
+        w.u32(1_000_000);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn expect_end_catches_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.u8(1);
+        w.u8(2);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        r.u8().unwrap();
+        assert!(r.expect_end().is_err());
+        r.u8().unwrap();
+        assert!(r.expect_end().is_ok());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_content_sensitive() {
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"domino"), fnv1a_64(b"domino"));
+        assert_ne!(fnv1a_64(b"domino"), fnv1a_64(b"dominp"));
+    }
+}

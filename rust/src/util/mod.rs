@@ -3,6 +3,7 @@
 //! rand / proptest / criterion — see Cargo.toml.)
 
 pub mod bench;
+pub mod binio;
 pub mod json;
 pub mod prop;
 pub mod rng;

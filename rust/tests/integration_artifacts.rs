@@ -1,0 +1,218 @@
+//! Artifact-store integration: every invalidation path (truncation,
+//! checksum corruption, version bump, vocab-fingerprint mismatch) must
+//! fall back to a clean rebuild — never an error, never a stale engine —
+//! and increment `artifact_invalid`; plus a concurrent load-dedup test
+//! mirroring `integration_registry.rs`.
+
+use domino::constraint::{ArtifactStore, ConstraintSpec, EngineRegistry};
+use domino::tokenizer::{self, Vocab};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn vocab() -> Arc<Vocab> {
+    Arc::new(tokenizer::bpe::synthetic_json_vocab(256))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("domino_artifacts_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The single artifact file in `dir` (tests precompile exactly one).
+fn only_artifact(dir: &PathBuf) -> PathBuf {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("domino"))
+        .collect();
+    assert_eq!(files.len(), 1, "expected exactly one artifact in {}", dir.display());
+    files.pop().unwrap()
+}
+
+/// Precompile `spec` into a fresh store at `dir` and return the artifact
+/// path.
+fn precompile(dir: &PathBuf, spec: &ConstraintSpec, v: &Arc<Vocab>) -> PathBuf {
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    reg.get_or_compile(spec, v, None).unwrap();
+    only_artifact(dir)
+}
+
+/// After `corrupt` mangles the on-disk artifact, a fresh registry must
+/// still serve the spec (clean rebuild), count exactly one invalid
+/// artifact, and leave a *valid* artifact behind (the rebuild's
+/// write-back overwrites the bad file).
+fn assert_rebuilds_after(tag: &str, corrupt: impl Fn(&PathBuf)) {
+    let dir = temp_dir(tag);
+    let v = vocab();
+    let spec = ConstraintSpec::builtin("fig3");
+    let path = precompile(&dir, &spec, &v);
+    corrupt(&path);
+
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    let (engine, _) = reg.get_or_compile(&spec, &v, None).unwrap();
+    assert!(engine.trees.total_nodes() > 0, "rebuilt engine is real");
+    let s = reg.stats();
+    assert_eq!(s.artifact_invalid, 1, "{tag}: the bad artifact must be counted: {s:?}");
+    assert_eq!(s.artifact_hits, 0, "{tag}: the bad artifact must not be served");
+    assert!(s.compile_ms > 0 || s.misses == 1, "{tag}: a clean rebuild happened");
+
+    // The write-back replaced the corrupt file: a third boot loads clean.
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    reg.get_or_compile(&spec, &v, None).unwrap();
+    let s = reg.stats();
+    assert_eq!((s.artifact_hits, s.artifact_invalid), (1, 0), "{tag}: rebuild was persisted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_artifact_falls_back_to_rebuild() {
+    assert_rebuilds_after("truncated", |path| {
+        let data = std::fs::read(path).unwrap();
+        std::fs::write(path, &data[..data.len() / 2]).unwrap();
+    });
+}
+
+#[test]
+fn checksum_mismatch_falls_back_to_rebuild() {
+    assert_rebuilds_after("checksum", |path| {
+        let mut data = std::fs::read(path).unwrap();
+        let at = data.len() - 9; // deep in the payload
+        data[at] ^= 0xFF;
+        std::fs::write(path, &data).unwrap();
+    });
+}
+
+#[test]
+fn version_bump_falls_back_to_rebuild() {
+    assert_rebuilds_after("version", |path| {
+        let mut data = std::fs::read(path).unwrap();
+        // The version is the u32 right after the 4-byte magic.
+        data[4] = data[4].wrapping_add(1);
+        std::fs::write(path, &data).unwrap();
+    });
+}
+
+#[test]
+fn vocab_fingerprint_mismatch_falls_back_to_rebuild() {
+    // An artifact built against vocab A, surfaced under the key a vocab-B
+    // build would look for (renamed on disk): the header's embedded vocab
+    // fingerprint must reject it — a retrained tokenizer can never be
+    // served a stale engine.
+    let dir = temp_dir("vocabfp");
+    let v_a = vocab();
+    let v_b = Arc::new(tokenizer::bpe::synthetic_json_vocab(320));
+    assert_ne!(v_a.fingerprint(), v_b.fingerprint());
+    let spec = ConstraintSpec::builtin("fig3");
+    let path_a = precompile(&dir, &spec, &v_a);
+    let store = ArtifactStore::new(dir.clone()).unwrap();
+    let key_b = spec.build_fingerprint(v_b.fingerprint(), None);
+    std::fs::rename(&path_a, store.path_for(key_b)).unwrap();
+
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    let (engine, _) = reg.get_or_compile(&spec, &v_b, None).unwrap();
+    assert_eq!(engine.vocab.len(), v_b.len(), "the rebuild uses the live vocab");
+    let s = reg.stats();
+    assert_eq!(s.artifact_invalid, 1, "vocab mismatch must invalidate: {s:?}");
+    assert_eq!(s.artifact_hits, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_artifact_loads_are_deduplicated() {
+    // Mirror of integration_registry's concurrent-build dedup, with the
+    // engine coming from disk: 8 racing requests must deserialize the
+    // artifact exactly once and everyone shares that load.
+    let dir = temp_dir("concurrent");
+    let v = vocab();
+    let spec = ConstraintSpec::builtin("json");
+    precompile(&dir, &spec, &v);
+
+    let registry = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let registry = registry.clone();
+        let vocab = v.clone();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            registry.get_or_compile(&spec, &vocab, None).unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = registry.stats();
+    assert_eq!(s.misses, 1, "exactly one in-memory miss under concurrency: {s:?}");
+    assert_eq!(s.artifact_hits, 1, "the artifact deserialized exactly once: {s:?}");
+    assert_eq!(s.hits + s.coalesced, 7, "everyone else reused the load: {s:?}");
+    assert_eq!(s.compile_ms, 0, "nothing compiled");
+    assert_eq!(s.entries, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_start_registers_every_valid_artifact_once() {
+    let dir = temp_dir("warmstart");
+    let v = vocab();
+    // Two grammars, plus one artifact for a different vocab that must be
+    // ignored by this process's scan.
+    for name in ["fig3", "json"] {
+        let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+        reg.get_or_compile(&ConstraintSpec::builtin(name), &v, None).unwrap();
+    }
+    let other = Arc::new(tokenizer::bpe::synthetic_json_vocab(320));
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    reg.get_or_compile(&ConstraintSpec::builtin("fig3"), &other, None).unwrap();
+
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    assert_eq!(reg.warm_start(&v), 2, "both artifacts for this vocab load");
+    assert_eq!(reg.warm_start(&v), 0, "warm start is idempotent per process");
+    assert!(reg.contains(&ConstraintSpec::builtin("fig3"), &v, None));
+    assert!(reg.contains(&ConstraintSpec::builtin("json"), &v, None));
+    assert!(!reg.contains(&ConstraintSpec::builtin("fig3"), &other, None));
+    // Requests after warm start are pure in-memory hits.
+    reg.get_or_compile(&ConstraintSpec::builtin("json"), &v, None).unwrap();
+    let s = reg.stats();
+    assert_eq!((s.misses, s.hits), (0, 1), "{s:?}");
+    assert_eq!(s.warm_loaded, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flush_persists_hot_masks_for_the_next_boot() {
+    use domino::constraint::MaskCache;
+    use domino::domino::decoder::Lookahead;
+    use domino::domino::Checker as _;
+    use domino::domino::DominoDecoder;
+
+    let dir = temp_dir("flush");
+    let v = vocab();
+    let spec = ConstraintSpec::builtin("json");
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    let (engine, masks) = reg.get_or_compile(&spec, &v, None).unwrap();
+    // Warm some masks through the cached path, then flush.
+    let mut checker = domino::constraint::CachedChecker::new(
+        Box::new(DominoDecoder::new(engine, Lookahead::Infinite)),
+        masks.clone(),
+        MaskCache::variant(Lookahead::Infinite),
+    );
+    for &id in &v.encode(b"{\"a\": 1") {
+        checker.compute_mask();
+        checker.advance(id).unwrap();
+    }
+    assert!(!masks.is_empty(), "masks were cached");
+    assert_eq!(reg.flush_artifacts(), 1);
+
+    // Next boot: the warm-started engine's cache is pre-seeded.
+    let reg = EngineRegistry::with_store(8, ArtifactStore::new(dir.clone()).unwrap());
+    assert_eq!(reg.warm_start(&v), 1);
+    let (_, masks2) = reg.get_or_compile(&spec, &v, None).unwrap();
+    assert!(
+        masks2.len() >= masks.len().min(512),
+        "persisted hot masks must survive the restart: {} < {}",
+        masks2.len(),
+        masks.len()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

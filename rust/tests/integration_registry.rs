@@ -7,7 +7,9 @@
 //! and inline EBNF / regex / stop constraints work end-to-end through
 //! the TCP request format.
 
-use domino::constraint::{CachedChecker, Constraint, ConstraintSpec, EngineRegistry, MaskCache};
+use domino::constraint::{
+    ArtifactStore, CachedChecker, Constraint, ConstraintSpec, EngineRegistry, MaskCache,
+};
 use domino::domino::decoder::Lookahead;
 use domino::domino::{Checker, DominoDecoder};
 use domino::runtime::mock::{json_mock, MockFactory};
@@ -21,6 +23,19 @@ fn mock_server(slots: usize) -> Server {
             Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab))
         },
         slots,
+    )
+}
+
+/// A single-shard server whose registry is backed by the artifact store
+/// at `dir` (the warm-start scan runs inside `EngineCtx::with_registry`).
+fn mock_server_with_artifacts(dir: std::path::PathBuf) -> Server {
+    Server::start(
+        move || {
+            let (vocab, model) = json_mock(512);
+            let registry = EngineRegistry::with_store(8, ArtifactStore::new(dir)?);
+            Ok(EngineCtx::with_registry(Box::new(MockFactory { model }), vocab, registry))
+        },
+        2,
     )
 }
 
@@ -65,7 +80,7 @@ fn concurrent_builds_are_deduplicated() {
         let vocab = vocab.clone();
         let spec = spec.clone();
         handles.push(std::thread::spawn(move || {
-            registry.get_or_compile(&spec, &vocab).unwrap();
+            registry.get_or_compile(&spec, &vocab, None).unwrap();
         }));
     }
     for h in handles {
@@ -82,14 +97,14 @@ fn lru_eviction_is_bounded_and_counted() {
     let (vocab, _) = json_mock(512);
     let registry = EngineRegistry::new(2);
     for name in ["fig3", "json", "gsm8k"] {
-        registry.get_or_compile(&ConstraintSpec::builtin(name), &vocab).unwrap();
+        registry.get_or_compile(&ConstraintSpec::builtin(name), &vocab, None).unwrap();
     }
     let s = registry.stats();
     assert_eq!((s.misses, s.evictions, s.entries), (3, 1, 2));
     // The oldest entry (fig3) was evicted; the newer two are still warm.
-    assert!(!registry.contains(&ConstraintSpec::builtin("fig3"), &vocab));
-    assert!(registry.contains(&ConstraintSpec::builtin("json"), &vocab));
-    assert!(registry.contains(&ConstraintSpec::builtin("gsm8k"), &vocab));
+    assert!(!registry.contains(&ConstraintSpec::builtin("fig3"), &vocab, None));
+    assert!(registry.contains(&ConstraintSpec::builtin("json"), &vocab, None));
+    assert!(registry.contains(&ConstraintSpec::builtin("gsm8k"), &vocab, None));
 }
 
 #[test]
@@ -141,7 +156,7 @@ fn cached_masks_equal_uncached_and_hit() {
     let (vocab, _) = json_mock(512);
     let registry = EngineRegistry::new(4);
     let (engine, masks) =
-        registry.get_or_compile(&ConstraintSpec::builtin("json"), &vocab).unwrap();
+        registry.get_or_compile(&ConstraintSpec::builtin("json"), &vocab, None).unwrap();
     let mut plain = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
     let mut cached = CachedChecker::new(
         Box::new(DominoDecoder::new(engine, Lookahead::Infinite)),
@@ -164,6 +179,44 @@ fn cached_masks_equal_uncached_and_hit() {
     assert!(s.hits as usize >= ids.len(), "{s:?}");
     assert!(s.misses >= 1, "{s:?}");
     assert!(registry.mask_stats().hits >= s.hits, "registry aggregates live caches");
+}
+
+#[test]
+fn kill_and_restart_serves_first_request_without_recompiling() {
+    let dir = std::env::temp_dir()
+        .join(format!("domino_restart_roundtrip_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let req = GenRequest {
+        prompt: String::new(),
+        constraint: Constraint::domino(ConstraintSpec::builtin("json")),
+        max_tokens: 12,
+        ..Default::default()
+    };
+
+    // First life: cold boot — the grammar compiles and its artifact is
+    // written back to the store.
+    let server = mock_server_with_artifacts(dir.clone());
+    let r = server.generate(req.clone()).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let m = server.metrics().unwrap();
+    assert_eq!(m.registry_misses, 1, "cold boot compiles");
+    assert_eq!(m.artifact_hits, 0, "nothing to load on the first life");
+    assert_eq!(m.artifact_misses, 1, "the store was consulted before compiling");
+    server.shutdown(); // the "kill"
+
+    // Second life: the warm-start scan registers the persisted engine, so
+    // the first request is an in-memory registry hit — no compile at all.
+    let server = mock_server_with_artifacts(dir.clone());
+    let r = server.generate(req).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let m = server.metrics().unwrap();
+    assert!(m.artifact_hits >= 1, "restart must boot from the artifact: {m:?}");
+    assert_eq!(m.warm_start_loaded, 1, "warm start registered the engine");
+    assert_eq!(m.registry_misses, 0, "first request after restart must not recompile");
+    assert_eq!(m.engine_compile_ms, 0, "zero compile latency after restart");
+    assert_eq!(m.registry_hits, 1, "the request was served from the warm registry");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

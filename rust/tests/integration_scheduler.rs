@@ -26,7 +26,7 @@ fn cfg(engines: usize, slots: usize, depth: usize) -> SchedulerConfig {
 }
 
 /// Mock-LM scheduler; one vocab Arc shared across shards (registry keys
-/// are fingerprint × vocab identity).
+/// hash the vocab content, so equal copies would dedupe too).
 fn mock_sched(engines: usize, slots: usize, depth: usize) -> Scheduler {
     let (vocab, model) = json_mock(512);
     Scheduler::start(

@@ -8,10 +8,13 @@ Orientation is inferred from the metric name: ``*_ms`` metrics are
 lower-is-better; everything else (``tok_s_*``, ``speedup``) is
 higher-is-better. Metrics present on only one side are reported but not
 gated, so a newly added bench seeds the baseline on the next refresh
-instead of breaking the build. The top-level ``meta`` section is
-documentation, not data.
+instead of breaking the build. A baseline metric missing from the fresh
+report fails: a bench silently stopped emitting. The top-level ``meta``
+section is documentation, not data.
 
-Only the Python standard library is used.
+Only the Python standard library is used. The comparison logic lives in
+:func:`compare` so ``test_bench_check.py`` can unit-test the gate that
+guards the merge queue.
 """
 
 import json
@@ -20,39 +23,49 @@ import sys
 THRESHOLD = 0.25
 
 
-def main() -> None:
-    if len(sys.argv) != 3:
-        sys.exit(f"usage: {sys.argv[0]} BASELINE.json FRESH.json")
-    with open(sys.argv[1]) as f:
-        base = json.load(f)
-    with open(sys.argv[2]) as f:
-        fresh = json.load(f)
+def is_number(x):
+    """A gateable metric value (bool is a JSON number to Python; exclude it)."""
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
 
+
+def sections(report):
+    """The data sections of a report: top-level dicts, minus ``meta``."""
+    return {
+        name: metrics
+        for name, metrics in report.items()
+        if name != "meta" and isinstance(metrics, dict)
+    }
+
+
+def compare(base, fresh, threshold=THRESHOLD):
+    """Diff ``fresh`` against ``base``; return (report_lines, failures).
+
+    ``failures`` is non-empty when a shared metric regressed past
+    ``threshold`` or a baseline metric vanished from the fresh report.
+    """
+    lines = []
     failures = []
-    for section, metrics in sorted(fresh.items()):
-        if section == "meta" or not isinstance(metrics, dict):
-            continue
-        base_section = base.get(section, {})
-        if not isinstance(base_section, dict):
-            base_section = {}
+    base_sections = sections(base)
+    for section, metrics in sorted(sections(fresh).items()):
+        base_section = base_sections.get(section, {})
         for name, value in sorted(metrics.items()):
             baseline = base_section.get(name)
-            if not isinstance(baseline, (int, float)) or not isinstance(value, (int, float)):
-                print(f"  {section}.{name} = {value} (no baseline - not gated)")
+            if not is_number(baseline) or not is_number(value):
+                lines.append(f"  {section}.{name} = {value} (no baseline - not gated)")
+                continue
+            if baseline <= 0:
+                lines.append(f"  {section}.{name}: baseline {baseline} unusable - not gated")
                 continue
             lower_is_better = name.endswith("_ms")
-            if baseline <= 0:
-                print(f"  {section}.{name}: baseline {baseline} unusable - not gated")
-                continue
             if lower_is_better:
-                regressed = value > baseline * (1 + THRESHOLD)
+                regressed = value > baseline * (1 + threshold)
                 delta = (value - baseline) / baseline
             else:
-                regressed = value < baseline * (1 - THRESHOLD)
+                regressed = value < baseline * (1 - threshold)
                 delta = (baseline - value) / baseline
             status = "REGRESSED" if regressed else "ok"
             arrow = "higher=worse" if lower_is_better else "lower=worse"
-            print(
+            lines.append(
                 f"  {section}.{name}: baseline {baseline:.2f} -> {value:.2f} "
                 f"[{arrow}] ({status})"
             )
@@ -65,19 +78,30 @@ def main() -> None:
     # A baseline metric missing from the fresh report means a bench
     # stopped emitting (or its emit_json write failed) — exactly the
     # silent rot this gate exists to catch, so it fails too.
-    for section, metrics in sorted(base.items()):
-        if section == "meta" or not isinstance(metrics, dict):
-            continue
-        fresh_section = fresh.get(section)
-        if not isinstance(fresh_section, dict):
-            fresh_section = {}
+    fresh_sections = sections(fresh)
+    for section, metrics in sorted(base_sections.items()):
+        fresh_section = fresh_sections.get(section, {})
         for name, baseline in sorted(metrics.items()):
-            if isinstance(baseline, (int, float)) and name not in fresh_section:
+            if is_number(baseline) and name not in fresh_section:
                 failures.append(
                     f"{section}.{name} is in the baseline but missing from the "
                     f"fresh report - did a bench stop emitting?"
                 )
 
+    return lines, failures
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} BASELINE.json FRESH.json")
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    lines, failures = compare(base, fresh)
+    for line in lines:
+        print(line)
     if failures:
         print(f"\nbench regression gate FAILED (threshold {THRESHOLD:.0%}):")
         for failure in failures:

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_check.py — the script gates the merge queue, so
+it does not get to ship untested itself.
+
+Run directly (``python3 .github/scripts/test_bench_check.py``) or via
+unittest discovery; stdlib only.
+"""
+
+import unittest
+
+from bench_check import THRESHOLD, compare
+
+
+def failures(base, fresh):
+    return compare(base, fresh)[1]
+
+
+class CompareTest(unittest.TestCase):
+    def test_within_threshold_passes(self):
+        base = {"s": {"tok_s_1": 100.0, "cold_boot_ms": 10.0}}
+        fresh = {"s": {"tok_s_1": 90.0, "cold_boot_ms": 12.0}}
+        self.assertEqual(failures(base, fresh), [])
+
+    def test_higher_is_better_regression_fails(self):
+        base = {"batch_step": {"speedup": 2.0}}
+        fresh = {"batch_step": {"speedup": 1.4}}  # -30% < -25%
+        fails = failures(base, fresh)
+        self.assertEqual(len(fails), 1)
+        self.assertIn("batch_step.speedup regressed", fails[0])
+
+    def test_lower_is_better_regression_fails(self):
+        base = {"warm_start": {"warm_boot_ms": 10.0}}
+        fresh = {"warm_start": {"warm_boot_ms": 14.0}}  # +40% > +25%
+        fails = failures(base, fresh)
+        self.assertEqual(len(fails), 1)
+        self.assertIn("warm_start.warm_boot_ms regressed", fails[0])
+
+    def test_improvement_passes_both_orientations(self):
+        base = {"s": {"speedup": 2.0, "warm_boot_ms": 10.0}}
+        fresh = {"s": {"speedup": 4.0, "warm_boot_ms": 2.0}}
+        self.assertEqual(failures(base, fresh), [])
+
+    def test_exactly_at_threshold_passes(self):
+        base = {"s": {"tok_s_1": 100.0}}
+        fresh = {"s": {"tok_s_1": 100.0 * (1 - THRESHOLD)}}
+        self.assertEqual(failures(base, fresh), [])
+
+    def test_new_metric_without_baseline_is_reported_not_gated(self):
+        base = {"shard_scaling": {"tok_s_1": 100.0}}
+        fresh = {
+            "shard_scaling": {"tok_s_1": 100.0},
+            "batch_step": {"speedup": 0.1},  # terrible, but unseeded
+        }
+        lines, fails = compare(base, fresh)
+        self.assertEqual(fails, [])
+        self.assertTrue(any("batch_step.speedup" in l and "not gated" in l for l in lines))
+
+    def test_baseline_metric_missing_from_fresh_fails(self):
+        base = {"batch_step": {"speedup": 2.0}}
+        fresh = {"batch_step": {}}
+        fails = failures(base, fresh)
+        self.assertEqual(len(fails), 1)
+        self.assertIn("stop emitting", fails[0])
+
+    def test_missing_section_fails_per_metric(self):
+        base = {"batch_step": {"speedup": 2.0, "tok_s_batched_8": 50.0}}
+        fresh = {"other": {"x": 1.0}}
+        self.assertEqual(len(failures(base, fresh)), 2)
+
+    def test_meta_section_is_ignored(self):
+        base = {"meta": {"host": 1.0}}
+        fresh = {"meta": {}}
+        self.assertEqual(failures(base, fresh), [])
+
+    def test_non_numeric_and_bool_values_not_gated(self):
+        base = {"s": {"name": "x", "flag": True, "tok_s_1": 100.0}}
+        fresh = {"s": {"name": "y", "flag": False, "tok_s_1": 100.0}}
+        self.assertEqual(failures(base, fresh), [])
+
+    def test_zero_or_negative_baseline_not_gated(self):
+        base = {"s": {"tok_s_1": 0.0, "speedup": -1.0}}
+        fresh = {"s": {"tok_s_1": 1.0, "speedup": 1.0}}
+        lines, fails = compare(base, fresh)
+        self.assertEqual(fails, [])
+        self.assertTrue(any("unusable" in l for l in lines))
+
+    def test_custom_threshold(self):
+        base = {"s": {"tok_s_1": 100.0}}
+        fresh = {"s": {"tok_s_1": 89.0}}
+        self.assertEqual(failures(base, fresh), [])  # default 25%
+        self.assertEqual(len(compare(base, fresh, threshold=0.10)[1]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

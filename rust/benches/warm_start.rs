@@ -10,7 +10,10 @@
 //!
 //! `cargo bench --bench warm_start` (env `DOMINO_BENCH_ITERS` overrides
 //! the repetition count; `DOMINO_BENCH_JSON` appends machine-readable
-//! results for the CI trend file).
+//! results for the CI trend file; `DOMINO_BENCH_WARM_RATIO` overrides
+//! the pass/fail speedup bar — the default 5× holds on idle hardware,
+//! but loaded CI runners time-slice the cold compile and the warm load
+//! differently, so the bench-smoke job relaxes it rather than flaking).
 
 use domino::constraint::{ArtifactStore, ConstraintSpec, EngineRegistry};
 use domino::tokenizer;
@@ -72,9 +75,11 @@ fn main() {
         &[("cold_boot_ms", cold_ms), ("warm_boot_ms", warm_ms), ("speedup", speedup)],
     );
 
-    let pass = speedup >= 5.0;
+    let bar: f64 =
+        std::env::var("DOMINO_BENCH_WARM_RATIO").ok().and_then(|s| s.parse().ok()).unwrap_or(5.0);
+    let pass = speedup >= bar;
     println!(
-        "\nwarm-start speedup: {speedup:.1}x (acceptance bar: >= 5x) — {}",
+        "\nwarm-start speedup: {speedup:.1}x (acceptance bar: >= {bar}x) — {}",
         if pass { "PASS" } else { "FAIL" }
     );
     if !pass {

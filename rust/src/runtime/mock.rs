@@ -8,18 +8,28 @@
 //! probability to corpus-typical token sequences), so misaligned
 //! constraining measurably degrades it just like a real LLM.
 
-use super::{LmFactory, LmSession};
+use super::{BatchLane, LaneRows, LmBackend, LmSession};
 use crate::tokenizer::Vocab;
 use crate::TokenId;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Shared trigram tables.
+/// Shared trigram tables, stored pre-normalized for the batched forward:
+/// the smoothed-unigram *base row* (identical for every context) is
+/// precomputed once at train time, in both probability and log space, and
+/// the bigram/trigram terms are kept as sparse, already-weighted
+/// contribution lists.
 pub struct MockModel {
     vocab_size: usize,
-    unigram: Vec<f32>,
-    bigram: HashMap<TokenId, HashMap<TokenId, f32>>,
-    trigram: HashMap<(TokenId, TokenId), HashMap<TokenId, f32>>,
+    /// Smoothed-unigram term of the interpolation, per token.
+    base_probs: Vec<f32>,
+    /// `ln(max(base_probs, 1e-9))` — the logits row of a context with no
+    /// n-gram matches; batched rows start as a copy of this.
+    base_logits: Vec<f32>,
+    /// Per-predecessor sparse contributions, pre-weighted `0.25·c/Σc`.
+    bigram: HashMap<TokenId, Vec<(TokenId, f32)>>,
+    /// Per-bigram sparse contributions, pre-weighted `0.70·c/Σc`.
+    trigram: HashMap<(TokenId, TokenId), Vec<(TokenId, f32)>>,
 }
 
 impl MockModel {
@@ -41,40 +51,89 @@ impl MockModel {
                 *trigram.entry((w[0], w[1])).or_default().entry(w[2]).or_insert(0.0) += 1.0;
             }
         }
-        Arc::new(MockModel { vocab_size: vocab.len(), unigram, bigram, trigram })
+        let n = vocab.len() as f32;
+        let uni_total: f32 = unigram.iter().sum::<f32>().max(1.0);
+        let base_probs: Vec<f32> =
+            unigram.iter().map(|&c| 0.05 * (c + 0.1) / (uni_total + 0.1 * n)).collect();
+        let base_logits: Vec<f32> = base_probs.iter().map(|&p| p.max(1e-9).ln()).collect();
+        let normalize = |m: HashMap<TokenId, f32>, weight: f32| -> Vec<(TokenId, f32)> {
+            let total: f32 = m.values().sum();
+            let mut v: Vec<(TokenId, f32)> =
+                m.into_iter().map(|(t, c)| (t, weight * c / total)).collect();
+            v.sort_unstable_by_key(|&(t, _)| t);
+            v
+        };
+        Arc::new(MockModel {
+            vocab_size: vocab.len(),
+            base_probs,
+            base_logits,
+            bigram: bigram.into_iter().map(|(k, m)| (k, normalize(m, 0.25))).collect(),
+            trigram: trigram.into_iter().map(|(k, m)| (k, normalize(m, 0.70))).collect(),
+        })
     }
 
-    /// Logits for the next token after `context` (interpolated trigram →
-    /// bigram → unigram → uniform smoothing).
-    pub fn next_logits(&self, context: &[TokenId]) -> Vec<f32> {
-        let n = self.vocab_size as f32;
-        let uni_total: f32 = self.unigram.iter().sum::<f32>().max(1.0);
-        let mut probs: Vec<f32> = self
-            .unigram
-            .iter()
-            .map(|&c| 0.05 * (c + 0.1) / (uni_total + 0.1 * n))
-            .collect();
+    /// Feed `context`'s sparse interpolation contributions to `add`,
+    /// bigram before trigram. Both logits paths apply contributions in
+    /// this exact order, so an index touched by both maps accumulates
+    /// bitwise-identically on either path.
+    fn sparse_contributions(&self, context: &[TokenId], mut add: impl FnMut(TokenId, f32)) {
         let last = context.last().copied().unwrap_or(crate::tokenizer::BOS_ID);
-        if let Some(m) = self.bigram.get(&last) {
-            let total: f32 = m.values().sum();
-            for (&t, &c) in m {
-                probs[t as usize] += 0.25 * c / total;
+        if let Some(v) = self.bigram.get(&last) {
+            for &(t, p) in v {
+                add(t, p);
             }
         }
-        if context.len() >= 1 {
+        if !context.is_empty() {
             let prev = if context.len() >= 2 {
                 context[context.len() - 2]
             } else {
                 crate::tokenizer::BOS_ID
             };
-            if let Some(m) = self.trigram.get(&(prev, last)) {
-                let total: f32 = m.values().sum();
-                for (&t, &c) in m {
-                    probs[t as usize] += 0.70 * c / total;
+            if let Some(v) = self.trigram.get(&(prev, last)) {
+                for &(t, p) in v {
+                    add(t, p);
                 }
             }
         }
+    }
+
+    /// Logits for the next token after `context` (interpolated trigram →
+    /// bigram → unigram → uniform smoothing).
+    ///
+    /// This is the *scalar* path: a full-row recompute (O(V) `ln`) per
+    /// call — deliberately the per-call cost a real backend pays for one
+    /// forward pass, so benches comparing per-slot stepping against the
+    /// batched path measure a realistic cost structure.
+    pub fn next_logits(&self, context: &[TokenId]) -> Vec<f32> {
+        let mut probs = self.base_probs.clone();
+        self.sparse_contributions(context, |t, p| probs[t as usize] += p);
         probs.iter().map(|&p| p.max(1e-9).ln()).collect()
+    }
+
+    /// One row of the batched forward: copy the precomputed base-logits
+    /// row, then recompute only the sparse indices this context touches —
+    /// O(V) memcpy + O(K) `ln` instead of the scalar path's O(V) `ln`,
+    /// with the base-row work shared across every lane of the batch.
+    ///
+    /// Bitwise-identical to [`MockModel::next_logits`] (same
+    /// contributions, same accumulation order, same float expressions);
+    /// the batched-vs-per-slot parity tests and the engine's
+    /// token-identical guarantee rely on that.
+    fn next_logits_row(&self, context: &[TokenId], touched: &mut Vec<(TokenId, f32)>) -> Vec<f32> {
+        let mut row = self.base_logits.clone();
+        touched.clear();
+        let base_probs = &self.base_probs;
+        self.sparse_contributions(context, |t, p| {
+            if let Some(entry) = touched.iter_mut().find(|e| e.0 == t) {
+                entry.1 += p;
+            } else {
+                touched.push((t, base_probs[t as usize] + p));
+            }
+        });
+        for &(t, acc) in touched.iter() {
+            row[t as usize] = acc.max(1e-9).ln();
+        }
+        row
     }
 }
 
@@ -118,20 +177,66 @@ impl LmSession for MockLm {
         self.context.truncate(self.context.len() - n);
         Ok(())
     }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
 }
 
-/// Factory over a shared mock model.
+/// Factory over a shared mock model. Its [`LmBackend::forward_batch`] is
+/// the true vectorized path — the per-batch base-row precomputation is
+/// shared across lanes — not a per-lane `append` loop, so benches
+/// comparing batched vs per-slot stepping measure real batching.
 pub struct MockFactory {
     pub model: Arc<MockModel>,
 }
 
-impl LmFactory for MockFactory {
+impl LmBackend for MockFactory {
     fn vocab_size(&self) -> usize {
         self.model.vocab_size
     }
 
     fn new_session(&self) -> crate::Result<Box<dyn LmSession>> {
         Ok(Box::new(MockLm::new(self.model.clone())))
+    }
+
+    /// Vectorized cross-lane forward: every lane backed by this factory's
+    /// own [`MockModel`] gets the shared-base-row fast path
+    /// ([`MockModel::next_logits_row`]); a lane this backend doesn't
+    /// recognize (wrapper sessions, other models) falls back to its own
+    /// `append`, so mixed batches stay correct lane-by-lane.
+    fn forward_batch(&self, lanes: &mut [BatchLane<'_>]) -> Vec<crate::Result<LaneRows>> {
+        // Scratch for the sparse indices of each row, reused across the
+        // whole batch (zero steady-state allocation besides the rows).
+        let mut touched: Vec<(TokenId, f32)> = Vec::new();
+        lanes
+            .iter_mut()
+            .map(|lane| {
+                let downcast = lane.session.as_any_mut().and_then(|a| a.downcast_mut::<MockLm>());
+                let vectorized = match downcast {
+                    Some(m) if Arc::ptr_eq(&m.model, &self.model) => {
+                        Some(if lane.scored {
+                            let mut rows = Vec::with_capacity(lane.tokens.len());
+                            for &t in &lane.tokens {
+                                m.context.push(t);
+                                rows.push(self.model.next_logits_row(&m.context, &mut touched));
+                            }
+                            rows
+                        } else {
+                            m.context.extend_from_slice(&lane.tokens);
+                            vec![self.model.next_logits_row(&m.context, &mut touched)]
+                        })
+                    }
+                    _ => None,
+                };
+                match vectorized {
+                    Some(rows) => Ok(rows),
+                    // Foreign session: sequential fallback for this lane.
+                    None if lane.scored => lane.session.append_scored(&lane.tokens),
+                    None => lane.session.append(&lane.tokens).map(|row| vec![row]),
+                }
+            })
+            .collect()
     }
 }
 
@@ -197,6 +302,69 @@ mod tests {
         let last = b.append(&ids).unwrap();
         assert_eq!(rows.last().unwrap(), &last);
         assert_eq!(rows.len(), ids.len());
+    }
+
+    #[test]
+    fn forward_batch_bitwise_matches_append() {
+        let (vocab, model) = json_mock(512);
+        let f = MockFactory { model: model.clone() };
+        let exts: Vec<Vec<TokenId>> = vec![
+            vocab.encode(b"{\"name\": "),
+            vocab.encode(b"{\"age\": 4"),
+            vocab.encode(b"{"),
+        ];
+        // Reference: the scalar per-session path (lane 1 scored).
+        let mut want = Vec::new();
+        for (i, ext) in exts.iter().enumerate() {
+            let mut s = MockLm::new(model.clone());
+            if i == 1 {
+                want.push(s.append_scored(ext).unwrap());
+            } else {
+                want.push(vec![s.append(ext).unwrap()]);
+            }
+        }
+        // One batched forward over all three lanes (mixed plain+scored).
+        let mut sessions: Vec<Box<dyn LmSession>> =
+            (0..exts.len()).map(|_| f.new_session().unwrap()).collect();
+        let mut lanes: Vec<BatchLane> = sessions
+            .iter_mut()
+            .zip(&exts)
+            .enumerate()
+            .map(|(i, (s, ext))| BatchLane {
+                session: s.as_mut(),
+                tokens: ext.clone(),
+                scored: i == 1,
+            })
+            .collect();
+        let got = f.forward_batch(&mut lanes);
+        drop(lanes);
+        for (g, w) in got.into_iter().zip(want) {
+            // Bitwise float equality: the vectorized fast path must agree
+            // exactly with the scalar path or batched decoding diverges.
+            assert_eq!(g.unwrap(), w);
+        }
+        for (s, ext) in sessions.iter().zip(&exts) {
+            assert_eq!(s.len(), ext.len(), "lane session must have advanced");
+        }
+    }
+
+    #[test]
+    fn forward_batch_foreign_model_falls_back() {
+        let (vocab, m1) = json_mock(512);
+        let (_v2, m2) = json_mock(512);
+        let f = MockFactory { model: m1 };
+        // A session over a different model instance: not vectorizable by
+        // this backend, must take the per-lane fallback and still answer
+        // from its own model.
+        let mut foreign = MockLm::new(m2.clone());
+        let ids = vocab.encode(b"{\"age\": 1");
+        let want = MockLm::new(m2).append(&ids).unwrap();
+        let mut lanes =
+            vec![BatchLane { session: &mut foreign, tokens: ids.clone(), scored: false }];
+        let got = f.forward_batch(&mut lanes);
+        drop(lanes);
+        assert_eq!(got[0].as_ref().unwrap()[0], want);
+        assert_eq!(foreign.len(), ids.len());
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //!
 //! [`LmSession`] is the contract every decoder, baseline, server slot and
 //! bench speaks: an append-only token context with per-step logits, chunk
-//! scoring (for speculative verification) and KV rollback.
+//! scoring (for speculative verification) and KV rollback. [`LmBackend`]
+//! sits above the sessions: it spawns them and runs the **batched
+//! cross-slot forward pass** ([`LmBackend::forward_batch`]) the engine
+//! issues once per tick, so a shard with N live slots pays one model
+//! call per tick instead of N.
 //!
 //! Implementations:
 //! * [`pjrt::PjrtLm`] — the real thing: loads the AOT-compiled JAX model
@@ -57,11 +61,72 @@ pub trait LmSession {
 
     /// Remove the last `n` tokens from the context.
     fn rollback(&mut self, n: usize) -> crate::Result<()>;
+
+    /// Concrete-type access for batched backends:
+    /// [`LmBackend::forward_batch`] downcasts the sessions it recognizes
+    /// to vectorize across them in one model call. A session the backend
+    /// does not own (wrappers, test fakes) returns `None` here and takes
+    /// the sequential per-lane fallback instead — correct, just unbatched.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
 }
 
-/// Factory for per-request sessions (the engine thread spawns one per
-/// slot).
-pub trait LmFactory {
-    fn vocab_size(&self) -> usize;
-    fn new_session(&self) -> crate::Result<Box<dyn LmSession>>;
+/// One slot's pending token extension within a batched forward pass —
+/// one lane of the batch the engine gathers per tick.
+pub struct BatchLane<'a> {
+    /// The slot's session; the forward pass appends `tokens` to it.
+    pub session: &'a mut dyn LmSession,
+    /// The tokens this lane appends this tick (a committed token for
+    /// plain decoding, a proposal chunk under speculation).
+    pub tokens: Vec<TokenId>,
+    /// `true` — return a logits row after *every* token (the batched
+    /// analogue of [`LmSession::append_scored`], used to verify
+    /// speculative proposals); `false` — only the row after the last.
+    pub scored: bool,
 }
+
+/// The logit rows one batch lane produced: a single row for a plain
+/// lane, one row per proposed token for a scored lane.
+pub type LaneRows = Vec<Vec<f32>>;
+
+/// The model backend: spawns per-request sessions and runs the batched
+/// cross-slot forward pass. (Formerly `LmFactory`; the alias remains for
+/// older call sites.)
+pub trait LmBackend {
+    fn vocab_size(&self) -> usize;
+
+    /// Spawn one session (the engine creates one per request slot).
+    fn new_session(&self) -> crate::Result<Box<dyn LmSession>>;
+
+    /// Advance every lane's session by its pending tokens and return the
+    /// per-lane logit rows. The engine calls this ONCE per decode tick —
+    /// plain lanes (`scored: false`, one token, one row) and speculative
+    /// lanes (`scored: true`, a proposal chunk, one row per token)
+    /// coexist in the same batch, so throughput scales with batch width
+    /// instead of slot count.
+    ///
+    /// Failures are per-lane: one session's error must not poison its
+    /// siblings (the engine fails only that slot and keeps stepping the
+    /// rest).
+    ///
+    /// The default implementation is the sequential per-lane fallback;
+    /// backends with a real vectorized path override it (the mock shares
+    /// the per-batch base-row work across lanes — see
+    /// [`mock::MockFactory`]).
+    fn forward_batch(&self, lanes: &mut [BatchLane<'_>]) -> Vec<crate::Result<LaneRows>> {
+        lanes
+            .iter_mut()
+            .map(|l| {
+                if l.scored {
+                    l.session.append_scored(&l.tokens)
+                } else {
+                    l.session.append(&l.tokens).map(|row| vec![row])
+                }
+            })
+            .collect()
+    }
+}
+
+/// Pre-batching name of [`LmBackend`], kept for older call sites.
+pub use self::LmBackend as LmFactory;

@@ -12,7 +12,7 @@
 //! Interchange is HLO *text* (see `python/compile/aot.py` and
 //! /opt/xla-example/README.md for why not serialized protos).
 
-use super::{LmFactory, LmSession};
+use super::{LmBackend, LmSession};
 use crate::TokenId;
 use anyhow::{bail, Context};
 use std::collections::HashMap;
@@ -334,14 +334,26 @@ impl LmSession for PjrtLm {
         self.len -= n;
         Ok(())
     }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
 }
 
 /// Factory for serving: one session per request slot.
+///
+/// `forward_batch` currently inherits the sequential per-lane fallback:
+/// the bundle's B=4 executable variants could serve a true cross-slot
+/// batch, but each `PjrtLm` owns a B=1 KV cache, so real batching here
+/// needs slot-pinned lanes inside one shared B-wide cache (the per-slot
+/// `kv_len` row already supports ragged lengths). The engine-side
+/// gather/finish pipeline and this trait boundary are exactly the shape
+/// that upgrade drops into.
 pub struct PjrtFactory {
     pub model: Arc<PjrtModel>,
 }
 
-impl LmFactory for PjrtFactory {
+impl LmBackend for PjrtFactory {
     fn vocab_size(&self) -> usize {
         self.model.config.vocab_size
     }

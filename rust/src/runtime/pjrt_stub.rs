@@ -7,7 +7,7 @@
 //! [`super::mock`]. Bundle *metadata* (config, tokenizer) still loads —
 //! that part is `xla`-free and lives in [`super::artifacts`].
 
-use super::{LmFactory, LmSession};
+use super::{LmBackend, LmSession};
 use crate::TokenId;
 use anyhow::bail;
 use std::path::Path;
@@ -93,14 +93,21 @@ impl LmSession for PjrtLm {
     fn rollback(&mut self, _n: usize) -> crate::Result<()> {
         bail!(NO_XLA)
     }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
 }
 
-/// Stub factory mirroring `pjrt::PjrtFactory`.
+/// Stub factory mirroring `pjrt::PjrtFactory`. Keeps the same
+/// [`LmBackend`] surface (including the inherited sequential
+/// `forward_batch` fallback) so batched-engine callers compile
+/// identically with and without the `xla` feature.
 pub struct PjrtFactory {
     pub model: Arc<PjrtModel>,
 }
 
-impl LmFactory for PjrtFactory {
+impl LmBackend for PjrtFactory {
     fn vocab_size(&self) -> usize {
         self.model.config.vocab_size
     }

@@ -5,7 +5,10 @@
 //! is a continuous batcher: every tick admits queued requests into free
 //! slots and steps every active slot by one decode iteration, so long
 //! requests don't block short ones (iteration-level scheduling, as in
-//! Orca/vLLM).
+//! Orca/vLLM). The tick itself is batched at the model-call boundary:
+//! `step_all` runs gather → ONE [`LmBackend::forward_batch`] → per-slot
+//! mask/sample/commit, so a shard with N live slots pays one model call
+//! per tick instead of N sequential `append`s.
 //!
 //! This module owns the *reusable pieces* of that loop — [`EngineCore`]
 //! with `admit` / `step_all` / `reap` — which the sharded
@@ -21,12 +24,12 @@
 
 use super::metrics::Metrics;
 use super::scheduler::{RequestHandle, Scheduler, SchedulerConfig};
-use super::slot::{DecodeMode, Slot, SlotStats, StreamEvent};
+use super::slot::{step_batched, DecodeMode, Slot, SlotStats, StreamEvent};
 use crate::constraint::{CachedChecker, EngineRegistry, MaskCache, StopChecker};
 use crate::domino::decoder::Lookahead;
 use crate::domino::{DominoDecoder, SpeculativeModel};
 use crate::runtime::sampler::Sampling;
-use crate::runtime::LmFactory;
+use crate::runtime::LmBackend;
 use crate::tokenizer::Vocab;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -104,7 +107,9 @@ impl GenResponse {
 /// Everything one engine shard owns; built by the init closure on the
 /// shard thread itself.
 pub struct EngineCtx {
-    pub factory: Box<dyn LmFactory>,
+    /// The model backend: spawns per-slot sessions and runs the batched
+    /// cross-slot forward pass `step_all` issues once per tick.
+    pub backend: Box<dyn LmBackend>,
     pub vocab: Arc<Vocab>,
     /// Compiled-engine cache shared across requests and engine shards
     /// (the scheduler hands every shard the same registry).
@@ -119,12 +124,12 @@ pub struct EngineCtx {
 }
 
 impl EngineCtx {
-    pub fn new(factory: Box<dyn LmFactory>, vocab: Arc<Vocab>) -> EngineCtx {
-        Self::with_registry(factory, vocab, EngineRegistry::new(DEFAULT_REGISTRY_CAPACITY))
+    pub fn new(backend: Box<dyn LmBackend>, vocab: Arc<Vocab>) -> EngineCtx {
+        Self::with_registry(backend, vocab, EngineRegistry::new(DEFAULT_REGISTRY_CAPACITY))
     }
 
     pub fn with_registry(
-        factory: Box<dyn LmFactory>,
+        backend: Box<dyn LmBackend>,
         vocab: Arc<Vocab>,
         registry: Arc<EngineRegistry>,
     ) -> EngineCtx {
@@ -140,7 +145,7 @@ impl EngineCtx {
                 s.warm_start_ms
             );
         }
-        EngineCtx { factory, vocab, registry, specs: HashMap::new() }
+        EngineCtx { backend, vocab, registry, specs: HashMap::new() }
     }
 
     fn spec_model(&mut self, fingerprint: u64) -> Arc<Mutex<SpeculativeModel>> {
@@ -162,8 +167,10 @@ impl EngineCtx {
     /// Resolve a request's constraint into a decode mode. Grammar-backed
     /// specs go through the registry (compile once, reuse forever) and
     /// their checkers share the engine's mask cache, so a warm-registry
-    /// request constructs no engine and often not even a mask.
-    fn build_mode(&mut self, c: &Constraint) -> crate::Result<DecodeMode> {
+    /// request constructs no engine and often not even a mask. Public so
+    /// benches and tests can build [`Slot`]s exactly the way admission
+    /// does.
+    pub fn decode_mode(&mut self, c: &Constraint) -> crate::Result<DecodeMode> {
         match &c.spec {
             ConstraintSpec::Unconstrained => Ok(DecodeMode::Unconstrained),
             ConstraintSpec::Stop { sequences } => Ok(DecodeMode::Opportunistic(Box::new(
@@ -339,8 +346,8 @@ impl EngineCore {
         let next_id = self.next_id;
         let ctx = &mut self.ctx;
         let admit = (|| -> crate::Result<Slot> {
-            let mode = ctx.build_mode(&req.constraint)?;
-            let session = ctx.factory.new_session()?;
+            let mode = ctx.decode_mode(&req.constraint)?;
+            let session = ctx.backend.new_session()?;
             let prompt = crate::domino::generate::Prompt::healed(&ctx.vocab, &req.prompt);
             let sampling = match req.temperature {
                 Some(t) => Sampling::Temperature(t),
@@ -379,12 +386,17 @@ impl EngineCore {
         }
     }
 
-    /// Step every active slot once (iteration-level scheduling), checking
-    /// cancellation and deadlines first so an abandoned request stops
-    /// burning engine ticks mid-decode instead of running to
-    /// `max_tokens`.
+    /// Step every active slot one decode tick with ONE batched forward
+    /// pass (gather → batched forward → per-slot mask/sample/commit; see
+    /// [`step_batched`]), checking cancellation and deadlines first so an
+    /// abandoned request stops burning engine ticks mid-decode instead of
+    /// running to `max_tokens`. Plain, speculative and deferred-row slots
+    /// share the tick's batch; a slot whose lane fails is answered and
+    /// retired without poisoning its siblings.
     pub fn step_all(&mut self) {
-        for a in self.active.iter_mut() {
+        // Phase 0: abort checks; collect the slots that step this tick.
+        let mut live: Vec<usize> = Vec::new();
+        for (i, a) in self.active.iter_mut().enumerate() {
             if a.slot.done {
                 continue;
             }
@@ -411,10 +423,41 @@ impl EngineCore {
                 });
                 continue;
             }
-            let before_tokens = a.slot.stats.tokens_out;
-            let before_calls = a.slot.stats.model_calls;
-            let t0 = Instant::now();
-            if let Err(e) = a.slot.step() {
+            live.push(i);
+        }
+        if live.is_empty() {
+            return;
+        }
+        let before: Vec<(usize, usize)> = live
+            .iter()
+            .map(|&i| (self.active[i].slot.stats.tokens_out, self.active[i].slot.stats.model_calls))
+            .collect();
+        // Phases 1–3: decide / gather+forward / finish, over the live
+        // slots (`live` is sorted, so one walk pairs them up).
+        let t0 = Instant::now();
+        let tick = {
+            let mut want = live.iter().copied().peekable();
+            let mut view: Vec<&mut Slot> = Vec::with_capacity(live.len());
+            for (i, a) in self.active.iter_mut().enumerate() {
+                if want.peek() == Some(&i) {
+                    want.next();
+                    view.push(&mut a.slot);
+                }
+            }
+            step_batched(self.ctx.backend.as_ref(), &mut view)
+        };
+        self.metrics.model_time += t0.elapsed();
+        if tick.lanes > 0 {
+            self.metrics.forward_batches += 1;
+            self.metrics.forward_rows += tick.rows as u64;
+            self.metrics.batch_size.record(tick.lanes as f64);
+        }
+        // Per-slot bookkeeping: answer failures, count fresh tokens.
+        for ((&i, result), &(before_tokens, before_calls)) in
+            live.iter().zip(&tick.results).zip(&before)
+        {
+            let a = &mut self.active[i];
+            if let Err(e) = result {
                 self.metrics.requests_failed += 1;
                 a.slot.done = true;
                 a.slot.finish_stream();
@@ -427,7 +470,6 @@ impl EngineCore {
                 });
                 continue;
             }
-            self.metrics.model_time += t0.elapsed();
             self.metrics.tokens_generated += (a.slot.stats.tokens_out - before_tokens) as u64;
             self.metrics.model_calls += (a.slot.stats.model_calls - before_calls) as u64;
             if a.first_token_at.is_none() && a.slot.stats.tokens_out > 0 {

@@ -90,6 +90,16 @@ pub struct Metrics {
     pub requests_shed: u64,
     pub tokens_generated: u64,
     pub model_calls: u64,
+    /// Batched cross-slot forward passes executed (one per engine tick
+    /// that had at least one lane).
+    pub forward_batches: u64,
+    /// Total logit rows produced by batched forward passes (a
+    /// speculative lane contributes one row per proposed token).
+    pub forward_rows: u64,
+    /// Lanes per batched forward pass — the batch-width histogram. A
+    /// mean near `slots_per_engine` means ticks run at full width; near
+    /// 1 means the shard is effectively stepping per-slot.
+    pub batch_size: Summary,
     pub interventions: u64,
     pub masks_computed: u64,
     pub spec_proposed: u64,
@@ -152,6 +162,9 @@ impl Metrics {
         self.requests_shed += other.requests_shed;
         self.tokens_generated += other.tokens_generated;
         self.model_calls += other.model_calls;
+        self.forward_batches += other.forward_batches;
+        self.forward_rows += other.forward_rows;
+        self.batch_size.merge(&other.batch_size);
         self.interventions += other.interventions;
         self.masks_computed += other.masks_computed;
         self.spec_proposed += other.spec_proposed;
@@ -180,6 +193,7 @@ impl Metrics {
         format!(
             "requests: {} ok / {} failed / {} cancelled / {} deadline / {} shed | \
              tokens: {} | model calls: {} | \
+             forward: {} batches / {} rows (mean width {:.1}) | \
              interventions: {} | masks: {} | spec: {}/{} accepted | \
              ttft p50 {:.1} ms | req tps mean {:.1} | \
              registry: {} hit / {} miss / {} evict / {} coalesced ({} ms compiling) | \
@@ -192,6 +206,9 @@ impl Metrics {
             self.requests_shed,
             self.tokens_generated,
             self.model_calls,
+            self.forward_batches,
+            self.forward_rows,
+            self.batch_size.mean(),
             self.interventions,
             self.masks_computed,
             self.spec_accepted,
@@ -268,6 +285,23 @@ mod tests {
         assert_eq!(a.ttft.count, 2);
         assert_eq!(a.ttft.min, 0.5);
         assert_eq!(a.ttft.max, 1.5);
+    }
+
+    #[test]
+    fn merge_sums_forward_counters_per_shard() {
+        // Forward passes are engine-loop work (each shard runs its own
+        // ticks), so they sum across shards — unlike the shared-registry
+        // counters.
+        let mut a = Metrics { forward_batches: 10, forward_rows: 40, ..Default::default() };
+        a.batch_size.record(4.0);
+        let mut b = Metrics { forward_batches: 5, forward_rows: 10, ..Default::default() };
+        b.batch_size.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.forward_batches, 15);
+        assert_eq!(a.forward_rows, 50);
+        assert_eq!(a.batch_size.count, 2);
+        assert_eq!((a.batch_size.min, a.batch_size.max), (2.0, 4.0));
+        assert!(a.report().contains("forward: 15 batches / 50 rows"));
     }
 
     #[test]

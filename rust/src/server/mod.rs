@@ -22,14 +22,19 @@
 //!   least-loaded spill, bounded per-shard queues with overload shedding,
 //!   per-request deadlines + cancellation, streaming submission, and
 //!   cross-shard metrics aggregation.
-//! * [`engine`] — one shard's core: admission, per-slot decode stepping
-//!   (opportunistic / full-mask / speculative §3.6), completion — the
-//!   reusable `admit`/`step_all`/`reap` pieces the scheduler drives. Also
-//!   the single-engine [`Server`](engine::Server) compatibility wrapper.
+//! * [`engine`] — one shard's core: admission, the batched decode tick
+//!   (gather every live slot's pending extension → ONE cross-slot
+//!   `forward_batch` → per-slot mask/sample/commit; opportunistic /
+//!   full-mask / speculative §3.6 slots share the batch), completion —
+//!   the reusable `admit`/`step_all`/`reap` pieces the scheduler drives.
+//!   Also the single-engine [`Server`](engine::Server) compatibility
+//!   wrapper.
 //! * [`slot`] — one in-flight request: LM session + checker + sampling
-//!   state; `step()` advances by one decode iteration (which commits
-//!   multiple tokens under speculation); supports mid-decode abort and a
-//!   per-step token sink for streaming.
+//!   state. A decode iteration is split at the model-call boundary
+//!   (`begin_step` / `take_lane` / `finish_step`) so the engine can
+//!   batch the forward pass across slots; `step()` recombines the halves
+//!   into the self-contained per-slot path. Supports mid-decode abort
+//!   and a per-step token sink for streaming.
 //! * [`metrics`] — counters + latency/throughput summaries, mergeable
 //!   across shards.
 //! * [`tcp`] — a JSONL-over-TCP front end (std::net, thread per
@@ -47,4 +52,4 @@ pub use engine::{
 };
 pub use metrics::Metrics;
 pub use scheduler::{CancelToken, RequestHandle, Scheduler, SchedulerConfig};
-pub use slot::{DecodeMode, StreamEvent};
+pub use slot::{step_batched, BatchTick, DecodeMode, Slot, StreamEvent};

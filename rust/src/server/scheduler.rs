@@ -375,10 +375,15 @@ impl Drop for Scheduler {
 
 /// One shard's loop: drain the channel, purge dead queued work, admit
 /// into free slots (FIFO, O(1) `VecDeque` pops), step every slot one
-/// decode iteration, retire finished slots. Blocks on the channel only
-/// when fully idle. On exit, the primary shard flushes its context's
-/// registry — the one that actually served engines, whether shared or
-/// built by the init closure — so warmed masks persist across restarts.
+/// decode tick, retire finished slots. The tick is batched at the
+/// model-call boundary — `step_all` gathers every live slot's pending
+/// extension into ONE `LmBackend::forward_batch` call (plain,
+/// speculative and deferred-correction slots in the same batch), so a
+/// shard's per-tick model cost is one batched call, not one `append` per
+/// slot. Blocks on the channel only when fully idle. On exit, the
+/// primary shard flushes its context's registry — the one that actually
+/// served engines, whether shared or built by the init closure — so
+/// warmed masks persist across restarts.
 fn shard_loop(
     core: EngineCore,
     rx: mpsc::Receiver<Job>,

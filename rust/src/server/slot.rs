@@ -1,11 +1,29 @@
 //! One in-flight request slot: decode state, per-step token streaming,
 //! and an abort path for cancellation/deadlines.
+//!
+//! A slot's decode iteration is split at the model-call boundary so the
+//! engine can batch the forward pass across slots (one
+//! [`LmBackend::forward_batch`] per tick instead of one `append` per
+//! slot):
+//!
+//! * [`Slot::begin_step`] — *decide*: mask/sample/commit against the
+//!   current logits (plain modes) or form a speculative proposal; leaves
+//!   the needed model call as a pending extension.
+//! * [`Slot::take_lane`] — *gather*: expose that extension as one lane
+//!   of the tick's batch.
+//! * [`Slot::finish_step`] — *finish*: consume the logit rows the
+//!   batched forward produced (assign the successor row, or verify the
+//!   proposal and commit its accepted prefix).
+//!
+//! [`step_batched`] drives one whole tick over a set of slots;
+//! [`Slot::step`] recombines the halves into the self-contained per-slot
+//! path (tests, benches, the batched path's parity reference).
 
 use crate::constraint::MaskCache;
 use crate::domino::generate::Prompt;
 use crate::domino::{Checker, DominoDecoder, SpeculativeModel, TokenMask};
 use crate::runtime::sampler::{decode, log_prob, Sampling};
-use crate::runtime::LmSession;
+use crate::runtime::{BatchLane, LmBackend, LmSession};
 use crate::tokenizer::{Vocab, EOS_ID};
 use crate::util::Rng;
 use crate::TokenId;
@@ -157,6 +175,16 @@ pub struct SlotStats {
     pub stopped: bool,
 }
 
+/// A model call this slot is waiting on (the decide half ran; the
+/// forward half hasn't).
+enum Pending {
+    /// Committed token(s) whose successor logits row hasn't arrived yet.
+    Row(Vec<TokenId>),
+    /// A speculative proposal awaiting per-token scored rows. Nothing is
+    /// committed until [`Slot::finish_step`] verifies the prefix.
+    Proposal(Vec<TokenId>),
+}
+
 /// A running request.
 pub struct Slot {
     pub id: u64,
@@ -169,6 +197,8 @@ pub struct Slot {
     pub out: Vec<TokenId>,
     pub stats: SlotStats,
     logits: Vec<f32>,
+    /// The forward pass this slot needs before it can decide again.
+    pending: Option<Pending>,
     pub done: bool,
     /// Aborted by cancellation or deadline (set via [`Slot::abort`]); the
     /// output is the partial text produced so far.
@@ -207,6 +237,7 @@ impl Slot {
             out: Vec::new(),
             stats,
             logits,
+            pending: None,
             done: false,
             aborted: false,
             stream: Stream::default(),
@@ -343,13 +374,15 @@ impl Slot {
         }
     }
 
-    /// Commit one chosen token (advance checker + LM).
-    fn commit(&mut self, chosen: TokenId) -> crate::Result<bool> {
+    /// Commit one chosen token (checker advance + output + stream). The
+    /// model-call half — fetching the successor logits — is left as the
+    /// pending extension for the tick's batched forward pass.
+    fn commit_choice(&mut self, chosen: TokenId) -> crate::Result<()> {
         self.stats.logprob_sum += log_prob(&self.logits, chosen);
         if chosen == EOS_ID {
             self.stats.stopped = true;
             self.done = true;
-            return Ok(true);
+            return Ok(());
         }
         if let Some(c) = self.mode.checker() {
             c.advance(chosen)?;
@@ -357,21 +390,26 @@ impl Slot {
         self.out.push(chosen);
         self.stats.tokens_out += 1;
         self.stream.emit_token(&self.vocab, chosen);
-        self.logits = self.session.append(&[chosen])?;
-        self.stats.model_calls += 1;
         if self.out.len() >= self.max_tokens {
             self.done = true;
-        }
-        Ok(self.done)
-    }
-
-    /// One decode iteration. Under speculation this may commit several
-    /// tokens (one chunked verify); otherwise exactly one.
-    pub fn step(&mut self) -> crate::Result<()> {
-        if self.done {
             return Ok(());
         }
-        // Speculative fast path.
+        self.pending = Some(Pending::Row(vec![chosen]));
+        Ok(())
+    }
+
+    /// The decide half of a decode iteration: choose and commit the next
+    /// token against the current logits (plain modes) or form a
+    /// speculative proposal — no model calls. The forward pass the slot
+    /// now needs is left pending for [`Slot::take_lane`] /
+    /// [`Slot::finish_step`]. No-op when the slot is done or already
+    /// awaiting a forward pass (e.g. a correction row deferred from the
+    /// previous tick's speculative verify).
+    pub fn begin_step(&mut self) -> crate::Result<()> {
+        if self.done || self.pending.is_some() {
+            return Ok(());
+        }
+        // Speculative fast path: propose a chunk for one scored verify.
         if let DecodeMode::Speculative { decoder, spec, s, masks, variant } = &mut self.mode {
             let proposal = {
                 let spec_guard = spec.lock().expect("spec lock");
@@ -379,74 +417,11 @@ impl Slot {
             };
             if !proposal.is_empty() {
                 self.stats.spec_proposed += proposal.len();
-                let rows = self.session.append_scored(&proposal)?;
-                self.stats.model_calls += 1;
-                let mut accepted = 0;
-                for (i, &p) in proposal.iter().enumerate() {
-                    let choice = decode(&self.logits, self.sampling, &mut self.rng);
-                    let choice = if decoder.check_token(choice) {
-                        choice
-                    } else {
-                        self.stats.interventions += 1;
-                        let mask = cached_mask(decoder, masks, *variant);
-                        self.stats.masks_computed += 1;
-                        if mask.is_empty() {
-                            break;
-                        }
-                        let mut masked = self.logits.clone();
-                        mask.apply(&mut masked);
-                        decode(&masked, self.sampling, &mut self.rng)
-                    };
-                    if choice == p {
-                        self.stats.logprob_sum += log_prob(&self.logits, p);
-                        {
-                            let mut spec_guard = spec.lock().expect("spec lock");
-                            if let Some(key) = decoder.state_key() {
-                                spec_guard.observe(key, p);
-                            }
-                        }
-                        decoder.advance(p)?;
-                        self.out.push(p);
-                        self.stats.tokens_out += 1;
-                        self.stream.emit_token(&self.vocab, p);
-                        self.stats.spec_accepted += 1;
-                        accepted += 1;
-                        self.logits = rows[i].clone();
-                        if self.out.len() >= self.max_tokens {
-                            self.session.rollback(proposal.len() - accepted)?;
-                            self.done = true;
-                            return Ok(());
-                        }
-                    } else {
-                        self.session.rollback(proposal.len() - accepted)?;
-                        self.stats.logprob_sum += log_prob(&self.logits, choice);
-                        if choice == EOS_ID {
-                            self.stats.stopped = true;
-                            self.done = true;
-                            return Ok(());
-                        }
-                        {
-                            let mut spec_guard = spec.lock().expect("spec lock");
-                            if let Some(key) = decoder.state_key() {
-                                spec_guard.observe(key, choice);
-                            }
-                        }
-                        decoder.advance(choice)?;
-                        self.out.push(choice);
-                        self.stats.tokens_out += 1;
-                        self.stream.emit_token(&self.vocab, choice);
-                        self.logits = self.session.append(&[choice])?;
-                        self.stats.model_calls += 1;
-                        if self.out.len() >= self.max_tokens {
-                            self.done = true;
-                        }
-                        return Ok(());
-                    }
-                }
+                self.pending = Some(Pending::Proposal(proposal));
                 return Ok(());
             }
-            // No confident proposal: fall through to a plain step, and
-            // teach the count model what the LLM chose.
+            // No confident proposal: plain step, and teach the count
+            // model what the LLM chose.
             let chosen = {
                 let proposal = decode(&self.logits, self.sampling, &mut self.rng);
                 if decoder.check_token(proposal) {
@@ -470,8 +445,7 @@ impl Slot {
                     spec_guard.observe(key, chosen);
                 }
             }
-            self.commit(chosen)?;
-            return Ok(());
+            return self.commit_choice(chosen);
         }
 
         // Plain modes.
@@ -485,12 +459,152 @@ impl Slot {
             full_mask,
         );
         match chosen {
-            Some(t) => {
-                self.commit(t)?;
-            }
+            Some(t) => self.commit_choice(t),
             None => {
                 self.done = true; // dead end
+                Ok(())
             }
+        }
+    }
+
+    /// The gather half: expose the pending extension as one lane of the
+    /// tick's batch, borrowing this slot's session. `None` when the slot
+    /// needs no forward pass this tick (done, dead end, or EOS).
+    pub fn take_lane(&mut self) -> Option<BatchLane<'_>> {
+        if self.done {
+            return None;
+        }
+        let (tokens, scored) = match &self.pending {
+            None => return None,
+            Some(Pending::Row(t)) => (t.clone(), false),
+            Some(Pending::Proposal(t)) => (t.clone(), true),
+        };
+        Some(BatchLane { session: self.session.as_mut(), tokens, scored })
+    }
+
+    /// The finish half: consume the logit rows the batched forward pass
+    /// produced for this slot's pending extension.
+    pub fn finish_step(&mut self, rows: Vec<Vec<f32>>) -> crate::Result<()> {
+        self.stats.model_calls += 1;
+        match self.pending.take() {
+            None => anyhow::bail!("finish_step without a pending forward"),
+            Some(Pending::Row(_)) => {
+                self.logits = rows
+                    .into_iter()
+                    .next_back()
+                    .ok_or_else(|| anyhow::anyhow!("batched forward returned no logits row"))?;
+                Ok(())
+            }
+            Some(Pending::Proposal(proposal)) => self.finish_speculative(proposal, rows),
+        }
+    }
+
+    /// Verify a speculative proposal against its scored rows (§3.6):
+    /// commit the accepted prefix; on the first disagreement roll the
+    /// session back and commit the corrected token, deferring its
+    /// successor row to the next tick's batch (one forward pass per slot
+    /// per tick).
+    fn finish_speculative(
+        &mut self,
+        proposal: Vec<TokenId>,
+        rows: Vec<Vec<f32>>,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(rows.len() == proposal.len(), "scored rows/proposal length mismatch");
+        let DecodeMode::Speculative { decoder, spec, masks, variant, .. } = &mut self.mode else {
+            anyhow::bail!("scored rows arrived for a non-speculative slot");
+        };
+        let mut accepted = 0;
+        for (i, &p) in proposal.iter().enumerate() {
+            let choice = decode(&self.logits, self.sampling, &mut self.rng);
+            let choice = if decoder.check_token(choice) {
+                choice
+            } else {
+                self.stats.interventions += 1;
+                let mask = cached_mask(decoder, masks, *variant);
+                self.stats.masks_computed += 1;
+                if mask.is_empty() {
+                    // Dead end mid-verify: drop the unaccepted proposal
+                    // suffix from the context and let the next decide
+                    // phase conclude the dead end.
+                    self.session.rollback(proposal.len() - accepted)?;
+                    break;
+                }
+                let mut masked = self.logits.clone();
+                mask.apply(&mut masked);
+                decode(&masked, self.sampling, &mut self.rng)
+            };
+            if choice == p {
+                self.stats.logprob_sum += log_prob(&self.logits, p);
+                {
+                    let mut spec_guard = spec.lock().expect("spec lock");
+                    if let Some(key) = decoder.state_key() {
+                        spec_guard.observe(key, p);
+                    }
+                }
+                decoder.advance(p)?;
+                self.out.push(p);
+                self.stats.tokens_out += 1;
+                self.stream.emit_token(&self.vocab, p);
+                self.stats.spec_accepted += 1;
+                accepted += 1;
+                self.logits = rows[i].clone();
+                if self.out.len() >= self.max_tokens {
+                    self.session.rollback(proposal.len() - accepted)?;
+                    self.done = true;
+                    return Ok(());
+                }
+            } else {
+                self.session.rollback(proposal.len() - accepted)?;
+                self.stats.logprob_sum += log_prob(&self.logits, choice);
+                if choice == EOS_ID {
+                    self.stats.stopped = true;
+                    self.done = true;
+                    return Ok(());
+                }
+                {
+                    let mut spec_guard = spec.lock().expect("spec lock");
+                    if let Some(key) = decoder.state_key() {
+                        spec_guard.observe(key, choice);
+                    }
+                }
+                decoder.advance(choice)?;
+                self.out.push(choice);
+                self.stats.tokens_out += 1;
+                self.stream.emit_token(&self.vocab, choice);
+                if self.out.len() >= self.max_tokens {
+                    self.done = true;
+                    return Ok(());
+                }
+                self.pending = Some(Pending::Row(vec![choice]));
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode iteration, self-contained (the per-slot path): decide,
+    /// run this slot's own forward pass, finish. Under speculation this
+    /// may commit several tokens (one chunked verify); otherwise exactly
+    /// one. The engine instead batches the forward half across slots —
+    /// [`step_batched`] — with token-identical behavior.
+    pub fn step(&mut self) -> crate::Result<()> {
+        if self.done {
+            return Ok(());
+        }
+        self.begin_step()?;
+        while !self.done {
+            let rows = match &self.pending {
+                None => break,
+                Some(Pending::Row(t)) => {
+                    let t = t.clone();
+                    vec![self.session.append(&t)?]
+                }
+                Some(Pending::Proposal(t)) => {
+                    let t = t.clone();
+                    self.session.append_scored(&t)?
+                }
+            };
+            self.finish_step(rows)?;
         }
         Ok(())
     }
@@ -506,4 +620,85 @@ impl Slot {
     pub fn current_mask(&mut self) -> Option<TokenMask> {
         self.mode.checker().map(|c| c.compute_mask())
     }
+}
+
+/// Outcome of one batched tick over a set of slots.
+pub struct BatchTick {
+    /// Per-slot results, index-aligned with the input slice. An `Err` is
+    /// that slot's failure only — sibling slots in the same batch are
+    /// unaffected and keep decoding.
+    pub results: Vec<crate::Result<()>>,
+    /// Slots that participated in the forward pass (the batch width).
+    pub lanes: usize,
+    /// Total logit rows the forward pass produced (a speculative lane
+    /// contributes one per proposed token).
+    pub rows: usize,
+}
+
+impl BatchTick {
+    /// Did every slot step cleanly?
+    pub fn all_ok(&self) -> bool {
+        self.results.iter().all(|r| r.is_ok())
+    }
+}
+
+/// Step a set of slots one decode tick with ONE batched forward pass:
+/// decide per slot (mask/sample/commit against its current logits),
+/// gather every pending extension into a single
+/// [`LmBackend::forward_batch`] call, then finish each slot against its
+/// returned rows. Plain slots, speculative slots mid-proposal and slots
+/// with deferred correction rows coexist in the same batch; failures are
+/// isolated per slot.
+pub fn step_batched(backend: &dyn LmBackend, slots: &mut [&mut Slot]) -> BatchTick {
+    let mut results: Vec<crate::Result<()>> = slots.iter().map(|_| Ok(())).collect();
+    // Decide: no model calls.
+    for (i, s) in slots.iter_mut().enumerate() {
+        if s.done {
+            continue;
+        }
+        if let Err(e) = s.begin_step() {
+            s.done = true;
+            results[i] = Err(e);
+        }
+    }
+    // Gather → one batched forward. The lanes borrow the slots' sessions;
+    // the returned rows are owned, so the borrow ends before finish.
+    let mut lane_idx: Vec<usize> = Vec::new();
+    let lane_rows = {
+        let mut lanes: Vec<BatchLane<'_>> = Vec::new();
+        for (i, s) in slots.iter_mut().enumerate() {
+            if results[i].is_err() {
+                continue;
+            }
+            if let Some(lane) = s.take_lane() {
+                lane_idx.push(i);
+                lanes.push(lane);
+            }
+        }
+        if lanes.is_empty() {
+            Vec::new()
+        } else {
+            backend.forward_batch(&mut lanes)
+        }
+    };
+    let lanes = lane_idx.len();
+    let answered = lane_rows.len();
+    let rows = lane_rows.iter().map(|r| r.as_ref().map_or(0, Vec::len)).sum();
+    // Finish: route each lane's rows back to its slot. A backend that
+    // breaks the one-result-per-lane contract fails the unanswered slots
+    // outright — their sessions may already have advanced, so leaving
+    // them silently pending would re-append the same tokens next tick.
+    let mut lane_results = lane_rows.into_iter();
+    for i in lane_idx {
+        let r = match lane_results.next() {
+            Some(Ok(rows)) => slots[i].finish_step(rows),
+            Some(Err(e)) => Err(e),
+            None => Err(anyhow::anyhow!("forward_batch answered {answered} of {lanes} lanes")),
+        };
+        if let Err(e) = r {
+            slots[i].done = true;
+            results[i] = Err(e);
+        }
+    }
+    BatchTick { results, lanes, rows }
 }

@@ -190,6 +190,10 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("requests_shed", Json::Num(m.requests_shed as f64)),
         ("tokens_generated", Json::Num(m.tokens_generated as f64)),
         ("model_calls", Json::Num(m.model_calls as f64)),
+        ("forward_batches", Json::Num(m.forward_batches as f64)),
+        ("forward_rows", Json::Num(m.forward_rows as f64)),
+        ("batch_size_mean", num_or_null(m.batch_size.mean())),
+        ("batch_size_p50", num_or_null(m.batch_size.percentile(0.5))),
         ("interventions", Json::Num(m.interventions as f64)),
         ("masks_computed", Json::Num(m.masks_computed as f64)),
         ("spec_proposed", Json::Num(m.spec_proposed as f64)),
@@ -469,10 +473,20 @@ mod tests {
         assert_eq!(v.get("token").unwrap().as_str().unwrap(), "ab");
         assert_eq!(v.get("index").unwrap().as_f64().unwrap(), 3.0);
 
-        let m = Metrics { artifact_hits: 2, warm_start_ms: 12, ..Default::default() };
+        let mut m = Metrics {
+            artifact_hits: 2,
+            warm_start_ms: 12,
+            forward_batches: 3,
+            forward_rows: 9,
+            ..Default::default()
+        };
+        m.batch_size.record(3.0);
         let line = format_stats(&m, 4);
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("engines").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(v.get("forward_batches").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("forward_rows").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(v.get("batch_size_mean").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(v.get("requests_shed").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(v.get("artifact_hits").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(v.get("artifact_invalid").unwrap().as_f64().unwrap(), 0.0);

@@ -160,7 +160,7 @@ fn template_as_grammar_runs_under_domino() {
     assert!(v.get("name").is_some() && v.get("age").is_some() && v.get("occupation").is_some());
     // Unlike the template executor, every token is model-chosen: the
     // decoder can intervene, but never injects externally-tokenized text.
-    assert!(r.tokens.len() > 0);
+    assert!(!r.tokens.is_empty());
 }
 
 #[test]

@@ -1,0 +1,244 @@
+//! Batched cross-slot stepping: token parity with the per-slot path
+//! (plain, speculative, healing-phase slots in one batch), degenerate
+//! single-slot batches, and per-slot failure isolation.
+
+use domino::constraint::{Constraint, ConstraintSpec};
+use domino::domino::generate::Prompt;
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::runtime::sampler::Sampling;
+use domino::runtime::{LmBackend, LmSession};
+use domino::server::engine::{EngineCtx, GenRequest, Server};
+use domino::server::slot::{step_batched, Slot};
+use domino::tokenizer::Vocab;
+use domino::TokenId;
+use std::sync::Arc;
+
+const MAX_TOKENS: usize = 24;
+
+fn mixed_shapes() -> Vec<(Constraint, &'static str)> {
+    let json = ConstraintSpec::builtin("json");
+    vec![
+        // Plain grammar-constrained.
+        (Constraint::domino(json.clone()), ""),
+        // Speculative mid-proposal.
+        (Constraint::domino(json.clone()).with_speculation(8), ""),
+        // Healing phase: the prompt ends mid-token, so admission forces a
+        // byte prefix and the slot starts with an output overhang.
+        (Constraint::domino(json.clone()).with_speculation(8), "{\"na"),
+        // Full-mask variant.
+        (Constraint::domino(json).with_full_mask(), ""),
+        // Unconstrained.
+        (Constraint::none(), ""),
+    ]
+}
+
+fn make_slots(ctx: &mut EngineCtx, shapes: &[(Constraint, &'static str)], n: usize) -> Vec<Slot> {
+    (0..n)
+        .map(|i| {
+            let (constraint, prompt) = &shapes[i % shapes.len()];
+            let mode = ctx.decode_mode(constraint).unwrap();
+            let session = ctx.backend.new_session().unwrap();
+            let prompt = Prompt::healed(&ctx.vocab, prompt);
+            Slot::new(
+                i as u64,
+                session,
+                mode,
+                ctx.vocab.clone(),
+                &prompt,
+                Sampling::Temperature(1.0),
+                MAX_TOKENS,
+                i as u64,
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+fn run_per_slot(slots: &mut [Slot]) {
+    while slots.iter().any(|s| !s.done) {
+        for s in slots.iter_mut() {
+            s.step().unwrap();
+        }
+    }
+}
+
+fn run_batched(backend: &dyn LmBackend, slots: &mut [Slot]) {
+    while slots.iter().any(|s| !s.done) {
+        let mut view: Vec<&mut Slot> = slots.iter_mut().collect();
+        let tick = step_batched(backend, &mut view);
+        for r in &tick.results {
+            assert!(r.is_ok(), "unexpected slot failure: {:?}", r.as_ref().err());
+        }
+    }
+}
+
+#[test]
+fn mixed_batch_token_identical_to_per_slot() {
+    let (vocab, model) = json_mock(512);
+    let mut ctx = EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab);
+    let shapes = mixed_shapes();
+    let mut a = make_slots(&mut ctx, &shapes, 8);
+    let mut b = make_slots(&mut ctx, &shapes, 8);
+    run_per_slot(&mut a);
+    run_batched(&MockFactory { model }, &mut b);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.text(), y.text(), "slot {i} diverged");
+        assert_eq!(x.out, y.out, "slot {i} token ids diverged");
+        assert_eq!(x.stats.tokens_out, y.stats.tokens_out, "slot {i} token counts diverged");
+        // NOTE: model_calls is deliberately NOT compared for the mixed
+        // batch — speculative proposal lengths depend on the shared
+        // prior's observation order, which the two interleavings visit
+        // differently; the committed token stream is invariant to it.
+    }
+}
+
+#[test]
+fn single_slot_degenerate_batch_matches_step() {
+    let (vocab, model) = json_mock(512);
+    let mut ctx = EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab);
+    let shapes = [(Constraint::domino(ConstraintSpec::builtin("json")), "")];
+    let mut a = make_slots(&mut ctx, &shapes, 1);
+    let mut b = make_slots(&mut ctx, &shapes, 1);
+    run_per_slot(&mut a);
+    run_batched(&MockFactory { model }, &mut b);
+    assert_eq!(a[0].text(), b[0].text());
+    assert!(!b[0].text().is_empty(), "degenerate batch must still decode");
+    // Plain (non-speculative) decoding pays exactly one forward
+    // participation per committed step on either path.
+    assert_eq!(a[0].stats.model_calls, b[0].stats.model_calls);
+}
+
+/// An LM session that errors after `fail_after` forward passes. No
+/// `as_any_mut` override, so the batched backend routes it through the
+/// sequential per-lane fallback — exactly what a foreign session gets.
+struct FailingSession {
+    inner: Box<dyn LmSession>,
+    calls: usize,
+    fail_after: usize,
+}
+
+impl LmSession for FailingSession {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn append(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<f32>> {
+        self.calls += 1;
+        anyhow::ensure!(self.calls <= self.fail_after, "injected model failure");
+        self.inner.append(tokens)
+    }
+
+    fn append_scored(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<Vec<f32>>> {
+        self.calls += 1;
+        anyhow::ensure!(self.calls <= self.fail_after, "injected model failure");
+        self.inner.append_scored(tokens)
+    }
+
+    fn rollback(&mut self, n: usize) -> domino::Result<()> {
+        self.inner.rollback(n)
+    }
+}
+
+#[test]
+fn mid_batch_slot_error_does_not_poison_siblings() {
+    let (vocab, model) = json_mock(512);
+    let backend = MockFactory { model: model.clone() };
+    let mut ctx = EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab.clone());
+    let shapes = [(Constraint::domino(ConstraintSpec::builtin("json")), "")];
+    // Reference: three healthy slots, batched, no failure injected.
+    let mut want = make_slots(&mut ctx, &shapes, 3);
+    run_batched(&backend, &mut want);
+
+    // Same three healthy slots + one slot whose session dies mid-decode.
+    let mut slots = make_slots(&mut ctx, &shapes, 3);
+    let failing_mode = ctx.decode_mode(&shapes[0].0).unwrap();
+    let failing_session = Box::new(FailingSession {
+        inner: ctx.backend.new_session().unwrap(),
+        calls: 0,
+        fail_after: 4,
+    });
+    let prompt = Prompt::healed(&vocab, "");
+    slots.push(
+        Slot::new(
+            99,
+            failing_session,
+            failing_mode,
+            vocab,
+            &prompt,
+            Sampling::Temperature(1.0),
+            MAX_TOKENS,
+            99,
+        )
+        .unwrap(),
+    );
+
+    let mut failed = false;
+    for _ in 0..(MAX_TOKENS * 4) {
+        if slots.iter().all(|s| s.done) {
+            break;
+        }
+        let mut view: Vec<&mut Slot> = slots.iter_mut().collect();
+        let tick = step_batched(&backend, &mut view);
+        for (i, r) in tick.results.iter().enumerate() {
+            if let Err(e) = r {
+                assert_eq!(i, 3, "only the failing slot may error");
+                assert!(format!("{e:#}").contains("injected model failure"), "{e:#}");
+                failed = true;
+            }
+        }
+    }
+    assert!(failed, "the injected failure must surface");
+    assert!(slots[3].done, "failing slot must be retired");
+    // Siblings decode to completion with output identical to the
+    // failure-free run: the dead lane never poisons the batch.
+    for (i, (got, ref_slot)) in slots.iter().take(3).zip(&want).enumerate() {
+        assert!(got.done, "sibling {i} must finish");
+        assert_eq!(got.text(), ref_slot.text(), "sibling {i} output changed");
+        assert!(!got.text().is_empty(), "sibling {i} must produce output");
+    }
+}
+
+#[test]
+fn server_batched_output_matches_manual_per_slot() {
+    let (vocab, model) = json_mock(512);
+    // Manual per-slot reference with the same request parameters the
+    // server maps at admission (healed prompt, temperature, seed).
+    let mut ctx = EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab.clone());
+    let shapes = mixed_shapes();
+    let mut reference = make_slots(&mut ctx, &shapes, 5);
+    run_per_slot(&mut reference);
+
+    let server = {
+        let vocab: Arc<Vocab> = vocab.clone();
+        let model = model.clone();
+        Server::start(move || Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab)), 8)
+    };
+    let handles: Vec<_> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, (constraint, prompt))| {
+            server.submit(GenRequest {
+                prompt: (*prompt).to_string(),
+                constraint: constraint.clone(),
+                max_tokens: MAX_TOKENS,
+                temperature: Some(1.0),
+                seed: i as u64,
+                ..Default::default()
+            })
+        })
+        .collect();
+    for (i, (h, want)) in handles.into_iter().zip(&reference).enumerate() {
+        let resp = h.recv().unwrap();
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+        assert_eq!(resp.text, want.text(), "request {i} diverged from per-slot path");
+    }
+    let m = server.metrics().unwrap();
+    assert!(m.forward_batches > 0, "engine must run batched forward passes");
+    assert!(m.forward_rows >= m.forward_batches, "each batch forwards at least one lane");
+    assert!(m.batch_size.count > 0, "batch width histogram must record");
+    server.shutdown();
+}

@@ -84,6 +84,39 @@ class CompareTest(unittest.TestCase):
         self.assertEqual(fails, [])
         self.assertTrue(any("unusable" in l for l in lines))
 
+    def test_schema_compile_section_orientation(self):
+        # The schema_compile section mixes both orientations: *_ms
+        # metrics gate upward moves, speedup gates downward moves.
+        base = {
+            "schema_compile": {
+                "schema_to_cfg_ms": 50.0,
+                "cold_compile_ms": 20000.0,
+                "warm_hit_ms": 1.0,
+                "speedup": 50.0,
+            }
+        }
+        good = {
+            "schema_compile": {
+                "schema_to_cfg_ms": 40.0,
+                "cold_compile_ms": 18000.0,
+                "warm_hit_ms": 0.5,
+                "speedup": 60.0,
+            }
+        }
+        self.assertEqual(failures(base, good), [])
+        bad = {
+            "schema_compile": {
+                "schema_to_cfg_ms": 100.0,  # +100% (lower is better)
+                "cold_compile_ms": 20000.0,
+                "warm_hit_ms": 1.0,
+                "speedup": 10.0,  # -80% (higher is better)
+            }
+        }
+        fails = failures(base, bad)
+        self.assertEqual(len(fails), 2)
+        self.assertTrue(any("schema_compile.schema_to_cfg_ms" in f for f in fails))
+        self.assertTrue(any("schema_compile.speedup" in f for f in fails))
+
     def test_custom_threshold(self):
         base = {"s": {"tok_s_1": 100.0}}
         fresh = {"s": {"tok_s_1": 89.0}}

@@ -1,0 +1,95 @@
+//! Schema-constraint compile bench: cold compile vs warm registry hit
+//! for a realistic function-calling JSON Schema.
+//!
+//! "Cold" is the full front-end + engine build a fresh schema pays once:
+//! schema parse → normalize → CFG emit → scanner DFAs → subterminal
+//! trees. "Warm" is what every later request with the same schema (any
+//! spelling — the fingerprint is canonical) pays: one registry hash
+//! probe. The bench also isolates the new front-end's own cost
+//! (schema → CFG) so regressions in the compiler are attributable.
+//!
+//! `cargo bench --bench schema_compile`; env `DOMINO_BENCH_ITERS`
+//! overrides the repetition count, `DOMINO_BENCH_JSON` appends the
+//! `schema_compile` section for the CI trend file, and
+//! `DOMINO_BENCH_SCHEMA_RATIO` overrides the warm-vs-cold speedup bar
+//! (default 25× — a hash probe vs a grammar compile; generous enough
+//! for loaded CI runners).
+
+use domino::constraint::{ConstraintSpec, EngineRegistry};
+use domino::eval::workload::FUNCTION_CALL_SCHEMA;
+use domino::tokenizer;
+use domino::util::bench::{emit_json, time_it, Table};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let iters: u32 =
+        std::env::var("DOMINO_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(3).max(1);
+    let vocab = Arc::new(tokenizer::bpe::synthetic_json_vocab(512));
+    let spec = ConstraintSpec::json_schema(FUNCTION_CALL_SCHEMA);
+    println!(
+        "== schema-compile: function-calling schema, vocab {}, best of {iters} ==\n",
+        vocab.len()
+    );
+
+    // Front-end alone: schema source → CFG (parse + normalize + emit).
+    let front = time_it(1, iters.max(10), || {
+        std::hint::black_box(spec.to_cfg().expect("schema compiles"));
+    });
+    let schema_to_cfg_ms = front.min.as_secs_f64() * 1e3;
+
+    // Cold: fresh registry per iteration — the full engine build.
+    let mut cold_ms = f64::MAX;
+    for _ in 0..iters {
+        let reg = EngineRegistry::new(4);
+        let t0 = Instant::now();
+        reg.get_or_compile(&spec, &vocab, None).unwrap();
+        cold_ms = cold_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // Warm: one registry, many hits — also proves (via counters) that a
+    // reordered spelling of the same schema is the same cache entry.
+    let reg = EngineRegistry::new(4);
+    reg.get_or_compile(&spec, &vocab, None).unwrap();
+    let reordered = ConstraintSpec::json_schema(
+        domino::util::Json::parse(FUNCTION_CALL_SCHEMA).unwrap().to_string(),
+    );
+    let hits = 1000u32;
+    let warm = time_it(10, hits, || {
+        std::hint::black_box(reg.get_or_compile(&reordered, &vocab, None).unwrap());
+    });
+    let warm_hit_ms = warm.mean.as_secs_f64() * 1e3;
+    let s = reg.stats();
+    assert_eq!(s.misses, 1, "every warm lookup must hit the one compiled entry: {s:?}");
+    assert!(s.hits >= hits as u64, "{s:?}");
+
+    let speedup = cold_ms / warm_hit_ms.max(1e-9);
+    let mut table = Table::new(&["stage", "time (ms)", "vs cold"]);
+    table.row(&["schema → CFG (front-end)".into(), format!("{schema_to_cfg_ms:.3}"), "".into()]);
+    table.row(&["cold compile (full engine)".into(), format!("{cold_ms:.2}"), "1.00x".into()]);
+    table.row(&["warm registry hit".into(), format!("{warm_hit_ms:.4}"), format!("{speedup:.0}x")]);
+    table.print();
+
+    emit_json(
+        "schema_compile",
+        &[
+            ("schema_to_cfg_ms", schema_to_cfg_ms),
+            ("cold_compile_ms", cold_ms),
+            ("warm_hit_ms", warm_hit_ms),
+            ("speedup", speedup),
+        ],
+    );
+
+    let bar: f64 = std::env::var("DOMINO_BENCH_SCHEMA_RATIO")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(25.0);
+    let pass = speedup >= bar;
+    println!(
+        "\nwarm-hit speedup: {speedup:.0}x (acceptance bar: >= {bar}x) — {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -7,8 +7,11 @@
 //! shareable values instead of stringly-typed request fields:
 //!
 //! * [`ConstraintSpec`] — *what* constrains the output: a builtin grammar
-//!   by name, inline EBNF, a regex, stop sequences, or nothing. Specs
-//!   normalize and hash to a stable 64-bit fingerprint — the cache key.
+//!   by name, inline EBNF, a JSON Schema, a regex, stop sequences, or
+//!   nothing. Specs normalize and hash to a stable 64-bit fingerprint —
+//!   the cache key. (Schema sources canonicalize through
+//!   [`grammar::jsonschema`](crate::grammar::jsonschema), so key order
+//!   and whitespace differences dedupe.)
 //! * [`EngineRegistry`] (in [`registry`]) — a concurrent, content-hash-
 //!   keyed cache of compiled engines with size-bounded LRU eviction and
 //!   build deduplication: concurrent requests for the same grammar
@@ -42,7 +45,7 @@ pub use mask_cache::{CachedChecker, MaskCache, MaskCacheStats};
 pub use registry::{EngineRegistry, RegistryStats};
 pub use stop::StopChecker;
 
-use crate::grammar::{builtin, parse_ebnf, Cfg, CfgBuilder, Symbol};
+use crate::grammar::{builtin, jsonschema, parse_ebnf, Cfg, CfgBuilder, Symbol};
 use anyhow::{bail, Context};
 
 /// What a generation request is constrained by. Hashable/normalizable so
@@ -57,6 +60,11 @@ pub enum ConstraintSpec {
     Builtin { name: String },
     /// Inline EBNF in the crate's grammar notation (see [`parse_ebnf`]).
     Ebnf { source: String },
+    /// A JSON Schema document (source text), compiled through
+    /// [`grammar::jsonschema`](crate::grammar::jsonschema). Unsupported
+    /// keywords fail compilation with a path-annotated error — a schema
+    /// never silently weakens into a looser constraint.
+    JsonSchema { source: String },
     /// Output must be exactly one match of this regex (the crate's
     /// dialect, compiled to a single-terminal grammar).
     Regex { pattern: String },
@@ -84,6 +92,20 @@ impl ConstraintSpec {
         ConstraintSpec::Ebnf { source: source.into() }
     }
 
+    /// A JSON Schema constraint. The source is canonicalized eagerly
+    /// (sorted keys, no insignificant whitespace) so the repeated
+    /// `fingerprint()` calls on the serving path (shard routing, registry
+    /// keying) re-parse only the compact canonical text, and differently
+    /// spelled copies of one schema are byte-equal from the start.
+    /// Unparseable sources are kept verbatim — `to_cfg` reports the real
+    /// error when compilation is attempted.
+    pub fn json_schema(source: impl Into<String>) -> ConstraintSpec {
+        let source = source.into();
+        let source =
+            crate::grammar::jsonschema::canonical_source(&source).unwrap_or(source);
+        ConstraintSpec::JsonSchema { source }
+    }
+
     pub fn regex(pattern: impl Into<String>) -> ConstraintSpec {
         ConstraintSpec::Regex { pattern: pattern.into() }
     }
@@ -93,8 +115,11 @@ impl ConstraintSpec {
     }
 
     /// Canonical form: builtin names are trimmed + lowercased, EBNF
-    /// sources and regex patterns are trimmed. Two specs with equal
-    /// normalized forms share one compiled engine.
+    /// sources and regex patterns are trimmed, and JSON Schema sources
+    /// canonicalize structurally (sorted keys, no insignificant
+    /// whitespace) so two spellings of the same schema share one
+    /// compiled engine. Two specs with equal normalized forms share one
+    /// compiled engine.
     pub fn normalized(&self) -> ConstraintSpec {
         match self {
             ConstraintSpec::Unconstrained => ConstraintSpec::Unconstrained,
@@ -104,6 +129,12 @@ impl ConstraintSpec {
             ConstraintSpec::Ebnf { source } => {
                 ConstraintSpec::Ebnf { source: source.trim().to_string() }
             }
+            ConstraintSpec::JsonSchema { source } => ConstraintSpec::JsonSchema {
+                // Unparseable sources normalize textually; `to_cfg`
+                // reports the real error when compilation is attempted.
+                source: crate::grammar::jsonschema::canonical_source(source)
+                    .unwrap_or_else(|_| source.trim().to_string()),
+            },
             ConstraintSpec::Regex { pattern } => {
                 ConstraintSpec::Regex { pattern: pattern.trim().to_string() }
             }
@@ -119,6 +150,7 @@ impl ConstraintSpec {
             self,
             ConstraintSpec::Builtin { .. }
                 | ConstraintSpec::Ebnf { .. }
+                | ConstraintSpec::JsonSchema { .. }
                 | ConstraintSpec::Regex { .. }
         )
     }
@@ -153,6 +185,10 @@ impl ConstraintSpec {
                     field(&mut h, s.as_bytes());
                 }
             }
+            ConstraintSpec::JsonSchema { source } => {
+                fnv1a(&mut h, &[5]);
+                field(&mut h, source.as_bytes());
+            }
         }
         h
     }
@@ -186,6 +222,9 @@ impl ConstraintSpec {
             ConstraintSpec::Unconstrained => "unconstrained".to_string(),
             ConstraintSpec::Builtin { name } => format!("builtin:{name}"),
             ConstraintSpec::Ebnf { .. } => format!("ebnf:{:016x}", self.fingerprint()),
+            ConstraintSpec::JsonSchema { .. } => {
+                format!("jsonschema:{:016x}", self.fingerprint())
+            }
             ConstraintSpec::Regex { pattern } => {
                 let mut p: String = pattern.chars().take(32).collect();
                 if p.len() < pattern.len() {
@@ -205,10 +244,17 @@ impl ConstraintSpec {
             ConstraintSpec::Unconstrained | ConstraintSpec::Stop { .. } => {
                 bail!("constraint {:?} is not grammar-backed", self)
             }
-            ConstraintSpec::Builtin { name } => builtin::by_name(&name)
-                .with_context(|| format!("unknown builtin grammar `{name}`")),
+            ConstraintSpec::Builtin { name } => builtin::by_name(&name).with_context(|| {
+                format!(
+                    "unknown builtin grammar `{name}` (known: {})",
+                    builtin::GRAMMAR_NAMES.join(", ")
+                )
+            }),
             ConstraintSpec::Ebnf { source } => {
                 parse_ebnf(&source).context("parsing inline EBNF constraint")
+            }
+            ConstraintSpec::JsonSchema { source } => {
+                jsonschema::compile(&source).context("compiling JSON Schema constraint")
             }
             ConstraintSpec::Regex { pattern } => regex_cfg(&pattern),
         }
@@ -366,8 +412,12 @@ mod tests {
     #[test]
     fn fingerprint_separates_variants_and_fields() {
         // Same payload, different constraint kind → different key.
-        let payloads =
-            [ConstraintSpec::ebnf("x"), ConstraintSpec::regex("x"), ConstraintSpec::builtin("x")];
+        let payloads = [
+            ConstraintSpec::ebnf("x"),
+            ConstraintSpec::regex("x"),
+            ConstraintSpec::builtin("x"),
+            ConstraintSpec::json_schema("x"),
+        ];
         for (i, a) in payloads.iter().enumerate() {
             for b in payloads.iter().skip(i + 1) {
                 assert_ne!(a.fingerprint(), b.fingerprint(), "{a:?} vs {b:?}");
@@ -396,8 +446,53 @@ mod tests {
     }
 
     #[test]
+    fn json_schema_fingerprint_ignores_key_order_and_whitespace() {
+        let a = ConstraintSpec::json_schema(
+            r#"{"type": "object", "properties": {"x": {"type": "null"}}}"#,
+        );
+        let b = ConstraintSpec::json_schema(
+            "{ \"properties\" : {\"x\":{\"type\":\"null\"}},\n\t\"type\":\"object\" }",
+        );
+        assert_eq!(a.normalized(), b.normalized());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.build_fingerprint(7, Some(2)), b.build_fingerprint(7, Some(2)));
+        // Different schemas stay distinct.
+        assert_ne!(
+            a.fingerprint(),
+            ConstraintSpec::json_schema(r#"{"type": "object"}"#).fingerprint()
+        );
+    }
+
+    #[test]
+    fn json_schema_compiles_and_errors_are_path_annotated() {
+        let cfg = ConstraintSpec::json_schema(
+            r#"{"type": "object", "required": ["ok"], "properties": {"ok": {"type": "boolean"}}}"#,
+        )
+        .to_cfg()
+        .unwrap();
+        assert!(cfg.num_terminals() > 0);
+        let err = ConstraintSpec::json_schema(
+            r#"{"type": "object", "properties": {"x": {"type": "number", "multipleOf": 3}}}"#,
+        )
+        .to_cfg()
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("#/properties/x/multipleOf"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_builtin_error_lists_known_grammars() {
+        let err = ConstraintSpec::builtin("no-such-grammar").to_cfg().unwrap_err();
+        let msg = format!("{err:#}");
+        for name in builtin::GRAMMAR_NAMES {
+            assert!(msg.contains(name), "missing `{name}` in: {msg}");
+        }
+    }
+
+    #[test]
     fn labels_are_short_and_total() {
         assert_eq!(ConstraintSpec::builtin(" JSON ").label(), "builtin:json");
+        assert!(ConstraintSpec::json_schema("{}").label().starts_with("jsonschema:"));
         assert_eq!(ConstraintSpec::Unconstrained.label(), "unconstrained");
         assert!(ConstraintSpec::ebnf("root ::= \"a\"").label().starts_with("ebnf:"));
         assert!(ConstraintSpec::regex(&"x".repeat(100)).label().len() < 50);

@@ -74,14 +74,32 @@ impl Setup {
         })
     }
 
-    /// Compiled engine for a builtin grammar, via the shared registry.
-    /// The harness deliberately shares one engine build (k = ∞ key)
-    /// across its lookahead rows — the compiled tables are identical and
-    /// the tables compare per-`k` *decode* behavior, not builds.
+    /// Compiled engine for a named eval workload (builtin grammar names
+    /// plus the schema-driven `function_call` workload), via the shared
+    /// registry. The harness deliberately shares one engine build
+    /// (k = ∞ key) across its lookahead rows — the compiled tables are
+    /// identical and the tables compare per-`k` *decode* behavior, not
+    /// builds.
     pub fn engine(&self, grammar: &str) -> crate::Result<Arc<GrammarEngine>> {
-        let (engine, _masks) =
-            self.registry.get_or_compile(&ConstraintSpec::builtin(grammar), &self.vocab, None)?;
+        self.engine_spec(&workload_spec(grammar))
+    }
+
+    /// Compiled engine for an arbitrary constraint spec, via the shared
+    /// registry (what `benches/schema_compile.rs` and schema eval rows
+    /// use).
+    pub fn engine_spec(&self, spec: &ConstraintSpec) -> crate::Result<Arc<GrammarEngine>> {
+        let (engine, _masks) = self.registry.get_or_compile(spec, &self.vocab, None)?;
         Ok(engine)
+    }
+}
+
+/// The [`ConstraintSpec`] behind a named eval workload: the builtin
+/// grammars by name, plus `function_call` — the JSON-Schema-compiled
+/// tool-call workload ([`workload::FUNCTION_CALL_SCHEMA`]).
+pub fn workload_spec(name: &str) -> ConstraintSpec {
+    match name {
+        "function_call" => ConstraintSpec::json_schema(workload::FUNCTION_CALL_SCHEMA),
+        other => ConstraintSpec::builtin(other),
     }
 }
 
@@ -357,7 +375,8 @@ pub fn eval_throughput(
         row.tokens += out.tokens;
         row.interventions += out.interventions;
         row.model_calls += out.model_calls;
-        if score::well_formed_json(&out.text, false) || !grammar.contains("json") {
+        let jsonish = grammar.contains("json") || grammar == "function_call";
+        if score::well_formed_json(&out.text, false) || !jsonish {
             wf += 1;
         }
     }
@@ -420,5 +439,28 @@ mod tests {
         )
         .unwrap();
         assert!(row.tokens > 0);
+    }
+
+    #[test]
+    fn schema_workload_runs_and_shares_one_engine() {
+        let setup = mock_setup();
+        let row = eval_throughput(
+            &setup,
+            &Method::Domino { k: Lookahead::Infinite, spec: None, opportunistic: true },
+            "function_call",
+            2,
+            48,
+            5,
+        )
+        .unwrap();
+        assert!(row.tokens > 0);
+        // Warmup + measured requests all reuse one schema compile.
+        let s = setup.registry.stats();
+        assert_eq!(s.misses, 1, "{s:?}");
+        assert_eq!(
+            workload_spec("json"),
+            crate::constraint::ConstraintSpec::builtin("json"),
+            "builtin names pass through untouched"
+        );
     }
 }

@@ -17,4 +17,4 @@ pub mod retokenize;
 pub mod score;
 pub mod workload;
 
-pub use harness::{Method, Setup};
+pub use harness::{workload_spec, Method, Setup};

@@ -108,6 +108,32 @@ pub fn ner_task(rng: &mut Rng) -> NerTask {
     }
 }
 
+/// A realistic function-calling request schema — the shape tool-use APIs
+/// constrain assistant output to, and the schema workload used by the
+/// `function_call` eval rows, `benches/schema_compile.rs` and
+/// `tests/integration_jsonschema.rs`. Leaf types are mostly closed
+/// (enums, digit-exact integer bounds) so constrained mock decodes stay
+/// schema-valid under the strict validator.
+pub const FUNCTION_CALL_SCHEMA: &str = r#"{
+  "type": "object",
+  "additionalProperties": false,
+  "required": ["name", "arguments"],
+  "properties": {
+    "name": {"enum": ["get_weather", "search_flights", "send_email"]},
+    "arguments": {
+      "type": "object",
+      "additionalProperties": false,
+      "required": ["city", "units"],
+      "properties": {
+        "city": {"type": "string", "pattern": "[A-Za-z][A-Za-z ]{0,23}"},
+        "units": {"enum": ["celsius", "fahrenheit"]},
+        "days": {"type": "integer", "minimum": 1, "maximum": 9}
+      }
+    },
+    "confidence": {"type": "number"}
+  }
+}"#;
+
 /// Free-format prompts per grammar (Table 3 workloads; App. C "prompts
 /// used for generation" adapted to the synthetic corpus conventions).
 pub fn format_prompt(grammar: &str, rng: &mut Rng) -> String {
@@ -118,6 +144,7 @@ pub fn format_prompt(grammar: &str, rng: &mut Rng) -> String {
         "xml" => "An XML file describing a person:\n".to_string(),
         "c" => "A simple C function:\n".to_string(),
         "template" => "A character profile for an RPG game in JSON format:\n".to_string(),
+        "function_call" => "A tool call encoded as a JSON object:\n".to_string(),
         _ => String::new(),
     }
 }
@@ -146,6 +173,15 @@ mod tests {
                 assert!(["PER", "LOC", "ORG"].contains(&ty.as_str()));
             }
         }
+    }
+
+    #[test]
+    fn function_call_schema_compiles() {
+        // The schema workload must stay inside the jsonschema subset.
+        let cfg = crate::grammar::jsonschema::compile(FUNCTION_CALL_SCHEMA).unwrap();
+        assert!(cfg.num_terminals() > 0);
+        let mut rng = Rng::new(4);
+        assert!(format_prompt("function_call", &mut rng).contains("tool call"));
     }
 
     #[test]

@@ -1,0 +1,781 @@
+//! Schema model → [`Cfg`] emitter.
+//!
+//! Emission mirrors the crate's builtin JSON grammars
+//! ([`crate::grammar::builtin`]): shared `STRING` / `NUMBER` / `WS`
+//! regex terminals, an optional-`ws` nonterminal after every token, and
+//! object/array punctuation as literal terminals — so a schema-compiled
+//! engine scans and parses exactly like the hand-written Listings 3–4
+//! grammars do.
+//!
+//! Shape notes (all documented in DESIGN.md):
+//!
+//! * **Objects fix a canonical property order** (sorted). Optional
+//!   properties are a linear production chain (`rest_i` covers
+//!   properties `i..`), not a factorial enumeration of orders.
+//! * **`additionalProperties`** absent/`true` with declared properties
+//!   still emits the closed object — a *strengthening* (output always
+//!   validates); a property-less open object emits the generic
+//!   member grammar instead.
+//! * **Bounded arrays unroll** into an optional production chain
+//!   (capped by [`model::MAX_UNROLL`]).
+//! * **Integer bounds approximate by digit count** ([`int_pattern`]) —
+//!   the one documented over-approximation in the pipeline.
+//! * **Unsatisfiable recursion** (`$ref` cycles with no finite
+//!   derivation) is rejected by a productivity check instead of being
+//!   handed to the Earley precompute.
+
+use super::model::{self, ArraySchema, ObjectSchema, SchemaNode, SchemaPath, TypeSchema};
+use super::normalize;
+use crate::grammar::cfg::{Cfg, CfgBuilder, NtId, Symbol, TermId};
+use crate::util::Json;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+
+/// Compile a parsed schema document to a grammar.
+pub fn emit(doc: &Json) -> crate::Result<Cfg> {
+    let node = model::parse_schema(doc, &SchemaPath::root())?;
+    let mut e = Emitter {
+        b: CfgBuilder::new(),
+        doc,
+        ref_nts: HashMap::new(),
+        any_nt: None,
+        ws_nt: None,
+        anon: 0,
+    };
+    let root = e.b.nonterminal("root");
+    let ws = e.ws();
+    let mut rhs = vec![Symbol::Nt(ws)];
+    rhs.extend(e.node_syms(&node, &SchemaPath::root())?);
+    e.b.production(root, rhs);
+    let cfg = e.b.build(root)?;
+    check_productive(&cfg)?;
+    Ok(cfg)
+}
+
+struct Emitter<'a> {
+    b: CfgBuilder,
+    /// The whole schema document, for `$ref` resolution.
+    doc: &'a Json,
+    /// `$ref` pointer → its nonterminal. An entry exists from the moment
+    /// emission *starts*, so a cyclic reference lands on the in-progress
+    /// nonterminal instead of recursing forever.
+    ref_nts: HashMap<String, NtId>,
+    any_nt: Option<NtId>,
+    ws_nt: Option<NtId>,
+    anon: usize,
+}
+
+impl<'a> Emitter<'a> {
+    /// `ws ::= WS?` with `WS ::= /[ \t\n]+/` (built once).
+    fn ws(&mut self) -> NtId {
+        if let Some(nt) = self.ws_nt {
+            return nt;
+        }
+        let nt = self.b.nonterminal("ws");
+        let t = self.b.regex_term("WS", r"[ \t\n]+");
+        self.b.production(nt, vec![Symbol::T(t)]);
+        self.b.production(nt, vec![]);
+        self.ws_nt = Some(nt);
+        nt
+    }
+
+    /// The JSON string terminal (Listing 3 `string`, escapes included).
+    fn string_term(&mut self) -> TermId {
+        self.b.regex_term("STRING", r#""([^"\\]|\\(["\\/bfnrt]|u[0-9a-fA-F]{4}))*""#)
+    }
+
+    /// The JSON number terminal (Listing 3 `number`).
+    fn number_term(&mut self) -> TermId {
+        self.b.regex_term("NUMBER", r"-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][-+]?[0-9]+)?")
+    }
+
+    fn fresh(&mut self, kind: &str) -> NtId {
+        self.anon += 1;
+        self.b.nonterminal(&format!("%{kind}{}", self.anon))
+    }
+
+    /// The symbol sequence for one schema node's value (each sequence
+    /// ends having consumed its trailing `ws`, like the builtin
+    /// grammars).
+    fn node_syms(&mut self, node: &SchemaNode, path: &SchemaPath) -> crate::Result<Vec<Symbol>> {
+        Ok(match node {
+            SchemaNode::Any => {
+                let nt = self.any_value();
+                vec![Symbol::Nt(nt)]
+            }
+            SchemaNode::Ref { pointer } => {
+                let nt = self.ref_nt(pointer, path)?;
+                vec![Symbol::Nt(nt)]
+            }
+            SchemaNode::Const { value } => self.literal_value(value),
+            SchemaNode::Enum { values } => {
+                let nt = self.fresh("enum");
+                for v in values {
+                    let syms = self.literal_value(v);
+                    self.b.production(nt, syms);
+                }
+                vec![Symbol::Nt(nt)]
+            }
+            SchemaNode::AnyOf { keyword, branches } => {
+                let nt = self.fresh("alt");
+                for (i, branch) in branches.iter().enumerate() {
+                    let branch_path = path.child(*keyword).child(i.to_string());
+                    let syms = self.node_syms(branch, &branch_path)?;
+                    self.b.production(nt, syms);
+                }
+                vec![Symbol::Nt(nt)]
+            }
+            SchemaNode::Types { types } => {
+                if let [only] = types.as_slice() {
+                    self.type_syms(only, path)?
+                } else {
+                    let nt = self.fresh("types");
+                    for t in types {
+                        let syms = self.type_syms(t, path)?;
+                        self.b.production(nt, syms);
+                    }
+                    vec![Symbol::Nt(nt)]
+                }
+            }
+        })
+    }
+
+    /// A `const`/`enum` value as one literal terminal: its canonical
+    /// serialization, matched byte-exactly.
+    fn literal_value(&mut self, v: &Json) -> Vec<Symbol> {
+        let text = v.to_string();
+        let t = self.b.literal(&text);
+        let ws = self.ws();
+        vec![Symbol::T(t), Symbol::Nt(ws)]
+    }
+
+    fn type_syms(&mut self, t: &TypeSchema, path: &SchemaPath) -> crate::Result<Vec<Symbol>> {
+        Ok(match t {
+            TypeSchema::Null => {
+                let t = self.b.literal("null");
+                let ws = self.ws();
+                vec![Symbol::T(t), Symbol::Nt(ws)]
+            }
+            TypeSchema::Boolean => {
+                let nt = self.fresh("bool");
+                for word in ["true", "false"] {
+                    let t = self.b.literal(word);
+                    let ws = self.ws();
+                    self.b.production(nt, vec![Symbol::T(t), Symbol::Nt(ws)]);
+                }
+                vec![Symbol::Nt(nt)]
+            }
+            TypeSchema::Number => {
+                let t = self.number_term();
+                let ws = self.ws();
+                vec![Symbol::T(t), Symbol::Nt(ws)]
+            }
+            TypeSchema::Integer { minimum, maximum } => {
+                let pat = int_pattern(*minimum, *maximum);
+                let t = self.b.regex_term(&format!("/{pat}/"), &pat);
+                let ws = self.ws();
+                vec![Symbol::T(t), Symbol::Nt(ws)]
+            }
+            TypeSchema::String { pattern: None, format: None } => {
+                let t = self.string_term();
+                let ws = self.ws();
+                vec![Symbol::T(t), Symbol::Nt(ws)]
+            }
+            TypeSchema::String { pattern: Some(p), .. } => self.quoted_term(p),
+            TypeSchema::String { pattern: None, format: Some(f) } => self.quoted_term(f),
+            TypeSchema::Object(o) => self.object_syms(o, path)?,
+            TypeSchema::Array(a) => self.array_syms(a, path)?,
+        })
+    }
+
+    /// A constrained string: the content regex wrapped in quotes (the
+    /// quotes also keep the terminal non-nullable regardless of the
+    /// content pattern). Patterns are anchored — full-content matches —
+    /// so constrained output always *contains* a match of the schema's
+    /// pattern.
+    fn quoted_term(&mut self, content: &str) -> Vec<Symbol> {
+        let pat = format!("\"({content})\"");
+        let t = self.b.regex_term(&format!("/{pat}/"), &pat);
+        let ws = self.ws();
+        vec![Symbol::T(t), Symbol::Nt(ws)]
+    }
+
+    fn object_syms(&mut self, o: &ObjectSchema, path: &SchemaPath) -> crate::Result<Vec<Symbol>> {
+        let lb = self.b.literal("{");
+        let rb = self.b.literal("}");
+        let ws = self.ws();
+        if o.properties.is_empty() {
+            if o.closed {
+                // `additionalProperties: false` with nothing declared:
+                // exactly the empty object.
+                return Ok(vec![Symbol::T(lb), Symbol::Nt(ws), Symbol::T(rb), Symbol::Nt(ws)]);
+            }
+            // No declared properties, not closed: any JSON object.
+            let nt = self.any_object();
+            return Ok(vec![Symbol::Nt(nt)]);
+        }
+
+        // One member sequence per declared property, in canonical order.
+        let mut members: Vec<Vec<Symbol>> = Vec::new();
+        for (name, sub) in &o.properties {
+            let key = self.b.literal(&Json::str(name.clone()).to_string());
+            let colon = self.b.literal(":");
+            let mut syms =
+                vec![Symbol::T(key), Symbol::Nt(ws), Symbol::T(colon), Symbol::Nt(ws)];
+            syms.extend(self.node_syms(sub, &path.child("properties").child(name.clone()))?);
+            members.push(syms);
+        }
+        let required: Vec<bool> =
+            o.properties.iter().map(|(name, _)| o.required.contains(name)).collect();
+        let comma = self.b.literal(",");
+        let n = members.len();
+
+        // rest[i] (1 ≤ i < n): continuation over properties i.. once at
+        // least one earlier property has been emitted. Required links
+        // cannot be skipped; optional links carry a skip production.
+        let mut rests: Vec<Option<NtId>> = vec![None; n + 1];
+        for i in (1..n).rev() {
+            let nt = self.fresh("props");
+            let mut rhs = vec![Symbol::T(comma), Symbol::Nt(ws)];
+            rhs.extend(members[i].clone());
+            if let Some(t) = rests[i + 1] {
+                rhs.push(Symbol::Nt(t));
+            }
+            self.b.production(nt, rhs);
+            if !required[i] {
+                let skip = match rests[i + 1] {
+                    Some(t) => vec![Symbol::Nt(t)],
+                    None => vec![],
+                };
+                self.b.production(nt, skip);
+            }
+            rests[i] = Some(nt);
+        }
+
+        // Body: alternation over "property i is the first one present"
+        // (only valid while every earlier property is optional), plus ε
+        // when the whole object may be empty.
+        let body = self.fresh("obj");
+        let mut all_optional = true;
+        for i in 0..n {
+            let mut rhs = members[i].clone();
+            if let Some(t) = rests[i + 1] {
+                rhs.push(Symbol::Nt(t));
+            }
+            self.b.production(body, rhs);
+            if required[i] {
+                all_optional = false;
+                break;
+            }
+        }
+        if all_optional {
+            self.b.production(body, vec![]);
+        }
+        Ok(vec![
+            Symbol::T(lb),
+            Symbol::Nt(ws),
+            Symbol::Nt(body),
+            Symbol::T(rb),
+            Symbol::Nt(ws),
+        ])
+    }
+
+    fn array_syms(&mut self, a: &ArraySchema, path: &SchemaPath) -> crate::Result<Vec<Symbol>> {
+        let lb = self.b.literal("[");
+        let rb = self.b.literal("]");
+        let ws = self.ws();
+        let comma = self.b.literal(",");
+        let item: Vec<Symbol> = match &a.items {
+            Some(sub) => self.node_syms(sub, &path.child("items"))?,
+            None => {
+                let nt = self.any_value();
+                vec![Symbol::Nt(nt)]
+            }
+        };
+        let sep = [Symbol::T(comma), Symbol::Nt(ws)];
+
+        let mut mid: Vec<Symbol> = Vec::new();
+        match a.max_items {
+            None => {
+                // `tail ::= "," ws item tail | ε` after the required prefix.
+                let tail = self.fresh("items");
+                let mut rec = sep.to_vec();
+                rec.extend(item.clone());
+                rec.push(Symbol::Nt(tail));
+                self.b.production(tail, rec);
+                self.b.production(tail, vec![]);
+                if a.min_items == 0 {
+                    let opt = self.fresh("elems");
+                    let mut first = item.clone();
+                    first.push(Symbol::Nt(tail));
+                    self.b.production(opt, first);
+                    self.b.production(opt, vec![]);
+                    mid.push(Symbol::Nt(opt));
+                } else {
+                    mid.extend(item.clone());
+                    for _ in 1..a.min_items {
+                        mid.extend(sep.iter().copied());
+                        mid.extend(item.clone());
+                    }
+                    mid.push(Symbol::Nt(tail));
+                }
+            }
+            Some(0) => {} // exactly the empty array
+            Some(mx) => {
+                // Bounded unroll: optional chain over positions
+                // min_items..mx (position 0 belongs to the head).
+                let m = a.min_items;
+                let mut tail: Option<NtId> = None;
+                for _ in m.max(1)..mx {
+                    let nt = self.fresh("more");
+                    let mut rec = sep.to_vec();
+                    rec.extend(item.clone());
+                    if let Some(t) = tail {
+                        rec.push(Symbol::Nt(t));
+                    }
+                    self.b.production(nt, rec);
+                    self.b.production(nt, vec![]);
+                    tail = Some(nt);
+                }
+                let mut seq: Vec<Symbol> = item.clone();
+                for _ in 1..m {
+                    seq.extend(sep.iter().copied());
+                    seq.extend(item.clone());
+                }
+                if let Some(t) = tail {
+                    seq.push(Symbol::Nt(t));
+                }
+                if m == 0 {
+                    let opt = self.fresh("elems");
+                    self.b.production(opt, seq);
+                    self.b.production(opt, vec![]);
+                    mid.push(Symbol::Nt(opt));
+                } else {
+                    mid.extend(seq);
+                }
+            }
+        }
+
+        let mut out = vec![Symbol::T(lb), Symbol::Nt(ws)];
+        out.extend(mid);
+        out.push(Symbol::T(rb));
+        out.push(Symbol::Nt(ws));
+        Ok(out)
+    }
+
+    /// `%any` — the unconstrained JSON value grammar (Listing 3), built
+    /// once and shared by every subtree the schema leaves open.
+    fn any_value(&mut self) -> NtId {
+        if let Some(nt) = self.any_nt {
+            return nt;
+        }
+        let ws = self.ws();
+        let string = self.string_term();
+        let number = self.number_term();
+        let val = self.b.nonterminal("%any");
+        self.any_nt = Some(val);
+        let obj = self.b.nonterminal("%anyobj");
+        let arr = self.b.nonterminal("%anyarr");
+        let pair = self.b.nonterminal("%anypair");
+        let pairs = self.b.nonterminal("%anypairs");
+        let pairs_tail = self.b.nonterminal("%anypairstail");
+        let elems = self.b.nonterminal("%anyelems");
+        let elems_tail = self.b.nonterminal("%anyelemstail");
+        let lb = self.b.literal("{");
+        let rb = self.b.literal("}");
+        let lsq = self.b.literal("[");
+        let rsq = self.b.literal("]");
+        let comma = self.b.literal(",");
+        let colon = self.b.literal(":");
+
+        self.b.production(val, vec![Symbol::Nt(obj)]);
+        self.b.production(val, vec![Symbol::Nt(arr)]);
+        self.b.production(val, vec![Symbol::T(string), Symbol::Nt(ws)]);
+        self.b.production(val, vec![Symbol::T(number), Symbol::Nt(ws)]);
+        for word in ["true", "false", "null"] {
+            let t = self.b.literal(word);
+            self.b.production(val, vec![Symbol::T(t), Symbol::Nt(ws)]);
+        }
+        // obj ::= "{" ws pairs "}" ws ; pairs ::= pair pairs_tail | ε
+        // pairs_tail ::= "," ws pair pairs_tail | ε
+        // pair ::= STRING ws ":" ws val
+        self.b.production(
+            obj,
+            vec![Symbol::T(lb), Symbol::Nt(ws), Symbol::Nt(pairs), Symbol::T(rb), Symbol::Nt(ws)],
+        );
+        self.b.production(pairs, vec![Symbol::Nt(pair), Symbol::Nt(pairs_tail)]);
+        self.b.production(pairs, vec![]);
+        self.b.production(
+            pairs_tail,
+            vec![Symbol::T(comma), Symbol::Nt(ws), Symbol::Nt(pair), Symbol::Nt(pairs_tail)],
+        );
+        self.b.production(pairs_tail, vec![]);
+        self.b.production(
+            pair,
+            vec![
+                Symbol::T(string),
+                Symbol::Nt(ws),
+                Symbol::T(colon),
+                Symbol::Nt(ws),
+                Symbol::Nt(val),
+            ],
+        );
+        // arr ::= "[" ws elems "]" ws ; elems ::= val elems_tail | ε
+        // elems_tail ::= "," ws val elems_tail | ε
+        self.b.production(
+            arr,
+            vec![Symbol::T(lsq), Symbol::Nt(ws), Symbol::Nt(elems), Symbol::T(rsq), Symbol::Nt(ws)],
+        );
+        self.b.production(elems, vec![Symbol::Nt(val), Symbol::Nt(elems_tail)]);
+        self.b.production(elems, vec![]);
+        self.b.production(
+            elems_tail,
+            vec![Symbol::T(comma), Symbol::Nt(ws), Symbol::Nt(val), Symbol::Nt(elems_tail)],
+        );
+        self.b.production(elems_tail, vec![]);
+        val
+    }
+
+    /// The generic-object nonterminal (for property-less open objects).
+    fn any_object(&mut self) -> NtId {
+        self.any_value();
+        self.b.nonterminal("%anyobj")
+    }
+
+    /// The nonterminal for a `$ref` target. Memoized per pointer *before*
+    /// emission, so cyclic schemas become plain grammar recursion.
+    fn ref_nt(&mut self, pointer: &str, path: &SchemaPath) -> crate::Result<NtId> {
+        if let Some(&nt) = self.ref_nts.get(pointer) {
+            return Ok(nt);
+        }
+        let nt = self.b.nonterminal(&format!("%ref:{pointer}"));
+        self.ref_nts.insert(pointer.to_string(), nt);
+        let target = normalize::resolve_pointer(self.doc, pointer)
+            .with_context(|| format!("jsonschema at {path}: resolving `$ref`"))?;
+        let target_path = SchemaPath::from_pointer(pointer);
+        let node = model::parse_schema(target, &target_path)?;
+        let syms = self.node_syms(&node, &target_path)?;
+        if syms == [Symbol::Nt(nt)] {
+            bail!("jsonschema at {path}: `$ref` `{pointer}` refers only to itself");
+        }
+        self.b.production(nt, syms);
+        Ok(nt)
+    }
+}
+
+/// Digit-count approximation of an integer range, as a regex pattern.
+///
+/// The admitted set is every integer whose digit count falls inside the
+/// bounds' digit counts — exact when the bounds sit on digit-count
+/// edges (`1..9`, `0..999`, `-99..-10`), otherwise the documented
+/// over-approximation of the pipeline (e.g. `5..17` admits `1..99`).
+pub fn int_pattern(minimum: Option<i64>, maximum: Option<i64>) -> String {
+    fn digits(mut n: u64) -> usize {
+        let mut d = 1;
+        while n >= 10 {
+            n /= 10;
+            d += 1;
+        }
+        d
+    }
+    /// Non-negative integers from `lo` up, digit-bounded by `hi`.
+    fn nonneg(lo: u64, hi: Option<u64>) -> String {
+        match (lo, hi) {
+            (0, None) => "0|[1-9][0-9]*".to_string(),
+            (0, Some(h)) => match digits(h) - 1 {
+                0 => "0|[1-9]".to_string(),
+                d => format!("0|[1-9][0-9]{{0,{d}}}"),
+            },
+            (l, None) => match digits(l) - 1 {
+                0 => "[1-9][0-9]*".to_string(),
+                d => format!("[1-9][0-9]{{{d},}}"),
+            },
+            (l, Some(h)) => match (digits(l) - 1, digits(h) - 1) {
+                (0, 0) => "[1-9]".to_string(),
+                (a, b) => format!("[1-9][0-9]{{{a},{b}}}"),
+            },
+        }
+    }
+    match (minimum, maximum) {
+        (None, None) => "-?(0|[1-9][0-9]*)".to_string(),
+        (Some(lo), None) if lo >= 0 => nonneg(lo as u64, None),
+        (Some(lo), None) => format!("(-({}))|0|[1-9][0-9]*", nonneg(1, Some(lo.unsigned_abs()))),
+        (None, Some(hi)) if hi < 0 => format!("-({})", nonneg(hi.unsigned_abs(), None)),
+        (None, Some(hi)) => format!("(-[1-9][0-9]*)|{}", nonneg(0, Some(hi as u64))),
+        (Some(lo), Some(hi)) if lo >= 0 => nonneg(lo as u64, Some(hi as u64)),
+        (Some(lo), Some(hi)) if hi < 0 => {
+            format!("-({})", nonneg(hi.unsigned_abs(), Some(lo.unsigned_abs())))
+        }
+        (Some(lo), Some(hi)) => {
+            format!("(-({}))|{}", nonneg(1, Some(lo.unsigned_abs())), nonneg(0, Some(hi as u64)))
+        }
+    }
+}
+
+/// Reject grammars with unproductive nonterminals (a `$ref` cycle with
+/// no finite derivation): the Earley/tree precompute assumes every
+/// nonterminal derives *some* terminal string.
+fn check_productive(cfg: &Cfg) -> crate::Result<()> {
+    let n = cfg.nonterminals.len();
+    let mut productive = vec![false; n];
+    loop {
+        let mut changed = false;
+        for p in &cfg.productions {
+            if productive[p.lhs as usize] {
+                continue;
+            }
+            let all = p.rhs.iter().all(|s| match s {
+                Symbol::T(_) => true,
+                Symbol::Nt(nt) => productive[*nt as usize],
+            });
+            if all {
+                productive[p.lhs as usize] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    if let Some(i) = productive.iter().position(|ok| !ok) {
+        bail!(
+            "jsonschema: unsatisfiable recursion — `{}` never derives a finite value (give every recursive `$ref` a non-recursive alternative, e.g. through `anyOf`)",
+            cfg.nonterminals[i]
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::earley::{recognize, Earley};
+    use crate::scanner::{Pos, Scanner};
+    use std::sync::Arc;
+
+    fn compile(src: &str) -> crate::Result<Cfg> {
+        emit(&Json::parse(src).unwrap())
+    }
+
+    /// Byte-level membership: scanner segmentation × Earley recognition.
+    fn accepts(cfg: &Cfg, text: &str) -> bool {
+        let scanner = Scanner::new(cfg).unwrap();
+        let earley = Earley::new(Arc::new(cfg.clone()));
+        if text.is_empty() {
+            return recognize(&earley, &[]);
+        }
+        for (seq, posset) in scanner.traverse(&[Pos::Boundary], text.as_bytes()) {
+            for pos in posset {
+                if let Pos::In(t, _) = pos {
+                    if scanner.accepting(pos) {
+                        let mut full = seq.clone();
+                        full.push(t);
+                        if recognize(&earley, &full) {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn int_pattern_matches_expected_sets() {
+        let cases: &[(Option<i64>, Option<i64>, &[&str], &[&str])] = &[
+            (None, None, &["0", "7", "-13", "100"], &["007", "-0", "+1", ""]),
+            (Some(0), Some(9), &["0", "9"], &["10", "-1"]),
+            (Some(1), Some(9), &["1", "9"], &["0", "10", "-2"]),
+            (Some(1), Some(99), &["1", "42", "99"], &["0", "100", "-5"]),
+            (Some(0), None, &["0", "12345"], &["-1"]),
+            (Some(10), None, &["10", "999"], &["9", "0", "-10"]),
+            (None, Some(-10), &["-10", "-99"], &["-9", "0", "7"]),
+            (Some(-99), Some(-10), &["-42", "-10"], &["-9", "0", "5", "-100"]),
+            (Some(-9), Some(99), &["-9", "0", "42"], &["-10", "100"]),
+            (Some(-9), None, &["-9", "0", "12345"], &["-10", "-100"]),
+        ];
+        for (lo, hi, yes, no) in cases {
+            let pat = int_pattern(*lo, *hi);
+            for y in *yes {
+                assert!(
+                    crate::regex::matches(&pat, y).unwrap(),
+                    "/{pat}/ should accept {y} for [{lo:?},{hi:?}]"
+                );
+            }
+            for x in *no {
+                assert!(
+                    !crate::regex::matches(&pat, x).unwrap(),
+                    "/{pat}/ should reject {x} for [{lo:?},{hi:?}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn object_with_required_and_optional_properties() {
+        let cfg = compile(
+            r#"{"type": "object", "additionalProperties": false,
+                "required": ["b"],
+                "properties": {"a": {"type": "boolean"}, "b": {"type": "null"}, "c": {"type": "integer"}}}"#,
+        )
+        .unwrap();
+        for ok in [
+            r#"{"b": null}"#,
+            r#"{"a": true, "b": null}"#,
+            r#"{"b":null,"c":7}"#,
+            r#"{ "a" : false , "b" : null , "c" : -2 }"#,
+        ] {
+            assert!(accepts(&cfg, ok), "{ok}");
+        }
+        for bad in [
+            "{}",                         // required `b` missing
+            r#"{"a": true}"#,             // required `b` missing
+            r#"{"b": null, "a": true}"#,  // canonical order fixed
+            r#"{"b": null, "x": 1}"#,     // undeclared property
+            r#"{"b": "null"}"#,           // wrong type
+        ] {
+            assert!(!accepts(&cfg, bad), "{bad}");
+        }
+    }
+
+    #[test]
+    fn all_optional_object_admits_every_subset_in_order() {
+        let cfg = compile(
+            r#"{"type": "object", "properties": {"x": {"type": "null"}, "y": {"type": "null"}}}"#,
+        )
+        .unwrap();
+        for ok in ["{}", r#"{"x": null}"#, r#"{"y": null}"#, r#"{"x": null, "y": null}"#] {
+            assert!(accepts(&cfg, ok), "{ok}");
+        }
+        assert!(!accepts(&cfg, r#"{"y": null, "x": null}"#), "order is canonical");
+    }
+
+    #[test]
+    fn arrays_respect_bounds() {
+        let cfg = compile(
+            r#"{"type": "array", "items": {"type": "boolean"}, "minItems": 1, "maxItems": 3}"#,
+        )
+        .unwrap();
+        assert!(!accepts(&cfg, "[]"));
+        assert!(accepts(&cfg, "[true]"));
+        assert!(accepts(&cfg, "[true, false, true]"));
+        assert!(!accepts(&cfg, "[true, false, true, true]"));
+        assert!(!accepts(&cfg, "[1]"));
+
+        let unbounded = compile(r#"{"type": "array", "items": {"type": "null"}}"#).unwrap();
+        assert!(accepts(&unbounded, "[]"));
+        assert!(accepts(&unbounded, "[null, null, null, null, null]"));
+
+        let empty_only = compile(r#"{"type": "array", "maxItems": 0}"#).unwrap();
+        assert!(accepts(&empty_only, "[ ]"));
+        assert!(!accepts(&empty_only, "[null]"));
+    }
+
+    #[test]
+    fn enums_consts_and_unions() {
+        let cfg = compile(r#"{"enum": ["red", "green", 7, true, null]}"#).unwrap();
+        for ok in [r#""red""#, r#""green""#, "7", "true", "null"] {
+            assert!(accepts(&cfg, ok), "{ok}");
+        }
+        assert!(!accepts(&cfg, r#""blue""#));
+        assert!(!accepts(&cfg, "8"));
+
+        let cfg = compile(r#"{"const": {"b": [1, 2], "a": "x"}}"#).unwrap();
+        // Canonical serialization of the const value, byte-exact.
+        assert!(accepts(&cfg, r#"{"a":"x","b":[1,2]}"#));
+        assert!(!accepts(&cfg, r#"{"a":"x","b":[1,3]}"#));
+
+        let cfg =
+            compile(r#"{"anyOf": [{"type": "integer", "minimum": 0, "maximum": 9}, {"type": "null"}]}"#)
+                .unwrap();
+        assert!(accepts(&cfg, "4") && accepts(&cfg, "null"));
+        assert!(!accepts(&cfg, "-4"));
+
+        let cfg = compile(r#"{"type": ["string", "null"]}"#).unwrap();
+        assert!(accepts(&cfg, r#""hi""#) && accepts(&cfg, "null"));
+        assert!(!accepts(&cfg, "3"));
+    }
+
+    #[test]
+    fn string_pattern_and_format_are_quoted_and_anchored() {
+        let cfg = compile(r#"{"type": "string", "pattern": "[a-z]{2,4}"}"#).unwrap();
+        assert!(accepts(&cfg, r#""ab""#));
+        assert!(!accepts(&cfg, r#""a""#));
+        assert!(!accepts(&cfg, r#""abcde""#));
+        assert!(!accepts(&cfg, "ab"), "value must still be a JSON string");
+
+        let cfg = compile(r#"{"type": "string", "format": "date"}"#).unwrap();
+        assert!(accepts(&cfg, r#""2026-07-28""#));
+        assert!(!accepts(&cfg, r#""2026-7-28""#));
+    }
+
+    #[test]
+    fn empty_schema_is_full_json_and_open_objects_are_generic() {
+        let cfg = compile("{}").unwrap();
+        for ok in [r#"{"a": [1, {"b": null}], "c": "x"}"#, "3.5", "[]", r#""s""#, "false"] {
+            assert!(accepts(&cfg, ok), "{ok}");
+        }
+        assert!(!accepts(&cfg, "{,}"));
+
+        let cfg = compile(r#"{"type": "object"}"#).unwrap();
+        assert!(accepts(&cfg, r#"{"anything": [true]}"#));
+        assert!(!accepts(&cfg, "[1]"), "type object excludes arrays");
+
+        let closed = compile(r#"{"type": "object", "additionalProperties": false}"#).unwrap();
+        assert!(accepts(&closed, "{ }"));
+        assert!(!accepts(&closed, r#"{"a": 1}"#));
+    }
+
+    #[test]
+    fn recursive_refs_build_named_nonterminals() {
+        let cfg = compile(
+            r#"{"$ref": "#/$defs/tree",
+                "$defs": {"tree": {"type": "object", "additionalProperties": false,
+                                   "required": ["v"],
+                                   "properties": {"v": {"type": "integer"},
+                                                  "kids": {"type": "array", "items": {"$ref": "#/$defs/tree"}}}}}}"#,
+        )
+        .unwrap();
+        assert!(cfg.nonterminals.iter().any(|n| n.contains("%ref:#/$defs/tree")));
+        assert!(accepts(&cfg, r#"{"v": 1}"#));
+        assert!(accepts(&cfg, r#"{"kids": [{"v": 2}, {"kids": [{"v": 3}], "v": 4}], "v": 1}"#));
+        assert!(!accepts(&cfg, r#"{"kids": [7], "v": 1}"#));
+    }
+
+    #[test]
+    fn emit_stage_errors_keep_the_combinator_path() {
+        let err = compile(r#"{"oneOf": [{"type": "null"}, {"$ref": "#/missing"}]}"#)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("#/oneOf/1"), "{msg}");
+    }
+
+    #[test]
+    fn unsatisfiable_recursion_is_rejected() {
+        let err = compile(r#"{"$ref": "#"}"#).unwrap_err().to_string();
+        assert!(err.contains("itself"), "{err}");
+        // A → B → A with no escape hatch: caught by the productivity check.
+        let err = compile(
+            r#"{"$ref": "#/$defs/a",
+                "$defs": {"a": {"type": "object", "required": ["x"], "properties": {"x": {"$ref": "#/$defs/b"}}},
+                          "b": {"type": "object", "required": ["y"], "properties": {"y": {"$ref": "#/$defs/a"}}}}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unsatisfiable recursion"), "{err}");
+    }
+
+    #[test]
+    fn terminal_dfas_compile_for_a_composite_schema() {
+        let cfg = compile(
+            r#"{"type": "object", "additionalProperties": false, "required": ["id", "tags"],
+                "properties": {"id": {"type": "string", "format": "uuid"},
+                               "tags": {"type": "array", "items": {"enum": ["a", "b"]}, "maxItems": 4},
+                               "score": {"type": "number"}}}"#,
+        )
+        .unwrap();
+        let dfas = cfg.terminal_dfas().unwrap();
+        assert_eq!(dfas.len(), cfg.num_terminals());
+        assert!(accepts(&cfg, r#"{"id": "01234567-89ab-cdef-0123-456789abcdef", "tags": ["a", "b"]}"#));
+    }
+}

@@ -1,0 +1,79 @@
+//! JSON Schema → CFG compiler front-end.
+//!
+//! The highest-traffic real-world use of constrained decoding is
+//! schema-driven JSON: API callers ship a JSON Schema, not a hand-written
+//! EBNF. This subsystem compiles a useful schema subset down to the
+//! crate's [`Cfg`], so a schema constraint flows through the exact same
+//! engine pipeline (scanner NFA → subterminal trees → Earley tables →
+//! registry/artifact caching) as every other grammar.
+//!
+//! Three stages, one module each:
+//!
+//! * [`model`] — typed schema model + parser over
+//!   [`util::Json`](crate::util::Json), with **path-annotated errors**
+//!   (`jsonschema at #/properties/age: unsupported keyword ...`) for
+//!   everything outside the subset. A schema compiles to exactly the
+//!   constraint it states or it does not compile; nothing is silently
+//!   dropped.
+//! * [`normalize`] — canonical source form (key order / whitespace /
+//!   number spelling erased, so fingerprint-keyed dedup fires for
+//!   semantically identical schemas) and intra-document `$ref`
+//!   (JSON Pointer) resolution.
+//! * [`emit`] — the CFG emitter, mirroring the builtin JSON grammars'
+//!   scanner/parser split, with cycle-safe `$ref` recursion into named
+//!   nonterminals and a productivity check for unsatisfiable recursion.
+//!
+//! Supported subset and shape decisions are documented on [`model`] and
+//! in `rust/DESIGN.md` ("Schema → CFG pipeline").
+
+pub mod emit;
+pub mod model;
+pub mod normalize;
+
+pub use model::{SchemaNode, SchemaPath, FORMATS, MAX_UNROLL};
+
+use crate::grammar::Cfg;
+use crate::util::Json;
+use anyhow::Context;
+
+/// Compile a JSON Schema document (source text) to a [`Cfg`].
+pub fn compile(source: &str) -> crate::Result<Cfg> {
+    let doc = Json::parse(source.trim())
+        .context("jsonschema: the schema document is not valid JSON")?;
+    emit::emit(&doc)
+}
+
+/// The canonical text form of a schema source — what
+/// [`ConstraintSpec::normalized`](crate::constraint::ConstraintSpec::normalized)
+/// fingerprints. Errors if the source is not valid JSON.
+pub fn canonical_source(source: &str) -> crate::Result<String> {
+    normalize::canonical_source(source)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_rejects_non_json_sources() {
+        let err = compile("not json at all").unwrap_err();
+        assert!(format!("{err:#}").contains("not valid JSON"), "{err:#}");
+    }
+
+    #[test]
+    fn compile_produces_a_grammar_with_dfas() {
+        let src = r#"{"type": "object", "required": ["ok"], "properties": {"ok": {"type": "boolean"}}}"#;
+        let cfg = compile(src).unwrap();
+        assert!(cfg.num_terminals() > 0);
+        assert_eq!(cfg.terminal_dfas().unwrap().len(), cfg.num_terminals());
+        assert_eq!(cfg.nonterminals[cfg.start as usize], "root");
+    }
+
+    #[test]
+    fn canonical_source_is_stable() {
+        let a = canonical_source(r#"{"type":"object","properties":{"a":{"type":"null"}}}"#).unwrap();
+        let b = canonical_source("{ \"properties\": {\"a\": {\"type\": \"null\"}},\n  \"type\": \"object\" }")
+            .unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,718 @@
+//! Typed model of the supported JSON Schema subset, parsed from
+//! [`Json`](crate::util::Json) values.
+//!
+//! The parser is deliberately *total over its subset and loud outside
+//! it*: every keyword in the document is either consumed by the model or
+//! reported as a path-annotated error ([`SchemaPath`]). A schema
+//! compiles to exactly the constraint it states or it does not compile —
+//! silently dropping a keyword would hand the model an unconstrained
+//! hole (see DESIGN.md, "Schema → CFG pipeline").
+//!
+//! Supported keywords: `type` (including type arrays), `properties` /
+//! `required` / boolean `additionalProperties`, `enum` / `const`,
+//! `items` / `minItems` / `maxItems` (bounded unrolling, capped at
+//! [`MAX_UNROLL`]), `anyOf` / `oneOf`, string `pattern` (the crate's
+//! regex dialect) and `format` (the builtins in [`FORMATS`]), integer
+//! `minimum` / `maximum` / `exclusiveMinimum` / `exclusiveMaximum`
+//! (digit-count approximation — see [`super::emit::int_pattern`]), and
+//! intra-document `$ref`. Annotation keywords (`title`, `description`,
+//! `$defs`, ...) are accepted and ignored, as the spec directs.
+
+use crate::util::Json;
+use anyhow::bail;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Bounded-unrolling ceiling for `minItems` / `maxItems`: each item slot
+/// becomes a production chain link, so the cap bounds grammar size.
+pub const MAX_UNROLL: usize = 64;
+
+/// The `format` builtins: each compiles to a full-match regex over the
+/// string *content* (the emitter wraps it in quotes).
+pub const FORMATS: &[(&str, &str)] = &[
+    ("date", "[0-9]{4}-[0-9]{2}-[0-9]{2}"),
+    (
+        "date-time",
+        r"[0-9]{4}-[0-9]{2}-[0-9]{2}T[0-9]{2}:[0-9]{2}:[0-9]{2}(\.[0-9]+)?(Z|[+-][0-9]{2}:[0-9]{2})",
+    ),
+    ("email", r"[A-Za-z0-9._%+-]+@[A-Za-z0-9.-]+\.[A-Za-z]{2,}"),
+    (
+        "ipv4",
+        r"(25[0-5]|2[0-4][0-9]|1[0-9][0-9]|[1-9]?[0-9])(\.(25[0-5]|2[0-4][0-9]|1[0-9][0-9]|[1-9]?[0-9])){3}",
+    ),
+    ("time", r"[0-9]{2}:[0-9]{2}:[0-9]{2}(\.[0-9]+)?(Z|[+-][0-9]{2}:[0-9]{2})"),
+    ("uuid", "[0-9a-fA-F]{8}-[0-9a-fA-F]{4}-[0-9a-fA-F]{4}-[0-9a-fA-F]{4}-[0-9a-fA-F]{12}"),
+];
+
+/// The full-match content regex for a builtin `format` name.
+pub fn format_pattern(name: &str) -> Option<&'static str> {
+    FORMATS.iter().find(|(n, _)| *n == name).map(|(_, p)| *p)
+}
+
+/// Keywords that annotate but never constrain (JSON Schema calls them
+/// annotations); accepted anywhere and ignored. `$defs` / `definitions`
+/// are containers whose contents are reached through `$ref`.
+const ANNOTATIONS: &[&str] = &[
+    "$comment",
+    "$defs",
+    "$id",
+    "$schema",
+    "default",
+    "definitions",
+    "deprecated",
+    "description",
+    "examples",
+    "readOnly",
+    "title",
+    "writeOnly",
+];
+
+/// Location inside the schema document, rendered as a JSON-pointer-ish
+/// `#/properties/name/type` string — carried by every error.
+#[derive(Clone, Debug, Default)]
+pub struct SchemaPath {
+    segs: Vec<String>,
+}
+
+impl SchemaPath {
+    pub fn root() -> SchemaPath {
+        SchemaPath::default()
+    }
+
+    /// The path of a `$ref` pointer target (`#/$defs/node` → that path).
+    pub fn from_pointer(pointer: &str) -> SchemaPath {
+        let segs = pointer
+            .trim_start_matches('#')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect();
+        SchemaPath { segs }
+    }
+
+    pub fn child(&self, seg: impl Into<String>) -> SchemaPath {
+        let mut segs = self.segs.clone();
+        segs.push(seg.into());
+        SchemaPath { segs }
+    }
+}
+
+impl fmt::Display for SchemaPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.segs.is_empty() {
+            write!(f, "#")
+        } else {
+            write!(f, "#/{}", self.segs.join("/"))
+        }
+    }
+}
+
+/// One schema node of the supported subset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchemaNode {
+    /// `{}` or `true` — any JSON value.
+    Any,
+    /// Intra-document `$ref` (resolved lazily by the emitter so cycles
+    /// become named-nonterminal recursion).
+    Ref { pointer: String },
+    /// `const` — exactly this value.
+    Const { value: Json },
+    /// `enum` — one of these values.
+    Enum { values: Vec<Json> },
+    /// `anyOf` / `oneOf` — alternation. (`oneOf` exclusivity is not
+    /// CFG-expressible; for the overlapping-branch case the grammar
+    /// enforces the `anyOf` relaxation — documented in DESIGN.md.)
+    /// `keyword` records which spelling the document used, so emit-stage
+    /// errors report the real path (`#/oneOf/1/...`).
+    AnyOf { keyword: &'static str, branches: Vec<SchemaNode> },
+    /// `type` — one entry per listed type.
+    Types { types: Vec<TypeSchema> },
+}
+
+/// A single `type` entry with its applicable constraint keywords.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TypeSchema {
+    Null,
+    Boolean,
+    String { pattern: Option<String>, format: Option<&'static str> },
+    Integer { minimum: Option<i64>, maximum: Option<i64> },
+    Number,
+    Object(ObjectSchema),
+    Array(ArraySchema),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObjectSchema {
+    /// Declared properties in canonical (sorted) order — the order the
+    /// emitted grammar fixes for generated output.
+    pub properties: Vec<(String, SchemaNode)>,
+    pub required: BTreeSet<String>,
+    /// `additionalProperties: false` was stated. With declared properties
+    /// the emitter produces a closed object either way (a strengthening,
+    /// never a weakening); without any, `closed` distinguishes `{}`-only
+    /// from "any object".
+    pub closed: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArraySchema {
+    /// `items` schema; `None` = any JSON value per item.
+    pub items: Option<Box<SchemaNode>>,
+    pub min_items: usize,
+    pub max_items: Option<usize>,
+}
+
+fn kind_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "boolean",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// Parse one schema value (object or boolean form) into the model.
+pub fn parse_schema(v: &Json, path: &SchemaPath) -> crate::Result<SchemaNode> {
+    match v {
+        Json::Bool(true) => Ok(SchemaNode::Any),
+        Json::Bool(false) => {
+            bail!("jsonschema at {path}: the `false` schema matches nothing")
+        }
+        Json::Obj(m) => parse_object_form(m, path),
+        other => bail!(
+            "jsonschema at {path}: a schema must be an object or boolean, got {}",
+            kind_name(other)
+        ),
+    }
+}
+
+type Map = std::collections::BTreeMap<String, Json>;
+
+/// Every key must end up in `used` (or be an annotation); anything else
+/// is an unsupported keyword — a hole the constraint would silently leak
+/// through.
+fn reject_unused(m: &Map, used: &BTreeSet<&str>, path: &SchemaPath, why: &str) -> crate::Result<()> {
+    for k in m.keys() {
+        if !used.contains(k.as_str()) && !ANNOTATIONS.contains(&k.as_str()) {
+            bail!("jsonschema at {}: unsupported keyword `{k}`{why}", path.child(k.clone()));
+        }
+    }
+    Ok(())
+}
+
+const SUPPORTED_HINT: &str = " (supported: type, properties, required, additionalProperties, \
+     enum, const, anyOf, oneOf, items, minItems, maxItems, pattern, format, minimum, maximum, \
+     exclusiveMinimum, exclusiveMaximum, $ref)";
+
+fn parse_object_form(m: &Map, path: &SchemaPath) -> crate::Result<SchemaNode> {
+    let mut used: BTreeSet<&str> = BTreeSet::new();
+
+    if let Some(r) = m.get("$ref") {
+        used.insert("$ref");
+        let Json::Str(pointer) = r else {
+            bail!("jsonschema at {}: `$ref` must be a string", path.child("$ref"));
+        };
+        reject_unused(m, &used, path, " (keywords cannot be combined with `$ref` here)")?;
+        return Ok(SchemaNode::Ref { pointer: pointer.clone() });
+    }
+    if let Some(c) = m.get("const") {
+        used.insert("const");
+        reject_unused(m, &used, path, " (keywords cannot be combined with `const` here)")?;
+        return Ok(SchemaNode::Const { value: c.clone() });
+    }
+    if let Some(e) = m.get("enum") {
+        used.insert("enum");
+        let Json::Arr(values) = e else {
+            bail!("jsonschema at {}: `enum` must be an array of values", path.child("enum"));
+        };
+        if values.is_empty() {
+            bail!("jsonschema at {}: `enum` must not be empty", path.child("enum"));
+        }
+        reject_unused(m, &used, path, " (keywords cannot be combined with `enum` here)")?;
+        return Ok(SchemaNode::Enum { values: values.clone() });
+    }
+    for comb in ["anyOf", "oneOf"] {
+        let Some(a) = m.get(comb) else { continue };
+        used.insert(comb);
+        let Json::Arr(branches) = a else {
+            bail!("jsonschema at {}: `{comb}` must be an array of schemas", path.child(comb));
+        };
+        if branches.is_empty() {
+            bail!("jsonschema at {}: `{comb}` must not be empty", path.child(comb));
+        }
+        let nodes: Vec<SchemaNode> = branches
+            .iter()
+            .enumerate()
+            .map(|(i, b)| parse_schema(b, &path.child(comb).child(i.to_string())))
+            .collect::<crate::Result<_>>()?;
+        reject_unused(m, &used, path, &format!(" (keywords cannot be combined with `{comb}` here)"))?;
+        return Ok(SchemaNode::AnyOf { keyword: comb, branches: nodes });
+    }
+
+    // `type` — explicit, or inferred from the structural keywords present
+    // (schemas commonly omit `"type": "object"` when `properties` is
+    // given).
+    let type_names: Vec<String> = match m.get("type") {
+        Some(Json::Str(s)) => {
+            used.insert("type");
+            vec![s.clone()]
+        }
+        Some(Json::Arr(a)) => {
+            used.insert("type");
+            if a.is_empty() {
+                bail!("jsonschema at {}: `type` array must not be empty", path.child("type"));
+            }
+            let mut names = Vec::new();
+            for t in a {
+                let Some(s) = t.as_str() else {
+                    bail!(
+                        "jsonschema at {}: `type` entries must be strings",
+                        path.child("type")
+                    );
+                };
+                if !names.iter().any(|n| n == s) {
+                    names.push(s.to_string());
+                }
+            }
+            names
+        }
+        Some(_) => bail!(
+            "jsonschema at {}: `type` must be a string or an array of strings",
+            path.child("type")
+        ),
+        None => {
+            let objish =
+                ["properties", "required", "additionalProperties"].iter().any(|k| m.contains_key(*k));
+            let arrish = ["items", "minItems", "maxItems"].iter().any(|k| m.contains_key(*k));
+            match (objish, arrish) {
+                (true, false) => vec!["object".to_string()],
+                (false, true) => vec!["array".to_string()],
+                (true, true) => bail!(
+                    "jsonschema at {path}: both object and array keywords without a `type` to disambiguate"
+                ),
+                (false, false) => {
+                    // No constraint keywords at all: the `{}` any-value schema.
+                    reject_unused(m, &used, path, SUPPORTED_HINT)?;
+                    return Ok(SchemaNode::Any);
+                }
+            }
+        }
+    };
+
+    let mut types = Vec::new();
+    for name in &type_names {
+        types.push(match name.as_str() {
+            "null" => TypeSchema::Null,
+            "boolean" => TypeSchema::Boolean,
+            "number" => TypeSchema::Number,
+            "integer" => parse_integer(m, &mut used, path)?,
+            "string" => parse_string(m, &mut used, path)?,
+            "object" => TypeSchema::Object(parse_object(m, &mut used, path)?),
+            "array" => TypeSchema::Array(parse_array(m, &mut used, path)?),
+            other => bail!(
+                "jsonschema at {}: unknown type `{other}` (known: null, boolean, integer, number, string, array, object)",
+                path.child("type")
+            ),
+        });
+    }
+    reject_unused(m, &used, path, SUPPORTED_HINT)?;
+    Ok(SchemaNode::Types { types })
+}
+
+fn parse_string(
+    m: &Map,
+    used: &mut BTreeSet<&'static str>,
+    path: &SchemaPath,
+) -> crate::Result<TypeSchema> {
+    let pattern = match m.get("pattern") {
+        None => None,
+        Some(Json::Str(p)) => {
+            used.insert("pattern");
+            // Validate the dialect up front so the failure names the
+            // schema location, not a deep compile stage.
+            let ast = match crate::regex::parse(p) {
+                Ok(ast) => ast,
+                Err(e) => {
+                    bail!("jsonschema at {}: invalid `pattern`: {e}", path.child("pattern"))
+                }
+            };
+            // The emitter matches the pattern over the *raw bytes* of the
+            // generated string; a pattern that can consume `"`, `\` or a
+            // control byte would let the model emit bytes that break the
+            // JSON string around it. Loud error, not invalid output.
+            if !pattern_is_json_safe(&ast) {
+                bail!(
+                    "jsonschema at {}: `pattern` may match `\"`, `\\` or a control byte, which cannot appear raw inside a generated JSON string; restrict the pattern (e.g. a class excluding them)",
+                    path.child("pattern")
+                );
+            }
+            Some(p.clone())
+        }
+        Some(_) => bail!("jsonschema at {}: `pattern` must be a string", path.child("pattern")),
+    };
+    let format = match m.get("format") {
+        None => None,
+        Some(Json::Str(f)) => {
+            used.insert("format");
+            match format_pattern(f) {
+                Some(p) => Some(p),
+                None => {
+                    let known: Vec<&str> = FORMATS.iter().map(|(n, _)| *n).collect();
+                    bail!(
+                        "jsonschema at {}: unsupported `format` `{f}` (supported: {})",
+                        path.child("format"),
+                        known.join(", ")
+                    );
+                }
+            }
+        }
+        Some(_) => bail!("jsonschema at {}: `format` must be a string", path.child("format")),
+    };
+    if pattern.is_some() && format.is_some() {
+        bail!("jsonschema at {path}: `pattern` and `format` cannot be combined");
+    }
+    Ok(TypeSchema::String { pattern, format })
+}
+
+/// Can every byte this pattern consumes appear raw inside a JSON string?
+/// (Conservative atom-level walk: a class or literal touching `"`, `\` or
+/// a control byte fails, even on branches a match might never take.)
+fn pattern_is_json_safe(re: &crate::regex::Regex) -> bool {
+    use crate::regex::Regex as R;
+    let safe_byte = |b: u8| b >= 0x20 && b != b'"' && b != b'\\';
+    match re {
+        R::Empty => true,
+        R::Literal(bytes) => bytes.iter().all(|&b| safe_byte(b)),
+        R::Class(set) => set.iter().all(safe_byte),
+        R::Concat(parts) | R::Alt(parts) => parts.iter().all(pattern_is_json_safe),
+        R::Star(inner) | R::Plus(inner) | R::Opt(inner) => pattern_is_json_safe(inner),
+        R::Repeat(inner, _, _) => pattern_is_json_safe(inner),
+    }
+}
+
+fn int_keyword(
+    m: &Map,
+    key: &'static str,
+    used: &mut BTreeSet<&'static str>,
+    path: &SchemaPath,
+) -> crate::Result<Option<i64>> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) => {
+            used.insert(key);
+            if n.fract() != 0.0 || n.abs() > 9.0e15 {
+                bail!(
+                    "jsonschema at {}: `{key}` must be an integer in ±9e15",
+                    path.child(key)
+                );
+            }
+            Ok(Some(*n as i64))
+        }
+        Some(_) => bail!("jsonschema at {}: `{key}` must be a number", path.child(key)),
+    }
+}
+
+fn parse_integer(
+    m: &Map,
+    used: &mut BTreeSet<&'static str>,
+    path: &SchemaPath,
+) -> crate::Result<TypeSchema> {
+    let mut minimum = int_keyword(m, "minimum", used, path)?;
+    if let Some(x) = int_keyword(m, "exclusiveMinimum", used, path)? {
+        let lo = x.checked_add(1).ok_or_else(|| {
+            let at = path.child("exclusiveMinimum");
+            anyhow::anyhow!("jsonschema at {at}: `exclusiveMinimum` overflow")
+        })?;
+        minimum = Some(minimum.map_or(lo, |m0| m0.max(lo)));
+    }
+    let mut maximum = int_keyword(m, "maximum", used, path)?;
+    if let Some(x) = int_keyword(m, "exclusiveMaximum", used, path)? {
+        let hi = x.checked_sub(1).ok_or_else(|| {
+            let at = path.child("exclusiveMaximum");
+            anyhow::anyhow!("jsonschema at {at}: `exclusiveMaximum` overflow")
+        })?;
+        maximum = Some(maximum.map_or(hi, |m0| m0.min(hi)));
+    }
+    if let (Some(lo), Some(hi)) = (minimum, maximum) {
+        if lo > hi {
+            bail!("jsonschema at {path}: integer bounds admit no value (minimum {lo} > maximum {hi})");
+        }
+    }
+    Ok(TypeSchema::Integer { minimum, maximum })
+}
+
+fn parse_object(
+    m: &Map,
+    used: &mut BTreeSet<&'static str>,
+    path: &SchemaPath,
+) -> crate::Result<ObjectSchema> {
+    let mut properties: Vec<(String, SchemaNode)> = Vec::new();
+    if let Some(p) = m.get("properties") {
+        used.insert("properties");
+        let Json::Obj(props) = p else {
+            bail!(
+                "jsonschema at {}: `properties` must be an object of schemas",
+                path.child("properties")
+            );
+        };
+        for (name, sub) in props {
+            let node = parse_schema(sub, &path.child("properties").child(name.clone()))?;
+            properties.push((name.clone(), node));
+        }
+    }
+    let mut required = BTreeSet::new();
+    if let Some(r) = m.get("required") {
+        used.insert("required");
+        let Json::Arr(names) = r else {
+            bail!(
+                "jsonschema at {}: `required` must be an array of property names",
+                path.child("required")
+            );
+        };
+        for n in names {
+            let Some(s) = n.as_str() else {
+                bail!(
+                    "jsonschema at {}: `required` entries must be strings",
+                    path.child("required")
+                );
+            };
+            if !properties.iter().any(|(p, _)| p == s) {
+                bail!(
+                    "jsonschema at {}: required property `{s}` is not declared in `properties`",
+                    path.child("required")
+                );
+            }
+            required.insert(s.to_string());
+        }
+    }
+    let closed = match m.get("additionalProperties") {
+        None => false,
+        Some(Json::Bool(b)) => {
+            used.insert("additionalProperties");
+            !*b
+        }
+        Some(_) => bail!(
+            "jsonschema at {}: schema-valued `additionalProperties` is unsupported (use `false`, `true`, or omit)",
+            path.child("additionalProperties")
+        ),
+    };
+    Ok(ObjectSchema { properties, required, closed })
+}
+
+fn usize_keyword(
+    m: &Map,
+    key: &'static str,
+    used: &mut BTreeSet<&'static str>,
+    path: &SchemaPath,
+) -> crate::Result<Option<usize>> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) => {
+            used.insert(key);
+            if n.fract() != 0.0 || *n < 0.0 || *n > 1.0e9 {
+                bail!(
+                    "jsonschema at {}: `{key}` must be a non-negative integer",
+                    path.child(key)
+                );
+            }
+            Ok(Some(*n as usize))
+        }
+        Some(_) => bail!("jsonschema at {}: `{key}` must be a number", path.child(key)),
+    }
+}
+
+fn parse_array(
+    m: &Map,
+    used: &mut BTreeSet<&'static str>,
+    path: &SchemaPath,
+) -> crate::Result<ArraySchema> {
+    let items = match m.get("items") {
+        None | Some(Json::Bool(true)) => {
+            if m.contains_key("items") {
+                used.insert("items");
+            }
+            None
+        }
+        Some(s) => {
+            used.insert("items");
+            Some(Box::new(parse_schema(s, &path.child("items"))?))
+        }
+    };
+    let min_items = usize_keyword(m, "minItems", used, path)?.unwrap_or(0);
+    let max_items = usize_keyword(m, "maxItems", used, path)?;
+    if let Some(mx) = max_items {
+        if min_items > mx {
+            bail!("jsonschema at {path}: `minItems` {min_items} exceeds `maxItems` {mx}");
+        }
+    }
+    let widest = max_items.unwrap_or(min_items);
+    if widest > MAX_UNROLL || min_items > MAX_UNROLL {
+        bail!(
+            "jsonschema at {path}: `minItems`/`maxItems` of {widest} exceeds the bounded-unrolling limit {MAX_UNROLL}"
+        );
+    }
+    Ok(ArraySchema { items, min_items, max_items })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> crate::Result<SchemaNode> {
+        parse_schema(&Json::parse(src).unwrap(), &SchemaPath::root())
+    }
+
+    #[test]
+    fn paths_render_as_pointers() {
+        assert_eq!(SchemaPath::root().to_string(), "#");
+        assert_eq!(SchemaPath::root().child("properties").child("x").to_string(), "#/properties/x");
+        assert_eq!(SchemaPath::from_pointer("#/$defs/node").to_string(), "#/$defs/node");
+        assert_eq!(SchemaPath::from_pointer("#").to_string(), "#");
+    }
+
+    #[test]
+    fn parses_any_and_booleans() {
+        assert_eq!(parse("{}").unwrap(), SchemaNode::Any);
+        assert_eq!(parse("true").unwrap(), SchemaNode::Any);
+        let err = parse("false").unwrap_err().to_string();
+        assert!(err.contains("matches nothing"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_keyword_is_path_annotated() {
+        let err = parse(
+            r#"{"type": "object", "properties": {"x": {"type": "string", "minLength": 3}}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("#/properties/x/minLength"), "{err}");
+        assert!(err.contains("unsupported keyword `minLength`"), "{err}");
+    }
+
+    #[test]
+    fn annotations_are_ignored() {
+        let node = parse(
+            r#"{"title": "t", "description": "d", "$schema": "s", "type": "string", "default": "x"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            node,
+            SchemaNode::Types { types: vec![TypeSchema::String { pattern: None, format: None }] }
+        );
+    }
+
+    #[test]
+    fn type_arrays_dedupe_and_parse() {
+        let node = parse(r#"{"type": ["string", "null", "string"]}"#).unwrap();
+        let SchemaNode::Types { types } = node else { panic!() };
+        assert_eq!(types.len(), 2);
+        assert!(parse(r#"{"type": "frob"}"#).unwrap_err().to_string().contains("unknown type"));
+        assert!(parse(r#"{"type": []}"#).is_err());
+    }
+
+    #[test]
+    fn object_shape_is_inferred_and_validated() {
+        let node = parse(
+            r#"{"properties": {"b": {"type": "integer"}, "a": {"type": "null"}}, "required": ["a"]}"#,
+        )
+        .unwrap();
+        let SchemaNode::Types { types } = node else { panic!() };
+        let TypeSchema::Object(o) = &types[0] else { panic!("{types:?}") };
+        // Canonical (sorted) property order.
+        assert_eq!(o.properties[0].0, "a");
+        assert_eq!(o.properties[1].0, "b");
+        assert!(o.required.contains("a") && !o.required.contains("b"));
+        assert!(!o.closed);
+
+        let err = parse(r#"{"type": "object", "properties": {}, "required": ["ghost"]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("#/required") && err.contains("ghost"), "{err}");
+
+        let err = parse(r#"{"type": "object", "additionalProperties": {"type": "string"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("additionalProperties"), "{err}");
+    }
+
+    #[test]
+    fn integer_bounds_combine_and_validate() {
+        let node = parse(r#"{"type": "integer", "exclusiveMinimum": 0, "maximum": 99}"#).unwrap();
+        let SchemaNode::Types { types } = node else { panic!() };
+        assert_eq!(types[0], TypeSchema::Integer { minimum: Some(1), maximum: Some(99) });
+        assert!(parse(r#"{"type": "integer", "minimum": 5, "maximum": 2}"#).is_err());
+        assert!(parse(r#"{"type": "integer", "minimum": 1.5}"#).is_err());
+        // Bounds on a non-numeric type are a leak, not a no-op.
+        let err =
+            parse(r#"{"type": "string", "minimum": 3}"#).unwrap_err().to_string();
+        assert!(err.contains("unsupported keyword `minimum`"), "{err}");
+    }
+
+    #[test]
+    fn array_unrolling_is_capped() {
+        let node =
+            parse(r#"{"type": "array", "items": {"type": "integer"}, "minItems": 1, "maxItems": 3}"#)
+                .unwrap();
+        let SchemaNode::Types { types } = node else { panic!() };
+        let TypeSchema::Array(a) = &types[0] else { panic!() };
+        assert_eq!((a.min_items, a.max_items), (1, Some(3)));
+        assert!(a.items.is_some());
+
+        let err = parse(r#"{"type": "array", "maxItems": 100000}"#).unwrap_err().to_string();
+        assert!(err.contains("bounded-unrolling limit"), "{err}");
+        assert!(parse(r#"{"type": "array", "minItems": 3, "maxItems": 1}"#).is_err());
+    }
+
+    #[test]
+    fn enum_const_ref_combinators() {
+        assert_eq!(
+            parse(r#"{"const": 42}"#).unwrap(),
+            SchemaNode::Const { value: Json::Num(42.0) }
+        );
+        assert!(parse(r#"{"enum": []}"#).is_err());
+        assert_eq!(
+            parse(r#"{"$ref": "#/$defs/x"}"#).unwrap(),
+            SchemaNode::Ref { pointer: "#/$defs/x".into() }
+        );
+        let SchemaNode::AnyOf { keyword, branches } =
+            parse(r#"{"anyOf": [{"type": "null"}, {"type": "boolean"}]}"#).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!((keyword, branches.len()), ("anyOf", 2));
+        // Combining $ref with constraint keywords is rejected, not dropped.
+        assert!(parse(r#"{"$ref": "#/x", "type": "string"}"#).is_err());
+        // anyOf + oneOf together is a conflict.
+        assert!(parse(r#"{"anyOf": [true], "oneOf": [true]}"#).is_err());
+    }
+
+    #[test]
+    fn string_pattern_and_format() {
+        let node = parse(r#"{"type": "string", "pattern": "[a-z]+"}"#).unwrap();
+        let SchemaNode::Types { types } = node else { panic!() };
+        assert_eq!(types[0], TypeSchema::String { pattern: Some("[a-z]+".into()), format: None });
+        // Invalid dialect fails at the schema location.
+        let err = parse(r#"{"type": "string", "pattern": "[z-a]"}"#).unwrap_err().to_string();
+        assert!(err.contains("#/pattern"), "{err}");
+        // Patterns that could emit bytes breaking the surrounding JSON
+        // string are rejected up front, not served as invalid output.
+        for unsafe_pat in [r#"a"b"#, r"a\\b", "[^a]", r"a\nb"] {
+            let src = format!(
+                r#"{{"type": "string", "pattern": {}}}"#,
+                Json::str(unsafe_pat).to_string()
+            );
+            let err = parse(&src).unwrap_err().to_string();
+            assert!(err.contains("control byte") || err.contains("#/pattern"), "{unsafe_pat}: {err}");
+        }
+        // Unknown formats list the supported set.
+        let err = parse(r#"{"type": "string", "format": "hostname"}"#).unwrap_err().to_string();
+        assert!(err.contains("uuid") && err.contains("date-time"), "{err}");
+        assert!(parse(r#"{"type": "string", "pattern": "a", "format": "date"}"#).is_err());
+        // Every builtin format pattern is valid in the crate dialect.
+        for (name, pat) in FORMATS {
+            crate::regex::parse(pat).unwrap_or_else(|e| panic!("format {name}: {e:#}"));
+        }
+    }
+}

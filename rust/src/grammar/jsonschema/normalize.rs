@@ -1,0 +1,98 @@
+//! Schema-source canonicalization and intra-document `$ref` resolution.
+//!
+//! * [`canonical_source`] — the canonical text form of a schema document:
+//!   parse + re-serialize through [`Json`] (objects are `BTreeMap`s, so
+//!   keys sort; whitespace and number spellings normalize away). Two
+//!   semantically identical schema sources — differing key order,
+//!   insignificant whitespace, `1` vs `1.0` — canonicalize to the same
+//!   bytes, which is what makes
+//!   [`ConstraintSpec::fingerprint`](crate::constraint::ConstraintSpec)
+//!   stable enough for registry and artifact dedup to fire.
+//! * [`resolve_pointer`] — RFC 6901 JSON Pointers restricted to the
+//!   current document (`#`, `#/$defs/node`, `~0`/`~1` escapes). External
+//!   (`http://...`) and anchor (`#name`) refs are rejected, not fetched:
+//!   a constraint must never depend on state the fingerprint cannot see.
+
+use crate::util::Json;
+use anyhow::bail;
+
+/// Canonical text form of a schema source (sorted keys, no insignificant
+/// whitespace). Errors if the source is not valid JSON.
+pub fn canonical_source(source: &str) -> crate::Result<String> {
+    Ok(Json::parse(source.trim())?.to_string())
+}
+
+/// Resolve an intra-document JSON Pointer against the schema document.
+pub fn resolve_pointer<'a>(root: &'a Json, pointer: &str) -> crate::Result<&'a Json> {
+    let Some(rest) = pointer.strip_prefix('#') else {
+        bail!("jsonschema: only intra-document `$ref` (`#/...`) is supported, got `{pointer}`");
+    };
+    if rest.is_empty() {
+        return Ok(root);
+    }
+    let Some(rest) = rest.strip_prefix('/') else {
+        bail!("jsonschema: unsupported `$ref` form `{pointer}` (anchors are not supported; use `#/...` pointers)");
+    };
+    let mut cur = root;
+    for raw in rest.split('/') {
+        let seg = raw.replace("~1", "/").replace("~0", "~");
+        cur = match cur {
+            Json::Obj(map) => map.get(&seg).ok_or_else(|| {
+                anyhow::anyhow!("jsonschema: `$ref` target `{pointer}` not found (no key `{seg}`)")
+            })?,
+            Json::Arr(items) => {
+                let idx: usize = seg.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "jsonschema: `$ref` `{pointer}` indexes an array with non-number `{seg}`"
+                    )
+                })?;
+                items.get(idx).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "jsonschema: `$ref` target `{pointer}` not found (index {idx} out of range)"
+                    )
+                })?
+            }
+            _ => bail!("jsonschema: `$ref` `{pointer}` traverses a non-container at `{seg}`"),
+        };
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalization_erases_key_order_and_whitespace() {
+        let a = canonical_source(r#"{"b": 1, "a": {"y": [1, 2], "x": null}}"#).unwrap();
+        let b = canonical_source("  {\"a\":{\"x\":null,\n\t\"y\":[1,2]},\"b\":1.0}  ").unwrap();
+        assert_eq!(a, b);
+        assert!(canonical_source("{nope").is_err());
+    }
+
+    #[test]
+    fn pointers_resolve_with_escapes() {
+        let doc = Json::parse(
+            r#"{"$defs": {"a/b": {"type": "null"}, "t~de": 7}, "arr": [10, 20]}"#,
+        )
+        .unwrap();
+        assert_eq!(resolve_pointer(&doc, "#").unwrap(), &doc);
+        assert_eq!(
+            resolve_pointer(&doc, "#/$defs/a~1b").unwrap(),
+            &Json::parse(r#"{"type": "null"}"#).unwrap()
+        );
+        assert_eq!(resolve_pointer(&doc, "#/$defs/t~0de").unwrap(), &Json::Num(7.0));
+        assert_eq!(resolve_pointer(&doc, "#/arr/1").unwrap(), &Json::Num(20.0));
+    }
+
+    #[test]
+    fn bad_pointers_are_loud() {
+        let doc = Json::parse(r#"{"a": [1]}"#).unwrap();
+        assert!(resolve_pointer(&doc, "#/missing").is_err());
+        assert!(resolve_pointer(&doc, "#/a/5").is_err());
+        assert!(resolve_pointer(&doc, "#/a/x").is_err());
+        assert!(resolve_pointer(&doc, "#/a/0/deep").is_err());
+        assert!(resolve_pointer(&doc, "http://example.com/schema#/a").is_err());
+        assert!(resolve_pointer(&doc, "#anchor").is_err());
+    }
+}

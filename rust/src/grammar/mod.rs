@@ -10,6 +10,11 @@
 //! * [`builtin`] — the five evaluation grammars from the paper (JSON,
 //!   GSM8K-schema JSON, C subset, XML-with-schema, fixed template) plus the
 //!   CoNLL NER schema, translated into this notation.
+//! * [`jsonschema`] — the JSON Schema front-end: a useful schema subset
+//!   (types, properties/required, enum/const, bounded arrays,
+//!   anyOf/oneOf, pattern/format, integer bounds, intra-document `$ref`)
+//!   compiled to the same CFG representation, with path-annotated errors
+//!   for everything outside the subset.
 //!
 //! Design note: the paper's llama.cpp-style notation mixes character-level
 //! constructs into grammar rules (`identifier ::= [a-zA-Z_] [a-zA-Z_0-9]*`).
@@ -22,6 +27,7 @@
 pub mod builtin;
 pub mod cfg;
 pub mod ebnf;
+pub mod jsonschema;
 
 pub use cfg::{Cfg, CfgBuilder, Production, Symbol, TermId, Terminal, TerminalKind};
 pub use ebnf::parse_ebnf;

@@ -5,7 +5,8 @@
 //!
 //! The crate is organised in three tiers:
 //!
-//! 1. **Substrates** — [`regex`] (Thompson NFAs), [`grammar`] (EBNF → CFG),
+//! 1. **Substrates** — [`regex`] (Thompson NFAs), [`grammar`] (EBNF → CFG
+//!    and the [`grammar::jsonschema`] JSON Schema → CFG front-end),
 //!    [`tokenizer`] (byte-level BPE). Everything DOMINO depends on is built
 //!    from scratch here.
 //! 2. **The paper's contribution** — [`scanner`] (character-level union NFA,

@@ -4,12 +4,14 @@
 //! domino serve [--addr 127.0.0.1:7761] [--engines 1] [--slots 4]
 //!              [--queue-depth 64] [--deadline-ms N] [--artifact-dir DIR] [--mock]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
-//!                 --ebnf-file PATH | --regex PATTERN | --stop "a,b"]
+//!                 --ebnf-file PATH | --json-schema SRC |
+//!                 --json-schema-file PATH | --regex PATTERN | --stop "a,b"]
 //!                 [--method domino|domino-full|online|unconstrained]
 //!                 [--k N] [--speculative S] [--max-tokens N]
 //!                 [--temperature T] [--seed N] [--artifact-dir DIR]
 //! domino precompile --artifact-dir DIR [--manifest FILE]
-//!                 [--grammar NAME | --ebnf SRC | --ebnf-file PATH | --regex P]
+//!                 [--grammar NAME | --ebnf SRC | --ebnf-file PATH |
+//!                  --json-schema SRC | --json-schema-file PATH | --regex P]
 //!                 [--k N] [--mock]   # batch-compile constraints offline
 //! domino grammar <name>         # inspect: terminals, tree sizes, precompute time
 //! domino grammars               # list builtin grammars
@@ -120,12 +122,17 @@ fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler>
 }
 
 /// The constraint spec named by CLI flags: one of `--ebnf-file` /
-/// `--ebnf` / `--regex` / `--grammar` / `--stop` (first present wins).
+/// `--ebnf` / `--json-schema-file` / `--json-schema` / `--regex` /
+/// `--grammar` / `--stop` (first present wins).
 fn parse_spec(flags: &HashMap<String, String>) -> domino::Result<Option<ConstraintSpec>> {
     Ok(if let Some(path) = flags.get("ebnf-file") {
         Some(ConstraintSpec::ebnf(std::fs::read_to_string(path)?))
     } else if let Some(src) = flags.get("ebnf") {
         Some(ConstraintSpec::ebnf(src.clone()))
+    } else if let Some(path) = flags.get("json-schema-file") {
+        Some(ConstraintSpec::json_schema(std::fs::read_to_string(path)?))
+    } else if let Some(src) = flags.get("json-schema") {
+        Some(ConstraintSpec::json_schema(src.clone()))
     } else if let Some(p) = flags.get("regex") {
         Some(ConstraintSpec::regex(p.clone()))
     } else if let Some(g) = flags.get("grammar") {
@@ -193,7 +200,9 @@ fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
 
 /// `(spec, k)` pairs from a precompile manifest: a JSON array (or
 /// `{"constraints": [...]}`) of objects with one of `grammar` / `ebnf` /
-/// `ebnf_file` / `regex`, plus an optional `k` (lookahead; null/absent = ∞).
+/// `ebnf_file` / `json_schema` (inline schema object or source string) /
+/// `json_schema_file` / `regex`, plus an optional `k` (lookahead;
+/// null/absent = ∞).
 fn manifest_entries(v: &Json) -> domino::Result<Vec<(ConstraintSpec, Option<u32>)>> {
     let arr: &[Json] = if let Json::Arr(a) = v {
         a
@@ -208,12 +217,25 @@ fn manifest_entries(v: &Json) -> domino::Result<Vec<(ConstraintSpec, Option<u32>
             ConstraintSpec::ebnf(src)
         } else if let Some(path) = e.get("ebnf_file").and_then(|x| x.as_str()) {
             ConstraintSpec::ebnf(std::fs::read_to_string(path)?)
+        } else if let Some(schema) = e.get("json_schema") {
+            match schema {
+                // Inline schema object, or its source as a string.
+                Json::Obj(_) => ConstraintSpec::json_schema(schema.to_string()),
+                Json::Str(s) => ConstraintSpec::json_schema(s.clone()),
+                _ => anyhow::bail!(
+                    "manifest entry {i}: `json_schema` must be a schema object or a string"
+                ),
+            }
+        } else if let Some(path) = e.get("json_schema_file").and_then(|x| x.as_str()) {
+            ConstraintSpec::json_schema(std::fs::read_to_string(path)?)
         } else if let Some(p) = e.get("regex").and_then(|x| x.as_str()) {
             ConstraintSpec::regex(p)
         } else if let Some(g) = e.get("grammar").and_then(|x| x.as_str()) {
             ConstraintSpec::builtin(g)
         } else {
-            anyhow::bail!("manifest entry {i} needs one of `grammar`, `ebnf`, `ebnf_file`, `regex`");
+            anyhow::bail!(
+                "manifest entry {i} needs one of `grammar`, `ebnf`, `ebnf_file`, `json_schema`, `json_schema_file`, `regex`"
+            );
         };
         let k = match e.get("k") {
             None | Some(Json::Null) => None,
@@ -251,7 +273,9 @@ fn cmd_precompile(flags: HashMap<String, String>) -> domino::Result<()> {
         entries.push((spec, flags.get("k").and_then(|k| k.parse().ok())));
     }
     if entries.is_empty() {
-        anyhow::bail!("nothing to precompile: pass --manifest FILE and/or --grammar/--ebnf/--regex");
+        anyhow::bail!(
+            "nothing to precompile: pass --manifest FILE and/or --grammar/--ebnf/--json-schema/--regex"
+        );
     }
     let store = ArtifactStore::new(&dir)?;
     let registry = EngineRegistry::with_store(entries.len().max(8), store);
@@ -294,8 +318,12 @@ fn cmd_precompile(flags: HashMap<String, String>) -> domino::Result<()> {
 }
 
 fn cmd_grammar(name: &str) -> domino::Result<()> {
-    let cfg = builtin::by_name(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown grammar `{name}` (try `domino grammars`)"))?;
+    let cfg = builtin::by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown grammar `{name}` (known: {})",
+            builtin::GRAMMAR_NAMES.join(", ")
+        )
+    })?;
     println!("grammar `{name}`:");
     println!("  nonterminals: {}", cfg.nonterminals.len());
     println!("  productions:  {}", cfg.productions.len());
@@ -351,12 +379,14 @@ fn main() {
                  serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
                  \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--mock]\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
+                 \u{20}           --json-schema SRC | --json-schema-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
                  \u{20}          [--method domino|domino-full|online|unconstrained]\n\
                  \u{20}          [--k N] [--speculative S] [--max-tokens N] [--temperature T] [--seed N]\n\
                  \u{20}          [--artifact-dir DIR] [--mock]\n\
                  precompile --artifact-dir DIR [--manifest FILE]\n\
-                 \u{20}          [--grammar NAME | --ebnf SRC | --ebnf-file PATH | --regex P] [--k N] [--mock]\n\
+                 \u{20}          [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
+                 \u{20}           --json-schema SRC | --json-schema-file PATH | --regex P] [--k N] [--mock]\n\
                  \u{20}          batch-compile constraints into the persistent artifact store\n\
                  \u{20}          (servers with the same --artifact-dir then boot warm)\n\
                  grammar   NAME    inspect a builtin grammar\n\

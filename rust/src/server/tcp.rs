@@ -11,12 +11,20 @@
 //! ```
 //! `method`: "unconstrained" | "domino" | "domino-full" | "online".
 //!
-//! The constraint itself is any ONE of (first match wins):
+//! The constraint itself is exactly ONE of:
 //! * `"ebnf": "root ::= ..."` — an inline grammar in the crate's EBNF
 //!   notation, compiled on first sight and cached by content hash;
+//! * `"json_schema": {...}` (or the same document as a string) — a JSON
+//!   Schema compiled to a grammar (see `grammar::jsonschema` for the
+//!   supported subset; unsupported keywords are a path-annotated error,
+//!   never a silently weakened constraint);
 //! * `"regex": "[0-9]+"` — output is exactly one match of the pattern;
-//! * `"grammar": "json"` — a builtin evaluation grammar by name;
+//! * `"grammar": "json"` — a builtin evaluation grammar by name
+//!   (unknown names are rejected here, listing the known grammars);
 //! * `"stop": ["\n\n"]` — free generation until a stop sequence appears.
+//!
+//! Supplying more than one of these fields is a structured `bad request`
+//! error — the server refuses to guess which constraint was meant.
 //!
 //! Validation: `k` / `speculative` / `max_tokens` / `seed` /
 //! `temperature` / `deadline_ms` must be non-negative finite numbers
@@ -98,39 +106,85 @@ fn non_negative(v: &Json, name: &str) -> crate::Result<Option<f64>> {
     }
 }
 
+/// The request fields that each name a constraint. Exactly one may be
+/// present — "first match wins" would silently ignore the others.
+const CONSTRAINT_FIELDS: &[&str] = &["ebnf", "json_schema", "regex", "grammar", "stop"];
+
+/// Fetch `name` as a string, rejecting non-string values (a number under
+/// `"regex"` is a client bug, not a missing constraint).
+fn require_str<'a>(v: &'a Json, name: &str) -> crate::Result<&'a str> {
+    v.get(name)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("`{name}` must be a string"))
+}
+
+/// The request's constraint spec, from the single present constraint
+/// field; conflicting fields are a structured error.
+fn parse_spec(v: &Json) -> crate::Result<Option<ConstraintSpec>> {
+    let present: Vec<&str> = CONSTRAINT_FIELDS
+        .iter()
+        .copied()
+        .filter(|name| !matches!(v.get(name), None | Some(Json::Null)))
+        .collect();
+    if present.len() > 1 {
+        anyhow::bail!(
+            "conflicting constraint fields `{}` (pass exactly one of `{}`)",
+            present.join("`, `"),
+            CONSTRAINT_FIELDS.join("`, `")
+        );
+    }
+    Ok(match present.first().copied() {
+        None => None,
+        Some("ebnf") => Some(ConstraintSpec::ebnf(require_str(v, "ebnf")?)),
+        Some("regex") => Some(ConstraintSpec::regex(require_str(v, "regex")?)),
+        Some("json_schema") => match v.get("json_schema") {
+            // Inline object (the ergonomic form) or the document as a
+            // string — both normalize to the same canonical source.
+            Some(obj @ Json::Obj(_)) => Some(ConstraintSpec::json_schema(obj.to_string())),
+            Some(Json::Str(s)) => Some(ConstraintSpec::json_schema(s.clone())),
+            _ => anyhow::bail!("`json_schema` must be a schema object or its source as a string"),
+        },
+        Some("grammar") => {
+            let name = require_str(v, "grammar")?.trim().to_ascii_lowercase();
+            if !crate::grammar::builtin::GRAMMAR_NAMES.contains(&name.as_str()) {
+                anyhow::bail!(
+                    "unknown builtin grammar `{name}` (known: {})",
+                    crate::grammar::builtin::GRAMMAR_NAMES.join(", ")
+                );
+            }
+            Some(ConstraintSpec::builtin(name))
+        }
+        Some("stop") => {
+            // `stop` accepts the scalar form common to serving APIs as
+            // well as an array; anything else is an error rather than a
+            // silent no-constraint.
+            let seqs = match v.get("stop") {
+                Some(Json::Str(s)) => vec![s.clone()],
+                Some(Json::Arr(a)) => {
+                    let mut seqs = Vec::with_capacity(a.len());
+                    for x in a {
+                        match x.as_str() {
+                            Some(s) => seqs.push(s.to_string()),
+                            None => anyhow::bail!("stop entries must be strings"),
+                        }
+                    }
+                    seqs
+                }
+                _ => anyhow::bail!("stop must be a string or an array of strings"),
+            };
+            Some(ConstraintSpec::stop(seqs))
+        }
+        Some(other) => unreachable!("unhandled constraint field `{other}`"),
+    })
+}
+
 fn parse_request_value(v: &Json) -> crate::Result<GenRequest> {
     let prompt = v.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string();
     let method = v.get("method").and_then(|m| m.as_str()).unwrap_or("domino");
     let k = non_negative(v, "k")?.map(|k| k as u32);
     let speculative = non_negative(v, "speculative")?.map(|s| s as usize);
     let max_tokens = non_negative(v, "max_tokens")?.map(|m| m as usize).unwrap_or(128);
-    // `stop` accepts the scalar form common to serving APIs as well as an
-    // array; anything else is an error rather than a silent no-constraint.
-    let stop: Option<Vec<String>> = match v.get("stop") {
-        None => None,
-        Some(Json::Str(s)) => Some(vec![s.clone()]),
-        Some(Json::Arr(a)) => {
-            let mut seqs = Vec::with_capacity(a.len());
-            for x in a {
-                match x.as_str() {
-                    Some(s) => seqs.push(s.to_string()),
-                    None => anyhow::bail!("stop entries must be strings"),
-                }
-            }
-            Some(seqs)
-        }
-        Some(_) => anyhow::bail!("stop must be a string or an array of strings"),
-    };
-    let spec = if let Some(src) = v.get("ebnf").and_then(|g| g.as_str()) {
-        Some(ConstraintSpec::ebnf(src))
-    } else if let Some(p) = v.get("regex").and_then(|g| g.as_str()) {
-        Some(ConstraintSpec::regex(p))
-    } else if let Some(g) = v.get("grammar").and_then(|g| g.as_str()) {
-        Some(ConstraintSpec::builtin(g))
-    } else {
-        stop.map(ConstraintSpec::stop)
-    };
-    let constraint = Constraint::from_parts(method, spec, k, speculative);
+    let constraint = Constraint::from_parts(method, parse_spec(v)?, k, speculative);
     Ok(GenRequest {
         prompt,
         constraint,
@@ -404,10 +458,68 @@ mod tests {
         // Malformed stop values are errors, not silent no-constraints.
         assert!(parse_request(r#"{"prompt": "x", "stop": 42}"#).is_err());
         assert!(parse_request(r#"{"prompt": "x", "stop": [42]}"#).is_err());
-        // Inline EBNF takes precedence over a builtin name on one line.
-        let r = parse_request(r#"{"prompt": "x", "ebnf": "root ::= \"a\"", "grammar": "json"}"#)
-            .unwrap();
-        assert!(matches!(r.constraint.spec, ConstraintSpec::Ebnf { .. }));
+        // Non-string constraint sources are client bugs, not no-ops.
+        assert!(parse_request(r#"{"prompt": "x", "ebnf": 7}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "regex": false}"#).is_err());
+        // Explicit nulls read as "field absent", matching the knobs.
+        let r = parse_request(r#"{"prompt": "x", "ebnf": null, "grammar": "json"}"#).unwrap();
+        assert_eq!(r.constraint.spec, ConstraintSpec::builtin("json"));
+    }
+
+    #[test]
+    fn parses_json_schema_constraints() {
+        // Inline schema object.
+        let r = parse_request(
+            r#"{"prompt": "x", "json_schema": {"type": "object", "required": ["a"], "properties": {"a": {"type": "integer"}}}}"#,
+        )
+        .unwrap();
+        let ConstraintSpec::JsonSchema { source } = &r.constraint.spec else {
+            panic!("{:?}", r.constraint.spec);
+        };
+        assert!(source.contains("\"required\""), "{source}");
+        // The same schema as a string parses to an equal (normalized) spec.
+        let r2 = parse_request(
+            r#"{"prompt": "x", "json_schema": "{\"required\": [\"a\"], \"type\": \"object\", \"properties\": {\"a\": {\"type\": \"integer\"}}}"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r.constraint.spec.fingerprint(),
+            r2.constraint.spec.fingerprint(),
+            "object and string forms must dedupe to one engine"
+        );
+        // Non-schema values are rejected.
+        assert!(parse_request(r#"{"prompt": "x", "json_schema": 7}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_conflicting_constraint_fields() {
+        for line in [
+            r#"{"prompt": "x", "ebnf": "root ::= \"a\"", "grammar": "json"}"#,
+            r#"{"prompt": "x", "json_schema": {}, "regex": "[0-9]+"}"#,
+            r#"{"prompt": "x", "grammar": "json", "stop": ["\n"]}"#,
+        ] {
+            let err = parse_request(line).unwrap_err().to_string();
+            assert!(err.contains("conflicting constraint fields"), "{line}: {err}");
+            assert!(err.contains("exactly one"), "{line}: {err}");
+        }
+        // The error names the offending fields.
+        let err = parse_request(r#"{"prompt": "x", "ebnf": "r ::= \"a\"", "stop": "x"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`ebnf`") && err.contains("`stop`"), "{err}");
+    }
+
+    #[test]
+    fn unknown_grammar_name_error_lists_builtins() {
+        let err =
+            parse_request(r#"{"prompt": "x", "grammar": "jsonx"}"#).unwrap_err().to_string();
+        assert!(err.contains("unknown builtin grammar `jsonx`"), "{err}");
+        for name in crate::grammar::builtin::GRAMMAR_NAMES {
+            assert!(err.contains(name), "missing `{name}` in: {err}");
+        }
+        // Known names still normalize (trim + lowercase).
+        let r = parse_request(r#"{"prompt": "x", "grammar": " JSON "}"#).unwrap();
+        assert_eq!(r.constraint.spec, ConstraintSpec::builtin("json"));
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! JSON-Schema constraint integration: schema source → `grammar::jsonschema`
+//! compiler → `EngineRegistry` → serving engine → TCP wire, over the mock
+//! LM.
+//!
+//! Covers the tentpole acceptance criteria end to end:
+//! * a function-calling schema submitted **over the wire** produces
+//!   output that parses as JSON and validates against the schema (via
+//!   the small subset validator below);
+//! * the same schema — spelled with different key order / whitespace /
+//!   field form — compiles **once** in the registry;
+//! * a schema engine round-trips through the `ArtifactStore` across a
+//!   kill-and-restart;
+//! * unsupported keywords fail with a path-annotated error (no
+//!   silently-unconstrained fallback), surfaced through the wire too;
+//! * conflicting wire constraint fields are rejected with a structured
+//!   error.
+
+use domino::constraint::{ArtifactStore, Constraint, ConstraintSpec, EngineRegistry};
+use domino::eval::workload::FUNCTION_CALL_SCHEMA;
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::server::engine::{EngineCtx, GenRequest, Server};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::server::tcp;
+use domino::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// A small JSON-Schema validator for the compiled subset — the test-side
+// oracle that generated output actually satisfies the schema (independent
+// of the grammar that constrained it).
+// ---------------------------------------------------------------------------
+
+fn validate(root: &Json, schema: &Json, value: &Json, path: &str) -> Result<(), String> {
+    match schema {
+        Json::Bool(true) => Ok(()),
+        Json::Bool(false) => Err(format!("{path}: `false` schema")),
+        Json::Obj(m) => {
+            if let Some(r) = m.get("$ref").and_then(|r| r.as_str()) {
+                let mut target = root;
+                for seg in r.trim_start_matches('#').split('/').filter(|s| !s.is_empty()) {
+                    let seg = seg.replace("~1", "/").replace("~0", "~");
+                    target = target.get(&seg).ok_or_else(|| format!("{path}: bad $ref {r}"))?;
+                }
+                return validate(root, target, value, path);
+            }
+            if let Some(c) = m.get("const") {
+                return if value == c { Ok(()) } else { Err(format!("{path}: != const")) };
+            }
+            if let Some(Json::Arr(options)) = m.get("enum") {
+                return if options.contains(value) {
+                    Ok(())
+                } else {
+                    Err(format!("{path}: not in enum"))
+                };
+            }
+            for comb in ["anyOf", "oneOf"] {
+                if let Some(Json::Arr(branches)) = m.get(comb) {
+                    let ok = branches
+                        .iter()
+                        .filter(|b| validate(root, b, value, path).is_ok())
+                        .count();
+                    return match (comb, ok) {
+                        ("anyOf", n) if n >= 1 => Ok(()),
+                        ("oneOf", 1) => Ok(()),
+                        _ => Err(format!("{path}: {comb} matched {ok} branches")),
+                    };
+                }
+            }
+            let types: Vec<String> = match m.get("type") {
+                Some(Json::Str(s)) => vec![s.clone()],
+                Some(Json::Arr(a)) => {
+                    a.iter().filter_map(|t| t.as_str().map(|s| s.to_string())).collect()
+                }
+                _ => vec![],
+            };
+            let matches_type = |t: &str| match (t, value) {
+                ("null", Json::Null)
+                | ("boolean", Json::Bool(_))
+                | ("number", Json::Num(_))
+                | ("string", Json::Str(_))
+                | ("array", Json::Arr(_))
+                | ("object", Json::Obj(_)) => true,
+                ("integer", Json::Num(n)) => n.fract() == 0.0,
+                _ => false,
+            };
+            if !types.is_empty() && !types.iter().any(|t| matches_type(t)) {
+                return Err(format!("{path}: type mismatch"));
+            }
+            match value {
+                Json::Num(n) => {
+                    if let Some(lo) = m.get("minimum").and_then(|x| x.as_f64()) {
+                        if *n < lo {
+                            return Err(format!("{path}: {n} < minimum {lo}"));
+                        }
+                    }
+                    if let Some(hi) = m.get("maximum").and_then(|x| x.as_f64()) {
+                        if *n > hi {
+                            return Err(format!("{path}: {n} > maximum {hi}"));
+                        }
+                    }
+                }
+                Json::Str(s) => {
+                    if let Some(p) = m.get("pattern").and_then(|x| x.as_str()) {
+                        if !domino::regex::matches(p, s).map_err(|e| format!("{path}: {e}"))? {
+                            return Err(format!("{path}: pattern mismatch"));
+                        }
+                    }
+                }
+                Json::Obj(fields) => {
+                    if let Some(Json::Arr(req)) = m.get("required") {
+                        for r in req {
+                            let name = r.as_str().unwrap_or_default();
+                            if !fields.contains_key(name) {
+                                return Err(format!("{path}: missing required `{name}`"));
+                            }
+                        }
+                    }
+                    let props = m.get("properties");
+                    if let Some(Json::Obj(props)) = props {
+                        for (name, sub) in fields {
+                            match props.get(name) {
+                                Some(ps) => {
+                                    validate(root, ps, sub, &format!("{path}/{name}"))?
+                                }
+                                None => {
+                                    if m.get("additionalProperties") == Some(&Json::Bool(false)) {
+                                        return Err(format!("{path}: extra property `{name}`"));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                Json::Arr(items) => {
+                    if let Some(lo) = m.get("minItems").and_then(|x| x.as_f64()) {
+                        if (items.len() as f64) < lo {
+                            return Err(format!("{path}: fewer than {lo} items"));
+                        }
+                    }
+                    if let Some(hi) = m.get("maxItems").and_then(|x| x.as_f64()) {
+                        if (items.len() as f64) > hi {
+                            return Err(format!("{path}: more than {hi} items"));
+                        }
+                    }
+                    if let Some(iv) = m.get("items") {
+                        for (i, item) in items.iter().enumerate() {
+                            validate(root, iv, item, &format!("{path}/{i}"))?;
+                        }
+                    }
+                }
+                _ => {}
+            }
+            Ok(())
+        }
+        _ => Err(format!("{path}: schema is not an object or boolean")),
+    }
+}
+
+fn validate_source(schema_src: &str, value: &Json) -> Result<(), String> {
+    let schema = Json::parse(schema_src).map_err(|e| format!("schema: {e:#}"))?;
+    validate(&schema, &schema, value, "$")
+}
+
+#[test]
+fn validator_accepts_and_rejects_by_hand() {
+    let ok = Json::parse(
+        r#"{"name": "get_weather", "arguments": {"city": "Oslo", "units": "celsius", "days": 3}}"#,
+    )
+    .unwrap();
+    validate_source(FUNCTION_CALL_SCHEMA, &ok).unwrap();
+    for bad in [
+        r#"{"arguments": {"city": "Oslo", "units": "celsius"}}"#, // name missing
+        r#"{"name": "nuke", "arguments": {"city": "x", "units": "celsius"}}"#, // not in enum
+        r#"{"name": "get_weather", "arguments": {"city": "x", "units": "celsius", "days": 10}}"#, // > maximum
+        r#"{"name": "get_weather", "arguments": {"city": "x", "units": "celsius"}, "extra": 1}"#, // additional
+    ] {
+        let v = Json::parse(bad).unwrap();
+        assert!(validate_source(FUNCTION_CALL_SCHEMA, &v).is_err(), "{bad}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving-stack integration.
+// ---------------------------------------------------------------------------
+
+fn mock_sched(engines: usize) -> Scheduler {
+    let (vocab, model) = json_mock(512);
+    Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(MockFactory { model: model.clone() }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        SchedulerConfig { engines, slots_per_engine: 2, queue_depth: 32, ..Default::default() },
+    )
+}
+
+/// Send one JSONL request line, read one reply line.
+fn roundtrip(conn: &mut TcpStream, reader: &mut impl BufRead, line: &str) -> Json {
+    writeln!(conn, "{line}").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Json::parse(&reply).unwrap_or_else(|e| panic!("{e:#}: {reply}"))
+}
+
+#[test]
+fn wire_schema_request_validates_and_compiles_once() {
+    let sched = Arc::new(mock_sched(1));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // Inline schema object, canonical-ish spelling.
+    let schema_field = FUNCTION_CALL_SCHEMA.replace('\n', " ");
+    let req = format!(
+        r#"{{"prompt": "A tool call encoded as a JSON object:\n", "json_schema": {schema_field}, "max_tokens": 256}}"#
+    );
+    let v = roundtrip(&mut conn, &mut reader, &req);
+    assert_eq!(v.get("error"), Some(&Json::Null), "{v:?}");
+    assert_eq!(v.get("stopped"), Some(&Json::Bool(true)), "schema decode must complete: {v:?}");
+    let text = v.get("text").unwrap().as_str().unwrap();
+    let parsed = Json::parse(text.trim()).unwrap_or_else(|e| panic!("{e:#}: {text}"));
+    validate_source(FUNCTION_CALL_SCHEMA, &parsed)
+        .unwrap_or_else(|e| panic!("schema violation {e}: {text}"));
+
+    // The same schema as a string source with scrambled key order — the
+    // canonical fingerprint must hit the registry, not recompile.
+    let reordered = Json::parse(FUNCTION_CALL_SCHEMA).unwrap().to_string();
+    let escaped = Json::str(reordered).to_string();
+    let req2 = format!(r#"{{"prompt": "", "json_schema": {escaped}, "max_tokens": 64}}"#);
+    let v = roundtrip(&mut conn, &mut reader, &req2);
+    assert_eq!(v.get("error"), Some(&Json::Null), "{v:?}");
+
+    let stats = roundtrip(&mut conn, &mut reader, r#"{"op": "stats"}"#);
+    assert_eq!(
+        stats.get("registry_misses").unwrap().as_f64().unwrap(),
+        1.0,
+        "one compile for both spellings: {stats:?}"
+    );
+    assert!(stats.get("registry_hits").unwrap().as_f64().unwrap() >= 1.0, "{stats:?}");
+}
+
+#[test]
+fn wire_unsupported_keyword_is_path_annotated_and_conflicts_are_rejected() {
+    let sched = Arc::new(mock_sched(1));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // Unsupported keyword: the request fails loudly — the server never
+    // quietly drops `patternProperties` and serves a weaker constraint.
+    let v = roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"prompt": "", "json_schema": {"type": "object", "patternProperties": {"^x": {}}}, "max_tokens": 8}"#,
+    );
+    let err = v.get("error").unwrap().as_str().unwrap_or_default().to_string();
+    assert!(err.contains("#/patternProperties"), "{v:?}");
+    assert!(err.contains("unsupported keyword"), "{v:?}");
+
+    // Conflicting constraint fields: structured bad request.
+    let v = roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"prompt": "", "json_schema": {}, "grammar": "json"}"#,
+    );
+    let err = v.get("error").unwrap().as_str().unwrap_or_default().to_string();
+    assert!(err.contains("conflicting constraint fields"), "{v:?}");
+
+    // Unknown builtin names list the known grammars on the wire.
+    let v = roundtrip(&mut conn, &mut reader, r#"{"prompt": "", "grammar": "jsonx"}"#);
+    let err = v.get("error").unwrap().as_str().unwrap_or_default().to_string();
+    assert!(err.contains("unknown builtin grammar"), "{v:?}");
+    assert!(err.contains("gsm8k"), "{v:?}");
+}
+
+/// A single-shard server whose registry persists to `dir`.
+fn server_with_artifacts(dir: std::path::PathBuf) -> Server {
+    Server::start(
+        move || {
+            let (vocab, model) = json_mock(512);
+            let registry = EngineRegistry::with_store(8, ArtifactStore::new(dir)?);
+            Ok(EngineCtx::with_registry(Box::new(MockFactory { model }), vocab, registry))
+        },
+        2,
+    )
+}
+
+#[test]
+fn schema_engine_round_trips_through_the_artifact_store() {
+    let dir = std::env::temp_dir().join(format!("domino_schema_artifacts_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let req = GenRequest {
+        prompt: String::new(),
+        constraint: Constraint::domino(ConstraintSpec::json_schema(FUNCTION_CALL_SCHEMA)),
+        max_tokens: 48,
+        ..Default::default()
+    };
+
+    // First life: compile + write-back.
+    let server = server_with_artifacts(dir.clone());
+    let r = server.generate(req.clone()).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let m = server.metrics().unwrap();
+    assert_eq!(m.registry_misses, 1, "cold boot compiles the schema once");
+    server.shutdown();
+
+    // Second life: the warm-start scan restores the schema engine; the
+    // first request recompiles nothing.
+    let server = server_with_artifacts(dir.clone());
+    let r = server.generate(req).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let m = server.metrics().unwrap();
+    assert!(m.artifact_hits >= 1, "restart must boot from the artifact: {m:?}");
+    assert_eq!(m.registry_misses, 0, "no recompile after restart: {m:?}");
+    assert_eq!(m.engine_compile_ms, 0, "zero compile latency after restart: {m:?}");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn schema_output_validates_with_recursion_and_unions() {
+    // A harder schema: $ref recursion, anyOf, bounded arrays, pattern.
+    let schema = r#"{
+        "$ref": "#/$defs/node",
+        "$defs": {
+            "node": {
+                "type": "object",
+                "additionalProperties": false,
+                "required": ["tag"],
+                "properties": {
+                    "tag": {"type": "string", "pattern": "[a-z]{1,6}"},
+                    "value": {"anyOf": [{"type": "integer", "minimum": 0, "maximum": 99}, {"type": "null"}]},
+                    "children": {"type": "array", "items": {"$ref": "#/$defs/node"}, "maxItems": 3}
+                }
+            }
+        }
+    }"#;
+    let server = Server::start(
+        move || {
+            let (vocab, model) = json_mock(512);
+            Ok(EngineCtx::new(Box::new(MockFactory { model }), vocab))
+        },
+        1,
+    );
+    let r = server
+        .generate(GenRequest {
+            prompt: String::new(),
+            constraint: Constraint::domino(ConstraintSpec::json_schema(schema)),
+            max_tokens: 256,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    if r.stats.stopped {
+        let parsed = Json::parse(r.text.trim()).unwrap_or_else(|e| panic!("{e:#}: {}", r.text));
+        validate_source(schema, &parsed)
+            .unwrap_or_else(|e| panic!("schema violation {e}: {}", r.text));
+    }
+    server.shutdown();
+}

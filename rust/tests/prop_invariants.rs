@@ -10,8 +10,13 @@
 //! 4. **Scanner/regex agreement**: the scanner accepts exactly the
 //!    terminal decompositions the per-terminal DFAs accept.
 //! 5. **BPE round-trip** on arbitrary byte strings.
+//! 6. **Schema fingerprint normalization**: semantically identical JSON
+//!    Schemas (shuffled key order, random whitespace) produce identical
+//!    `ConstraintSpec` fingerprints and build fingerprints, so
+//!    registry/artifact dedup actually fires for schema constraints.
 
 use domino::baselines::OnlineChecker;
+use domino::constraint::ConstraintSpec;
 use domino::domino::decoder::{Engine, Lookahead};
 use domino::domino::{Checker, DominoDecoder};
 use domino::grammar::builtin;
@@ -145,6 +150,126 @@ fn prop_mask_union_over_lookahead_is_monotone() {
                 );
             }
         }
+    });
+}
+
+/// A random schema inside the compilable subset (`depth` bounds nesting).
+fn random_schema(rng: &mut Rng, depth: usize) -> Json {
+    let choice = rng.below(if depth == 0 { 5 } else { 8 });
+    match choice {
+        0 => Json::obj(vec![("type", Json::str("null"))]),
+        1 => Json::obj(vec![("type", Json::str("boolean"))]),
+        2 => Json::obj(vec![
+            ("type", Json::str("integer")),
+            ("minimum", Json::Num(rng.below(5) as f64)),
+            ("maximum", Json::Num((10 + rng.below(90)) as f64)),
+        ]),
+        3 => Json::obj(vec![("type", Json::str("string"))]),
+        4 => {
+            let vals = ["a", "b", "c", "d"];
+            let n = 1 + rng.below(3);
+            Json::obj(vec![(
+                "enum",
+                Json::Arr(vals.iter().take(n).map(|v| Json::str(*v)).collect()),
+            )])
+        }
+        5 => {
+            let names = ["alpha", "beta", "gamma"];
+            let n = 1 + rng.below(3);
+            let mut props = std::collections::BTreeMap::new();
+            let mut required = Vec::new();
+            for name in names.iter().take(n) {
+                props.insert(name.to_string(), random_schema(rng, depth - 1));
+                if rng.chance(0.5) {
+                    required.push(Json::str(*name));
+                }
+            }
+            let mut fields = vec![
+                ("type", Json::str("object")),
+                ("properties", Json::Obj(props)),
+                ("additionalProperties", Json::Bool(false)),
+            ];
+            if !required.is_empty() {
+                fields.push(("required", Json::Arr(required)));
+            }
+            Json::obj(fields)
+        }
+        6 => Json::obj(vec![
+            ("type", Json::str("array")),
+            ("items", random_schema(rng, depth - 1)),
+            ("minItems", Json::Num(rng.below(2) as f64)),
+            ("maxItems", Json::Num((2 + rng.below(4)) as f64)),
+        ]),
+        _ => Json::obj(vec![(
+            "anyOf",
+            Json::Arr(vec![random_schema(rng, depth - 1), random_schema(rng, depth - 1)]),
+        )]),
+    }
+}
+
+/// Serialize with shuffled object key order and random whitespace — a
+/// semantically identical spelling of the same schema.
+fn messy_serialize(v: &Json, rng: &mut Rng, out: &mut String) {
+    fn pad(rng: &mut Rng, out: &mut String) {
+        for _ in 0..rng.below(3) {
+            out.push([' ', '\n', '\t'][rng.below(3)]);
+        }
+    }
+    match v {
+        Json::Obj(m) => {
+            out.push('{');
+            let mut keys: Vec<&String> = m.keys().collect();
+            rng.shuffle(&mut keys);
+            for (i, k) in keys.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                pad(rng, out);
+                out.push_str(&Json::str((*k).clone()).to_string());
+                pad(rng, out);
+                out.push(':');
+                pad(rng, out);
+                messy_serialize(&m[*k], rng, out);
+            }
+            pad(rng, out);
+            out.push('}');
+        }
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                    pad(rng, out);
+                }
+                messy_serialize(x, rng, out);
+            }
+            out.push(']');
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+#[test]
+fn prop_jsonschema_fingerprints_stable_under_normalization() {
+    check("jsonschema-fingerprint-normalization", 40, |rng| {
+        let schema = random_schema(rng, 2);
+        let canonical = schema.to_string();
+        let mut scrambled = String::new();
+        messy_serialize(&schema, rng, &mut scrambled);
+        let a = ConstraintSpec::json_schema(canonical.clone());
+        let b = ConstraintSpec::json_schema(scrambled.clone());
+        assert_eq!(a.normalized(), b.normalized(), "{canonical} vs {scrambled}");
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{canonical} vs {scrambled}");
+        // The registry/artifact key folds build parameters in; it must
+        // stay spelling-insensitive at every (vocab, k) combination.
+        assert_eq!(a.build_fingerprint(7, Some(2)), b.build_fingerprint(7, Some(2)));
+        assert_eq!(a.build_fingerprint(9, None), b.build_fingerprint(9, None));
+        // Distinct schemas keep distinct keys (semantic, not textual).
+        let other = ConstraintSpec::json_schema(r#"{"type": "integer", "minimum": 777}"#);
+        assert_ne!(a.fingerprint(), other.fingerprint());
+        // Every generated spelling stays inside the compilable subset.
+        domino::grammar::jsonschema::compile(&scrambled)
+            .unwrap_or_else(|e| panic!("{e:#}: {scrambled}"));
     });
 }
 

@@ -1,35 +1,212 @@
 //! Mask-computation micro-benchmark — the §Perf L3 hot path.
 //!
-//! Compares, per decode step and per grammar state:
-//! * DOMINO tree-traversal mask (`compute_mask`, k=∞),
-//! * DOMINO single-token check (`check_token` — the opportunistic path),
-//! * online full-vocab scan (the llama.cpp-style baseline cost),
-//! * decoder `advance` (state update).
+//! Three parts:
 //!
-//! The paper's claim is that tree size ≪ vocab size makes the first two
-//! cheap; this bench quantifies it on this vocab.
+//! 1. **Kernels** — the word-parallel `TokenMask` sweeps (`apply`,
+//!    `iter`, `intersect`) against inline scalar references on a
+//!    32k-entry vocabulary, with a grammar-realistic sparse mask (tree
+//!    size ≪ vocab size is the paper's whole pitch, so most words are
+//!    zero and `apply` runs the chunked fill fast path).
+//! 2. **Per-grammar mask cost** — DOMINO tree-traversal mask
+//!    (`compute_mask`, k=∞), single-token check, online full-vocab scan,
+//!    and `advance`, per decode state. The dense-terminal lanes (`c`,
+//!    and the schema-derived `function_call` CFG) are first-class here:
+//!    they are where scanner tables are big and the raw kernels matter.
+//! 3. **Mask cache** — the serving-path state-keyed cache: replayed-walk
+//!    hit behavior, plus an 8-thread contention run of the sharded
+//!    layout against a single-shard (one global lock) configuration.
+//!
+//! Emits a `mask_micro` section into `$DOMINO_BENCH_JSON`
+//! (apply/iter/cache speedups) and enforces the in-bench acceptance
+//! bars: `apply_speedup >= $DOMINO_BENCH_MASK_RATIO` (default 4) and
+//! `cache_speedup >= ratio/2`. `DOMINO_BENCH_ITERS` scales iteration
+//! counts.
 //!
 //! `cargo bench --bench mask_micro`
 
 use domino::baselines::OnlineChecker;
 use domino::constraint::{CachedChecker, MaskCache};
-use domino::domino::decoder::{Engine, Lookahead};
-use domino::domino::{Checker, DominoDecoder};
+use domino::domino::decoder::{DominoDecoder, Lookahead};
+use domino::domino::{Checker, TokenMask};
+use domino::eval::harness::workload_spec;
 use domino::eval::Setup;
-use domino::grammar::builtin;
-use domino::util::bench::{time_it, Table};
+use domino::util::bench::{emit_json, time_it, Table};
 use domino::util::Rng;
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Kernel-section vocabulary: the paper's 32k-token regime.
+const KERNEL_VOCAB: usize = 32_768;
+
+/// A random mask with roughly `density` of the vocabulary allowed.
+fn random_mask(size: usize, density: f64, seed: u64) -> TokenMask {
+    let mut rng = Rng::new(seed);
+    let mut m = TokenMask::none(size);
+    for t in 0..size as u32 {
+        if rng.chance(density) {
+            m.allow(t);
+        }
+    }
+    m
+}
+
+/// Scalar reference `apply`: one `allowed` probe per logit (what the
+/// pre-wordwise implementation did).
+fn scalar_apply(mask: &TokenMask, logits: &mut [f32]) {
+    for (t, l) in logits.iter_mut().enumerate() {
+        if !mask.allowed(t as u32) {
+            *l = f32::NEG_INFINITY;
+        }
+    }
+}
+
+/// Kernel comparisons on a 32k vocab; returns (apply, iter) speedups.
+fn bench_kernels(iters: u32) -> (f64, f64) {
+    println!("== Word-parallel TokenMask kernels (vocab {KERNEL_VOCAB}) ==\n");
+    let mut table = Table::new(&["kernel", "density", "scalar (us)", "wordwise (us)", "speedup"]);
+
+    // Grammar-realistic sparse mask (the headline numbers) plus a dense
+    // mask to show the worst case stays ahead.
+    let mut apply_speedup = f64::MAX;
+    let mut iter_speedup = f64::MAX;
+    for (label, density) in [("sparse 2%", 0.02), ("dense 50%", 0.5)] {
+        let mask = random_mask(KERNEL_VOCAB, density, 7);
+        let base: Vec<f32> = (0..KERNEL_VOCAB).map(|i| (i % 997) as f32 * 0.01).collect();
+
+        let mut buf = base.clone();
+        let scalar_t = time_it(5, iters, || {
+            buf.copy_from_slice(&base);
+            scalar_apply(&mask, &mut buf);
+            std::hint::black_box(&buf);
+        });
+        let word_t = time_it(5, iters, || {
+            buf.copy_from_slice(&base);
+            mask.apply(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        let speedup = scalar_t.mean_us() / word_t.mean_us().max(1e-9);
+        table.row(&[
+            "apply".into(),
+            label.into(),
+            format!("{:.1}", scalar_t.mean_us()),
+            format!("{:.1}", word_t.mean_us()),
+            format!("{speedup:.1}x"),
+        ]);
+        if label.starts_with("sparse") {
+            // The acceptance bar is the grammar-realistic lane.
+            apply_speedup = speedup;
+        }
+
+        // iter: the allocation-free word cursor vs the old
+        // Vec-per-word expansion.
+        let old_t = time_it(5, iters, || {
+            let mut acc = 0u64;
+            for (wi, &w) in mask.words().iter().enumerate() {
+                let ids: Vec<u32> =
+                    (0..64usize).filter(|b| (w >> b) & 1 == 1).map(|b| (wi * 64 + b) as u32).collect();
+                for t in ids {
+                    acc += t as u64;
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        let new_t = time_it(5, iters, || {
+            let mut acc = 0u64;
+            for t in mask.iter() {
+                acc += t as u64;
+            }
+            std::hint::black_box(acc);
+        });
+        let speedup = old_t.mean_us() / new_t.mean_us().max(1e-9);
+        table.row(&[
+            "iter".into(),
+            label.into(),
+            format!("{:.1}", old_t.mean_us()),
+            format!("{:.1}", new_t.mean_us()),
+            format!("{speedup:.1}x"),
+        ]);
+        if label.starts_with("sparse") {
+            iter_speedup = speedup;
+        }
+
+        // intersect: wordwise AND vs per-bit probe+forbid.
+        let other = random_mask(KERNEL_VOCAB, density, 11);
+        let scalar_t = time_it(5, iters, || {
+            let mut m = mask.clone();
+            for t in 0..KERNEL_VOCAB as u32 {
+                if !other.allowed(t) {
+                    m.forbid(t);
+                }
+            }
+            std::hint::black_box(&m);
+        });
+        let word_t = time_it(5, iters, || {
+            let mut m = mask.clone();
+            m.intersect(&other);
+            std::hint::black_box(&m);
+        });
+        table.row(&[
+            "intersect".into(),
+            label.into(),
+            format!("{:.1}", scalar_t.mean_us()),
+            format!("{:.1}", word_t.mean_us()),
+            format!("{:.1}x", scalar_t.mean_us() / word_t.mean_us().max(1e-9)),
+        ]);
+    }
+    table.print();
+    (apply_speedup, iter_speedup)
+}
+
+/// Mixed get/put throughput (ops/s) over `threads` concurrent workers
+/// against a cache with `shards` shards — the 8-slot serving contention
+/// shape. ~75% gets / 25% puts over a keyspace small enough to stay
+/// within capacity (steady-state hits, no eviction storms).
+fn cache_ops_per_s(shards: usize, threads: usize, ops_per_thread: usize) -> f64 {
+    let cache = MaskCache::with_shards(1024, shards);
+    let masks: Vec<Arc<TokenMask>> =
+        (0..8).map(|i| Arc::new(random_mask(2048, 0.1, i as u64))).collect();
+    const KEYS: usize = 256;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for th in 0..threads {
+            let cache = &cache;
+            let masks = &masks;
+            s.spawn(move || {
+                let mut rng = Rng::new(th as u64 + 1);
+                for i in 0..ops_per_thread {
+                    let key = rng.below(KEYS) as u64;
+                    if i % 4 == 0 {
+                        cache.put(1, key, masks[key as usize % masks.len()].clone());
+                    } else if let Some(m) = cache.get(1, key) {
+                        std::hint::black_box(m.size());
+                    }
+                }
+            });
+        }
+    });
+    (threads * ops_per_thread) as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
 
 fn main() {
+    let iters: u32 =
+        std::env::var("DOMINO_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(200).max(1);
+    let bar: f64 = std::env::var("DOMINO_BENCH_MASK_RATIO")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4.0);
+
+    let (apply_speedup, iter_speedup) = bench_kernels(iters);
+
     let setup = Setup::load();
-    println!("== Mask micro-benchmarks (vocab {}) ==\n", setup.vocab.len());
+    println!("\n== Mask micro-benchmarks (vocab {}) ==\n", setup.vocab.len());
     let mut table = Table::new(&[
         "grammar", "state", "domino mask (us)", "check_token (us)", "online mask (us)", "advance (us)",
     ]);
 
-    for name in ["json", "gsm8k", "c"] {
-        let engine = Engine::compile(builtin::by_name(name).unwrap(), setup.vocab.clone()).unwrap();
+    // `c` and the schema-derived `function_call` CFG are the
+    // dense-terminal lanes: many terminals with big scanner DFAs.
+    for name in ["json", "gsm8k", "c", "function_call"] {
+        let engine = setup.engine(name).unwrap();
         // Advance a decoder to a few representative states via random walk.
         let mut rng = Rng::new(5);
         let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
@@ -85,12 +262,36 @@ fn main() {
     table.print();
     println!("\nnote: online mask is measured at the START state only (cloning deep online state is expensive by construction).");
 
+    // Lazy compile: time-to-first-mask for the schema-derived grammar
+    // (the lazy-DFA pitch: compile cost proportional to states visited).
+    {
+        use domino::domino::decoder::Engine;
+        let cfg = workload_spec("function_call").to_cfg().unwrap();
+        let t0 = Instant::now();
+        let lazy = Engine::compile_lazy(cfg, setup.vocab.clone()).unwrap();
+        let mut d = DominoDecoder::new(lazy, Lookahead::Infinite);
+        std::hint::black_box(d.compute_mask());
+        let lazy_first = t0.elapsed().as_secs_f64();
+        let cfg = workload_spec("function_call").to_cfg().unwrap();
+        let t0 = Instant::now();
+        let eager = Engine::compile(cfg, setup.vocab.clone()).unwrap();
+        let mut d = DominoDecoder::new(eager, Lookahead::Infinite);
+        std::hint::black_box(d.compute_mask());
+        let eager_first = t0.elapsed().as_secs_f64();
+        println!(
+            "\ntime-to-first-mask `function_call`: eager {:.3}s, lazy {:.3}s ({:.1}x)",
+            eager_first,
+            lazy_first,
+            eager_first / lazy_first.max(1e-9),
+        );
+    }
+
     // The serving-path mask cache: replay the same random walk twice
     // through a CachedChecker sharing one MaskCache — the second pass
     // (a second slot/request in the same grammar states) should be ~all
     // hits, replacing tree traversals with hash probes.
     println!("\n== State-keyed mask cache (json, k=inf, walk replayed) ==\n");
-    let engine = Engine::compile(builtin::json(), setup.vocab.clone()).unwrap();
+    let engine = setup.engine("json").unwrap();
     let cache = Arc::new(MaskCache::new(1024));
     for pass in 0..2 {
         let mut checker = CachedChecker::new(
@@ -119,5 +320,45 @@ fn main() {
             100.0 * s.hit_rate(),
             elapsed.as_secs_f64() * 1e6,
         );
+    }
+
+    // Sharded-cache contention: 8 concurrent slots hammering one cache,
+    // sharded layout vs a single global lock (shards=1).
+    println!("\n== MaskCache contention (8 threads, 75% get / 25% put) ==\n");
+    let threads = 8;
+    let ops = (25_000u32.max(iters * 50)) as usize;
+    // Warm the allocator/scheduler once so the first measured run isn't
+    // paying one-time costs.
+    cache_ops_per_s(1, threads, ops / 10);
+    let single = cache_ops_per_s(1, threads, ops);
+    let sharded = cache_ops_per_s(8, threads, ops);
+    let cache_speedup = sharded / single.max(1e-9);
+    let mut table = Table::new(&["layout", "ops/s", "vs single lock"]);
+    table.row(&["single lock (1 shard)".into(), format!("{single:.0}"), "1.00x".into()]);
+    table.row(&["sharded (8 shards)".into(), format!("{sharded:.0}"), format!("{cache_speedup:.2}x")]);
+    table.print();
+
+    emit_json(
+        "mask_micro",
+        &[
+            ("apply_speedup", apply_speedup),
+            ("iter_speedup", iter_speedup),
+            ("cache_speedup", cache_speedup),
+        ],
+    );
+
+    let apply_ok = apply_speedup >= bar;
+    let cache_ok = cache_speedup >= bar / 2.0;
+    println!(
+        "\nwordwise apply speedup: {apply_speedup:.2}x (bar >= {bar}x) — {}",
+        if apply_ok { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "sharded cache speedup at {threads} threads: {cache_speedup:.2}x (bar >= {:.2}x) — {}",
+        bar / 2.0,
+        if cache_ok { "PASS" } else { "FAIL" }
+    );
+    if !apply_ok || !cache_ok {
+        std::process::exit(1);
     }
 }

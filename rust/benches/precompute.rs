@@ -40,7 +40,7 @@ fn main() {
             cfg.num_terminals().to_string(),
             scanner.num_pos().to_string(),
             ts.total_nodes().to_string(),
-            ts.possets.len().to_string(),
+            ts.num_possets().to_string(),
             format!("{:.3}", serial.mean.as_secs_f64()),
             format!("{:.3}", parallel.mean.as_secs_f64()),
         ]);

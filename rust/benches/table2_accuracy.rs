@@ -9,7 +9,7 @@
 //! artifacts are present; `DOMINO_BENCH_N` overrides the sample count).
 
 use domino::domino::decoder::Lookahead;
-use domino::eval::harness::{eval_task, Method, Setup};
+use domino::eval::harness::{eval_task, eval_throughput, Method, Setup};
 use domino::util::bench::Table;
 
 fn main() {
@@ -56,6 +56,43 @@ fn main() {
             ]);
         }
         println!("-- {task} --");
+        table.print();
+        println!();
+    }
+    // Dense-terminal lanes: the builtin `c` grammar and the
+    // schema-derived `function_call` CFG have many terminals with big
+    // scanner DFAs, so they exercise the wordwise mask kernels and the
+    // lazy-DFA path hardest. Free-format throughput (no task oracle to
+    // score these against), DOMINO vs the online baseline.
+    for grammar in ["c", "function_call"] {
+        let mut table = Table::new(&["Method", "Well-Formed", "tok/s", "Perf impact"]);
+        let mut base_tps = None;
+        for method in [
+            Method::Unconstrained,
+            Method::Online { opportunistic: true },
+            Method::Domino { k: Lookahead::Infinite, spec: None, opportunistic: true },
+        ] {
+            let row = match eval_throughput(&setup, &method, grammar, n, 96, 1234) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("  {}: {e:#}", method.label());
+                    continue;
+                }
+            };
+            if matches!(method, Method::Unconstrained) {
+                base_tps = Some(row.toks_per_s);
+            }
+            let impact = base_tps
+                .map(|b| format!("{:.2}x", row.toks_per_s / b))
+                .unwrap_or_else(|| "-".into());
+            table.row(&[
+                method.label(),
+                format!("{:.3}", row.well_formed),
+                format!("{:.1}", row.toks_per_s),
+                impact,
+            ]);
+        }
+        println!("-- {grammar} (dense-terminal, free-format) --");
         table.print();
         println!();
     }

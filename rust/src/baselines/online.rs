@@ -36,7 +36,7 @@ impl Checker for OnlineChecker {
         self.inner.advance(token)
     }
 
-    fn compute_mask(&mut self) -> TokenMask {
+    fn compute_mask(&mut self) -> Arc<TokenMask> {
         // The defining cost: one scanner+parser traversal per vocab token.
         let mut mask = TokenMask::none(self.vocab_size);
         for id in 0..self.vocab_size as TokenId {
@@ -44,7 +44,7 @@ impl Checker for OnlineChecker {
                 mask.allow(id);
             }
         }
-        mask
+        Arc::new(mask)
     }
 
     fn check_token(&mut self, token: TokenId) -> bool {

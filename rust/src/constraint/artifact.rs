@@ -66,11 +66,14 @@ const MAGIC: &[u8; 4] = b"DOMA";
 
 /// One persisted mask-cache entry (see
 /// [`MaskCache::hot_entries`](super::MaskCache::hot_entries)).
+///
+/// The mask is held behind an `Arc` — the same sharing unit the cache
+/// stores — so seeding a warm registry never deep-copies bitsets.
 #[derive(Clone, Debug)]
 pub struct MaskSeed {
     pub variant: u64,
     pub state: u64,
-    pub mask: TokenMask,
+    pub mask: Arc<TokenMask>,
 }
 
 /// Outcome of a targeted artifact lookup.
@@ -133,6 +136,11 @@ impl ArtifactStore {
 
     /// [`Self::save`] for callers that already hold the key (re-saves of
     /// registry entries, whose original spec is no longer around).
+    ///
+    /// Lazily-compiled engines are materialized first
+    /// ([`Engine::materialize_full`]): the artifact always carries dense
+    /// tables, with the lazy engine's discovered state numbering preserved
+    /// so the persisted mask seeds stay valid.
     pub fn save_keyed(
         &self,
         key: u64,
@@ -140,6 +148,13 @@ impl ArtifactStore {
         engine: &Engine,
         masks: &[MaskSeed],
     ) -> crate::Result<PathBuf> {
+        let materialized;
+        let engine = if engine.is_lazy() {
+            materialized = engine.materialize_full();
+            &*materialized
+        } else {
+            engine
+        };
         let data = encode_artifact(key, label, engine, masks);
         let path = self.path_for(key);
         let tmp = self.dir.join(format!(
@@ -350,8 +365,9 @@ fn encode_payload(engine: &Engine, masks: &[MaskSeed]) -> Vec<u8> {
     }
     w.u32(g.start);
     // --- scanner DFAs ---
-    w.u32(engine.scanner.dfas.len() as u32);
-    for d in &engine.scanner.dfas {
+    let dfas = engine.scanner.dense_dfas().expect("save path materializes lazy engines");
+    w.u32(dfas.len() as u32);
+    for d in dfas {
         w.u32(d.start);
         w.u32(d.num_states() as u32);
         for &a in &d.accepting {
@@ -363,10 +379,11 @@ fn encode_payload(engine: &Engine, masks: &[MaskSeed]) -> Vec<u8> {
     }
     // --- subterminal trees ---
     let ts = &engine.trees;
-    w.u64(ts.vocab_size as u64);
-    w.u32(ts.possets.len() as u32);
-    for i in 0..ts.possets.len() {
-        let info = ts.possets.get(i as u32);
+    let (trees, possets) = ts.complete_parts();
+    w.u64(ts.vocab_size() as u64);
+    w.u32(possets.len() as u32);
+    for i in 0..possets.len() {
+        let info = possets.get(i as u32);
         w.u32(info.positions.len() as u32);
         for &p in &info.positions {
             match p {
@@ -379,8 +396,8 @@ fn encode_payload(engine: &Engine, masks: &[MaskSeed]) -> Vec<u8> {
             }
         }
     }
-    w.u32(ts.trees.len() as u32);
-    for tree in &ts.trees {
+    w.u32(trees.len() as u32);
+    for tree in trees {
         w.u32(tree.nodes.len() as u32);
         for node in &tree.nodes {
             w.u32(node.children.len() as u32);
@@ -504,11 +521,11 @@ fn decode_payload(
                 1 => {
                     let t = r.u32()?;
                     let s = r.u32()?;
-                    let states = scanner
-                        .dfas
-                        .get(t as usize)
-                        .map(|d| d.num_states())
-                        .unwrap_or(0);
+                    let states = if (t as usize) < scanner.num_terminals() {
+                        scanner.num_states_of(t as usize)
+                    } else {
+                        0
+                    };
                     if s as usize >= states {
                         bail!("posset position out of range");
                     }
@@ -564,7 +581,7 @@ fn decode_payload(
         }
         trees.push(Tree { nodes });
     }
-    let trees = TreeSet { trees, possets, vocab_size };
+    let trees = TreeSet::from_parts(trees, possets, vocab_size);
     // --- hot masks ---
     let nmasks = r.u32()? as usize;
     let mut masks = Vec::new();
@@ -580,7 +597,7 @@ fn decode_payload(
         for _ in 0..nwords {
             words.push(r.u64()?);
         }
-        masks.push(MaskSeed { variant, state, mask: TokenMask::from_words(size, words)? });
+        masks.push(MaskSeed { variant, state, mask: Arc::new(TokenMask::from_words(size, words)?) });
     }
     r.expect_end()?;
     Ok((Engine::from_parts(cfg, scanner, trees, vocab.clone()), masks))
@@ -611,7 +628,7 @@ mod tests {
         let spec = ConstraintSpec::builtin("fig3");
         let engine =
             Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
-        let seed = MaskSeed { variant: 7, state: 42, mask: TokenMask::all(v.len()) };
+        let seed = MaskSeed { variant: 7, state: 42, mask: Arc::new(TokenMask::all(v.len())) };
         let path = store.save(&spec, &v, None, &engine, &[seed]).unwrap();
         assert!(path.exists());
         let ArtifactLoad::Hit { engine: loaded, masks, label } = store.load(&spec, &v, None)
@@ -621,11 +638,42 @@ mod tests {
         assert_eq!(label, "builtin:fig3");
         assert_eq!(masks.len(), 1);
         assert_eq!((masks[0].variant, masks[0].state), (7, 42));
-        assert_eq!(masks[0].mask, TokenMask::all(v.len()));
+        assert_eq!(*masks[0].mask, TokenMask::all(v.len()));
         // The loaded engine masks exactly like the fresh one, across a walk.
         let mut a = DominoDecoder::new(engine, Lookahead::Infinite);
         let mut b = DominoDecoder::new(loaded, Lookahead::Infinite);
         for &id in &v.encode(b"(12+3)") {
+            assert_eq!(a.compute_mask(), b.compute_mask());
+            a.advance(id).unwrap();
+            b.advance(id).unwrap();
+        }
+        assert_eq!(a.compute_mask(), b.compute_mask());
+    }
+
+    #[test]
+    fn lazy_engine_is_materialized_on_save() {
+        // Saving a lazily-compiled engine snapshots dense tables; the
+        // reloaded engine is eager and masks identically.
+        let store = temp_store("lazy");
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("json");
+        let engine = Engine::compile_lazy(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        assert!(engine.is_lazy());
+        // Partially explore before saving — numbering must survive.
+        let mut d = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        for &id in &v.encode(b"{\"a\": 1") {
+            d.compute_mask();
+            d.advance(id).unwrap();
+        }
+        let path = store.save(&spec, &v, None, &engine, &[]).unwrap();
+        assert!(path.exists());
+        let ArtifactLoad::Hit { engine: loaded, .. } = store.load(&spec, &v, None) else {
+            panic!("expected a hit");
+        };
+        assert!(!loaded.is_lazy(), "artifacts always carry dense tables");
+        let mut a = DominoDecoder::new(engine, Lookahead::Infinite);
+        let mut b = DominoDecoder::new(loaded, Lookahead::Infinite);
+        for &id in &v.encode(b"{\"name\": \"Jo\", \"age\": 3}") {
             assert_eq!(a.compute_mask(), b.compute_mask());
             a.advance(id).unwrap();
             b.advance(id).unwrap();

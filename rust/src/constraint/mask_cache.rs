@@ -21,16 +21,28 @@
 //!   distinct states could in principle collide — the same trade the
 //!   §3.6 speculation model already makes.
 //!
-//! Eviction is LRU by logical tick, scanned lazily on insert; the cache
+//! ## Concurrency layout
+//!
+//! The map is split into a power-of-two number of **shards**, each behind
+//! its own `RwLock`, indexed by a cheap mix of `(variant, state)` —
+//! concurrent slots in a batched tick hit different shards instead of
+//! serializing on one lock. Lookups take only the *read* lock (recency
+//! ticks are per-entry atomics, so a hit never needs exclusive access)
+//! and entries are `Arc<TokenMask>`, so `get`/`peek`/`hot_entries` clone
+//! a pointer, never a vocabulary-sized bitset, while holding the lock.
+//!
+//! Eviction is LRU by logical tick: `put` on a full shard drops the
+//! oldest ~1/8 of that shard's entries in one pass, selected with a
+//! bounded max-heap (O(n log k), no full sort under the lock). The cache
 //! is bounded, so a pathological workload degrades to recomputation, not
 //! memory growth.
 
 use crate::domino::decoder::Lookahead;
 use crate::domino::{Checker, TokenMask};
 use crate::TokenId;
-use std::collections::HashMap;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 /// Counters for one cache (or an aggregate over several — see
 /// [`MaskCacheStats::merge`]).
@@ -61,19 +73,23 @@ impl MaskCacheStats {
 }
 
 struct MaskEntry {
-    mask: TokenMask,
-    tick: u64,
+    mask: Arc<TokenMask>,
+    /// Last-touched logical time; atomic so read-lock holders can bump it.
+    tick: AtomicU64,
 }
 
-struct MaskInner {
-    map: HashMap<(u64, u64), MaskEntry>,
-    tick: u64,
-}
+/// Default shard count (power of two). Eight shards cover the batch
+/// widths the scheduler runs (≤ 8–16 concurrent slots) with near-zero
+/// collision probability while keeping per-shard capacity large enough
+/// for LRU to be meaningful.
+const DEFAULT_SHARDS: usize = 8;
 
 /// A bounded, concurrent `(variant, state) → TokenMask` cache.
 pub struct MaskCache {
-    capacity: usize,
-    inner: Mutex<MaskInner>,
+    shards: Vec<RwLock<HashMap<(u64, u64), MaskEntry>>>,
+    /// Capacity of each shard (total capacity / shard count, rounded up).
+    per_shard: usize,
+    tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -81,10 +97,25 @@ pub struct MaskCache {
 
 impl MaskCache {
     pub fn new(capacity: usize) -> MaskCache {
+        // Shrink the shard count for tiny caches so total capacity stays
+        // close to the requested bound (each shard holds ≥ 1 entry).
+        let mut shards = DEFAULT_SHARDS;
+        while shards > 1 && shards > capacity {
+            shards /= 2;
+        }
+        Self::with_shards(capacity, shards)
+    }
+
+    /// Explicit shard count (power of two). `with_shards(cap, 1)` pins the
+    /// single-lock layout — tests that assert exact LRU order use it, and
+    /// the contention bench compares it against the sharded default.
+    pub fn with_shards(capacity: usize, shards: usize) -> MaskCache {
         assert!(capacity >= 1, "mask cache needs capacity >= 1");
+        assert!(shards >= 1 && shards.is_power_of_two(), "shard count must be a power of two");
         MaskCache {
-            capacity,
-            inner: Mutex::new(MaskInner { map: HashMap::new(), tick: 0 }),
+            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            per_shard: capacity.div_ceil(shards),
+            tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -101,22 +132,35 @@ impl MaskCache {
         }
     }
 
+    /// Shard index: a splitmix64-style finalizer over the key so adjacent
+    /// states spread across shards.
+    fn shard_of(&self, variant: u64, state: u64) -> usize {
+        let mut x = state ^ variant.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x as usize) & (self.shards.len() - 1)
+    }
+
+    fn lookup(&self, variant: u64, state: u64) -> Option<Arc<TokenMask>> {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard = self.shards[self.shard_of(variant, state)].read().expect("mask cache lock");
+        shard.get(&(variant, state)).map(|e| {
+            e.tick.store(tick, Ordering::Relaxed);
+            e.mask.clone()
+        })
+    }
+
     /// Look up a mask, counting a hit or miss.
-    pub fn get(&self, variant: u64, state: u64) -> Option<TokenMask> {
-        let mut inner = self.inner.lock().expect("mask cache lock");
-        inner.tick += 1;
-        let tick = inner.tick;
-        match inner.map.get_mut(&(variant, state)) {
-            Some(e) => {
-                e.tick = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e.mask.clone())
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+    pub fn get(&self, variant: u64, state: u64) -> Option<Arc<TokenMask>> {
+        let found = self.lookup(variant, state);
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
     }
 
     /// Look up without touching the hit/miss counters (used by
@@ -124,54 +168,55 @@ impl MaskCache {
     /// those would drown the compute-path hit rate the metrics exist to
     /// report — absence here falls through to a cheap direct check, not a
     /// mask computation).
-    pub fn peek(&self, variant: u64, state: u64) -> Option<TokenMask> {
-        let mut inner = self.inner.lock().expect("mask cache lock");
-        inner.tick += 1;
-        let tick = inner.tick;
-        inner.map.get_mut(&(variant, state)).map(|e| {
-            e.tick = tick;
-            e.mask.clone()
-        })
+    pub fn peek(&self, variant: u64, state: u64) -> Option<Arc<TokenMask>> {
+        self.lookup(variant, state)
     }
 
     /// Insert a computed mask, evicting the least-recently-used entries
-    /// if the cache is full. Eviction drops the oldest ~1/8 of entries in
-    /// one pass so the scan cost amortizes to O(log n) per insert instead
-    /// of a full scan on every miss once the cache fills (this sits on
-    /// the decode hot path, under the lock every slot shares).
-    pub fn put(&self, variant: u64, state: u64, mask: TokenMask) {
-        let mut inner = self.inner.lock().expect("mask cache lock");
-        inner.tick += 1;
-        let tick = inner.tick;
-        if inner.map.len() >= self.capacity && !inner.map.contains_key(&(variant, state)) {
-            let evict = (self.capacity / 8).max(1);
-            let mut ticks: Vec<((u64, u64), u64)> =
-                inner.map.iter().map(|(k, e)| (*k, e.tick)).collect();
-            ticks.sort_unstable_by_key(|&(_, t)| t);
-            for (k, _) in ticks.into_iter().take(evict) {
-                inner.map.remove(&k);
+    /// of the target shard if it is full. Eviction drops the oldest ~1/8
+    /// of the shard in one pass, selected with a size-bounded max-heap
+    /// (O(n log k) scan, no allocation-heavy full sort) — this sits on
+    /// the decode hot path.
+    pub fn put(&self, variant: u64, state: u64, mask: Arc<TokenMask>) {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut shard =
+            self.shards[self.shard_of(variant, state)].write().expect("mask cache lock");
+        if shard.len() >= self.per_shard && !shard.contains_key(&(variant, state)) {
+            let evict = (self.per_shard / 8).max(1);
+            // Max-heap of the `evict` smallest ticks seen so far.
+            let mut oldest: BinaryHeap<(u64, (u64, u64))> = BinaryHeap::with_capacity(evict + 1);
+            for (k, e) in shard.iter() {
+                oldest.push((e.tick.load(Ordering::Relaxed), *k));
+                if oldest.len() > evict {
+                    oldest.pop();
+                }
+            }
+            for (_, k) in oldest {
+                shard.remove(&k);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        inner.map.insert((variant, state), MaskEntry { mask, tick });
+        shard.insert((variant, state), MaskEntry { mask, tick: AtomicU64::new(tick) });
     }
 
     /// Snapshot the hottest (most recently used) `limit` entries as
     /// `(variant, state, mask)` triples — the warm set persisted into an
     /// engine artifact so a restarted process starts with masks it
     /// already paid for.
-    pub fn hot_entries(&self, limit: usize) -> Vec<(u64, u64, TokenMask)> {
-        let inner = self.inner.lock().expect("mask cache lock");
-        let mut all: Vec<(&(u64, u64), &MaskEntry)> = inner.map.iter().collect();
-        all.sort_by(|a, b| b.1.tick.cmp(&a.1.tick));
-        all.into_iter()
-            .take(limit)
-            .map(|(&(variant, state), e)| (variant, state, e.mask.clone()))
-            .collect()
+    pub fn hot_entries(&self, limit: usize) -> Vec<(u64, u64, Arc<TokenMask>)> {
+        let mut all: Vec<(u64, (u64, u64, Arc<TokenMask>))> = Vec::new();
+        for lock in &self.shards {
+            let shard = lock.read().expect("mask cache lock");
+            all.extend(shard.iter().map(|(&(variant, state), e)| {
+                (e.tick.load(Ordering::Relaxed), (variant, state, e.mask.clone()))
+            }));
+        }
+        all.sort_by(|a, b| b.0.cmp(&a.0));
+        all.into_iter().take(limit).map(|(_, entry)| entry).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("mask cache lock").map.len()
+        self.shards.iter().map(|s| s.read().expect("mask cache lock").len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -213,7 +258,7 @@ impl Checker for CachedChecker {
         self.inner.advance(token)
     }
 
-    fn compute_mask(&mut self) -> TokenMask {
+    fn compute_mask(&mut self) -> Arc<TokenMask> {
         let Some(state) = self.inner.mask_key() else {
             return self.inner.compute_mask();
         };
@@ -261,12 +306,12 @@ impl Checker for CachedChecker {
 mod tests {
     use super::*;
 
-    fn mask_with(size: usize, bits: &[TokenId]) -> TokenMask {
+    fn mask_with(size: usize, bits: &[TokenId]) -> Arc<TokenMask> {
         let mut m = TokenMask::none(size);
         for &b in bits {
             m.allow(b);
         }
-        m
+        Arc::new(m)
     }
 
     #[test]
@@ -283,7 +328,9 @@ mod tests {
 
     #[test]
     fn lru_evicts_oldest() {
-        let c = MaskCache::new(2);
+        // Single shard pins global LRU order (with several shards, LRU is
+        // exact per shard).
+        let c = MaskCache::with_shards(2, 1);
         c.put(0, 1, mask_with(8, &[1]));
         c.put(0, 2, mask_with(8, &[2]));
         assert!(c.get(0, 1).is_some()); // touch 1 → 2 is now oldest
@@ -306,8 +353,26 @@ mod tests {
         assert_eq!(hot.len(), 2);
         assert_eq!((hot[0].0, hot[0].1), (0, 1), "MRU first");
         assert_eq!((hot[1].0, hot[1].1), (0, 3));
-        assert_eq!(hot[0].2, mask_with(8, &[1]));
+        assert_eq!(*hot[0].2, *mask_with(8, &[1]));
         assert_eq!(c.hot_entries(100).len(), 3, "limit caps, never pads");
+    }
+
+    #[test]
+    fn sharded_cache_keeps_per_key_consistency() {
+        // Keys land on every shard; each must read back its own mask.
+        let c = MaskCache::new(1024);
+        assert!(c.shards.len() > 1, "default layout is sharded");
+        for state in 0..64u64 {
+            c.put(1, state, mask_with(130, &[(state % 100) as TokenId]));
+        }
+        for state in 0..64u64 {
+            let got = c.get(1, state).expect("present");
+            assert!(got.allowed((state % 100) as TokenId));
+            assert_eq!(got.count(), 1);
+        }
+        let s = c.stats();
+        assert_eq!(s.entries, 64);
+        assert_eq!((s.hits, s.misses), (64, 0));
     }
 
     #[test]

@@ -132,6 +132,11 @@ pub struct EngineRegistry {
     /// Set by the first `warm_start` call; later calls are no-ops so every
     /// shard init can invoke it unconditionally.
     warmed: AtomicBool,
+    /// When set, cache misses compile with [`Engine::compile_lazy`]:
+    /// near-instant builds whose scanner DFAs and subterminal trees
+    /// materialize per visited state. Artifact loads are unaffected (they
+    /// already carry dense tables).
+    lazy_build: AtomicBool,
 }
 
 impl EngineRegistry {
@@ -167,7 +172,19 @@ impl EngineRegistry {
             warm_loaded: AtomicU64::new(0),
             warm_start_ms: AtomicU64::new(0),
             warmed: AtomicBool::new(false),
+            lazy_build: AtomicBool::new(false),
         })
+    }
+
+    /// Switch cache-miss compiles between eager (default) and lazy
+    /// ([`Engine::compile_lazy`]). Takes effect for subsequent misses;
+    /// already-cached engines keep whichever mode built them.
+    pub fn set_lazy_build(&self, on: bool) {
+        self.lazy_build.store(on, Ordering::Relaxed);
+    }
+
+    pub fn lazy_build(&self) -> bool {
+        self.lazy_build.load(Ordering::Relaxed)
     }
 
     /// The attached artifact store, if any.
@@ -255,7 +272,14 @@ impl EngineRegistry {
             Some(hit) => Ok(hit),
             None => {
                 let t0 = Instant::now();
-                let r = spec.to_cfg().and_then(|cfg| Engine::compile(cfg, vocab.clone()));
+                let lazy = self.lazy_build.load(Ordering::Relaxed);
+                let r = spec.to_cfg().and_then(|cfg| {
+                    if lazy {
+                        Engine::compile_lazy(cfg, vocab.clone())
+                    } else {
+                        Engine::compile(cfg, vocab.clone())
+                    }
+                });
                 self.compile_ms.fetch_add(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
                 r.map(|engine| (engine, Vec::new()))
             }
@@ -278,10 +302,14 @@ impl EngineRegistry {
                     let mut inner = self.inner.lock().expect("registry lock");
                     inner.building.remove(&key);
                 }
-                if !from_store {
+                if !from_store && !engine.is_lazy() {
                     // Write-back: the next process boots warm. Only the
                     // thread that compiled pays the disk; failures
                     // degrade to cold starts, never to request errors.
+                    // Lazy engines skip the immediate write-back — saving
+                    // would force full materialization, defeating the
+                    // deferred-compile point; `flush_artifacts` persists
+                    // them (materialized) at shutdown instead.
                     if let Some(store) = &self.store {
                         if let Err(e) = store.save(spec, vocab, k, &engine, &[]) {
                             eprintln!("domino: artifact write-back for {label} failed: {e:#}");
@@ -521,6 +549,33 @@ mod tests {
         assert!(!reg.contains(&bad, &v, None));
         // A failed build must not wedge later lookups of the same key.
         assert!(reg.get_or_compile(&bad, &v, None).is_err());
+    }
+
+    #[test]
+    fn lazy_build_flag_compiles_lazy_and_flush_materializes() {
+        let dir = std::env::temp_dir()
+            .join(format!("domino_registry_lazy_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("fig3");
+        {
+            let reg = EngineRegistry::with_store(4, ArtifactStore::new(&dir).unwrap());
+            reg.set_lazy_build(true);
+            assert!(reg.lazy_build());
+            let (engine, _) = reg.get_or_compile(&spec, &v, None).unwrap();
+            assert!(engine.is_lazy());
+            // No immediate write-back for lazy compiles…
+            assert!(matches!(reg.store().unwrap().load(&spec, &v, None), ArtifactLoad::Miss));
+            // …but the shutdown flush persists them, materialized.
+            assert_eq!(reg.flush_artifacts(), 1);
+        }
+        let reg2 = EngineRegistry::with_store(4, ArtifactStore::new(&dir).unwrap());
+        reg2.set_lazy_build(true);
+        assert_eq!(reg2.warm_start(&v), 1);
+        let (engine, _) = reg2.get_or_compile(&spec, &v, None).unwrap();
+        assert!(!engine.is_lazy(), "warm-started engines carry dense tables");
+        assert_eq!(reg2.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

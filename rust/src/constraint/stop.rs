@@ -23,6 +23,10 @@ pub struct StopChecker {
     tail: Vec<u8>,
     hit: bool,
     keep: usize,
+    /// The only two masks this checker ever produces, prebuilt so
+    /// `compute_mask` is an `Arc` clone per step.
+    mask_all: Arc<TokenMask>,
+    mask_eos: Arc<TokenMask>,
 }
 
 impl StopChecker {
@@ -32,7 +36,13 @@ impl StopChecker {
         let sequences: Vec<Vec<u8>> =
             sequences.iter().filter(|s| !s.is_empty()).map(|s| s.as_bytes().to_vec()).collect();
         let keep = sequences.iter().map(|s| s.len()).max().unwrap_or(1).saturating_sub(1);
-        StopChecker { vocab, sequences, tail: Vec::new(), hit: false, keep }
+        let mask_all = Arc::new(TokenMask::all(vocab.len()));
+        let mask_eos = {
+            let mut m = TokenMask::none(vocab.len());
+            m.allow(EOS_ID);
+            Arc::new(m)
+        };
+        StopChecker { vocab, sequences, tail: Vec::new(), hit: false, keep, mask_all, mask_eos }
     }
 
     /// Has a stop sequence been completed?
@@ -66,13 +76,11 @@ impl Checker for StopChecker {
         Ok(())
     }
 
-    fn compute_mask(&mut self) -> TokenMask {
+    fn compute_mask(&mut self) -> Arc<TokenMask> {
         if self.hit {
-            let mut m = TokenMask::none(self.vocab.len());
-            m.allow(EOS_ID);
-            m
+            self.mask_eos.clone()
         } else {
-            TokenMask::all(self.vocab.len())
+            self.mask_all.clone()
         }
     }
 

@@ -75,6 +75,48 @@ impl Engine {
         Ok(Arc::new(Engine { grammar, scanner, trees, earley, vocab }))
     }
 
+    /// Compile **lazily**: terminal regexes stay NFAs (determinized per
+    /// visited state, [`Scanner::new_lazy`]) and subterminal trees build
+    /// on demand per reached position ([`TreeSet::lazy`]). Construction is
+    /// near-instant regardless of grammar size; per-step cost amortizes to
+    /// the eager engine's as states are discovered. Masks are identical to
+    /// [`Engine::compile`]'s — only *when* the tables are built differs.
+    pub fn compile_lazy(grammar: Cfg, vocab: Arc<Vocab>) -> crate::Result<Arc<Engine>> {
+        let grammar = Arc::new(grammar);
+        let scanner = Arc::new(Scanner::new_lazy(&grammar)?);
+        let trees = Arc::new(TreeSet::lazy(vocab.clone()));
+        let earley = Arc::new(Earley::new(grammar.clone()));
+        Ok(Arc::new(Engine { grammar, scanner, trees, earley, vocab }))
+    }
+
+    /// Was this engine compiled lazily (see [`Engine::compile_lazy`])?
+    pub fn is_lazy(&self) -> bool {
+        self.scanner.is_lazy()
+    }
+
+    /// An equivalent fully-materialized engine: the lazy scanner is
+    /// explored to fixpoint with its state numbering preserved (so every
+    /// `Pos` this engine ever handed out stays valid), and complete trees
+    /// are built over the dense scanner. This is what artifact
+    /// serialization snapshots; eager engines are returned as-is
+    /// (rebuilding nothing).
+    pub fn materialize_full(&self) -> Arc<Engine> {
+        let (scanner, trees) = if self.is_lazy() {
+            let scanner = Arc::new(self.scanner.materialized());
+            let trees = Arc::new(TreeSet::build(&scanner, &self.vocab));
+            (scanner, trees)
+        } else {
+            (self.scanner.clone(), self.trees.clone())
+        };
+        Arc::new(Engine {
+            grammar: self.grammar.clone(),
+            scanner,
+            trees,
+            earley: self.earley.clone(),
+            vocab: self.vocab.clone(),
+        })
+    }
+
     /// Reassemble an engine from already-precomputed parts (the artifact
     /// load path): no scanner determinization, no tree build — only the
     /// (cheap) Earley machine is derived fresh from the grammar.
@@ -173,7 +215,7 @@ impl DominoDecoder {
             let cost = depth - discount + 1;
             if self.k.admits(cost) {
                 for (set_id, tokens) in &node.entries {
-                    let info = eng.trees.possets.get(*set_id);
+                    let info = eng.trees.posset(*set_id);
                     if info.terms.iter().any(|&t| chart.allows(t)) {
                         for &t in tokens {
                             mask.allow(t);
@@ -333,7 +375,7 @@ impl Checker for DominoDecoder {
         Ok(())
     }
 
-    fn compute_mask(&mut self) -> TokenMask {
+    fn compute_mask(&mut self) -> Arc<TokenMask> {
         let mut mask = TokenMask::none(self.engine.vocab.len());
         for i in 0..self.hyps.len() {
             let hyp = self.hyps[i].clone();
@@ -344,7 +386,7 @@ impl Checker for DominoDecoder {
         if self.eos_allowed() {
             mask.allow(EOS_ID);
         }
-        mask
+        Arc::new(mask)
     }
 
     fn check_token(&mut self, token: TokenId) -> bool {
@@ -577,6 +619,41 @@ mod tests {
         assert_eq!(by_bytes.mask_key(), by_merge.mask_key());
         assert_ne!(by_bytes.state_key(), by_merge.state_key());
         assert_eq!(by_bytes.compute_mask(), by_merge.compute_mask());
+    }
+
+    #[test]
+    fn lazy_engine_masks_match_eager() {
+        // Masks are determined by grammar semantics, not by when automata
+        // are determinized: a lazily-compiled engine must be bit-identical
+        // to the eager one along a decoding walk, at finite and infinite k.
+        let vocab = Arc::new(tokenizer::bpe::synthetic_json_vocab(512));
+        let eager = Engine::compile(json(), vocab.clone()).unwrap();
+        let lazy = Engine::compile_lazy(json(), vocab.clone()).unwrap();
+        assert!(lazy.is_lazy() && !eager.is_lazy());
+        let ids = vocab.encode(b"{\"name\": \"John\", \"age\": 35}");
+        for k in [Lookahead::K(0), Lookahead::Infinite] {
+            let mut de = DominoDecoder::new(eager.clone(), k);
+            let mut dl = DominoDecoder::new(lazy.clone(), k);
+            for &id in &ids {
+                assert_eq!(de.compute_mask(), dl.compute_mask(), "k={k:?} before {:?}", vocab.token_str(id));
+                de.advance(id).unwrap();
+                dl.advance(id).unwrap();
+            }
+            assert_eq!(de.compute_mask(), dl.compute_mask(), "k={k:?} at end");
+        }
+        // Lazy construction only built what the walk touched.
+        assert!(lazy.trees.num_trees() > 0);
+        // Materialization preserves behavior (and the engine stops being
+        // lazy).
+        let mat = lazy.materialize_full();
+        assert!(!mat.is_lazy());
+        let mut dm = DominoDecoder::new(mat, Lookahead::Infinite);
+        let mut dl = DominoDecoder::new(lazy.clone(), Lookahead::Infinite);
+        for &id in &ids {
+            dm.advance(id).unwrap();
+            dl.advance(id).unwrap();
+        }
+        assert_eq!(dm.compute_mask(), dl.compute_mask());
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub use spec::SpeculativeModel;
 pub use tree::TreeSet;
 
 use crate::TokenId;
+use std::sync::Arc;
 
 /// Algorithm 1's checker interface.
 ///
@@ -37,7 +38,11 @@ pub trait Checker: Send {
     fn advance(&mut self, token: TokenId) -> crate::Result<()>;
 
     /// Mask of legal next tokens (EOS included, as token id 0).
-    fn compute_mask(&mut self) -> TokenMask;
+    ///
+    /// Returned behind an `Arc` so cache hits (the common case under the
+    /// shared [`crate::constraint::MaskCache`]) hand out the stored mask
+    /// without deep-copying a vocabulary-sized bitset per step.
+    fn compute_mask(&mut self) -> Arc<TokenMask>;
 
     /// Is this single token a legal continuation?
     fn check_token(&mut self, token: TokenId) -> bool;
@@ -83,12 +88,12 @@ pub trait Checker: Send {
 
 /// The trivial checker: everything allowed (unconstrained decoding).
 pub struct Unconstrained {
-    vocab_size: usize,
+    all: Arc<TokenMask>,
 }
 
 impl Unconstrained {
     pub fn new(vocab_size: usize) -> Self {
-        Unconstrained { vocab_size }
+        Unconstrained { all: Arc::new(TokenMask::all(vocab_size)) }
     }
 }
 
@@ -97,8 +102,8 @@ impl Checker for Unconstrained {
         Ok(())
     }
 
-    fn compute_mask(&mut self) -> TokenMask {
-        TokenMask::all(self.vocab_size)
+    fn compute_mask(&mut self) -> Arc<TokenMask> {
+        self.all.clone()
     }
 
     fn check_token(&mut self, _token: TokenId) -> bool {

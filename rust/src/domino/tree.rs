@@ -10,17 +10,31 @@
 //! At inference time the decoder walks a tree with the parser, pruning
 //! edges whose terminal the parser rejects — mask computation then touches
 //! only the (small) tree instead of the whole vocabulary (§3.5).
+//!
+//! A [`TreeSet`] comes in two flavours:
+//!
+//! * **Complete** ([`TreeSet::build`]) — one tree per scanner position,
+//!   precomputed offline; requires a dense scanner (trees are indexed by
+//!   [`Scanner::pos_id`]).
+//! * **Lazy** ([`TreeSet::lazy`]) — trees built on first request per
+//!   position and memoized in a keyed table; pairs with
+//!   [`Scanner::new_lazy`] so huge grammars pay precompute cost only for
+//!   positions decoding actually reaches.
+//!
+//! Both hand out trees as `Arc<Tree>` so the decoder holds no borrows into
+//! the set while walking.
 
 use crate::grammar::TermId;
 use crate::scanner::{Pos, Scanner};
 use crate::tokenizer::Vocab;
 use crate::TokenId;
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 /// Interned final-position sets, shared across all trees.
 #[derive(Debug, Default)]
 pub struct PosSets {
-    sets: Vec<PosSetInfo>,
+    sets: Vec<Arc<PosSetInfo>>,
     ids: HashMap<Vec<Pos>, u32>,
 }
 
@@ -58,12 +72,18 @@ impl PosSets {
         accepting.dedup();
         let id = self.sets.len() as u32;
         self.ids.insert(set.clone(), id);
-        self.sets.push(PosSetInfo { positions: set, terms, accepting_terms: accepting });
+        self.sets.push(Arc::new(PosSetInfo { positions: set, terms, accepting_terms: accepting }));
         id
     }
 
     pub fn get(&self, id: u32) -> &PosSetInfo {
         &self.sets[id as usize]
+    }
+
+    /// Shared handle to an interned set (what the decoder holds while
+    /// traversing — no borrow into the table).
+    pub fn get_arc(&self, id: u32) -> Arc<PosSetInfo> {
+        self.sets[id as usize].clone()
     }
 
     pub fn len(&self) -> usize {
@@ -115,13 +135,30 @@ impl Tree {
     }
 }
 
+/// Memoized on-demand trees (the lazy backend).
+struct LazyState {
+    trees: HashMap<Pos, Arc<Tree>>,
+    possets: PosSets,
+}
+
+enum Inner {
+    Complete {
+        /// Indexed by [`Scanner::pos_id`].
+        trees: Vec<Arc<Tree>>,
+        possets: PosSets,
+    },
+    Lazy {
+        vocab: Arc<Vocab>,
+        state: RwLock<LazyState>,
+    },
+}
+
 /// All trees for a (grammar, vocabulary) pair + interned position sets —
-/// the offline precomputation of §3.5.
+/// the offline precomputation of §3.5 (complete mode), or its on-demand
+/// equivalent (lazy mode).
 pub struct TreeSet {
-    /// Indexed by [`Scanner::pos_id`].
-    pub trees: Vec<Tree>,
-    pub possets: PosSets,
-    pub vocab_size: usize,
+    inner: Inner,
+    vocab_size: usize,
 }
 
 impl TreeSet {
@@ -130,11 +167,11 @@ impl TreeSet {
     pub fn build_serial(scanner: &Scanner, vocab: &Vocab) -> TreeSet {
         let positions = scanner.reachable_positions();
         let mut possets = PosSets::default();
-        let mut trees: Vec<Tree> = Vec::with_capacity(positions.len());
+        let mut trees: Vec<Arc<Tree>> = Vec::with_capacity(positions.len());
         for pos in positions {
-            trees.push(Self::build_tree(scanner, vocab, pos, &mut possets));
+            trees.push(Arc::new(Self::build_tree(scanner, vocab, pos, &mut possets)));
         }
-        TreeSet { trees, possets, vocab_size: vocab.len() }
+        TreeSet { inner: Inner::Complete { trees, possets }, vocab_size: vocab.len() }
     }
 
     /// Parallel build: positions are independent, so trees build on worker
@@ -170,20 +207,11 @@ impl TreeSet {
         });
         // Merge: re-intern local posset ids into the global table.
         let mut possets = PosSets::default();
-        let mut by_pos: HashMap<Pos, Tree> = HashMap::new();
+        let mut by_pos: HashMap<Pos, Arc<Tree>> = HashMap::new();
         for batch in results {
             for (pos, mut tree, local) in batch {
-                let remap: Vec<u32> = local
-                    .sets
-                    .iter()
-                    .map(|info| possets.intern(scanner, info.positions.clone()))
-                    .collect();
-                for node in &mut tree.nodes {
-                    for (set_id, _) in &mut node.entries {
-                        *set_id = remap[*set_id as usize];
-                    }
-                }
-                by_pos.insert(pos, tree);
+                remap_entries(scanner, &mut possets, &local, &mut tree);
+                by_pos.insert(pos, Arc::new(tree));
             }
         }
         let trees = scanner
@@ -191,7 +219,49 @@ impl TreeSet {
             .into_iter()
             .map(|pos| by_pos.remove(&pos).expect("tree built for every position"))
             .collect();
-        TreeSet { trees, possets, vocab_size: vocab.len() }
+        TreeSet { inner: Inner::Complete { trees, possets }, vocab_size: vocab.len() }
+    }
+
+    /// An empty lazy set: trees are built (and memoized) on first request
+    /// per position via [`TreeSet::tree`]. Works with both scanner
+    /// backends — no dense [`Scanner::pos_id`] numbering is required.
+    pub fn lazy(vocab: Arc<Vocab>) -> TreeSet {
+        let vocab_size = vocab.len();
+        TreeSet {
+            inner: Inner::Lazy {
+                vocab,
+                state: RwLock::new(LazyState { trees: HashMap::new(), possets: PosSets::default() }),
+            },
+            vocab_size,
+        }
+    }
+
+    /// Reassemble a complete set from deserialized parts (the artifact
+    /// load path). `trees[i]` must correspond to `scanner.pos_of_id(i)`.
+    pub fn from_parts(trees: Vec<Tree>, possets: PosSets, vocab_size: usize) -> TreeSet {
+        TreeSet {
+            inner: Inner::Complete { trees: trees.into_iter().map(Arc::new).collect(), possets },
+            vocab_size,
+        }
+    }
+
+    /// The complete tables, for serialization. Panics on a lazy set —
+    /// artifact encoding materializes the engine first.
+    pub fn complete_parts(&self) -> (&[Arc<Tree>], &PosSets) {
+        match &self.inner {
+            Inner::Complete { trees, possets } => (trees, possets),
+            Inner::Lazy { .. } => {
+                panic!("complete_parts on a lazy TreeSet; materialize the engine first")
+            }
+        }
+    }
+
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.inner, Inner::Lazy { .. })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
     }
 
     fn build_tree(scanner: &Scanner, vocab: &Vocab, pos: Pos, possets: &mut PosSets) -> Tree {
@@ -228,13 +298,80 @@ impl TreeSet {
         Tree { nodes }
     }
 
-    pub fn tree(&self, scanner: &Scanner, pos: Pos) -> &Tree {
-        &self.trees[scanner.pos_id(pos) as usize]
+    /// The tree for `pos`. Complete sets index by [`Scanner::pos_id`];
+    /// lazy sets build and memoize on first request (subsequent requests
+    /// are a read-lock + `Arc` clone).
+    pub fn tree(&self, scanner: &Scanner, pos: Pos) -> Arc<Tree> {
+        match &self.inner {
+            Inner::Complete { trees, .. } => trees[scanner.pos_id(pos) as usize].clone(),
+            Inner::Lazy { vocab, state } => {
+                if let Some(t) = state.read().unwrap().trees.get(&pos) {
+                    return t.clone();
+                }
+                // Build outside the lock (traversal may be slow and may
+                // itself take the lazy scanner's locks), interning into a
+                // local table; splice into the shared table under the
+                // write lock.
+                let mut local = PosSets::default();
+                let mut tree = Self::build_tree(scanner, vocab, pos, &mut local);
+                let mut st = state.write().unwrap();
+                if let Some(t) = st.trees.get(&pos) {
+                    return t.clone(); // another slot won the race
+                }
+                remap_entries(scanner, &mut st.possets, &local, &mut tree);
+                let tree = Arc::new(tree);
+                st.trees.insert(pos, tree.clone());
+                tree
+            }
+        }
     }
 
-    /// Total node count across all trees (the §4.3 size statistic).
+    /// Shared handle to interned position-set `id`.
+    pub fn posset(&self, id: u32) -> Arc<PosSetInfo> {
+        match &self.inner {
+            Inner::Complete { possets, .. } => possets.get_arc(id),
+            Inner::Lazy { state, .. } => state.read().unwrap().possets.get_arc(id),
+        }
+    }
+
+    /// Trees existing right now: all positions (complete) or those built
+    /// so far (lazy).
+    pub fn num_trees(&self) -> usize {
+        match &self.inner {
+            Inner::Complete { trees, .. } => trees.len(),
+            Inner::Lazy { state, .. } => state.read().unwrap().trees.len(),
+        }
+    }
+
+    /// Interned position sets existing right now (see
+    /// [`TreeSet::num_trees`]).
+    pub fn num_possets(&self) -> usize {
+        match &self.inner {
+            Inner::Complete { possets, .. } => possets.len(),
+            Inner::Lazy { state, .. } => state.read().unwrap().possets.len(),
+        }
+    }
+
+    /// Total node count across existing trees (the §4.3 size statistic).
     pub fn total_nodes(&self) -> usize {
-        self.trees.iter().map(|t| t.num_nodes()).sum()
+        match &self.inner {
+            Inner::Complete { trees, .. } => trees.iter().map(|t| t.num_nodes()).sum(),
+            Inner::Lazy { state, .. } => {
+                state.read().unwrap().trees.values().map(|t| t.num_nodes()).sum()
+            }
+        }
+    }
+}
+
+/// Re-intern `local`'s posset ids into `global`, rewriting `tree`'s
+/// entries in place.
+fn remap_entries(scanner: &Scanner, global: &mut PosSets, local: &PosSets, tree: &mut Tree) {
+    let remap: Vec<u32> =
+        local.sets.iter().map(|info| global.intern(scanner, info.positions.clone())).collect();
+    for node in &mut tree.nodes {
+        for (set_id, _) in &mut node.entries {
+            *set_id = remap[*set_id as usize];
+        }
     }
 }
 
@@ -257,9 +394,9 @@ mod tests {
         let s = Scanner::new(&g).unwrap();
         let v = mini_vocab();
         let ts = TreeSet::build(&s, &v);
-        assert_eq!(ts.trees.len(), s.num_pos());
+        assert_eq!(ts.num_trees(), s.num_pos());
         assert!(ts.total_nodes() >= s.num_pos()); // at least a root each
-        assert!(ts.possets.len() > 0);
+        assert!(ts.num_possets() > 0);
     }
 
     #[test]
@@ -269,8 +406,10 @@ mod tests {
         let v = mini_vocab();
         let a = TreeSet::build(&s, &v);
         let b = TreeSet::build_serial(&s, &v);
-        assert_eq!(a.trees.len(), b.trees.len());
-        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+        assert_eq!(a.num_trees(), b.num_trees());
+        let (ta_all, _) = a.complete_parts();
+        let (tb_all, _) = b.complete_parts();
+        for (ta, tb) in ta_all.iter().zip(tb_all) {
             assert_eq!(ta.num_nodes(), tb.num_nodes());
             // Same token multiset at the root.
             let count = |t: &Tree| -> usize {
@@ -286,7 +425,8 @@ mod tests {
         let s = Scanner::new(&g).unwrap();
         let v = Vocab::byte_level();
         let ts = TreeSet::build(&s, &v);
-        let root = ts.tree(&s, Pos::Boundary).root();
+        let tree = ts.tree(&s, Pos::Boundary);
+        let root = tree.root();
         // Tokens '(' ')' '+' '0'..'9' all end at the root (no completed
         // terminal) with a pending position.
         let mut root_tokens: Vec<TokenId> = root
@@ -331,5 +471,39 @@ mod tests {
             .iter()
             .any(|(_, toks)| toks.contains(&bridge));
         assert!(found, "bridge token should land at depth 2");
+    }
+
+    #[test]
+    fn lazy_treeset_builds_on_demand_and_matches_complete() {
+        let g = fig3_expr();
+        let s = Scanner::new(&g).unwrap();
+        let v = Arc::new(mini_vocab());
+        let complete = TreeSet::build(&s, &v);
+        let lazy = TreeSet::lazy(v.clone());
+        assert!(lazy.is_lazy());
+        assert_eq!(lazy.num_trees(), 0);
+        // Request a couple of positions; each must match the precomputed
+        // tree structurally (node count + token multiset).
+        let mid = s.traverse(&[Pos::Boundary], b"12").into_iter().find(|(q, _)| q.is_empty()).unwrap().1;
+        for pos in [Pos::Boundary, mid[0]] {
+            let a = complete.tree(&s, pos);
+            let b = lazy.tree(&s, pos);
+            assert_eq!(a.num_nodes(), b.num_nodes(), "{pos:?}");
+            let count = |t: &Tree| -> usize {
+                t.nodes.iter().map(|n| n.entries.iter().map(|(_, ts)| ts.len()).sum::<usize>()).sum()
+            };
+            assert_eq!(count(&a), count(&b), "{pos:?}");
+        }
+        // Only the requested trees exist; a repeat request is memoized.
+        assert_eq!(lazy.num_trees(), 2);
+        let again = lazy.tree(&s, Pos::Boundary);
+        assert_eq!(lazy.num_trees(), 2);
+        assert!(Arc::ptr_eq(&again, &lazy.tree(&s, Pos::Boundary)));
+        // Posset lookups resolve for every entry in a lazy tree.
+        for node in &again.nodes {
+            for (set_id, _) in &node.entries {
+                assert!(!lazy.posset(*set_id).positions.is_empty());
+            }
+        }
     }
 }

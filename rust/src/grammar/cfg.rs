@@ -132,6 +132,23 @@ impl Cfg {
             })
             .collect()
     }
+
+    /// Compile every terminal to its Thompson NFA **without**
+    /// determinizing — the cheap half of scanner construction, used by the
+    /// lazy scanner ([`crate::scanner::Scanner::new_lazy`]) which
+    /// determinizes per visited state instead.
+    pub fn terminal_nfas(&self) -> crate::Result<Vec<regex::Nfa>> {
+        self.terminals
+            .iter()
+            .map(|t| {
+                let ast = match &t.kind {
+                    TerminalKind::Literal(bytes) => crate::regex::ast::Regex::Literal(bytes.clone()),
+                    TerminalKind::Regex(pat) => regex::parse(pat)?,
+                };
+                Ok(regex::Nfa::from_regex(&ast))
+            })
+            .collect()
+    }
 }
 
 fn compute_nullable(nt_count: usize, productions: &[Production]) -> Vec<bool> {

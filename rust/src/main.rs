@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! domino serve [--addr 127.0.0.1:7761] [--engines 1] [--slots 4]
-//!              [--queue-depth 64] [--deadline-ms N] [--artifact-dir DIR] [--mock]
+//!              [--queue-depth 64] [--deadline-ms N] [--artifact-dir DIR]
+//!              [--lazy-compile] [--mock]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --json-schema SRC |
 //!                 --json-schema-file PATH | --regex PATTERN | --stop "a,b"]
@@ -89,6 +90,8 @@ fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler>
             .and_then(|s| s.parse().ok())
             .map(Duration::from_millis),
         artifact_dir: constraint_artifact_dir(flags),
+        lazy_compile: flags.contains_key("lazy-compile")
+            || std::env::var_os("DOMINO_LAZY_COMPILE").is_some_and(|v| v != "0"),
         ..SchedulerConfig::default()
     };
     // One vocab Arc shared by every shard (registry keys hash the vocab
@@ -377,7 +380,7 @@ fn main() {
                 "usage: domino <serve|generate|precompile|grammar|grammars> [flags]\n\
                  \n\
                  serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
-                 \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--mock]\n\
+                 \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--lazy-compile] [--mock]\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --json-schema SRC | --json-schema-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\

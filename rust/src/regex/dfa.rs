@@ -8,9 +8,15 @@
 
 use super::nfa::{Nfa, StateId};
 use std::collections::HashMap;
+use std::sync::RwLock;
 
 /// Sentinel for "no transition".
 pub const DEAD: u32 = u32::MAX;
+
+/// Sentinel inside a [`LazyDfa`] transition table: this `(state, byte)`
+/// pair has not been determinized yet. Distinct from [`DEAD`] ("explored,
+/// no transition").
+const UNEXPLORED: u32 = u32::MAX - 1;
 
 /// A dense DFA over bytes.
 #[derive(Clone, Debug)]
@@ -140,6 +146,157 @@ impl Dfa {
     }
 }
 
+/// Mutable core of a [`LazyDfa`]: the subset-construction tables, grown
+/// incrementally as `(state, byte)` pairs are first visited.
+#[derive(Clone)]
+struct LazyStates {
+    /// ε-closed NFA state set backing each DFA state.
+    sets: Vec<Vec<StateId>>,
+    ids: HashMap<Vec<StateId>, u32>,
+    /// `trans[state * 256 + byte]` — next state, [`DEAD`], or
+    /// [`UNEXPLORED`].
+    trans: Vec<u32>,
+    accepting: Vec<bool>,
+}
+
+impl LazyStates {
+    fn intern(&mut self, set: Vec<StateId>, accept: StateId) -> u32 {
+        if let Some(&id) = self.ids.get(&set) {
+            return id;
+        }
+        let id = self.sets.len() as u32;
+        self.accepting.push(set.contains(&accept));
+        self.trans.extend(std::iter::repeat(UNEXPLORED).take(256));
+        self.sets.push(set.clone());
+        self.ids.insert(set, id);
+        id
+    }
+}
+
+/// A lazily-determinized DFA: subset construction is performed on demand,
+/// one `(state, byte)` transition at a time, so compile cost is
+/// proportional to the states actually *visited* during decoding rather
+/// than the full automaton. Huge schema-emitted grammars whose terminals
+/// would take seconds to determinize eagerly start serving immediately.
+///
+/// State numbering is discovery order (start = 0) and is **stable**: once
+/// a state has been handed out its id never changes, and
+/// [`materialize`](LazyDfa::materialize) preserves the numbering (no
+/// minimization pass), so scanner positions recorded against a lazy DFA —
+/// including persisted mask seeds — stay valid for the dense artifact.
+///
+/// Interior mutability via an [`RwLock`]: lookups of already-explored
+/// transitions take the read lock only, so concurrent decode slots sharing
+/// an engine proceed without serializing on the hot path.
+pub struct LazyDfa {
+    nfa: Nfa,
+    inner: RwLock<LazyStates>,
+}
+
+impl Clone for LazyDfa {
+    fn clone(&self) -> LazyDfa {
+        let snapshot = self.inner.read().unwrap().clone();
+        LazyDfa { nfa: self.nfa.clone(), inner: RwLock::new(snapshot) }
+    }
+}
+
+impl LazyDfa {
+    pub fn new(nfa: Nfa) -> LazyDfa {
+        let mut inner = LazyStates {
+            sets: Vec::new(),
+            ids: HashMap::new(),
+            trans: Vec::new(),
+            accepting: Vec::new(),
+        };
+        let accept = nfa.accept;
+        inner.intern(nfa.start_set(), accept);
+        LazyDfa { nfa, inner: RwLock::new(inner) }
+    }
+
+    /// The start state is always id 0 (first interned).
+    #[inline]
+    pub fn start(&self) -> u32 {
+        0
+    }
+
+    /// Next state for `(state, byte)`, determinizing the transition on
+    /// first visit. Returns [`DEAD`] when no transition exists.
+    pub fn next(&self, state: u32, byte: u8) -> u32 {
+        if state == DEAD {
+            return DEAD;
+        }
+        let idx = state as usize * 256 + byte as usize;
+        {
+            let inner = self.inner.read().unwrap();
+            let t = inner.trans[idx];
+            if t != UNEXPLORED {
+                return t;
+            }
+        }
+        let mut inner = self.inner.write().unwrap();
+        // Double-check: another thread may have explored it meanwhile.
+        let t = inner.trans[idx];
+        if t != UNEXPLORED {
+            return t;
+        }
+        let set = inner.sets[state as usize].clone();
+        let next = self.nfa.step(&set, byte);
+        let t = if next.is_empty() { DEAD } else { inner.intern(next, self.nfa.accept) };
+        inner.trans[idx] = t;
+        t
+    }
+
+    pub fn accepting(&self, state: u32) -> bool {
+        self.inner.read().unwrap().accepting[state as usize]
+    }
+
+    /// Number of DFA states discovered so far (not the full automaton's).
+    pub fn num_states(&self) -> usize {
+        self.inner.read().unwrap().accepting.len()
+    }
+
+    /// Full-match test (drives lazy exploration along the way).
+    pub fn accepts(&self, input: &[u8]) -> bool {
+        let mut s = self.start();
+        for &b in input {
+            s = self.next(s, b);
+            if s == DEAD {
+                return false;
+            }
+        }
+        self.accepting(s)
+    }
+
+    /// Explore to fixpoint and emit a dense [`Dfa`].
+    ///
+    /// Discovery-order numbering is preserved (append-only exploration, no
+    /// minimization), so any state id observed through this `LazyDfa` —
+    /// e.g. a scanner position baked into a cached mask — denotes the same
+    /// state in the returned automaton. Used to serialize artifacts from
+    /// lazily-compiled engines.
+    pub fn materialize(&self) -> Dfa {
+        let mut inner = self.inner.write().unwrap();
+        let mut i = 0;
+        while i < inner.sets.len() {
+            let set = inner.sets[i].clone();
+            let live = self.nfa.live_bytes(&set);
+            for b in live.iter() {
+                let idx = i * 256 + b as usize;
+                if inner.trans[idx] != UNEXPLORED {
+                    continue;
+                }
+                let next = self.nfa.step(&set, b);
+                let t = if next.is_empty() { DEAD } else { inner.intern(next, self.nfa.accept) };
+                inner.trans[idx] = t;
+            }
+            i += 1;
+        }
+        let trans =
+            inner.trans.iter().map(|&t| if t == UNEXPLORED { DEAD } else { t }).collect();
+        Dfa { trans, accepting: inner.accepting.clone(), start: 0 }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +327,70 @@ mod tests {
         let d = dfa("(a|b)*");
         assert_eq!(d.num_states(), 1);
         assert!(d.accepting[d.start as usize]);
+    }
+
+    #[test]
+    fn lazy_dfa_matches_eager_language() {
+        let cases = [
+            ("(0+)|([1-9][0-9]*)", vec!["0", "007", "000", "123", ""]),
+            ("a*b|c", vec!["b", "aab", "c", "ac", "abc"]),
+            (r#""([^"\\]|\\(["\\/bfnrt]|u[0-9a-fA-F]{4}))*""#, vec!["\"ok\"", "\"\\u00f\"", "\"\""]),
+        ];
+        for (pat, inputs) in cases {
+            let nfa = Nfa::from_regex(&parse(pat).unwrap());
+            let eager = Dfa::from_nfa(&nfa);
+            let lazy = LazyDfa::new(nfa.clone());
+            for s in &inputs {
+                assert_eq!(lazy.accepts(s.as_bytes()), eager.accepts(s.as_bytes()), "{pat} on {s:?}");
+            }
+            // Materialized automaton recognizes the same language.
+            let dense = lazy.materialize();
+            for s in &inputs {
+                assert_eq!(dense.accepts(s.as_bytes()), eager.accepts(s.as_bytes()), "{pat} dense on {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_dfa_explores_proportional_to_visits() {
+        // A wide alternation: eager construction discovers every branch,
+        // lazy discovers only the prefix actually walked.
+        let pat = "(alpha|bravo|charlie|delta|echo|foxtrot|golf|hotel)";
+        let nfa = Nfa::from_regex(&parse(pat).unwrap());
+        let lazy = LazyDfa::new(nfa.clone());
+        let after_new = lazy.num_states();
+        assert_eq!(after_new, 1, "only the start set is interned up front");
+        let mut s = lazy.start();
+        for &b in b"alp" {
+            s = lazy.next(s, b);
+            assert_ne!(s, DEAD);
+        }
+        let visited = lazy.num_states();
+        let full = lazy.materialize().num_states();
+        assert!(visited < full, "walked {visited} of {full} states");
+    }
+
+    #[test]
+    fn materialize_preserves_discovered_numbering() {
+        let nfa = Nfa::from_regex(&parse("(ab|ac)d*").unwrap());
+        let lazy = LazyDfa::new(nfa);
+        // Explore a few transitions lazily, recording what we saw.
+        let mut seen: Vec<(u32, u8, u32)> = Vec::new();
+        let mut s = lazy.start();
+        for &b in b"abdd" {
+            let t = lazy.next(s, b);
+            seen.push((s, b, t));
+            s = t;
+        }
+        let dense = lazy.materialize();
+        assert_eq!(dense.start, 0);
+        for (from, b, to) in seen {
+            assert_eq!(dense.next(from, b), to, "numbering drifted at ({from}, {b})");
+        }
+        // Accepting flags carry over per id.
+        for id in 0..dense.num_states() as u32 {
+            assert_eq!(dense.accepting[id as usize], lazy.accepting(id));
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod nfa;
 pub mod parse;
 
 pub use ast::Regex;
-pub use dfa::Dfa;
+pub use dfa::{Dfa, LazyDfa};
 pub use nfa::{Nfa, StateId};
 pub use parse::parse;
 

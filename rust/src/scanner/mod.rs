@@ -12,18 +12,32 @@
 //! same byte, or keep extending — both paths are kept and the parser
 //! prunes (maximal munch is never assumed; this is what makes bridge
 //! tokens like `",` representable).
+//!
+//! Two automata backends share the position-level API:
+//!
+//! * **Dense** ([`Scanner::new`] / [`Scanner::from_dfas`]) — every
+//!   terminal eagerly determinized and minimized. Supports the dense
+//!   [`PosId`] numbering that subterminal-tree precomputation and artifact
+//!   serialization rely on.
+//! * **Lazy** ([`Scanner::new_lazy`]) — terminals kept as Thompson NFAs
+//!   and determinized per *visited* state ([`crate::regex::LazyDfa`]), so
+//!   huge schema-emitted grammars pay compile cost proportional to the
+//!   states decoding actually touches. Lazy scanners have no global
+//!   [`PosId`] numbering (the state count is open-ended); callers needing
+//!   one materialize first ([`Scanner::materialized`]).
 
 use crate::grammar::{Cfg, TermId};
-use crate::regex::dfa::{Dfa, DEAD};
+use crate::regex::dfa::{Dfa, LazyDfa, DEAD};
 use std::collections::HashMap;
 use std::sync::Arc;
 
 /// A scanner position: at a terminal boundary, or inside terminal `t` at
 /// DFA state `s`.
 ///
-/// `In(t, s)` with `dfas[t].accepting[s]` means the terminal *may* close
-/// here (a Full subterminal, possibly extendable — the two accepting
-/// states of Fig. 4); closing is deferred until the next byte forces it.
+/// `In(t, s)` with state `s` accepting in terminal `t` means the terminal
+/// *may* close here (a Full subterminal, possibly extendable — the two
+/// accepting states of Fig. 4); closing is deferred until the next byte
+/// forces it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Pos {
     /// At a terminal boundary (only before the first byte of generation).
@@ -33,14 +47,26 @@ pub enum Pos {
 }
 
 /// Dense id for a [`Pos`] (`0` = Boundary, then per-terminal DFA states).
+/// Dense scanners only.
 pub type PosId = u32;
 
-/// The compiled scanner: per-terminal DFAs + dense `Pos` numbering.
+/// The automata backing a scanner.
+#[derive(Clone)]
+enum Automata {
+    Dense(Vec<Dfa>),
+    Lazy(Vec<LazyDfa>),
+}
+
+/// The compiled scanner: per-terminal automata + (dense mode) a dense
+/// `Pos` numbering.
 #[derive(Clone)]
 pub struct Scanner {
-    pub dfas: Vec<Dfa>,
-    /// `pos_offset[t] + s + 1` = PosId of `In(t, s)`.
+    auto: Automata,
+    /// Dense mode: `pos_offset[t] + s + 1` = PosId of `In(t, s)`. Empty in
+    /// lazy mode.
     pos_offset: Vec<u32>,
+    /// Dense mode only; 0 in lazy mode (meaningless — use
+    /// [`Scanner::discovered_states`]).
     num_pos: u32,
 }
 
@@ -49,9 +75,9 @@ impl Scanner {
         Ok(Self::from_dfas(cfg.terminal_dfas()?))
     }
 
-    /// Assemble a scanner from per-terminal DFAs determinized elsewhere
-    /// (the artifact load path: deserialized DFAs skip the regex → NFA →
-    /// DFA → minimize pipeline). `dfas[t]` must be terminal `t`'s
+    /// Assemble a dense scanner from per-terminal DFAs determinized
+    /// elsewhere (the artifact load path: deserialized DFAs skip the regex
+    /// → NFA → DFA → minimize pipeline). `dfas[t]` must be terminal `t`'s
     /// automaton in the owning grammar's terminal order.
     pub fn from_dfas(dfas: Vec<Dfa>) -> Scanner {
         let mut pos_offset = Vec::with_capacity(dfas.len());
@@ -60,15 +86,98 @@ impl Scanner {
             pos_offset.push(next);
             next += d.num_states() as u32;
         }
-        Scanner { dfas, pos_offset, num_pos: next + 1 }
+        Scanner { auto: Automata::Dense(dfas), pos_offset, num_pos: next + 1 }
+    }
+
+    /// Build a **lazy** scanner: terminal regexes are compiled to NFAs only
+    /// (cheap), and subset construction happens on demand as positions are
+    /// visited. See the module docs for the trade-off.
+    pub fn new_lazy(cfg: &Cfg) -> crate::Result<Scanner> {
+        let lazies = cfg.terminal_nfas()?.into_iter().map(LazyDfa::new).collect();
+        Ok(Scanner { auto: Automata::Lazy(lazies), pos_offset: Vec::new(), num_pos: 0 })
+    }
+
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.auto, Automata::Lazy(_))
+    }
+
+    pub fn num_terminals(&self) -> usize {
+        match &self.auto {
+            Automata::Dense(d) => d.len(),
+            Automata::Lazy(l) => l.len(),
+        }
+    }
+
+    /// The dense per-terminal DFAs, or `None` for a lazy scanner. Artifact
+    /// serialization materializes first and then relies on this.
+    pub fn dense_dfas(&self) -> Option<&[Dfa]> {
+        match &self.auto {
+            Automata::Dense(d) => Some(d),
+            Automata::Lazy(_) => None,
+        }
+    }
+
+    /// States currently known for terminal `t`: the full (minimized)
+    /// automaton in dense mode, states discovered so far in lazy mode.
+    pub fn num_states_of(&self, t: usize) -> usize {
+        match &self.auto {
+            Automata::Dense(d) => d[t].num_states(),
+            Automata::Lazy(l) => l[t].num_states(),
+        }
+    }
+
+    /// Total states across terminals currently known (see
+    /// [`Scanner::num_states_of`]).
+    pub fn discovered_states(&self) -> usize {
+        (0..self.num_terminals()).map(|t| self.num_states_of(t)).sum()
+    }
+
+    /// An equivalent dense scanner. Lazy automata are explored to fixpoint
+    /// with their discovery-order numbering **preserved** (no
+    /// minimization), so every `Pos` observed through `self` denotes the
+    /// same state in the result — the contract artifact serialization
+    /// depends on. Dense scanners just clone.
+    pub fn materialized(&self) -> Scanner {
+        match &self.auto {
+            Automata::Dense(_) => self.clone(),
+            Automata::Lazy(l) => Self::from_dfas(l.iter().map(|d| d.materialize()).collect()),
+        }
+    }
+
+    #[inline]
+    fn next_state(&self, t: usize, s: u32, b: u8) -> u32 {
+        match &self.auto {
+            Automata::Dense(d) => d[t].next(s, b),
+            Automata::Lazy(l) => l[t].next(s, b),
+        }
+    }
+
+    #[inline]
+    fn start_state(&self, t: usize) -> u32 {
+        match &self.auto {
+            Automata::Dense(d) => d[t].start,
+            Automata::Lazy(l) => l[t].start(),
+        }
+    }
+
+    #[inline]
+    fn state_accepting(&self, t: usize, s: u32) -> bool {
+        match &self.auto {
+            Automata::Dense(d) => d[t].accepting[s as usize],
+            Automata::Lazy(l) => l[t].accepting(s),
+        }
     }
 
     /// Total number of distinct positions (Boundary + all DFA states).
+    /// Dense scanners only.
     pub fn num_pos(&self) -> usize {
+        assert!(!self.is_lazy(), "num_pos is undefined for a lazy scanner; materialize first");
         self.num_pos as usize
     }
 
+    /// Dense scanners only (lazy state counts are open-ended).
     pub fn pos_id(&self, pos: Pos) -> PosId {
+        assert!(!self.is_lazy(), "pos_id is undefined for a lazy scanner; materialize first");
         match pos {
             Pos::Boundary => 0,
             Pos::In(t, s) => 1 + self.pos_offset[t as usize] + s,
@@ -76,6 +185,7 @@ impl Scanner {
     }
 
     pub fn pos_of_id(&self, id: PosId) -> Pos {
+        assert!(!self.is_lazy(), "pos_of_id is undefined for a lazy scanner; materialize first");
         if id == 0 {
             return Pos::Boundary;
         }
@@ -100,14 +210,14 @@ impl Scanner {
     pub fn accepting(&self, pos: Pos) -> bool {
         match pos {
             Pos::Boundary => false,
-            Pos::In(t, s) => self.dfas[t as usize].accepting[s as usize],
+            Pos::In(t, s) => self.state_accepting(t as usize, s),
         }
     }
 
     /// All positions reachable by starting a fresh terminal with byte `b`.
     fn starts(&self, b: u8) -> impl Iterator<Item = Pos> + '_ {
-        self.dfas.iter().enumerate().filter_map(move |(t, d)| {
-            let s = d.next(d.start, b);
+        (0..self.num_terminals()).filter_map(move |t| {
+            let s = self.next_state(t, self.start_state(t), b);
             (s != DEAD).then_some(Pos::In(t as TermId, s))
         })
     }
@@ -123,12 +233,11 @@ impl Scanner {
                 }
             }
             Pos::In(t, s) => {
-                let d = &self.dfas[t as usize];
-                let s2 = d.next(s, b);
+                let s2 = self.next_state(t as usize, s, b);
                 if s2 != DEAD {
                     out.push((None, Pos::In(t, s2)));
                 }
-                if d.accepting[s as usize] {
+                if self.state_accepting(t as usize, s) {
                     for p in self.starts(b) {
                         out.push((Some(t), p));
                     }
@@ -183,11 +292,15 @@ impl Scanner {
 
     /// Positions for which subterminal trees are precomputed: Boundary plus
     /// every state of every terminal DFA (all are reachable — subset
-    /// construction only creates reachable states).
+    /// construction only creates reachable states). Dense scanners only.
     pub fn reachable_positions(&self) -> Vec<Pos> {
+        assert!(
+            !self.is_lazy(),
+            "reachable_positions is undefined for a lazy scanner; materialize first"
+        );
         let mut out = vec![Pos::Boundary];
-        for (t, d) in self.dfas.iter().enumerate() {
-            for s in 0..d.num_states() as u32 {
+        for t in 0..self.num_terminals() {
+            for s in 0..self.num_states_of(t) as u32 {
                 out.push(Pos::In(t as TermId, s));
             }
         }
@@ -297,5 +410,63 @@ mod tests {
         let ident = g.terminals.iter().position(|t| t.name == "identifier").unwrap() as TermId;
         assert!(terms.contains(&ident));
         assert!(terms.len() >= 2, "keyword + identifier both live: {terms:?}");
+    }
+
+    /// Same segmentations from lazy and dense scanners: terminal sequences
+    /// must match exactly, position-set *sizes* may differ (lazy automata
+    /// are unminimized) but accepting status per hypothesis must agree.
+    fn assert_traverse_equiv(dense: &Scanner, lazy: &Scanner, bytes: &[u8]) {
+        let a = dense.traverse(&[Pos::Boundary], bytes);
+        let b = lazy.traverse(&[Pos::Boundary], bytes);
+        let mut seqs_a: Vec<Vec<TermId>> = a.iter().map(|(s, _)| s.clone()).collect();
+        let mut seqs_b: Vec<Vec<TermId>> = b.iter().map(|(s, _)| s.clone()).collect();
+        seqs_a.sort();
+        seqs_b.sort();
+        assert_eq!(seqs_a, seqs_b, "segmentations differ on {bytes:?}");
+        for (seq, posset) in &a {
+            let (_, lazy_posset) = b.iter().find(|(s, _)| s == seq).unwrap();
+            let acc_a = posset.iter().any(|&p| dense.accepting(p));
+            let acc_b = lazy_posset.iter().any(|&p| lazy.accepting(p));
+            assert_eq!(acc_a, acc_b, "accepting status differs for {seq:?} on {bytes:?}");
+        }
+    }
+
+    #[test]
+    fn lazy_scanner_matches_dense_traversals() {
+        let g = fig3_expr();
+        let dense = Scanner::new(&g).unwrap();
+        let lazy = Scanner::new_lazy(&g).unwrap();
+        assert!(lazy.is_lazy() && !dense.is_lazy());
+        for bytes in [&b"12"[..], b")+(", b"012", b"(1+20)", b"x"] {
+            assert_traverse_equiv(&dense, &lazy, bytes);
+        }
+        // Lazy exploration is bounded by what was visited.
+        assert!(lazy.discovered_states() <= lazy.materialized().discovered_states());
+    }
+
+    #[test]
+    fn lazy_scanner_materializes_to_dense_with_stable_numbering() {
+        let g = crate::grammar::builtin::c_lang();
+        let lazy = Scanner::new_lazy(&g).unwrap();
+        // Drive some exploration, remembering observed positions.
+        let res = lazy.traverse(&[Pos::Boundary], b"int x");
+        let observed: Vec<Pos> =
+            res.iter().flat_map(|(_, ps)| ps.iter().copied()).collect();
+        assert!(!observed.is_empty());
+        let visited = lazy.discovered_states();
+        let dense = lazy.materialized();
+        assert!(!dense.is_lazy());
+        assert!(dense.num_pos() > 0);
+        // Numbering preserved: every observed position is valid in the
+        // materialized scanner with the same accepting flag.
+        for &p in &observed {
+            assert_eq!(dense.accepting(p), lazy.accepting(p), "{p:?}");
+            assert_eq!(dense.pos_of_id(dense.pos_id(p)), p);
+        }
+        assert!(
+            visited < dense.discovered_states(),
+            "lazy visited {visited} of {} states",
+            dense.discovered_states()
+        );
     }
 }

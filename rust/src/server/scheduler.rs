@@ -68,6 +68,13 @@ pub struct SchedulerConfig {
     /// compiles back, and re-saves hot masks at shutdown. `None` = purely
     /// in-memory registry, the pre-artifact behavior.
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// Compile cache-missed grammars lazily (on-demand scanner DFAs and
+    /// subterminal trees): first-token latency for huge schema-emitted
+    /// grammars drops from full-precompute to cost-proportional-to-states
+    /// -visited. Artifact persistence still writes dense engines (they
+    /// are materialized at save time). CLI `--lazy-compile` /
+    /// `$DOMINO_LAZY_COMPILE`.
+    pub lazy_compile: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -79,6 +86,7 @@ impl Default for SchedulerConfig {
             default_deadline: None,
             registry_capacity: super::engine::DEFAULT_REGISTRY_CAPACITY,
             artifact_dir: None,
+            lazy_compile: false,
         }
     }
 }
@@ -196,6 +204,7 @@ impl Scheduler {
                 }
             },
         };
+        registry.set_lazy_build(cfg.lazy_compile);
         let init = Arc::new(init);
         let mut shards = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {

@@ -138,7 +138,7 @@ pub enum DecodeMode {
 /// A mask for `decoder`'s current state via the shared cache (compute and
 /// fill on miss) — the speculative path's equivalent of
 /// [`crate::constraint::CachedChecker::compute_mask`].
-fn cached_mask(decoder: &mut DominoDecoder, masks: &MaskCache, variant: u64) -> TokenMask {
+fn cached_mask(decoder: &mut DominoDecoder, masks: &MaskCache, variant: u64) -> Arc<TokenMask> {
     match decoder.mask_key() {
         Some(state) => match masks.get(variant, state) {
             Some(m) => m,
@@ -617,7 +617,7 @@ impl Slot {
     }
 
     /// Mask utility for tests: current full mask if constrained.
-    pub fn current_mask(&mut self) -> Option<TokenMask> {
+    pub fn current_mask(&mut self) -> Option<Arc<TokenMask>> {
         self.mode.checker().map(|c| c.compute_mask())
     }
 }

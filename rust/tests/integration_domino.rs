@@ -24,7 +24,7 @@ fn every_builtin_grammar_compiles_into_an_engine() {
         let cfg = builtin::by_name(name).unwrap();
         let engine = Engine::compile(cfg, vocab.clone())
             .unwrap_or_else(|e| panic!("engine for {name}: {e:#}"));
-        assert_eq!(engine.trees.trees.len(), engine.scanner.num_pos(), "{name}");
+        assert_eq!(engine.trees.num_trees(), engine.scanner.num_pos(), "{name}");
     }
 }
 

@@ -14,6 +14,10 @@
 //!    Schemas (shuffled key order, random whitespace) produce identical
 //!    `ConstraintSpec` fingerprints and build fingerprints, so
 //!    registry/artifact dedup actually fires for schema constraints.
+//! 7. **Wordwise kernel parity**: the word-parallel `TokenMask` sweeps
+//!    (`apply`/`intersect`/`and_not`/`iter`) are bit-identical to scalar
+//!    references at word-edge sizes, and the sharded mask cache loses no
+//!    updates under concurrent mixed load.
 
 use domino::baselines::OnlineChecker;
 use domino::constraint::ConstraintSpec;
@@ -271,6 +275,123 @@ fn prop_jsonschema_fingerprints_stable_under_normalization() {
         domino::grammar::jsonschema::compile(&scrambled)
             .unwrap_or_else(|e| panic!("{e:#}: {scrambled}"));
     });
+}
+
+#[test]
+fn prop_wordwise_mask_kernels_match_scalar_reference() {
+    // The word-parallel TokenMask kernels must be bit-identical to the
+    // obvious one-token-at-a-time implementation, exactly at the
+    // word-boundary sizes where chunked loops and the ghost-bit tail
+    // handling can go wrong.
+    use domino::domino::TokenMask;
+    check("wordwise-vs-scalar", 40, |rng| {
+        for &size in &[63usize, 64, 65, 127, 128] {
+            let mut a = TokenMask::none(size);
+            let mut b = TokenMask::none(size);
+            for t in 0..size as domino::TokenId {
+                if rng.chance(0.5) {
+                    a.allow(t);
+                }
+                if rng.chance(0.5) {
+                    b.allow(t);
+                }
+            }
+
+            let mut got = a.clone();
+            got.intersect(&b);
+            for t in 0..size as domino::TokenId {
+                assert_eq!(
+                    got.allowed(t),
+                    a.allowed(t) && b.allowed(t),
+                    "intersect at size {size}, token {t}"
+                );
+            }
+
+            let mut got = a.clone();
+            got.and_not(&b);
+            for t in 0..size as domino::TokenId {
+                assert_eq!(
+                    got.allowed(t),
+                    a.allowed(t) && !b.allowed(t),
+                    "and_not at size {size}, token {t}"
+                );
+            }
+
+            let scalar_count =
+                (0..size as domino::TokenId).filter(|&t| a.allowed(t) && b.allowed(t)).count();
+            assert_eq!(a.count_intersect(&b), scalar_count, "count_intersect at size {size}");
+
+            let mut logits: Vec<f32> = (0..size).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let mut reference = logits.clone();
+            a.apply(&mut logits);
+            for t in 0..size {
+                if !a.allowed(t as domino::TokenId) {
+                    reference[t] = f32::NEG_INFINITY;
+                }
+            }
+            assert_eq!(logits, reference, "apply at size {size}");
+
+            let via_iter: Vec<domino::TokenId> = a.iter().collect();
+            let scalar: Vec<domino::TokenId> =
+                (0..size as domino::TokenId).filter(|&t| a.allowed(t)).collect();
+            assert_eq!(via_iter, scalar, "iter at size {size}");
+        }
+    });
+}
+
+#[test]
+fn sharded_mask_cache_survives_concurrent_mixed_load() {
+    // 8 threads hammer one sharded cache with a deterministic
+    // (variant, state) → mask mapping: no update may be lost or
+    // corrupted, the hit/miss counters must account for every `get`,
+    // and the size bound must hold.
+    use domino::constraint::MaskCache;
+    use domino::domino::TokenMask;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    const CAPACITY: usize = 512;
+    const KEYS: u64 = 128; // < capacity: steady state has no evictions
+    fn mask_for(state: u64) -> TokenMask {
+        let mut m = TokenMask::none(256);
+        let mut x = state.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        for _ in 0..10 {
+            x ^= x >> 13;
+            x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            m.allow((x % 256) as domino::TokenId);
+        }
+        m
+    }
+
+    let cache = MaskCache::with_shards(CAPACITY, 8);
+    let gets = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for th in 0..8u64 {
+            let cache = &cache;
+            let gets = &gets;
+            s.spawn(move || {
+                let mut rng = Rng::new(th + 1);
+                for _ in 0..5_000 {
+                    let key = rng.below(KEYS as usize) as u64;
+                    match cache.get(0, key) {
+                        Some(m) => assert_eq!(*m, mask_for(key), "corrupted entry for key {key}"),
+                        None => cache.put(0, key, Arc::new(mask_for(key))),
+                    }
+                    gets.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let s = cache.stats();
+    assert_eq!(s.hits + s.misses, gets.load(Ordering::Relaxed), "every get is a hit or a miss");
+    assert!(s.hits > 0, "steady state must hit");
+    assert!(cache.len() as u64 <= KEYS, "no phantom entries");
+    assert!(cache.len() <= CAPACITY, "capacity bound");
+    // Post-stress, every surviving entry still maps to its mask.
+    for key in 0..KEYS {
+        if let Some(m) = cache.peek(0, key) {
+            assert_eq!(*m, mask_for(key), "post-stress entry for key {key}");
+        }
+    }
 }
 
 #[test]

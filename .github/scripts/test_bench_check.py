@@ -117,6 +117,36 @@ class CompareTest(unittest.TestCase):
         self.assertTrue(any("schema_compile.schema_to_cfg_ms" in f for f in fails))
         self.assertTrue(any("schema_compile.speedup" in f for f in fails))
 
+    def test_fig5_speculation_section_gates_draft_metrics(self):
+        # All three draft-lane metrics are higher-is-better ratios/counts:
+        # a drop past the threshold in any of them fails the gate.
+        base = {
+            "fig5_speculation": {
+                "acceptance_rate": 0.5,
+                "tok_per_tick_draft": 1.3,
+                "draft_speedup": 1.75,
+            }
+        }
+        good = {
+            "fig5_speculation": {
+                "acceptance_rate": 0.7,
+                "tok_per_tick_draft": 2.0,
+                "draft_speedup": 2.1,
+            }
+        }
+        self.assertEqual(failures(base, good), [])
+        bad = {
+            "fig5_speculation": {
+                "acceptance_rate": 0.2,  # -60%
+                "tok_per_tick_draft": 1.3,
+                "draft_speedup": 1.0,  # -43%
+            }
+        }
+        fails = failures(base, bad)
+        self.assertEqual(len(fails), 2)
+        self.assertTrue(any("fig5_speculation.acceptance_rate" in f for f in fails))
+        self.assertTrue(any("fig5_speculation.draft_speedup" in f for f in fails))
+
     def test_custom_threshold(self):
         base = {"s": {"tok_s_1": 100.0}}
         fresh = {"s": {"tok_s_1": 89.0}}

@@ -47,6 +47,7 @@
 
 use super::ConstraintSpec;
 use crate::domino::decoder::Engine;
+use crate::domino::SpeculativeModel;
 use crate::domino::tree::{PosSets, Tree, TreeNode, TreeSet};
 use crate::domino::TokenMask;
 use crate::grammar::{Cfg, Production, Symbol, Terminal, TerminalKind};
@@ -63,6 +64,17 @@ use std::sync::Arc;
 pub const ARTIFACT_VERSION: u32 = 1;
 
 const MAGIC: &[u8; 4] = b"DOMA";
+
+/// Speculation-prior records (`<key:016x>.prior`) are persisted separately
+/// from engine artifacts — priors mutate with traffic, engines don't, and
+/// re-snapshotting an engine to update its prior would be absurd. Layout:
+/// magic `b"DOMP"`, version, FNV-1a checksum over the rest, key, then the
+/// [`SpeculativeModel`] encoding (unigram + n-gram continuation counts —
+/// see `SpeculativeModel::to_bytes`). Bump on any change to that record
+/// or the model encoding it wraps.
+pub const PRIOR_VERSION: u32 = 1;
+
+const PRIOR_MAGIC: &[u8; 4] = b"DOMP";
 
 /// One persisted mask-cache entry (see
 /// [`MaskCache::hot_entries`](super::MaskCache::hot_entries)).
@@ -156,7 +168,13 @@ impl ArtifactStore {
             engine
         };
         let data = encode_artifact(key, label, engine, masks);
-        let path = self.path_for(key);
+        self.publish(key, self.path_for(key), &data)
+    }
+
+    /// Write `data` to a temp sibling, sync, and rename over `path`
+    /// (atomic within the directory — readers and crashed writers only
+    /// ever see complete files).
+    fn publish(&self, key: u64, path: PathBuf, data: &[u8]) -> crate::Result<PathBuf> {
         let tmp = self.dir.join(format!(
             "{key:016x}.tmp-{}-{}",
             std::process::id(),
@@ -165,7 +183,7 @@ impl ArtifactStore {
         let write = (|| -> std::io::Result<()> {
             use std::io::Write as _;
             let mut f = std::fs::File::create(&tmp)?;
-            f.write_all(&data)?;
+            f.write_all(data)?;
             f.sync_all()
         })();
         if let Err(e) = write {
@@ -177,6 +195,51 @@ impl ArtifactStore {
             return Err(e).with_context(|| format!("publishing artifact {}", path.display()));
         }
         Ok(path)
+    }
+
+    /// The prior-record path for a build fingerprint.
+    pub fn prior_path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.prior"))
+    }
+
+    /// Persist a speculation prior under its build fingerprint (versioned
+    /// + checksummed + atomic, like engine artifacts; see
+    /// [`PRIOR_VERSION`]). Flushed by engine shards on clean shutdown so a
+    /// restarted server drafts from warm priors.
+    pub fn save_prior(&self, key: u64, model: &SpeculativeModel) -> crate::Result<PathBuf> {
+        let mut body = ByteWriter::new();
+        body.u64(key);
+        body.raw(&model.to_bytes());
+        let body = body.into_inner();
+        let mut w = ByteWriter::new();
+        w.raw(PRIOR_MAGIC);
+        w.u32(PRIOR_VERSION);
+        w.u64(fnv1a_64(&body));
+        w.raw(&body);
+        self.publish(key, self.prior_path_for(key), &w.into_inner())
+    }
+
+    /// Load the persisted speculation prior for a build fingerprint.
+    /// `None` for missing, corrupt, mis-keyed or version-skewed records —
+    /// the caller starts from a cold prior instead (priors are a
+    /// performance aid, never correctness, so there is no `Invalid`
+    /// diagnosis to act on).
+    pub fn load_prior(&self, key: u64) -> Option<SpeculativeModel> {
+        let data = std::fs::read(self.prior_path_for(key)).ok()?;
+        let mut r = ByteReader::new(&data);
+        if r.raw(4).ok()? != PRIOR_MAGIC || r.u32().ok()? != PRIOR_VERSION {
+            return None;
+        }
+        let checksum = r.u64().ok()?;
+        let body = r.rest();
+        if fnv1a_64(body) != checksum {
+            return None;
+        }
+        let mut r = ByteReader::new(body);
+        if r.u64().ok()? != key {
+            return None;
+        }
+        SpeculativeModel::from_bytes(r.rest()).ok()
     }
 
     /// Look up the artifact for `(spec, vocab, k)`.
@@ -740,6 +803,44 @@ mod tests {
         // The limit caps deserialization work for bounded registries.
         let (capped, _) = store.scan(&v, 1);
         assert_eq!(capped.len(), 1);
+    }
+
+    #[test]
+    fn prior_record_round_trips_and_rejects_corruption() {
+        let store = temp_store("prior");
+        let mut m = SpeculativeModel::new(0.75);
+        for _ in 0..4 {
+            m.observe(9, 2);
+        }
+        m.observe_gram(9, &[2, 3]);
+        assert!(store.load_prior(0xAB).is_none(), "missing prior is a clean miss");
+        let path = store.save_prior(0xAB, &m).unwrap();
+        assert!(path.exists());
+        let got = store.load_prior(0xAB).expect("saved prior loads");
+        assert_eq!(got.to_bytes(), m.to_bytes());
+        assert!(!got.frozen, "loaded priors keep learning");
+        // Another key: self-describing records refuse to serve it even if
+        // the file were copied there.
+        assert!(store.load_prior(0xCD).is_none());
+        std::fs::copy(&path, store.prior_path_for(0xCD)).unwrap();
+        assert!(store.load_prior(0xCD).is_none(), "key mismatch inside the record");
+        // Corruption anywhere must degrade to None, never panic.
+        let good = std::fs::read(&path).unwrap();
+        for at in [0usize, 4, 8, 16, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x5A;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(store.load_prior(0xAB).is_none(), "byte {at} flipped must invalidate");
+        }
+        let mut truncated = good.clone();
+        truncated.truncate(good.len() - 3);
+        std::fs::write(&path, &truncated).unwrap();
+        assert!(store.load_prior(0xAB).is_none());
+        std::fs::write(&path, &good).unwrap();
+        assert!(store.load_prior(0xAB).is_some());
+        // Prior records don't confuse the engine warm-start scan.
+        let (loaded, invalid) = store.scan(&vocab(), usize::MAX);
+        assert!(loaded.is_empty() && invalid == 0, "{} {}", loaded.len(), invalid);
     }
 
     #[test]

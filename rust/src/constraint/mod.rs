@@ -283,10 +283,14 @@ fn regex_cfg(pattern: &str) -> crate::Result<Cfg> {
 pub enum Enforcement {
     /// DOMINO decoder over precomputed subterminal trees. `k = None` is
     /// lookahead-∞ (minimally invasive); `speculative = Some(s)` enables
-    /// §3.6 count-based speculation with chunk size `s`; `full_mask`
-    /// computes the mask every step (Algorithm 1 verbatim) instead of
-    /// opportunistically.
-    Domino { k: Option<u32>, speculative: Option<usize>, full_mask: bool },
+    /// §3.6 count-based speculation with chunk size `s`; `draft = Some(d)`
+    /// enables the draft lane (grammar-pruned multi-token proposals from
+    /// the shared prior, depth capped at `d` and adapted online — see
+    /// [`crate::domino::draft`]); `full_mask` computes the mask every step
+    /// (Algorithm 1 verbatim) instead of opportunistically. `speculative`,
+    /// `draft` and `full_mask` are mutually exclusive (the front ends
+    /// reject the combinations).
+    Domino { k: Option<u32>, speculative: Option<usize>, draft: Option<usize>, full_mask: bool },
     /// Online full-vocabulary baseline (llama.cpp/GCD-style): same masks
     /// as DOMINO at k = ∞, no precomputation.
     Online,
@@ -294,7 +298,7 @@ pub enum Enforcement {
 
 impl Default for Enforcement {
     fn default() -> Self {
-        Enforcement::Domino { k: None, speculative: None, full_mask: false }
+        Enforcement::Domino { k: None, speculative: None, draft: None, full_mask: false }
     }
 }
 
@@ -344,6 +348,15 @@ impl Constraint {
         self
     }
 
+    /// Enable the draft lane with proposal depth capped at `k` (adapted
+    /// online from the slot's acceptance rate). No-op for online.
+    pub fn with_draft(mut self, k: usize) -> Constraint {
+        if let Enforcement::Domino { draft, .. } = &mut self.enforcement {
+            *draft = Some(k);
+        }
+        self
+    }
+
     /// Compute the full mask every step (Algorithm 1 verbatim). No-op for
     /// online.
     pub fn with_full_mask(mut self) -> Constraint {
@@ -356,13 +369,17 @@ impl Constraint {
     /// Assemble a constraint from the front-end vocabulary shared by the
     /// TCP protocol and the CLI: a `method` string (`"unconstrained"` |
     /// `"domino"` | `"domino-full"` | `"online"`), an optional spec, the
-    /// lookahead `k` and the speculation chunk size. One implementation so
-    /// the wire protocol and CLI can never drift apart.
+    /// lookahead `k`, the speculation chunk size and the draft depth cap.
+    /// One implementation so the wire protocol and CLI can never drift
+    /// apart. Invalid combinations (e.g. `draft` with a non-`"domino"`
+    /// method) are the front ends' job to reject *before* this call; here
+    /// the non-domino arms simply ignore the knobs that don't apply.
     pub fn from_parts(
         method: &str,
         spec: Option<ConstraintSpec>,
         k: Option<u32>,
         speculative: Option<usize>,
+        draft: Option<usize>,
     ) -> Constraint {
         match (method, spec) {
             ("unconstrained", _) | (_, None) => Constraint::none(),
@@ -371,11 +388,14 @@ impl Constraint {
                 Constraint::domino(spec).with_lookahead(k).with_full_mask()
             }
             (_, Some(spec)) => {
-                let c = Constraint::domino(spec).with_lookahead(k);
-                match speculative {
-                    Some(s) => c.with_speculation(s),
-                    None => c,
+                let mut c = Constraint::domino(spec).with_lookahead(k);
+                if let Some(s) = speculative {
+                    c = c.with_speculation(s);
                 }
+                if let Some(d) = draft {
+                    c = c.with_draft(d);
+                }
+                c
             }
         }
     }
@@ -529,22 +549,32 @@ mod tests {
     #[test]
     fn from_parts_covers_every_method() {
         let spec = || Some(ConstraintSpec::builtin("json"));
-        assert_eq!(Constraint::from_parts("unconstrained", spec(), None, None), Constraint::none());
-        assert_eq!(Constraint::from_parts("domino", None, Some(1), Some(8)), Constraint::none());
         assert_eq!(
-            Constraint::from_parts("online", spec(), Some(1), Some(8)),
+            Constraint::from_parts("unconstrained", spec(), None, None, None),
+            Constraint::none()
+        );
+        assert_eq!(
+            Constraint::from_parts("domino", None, Some(1), Some(8), Some(6)),
+            Constraint::none()
+        );
+        assert_eq!(
+            Constraint::from_parts("online", spec(), Some(1), Some(8), None),
             Constraint::online(ConstraintSpec::builtin("json"))
         );
         assert_eq!(
-            Constraint::from_parts("domino-full", spec(), Some(1), Some(8)),
+            Constraint::from_parts("domino-full", spec(), Some(1), Some(8), None),
             Constraint::domino(ConstraintSpec::builtin("json"))
                 .with_lookahead(Some(1))
                 .with_full_mask(),
             "domino-full ignores speculation"
         );
         assert_eq!(
-            Constraint::from_parts("domino", spec(), None, Some(8)),
+            Constraint::from_parts("domino", spec(), None, Some(8), None),
             Constraint::domino(ConstraintSpec::builtin("json")).with_speculation(8)
+        );
+        assert_eq!(
+            Constraint::from_parts("domino", spec(), None, None, Some(6)),
+            Constraint::domino(ConstraintSpec::builtin("json")).with_draft(6)
         );
     }
 
@@ -555,7 +585,12 @@ mod tests {
             .with_speculation(8);
         assert_eq!(
             c.enforcement,
-            Enforcement::Domino { k: Some(2), speculative: Some(8), full_mask: false }
+            Enforcement::Domino { k: Some(2), speculative: Some(8), draft: None, full_mask: false }
+        );
+        let c = Constraint::domino(ConstraintSpec::builtin("json")).with_draft(4);
+        assert_eq!(
+            c.enforcement,
+            Enforcement::Domino { k: None, speculative: None, draft: Some(4), full_mask: false }
         );
         let c = Constraint::online(ConstraintSpec::builtin("json")).with_full_mask();
         assert_eq!(c.enforcement, Enforcement::Online, "online ignores domino knobs");

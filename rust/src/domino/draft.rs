@@ -1,0 +1,284 @@
+//! The draft lane's cheap proposers — grammar-pruned multi-token
+//! drafting over the batched tick.
+//!
+//! §3.6's count-based speculation only fires when one token dominates a
+//! state (`P ≥ τ`). The draft lane generalizes it: a [`DraftModel`]
+//! proposes up to K tokens per slot per tick from whatever cheap signal
+//! it has (here: the [`SpeculativeModel`] priors' n-gram continuation
+//! counts), and the grammar prunes the proposal **while it is built** —
+//! every candidate token is filtered through `Checker::compute_mask` via
+//! the shared [`MaskCache`] before it is added, so an infeasible branch
+//! never occupies a row of the target model's batched forward pass.
+//! Verification then rides the existing `scored` lanes with
+//! longest-accepted-prefix adoption (`server::slot`), which keeps drafted
+//! decoding token-identical to plain decoding: acceptance-or-correction,
+//! never a changed distribution.
+//!
+//! The trait is the extension point for richer proposers (e.g. a second,
+//! smaller `LmBackend` acting as draft model — such an implementation
+//! keeps its own session in sync through [`DraftModel::commit`]).
+
+use super::decoder::DominoDecoder;
+use super::mask::TokenMask;
+use super::spec::SpeculativeModel;
+use crate::constraint::MaskCache;
+use crate::tokenizer::EOS_ID;
+use crate::TokenId;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// A gram must have been observed this often before it is drafted.
+const MIN_GRAM_COUNT: u64 = 2;
+
+/// A mask for `decoder`'s current state via the shared cache (compute and
+/// fill on miss) — the drafted/speculative paths hold the concrete
+/// decoder (no [`crate::constraint::CachedChecker`] wrapper), so their
+/// mask computations go through the cache explicitly.
+pub fn cached_mask(decoder: &mut DominoDecoder, masks: &MaskCache, variant: u64) -> Arc<TokenMask> {
+    match decoder.mask_key() {
+        Some(state) => match masks.get(variant, state) {
+            Some(m) => m,
+            None => {
+                let m = decoder.compute_mask();
+                masks.put(variant, state, m.clone());
+                m
+            }
+        },
+        None => decoder.compute_mask(),
+    }
+}
+
+/// A cheap multi-token proposer for the drafted decode lane
+/// (`DecodeMode::Drafted` in `server::slot`).
+pub trait DraftModel: Send {
+    /// Propose up to `k` tokens continuing `decoder`'s current state.
+    /// Implementations are expected to filter every candidate through the
+    /// shared mask cache (`masks`/`variant`) *while building* the
+    /// proposal (prune-before-verify) so infeasible branches never reach
+    /// the target model; the verifier tolerates illegal tokens regardless
+    /// (they are rejected like any mispredicted token).
+    fn propose(
+        &mut self,
+        decoder: &DominoDecoder,
+        masks: &MaskCache,
+        variant: u64,
+        k: usize,
+    ) -> Vec<TokenId>;
+
+    /// Feedback after verification: the accepted prefix of the last
+    /// proposal plus the correction token committed on mismatch (if any).
+    /// Stateless proposers ignore it; a session-backed draft model uses
+    /// it to keep its own context in sync with the target.
+    fn commit(&mut self, _accepted: &[TokenId], _corrected: Option<TokenId>) {}
+}
+
+/// Proposal length from the slot's recent acceptance rate: a cold or
+/// mispredicting prior degrades gracefully to K=1 (a one-token scored
+/// lane costs the same forward row as a plain step), a hot one ramps to
+/// `k_max`.
+pub fn adaptive_k(accept_ewma: f64, k_max: usize) -> usize {
+    let k_max = k_max.max(1);
+    let extra = (accept_ewma.clamp(0.0, 1.0) * (k_max - 1) as f64).round() as usize;
+    (1 + extra).min(k_max)
+}
+
+/// Core of prior-driven drafting, shared by the serving lane
+/// ([`PriorDraft`], which filters through the shared [`MaskCache`]) and
+/// the scalar reference path (`generate::generate_drafted`): chain
+/// gram/argmax lookups from `spec` through a cloned decoder until `k`
+/// tokens are drafted or the prior runs dry. `allowed` is the grammar
+/// filter applied to every candidate *before* it joins the proposal;
+/// with `prune` false the filter is skipped (the prune-after-verify
+/// comparison ordering — infeasible draft tokens ride to verification
+/// and waste scored rows there). No confidence threshold gates the
+/// chain — the caller's adaptive proposal length throttles a cold or
+/// noisy prior instead.
+pub fn draft_from_prior(
+    spec: &SpeculativeModel,
+    decoder: &DominoDecoder,
+    k: usize,
+    prune: bool,
+    mut allowed: impl FnMut(&mut DominoDecoder, TokenId) -> bool,
+) -> Vec<TokenId> {
+    let mut clone = decoder.clone();
+    let mut alive = true;
+    let mut queue: VecDeque<TokenId> = VecDeque::new();
+    let mut out = Vec::new();
+    while out.len() < k {
+        if queue.is_empty() {
+            if !alive {
+                break;
+            }
+            let Some(key) = clone.state_key() else { break };
+            let visits = spec.visits(key);
+            // Whole-gram lookup first: a majority gram drafts several
+            // tokens from one table hit.
+            match spec.best_gram(key) {
+                Some((g, c)) if c >= MIN_GRAM_COUNT && c * 2 >= visits => {
+                    queue.extend(g.iter().copied())
+                }
+                _ => match spec.argmax(key) {
+                    Some(t) => queue.push_back(t),
+                    None => break,
+                },
+            }
+        }
+        let t = queue.pop_front().expect("refilled above");
+        if t == EOS_ID {
+            // A stop can't ride a scored lane (nothing follows it); let
+            // the verifier's own choice conclude the stream.
+            break;
+        }
+        if prune {
+            // Prune-before-verify: the grammar filters the candidate
+            // BEFORE it can occupy a forward-pass row.
+            if !allowed(&mut clone, t) || clone.advance(t).is_err() {
+                break;
+            }
+            out.push(t);
+        } else {
+            // Prune-after-verify ordering: the candidate goes into the
+            // proposal unchecked; once the chain leaves the grammar,
+            // later lookups stop (no live state key) but the queued gram
+            // tail still wastes rows.
+            out.push(t);
+            if alive {
+                alive = clone.advance(t).is_ok();
+            }
+        }
+    }
+    out
+}
+
+/// Prior-driven drafting from the shared [`SpeculativeModel`], with
+/// every candidate filtered through the shared mask cache (the serving
+/// draft lane's proposer).
+pub struct PriorDraft {
+    spec: Arc<Mutex<SpeculativeModel>>,
+    /// When false, candidates skip the grammar filter at build time (the
+    /// "prune-after-verify" ordering `fig5_speculation` compares
+    /// against).
+    prune: bool,
+}
+
+impl PriorDraft {
+    pub fn new(spec: Arc<Mutex<SpeculativeModel>>) -> PriorDraft {
+        PriorDraft { spec, prune: true }
+    }
+
+    /// The prune-after-verify comparison lane (benches only).
+    pub fn without_pruning(spec: Arc<Mutex<SpeculativeModel>>) -> PriorDraft {
+        PriorDraft { spec, prune: false }
+    }
+}
+
+impl DraftModel for PriorDraft {
+    fn propose(
+        &mut self,
+        decoder: &DominoDecoder,
+        masks: &MaskCache,
+        variant: u64,
+        k: usize,
+    ) -> Vec<TokenId> {
+        let spec = self.spec.lock().expect("spec lock");
+        draft_from_prior(&spec, decoder, k, self.prune, |clone, t| {
+            cached_mask(clone, masks, variant).allowed(t)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domino::decoder::{Engine, Lookahead};
+    use crate::grammar::builtin::fixed_template;
+    use crate::tokenizer;
+
+    fn template_setup() -> (Arc<Engine>, DominoDecoder, Arc<Mutex<SpeculativeModel>>, Vec<TokenId>)
+    {
+        let vocab = Arc::new(tokenizer::bpe::synthetic_json_vocab(512));
+        let eng = Engine::compile(fixed_template(), vocab.clone()).unwrap();
+        let ids = vocab.encode("{\"id\"".as_bytes());
+        let mut m = SpeculativeModel::new(0.75);
+        // Observe the template prefix twice so grams clear MIN_GRAM_COUNT.
+        for _ in 0..2 {
+            let mut d = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+            let mut hist: Vec<(u64, TokenId)> = Vec::new();
+            for &id in &ids {
+                m.observe_step(&mut hist, d.state_key(), id);
+                d.advance(id).unwrap();
+            }
+        }
+        let dec = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        (eng, dec, Arc::new(Mutex::new(m)), ids)
+    }
+
+    #[test]
+    fn adaptive_k_ramps_with_acceptance() {
+        assert_eq!(adaptive_k(0.0, 8), 1, "cold prior degrades to K=1");
+        assert_eq!(adaptive_k(1.0, 8), 8, "fully accepted drafts ramp to K max");
+        assert_eq!(adaptive_k(0.5, 8), 5);
+        assert_eq!(adaptive_k(0.0, 1), 1);
+        assert_eq!(adaptive_k(1.0, 0), 1, "degenerate K is clamped up");
+        assert_eq!(adaptive_k(7.5, 4), 4, "rates clamp into [0, 1]");
+    }
+
+    #[test]
+    fn prior_draft_replays_observed_prefix() {
+        let (_eng, dec, spec, ids) = template_setup();
+        let masks = MaskCache::new(256);
+        let mut draft = PriorDraft::new(spec);
+        let prop = draft.propose(&dec, &masks, 0, 8);
+        assert!(!prop.is_empty(), "warm prior must draft");
+        assert_eq!(&prop[..], &ids[..prop.len().min(ids.len())]);
+        // Every drafted token was checked against the grammar, so a
+        // fresh decoder replays the proposal without error.
+        let mut d = dec.clone();
+        for &t in &prop {
+            assert!(d.check_token(t), "drafted token {t} is grammar-illegal");
+            d.advance(t).unwrap();
+        }
+    }
+
+    #[test]
+    fn draft_respects_k_and_cold_prior_drafts_nothing() {
+        let (_eng, dec, spec, _ids) = template_setup();
+        let masks = MaskCache::new(256);
+        let mut draft = PriorDraft::new(spec);
+        for k in [0usize, 1, 2] {
+            assert!(draft.propose(&dec, &masks, 0, k).len() <= k);
+        }
+        let cold = Arc::new(Mutex::new(SpeculativeModel::new(0.75)));
+        let mut draft = PriorDraft::new(cold);
+        assert!(draft.propose(&dec, &masks, 0, 8).is_empty());
+    }
+
+    #[test]
+    fn unpruned_draft_may_propose_illegal_tokens() {
+        // Poison the prior with a token that is grammar-illegal at the
+        // start state: the pruned drafter must cut it, the unpruned one
+        // ships it to verification.
+        let (eng, dec, spec, _ids) = template_setup();
+        let masks = MaskCache::new(256);
+        let start_key = dec.state_key().unwrap();
+        let mut illegal = None;
+        for t in 1..eng.vocab.len() as TokenId {
+            let mut probe = dec.clone();
+            if !probe.check_token(t) {
+                illegal = Some(t);
+                break;
+            }
+        }
+        let illegal = illegal.expect("template grammar rejects some token");
+        {
+            let mut m = spec.lock().unwrap();
+            for _ in 0..100 {
+                m.observe(start_key, illegal);
+            }
+        }
+        let pruned = PriorDraft::new(spec.clone()).propose(&dec, &masks, 0, 8);
+        assert!(pruned.is_empty(), "pruned draft must cut the illegal branch");
+        let unpruned = PriorDraft::without_pruning(spec).propose(&dec, &masks, 0, 8);
+        assert_eq!(unpruned.first(), Some(&illegal), "unpruned draft ships the bad token");
+    }
+}

@@ -24,6 +24,7 @@
 //! stripped text, and naturally crosses the boundary with the model's own
 //! preferred (possibly bridging) tokens.
 
+use super::draft::{adaptive_k, draft_from_prior};
 use super::spec::SpeculativeModel;
 use super::{Checker, DominoDecoder, TokenMask};
 use crate::runtime::sampler::{decode, log_prob, Sampling};
@@ -109,7 +110,9 @@ pub struct GenResult {
     pub model_calls: usize,
     /// Total full-mask computations performed.
     pub masks_computed: usize,
-    /// Speculative statistics (zero unless [`generate_speculative`]).
+    /// Proposal statistics (zero unless [`generate_speculative`] or
+    /// [`generate_drafted`]): tokens proposed ahead of the model and the
+    /// accepted prefix total across all proposals.
     pub spec_proposed: usize,
     pub spec_accepted: usize,
     /// True iff generation ended with a legal EOS (not the length cap).
@@ -384,6 +387,143 @@ pub fn generate_speculative(
     Ok(res)
 }
 
+/// The draft lane's scalar reference path: multi-token proposals chained
+/// from the prior's n-gram continuation counts, grammar-pruned *while
+/// built* (`prune` = prune-before-verify; false gives the
+/// prune-after-verify comparison ordering), verified by one chunked pass
+/// with longest-accepted-prefix adoption. Proposal length adapts online to
+/// the run's acceptance rate ([`adaptive_k`]), so a cold prior degrades to
+/// K=1. Token-identical to [`generate`] under the same seed: every
+/// committed token is re-derived from the model's own logits
+/// (acceptance-or-correction, never a changed distribution).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_drafted(
+    lm: &mut dyn LmSession,
+    decoder: &mut DominoDecoder,
+    spec: &mut SpeculativeModel,
+    vocab: &Vocab,
+    prompt: &Prompt,
+    k_max: usize,
+    prune: bool,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+) -> crate::Result<GenResult> {
+    let mut res = GenResult::default();
+    let mut logits = lm.append(&prompt.ids)?;
+    res.model_calls += 1;
+
+    // Healing phase (plain, undrafted).
+    {
+        let mut l = Loop { lm, checker: decoder, vocab, cfg, rng, res, logits };
+        l.heal(&prompt.forced)?;
+        res = l.res;
+        logits = l.logits;
+    }
+
+    let mut hist: Vec<(u64, TokenId)> = Vec::new();
+    let mut accept_ewma = 0.0f64;
+    while res.tokens.len() < cfg.max_tokens {
+        let k = adaptive_k(accept_ewma, k_max);
+        let proposal = draft_from_prior(spec, decoder, k, prune, |clone, t| clone.check_token(t));
+        if proposal.is_empty() {
+            // One plain opportunistic step; teach the prior.
+            let chosen = {
+                let p = decode(&logits, cfg.sampling, rng);
+                if decoder.check_token(p) {
+                    p
+                } else {
+                    res.interventions += 1;
+                    let mask = decoder.compute_mask();
+                    res.masks_computed += 1;
+                    if mask.is_empty() {
+                        break;
+                    }
+                    let mut masked = logits.clone();
+                    mask.apply(&mut masked);
+                    decode(&masked, cfg.sampling, rng)
+                }
+            };
+            res.logprob_sum += log_prob(&logits, chosen);
+            if chosen == EOS_ID {
+                res.stopped = true;
+                break;
+            }
+            spec.observe_step(&mut hist, decoder.state_key(), chosen);
+            decoder.advance(chosen)?;
+            res.tokens.push(chosen);
+            res.text_bytes.extend_from_slice(vocab.token_bytes(chosen));
+            logits = lm.append(&[chosen])?;
+            res.model_calls += 1;
+            continue;
+        }
+
+        // One chunked pass scores the whole proposal; adopt the longest
+        // accepted prefix, then commit the model's own choice on mismatch.
+        res.spec_proposed += proposal.len();
+        let rows = lm.append_scored(&proposal)?;
+        res.model_calls += 1;
+        let mut accepted = 0usize;
+        let mut correction: Option<TokenId> = None;
+        let mut dead_end = false;
+        let mut cur = logits;
+        for (i, &p) in proposal.iter().enumerate() {
+            let choice = {
+                let c = decode(&cur, cfg.sampling, rng);
+                if decoder.check_token(c) {
+                    c
+                } else {
+                    res.interventions += 1;
+                    res.masks_computed += 1;
+                    let mask = decoder.compute_mask();
+                    if mask.is_empty() {
+                        dead_end = true;
+                        break;
+                    }
+                    let mut masked = cur.clone();
+                    mask.apply(&mut masked);
+                    decode(&masked, cfg.sampling, rng)
+                }
+            };
+            if choice != p {
+                correction = Some(choice);
+                break;
+            }
+            res.logprob_sum += log_prob(&cur, p);
+            spec.observe_step(&mut hist, decoder.state_key(), p);
+            decoder.advance(p)?;
+            res.tokens.push(p);
+            res.text_bytes.extend_from_slice(vocab.token_bytes(p));
+            res.spec_accepted += 1;
+            accepted += 1;
+            cur = rows[i].clone();
+            if res.tokens.len() >= cfg.max_tokens {
+                break;
+            }
+        }
+        accept_ewma = (accept_ewma + accepted as f64 / proposal.len() as f64) / 2.0;
+        if accepted < proposal.len() {
+            lm.rollback(proposal.len() - accepted)?;
+        }
+        logits = cur;
+        if dead_end || res.tokens.len() >= cfg.max_tokens {
+            break;
+        }
+        let Some(choice) = correction else { continue };
+        res.logprob_sum += log_prob(&logits, choice);
+        if choice == EOS_ID {
+            res.stopped = true;
+            break;
+        }
+        spec.observe_step(&mut hist, decoder.state_key(), choice);
+        decoder.advance(choice)?;
+        res.tokens.push(choice);
+        res.text_bytes.extend_from_slice(vocab.token_bytes(choice));
+        logits = lm.append(&[choice])?;
+        res.model_calls += 1;
+    }
+    Ok(res)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -480,6 +620,43 @@ mod tests {
         assert_eq!(plain.tokens, specd.tokens);
         assert!(specd.spec_accepted > 0);
         assert!(specd.model_calls < plain.model_calls);
+    }
+
+    #[test]
+    fn drafted_output_matches_plain() {
+        // Grammar-pruned drafting must be token-identical to plain
+        // decoding (acceptance-or-correction), in both prune orderings,
+        // and a warm prior must save model calls.
+        let (vocab, model) = json_mock(512);
+        let eng = Engine::compile(crate::grammar::builtin::gsm8k_schema(), vocab).unwrap();
+        let cfg = GenConfig { max_tokens: 64, sampling: Sampling::Greedy, mode: MaskMode::Opportunistic };
+        let prompt = Prompt::default();
+
+        let mut lm1 = MockLm::new(model.clone());
+        let mut d1 = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+        let plain = generate(&mut lm1, &mut d1, &eng.vocab, &prompt, &cfg, &mut Rng::new(5)).unwrap();
+
+        let mut spec = SpeculativeModel::new(0.5);
+        {
+            let mut lm = MockLm::new(model.clone());
+            let mut d = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+            generate_drafted(
+                &mut lm, &mut d, &mut spec, &eng.vocab, &prompt, 8, true, &cfg, &mut Rng::new(5),
+            )
+            .unwrap();
+        }
+        spec.frozen = true;
+        for prune in [true, false] {
+            let mut lm = MockLm::new(model.clone());
+            let mut d = DominoDecoder::new(eng.clone(), Lookahead::Infinite);
+            let drafted = generate_drafted(
+                &mut lm, &mut d, &mut spec, &eng.vocab, &prompt, 8, prune, &cfg, &mut Rng::new(5),
+            )
+            .unwrap();
+            assert_eq!(plain.tokens, drafted.tokens, "prune={prune}");
+            assert!(drafted.spec_accepted > 0, "prune={prune}");
+            assert!(drafted.model_calls < plain.model_calls, "prune={prune}");
+        }
     }
 
     #[test]

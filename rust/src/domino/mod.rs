@@ -7,19 +7,25 @@
 //!   hypotheses per generated token, computes lookahead-`k` masks by
 //!   parser-pruned tree traversal (Fig. 3 (e)), checks single tokens for
 //!   opportunistic masking,
-//! * [`spec`] — the count-based speculative model `P(l | α, β)` of §3.6.
+//! * [`spec`] — the count-based speculative model `P(l | α, β)` of §3.6,
+//! * [`draft`] — grammar-pruned multi-token draft proposers built on
+//!   those priors (the serving draft lane).
 //!
 //! The [`Checker`] trait is Algorithm 1's `C`: baselines implement it too,
 //! so the eval harness and server are decoder-agnostic.
 
 pub mod decoder;
+pub mod draft;
 pub mod generate;
 pub mod mask;
 pub mod spec;
 pub mod tree;
 
 pub use decoder::{DominoDecoder, Engine, Lookahead};
-pub use generate::{generate, generate_speculative, GenConfig, GenResult, MaskMode};
+pub use draft::{DraftModel, PriorDraft};
+pub use generate::{
+    generate, generate_drafted, generate_speculative, GenConfig, GenResult, MaskMode,
+};
 pub use mask::TokenMask;
 pub use spec::SpeculativeModel;
 pub use tree::TreeSet;

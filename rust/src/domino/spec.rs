@@ -19,11 +19,16 @@
 
 use super::decoder::DominoDecoder;
 use super::Checker;
+use crate::util::binio::{ByteReader, ByteWriter};
 use crate::TokenId;
 use std::collections::HashMap;
 
 /// Minimum proposal length worth a chunked verification call.
 pub const MIN_PROPOSAL: usize = 3;
+
+/// Longest continuation n-gram recorded per state (the draft lane's
+/// multi-token lookups; see [`crate::domino::draft`]).
+pub const NGRAM_N: usize = 3;
 
 /// Count table for `P(l | α, β)`.
 #[derive(Default, Clone)]
@@ -40,6 +45,10 @@ pub struct SpeculativeModel {
 struct StateCounts {
     total: u64,
     tokens: HashMap<TokenId, u64>,
+    /// Multi-token continuations (length 2..=[`NGRAM_N`]) observed from
+    /// this state — the draft lane proposes whole grams in one lookup
+    /// instead of re-chaining per-token predictions.
+    grams: HashMap<Box<[TokenId]>, u64>,
 }
 
 impl SpeculativeModel {
@@ -57,6 +66,17 @@ impl SpeculativeModel {
         *sc.tokens.entry(token).or_insert(0) += 1;
     }
 
+    /// Record that the LLM produced the multi-token continuation `gram`
+    /// (length 2..=[`NGRAM_N`]) from state `key`. Unigrams go through
+    /// [`SpeculativeModel::observe`], which also counts the state visit.
+    pub fn observe_gram(&mut self, key: u64, gram: &[TokenId]) {
+        if self.frozen || gram.len() < 2 || gram.len() > NGRAM_N {
+            return;
+        }
+        let sc = self.counts.entry(key).or_default();
+        *sc.grams.entry(gram.into()).or_insert(0) += 1;
+    }
+
     /// Best prediction for state `key`, if confident enough.
     pub fn predict(&self, key: u64) -> Option<TokenId> {
         let sc = self.counts.get(&key)?;
@@ -67,8 +87,64 @@ impl SpeculativeModel {
         ((cnt as f64 / sc.total as f64) >= self.threshold).then_some(tok)
     }
 
+    /// The most frequent next token for state `key`, regardless of the
+    /// confidence threshold (the draft lane's greedy fallback; ties break
+    /// on the smaller token id for determinism).
+    pub fn argmax(&self, key: u64) -> Option<TokenId> {
+        let sc = self.counts.get(&key)?;
+        sc.tokens.iter().max_by_key(|(&t, &c)| (c, std::cmp::Reverse(t))).map(|(&t, _)| t)
+    }
+
+    /// The most frequent multi-token continuation observed from state
+    /// `key` and its count (ties break on the longer, then
+    /// lexicographically smaller gram for determinism).
+    pub fn best_gram(&self, key: u64) -> Option<(&[TokenId], u64)> {
+        let sc = self.counts.get(&key)?;
+        sc.grams
+            .iter()
+            .max_by(|(ga, ca), (gb, cb)| {
+                ca.cmp(cb)
+                    .then(ga.len().cmp(&gb.len()))
+                    .then_with(|| gb.as_ref().cmp(ga.as_ref()))
+            })
+            .map(|(g, &c)| (g.as_ref(), c))
+    }
+
+    /// Times state `key` has been visited (observed) so far.
+    pub fn visits(&self, key: u64) -> u64 {
+        self.counts.get(&key).map_or(0, |sc| sc.total)
+    }
+
     pub fn num_states(&self) -> usize {
         self.counts.len()
+    }
+
+    /// Record one committed step for the draft lane: the unigram count plus
+    /// every n-gram window (length 2..=[`NGRAM_N`]) ending at `token`.
+    /// `hist` is the caller's rolling `(state key, token)` window; a step
+    /// with no state key breaks the chain (grams must not span it).
+    pub fn observe_step(
+        &mut self,
+        hist: &mut Vec<(u64, TokenId)>,
+        key: Option<u64>,
+        token: TokenId,
+    ) {
+        let Some(key) = key else {
+            hist.clear();
+            return;
+        };
+        self.observe(key, token);
+        hist.push((key, token));
+        for n in 2..=NGRAM_N {
+            if hist.len() >= n {
+                let start = hist.len() - n;
+                let gram: Vec<TokenId> = hist[start..].iter().map(|&(_, t)| t).collect();
+                self.observe_gram(hist[start].0, &gram);
+            }
+        }
+        if hist.len() > NGRAM_N {
+            hist.remove(0);
+        }
     }
 
     /// Propose up to `s` tokens from `decoder`'s current state by chaining
@@ -96,6 +172,79 @@ impl SpeculativeModel {
         }
         out
     }
+
+    /// Serialize the count tables (threshold included, `frozen`
+    /// deliberately not — a warm-started server keeps learning). The
+    /// encoding is the artifact store's little-endian framing; see
+    /// [`crate::constraint::artifact`] for the enclosing record.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u64(self.threshold.to_bits());
+        // Sort for byte-stable output (HashMap order is per-process).
+        let mut keys: Vec<&u64> = self.counts.keys().collect();
+        keys.sort();
+        w.u32(keys.len() as u32);
+        for &key in keys {
+            let sc = &self.counts[&key];
+            w.u64(key);
+            w.u64(sc.total);
+            let mut toks: Vec<_> = sc.tokens.iter().collect();
+            toks.sort();
+            w.u32(toks.len() as u32);
+            for (&t, &c) in toks {
+                w.u32(t);
+                w.u64(c);
+            }
+            let mut grams: Vec<_> = sc.grams.iter().collect();
+            grams.sort();
+            w.u32(grams.len() as u32);
+            for (g, &c) in grams {
+                w.u32(g.len() as u32);
+                for &t in g.iter() {
+                    w.u32(t);
+                }
+                w.u64(c);
+            }
+        }
+        w.into_inner()
+    }
+
+    /// Inverse of [`SpeculativeModel::to_bytes`]; fails cleanly on
+    /// truncated or malformed input (the caller falls back to a cold
+    /// prior).
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<SpeculativeModel> {
+        let mut r = ByteReader::new(bytes);
+        let threshold = f64::from_bits(r.u64()?);
+        anyhow::ensure!(threshold.is_finite(), "non-finite prior threshold");
+        let n_states = r.u32()? as usize;
+        let mut counts = HashMap::with_capacity(n_states);
+        for _ in 0..n_states {
+            let key = r.u64()?;
+            let total = r.u64()?;
+            let n_toks = r.u32()? as usize;
+            let mut tokens = HashMap::with_capacity(n_toks);
+            for _ in 0..n_toks {
+                let t = r.u32()?;
+                let c = r.u64()?;
+                tokens.insert(t, c);
+            }
+            let n_grams = r.u32()? as usize;
+            let mut grams = HashMap::with_capacity(n_grams);
+            for _ in 0..n_grams {
+                let len = r.u32()? as usize;
+                anyhow::ensure!(len >= 2 && len <= NGRAM_N, "gram length {len} out of range");
+                let mut g = Vec::with_capacity(len);
+                for _ in 0..len {
+                    g.push(r.u32()?);
+                }
+                let c = r.u64()?;
+                grams.insert(g.into_boxed_slice(), c);
+            }
+            counts.insert(key, StateCounts { total, tokens, grams });
+        }
+        r.expect_end()?;
+        Ok(SpeculativeModel { counts, threshold, frozen: false })
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +268,54 @@ mod tests {
         m.threshold = 0.8;
         assert_eq!(m.predict(42), None);
         assert_eq!(m.predict(99), None); // unseen state
+    }
+
+    #[test]
+    fn ngram_continuations_and_argmax() {
+        let mut m = SpeculativeModel::new(0.75);
+        m.observe(7, 1);
+        m.observe(7, 1);
+        m.observe(7, 2);
+        // 2/3 < 0.75: below the speculation threshold, but the draft
+        // lane's greedy argmax still has a best guess.
+        assert_eq!(m.predict(7), None);
+        assert_eq!(m.argmax(7), Some(1));
+        assert_eq!(m.visits(7), 3);
+        assert_eq!(m.best_gram(7), None);
+        m.observe_gram(7, &[1, 4]);
+        m.observe_gram(7, &[1, 4, 9]);
+        m.observe_gram(7, &[1, 4, 9]);
+        assert_eq!(m.best_gram(7), Some((&[1, 4, 9][..], 2)));
+        // Out-of-range grams are ignored.
+        m.observe_gram(7, &[1]);
+        m.observe_gram(7, &[1, 2, 3, 4]);
+        assert_eq!(m.best_gram(7), Some((&[1, 4, 9][..], 2)));
+    }
+
+    #[test]
+    fn prior_bytes_round_trip() {
+        let mut m = SpeculativeModel::new(0.6);
+        for _ in 0..5 {
+            m.observe(11, 3);
+        }
+        m.observe(11, 4);
+        m.observe(22, 8);
+        m.observe_gram(11, &[3, 3]);
+        m.observe_gram(11, &[3, 3, 4]);
+        let bytes = m.to_bytes();
+        let got = SpeculativeModel::from_bytes(&bytes).unwrap();
+        assert_eq!(got.threshold, 0.6);
+        assert_eq!(got.num_states(), 2);
+        assert_eq!(got.visits(11), 6);
+        assert_eq!(got.argmax(11), Some(3));
+        assert_eq!(got.predict(11), Some(3));
+        let norm = |o: Option<(&[TokenId], u64)>| o.map(|(g, c)| (g.to_vec(), c));
+        assert_eq!(norm(got.best_gram(11)), norm(m.best_gram(11)));
+        // Serialization is byte-stable (sorted tables).
+        assert_eq!(got.to_bytes(), bytes);
+        // Truncation fails cleanly.
+        assert!(SpeculativeModel::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(SpeculativeModel::from_bytes(&[]).is_err());
     }
 
     #[test]

@@ -8,8 +8,8 @@ use crate::constraint::{ConstraintSpec, EngineRegistry};
 use crate::domino::decoder::{Engine as GrammarEngine, Lookahead};
 use crate::domino::generate::Prompt;
 use crate::domino::{
-    generate, generate_speculative, DominoDecoder, GenConfig, MaskMode, SpeculativeModel,
-    Unconstrained,
+    generate, generate_drafted, generate_speculative, DominoDecoder, GenConfig, MaskMode,
+    SpeculativeModel, Unconstrained,
 };
 use crate::runtime::mock::{json_mock, MockLm, MockModel};
 use crate::runtime::pjrt::{artifacts_dir, load_vocab, PjrtLm, PjrtModel};
@@ -117,6 +117,12 @@ pub enum Method {
     /// DOMINO at lookahead `k`, optionally with §3.6 speculation;
     /// `opportunistic=false` = Algorithm 1's full mask every step.
     Domino { k: Lookahead, spec: Option<usize>, opportunistic: bool },
+    /// DOMINO with the grammar-pruned draft lane: up to `draft` tokens
+    /// proposed per step from the learned prior. `prune=true` filters
+    /// each draft token through the grammar as the proposal is built
+    /// (prune-before-verify); `false` is the ablation that verifies the
+    /// unpruned proposal and rejects illegal tokens afterwards.
+    Drafted { k: Lookahead, draft: usize, prune: bool },
 }
 
 impl Method {
@@ -137,6 +143,14 @@ impl Method {
                     (None, true) => format!("Domino ({k}, opp.)"),
                     (None, false) => format!("Domino ({k})"),
                 }
+            }
+            Method::Drafted { k, draft, prune } => {
+                let k = match k {
+                    Lookahead::K(k) => format!("k={k}"),
+                    Lookahead::Infinite => "k=inf".into(),
+                };
+                let order = if *prune { "pre-prune" } else { "post-prune" };
+                format!("Domino drafted ({k}, K={draft}, {order})")
             }
         }
     }
@@ -163,6 +177,10 @@ pub struct RowMetrics {
     pub interventions: usize,
     pub model_calls: usize,
     pub elapsed_s: f64,
+    /// Tokens proposed by speculation/drafting across the row.
+    pub spec_proposed: usize,
+    /// Proposed tokens accepted by verification across the row.
+    pub spec_accepted: usize,
 }
 
 struct TaskOutcome {
@@ -171,6 +189,8 @@ struct TaskOutcome {
     logprob_sum: f64,
     interventions: usize,
     model_calls: usize,
+    spec_proposed: usize,
+    spec_accepted: usize,
 }
 
 /// Run one generation with `method` for a task-grammar; returns the text
@@ -200,6 +220,8 @@ fn run_one(
                 logprob_sum: r.logprob_sum,
                 interventions: r.interventions,
                 model_calls: r.model_calls,
+                spec_proposed: 0,
+                spec_accepted: 0,
             })
         }
         Method::Guidance { ws } => {
@@ -218,6 +240,8 @@ fn run_one(
                 logprob_sum: r.logprob_sum,
                 interventions: 0,
                 model_calls: r.model_calls,
+                spec_proposed: 0,
+                spec_accepted: 0,
             })
         }
         Method::Online { .. } => {
@@ -230,6 +254,8 @@ fn run_one(
                 logprob_sum: r.logprob_sum,
                 interventions: r.interventions,
                 model_calls: r.model_calls,
+                spec_proposed: 0,
+                spec_accepted: 0,
             })
         }
         Method::Domino { k, spec, .. } => {
@@ -254,6 +280,32 @@ fn run_one(
                 logprob_sum: r.logprob_sum,
                 interventions: r.interventions,
                 model_calls: r.model_calls,
+                spec_proposed: r.spec_proposed,
+                spec_accepted: r.spec_accepted,
+            })
+        }
+        Method::Drafted { k, draft, prune } => {
+            let engine = engine.expect("grammar engine required");
+            let mut decoder = DominoDecoder::new(engine.clone(), *k);
+            let r = generate_drafted(
+                lm.as_mut(),
+                &mut decoder,
+                spec_model,
+                &setup.vocab,
+                &healed,
+                *draft,
+                *prune,
+                cfg,
+                rng,
+            )?;
+            Ok(TaskOutcome {
+                text: r.text(),
+                tokens: r.tokens.len(),
+                logprob_sum: r.logprob_sum,
+                interventions: r.interventions,
+                model_calls: r.model_calls,
+                spec_proposed: r.spec_proposed,
+                spec_accepted: r.spec_accepted,
             })
         }
     }
@@ -278,7 +330,7 @@ pub fn eval_task(
     let mut rng = Rng::new(seed);
 
     // Speculation warmup (paper: priors over 10 samples, then frozen).
-    if matches!(method, Method::Domino { spec: Some(_), .. }) {
+    if matches!(method, Method::Domino { spec: Some(_), .. } | Method::Drafted { .. }) {
         for _ in 0..10 {
             let prompt = task_prompt(task_kind, &mut rng);
             let _ = run_one(setup, method, task_kind, engine.as_ref(), &mut spec_model, &prompt, &cfg, &mut rng);
@@ -317,6 +369,8 @@ pub fn eval_task(
         row.tokens += out.tokens;
         row.interventions += out.interventions;
         row.model_calls += out.model_calls;
+        row.spec_proposed += out.spec_proposed;
+        row.spec_accepted += out.spec_accepted;
         if out.tokens > 0 {
             ppl_sum += (-out.logprob_sum / out.tokens as f64).exp();
             ppl_n += 1;
@@ -375,6 +429,8 @@ pub fn eval_throughput(
         row.tokens += out.tokens;
         row.interventions += out.interventions;
         row.model_calls += out.model_calls;
+        row.spec_proposed += out.spec_proposed;
+        row.spec_accepted += out.spec_accepted;
         let jsonish = grammar.contains("json") || grammar == "function_call";
         if score::well_formed_json(&out.text, false) || !jsonish {
             wf += 1;
@@ -424,6 +480,19 @@ mod tests {
             assert_eq!(row.n, 2);
             assert!(row.toks_per_s >= 0.0, "{method:?}");
         }
+    }
+
+    #[test]
+    fn drafted_method_runs_and_reports_acceptance() {
+        let setup = mock_setup();
+        let method = Method::Drafted { k: Lookahead::Infinite, draft: 6, prune: true };
+        assert!(method.label().contains("pre-prune"));
+        let row = eval_throughput(&setup, &method, "gsm8k", 2, 48, 3).unwrap();
+        assert!(row.tokens > 0);
+        assert!(
+            row.spec_accepted > 0 && row.spec_accepted <= row.spec_proposed,
+            "warmed prior must draft on the template-like gsm8k grammar: {row:?}"
+        );
     }
 
     #[test]

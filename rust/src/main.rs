@@ -3,12 +3,12 @@
 //! ```text
 //! domino serve [--addr 127.0.0.1:7761] [--engines 1] [--slots 4]
 //!              [--queue-depth 64] [--deadline-ms N] [--artifact-dir DIR]
-//!              [--lazy-compile] [--mock]
+//!              [--lazy-compile] [--draft K] [--mock]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --json-schema SRC |
 //!                 --json-schema-file PATH | --regex PATTERN | --stop "a,b"]
 //!                 [--method domino|domino-full|online|unconstrained]
-//!                 [--k N] [--speculative S] [--max-tokens N]
+//!                 [--k N] [--speculative S] [--draft K] [--max-tokens N]
 //!                 [--temperature T] [--seed N] [--artifact-dir DIR]
 //! domino precompile --artifact-dir DIR [--manifest FILE]
 //!                 [--grammar NAME | --ebnf SRC | --ebnf-file PATH |
@@ -23,6 +23,11 @@
 //! with overload shedding — see `server::scheduler`). Model artifacts
 //! are found via `$DOMINO_ARTIFACTS` (default `./artifacts`);
 //! `--mock` uses the test trigram LM instead.
+//!
+//! `--draft K` enables the grammar-pruned draft lane (≥ 1 proposed
+//! tokens per tick, verified in one batched forward pass). On
+//! `generate` it applies to the request; on `serve` it is the default
+//! for domino requests that set neither `draft` nor `speculative`.
 //!
 //! `--artifact-dir DIR` (or `$DOMINO_ARTIFACT_DIR`) enables the
 //! persistent *precompute* artifact store: compiled grammar engines are
@@ -147,16 +152,40 @@ fn parse_spec(flags: &HashMap<String, String>) -> domino::Result<Option<Constrai
     })
 }
 
+/// `--draft K`: the grammar-pruned draft-lane depth. Validated like the
+/// wire field — `K = 0` would silently disable the feature the user
+/// asked for, so it is rejected with the valid range.
+fn parse_draft(flags: &HashMap<String, String>) -> domino::Result<Option<usize>> {
+    match flags.get("draft") {
+        None => Ok(None),
+        Some(s) => match s.parse::<usize>() {
+            Ok(k) if k >= 1 => Ok(Some(k)),
+            _ => anyhow::bail!("--draft must be an integer ≥ 1 (got `{s}`); omit it to disable"),
+        },
+    }
+}
+
 /// Build the request constraint from CLI flags: the spec from
 /// [`parse_spec`], the enforcement from `--method` / `--k` /
-/// `--speculative`.
+/// `--speculative` / `--draft`.
 fn parse_constraint(flags: &HashMap<String, String>) -> domino::Result<Constraint> {
     let method = flags.get("method").map(|s| s.as_str()).unwrap_or("domino");
+    let speculative = flags.get("speculative").and_then(|s| s.parse().ok());
+    let draft = parse_draft(flags)?;
+    if draft.is_some() {
+        if speculative.is_some() {
+            anyhow::bail!("--draft and --speculative are mutually exclusive");
+        }
+        if method != "domino" {
+            anyhow::bail!("--draft requires --method domino (got `{method}`)");
+        }
+    }
     Ok(Constraint::from_parts(
         method,
         parse_spec(flags)?,
         flags.get("k").and_then(|k| k.parse().ok()),
-        flags.get("speculative").and_then(|s| s.parse().ok()),
+        speculative,
+        draft,
     ))
 }
 
@@ -177,13 +206,16 @@ fn cmd_generate(flags: HashMap<String, String>) -> domino::Result<()> {
     }
     println!("{}", resp.text);
     eprintln!(
-        "# {} tokens in {:.2}s ({:.1} tok/s) | interventions {} | model calls {} | spec accepted {}",
+        "# {} tokens in {:.2}s ({:.1} tok/s) | interventions {} | model calls {} | \
+         spec accepted {} | draft {}/{} accepted",
         resp.stats.tokens_out,
         resp.elapsed_s,
         resp.stats.tokens_out as f64 / resp.elapsed_s.max(1e-9),
         resp.stats.interventions,
         resp.stats.model_calls,
         resp.stats.spec_accepted,
+        resp.stats.draft_accepted,
+        resp.stats.draft_proposed,
     );
     if let Ok(m) = server.metrics() {
         eprintln!(
@@ -356,10 +388,13 @@ fn main() {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let (flags, positional) = parse_flags(&args[args.len().min(1)..]);
     let result = match cmd {
-        "serve" => match start_scheduler(&flags) {
-            Ok(sched) => {
+        "serve" => match parse_draft(&flags).and_then(|draft| {
+            let sched = start_scheduler(&flags)?;
+            Ok((draft, sched))
+        }) {
+            Ok((draft, sched)) => {
                 let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
-                tcp::serve(sched, &addr)
+                tcp::serve(sched, &addr, tcp::ServeDefaults { draft })
             }
             Err(e) => Err(e),
         },
@@ -380,12 +415,14 @@ fn main() {
                 "usage: domino <serve|generate|precompile|grammar|grammars> [flags]\n\
                  \n\
                  serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
-                 \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--lazy-compile] [--mock]\n\
+                 \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--lazy-compile]\n\
+                 \u{20}          [--draft K] [--mock]\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --json-schema SRC | --json-schema-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
                  \u{20}          [--method domino|domino-full|online|unconstrained]\n\
-                 \u{20}          [--k N] [--speculative S] [--max-tokens N] [--temperature T] [--seed N]\n\
+                 \u{20}          [--k N] [--speculative S] [--draft K] [--max-tokens N]\n\
+                 \u{20}          [--temperature T] [--seed N]\n\
                  \u{20}          [--artifact-dir DIR] [--mock]\n\
                  precompile --artifact-dir DIR [--manifest FILE]\n\
                  \u{20}          [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\

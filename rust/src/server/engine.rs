@@ -27,7 +27,7 @@ use super::scheduler::{RequestHandle, Scheduler, SchedulerConfig};
 use super::slot::{step_batched, DecodeMode, Slot, SlotStats, StreamEvent};
 use crate::constraint::{CachedChecker, EngineRegistry, MaskCache, StopChecker};
 use crate::domino::decoder::Lookahead;
-use crate::domino::{DominoDecoder, SpeculativeModel};
+use crate::domino::{DominoDecoder, PriorDraft, SpeculativeModel};
 use crate::runtime::sampler::Sampling;
 use crate::runtime::LmBackend;
 use crate::tokenizer::Vocab;
@@ -119,8 +119,19 @@ pub struct EngineCtx {
     /// another; §4.2: priors formed over warmup requests, then reused).
     /// Per-shard: affinity
     /// routing keeps same-grammar requests on one shard so these stay
-    /// warm without cross-shard locking.
-    specs: HashMap<u64, Arc<Mutex<SpeculativeModel>>>,
+    /// warm without cross-shard locking. Bounded with LRU eviction
+    /// ([`EngineCtx::spec_model`]); misses warm-start from the registry's
+    /// artifact store when one is attached.
+    specs: HashMap<u64, SpecEntry>,
+    /// Monotonic access counter backing the prior map's LRU eviction.
+    spec_tick: u64,
+}
+
+/// One cached speculation prior plus its last-access tick (LRU victim
+/// selection, like the mask cache shards).
+struct SpecEntry {
+    model: Arc<Mutex<SpeculativeModel>>,
+    tick: u64,
 }
 
 impl EngineCtx {
@@ -145,23 +156,52 @@ impl EngineCtx {
                 s.warm_start_ms
             );
         }
-        EngineCtx { backend, vocab, registry, specs: HashMap::new() }
+        EngineCtx { backend, vocab, registry, specs: HashMap::new(), spec_tick: 0 }
     }
 
     fn spec_model(&mut self, fingerprint: u64) -> Arc<Mutex<SpeculativeModel>> {
-        if !self.specs.contains_key(&fingerprint) && self.specs.len() >= SPEC_MODEL_CAPACITY {
-            // Drop an arbitrary prior: losing one only costs warmup
-            // quality for that grammar, and it keeps a stream of distinct
-            // inline constraints from growing this map without bound.
-            let victim = self.specs.keys().next().copied();
-            if let Some(victim) = victim {
-                self.specs.remove(&victim);
+        self.spec_tick += 1;
+        let tick = self.spec_tick;
+        if !self.specs.contains_key(&fingerprint) {
+            if self.specs.len() >= SPEC_MODEL_CAPACITY {
+                // Evict the least recently used prior (LRU tick, like the
+                // mask cache shards): losing one only costs warmup quality
+                // for that grammar, and recency keeps a hot grammar's
+                // prior alive under a stream of distinct inline
+                // constraints.
+                let victim = self.specs.iter().min_by_key(|(_, e)| e.tick).map(|(&k, _)| k);
+                if let Some(victim) = victim {
+                    self.specs.remove(&victim);
+                }
+            }
+            // A restarted server warm-starts the prior from the artifact
+            // store (flushed on shard exit), so it drafts/speculates well
+            // from the first request. Corrupt or absent records fall back
+            // to a cold prior.
+            let model = self
+                .registry
+                .store()
+                .and_then(|s| s.load_prior(fingerprint))
+                .unwrap_or_else(|| SpeculativeModel::new(0.75));
+            self.specs.insert(fingerprint, SpecEntry { model: Arc::new(Mutex::new(model)), tick });
+        }
+        let entry = self.specs.get_mut(&fingerprint).expect("present or just inserted");
+        entry.tick = tick;
+        entry.model.clone()
+    }
+
+    /// Persist every learned speculation prior to the registry's artifact
+    /// store (no-op without a store, or for priors that never observed a
+    /// step). Called by the shard loop on clean shutdown so a restarted
+    /// server drafts from warm priors.
+    pub fn flush_priors(&self) {
+        let Some(store) = self.registry.store() else { return };
+        for (&key, e) in &self.specs {
+            let model = e.model.lock().expect("spec lock");
+            if model.num_states() > 0 {
+                let _ = store.save_prior(key, &model);
             }
         }
-        self.specs
-            .entry(fingerprint)
-            .or_insert_with(|| Arc::new(Mutex::new(SpeculativeModel::new(0.75))))
-            .clone()
     }
 
     /// Resolve a request's constraint into a decode mode. Grammar-backed
@@ -196,13 +236,27 @@ impl EngineCtx {
                         );
                         Ok(DecodeMode::Opportunistic(Box::new(cached)))
                     }
-                    Enforcement::Domino { k, speculative, full_mask } => {
+                    Enforcement::Domino { k, speculative, draft, full_mask } => {
                         let lookahead = match k {
                             Some(k) => Lookahead::K(*k),
                             None => Lookahead::Infinite,
                         };
                         let decoder = DominoDecoder::new(engine, lookahead);
-                        if let Some(s) = speculative {
+                        if let Some(d) = draft {
+                            let prior_key =
+                                spec.build_fingerprint(self.vocab.fingerprint(), build_k);
+                            let prior = self.spec_model(prior_key);
+                            Ok(DecodeMode::Drafted {
+                                decoder,
+                                spec: prior.clone(),
+                                draft: Box::new(PriorDraft::new(prior)),
+                                k_max: (*d).max(1),
+                                masks,
+                                variant: MaskCache::variant(lookahead),
+                                accept_ewma: 0.0,
+                                hist: Vec::new(),
+                            })
+                        } else if let Some(s) = speculative {
                             let prior_key =
                                 spec.build_fingerprint(self.vocab.fingerprint(), build_k);
                             Ok(DecodeMode::Speculative {
@@ -496,6 +550,8 @@ impl EngineCore {
                 self.metrics.masks_computed += a.slot.stats.masks_computed as u64;
                 self.metrics.spec_proposed += a.slot.stats.spec_proposed as u64;
                 self.metrics.spec_accepted += a.slot.stats.spec_accepted as u64;
+                self.metrics.draft_proposed += a.slot.stats.draft_proposed as u64;
+                self.metrics.draft_accepted += a.slot.stats.draft_accepted as u64;
                 if elapsed > 0.0 {
                     self.metrics.req_tps.record(a.slot.stats.tokens_out as f64 / elapsed);
                 }
@@ -589,5 +645,42 @@ impl Server {
 
     pub fn shutdown(self) {
         self.sched.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::{json_mock, MockFactory};
+
+    #[test]
+    fn hot_spec_prior_survives_cold_sweep() {
+        // LRU eviction: a prior that keeps being touched must survive a
+        // sweep of > capacity distinct cold fingerprints; the cold ones
+        // churn among themselves.
+        let (vocab, model) = json_mock(64);
+        let mut ctx = EngineCtx::new(Box::new(MockFactory { model }), vocab);
+        const HOT: u64 = u64::MAX;
+        let hot = ctx.spec_model(HOT);
+        for cold in 1..=(super::SPEC_MODEL_CAPACITY as u64 + 8) {
+            let _ = ctx.spec_model(cold);
+            // Touch the hot prior between cold insertions (recency).
+            let again = ctx.spec_model(HOT);
+            assert!(Arc::ptr_eq(&hot, &again), "hot prior evicted at cold={cold}");
+        }
+        assert!(ctx.specs.len() <= super::SPEC_MODEL_CAPACITY);
+    }
+
+    #[test]
+    fn spec_prior_is_shared_per_fingerprint_and_bounded() {
+        let (vocab, model) = json_mock(64);
+        let mut ctx = EngineCtx::new(Box::new(MockFactory { model }), vocab);
+        let a = ctx.spec_model(7);
+        let b = ctx.spec_model(7);
+        assert!(Arc::ptr_eq(&a, &b), "same fingerprint shares one prior");
+        for f in 100..100 + (SPEC_MODEL_CAPACITY as u64 * 2) {
+            let _ = ctx.spec_model(f);
+        }
+        assert!(ctx.specs.len() <= SPEC_MODEL_CAPACITY, "prior map stays bounded");
     }
 }

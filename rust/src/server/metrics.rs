@@ -104,6 +104,11 @@ pub struct Metrics {
     pub masks_computed: u64,
     pub spec_proposed: u64,
     pub spec_accepted: u64,
+    /// Tokens proposed by draft lanes (grammar-pruned multi-token
+    /// drafting; distinct from single-token opportunistic speculation).
+    pub draft_proposed: u64,
+    /// Draft-lane tokens accepted by batched verification.
+    pub draft_accepted: u64,
     /// Engine-registry lookups served from cache.
     pub registry_hits: u64,
     /// Engine-registry lookups that compiled a grammar.
@@ -169,6 +174,8 @@ impl Metrics {
         self.masks_computed += other.masks_computed;
         self.spec_proposed += other.spec_proposed;
         self.spec_accepted += other.spec_accepted;
+        self.draft_proposed += other.draft_proposed;
+        self.draft_accepted += other.draft_accepted;
         self.registry_hits = self.registry_hits.max(other.registry_hits);
         self.registry_misses = self.registry_misses.max(other.registry_misses);
         self.registry_evictions = self.registry_evictions.max(other.registry_evictions);
@@ -195,6 +202,7 @@ impl Metrics {
              tokens: {} | model calls: {} | \
              forward: {} batches / {} rows (mean width {:.1}) | \
              interventions: {} | masks: {} | spec: {}/{} accepted | \
+             draft: {}/{} accepted ({:.0}%) | \
              ttft p50 {:.1} ms | req tps mean {:.1} | \
              registry: {} hit / {} miss / {} evict / {} coalesced ({} ms compiling) | \
              artifacts: {} hit / {} miss / {} invalid (warm start {} in {} ms) | \
@@ -213,6 +221,9 @@ impl Metrics {
             self.masks_computed,
             self.spec_accepted,
             self.spec_proposed,
+            self.draft_accepted,
+            self.draft_proposed,
+            self.draft_accept_rate() * 100.0,
             self.ttft.percentile(0.5) * 1e3,
             self.req_tps.mean(),
             self.registry_hits,
@@ -229,6 +240,15 @@ impl Metrics {
             self.mask_cache_misses,
             self.mask_cache_hit_rate() * 100.0,
         )
+    }
+
+    /// Draft-lane acceptance rate in [0, 1] (0 when nothing proposed).
+    pub fn draft_accept_rate(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_proposed as f64
+        }
     }
 
     /// Mask-cache hit rate in [0, 1] (0 when no lookups yet).
@@ -266,6 +286,8 @@ mod tests {
             requests_completed: 2,
             requests_shed: 1,
             tokens_generated: 10,
+            draft_proposed: 8,
+            draft_accepted: 6,
             registry_misses: 3, // shared-registry counter: same registry...
             ..Default::default()
         };
@@ -273,6 +295,8 @@ mod tests {
         let mut b = Metrics {
             requests_completed: 4,
             tokens_generated: 20,
+            draft_proposed: 4,
+            draft_accepted: 3,
             registry_misses: 3, // ...seen from another shard's snapshot
             ..Default::default()
         };
@@ -281,6 +305,8 @@ mod tests {
         assert_eq!(a.requests_completed, 6);
         assert_eq!(a.requests_shed, 1);
         assert_eq!(a.tokens_generated, 30);
+        assert_eq!(a.draft_proposed, 12, "draft counters are per-shard loop work: they sum");
+        assert_eq!(a.draft_accepted, 9);
         assert_eq!(a.registry_misses, 3, "shared registry must not double-count");
         assert_eq!(a.ttft.count, 2);
         assert_eq!(a.ttft.min, 0.5);
@@ -327,5 +353,10 @@ mod tests {
         m.mask_cache_misses = 1;
         assert!((m.mask_cache_hit_rate() - 0.75).abs() < 1e-12);
         assert!(m.report().contains("75% hit rate"));
+        assert_eq!(m.draft_accept_rate(), 0.0, "no drafting yet");
+        m.draft_proposed = 10;
+        m.draft_accepted = 8;
+        assert!((m.draft_accept_rate() - 0.8).abs() < 1e-12);
+        assert!(m.report().contains("draft: 8/10 accepted (80%)"));
     }
 }

@@ -392,7 +392,9 @@ impl Drop for Scheduler {
 /// slot. Blocks on the channel only when fully idle. On exit, the
 /// primary shard flushes its context's registry — the one that actually
 /// served engines, whether shared or built by the init closure — so
-/// warmed masks persist across restarts.
+/// warmed masks persist across restarts. Every shard flushes its own
+/// speculative priors: grammar-affinity routing means each shard learned
+/// from the grammars it served, so the draft-lane priors live per shard.
 fn shard_loop(
     core: EngineCore,
     rx: mpsc::Receiver<Job>,
@@ -401,6 +403,7 @@ fn shard_loop(
     primary: bool,
 ) {
     let core = shard_loop_inner(core, rx, queued_gauge, active_gauge);
+    core.ctx.flush_priors();
     if primary {
         core.ctx.registry.flush_artifacts();
     }

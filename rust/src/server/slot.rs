@@ -20,6 +20,7 @@
 //! path (tests, benches, the batched path's parity reference).
 
 use crate::constraint::MaskCache;
+use crate::domino::draft::{adaptive_k, cached_mask, DraftModel};
 use crate::domino::generate::Prompt;
 use crate::domino::{Checker, DominoDecoder, SpeculativeModel, TokenMask};
 use crate::runtime::sampler::{decode, log_prob, Sampling};
@@ -133,23 +134,27 @@ pub enum DecodeMode {
         masks: Arc<MaskCache>,
         variant: u64,
     },
-}
-
-/// A mask for `decoder`'s current state via the shared cache (compute and
-/// fill on miss) — the speculative path's equivalent of
-/// [`crate::constraint::CachedChecker::compute_mask`].
-fn cached_mask(decoder: &mut DominoDecoder, masks: &MaskCache, variant: u64) -> Arc<TokenMask> {
-    match decoder.mask_key() {
-        Some(state) => match masks.get(variant, state) {
-            Some(m) => m,
-            None => {
-                let m = decoder.compute_mask();
-                masks.put(variant, state, m.clone());
-                m
-            }
-        },
-        None => decoder.compute_mask(),
-    }
+    /// The draft lane: multi-token proposals from a cheap
+    /// [`DraftModel`] proposer (the shared prior's n-gram continuation
+    /// counts), grammar-pruned *while built* — each candidate filtered
+    /// through the shared mask cache before it can occupy a forward-pass
+    /// row — then verified on the batched `scored` lanes with
+    /// longest-accepted-prefix adoption. Proposal length adapts online to
+    /// the slot's recent acceptance rate ([`adaptive_k`]), so a cold
+    /// grammar degrades gracefully to K=1.
+    Drafted {
+        decoder: DominoDecoder,
+        spec: Arc<std::sync::Mutex<SpeculativeModel>>,
+        draft: Box<dyn DraftModel>,
+        /// Request's draft-depth cap (`"draft": K` on the wire).
+        k_max: usize,
+        masks: Arc<MaskCache>,
+        variant: u64,
+        /// EWMA of per-proposal acceptance rates (drives [`adaptive_k`]).
+        accept_ewma: f64,
+        /// Rolling `(state key, token)` window for n-gram observation.
+        hist: Vec<(u64, TokenId)>,
+    },
 }
 
 impl DecodeMode {
@@ -158,6 +163,7 @@ impl DecodeMode {
             DecodeMode::Unconstrained => None,
             DecodeMode::Opportunistic(c) | DecodeMode::FullMask(c) => Some(c.as_mut()),
             DecodeMode::Speculative { decoder, .. } => Some(decoder),
+            DecodeMode::Drafted { decoder, .. } => Some(decoder),
         }
     }
 }
@@ -172,6 +178,8 @@ pub struct SlotStats {
     pub masks_computed: usize,
     pub spec_proposed: usize,
     pub spec_accepted: usize,
+    pub draft_proposed: usize,
+    pub draft_accepted: usize,
     pub stopped: bool,
 }
 
@@ -180,8 +188,9 @@ pub struct SlotStats {
 enum Pending {
     /// Committed token(s) whose successor logits row hasn't arrived yet.
     Row(Vec<TokenId>),
-    /// A speculative proposal awaiting per-token scored rows. Nothing is
-    /// committed until [`Slot::finish_step`] verifies the prefix.
+    /// A speculative or drafted proposal awaiting per-token scored rows.
+    /// Nothing is committed until [`Slot::finish_step`] verifies the
+    /// prefix.
     Proposal(Vec<TokenId>),
 }
 
@@ -448,6 +457,53 @@ impl Slot {
             return self.commit_choice(chosen);
         }
 
+        // Draft lane: grammar-pruned multi-token proposal for one scored
+        // verify, K adapted from the slot's recent acceptance rate.
+        if let DecodeMode::Drafted {
+            decoder,
+            spec,
+            draft,
+            k_max,
+            masks,
+            variant,
+            accept_ewma,
+            hist,
+        } = &mut self.mode
+        {
+            let k = adaptive_k(*accept_ewma, *k_max);
+            let proposal = draft.propose(decoder, masks, *variant, k);
+            if !proposal.is_empty() {
+                self.stats.draft_proposed += proposal.len();
+                self.pending = Some(Pending::Proposal(proposal));
+                return Ok(());
+            }
+            // Cold prior: one plain opportunistic step (same forward cost
+            // as an undrafted slot), and teach the prior what the LLM
+            // chose — unigram plus every n-gram window.
+            let chosen = {
+                let proposal = decode(&self.logits, self.sampling, &mut self.rng);
+                if decoder.check_token(proposal) {
+                    proposal
+                } else {
+                    self.stats.interventions += 1;
+                    let mask = cached_mask(decoder, masks, *variant);
+                    self.stats.masks_computed += 1;
+                    if mask.is_empty() {
+                        self.done = true;
+                        return Ok(());
+                    }
+                    let mut masked = self.logits.clone();
+                    mask.apply(&mut masked);
+                    decode(&masked, self.sampling, &mut self.rng)
+                }
+            };
+            {
+                let mut spec_guard = spec.lock().expect("spec lock");
+                spec_guard.observe_step(hist, decoder.state_key(), chosen);
+            }
+            return self.commit_choice(chosen);
+        }
+
         // Plain modes.
         let full_mask = matches!(self.mode, DecodeMode::FullMask(_));
         let chosen = Self::choose(
@@ -495,7 +551,13 @@ impl Slot {
                     .ok_or_else(|| anyhow::anyhow!("batched forward returned no logits row"))?;
                 Ok(())
             }
-            Some(Pending::Proposal(proposal)) => self.finish_speculative(proposal, rows),
+            Some(Pending::Proposal(proposal)) => {
+                if matches!(self.mode, DecodeMode::Drafted { .. }) {
+                    self.finish_drafted(proposal, rows)
+                } else {
+                    self.finish_speculative(proposal, rows)
+                }
+            }
         }
     }
 
@@ -579,6 +641,96 @@ impl Slot {
                 return Ok(());
             }
         }
+        Ok(())
+    }
+
+    /// Verify a drafted proposal against its scored rows: commit the
+    /// longest accepted prefix; on the first disagreement roll the
+    /// session back and commit the corrected token, deferring its
+    /// successor row to the next tick's batch (the same deferred
+    /// correction as the speculative lane). The slot's acceptance EWMA —
+    /// which sets the next proposal's length — and the proposer's
+    /// feedback hook are updated exactly once per proposal.
+    fn finish_drafted(&mut self, proposal: Vec<TokenId>, rows: Vec<Vec<f32>>) -> crate::Result<()> {
+        anyhow::ensure!(rows.len() == proposal.len(), "scored rows/proposal length mismatch");
+        let DecodeMode::Drafted { decoder, spec, draft, masks, variant, accept_ewma, hist, .. } =
+            &mut self.mode
+        else {
+            anyhow::bail!("drafted rows arrived for a non-drafted slot");
+        };
+        let mut accepted = 0usize;
+        let mut correction: Option<TokenId> = None;
+        let mut capped = false;
+        for (i, &p) in proposal.iter().enumerate() {
+            let choice = decode(&self.logits, self.sampling, &mut self.rng);
+            let choice = if decoder.check_token(choice) {
+                choice
+            } else {
+                self.stats.interventions += 1;
+                let mask = cached_mask(decoder, masks, *variant);
+                self.stats.masks_computed += 1;
+                if mask.is_empty() {
+                    // Dead end mid-verify: drop the unaccepted suffix and
+                    // let the next decide phase conclude the dead end.
+                    break;
+                }
+                let mut masked = self.logits.clone();
+                mask.apply(&mut masked);
+                decode(&masked, self.sampling, &mut self.rng)
+            };
+            if choice != p {
+                correction = Some(choice);
+                break;
+            }
+            self.stats.logprob_sum += log_prob(&self.logits, p);
+            {
+                let mut spec_guard = spec.lock().expect("spec lock");
+                spec_guard.observe_step(hist, decoder.state_key(), p);
+            }
+            decoder.advance(p)?;
+            self.out.push(p);
+            self.stats.tokens_out += 1;
+            self.stream.emit_token(&self.vocab, p);
+            self.stats.draft_accepted += 1;
+            accepted += 1;
+            self.logits = rows[i].clone();
+            if self.out.len() >= self.max_tokens {
+                capped = true;
+                break;
+            }
+        }
+        // Once per proposal: the acceptance EWMA drives the next tick's
+        // adaptive K; the feedback hook lets a session-backed draft model
+        // resync with the target.
+        *accept_ewma = (*accept_ewma + accepted as f64 / proposal.len() as f64) / 2.0;
+        draft.commit(&proposal[..accepted], correction);
+        if accepted < proposal.len() {
+            self.session.rollback(proposal.len() - accepted)?;
+        }
+        if capped {
+            self.done = true;
+            return Ok(());
+        }
+        let Some(choice) = correction else { return Ok(()) };
+        self.stats.logprob_sum += log_prob(&self.logits, choice);
+        if choice == EOS_ID {
+            self.stats.stopped = true;
+            self.done = true;
+            return Ok(());
+        }
+        {
+            let mut spec_guard = spec.lock().expect("spec lock");
+            spec_guard.observe_step(hist, decoder.state_key(), choice);
+        }
+        decoder.advance(choice)?;
+        self.out.push(choice);
+        self.stats.tokens_out += 1;
+        self.stream.emit_token(&self.vocab, choice);
+        if self.out.len() >= self.max_tokens {
+            self.done = true;
+            return Ok(());
+        }
+        self.pending = Some(Pending::Row(vec![choice]));
         Ok(())
     }
 

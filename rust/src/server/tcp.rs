@@ -11,6 +11,12 @@
 //! ```
 //! `method`: "unconstrained" | "domino" | "domino-full" | "online".
 //!
+//! `"draft": K` (method "domino" only) enables the grammar-pruned draft
+//! lane: up to `K ≥ 1` tokens are proposed per engine tick from the
+//! grammar's learned prior and verified in one batched forward pass.
+//! Mutually exclusive with `speculative` (the draft lane subsumes
+//! single-token speculation).
+//!
 //! The constraint itself is exactly ONE of:
 //! * `"ebnf": "root ::= ..."` — an inline grammar in the crate's EBNF
 //!   notation, compiled on first sight and cached by content hash;
@@ -26,9 +32,11 @@
 //! Supplying more than one of these fields is a structured `bad request`
 //! error — the server refuses to guess which constraint was meant.
 //!
-//! Validation: `k` / `speculative` / `max_tokens` / `seed` /
+//! Validation: `k` / `speculative` / `draft` / `max_tokens` / `seed` /
 //! `temperature` / `deadline_ms` must be non-negative finite numbers
-//! (anything else is a `bad request` error, not a silent cast), and
+//! (anything else is a `bad request` error, not a silent cast),
+//! `speculative` and `draft` must additionally be ≥ 1 when present
+//! (`0` would silently disable the feature the client asked for), and
 //! `max_tokens` is clamped to the server-side cap [`MAX_TOKENS_CAP`].
 //!
 //! Non-streaming response (also the terminator of a streaming response):
@@ -73,6 +81,35 @@ pub enum Request {
     Generate(GenRequest),
     /// `{"op": "stats"}` — aggregated cross-shard metrics.
     Stats,
+}
+
+/// Server-side request defaults from CLI flags, applied to requests that
+/// leave the knob unset (never overriding an explicit wire value).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeDefaults {
+    /// Default draft depth (`--draft K` on `domino serve`): applied to
+    /// domino-mode requests that set neither `draft` nor `speculative`.
+    pub draft: Option<usize>,
+}
+
+impl ServeDefaults {
+    /// Fold these defaults into a parsed request. A request that chose
+    /// any speculation mode itself — or a non-domino method — is left
+    /// alone: defaults fill gaps, they don't override.
+    pub fn apply(&self, req: &mut GenRequest) {
+        use super::engine::Enforcement;
+        if let Some(k) = self.draft {
+            if let Enforcement::Domino {
+                speculative: None,
+                draft: draft @ None,
+                full_mask: false,
+                ..
+            } = &mut req.constraint.enforcement
+            {
+                *draft = Some(k);
+            }
+        }
+    }
 }
 
 /// Parse one request line (generation or `stats` op).
@@ -178,13 +215,42 @@ fn parse_spec(v: &Json) -> crate::Result<Option<ConstraintSpec>> {
     })
 }
 
+/// Fetch `name` as a count that is ≥ 1 when present: `0` would silently
+/// disable the feature the client explicitly asked for, so it is rejected
+/// with the valid range (negatives and non-numbers are rejected by
+/// [`non_negative`] with the same shape of error).
+fn positive_count(v: &Json, name: &str) -> crate::Result<Option<usize>> {
+    match non_negative(v, name)? {
+        Some(f) if f < 1.0 => {
+            anyhow::bail!("`{name}` must be ≥ 1 when present (omit it or pass null to disable)")
+        }
+        Some(f) => Ok(Some(f as usize)),
+        None => Ok(None),
+    }
+}
+
 fn parse_request_value(v: &Json) -> crate::Result<GenRequest> {
     let prompt = v.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string();
     let method = v.get("method").and_then(|m| m.as_str()).unwrap_or("domino");
     let k = non_negative(v, "k")?.map(|k| k as u32);
-    let speculative = non_negative(v, "speculative")?.map(|s| s as usize);
+    let speculative = positive_count(v, "speculative")?;
+    let draft = positive_count(v, "draft")?;
+    if draft.is_some() {
+        if speculative.is_some() {
+            anyhow::bail!(
+                "`draft` and `speculative` are mutually exclusive \
+                 (the draft lane subsumes single-token speculation)"
+            );
+        }
+        if method != "domino" {
+            anyhow::bail!(
+                "`draft` requires `method: \"domino\"` (got `{method}`): the draft lane \
+                 needs the opportunistic checker to prune proposals as they are built"
+            );
+        }
+    }
     let max_tokens = non_negative(v, "max_tokens")?.map(|m| m as usize).unwrap_or(128);
-    let constraint = Constraint::from_parts(method, parse_spec(v)?, k, speculative);
+    let constraint = Constraint::from_parts(method, parse_spec(v)?, k, speculative, draft);
     Ok(GenRequest {
         prompt,
         constraint,
@@ -205,6 +271,8 @@ pub fn format_response(resp: &GenResponse) -> String {
         ("model_calls", Json::Num(resp.stats.model_calls as f64)),
         ("masks", Json::Num(resp.stats.masks_computed as f64)),
         ("spec_accepted", Json::Num(resp.stats.spec_accepted as f64)),
+        ("draft_proposed", Json::Num(resp.stats.draft_proposed as f64)),
+        ("draft_accepted", Json::Num(resp.stats.draft_accepted as f64)),
         ("stopped", Json::Bool(resp.stats.stopped)),
         ("elapsed_s", Json::Num(resp.elapsed_s)),
     ];
@@ -252,6 +320,9 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("masks_computed", Json::Num(m.masks_computed as f64)),
         ("spec_proposed", Json::Num(m.spec_proposed as f64)),
         ("spec_accepted", Json::Num(m.spec_accepted as f64)),
+        ("draft_proposed", Json::Num(m.draft_proposed as f64)),
+        ("draft_accepted", Json::Num(m.draft_accepted as f64)),
+        ("draft_accept_rate", Json::Num(m.draft_accept_rate())),
         ("registry_hits", Json::Num(m.registry_hits as f64)),
         ("registry_misses", Json::Num(m.registry_misses as f64)),
         ("registry_evictions", Json::Num(m.registry_evictions as f64)),
@@ -355,7 +426,7 @@ fn handle_generate(req: GenRequest, sched: &Scheduler, out: &mut TcpStream) -> s
     }
 }
 
-fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>) {
+fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, defaults: ServeDefaults) {
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -374,7 +445,10 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>) {
                 };
                 writeln!(out, "{reply}")
             }
-            Ok(Request::Generate(req)) => handle_generate(req, &sched, &mut out),
+            Ok(Request::Generate(mut req)) => {
+                defaults.apply(&mut req);
+                handle_generate(req, &sched, &mut out)
+            }
             Err(e) => writeln!(out, "{}", error_line("bad request: ", format!("{e:#}"))),
         };
         if result.is_err() {
@@ -394,7 +468,7 @@ pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAdd
             for stream in listener.incoming() {
                 let Ok(stream) = stream else { continue };
                 let sched = sched.clone();
-                std::thread::spawn(move || handle_conn(stream, sched));
+                std::thread::spawn(move || handle_conn(stream, sched, ServeDefaults::default()));
             }
         })
         .expect("spawn accept thread");
@@ -402,14 +476,14 @@ pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAdd
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7761").
-pub fn serve(sched: Scheduler, addr: &str) -> crate::Result<()> {
+pub fn serve(sched: Scheduler, addr: &str, defaults: ServeDefaults) -> crate::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("domino: serving on {addr} ({} engine shard(s))", sched.engines());
     let sched = Arc::new(sched);
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let sched = sched.clone();
-        std::thread::spawn(move || handle_conn(stream, sched));
+        std::thread::spawn(move || handle_conn(stream, sched, defaults));
     }
     Ok(())
 }
@@ -523,9 +597,71 @@ mod tests {
     }
 
     #[test]
+    fn parses_draft_requests() {
+        let r = parse_request(r#"{"prompt": "hi", "grammar": "json", "draft": 6}"#).unwrap();
+        assert_eq!(
+            r.constraint,
+            Constraint::domino(ConstraintSpec::builtin("json")).with_draft(6)
+        );
+        // Explicit null means "absent", like every other knob.
+        let r = parse_request(r#"{"prompt": "hi", "grammar": "json", "draft": null}"#).unwrap();
+        assert_eq!(r.constraint, Constraint::domino(ConstraintSpec::builtin("json")));
+    }
+
+    #[test]
+    fn serve_defaults_fill_draft_without_overriding() {
+        let defaults = ServeDefaults { draft: Some(4) };
+        let json = || ConstraintSpec::builtin("json");
+        let mut r = parse_request(r#"{"prompt": "x", "grammar": "json"}"#).unwrap();
+        defaults.apply(&mut r);
+        assert_eq!(r.constraint, Constraint::domino(json()).with_draft(4));
+        // Explicit wire values win over the server default.
+        let mut r = parse_request(r#"{"prompt": "x", "grammar": "json", "draft": 2}"#).unwrap();
+        defaults.apply(&mut r);
+        assert_eq!(r.constraint, Constraint::domino(json()).with_draft(2));
+        let mut r =
+            parse_request(r#"{"prompt": "x", "grammar": "json", "speculative": 8}"#).unwrap();
+        defaults.apply(&mut r);
+        assert_eq!(r.constraint, Constraint::domino(json()).with_speculation(8));
+        // Non-domino methods are untouched.
+        let mut r =
+            parse_request(r#"{"prompt": "x", "grammar": "json", "method": "online"}"#).unwrap();
+        defaults.apply(&mut r);
+        assert_eq!(r.constraint, Constraint::online(json()));
+    }
+
+    #[test]
+    fn rejects_zero_speculation_and_draft_with_valid_range() {
+        for (line, knob) in [
+            (r#"{"prompt": "x", "grammar": "json", "speculative": 0}"#, "speculative"),
+            (r#"{"prompt": "x", "grammar": "json", "draft": 0}"#, "draft"),
+        ] {
+            let err = parse_request(line).unwrap_err().to_string();
+            assert!(err.contains(&format!("`{knob}` must be ≥ 1")), "{line}: {err}");
+            assert!(err.contains("null to disable"), "{line}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_draft_with_incompatible_modes() {
+        for method in ["online", "domino-full", "unconstrained"] {
+            let line =
+                format!(r#"{{"prompt": "", "grammar": "json", "method": "{method}", "draft": 4}}"#);
+            let err = parse_request(&line).unwrap_err().to_string();
+            assert!(err.contains("requires `method: \"domino\"`"), "{method}: {err}");
+            assert!(err.contains(method), "error must name the offending method: {err}");
+        }
+        let err = parse_request(r#"{"prompt": "x", "draft": 4, "speculative": 8}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
     fn rejects_negative_and_non_numeric_knobs() {
         assert!(parse_request(r#"{"prompt": "x", "k": -1}"#).is_err());
         assert!(parse_request(r#"{"prompt": "x", "speculative": -8}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "draft": -4}"#).is_err());
         assert!(parse_request(r#"{"prompt": "x", "max_tokens": -5}"#).is_err());
         assert!(parse_request(r#"{"prompt": "x", "seed": -7}"#).is_err());
         assert!(parse_request(r#"{"prompt": "x", "deadline_ms": -100}"#).is_err());
@@ -590,6 +726,8 @@ mod tests {
             warm_start_ms: 12,
             forward_batches: 3,
             forward_rows: 9,
+            draft_proposed: 4,
+            draft_accepted: 2,
             ..Default::default()
         };
         m.batch_size.record(3.0);
@@ -603,6 +741,9 @@ mod tests {
         assert_eq!(v.get("artifact_hits").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(v.get("artifact_invalid").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(v.get("warm_start_ms").unwrap().as_f64().unwrap(), 12.0);
+        assert_eq!(v.get("draft_proposed").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(v.get("draft_accepted").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("draft_accept_rate").unwrap().as_f64().unwrap(), 0.5);
         // Empty summaries serialize as null, not NaN (which isn't JSON).
         assert_eq!(v.get("ttft_p50_s"), Some(&Json::Null));
     }

@@ -1,6 +1,6 @@
 //! Batched cross-slot stepping: token parity with the per-slot path
-//! (plain, speculative, healing-phase slots in one batch), degenerate
-//! single-slot batches, and per-slot failure isolation.
+//! (plain, speculative, drafted and healing-phase slots in one batch),
+//! degenerate single-slot batches, and per-slot failure isolation.
 
 use domino::constraint::{Constraint, ConstraintSpec};
 use domino::domino::generate::Prompt;
@@ -25,6 +25,10 @@ fn mixed_shapes() -> Vec<(Constraint, &'static str)> {
         // Healing phase: the prompt ends mid-token, so admission forces a
         // byte prefix and the slot starts with an output overhang.
         (Constraint::domino(json.clone()).with_speculation(8), "{\"na"),
+        // Drafted: grammar-pruned multi-token proposals from the prior.
+        (Constraint::domino(json.clone()).with_draft(6), ""),
+        // Drafted with a healing phase.
+        (Constraint::domino(json.clone()).with_draft(3), "{\"na"),
         // Full-mask variant.
         (Constraint::domino(json).with_full_mask(), ""),
         // Unconstrained.
@@ -203,13 +207,82 @@ fn mid_batch_slot_error_does_not_poison_siblings() {
 }
 
 #[test]
+fn drafted_mix_survives_mid_batch_lane_failure() {
+    // ISSUE 7 bar: drafted, speculative and plain slots share one batched
+    // tick; a drafted lane dying mid-decode must not perturb any sibling.
+    let (vocab, model) = json_mock(512);
+    let backend = MockFactory { model: model.clone() };
+    let mut ctx = EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab.clone());
+    let json = ConstraintSpec::builtin("json");
+    let shapes = [
+        (Constraint::domino(json.clone()).with_draft(6), ""),
+        (Constraint::domino(json.clone()).with_speculation(8), ""),
+        (Constraint::domino(json.clone()), ""),
+    ];
+    // Reference: the three healthy lanes batched, no failure injected.
+    let mut want = make_slots(&mut ctx, &shapes, 3);
+    run_batched(&backend, &mut want);
+
+    // Same three + a drafted slot whose session dies mid-decode.
+    let mut slots = make_slots(&mut ctx, &shapes, 3);
+    let failing_mode = ctx.decode_mode(&shapes[0].0).unwrap();
+    let failing_session = Box::new(FailingSession {
+        inner: ctx.backend.new_session().unwrap(),
+        calls: 0,
+        fail_after: 4,
+    });
+    let prompt = Prompt::healed(&vocab, "");
+    slots.push(
+        Slot::new(
+            99,
+            failing_session,
+            failing_mode,
+            vocab,
+            &prompt,
+            Sampling::Temperature(1.0),
+            MAX_TOKENS,
+            99,
+        )
+        .unwrap(),
+    );
+
+    let mut failed = false;
+    for _ in 0..(MAX_TOKENS * 4) {
+        if slots.iter().all(|s| s.done) {
+            break;
+        }
+        let mut view: Vec<&mut Slot> = slots.iter_mut().collect();
+        let tick = step_batched(&backend, &mut view);
+        for (i, r) in tick.results.iter().enumerate() {
+            if let Err(e) = r {
+                assert_eq!(i, 3, "only the failing drafted slot may error");
+                assert!(format!("{e:#}").contains("injected model failure"), "{e:#}");
+                failed = true;
+            }
+        }
+    }
+    assert!(failed, "the injected failure must surface");
+    assert!(slots[3].done, "failing slot must be retired");
+    let mut drafted_work = 0usize;
+    for (i, (got, ref_slot)) in slots.iter().take(3).zip(&want).enumerate() {
+        assert!(got.done, "sibling {i} must finish");
+        assert_eq!(got.text(), ref_slot.text(), "sibling {i} output changed");
+        assert!(!got.text().is_empty(), "sibling {i} must produce output");
+        drafted_work += got.stats.draft_proposed;
+    }
+    // The drafted sibling actually exercised the draft lane (the shared
+    // prior was trained by the reference run above).
+    assert!(drafted_work > 0, "drafted sibling never proposed");
+}
+
+#[test]
 fn server_batched_output_matches_manual_per_slot() {
     let (vocab, model) = json_mock(512);
     // Manual per-slot reference with the same request parameters the
     // server maps at admission (healed prompt, temperature, seed).
     let mut ctx = EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab.clone());
     let shapes = mixed_shapes();
-    let mut reference = make_slots(&mut ctx, &shapes, 5);
+    let mut reference = make_slots(&mut ctx, &shapes, shapes.len());
     run_per_slot(&mut reference);
 
     let server = {

@@ -18,6 +18,10 @@
 //!    (`apply`/`intersect`/`and_not`/`iter`) are bit-identical to scalar
 //!    references at word-edge sizes, and the sharded mask cache loses no
 //!    updates under concurrent mixed load.
+//! 8. **Drafted ≡ plain ≡ speculative decoding**: the grammar-pruned
+//!    draft lane is acceptance-or-correction over the model's own
+//!    choices, so committed token streams are identical under any seed,
+//!    grammar, draft depth, prune ordering and sampling mode.
 
 use domino::baselines::OnlineChecker;
 use domino::constraint::ConstraintSpec;
@@ -113,6 +117,77 @@ fn prop_online_equals_domino_infinite() {
             dom.advance(t).unwrap();
             online.advance(t).unwrap();
         }
+    });
+}
+
+#[test]
+fn prop_drafted_decode_token_identical() {
+    // The draft lane is acceptance-or-correction over the model's own
+    // choices: under any seed, grammar, draft depth, prune ordering and
+    // sampling mode, drafted output must be byte-identical to plain
+    // decoding AND to undrafted speculative decoding of the same seed.
+    use domino::domino::generate::Prompt;
+    use domino::domino::{
+        generate, generate_drafted, generate_speculative, GenConfig, MaskMode, SpeculativeModel,
+    };
+    use domino::runtime::mock::{json_mock, MockLm};
+    use domino::runtime::sampler::Sampling;
+
+    let (vocab, model) = json_mock(512);
+    let engines = [
+        Engine::compile(builtin::gsm8k_schema(), vocab.clone()).unwrap(),
+        Engine::compile(builtin::json(), vocab.clone()).unwrap(),
+        Engine::compile(builtin::fig3_expr(), vocab.clone()).unwrap(),
+    ];
+    check("drafted-token-identical", 10, |rng| {
+        let engine = engines[rng.below(engines.len())].clone();
+        let seed = rng.below(1 << 20) as u64;
+        let k_max = 1 + rng.below(8);
+        let prune = rng.chance(0.5);
+        let sampling =
+            if rng.chance(0.5) { Sampling::Greedy } else { Sampling::Temperature(1.0) };
+        let cfg = GenConfig { max_tokens: 40, sampling, mode: MaskMode::Opportunistic };
+        let prompt = Prompt::default();
+        let ctx = format!("seed={seed} k_max={k_max} prune={prune} sampling={sampling:?}");
+
+        let mut lm = MockLm::new(model.clone());
+        let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let plain =
+            generate(&mut lm, &mut dec, &vocab, &prompt, &cfg, &mut Rng::new(seed)).unwrap();
+
+        // Warm a prior with a learning run of the same seed, then freeze
+        // it so the measured runs share one deterministic proposer.
+        let mut spec = SpeculativeModel::new(0.5);
+        {
+            let mut lm = MockLm::new(model.clone());
+            let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+            let mut r = Rng::new(seed);
+            generate_drafted(
+                &mut lm, &mut dec, &mut spec, &vocab, &prompt, k_max, prune, &cfg, &mut r,
+            )
+            .unwrap();
+        }
+        spec.frozen = true;
+
+        let mut lm = MockLm::new(model.clone());
+        let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let mut r = Rng::new(seed);
+        let drafted = generate_drafted(
+            &mut lm, &mut dec, &mut spec, &vocab, &prompt, k_max, prune, &cfg, &mut r,
+        )
+        .unwrap();
+        assert_eq!(plain.tokens, drafted.tokens, "drafted != plain ({ctx})");
+        assert_eq!(plain.text_bytes, drafted.text_bytes, "{ctx}");
+
+        let mut lm = MockLm::new(model.clone());
+        let mut dec = DominoDecoder::new(engine.clone(), Lookahead::Infinite);
+        let mut r = Rng::new(seed);
+        let specd = generate_speculative(
+            &mut lm, &mut dec, &mut spec, &vocab, &prompt, 8, &cfg, &mut r,
+        )
+        .unwrap();
+        assert_eq!(drafted.tokens, specd.tokens, "drafted != speculative ({ctx})");
+        assert_eq!(drafted.text_bytes, specd.text_bytes, "{ctx}");
     });
 }
 

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Documentation checks: markdown link integrity + PROTOCOL drift.
+
+Stdlib-only (like bench_check.py) so it runs before the Rust toolchain
+is even installed:
+
+1. Every relative markdown link in the repo's .md files must resolve to
+   an existing file (anchors are stripped; http(s)/mailto links are not
+   fetched).
+2. Every wire field documented in rust/PROTOCOL.md's tables must appear
+   as a quoted string in rust/src/server/tcp.rs. This duplicates the
+   tier-1 test in rust/tests/docs_drift.rs on purpose: the Python copy
+   catches drift in docs-only PRs that skip the Rust jobs.
+
+Usage: check_docs.py [repo_root]
+Exit 0 when clean, 1 with a per-problem report otherwise.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FIELD_ROW_RE = re.compile(r"^\| `([a-z0-9_]+)`")
+SKIP_DIRS = {".git", "target", "node_modules"}
+
+
+def md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks — their bracketed text is not links."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_links(root: Path) -> list:
+    problems = []
+    for path in md_files(root):
+        for target in LINK_RE.findall(strip_code_blocks(path.read_text())):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            resolved = (path.parent / target.split("#", 1)[0]).resolve()
+            if not resolved.exists():
+                rel = path.relative_to(root)
+                problems.append(f"{rel}: broken link -> {target}")
+    return problems
+
+
+def check_protocol_fields(root: Path) -> list:
+    protocol = root / "rust" / "PROTOCOL.md"
+    tcp = root / "rust" / "src" / "server" / "tcp.rs"
+    if not protocol.exists() or not tcp.exists():
+        return [f"missing {protocol} or {tcp}"]
+    tcp_src = tcp.read_text()
+    fields = [
+        m.group(1)
+        for line in protocol.read_text().splitlines()
+        if (m := FIELD_ROW_RE.match(line))
+    ]
+    problems = []
+    if len(fields) < 25:
+        problems.append(
+            f"PROTOCOL.md: extracted only {len(fields)} fields — table format drift?"
+        )
+    for field in fields:
+        if f'"{field}"' not in tcp_src:
+            problems.append(f"PROTOCOL.md documents `{field}` but tcp.rs never names it")
+    return problems
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    problems = check_links(root) + check_protocol_fields(root)
+    for problem in problems:
+        print(f"FAIL {problem}")
+    if problems:
+        print(f"\n{len(problems)} documentation problem(s)")
+        return 1
+    count = sum(1 for _ in md_files(root))
+    print(f"docs OK: {count} markdown files, links resolve, PROTOCOL matches tcp.rs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,9 +16,72 @@ use domino::runtime::mock::{json_mock, MockFactory};
 use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
 use domino::server::engine::{EngineCtx, GenRequest};
 use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::server::tcp;
 use domino::util::bench::Table;
 use domino::util::Rng;
-use std::time::Instant;
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The tenants the workload is billed to (alternating), so the metrics
+/// endpoint below has per-tenant series to prove out.
+const TENANTS: [&str; 2] = ["interactive", "batch"];
+
+/// Scrape `GET /metrics` from the example's own exporter and assert the
+/// Prometheus exposition is well-formed and carries per-tenant labeled
+/// counters — the end-to-end observability proof (CI runs this example,
+/// so drift here fails the pipeline).
+fn check_metrics_endpoint(addr: std::net::SocketAddr) -> domino::Result<()> {
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(conn, "GET /metrics HTTP/1.1\r\nHost: {addr}\r\n\r\n")?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("no header/body split in scrape reply"))?;
+    anyhow::ensure!(head.starts_with("HTTP/1.1 200"), "scrape status: {head}");
+    anyhow::ensure!(
+        head.contains("text/plain; version=0.0.4"),
+        "scrape content type: {head}"
+    );
+    for needle in [
+        "# HELP domino_requests_total ",
+        "# TYPE domino_requests_total counter",
+        "# TYPE domino_queue_wait_seconds histogram",
+        "domino_queue_wait_seconds_bucket{le=\"+Inf\"}",
+        "# TYPE domino_tick_seconds histogram",
+        "# TYPE domino_batch_width histogram",
+        "domino_tenant_requests_total{tenant=\"interactive\",outcome=\"completed\"}",
+        "domino_tenant_requests_total{tenant=\"batch\",outcome=\"completed\"}",
+        "domino_tenant_queue_wait_seconds_count{tenant=\"interactive\"}",
+        "domino_grammar_requests_total{grammar=\"",
+    ] {
+        anyhow::ensure!(body.contains(needle), "missing `{needle}` in /metrics scrape");
+    }
+    println!(
+        "metrics endpoint OK: {} bytes, {} series lines, per-tenant labels present",
+        body.len(),
+        body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count()
+    );
+    Ok(())
+}
+
+/// Recover sole ownership of the scheduler for shutdown: a scrape
+/// handler thread may still hold a short-lived strong clone right after
+/// its response is read, so retry briefly.
+fn into_inner(mut server: Arc<Scheduler>) -> Option<Scheduler> {
+    for _ in 0..100 {
+        match Arc::try_unwrap(server) {
+            Ok(s) => return Some(s),
+            Err(again) => {
+                server = again;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    None
+}
 
 fn main() -> domino::Result<()> {
     let have_artifacts = artifacts_dir().join("model_config.json").exists();
@@ -75,6 +138,12 @@ fn main() -> domino::Result<()> {
         )
     };
 
+    // Shared ownership: the Prometheus exporter scrapes the same
+    // scheduler the workload runs on.
+    let server = Arc::new(server);
+    let metrics_addr = tcp::spawn_metrics_http(server.clone(), "127.0.0.1:0")?;
+    eprintln!("metrics endpoint: http://{metrics_addr}/metrics");
+
     // Warm the PJRT executables (first executions trigger TFRT lazy
     // initialization and would otherwise penalize the first method).
     let _ = server.generate(GenRequest {
@@ -129,6 +198,7 @@ fn main() -> domino::Result<()> {
                 max_tokens: 96,
                 temperature: None,
                 seed: rng.next_u64(),
+                tenant: Some(TENANTS[i % TENANTS.len()].to_string()),
                 ..Default::default()
             };
             tasks.push(task);
@@ -172,6 +242,10 @@ fn main() -> domino::Result<()> {
     table.print();
     let m = server.metrics()?;
     println!("\nengine metrics (all shards): {}", m.report());
-    server.shutdown();
+    check_metrics_endpoint(metrics_addr)?;
+    match into_inner(server) {
+        Some(server) => server.shutdown(),
+        None => eprintln!("warn: scrape handler still live; skipping explicit shutdown"),
+    }
     Ok(())
 }

@@ -442,6 +442,131 @@ pub fn eval_throughput(
     Ok(row)
 }
 
+/// One tenant's view of a [`run_contention`] scenario.
+#[derive(Clone, Debug, Default)]
+pub struct TenantOutcome {
+    pub submitted: usize,
+    pub completed: usize,
+    /// Requests shed at admission (queue full or quota).
+    pub shed: u64,
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p99_ms: f64,
+}
+
+/// Multi-tenant contention scenario shape. The hot tenant floods the
+/// scheduler with a backlog submitted *before* the cold tenant's
+/// requests — the worst case for FIFO drain, and exactly what the
+/// weighted-fair queue is supposed to absorb.
+#[derive(Clone, Debug)]
+pub struct ContentionConfig {
+    pub hot_n: usize,
+    pub cold_n: usize,
+    /// Deficit-round-robin weight for the cold tenant (hot stays at 1).
+    pub cold_weight: u32,
+    pub max_tokens: usize,
+    pub slots: usize,
+    pub queue_depth: usize,
+}
+
+impl Default for ContentionConfig {
+    fn default() -> Self {
+        ContentionConfig {
+            hot_n: 0,
+            cold_n: 16,
+            cold_weight: 1,
+            max_tokens: 32,
+            slots: 4,
+            queue_depth: 4096,
+        }
+    }
+}
+
+fn contention_request(
+    tenant: &str,
+    max_tokens: usize,
+    seed: u64,
+) -> crate::server::engine::GenRequest {
+    crate::server::engine::GenRequest {
+        prompt: String::new(),
+        constraint: crate::constraint::Constraint::domino(ConstraintSpec::builtin("json")),
+        max_tokens,
+        temperature: Some(1.0),
+        seed,
+        tenant: Some(tenant.to_string()),
+        ..Default::default()
+    }
+}
+
+/// Run the multi-tenant contention scenario on the mock runtime (one
+/// engine shard, so every request contends for the same slots) and
+/// return `(hot, cold)` outcomes with per-tenant queue-wait percentiles
+/// from the scheduler's own metrics. With `hot_n = 0` this doubles as
+/// the cold tenant's solo baseline.
+pub fn run_contention(cfg: &ContentionConfig) -> crate::Result<(TenantOutcome, TenantOutcome)> {
+    use crate::runtime::mock::MockFactory;
+    use crate::server::engine::EngineCtx;
+    use crate::server::scheduler::{Scheduler, SchedulerConfig, TenantPolicy};
+
+    let (vocab, model) = json_mock(512);
+    let mut weights = std::collections::HashMap::new();
+    weights.insert("cold".to_string(), cfg.cold_weight);
+    let sched = Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(MockFactory { model: model.clone() }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        SchedulerConfig {
+            engines: 1,
+            slots_per_engine: cfg.slots,
+            queue_depth: cfg.queue_depth,
+            tenants: TenantPolicy { weights, ..Default::default() },
+            ..SchedulerConfig::default()
+        },
+    );
+    // Warm the grammar compile (default tenant) so queue waits measure
+    // scheduling, not compilation.
+    let _ = sched.generate(contention_request("warmup", 2, 0));
+
+    // Hot backlog first, then the cold tenant arrives behind it.
+    let hot_handles: Vec<_> = (0..cfg.hot_n)
+        .map(|i| sched.submit(contention_request("hot", cfg.max_tokens, i as u64)))
+        .collect();
+    let cold_handles: Vec<_> = (0..cfg.cold_n)
+        .map(|i| sched.submit(contention_request("cold", cfg.max_tokens, 1000 + i as u64)))
+        .collect();
+
+    let completed = |handles: &[crate::server::scheduler::RequestHandle]| {
+        handles.iter().filter(|h| h.recv().map(|r| r.error.is_none()).unwrap_or(false)).count()
+    };
+    let (hot_ok, cold_ok) = (completed(&hot_handles), completed(&cold_handles));
+
+    let m = sched.metrics()?;
+    let outcome = |tenant: &str, submitted: usize, ok: usize| {
+        let (shed, p50, p99) = match m.tenants.get(tenant) {
+            Some(t) => (
+                t.shed,
+                t.queue_wait.percentile(0.5) * 1e3,
+                t.queue_wait.percentile(0.99) * 1e3,
+            ),
+            None => (0, 0.0, 0.0),
+        };
+        TenantOutcome {
+            submitted,
+            completed: ok,
+            shed,
+            queue_wait_p50_ms: p50,
+            queue_wait_p99_ms: p99,
+        }
+    };
+    let hot = outcome("hot", cfg.hot_n, hot_ok);
+    let cold = outcome("cold", cfg.cold_n, cold_ok);
+    sched.shutdown();
+    Ok((hot, cold))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -508,6 +633,26 @@ mod tests {
         )
         .unwrap();
         assert!(row.tokens > 0);
+    }
+
+    #[test]
+    fn contention_scenario_reports_tenant_percentiles() {
+        let cfg = ContentionConfig {
+            hot_n: 8,
+            cold_n: 2,
+            cold_weight: 4,
+            max_tokens: 8,
+            ..Default::default()
+        };
+        let (hot, cold) = run_contention(&cfg).unwrap();
+        assert_eq!((hot.completed, cold.completed), (8, 2), "{hot:?} {cold:?}");
+        assert_eq!(hot.shed + cold.shed, 0, "deep queue must not shed");
+        assert!(cold.queue_wait_p99_ms >= 0.0 && cold.queue_wait_p99_ms.is_finite());
+        // Solo baseline shape: no hot lane at all.
+        let solo = ContentionConfig { hot_n: 0, cold_n: 2, max_tokens: 8, ..cfg };
+        let (hot, cold) = run_contention(&solo).unwrap();
+        assert_eq!((hot.submitted, hot.completed), (0, 0));
+        assert_eq!(cold.completed, 2);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! domino serve [--addr 127.0.0.1:7761] [--engines 1] [--slots 4]
 //!              [--queue-depth 64] [--deadline-ms N] [--artifact-dir DIR]
 //!              [--lazy-compile] [--draft K] [--mock]
+//!              [--metrics-port P] [--tenant-rate R] [--tenant-burst B]
+//!              [--tenant-weights "a=4,b=1"]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --json-schema SRC |
 //!                 --json-schema-file PATH | --regex PATTERN | --stop "a,b"]
@@ -16,7 +18,15 @@
 //!                 [--k N] [--mock]   # batch-compile constraints offline
 //! domino grammar <name>         # inspect: terminals, tree sizes, precompute time
 //! domino grammars               # list builtin grammars
+//! domino metrics-doc            # print docs/METRICS.md from the metric registry
 //! ```
+//!
+//! `--metrics-port P` (or `$DOMINO_METRICS_PORT`) serves the Prometheus
+//! scrape endpoint (`GET /metrics`, plus `GET /healthz`) on
+//! `0.0.0.0:P`. `--tenant-rate R` caps each tenant at R admissions/s
+//! (token bucket, burst `--tenant-burst B`, default `max(R, 1)`);
+//! `--tenant-weights "a=4,b=1"` sets deficit-round-robin drain weights
+//! (unlisted tenants weigh 1). See `rust/OPERATIONS.md`.
 //!
 //! `--engines N` shards the server across N engine threads sharing one
 //! compiled-grammar registry (grammar-affinity routing, bounded queues
@@ -46,7 +56,7 @@ use domino::runtime::mock::{json_mock, MockFactory};
 use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
 use domino::scanner::Scanner;
 use domino::server::engine::{EngineCtx, GenRequest};
-use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::server::scheduler::{Scheduler, SchedulerConfig, TenantPolicy};
 use domino::server::tcp;
 use domino::util::Json;
 use std::collections::HashMap;
@@ -84,6 +94,42 @@ fn constraint_artifact_dir(flags: &HashMap<String, String>) -> Option<PathBuf> {
         .or_else(|| std::env::var_os("DOMINO_ARTIFACT_DIR").map(PathBuf::from))
 }
 
+/// `--tenant-weights "a=4,b=1"`: deficit-round-robin drain weights per
+/// tenant (unlisted tenants weigh 1; weights are clamped ≥ 1 at drain).
+fn parse_tenant_weights(s: &str) -> domino::Result<HashMap<String, u32>> {
+    let mut weights = HashMap::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (tenant, w) = part.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--tenant-weights entries must look like `tenant=N`, got `{part}`")
+        })?;
+        let w: u32 = w.trim().parse().map_err(|_| {
+            anyhow::anyhow!("--tenant-weights: weight for `{tenant}` must be an integer, got `{w}`")
+        })?;
+        weights.insert(tenant.trim().to_string(), w);
+    }
+    Ok(weights)
+}
+
+/// The per-tenant admission policy from `--tenant-rate` / `--tenant-burst`
+/// / `--tenant-weights` (all optional; absent = no quota, FIFO-equivalent
+/// fairness with every tenant at weight 1).
+fn parse_tenant_policy(flags: &HashMap<String, String>) -> domino::Result<TenantPolicy> {
+    let num = |name: &str| -> domino::Result<Option<f64>> {
+        match flags.get(name) {
+            None => Ok(None),
+            Some(s) => match s.parse::<f64>() {
+                Ok(f) if f.is_finite() && f >= 0.0 => Ok(Some(f)),
+                _ => anyhow::bail!("--{name} must be a non-negative number, got `{s}`"),
+            },
+        }
+    };
+    let weights = match flags.get("tenant-weights") {
+        Some(s) => parse_tenant_weights(s)?,
+        None => HashMap::new(),
+    };
+    Ok(TenantPolicy { rate: num("tenant-rate")?, burst: num("tenant-burst")?, weights })
+}
+
 fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler> {
     let mock = flags.contains_key("mock");
     let cfg = SchedulerConfig {
@@ -97,6 +143,7 @@ fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler>
         artifact_dir: constraint_artifact_dir(flags),
         lazy_compile: flags.contains_key("lazy-compile")
             || std::env::var_os("DOMINO_LAZY_COMPILE").is_some_and(|v| v != "0"),
+        tenants: parse_tenant_policy(flags)?,
         ..SchedulerConfig::default()
     };
     // One vocab Arc shared by every shard (registry keys hash the vocab
@@ -393,8 +440,28 @@ fn main() {
             Ok((draft, sched))
         }) {
             Ok((draft, sched)) => {
-                let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
-                tcp::serve(sched, &addr, tcp::ServeDefaults { draft })
+                let sched = std::sync::Arc::new(sched);
+                let metrics_port = flags
+                    .get("metrics-port")
+                    .cloned()
+                    .or_else(|| std::env::var("DOMINO_METRICS_PORT").ok());
+                let metrics = metrics_port.map(|p| {
+                    tcp::spawn_metrics_http(sched.clone(), &format!("0.0.0.0:{p}"))
+                });
+                match metrics {
+                    Some(Err(e)) => Err(e.context("binding --metrics-port")),
+                    Some(Ok(addr)) => {
+                        eprintln!("domino: metrics on http://{addr}/metrics");
+                        let addr =
+                            flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
+                        tcp::serve(sched, &addr, tcp::ServeDefaults { draft })
+                    }
+                    None => {
+                        let addr =
+                            flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
+                        tcp::serve(sched, &addr, tcp::ServeDefaults { draft })
+                    }
+                }
             }
             Err(e) => Err(e),
         },
@@ -410,13 +477,22 @@ fn main() {
             }
             Ok(())
         }
+        // Regenerate the metrics reference from the in-code registry:
+        //   cargo run --release -- metrics-doc > ../docs/METRICS.md
+        "metrics-doc" => {
+            print!("{}", domino::server::metrics::metrics_doc());
+            Ok(())
+        }
         _ => {
             eprintln!(
-                "usage: domino <serve|generate|precompile|grammar|grammars> [flags]\n\
+                "usage: domino <serve|generate|precompile|grammar|grammars|metrics-doc> [flags]\n\
                  \n\
                  serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
                  \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--lazy-compile]\n\
                  \u{20}          [--draft K] [--mock]\n\
+                 \u{20}          [--metrics-port P] Prometheus /metrics on 0.0.0.0:P\n\
+                 \u{20}          [--tenant-rate R] [--tenant-burst B] per-tenant admission quota\n\
+                 \u{20}          [--tenant-weights \"a=4,b=1\"] weighted-fair queue drain\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --json-schema SRC | --json-schema-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
@@ -431,6 +507,8 @@ fn main() {
                  \u{20}          (servers with the same --artifact-dir then boot warm)\n\
                  grammar   NAME    inspect a builtin grammar\n\
                  grammars          list builtin grammars\n\
+                 metrics-doc       print the metrics reference (docs/METRICS.md) from\n\
+                 \u{20}          the in-code registry\n\
                  \n\
                  --artifact-dir defaults to $DOMINO_ARTIFACT_DIR when unset."
             );

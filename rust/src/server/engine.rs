@@ -62,6 +62,21 @@ pub struct GenRequest {
     /// attaches a per-step token sink when set. In-process callers use
     /// [`Scheduler::submit_streaming`] directly.
     pub stream: bool,
+    /// Accounting/fairness identity (the wire `tenant` field). Drives
+    /// per-tenant quota admission, weighted-fair queue drain, and the
+    /// `tenant` label on exported metrics. `None` lands under
+    /// [`DEFAULT_TENANT`].
+    pub tenant: Option<String>,
+}
+
+/// Tenant label for requests that omit the wire `tenant` field.
+pub const DEFAULT_TENANT: &str = "default";
+
+impl GenRequest {
+    /// The tenant label this request is accounted under.
+    pub fn tenant_label(&self) -> &str {
+        self.tenant.as_deref().unwrap_or(DEFAULT_TENANT)
+    }
 }
 
 impl Default for GenRequest {
@@ -74,6 +89,7 @@ impl Default for GenRequest {
             seed: 0,
             deadline: None,
             stream: false,
+            tenant: None,
         }
     }
 }
@@ -84,6 +100,12 @@ pub struct GenResponse {
     pub text: String,
     pub stats: SlotStats,
     pub error: Option<String>,
+    /// Machine-readable cause accompanying `error` for aborts and sheds
+    /// (`client_cancel`, `client_disconnect`, `queued`, `decoding`,
+    /// `queue_full`, `tenant_quota`). `None` for successes and plain
+    /// failures. Travels on the wire as the response `reason` field and
+    /// feeds `domino_requests_aborted_total{kind,reason}`.
+    pub reason: Option<String>,
     /// Wall time spent generating, seconds.
     pub elapsed_s: f64,
 }
@@ -94,13 +116,23 @@ impl GenResponse {
             text: String::new(),
             stats: SlotStats::default(),
             error: Some(error.into()),
+            reason: None,
             elapsed_s: 0.0,
         }
     }
 
-    /// The structured reply for load-shed requests.
-    pub(super) fn overloaded() -> GenResponse {
-        GenResponse::failure("overloaded")
+    pub(super) fn failure_with_reason(
+        error: impl Into<String>,
+        reason: impl Into<String>,
+    ) -> GenResponse {
+        GenResponse { reason: Some(reason.into()), ..GenResponse::failure(error) }
+    }
+
+    /// The structured reply for load-shed requests. `reason` says which
+    /// limit shed it: `queue_full` (every eligible shard's queue at
+    /// capacity) or `tenant_quota` (token-bucket admission).
+    pub(super) fn overloaded(reason: &str) -> GenResponse {
+        GenResponse::failure_with_reason("overloaded", reason)
     }
 }
 
@@ -306,27 +338,56 @@ impl Work {
     /// deadline)? Returns the abort reason when so.
     pub(super) fn dead_reason(&self) -> Option<Abort> {
         if self.cancel.load(Ordering::Relaxed) {
-            return Some(Abort::Cancelled);
+            return Some(Abort::Cancelled { disconnect: false });
         }
         match self.deadline {
-            Some(d) if Instant::now() >= d => Some(Abort::DeadlineExceeded),
+            Some(d) if Instant::now() >= d => Some(Abort::DeadlineExceeded { queued: true }),
             _ => None,
         }
     }
 }
 
-/// Why a request was aborted without running to completion.
+/// Why a request was aborted without running to completion. The wire
+/// `error` string stays coarse (`cancelled` / `deadline exceeded`, as it
+/// always was); the structured `reason()` distinguishes the cause for
+/// the wire `reason` field and the abort-reason metrics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub(super) enum Abort {
-    Cancelled,
-    DeadlineExceeded,
+    Cancelled {
+        /// True when the abort came from the front end observing the
+        /// client socket close rather than an explicit cancel.
+        disconnect: bool,
+    },
+    DeadlineExceeded {
+        /// True when the deadline expired while the request was still
+        /// queued (never admitted to a slot).
+        queued: bool,
+    },
 }
 
 impl Abort {
     fn message(self) -> &'static str {
         match self {
-            Abort::Cancelled => "cancelled",
-            Abort::DeadlineExceeded => "deadline exceeded",
+            Abort::Cancelled { .. } => "cancelled",
+            Abort::DeadlineExceeded { .. } => "deadline exceeded",
+        }
+    }
+
+    /// Abort kind label (`domino_requests_aborted_total{kind=...}`).
+    pub(super) fn kind(self) -> &'static str {
+        match self {
+            Abort::Cancelled { .. } => "cancelled",
+            Abort::DeadlineExceeded { .. } => "deadline",
+        }
+    }
+
+    /// Structured cause (`reason` on the wire and in the exporter).
+    pub(super) fn reason(self) -> &'static str {
+        match self {
+            Abort::Cancelled { disconnect: false } => "client_cancel",
+            Abort::Cancelled { disconnect: true } => "client_disconnect",
+            Abort::DeadlineExceeded { queued: true } => "queued",
+            Abort::DeadlineExceeded { queued: false } => "decoding",
         }
     }
 }
@@ -341,6 +402,11 @@ struct Active {
     /// A response was already sent (step error or abort); `reap` must
     /// not send a second one.
     responded: bool,
+    /// Tenant label this request is accounted under.
+    tenant: String,
+    /// Constraint fingerprint (hex) for per-grammar metrics; `None` for
+    /// unconstrained requests.
+    grammar: Option<String>,
 }
 
 /// One engine shard's state: the model context, the active slots, and the
@@ -378,11 +444,19 @@ impl EngineCore {
     /// Answer `work` without admitting it (pre-admission cancellation,
     /// deadline expiry in the queue).
     pub(super) fn reject(&mut self, work: Work, abort: Abort) {
+        let tenant = work.req.tenant_label();
         match abort {
-            Abort::Cancelled => self.metrics.requests_cancelled += 1,
-            Abort::DeadlineExceeded => self.metrics.requests_deadline_exceeded += 1,
+            Abort::Cancelled { .. } => {
+                self.metrics.requests_cancelled += 1;
+                self.metrics.tenant(tenant).cancelled += 1;
+            }
+            Abort::DeadlineExceeded { .. } => {
+                self.metrics.requests_deadline_exceeded += 1;
+                self.metrics.tenant(tenant).deadline_exceeded += 1;
+            }
         }
-        let _ = work.resp.send(GenResponse::failure(abort.message()));
+        self.metrics.record_abort(abort.kind(), abort.reason());
+        let _ = work.resp.send(GenResponse::failure_with_reason(abort.message(), abort.reason()));
     }
 
     /// Admit one request into a free slot: resolve the constraint through
@@ -395,7 +469,17 @@ impl EngineCore {
             return;
         }
         let Work { req, resp, sink, cancel, enqueued, deadline } = work;
-        self.metrics.queue_wait.record(enqueued.elapsed().as_secs_f64());
+        let tenant = req.tenant_label().to_string();
+        let grammar = match &req.constraint.spec {
+            ConstraintSpec::Unconstrained => None,
+            spec => Some(format!("{:016x}", spec.fingerprint())),
+        };
+        let wait = enqueued.elapsed().as_secs_f64();
+        self.metrics.queue_wait.record(wait);
+        self.metrics.tenant(&tenant).queue_wait.record(wait);
+        if let Some(fp) = &grammar {
+            self.metrics.grammar(fp).requests += 1;
+        }
         self.next_id += 1;
         let next_id = self.next_id;
         let ctx = &mut self.ctx;
@@ -431,10 +515,13 @@ impl EngineCore {
                     started: Instant::now(),
                     first_token_at: None,
                     responded: false,
+                    tenant,
+                    grammar,
                 });
             }
             Err(e) => {
                 self.metrics.requests_failed += 1;
+                self.metrics.tenant(&tenant).failed += 1;
                 let _ = resp.send(GenResponse::failure(format!("{e:#}")));
             }
         }
@@ -454,10 +541,12 @@ impl EngineCore {
             if a.slot.done {
                 continue;
             }
-            let abort = if a.cancel.load(Ordering::Relaxed) || a.slot.client_gone() {
-                Some(Abort::Cancelled)
+            let abort = if a.cancel.load(Ordering::Relaxed) {
+                Some(Abort::Cancelled { disconnect: false })
+            } else if a.slot.client_gone() {
+                Some(Abort::Cancelled { disconnect: true })
             } else if a.deadline.map_or(false, |d| Instant::now() >= d) {
-                Some(Abort::DeadlineExceeded)
+                Some(Abort::DeadlineExceeded { queued: false })
             } else {
                 None
             };
@@ -465,14 +554,22 @@ impl EngineCore {
                 a.slot.abort();
                 a.slot.finish_stream();
                 match abort {
-                    Abort::Cancelled => self.metrics.requests_cancelled += 1,
-                    Abort::DeadlineExceeded => self.metrics.requests_deadline_exceeded += 1,
+                    Abort::Cancelled { .. } => {
+                        self.metrics.requests_cancelled += 1;
+                        self.metrics.tenant(&a.tenant).cancelled += 1;
+                    }
+                    Abort::DeadlineExceeded { .. } => {
+                        self.metrics.requests_deadline_exceeded += 1;
+                        self.metrics.tenant(&a.tenant).deadline_exceeded += 1;
+                    }
                 }
+                self.metrics.record_abort(abort.kind(), abort.reason());
                 a.responded = true;
                 let _ = a.resp.send(GenResponse {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: Some(abort.message().into()),
+                    reason: Some(abort.reason().into()),
                     elapsed_s: a.started.elapsed().as_secs_f64(),
                 });
                 continue;
@@ -505,6 +602,7 @@ impl EngineCore {
             self.metrics.forward_batches += 1;
             self.metrics.forward_rows += tick.rows as u64;
             self.metrics.batch_size.record(tick.lanes as f64);
+            self.metrics.tick_time.record(t0.elapsed().as_secs_f64());
         }
         // Per-slot bookkeeping: answer failures, count fresh tokens.
         for ((&i, result), &(before_tokens, before_calls)) in
@@ -513,6 +611,7 @@ impl EngineCore {
             let a = &mut self.active[i];
             if let Err(e) = result {
                 self.metrics.requests_failed += 1;
+                self.metrics.tenant(&a.tenant).failed += 1;
                 a.slot.done = true;
                 a.slot.finish_stream();
                 a.responded = true;
@@ -520,11 +619,17 @@ impl EngineCore {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: Some(format!("{e:#}")),
+                    reason: None,
                     elapsed_s: a.started.elapsed().as_secs_f64(),
                 });
                 continue;
             }
-            self.metrics.tokens_generated += (a.slot.stats.tokens_out - before_tokens) as u64;
+            let fresh = (a.slot.stats.tokens_out - before_tokens) as u64;
+            self.metrics.tokens_generated += fresh;
+            self.metrics.tenant(&a.tenant).tokens_generated += fresh;
+            if let Some(fp) = &a.grammar {
+                self.metrics.grammar(fp).tokens_generated += fresh;
+            }
             self.metrics.model_calls += (a.slot.stats.model_calls - before_calls) as u64;
             if a.first_token_at.is_none() && a.slot.stats.tokens_out > 0 {
                 a.first_token_at = Some(Instant::now());
@@ -546,12 +651,33 @@ impl EngineCore {
                 a.slot.finish_stream();
                 let elapsed = a.started.elapsed().as_secs_f64();
                 self.metrics.requests_completed += 1;
+                self.metrics.tenant(&a.tenant).completed += 1;
                 self.metrics.interventions += a.slot.stats.interventions as u64;
                 self.metrics.masks_computed += a.slot.stats.masks_computed as u64;
                 self.metrics.spec_proposed += a.slot.stats.spec_proposed as u64;
                 self.metrics.spec_accepted += a.slot.stats.spec_accepted as u64;
                 self.metrics.draft_proposed += a.slot.stats.draft_proposed as u64;
                 self.metrics.draft_accepted += a.slot.stats.draft_accepted as u64;
+                if a.slot.stats.masks_computed > 0 {
+                    // Per-request mean mask cost, µs (ns totals are too
+                    // coarse to histogram directly across request sizes).
+                    let mean_us = a.slot.stats.mask_ns as f64
+                        / a.slot.stats.masks_computed as f64
+                        / 1e3;
+                    self.metrics.mask_us.record(mean_us);
+                    if let Some(fp) = &a.grammar {
+                        self.metrics.grammar(fp).mask_us.record(mean_us);
+                    }
+                }
+                if let Some(fp) = &a.grammar {
+                    self.metrics.grammar(fp).masks_computed += a.slot.stats.masks_computed as u64;
+                    self.metrics.grammar(fp).interventions += a.slot.stats.interventions as u64;
+                }
+                if a.slot.stats.draft_proposed > 0 {
+                    self.metrics.draft_acceptance.record(
+                        a.slot.stats.draft_accepted as f64 / a.slot.stats.draft_proposed as f64,
+                    );
+                }
                 if elapsed > 0.0 {
                     self.metrics.req_tps.record(a.slot.stats.tokens_out as f64 / elapsed);
                 }
@@ -559,6 +685,7 @@ impl EngineCore {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: None,
+                    reason: None,
                     elapsed_s: elapsed,
                 });
             } else {

@@ -1,8 +1,29 @@
-//! Serving metrics: counters + latency/throughput summaries.
+//! Serving metrics: counters + latency/throughput summaries, plus the
+//! metric **registry** — the single source of truth behind both the
+//! Prometheus `/metrics` exposition (`render_prometheus`) and the
+//! generated operator reference (`metrics_doc`, surfaced as the
+//! `domino metrics-doc` subcommand and checked into `docs/METRICS.md`).
+//! Names and help strings live once, in [`METRIC_DEFS`], so the wire
+//! format and the docs cannot drift.
 
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::time::Duration;
 
-/// A streaming summary (count/mean/min/max/p50-ish via reservoir).
+/// Shared log-spaced histogram bounds ({1, 2.5, 5} per decade). One
+/// global ladder keeps `Summary` allocation-free of per-metric config
+/// and spans every unit we record: seconds (1 µs – 5 ks), microseconds
+/// (sub-µs – 5 ms), batch widths (1 – 64) and ratios (0 – 1) all land
+/// inside it. Values above the last bound fall into the implicit
+/// `+Inf` bucket.
+pub const HIST_BOUNDS: [f64; 30] = [
+    1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2,
+    5e-2, 1e-1, 2.5e-1, 5e-1, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    2500.0, 5000.0,
+];
+
+/// A streaming summary (count/mean/min/max/p50-ish via reservoir) plus
+/// fixed-bound histogram buckets for Prometheus exposition.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     pub count: u64,
@@ -10,6 +31,10 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     samples: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts aligned with [`HIST_BOUNDS`];
+    /// empty until the first record. `count - buckets.sum()` is the
+    /// implicit `+Inf` bucket.
+    buckets: Vec<u64>,
 }
 
 impl Summary {
@@ -23,6 +48,12 @@ impl Summary {
         }
         self.count += 1;
         self.sum += v;
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; HIST_BOUNDS.len()];
+        }
+        if let Some(i) = HIST_BOUNDS.iter().position(|&b| v <= b) {
+            self.buckets[i] += 1;
+        }
         // Simple capped reservoir for percentiles.
         if self.samples.len() < 4096 {
             self.samples.push(v);
@@ -50,9 +81,14 @@ impl Summary {
         s[idx]
     }
 
+    /// Count in bucket `i` of [`HIST_BOUNDS`] (non-cumulative).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets.get(i).copied().unwrap_or(0)
+    }
+
     /// Fold `other` into this summary (cross-shard aggregation). Exact for
-    /// count/sum/min/max; the percentile reservoir keeps as many of the
-    /// other side's samples as fit under the cap.
+    /// count/sum/min/max and buckets; the percentile reservoir keeps as
+    /// many of the other side's samples as fit under the cap.
     pub fn merge(&mut self, other: &Summary) {
         if other.count == 0 {
             return;
@@ -65,12 +101,85 @@ impl Summary {
         self.max = self.max.max(other.max);
         self.count += other.count;
         self.sum += other.sum;
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; HIST_BOUNDS.len()];
+        }
+        for (i, b) in other.buckets.iter().enumerate() {
+            self.buckets[i] += b;
+        }
         for &v in &other.samples {
             if self.samples.len() >= 4096 {
                 break;
             }
             self.samples.push(v);
         }
+    }
+}
+
+/// Hard cap on per-tenant / per-grammar label cardinality. A gateway
+/// must bound what an unauthenticated client can allocate: once a label
+/// map holds this many distinct keys, further keys collapse into the
+/// `_other` overflow series instead of growing the map.
+pub const MAX_LABEL_CARDINALITY: usize = 64;
+
+/// Overflow series name for label maps at [`MAX_LABEL_CARDINALITY`].
+pub const OTHER_LABEL: &str = "_other";
+
+/// Fetch-or-insert `key` in a label map, collapsing to [`OTHER_LABEL`]
+/// once the map is at [`MAX_LABEL_CARDINALITY`].
+pub fn labeled<'a, T: Default>(map: &'a mut BTreeMap<String, T>, key: &str) -> &'a mut T {
+    if !map.contains_key(key) && map.len() >= MAX_LABEL_CARDINALITY {
+        return map.entry(OTHER_LABEL.to_string()).or_default();
+    }
+    map.entry(key.to_string()).or_default()
+}
+
+/// Per-tenant slice of the serving metrics (keyed by the wire `tenant`
+/// field; requests that omit it land under `"default"`).
+#[derive(Clone, Debug, Default)]
+pub struct TenantMetrics {
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    pub deadline_exceeded: u64,
+    pub shed: u64,
+    pub tokens_generated: u64,
+    /// Admission-queue wait (submit → slot admission), seconds.
+    pub queue_wait: Summary,
+}
+
+impl TenantMetrics {
+    pub fn merge(&mut self, other: &TenantMetrics) {
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.cancelled += other.cancelled;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.shed += other.shed;
+        self.tokens_generated += other.tokens_generated;
+        self.queue_wait.merge(&other.queue_wait);
+    }
+}
+
+/// Per-grammar-fingerprint slice of the serving metrics (keyed by the
+/// constraint's content fingerprint, hex; unconstrained requests are
+/// not tracked here).
+#[derive(Clone, Debug, Default)]
+pub struct GrammarMetrics {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub masks_computed: u64,
+    pub interventions: u64,
+    /// Mean per-mask computation time for each request, microseconds.
+    pub mask_us: Summary,
+}
+
+impl GrammarMetrics {
+    pub fn merge(&mut self, other: &GrammarMetrics) {
+        self.requests += other.requests;
+        self.tokens_generated += other.tokens_generated;
+        self.masks_computed += other.masks_computed;
+        self.interventions += other.interventions;
+        self.mask_us.merge(&other.mask_us);
     }
 }
 
@@ -144,13 +253,45 @@ pub struct Metrics {
     pub queue_wait: Summary,
     /// Per-request tokens/second.
     pub req_tps: Summary,
-    /// Mask computation time, microseconds.
+    /// Mask computation time, microseconds (per-request mean across the
+    /// masks that request computed).
     pub mask_us: Summary,
+    /// Engine-tick wall time (one `step_all` over the live slots),
+    /// seconds.
+    pub tick_time: Summary,
+    /// Per-request draft acceptance ratio (accepted / proposed) for
+    /// requests that ran the draft lane.
+    pub draft_acceptance: Summary,
     /// Engine wall time spent in model calls, seconds.
     pub model_time: Duration,
+    /// Structured abort/shed accounting keyed `"kind/reason"` — e.g.
+    /// `cancelled/client_disconnect`, `deadline/queued`,
+    /// `shed/tenant_quota`. The same reason strings travel on the wire
+    /// in the response `reason` field.
+    pub abort_reasons: BTreeMap<String, u64>,
+    /// Per-tenant metrics (cardinality-capped; see [`labeled`]).
+    pub tenants: BTreeMap<String, TenantMetrics>,
+    /// Per-grammar-fingerprint metrics (cardinality-capped).
+    pub grammars: BTreeMap<String, GrammarMetrics>,
 }
 
 impl Metrics {
+    /// Record a structured abort/shed reason (`kind` and `reason` both
+    /// appear as labels on `domino_requests_aborted_total`).
+    pub fn record_abort(&mut self, kind: &str, reason: &str) {
+        *labeled(&mut self.abort_reasons, &format!("{kind}/{reason}")) += 1;
+    }
+
+    /// Per-tenant slice for `tenant`, creating it on first use.
+    pub fn tenant(&mut self, tenant: &str) -> &mut TenantMetrics {
+        labeled(&mut self.tenants, tenant)
+    }
+
+    /// Per-grammar slice for fingerprint `fp`, creating it on first use.
+    pub fn grammar(&mut self, fp: &str) -> &mut GrammarMetrics {
+        labeled(&mut self.grammars, fp)
+    }
+
     /// Fold another shard's snapshot into this one (cross-shard
     /// aggregation for `Scheduler::metrics` and the TCP `stats` op).
     ///
@@ -193,7 +334,18 @@ impl Metrics {
         self.queue_wait.merge(&other.queue_wait);
         self.req_tps.merge(&other.req_tps);
         self.mask_us.merge(&other.mask_us);
+        self.tick_time.merge(&other.tick_time);
+        self.draft_acceptance.merge(&other.draft_acceptance);
         self.model_time += other.model_time;
+        for (k, v) in &other.abort_reasons {
+            *labeled(&mut self.abort_reasons, k) += v;
+        }
+        for (k, v) in &other.tenants {
+            labeled(&mut self.tenants, k).merge(v);
+        }
+        for (k, v) in &other.grammars {
+            labeled(&mut self.grammars, k).merge(v);
+        }
     }
 
     pub fn report(&self) -> String {
@@ -262,6 +414,520 @@ impl Metrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Metric registry: the single source of truth for exposition + docs.
+// ---------------------------------------------------------------------------
+
+/// Prometheus metric kind, as written in `# TYPE` lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One row of the metric registry. `render_prometheus` writes the
+/// `# HELP`/`# TYPE` header and samples for every def; `metrics_doc`
+/// renders the same rows as the markdown reference in `docs/METRICS.md`.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricDef {
+    /// Full exposition name (`domino_` prefix; counters end `_total`).
+    pub name: &'static str,
+    pub kind: MetricKind,
+    /// Label names attached to every sample of this metric.
+    pub labels: &'static [&'static str],
+    /// One-line operator-facing description (the `# HELP` text).
+    pub help: &'static str,
+}
+
+/// Every metric the gateway exports, in exposition order. Adding a
+/// field to [`Metrics`] without a row here (or vice versa) fails the
+/// `registry_renders_every_def` test.
+pub const METRIC_DEFS: &[MetricDef] = &[
+    MetricDef {
+        name: "domino_requests_total",
+        kind: MetricKind::Counter,
+        labels: &["outcome"],
+        help: "Requests by final outcome: completed, failed, cancelled, deadline_exceeded, or shed.",
+    },
+    MetricDef {
+        name: "domino_requests_aborted_total",
+        kind: MetricKind::Counter,
+        labels: &["kind", "reason"],
+        help: "Structured abort accounting: kind is cancelled/deadline/shed, reason is the wire-visible cause (client_cancel, client_disconnect, queued, decoding, queue_full, tenant_quota).",
+    },
+    MetricDef {
+        name: "domino_tokens_generated_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Tokens emitted across all completed and in-flight requests.",
+    },
+    MetricDef {
+        name: "domino_model_calls_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "LM forward calls (a batched tick counts once per lane row consumed).",
+    },
+    MetricDef {
+        name: "domino_forward_batches_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Batched cross-slot forward passes (one per engine tick with at least one lane).",
+    },
+    MetricDef {
+        name: "domino_forward_rows_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Logit rows produced by batched forward passes (a draft lane contributes one row per proposed token).",
+    },
+    MetricDef {
+        name: "domino_batch_width",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Lanes per batched forward pass; a mean near --slots means ticks run at full width.",
+    },
+    MetricDef {
+        name: "domino_tick_seconds",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Engine-tick wall time (one step_all over a shard's live slots).",
+    },
+    MetricDef {
+        name: "domino_interventions_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Decode steps where the grammar mask changed the sampled token (DOMINO interventions).",
+    },
+    MetricDef {
+        name: "domino_masks_computed_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Token masks computed (mask-cache misses do the work; hits reuse it).",
+    },
+    MetricDef {
+        name: "domino_mask_compute_us",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Per-request mean mask-computation time, microseconds.",
+    },
+    MetricDef {
+        name: "domino_spec_proposed_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Tokens proposed by single-token opportunistic speculation.",
+    },
+    MetricDef {
+        name: "domino_spec_accepted_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Opportunistically speculated tokens accepted by verification.",
+    },
+    MetricDef {
+        name: "domino_draft_proposed_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Tokens proposed by grammar-pruned multi-token draft lanes.",
+    },
+    MetricDef {
+        name: "domino_draft_accepted_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Draft-lane tokens accepted by batched verification.",
+    },
+    MetricDef {
+        name: "domino_draft_acceptance_ratio",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Per-request draft acceptance ratio (accepted / proposed) for requests that drafted.",
+    },
+    MetricDef {
+        name: "domino_queue_wait_seconds",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Admission-queue wait from submit to slot admission.",
+    },
+    MetricDef {
+        name: "domino_ttft_seconds",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Time to first token (submit to first emitted token).",
+    },
+    MetricDef {
+        name: "domino_request_tokens_per_second",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Per-request decode throughput, tokens per second.",
+    },
+    MetricDef {
+        name: "domino_model_time_seconds_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Engine wall time spent inside LM forward calls.",
+    },
+    MetricDef {
+        name: "domino_registry_lookups_total",
+        kind: MetricKind::Counter,
+        labels: &["result"],
+        help: "Engine-registry lookups: hit (cached), miss (compiled), coalesced (waited on a concurrent build).",
+    },
+    MetricDef {
+        name: "domino_registry_evictions_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Compiled engines dropped by registry LRU eviction.",
+    },
+    MetricDef {
+        name: "domino_engine_compile_seconds_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Wall time spent compiling grammar engines.",
+    },
+    MetricDef {
+        name: "domino_artifact_lookups_total",
+        kind: MetricKind::Counter,
+        labels: &["result"],
+        help: "Persistent-artifact lookups: hit (deserialized), miss (compiled and written back), invalid (corrupt/stale, rebuilt).",
+    },
+    MetricDef {
+        name: "domino_warm_start_loaded",
+        kind: MetricKind::Gauge,
+        labels: &[],
+        help: "Engines registered by the boot-time warm-start scan.",
+    },
+    MetricDef {
+        name: "domino_warm_start_seconds",
+        kind: MetricKind::Gauge,
+        labels: &[],
+        help: "Wall time of the boot-time warm-start scan.",
+    },
+    MetricDef {
+        name: "domino_mask_cache_lookups_total",
+        kind: MetricKind::Counter,
+        labels: &["result"],
+        help: "State-keyed mask-cache lookups: hit (Arc reuse) or miss (mask computed and cached).",
+    },
+    MetricDef {
+        name: "domino_mask_cache_evictions_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Masks dropped by mask-cache LRU eviction.",
+    },
+    MetricDef {
+        name: "domino_engine_shards",
+        kind: MetricKind::Gauge,
+        labels: &[],
+        help: "Engine shards (threads) the scheduler is running.",
+    },
+    MetricDef {
+        name: "domino_tenant_requests_total",
+        kind: MetricKind::Counter,
+        labels: &["tenant", "outcome"],
+        help: "Per-tenant requests by final outcome (tenant label capped at 64 values; overflow collapses into \"_other\").",
+    },
+    MetricDef {
+        name: "domino_tenant_tokens_generated_total",
+        kind: MetricKind::Counter,
+        labels: &["tenant"],
+        help: "Per-tenant tokens emitted.",
+    },
+    MetricDef {
+        name: "domino_tenant_queue_wait_seconds",
+        kind: MetricKind::Histogram,
+        labels: &["tenant"],
+        help: "Per-tenant admission-queue wait — the fairness signal a flooding tenant moves for itself but (with weighted-fair drain) not for others.",
+    },
+    MetricDef {
+        name: "domino_grammar_requests_total",
+        kind: MetricKind::Counter,
+        labels: &["grammar"],
+        help: "Requests per constraint fingerprint (hex; label capped at 64 values).",
+    },
+    MetricDef {
+        name: "domino_grammar_tokens_generated_total",
+        kind: MetricKind::Counter,
+        labels: &["grammar"],
+        help: "Tokens emitted per constraint fingerprint.",
+    },
+    MetricDef {
+        name: "domino_grammar_masks_computed_total",
+        kind: MetricKind::Counter,
+        labels: &["grammar"],
+        help: "Token masks computed per constraint fingerprint.",
+    },
+    MetricDef {
+        name: "domino_grammar_interventions_total",
+        kind: MetricKind::Counter,
+        labels: &["grammar"],
+        help: "Grammar interventions per constraint fingerprint.",
+    },
+    MetricDef {
+        name: "domino_grammar_mask_compute_us",
+        kind: MetricKind::Histogram,
+        labels: &["grammar"],
+        help: "Per-request mean mask-computation time per constraint fingerprint, microseconds.",
+    },
+];
+
+/// Escape a label value per the Prometheus text exposition format
+/// (backslash, double quote, newline).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_counter(out: &mut String, name: &str, labels: &str, v: f64) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {v}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {v}");
+    }
+}
+
+/// Write a full histogram family (`_bucket`/`_sum`/`_count`) from a
+/// [`Summary`]. `labels` is either empty or `key="value"` pairs
+/// **without** a trailing comma.
+fn write_hist(out: &mut String, name: &str, labels: &str, s: &Summary) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for (i, b) in HIST_BOUNDS.iter().enumerate() {
+        cum += s.bucket(i);
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{b}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", s.count);
+    let sum = if s.count == 0 { 0.0 } else { s.sum };
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_sum {sum}");
+        let _ = writeln!(out, "{name}_count {}", s.count);
+    } else {
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {sum}");
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", s.count);
+    }
+}
+
+/// Append every sample line for `def` from the snapshot. Returns false
+/// only for names the registry does not know (caught by tests).
+fn write_samples(out: &mut String, def: &MetricDef, m: &Metrics, shards: usize) -> bool {
+    let name = def.name;
+    match name {
+        "domino_requests_total" => {
+            for (outcome, v) in [
+                ("completed", m.requests_completed),
+                ("failed", m.requests_failed),
+                ("cancelled", m.requests_cancelled),
+                ("deadline_exceeded", m.requests_deadline_exceeded),
+                ("shed", m.requests_shed),
+            ] {
+                write_counter(out, name, &format!("outcome=\"{outcome}\""), v as f64);
+            }
+        }
+        "domino_requests_aborted_total" => {
+            for (key, v) in &m.abort_reasons {
+                let (kind, reason) = key.split_once('/').unwrap_or((key.as_str(), "unknown"));
+                let labels = format!(
+                    "kind=\"{}\",reason=\"{}\"",
+                    escape_label(kind),
+                    escape_label(reason)
+                );
+                write_counter(out, name, &labels, *v as f64);
+            }
+        }
+        "domino_tokens_generated_total" => write_counter(out, name, "", m.tokens_generated as f64),
+        "domino_model_calls_total" => write_counter(out, name, "", m.model_calls as f64),
+        "domino_forward_batches_total" => write_counter(out, name, "", m.forward_batches as f64),
+        "domino_forward_rows_total" => write_counter(out, name, "", m.forward_rows as f64),
+        "domino_batch_width" => write_hist(out, name, "", &m.batch_size),
+        "domino_tick_seconds" => write_hist(out, name, "", &m.tick_time),
+        "domino_interventions_total" => write_counter(out, name, "", m.interventions as f64),
+        "domino_masks_computed_total" => write_counter(out, name, "", m.masks_computed as f64),
+        "domino_mask_compute_us" => write_hist(out, name, "", &m.mask_us),
+        "domino_spec_proposed_total" => write_counter(out, name, "", m.spec_proposed as f64),
+        "domino_spec_accepted_total" => write_counter(out, name, "", m.spec_accepted as f64),
+        "domino_draft_proposed_total" => write_counter(out, name, "", m.draft_proposed as f64),
+        "domino_draft_accepted_total" => write_counter(out, name, "", m.draft_accepted as f64),
+        "domino_draft_acceptance_ratio" => write_hist(out, name, "", &m.draft_acceptance),
+        "domino_queue_wait_seconds" => write_hist(out, name, "", &m.queue_wait),
+        "domino_ttft_seconds" => write_hist(out, name, "", &m.ttft),
+        "domino_request_tokens_per_second" => write_hist(out, name, "", &m.req_tps),
+        "domino_model_time_seconds_total" => {
+            write_counter(out, name, "", m.model_time.as_secs_f64())
+        }
+        "domino_registry_lookups_total" => {
+            for (result, v) in [
+                ("hit", m.registry_hits),
+                ("miss", m.registry_misses),
+                ("coalesced", m.registry_coalesced),
+            ] {
+                write_counter(out, name, &format!("result=\"{result}\""), v as f64);
+            }
+        }
+        "domino_registry_evictions_total" => {
+            write_counter(out, name, "", m.registry_evictions as f64)
+        }
+        "domino_engine_compile_seconds_total" => {
+            write_counter(out, name, "", m.engine_compile_ms as f64 / 1e3)
+        }
+        "domino_artifact_lookups_total" => {
+            for (result, v) in [
+                ("hit", m.artifact_hits),
+                ("miss", m.artifact_misses),
+                ("invalid", m.artifact_invalid),
+            ] {
+                write_counter(out, name, &format!("result=\"{result}\""), v as f64);
+            }
+        }
+        "domino_warm_start_loaded" => write_counter(out, name, "", m.warm_start_loaded as f64),
+        "domino_warm_start_seconds" => {
+            write_counter(out, name, "", m.warm_start_ms as f64 / 1e3)
+        }
+        "domino_mask_cache_lookups_total" => {
+            for (result, v) in [("hit", m.mask_cache_hits), ("miss", m.mask_cache_misses)] {
+                write_counter(out, name, &format!("result=\"{result}\""), v as f64);
+            }
+        }
+        "domino_mask_cache_evictions_total" => {
+            write_counter(out, name, "", m.mask_cache_evictions as f64)
+        }
+        "domino_engine_shards" => write_counter(out, name, "", shards as f64),
+        "domino_tenant_requests_total" => {
+            for (tenant, t) in &m.tenants {
+                for (outcome, v) in [
+                    ("completed", t.completed),
+                    ("failed", t.failed),
+                    ("cancelled", t.cancelled),
+                    ("deadline_exceeded", t.deadline_exceeded),
+                    ("shed", t.shed),
+                ] {
+                    let labels = format!(
+                        "tenant=\"{}\",outcome=\"{outcome}\"",
+                        escape_label(tenant)
+                    );
+                    write_counter(out, name, &labels, v as f64);
+                }
+            }
+        }
+        "domino_tenant_tokens_generated_total" => {
+            for (tenant, t) in &m.tenants {
+                let labels = format!("tenant=\"{}\"", escape_label(tenant));
+                write_counter(out, name, &labels, t.tokens_generated as f64);
+            }
+        }
+        "domino_tenant_queue_wait_seconds" => {
+            for (tenant, t) in &m.tenants {
+                let labels = format!("tenant=\"{}\"", escape_label(tenant));
+                write_hist(out, name, &labels, &t.queue_wait);
+            }
+        }
+        "domino_grammar_requests_total" => {
+            for (fp, g) in &m.grammars {
+                let labels = format!("grammar=\"{}\"", escape_label(fp));
+                write_counter(out, name, &labels, g.requests as f64);
+            }
+        }
+        "domino_grammar_tokens_generated_total" => {
+            for (fp, g) in &m.grammars {
+                let labels = format!("grammar=\"{}\"", escape_label(fp));
+                write_counter(out, name, &labels, g.tokens_generated as f64);
+            }
+        }
+        "domino_grammar_masks_computed_total" => {
+            for (fp, g) in &m.grammars {
+                let labels = format!("grammar=\"{}\"", escape_label(fp));
+                write_counter(out, name, &labels, g.masks_computed as f64);
+            }
+        }
+        "domino_grammar_interventions_total" => {
+            for (fp, g) in &m.grammars {
+                let labels = format!("grammar=\"{}\"", escape_label(fp));
+                write_counter(out, name, &labels, g.interventions as f64);
+            }
+        }
+        "domino_grammar_mask_compute_us" => {
+            for (fp, g) in &m.grammars {
+                let labels = format!("grammar=\"{}\"", escape_label(fp));
+                write_hist(out, name, &labels, &g.mask_us);
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
+/// Render a [`Metrics`] snapshot as Prometheus text exposition format
+/// 0.0.4 — the body served by the `/metrics` HTTP endpoint. `shards`
+/// is the live engine-shard count (a gauge the snapshot itself does
+/// not carry).
+pub fn render_prometheus(m: &Metrics, shards: usize) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+    for def in METRIC_DEFS {
+        let _ = writeln!(out, "# HELP {} {}", def.name, def.help);
+        let _ = writeln!(out, "# TYPE {} {}", def.name, def.kind.as_str());
+        let known = write_samples(&mut out, def, m, shards);
+        debug_assert!(known, "metric def {} has no sample writer", def.name);
+    }
+    out
+}
+
+/// Render the metric registry as the markdown reference checked in at
+/// `docs/METRICS.md` (the `domino metrics-doc` subcommand; CI diffs
+/// the committed file against this output).
+pub fn metrics_doc() -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    out.push_str(
+        "# DOMINO metrics reference\n\n\
+         Generated by `domino metrics-doc` from the metric registry in\n\
+         `rust/src/server/metrics.rs` (`METRIC_DEFS`) — the same table that\n\
+         drives the `/metrics` HELP lines, so this file cannot drift from\n\
+         the exposition. Regenerate with:\n\n\
+         ```sh\n\
+         cargo run --release -- metrics-doc > ../docs/METRICS.md\n\
+         ```\n\n\
+         Histograms export `_bucket`/`_sum`/`_count` series on a shared\n\
+         log-spaced bucket ladder ({1, 2.5, 5} per decade, 1e-6 to 5e3).\n\
+         The `tenant` and `grammar` labels are cardinality-capped at 64\n\
+         distinct values; overflow collapses into `_other`.\n\n\
+         | metric | type | labels | description |\n\
+         |--------|------|--------|-------------|\n",
+    );
+    for def in METRIC_DEFS {
+        let labels = if def.labels.is_empty() {
+            "—".to_string()
+        } else {
+            def.labels
+                .iter()
+                .map(|l| format!("`{l}`"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let _ = writeln!(
+            out,
+            "| `{}` | {} | {} | {} |",
+            def.name,
+            def.kind.as_str(),
+            labels,
+            def.help.replace('|', "\\|")
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,6 +944,30 @@ mod tests {
         assert!((s.mean() - 3.0).abs() < 1e-12);
         assert_eq!(s.percentile(0.5), 3.0);
         assert_eq!(s.percentile(1.0), 5.0);
+    }
+
+    #[test]
+    fn summary_buckets_align_with_bounds() {
+        let mut s = Summary::default();
+        s.record(0.5e-6); // -> le=1e-6 (first bucket)
+        s.record(3.0); // -> le=5
+        s.record(9999.0); // -> +Inf (beyond last bound)
+        assert_eq!(s.bucket(0), 1);
+        let idx5 = HIST_BOUNDS.iter().position(|&b| b == 5.0).unwrap();
+        assert_eq!(s.bucket(idx5), 1);
+        let in_bounds: u64 = (0..HIST_BOUNDS.len()).map(|i| s.bucket(i)).sum();
+        assert_eq!(s.count - in_bounds, 1, "one sample in the +Inf bucket");
+    }
+
+    #[test]
+    fn summary_merge_adds_buckets() {
+        let mut a = Summary::default();
+        a.record(2.0);
+        let mut b = Summary::default();
+        b.record(2.0);
+        a.merge(&b);
+        let idx = HIST_BOUNDS.iter().position(|&bound| 2.0 <= bound).unwrap();
+        assert_eq!(a.bucket(idx), 2);
     }
 
     #[test]
@@ -358,5 +1048,136 @@ mod tests {
         m.draft_accepted = 8;
         assert!((m.draft_accept_rate() - 0.8).abs() < 1e-12);
         assert!(m.report().contains("draft: 8/10 accepted (80%)"));
+    }
+
+    #[test]
+    fn merge_folds_tenants_grammars_and_reasons() {
+        let mut a = Metrics::default();
+        a.tenant("alpha").completed = 2;
+        a.tenant("alpha").queue_wait.record(0.1);
+        a.grammar("fp1").requests = 3;
+        a.record_abort("shed", "queue_full");
+        let mut b = Metrics::default();
+        b.tenant("alpha").completed = 1;
+        b.tenant("beta").shed = 4;
+        b.grammar("fp1").requests = 1;
+        b.record_abort("shed", "queue_full");
+        b.record_abort("deadline", "queued");
+        a.merge(&b);
+        assert_eq!(a.tenants["alpha"].completed, 3);
+        assert_eq!(a.tenants["alpha"].queue_wait.count, 1);
+        assert_eq!(a.tenants["beta"].shed, 4);
+        assert_eq!(a.grammars["fp1"].requests, 4);
+        assert_eq!(a.abort_reasons["shed/queue_full"], 2);
+        assert_eq!(a.abort_reasons["deadline/queued"], 1);
+    }
+
+    #[test]
+    fn label_cardinality_is_capped() {
+        let mut m = Metrics::default();
+        for i in 0..(MAX_LABEL_CARDINALITY + 10) {
+            m.tenant(&format!("t{i}")).completed += 1;
+        }
+        assert!(m.tenants.len() <= MAX_LABEL_CARDINALITY + 1);
+        assert_eq!(m.tenants[OTHER_LABEL].completed, 10, "overflow collapses into _other");
+        // Existing keys keep resolving to themselves at the cap.
+        m.tenant("t0").completed += 1;
+        assert_eq!(m.tenants["t0"].completed, 2);
+    }
+
+    #[test]
+    fn registry_renders_every_def() {
+        let mut m = Metrics::default();
+        m.requests_completed = 3;
+        m.tenant("acme").completed = 2;
+        m.tenant("acme").tokens_generated = 40;
+        m.tenant("acme").queue_wait.record(0.002);
+        m.grammar("deadbeef").requests = 1;
+        m.grammar("deadbeef").mask_us.record(12.0);
+        m.record_abort("cancelled", "client_disconnect");
+        m.queue_wait.record(0.001);
+        m.tick_time.record(0.0005);
+        m.draft_acceptance.record(0.75);
+        let text = render_prometheus(&m, 4);
+        for def in METRIC_DEFS {
+            assert!(
+                text.contains(&format!("# HELP {} ", def.name)),
+                "missing HELP for {}",
+                def.name
+            );
+            assert!(
+                text.contains(&format!("# TYPE {} {}", def.name, def.kind.as_str())),
+                "missing TYPE for {}",
+                def.name
+            );
+            // Every metric must emit at least one sample line (counters
+            // always do; histograms emit buckets even when empty).
+            let sample = text.lines().any(|l| {
+                !l.starts_with('#')
+                    && (l.starts_with(&format!("{} ", def.name))
+                        || l.starts_with(&format!("{}{{", def.name))
+                        || l.starts_with(&format!("{}_bucket", def.name)))
+            });
+            assert!(sample, "no sample line for {}", def.name);
+        }
+        assert!(text.contains("domino_requests_total{outcome=\"completed\"} 3"));
+        assert!(text
+            .contains("domino_tenant_requests_total{tenant=\"acme\",outcome=\"completed\"} 2"));
+        assert!(text.contains("domino_tenant_tokens_generated_total{tenant=\"acme\"} 40"));
+        assert!(text.contains("domino_tenant_queue_wait_seconds_count{tenant=\"acme\"} 1"));
+        assert!(text.contains("domino_grammar_requests_total{grammar=\"deadbeef\"} 1"));
+        assert!(text
+            .contains("domino_requests_aborted_total{kind=\"cancelled\",reason=\"client_disconnect\"} 1"));
+        assert!(text.contains("domino_engine_shards 4"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_count() {
+        let mut m = Metrics::default();
+        m.queue_wait.record(0.002);
+        m.queue_wait.record(0.004);
+        m.queue_wait.record(99999.0); // +Inf territory
+        let text = render_prometheus(&m, 1);
+        assert!(text.contains("domino_queue_wait_seconds_bucket{le=\"0.005\"} 2"));
+        assert!(text.contains("domino_queue_wait_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("domino_queue_wait_seconds_count 3"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut m = Metrics::default();
+        m.tenant("a\"b\\c\nd").completed = 1;
+        let text = render_prometheus(&m, 1);
+        assert!(text.contains("tenant=\"a\\\"b\\\\c\\nd\""));
+    }
+
+    #[test]
+    fn metrics_doc_covers_every_def() {
+        let doc = metrics_doc();
+        for def in METRIC_DEFS {
+            assert!(doc.contains(&format!("`{}`", def.name)), "doc missing {}", def.name);
+        }
+        assert!(doc.contains("| metric | type | labels | description |"));
+        assert!(doc.contains("metrics-doc"));
+    }
+
+    #[test]
+    fn metric_names_are_well_formed() {
+        for def in METRIC_DEFS {
+            assert!(def.name.starts_with("domino_"), "{} lacks the domino_ prefix", def.name);
+            assert!(
+                def.name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "{} has invalid chars",
+                def.name
+            );
+            if def.kind == MetricKind::Counter {
+                assert!(def.name.ends_with("_total"), "counter {} should end _total", def.name);
+            }
+            assert!(!def.help.is_empty());
+        }
+        let mut names: Vec<_> = METRIC_DEFS.iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), METRIC_DEFS.len(), "duplicate metric names");
     }
 }

@@ -23,9 +23,17 @@
 //!   preferred shard's queue is full (or the request has no grammar), it
 //!   spills to the least-loaded shard (queued + active) instead.
 //! * **Bounded admission + backpressure** — each shard's queue holds at
-//!   most [`SchedulerConfig::queue_depth`] requests. When every eligible
-//!   shard is full the request is **shed** immediately with the
-//!   structured `"overloaded"` reply rather than queueing forever.
+//!   most [`SchedulerConfig::queue_depth`] requests **per tenant**. When
+//!   every eligible shard is full for the request's tenant it is
+//!   **shed** immediately with the structured `"overloaded"` reply
+//!   (`reason: "queue_full"`) rather than queueing forever.
+//! * **Per-tenant fairness** — the wire `tenant` field buys two
+//!   isolations: token-bucket admission quotas
+//!   ([`TenantPolicy::rate`]/[`TenantPolicy::burst`]; over-quota
+//!   requests shed with `reason: "tenant_quota"`), and weighted-fair
+//!   queue drain (deficit round-robin over per-tenant lanes,
+//!   [`TenantPolicy::weights`]) so a flooding tenant lengthens only its
+//!   own queue. `benches/fairness.rs` gates the cold-tenant p99.
 //! * **Deadlines + cancellation** — every submission carries a cancel
 //!   flag ([`RequestHandle::cancel`] / [`CancelToken`]) and an optional
 //!   deadline. Both are honored while queued *and* mid-decode: the shard
@@ -40,14 +48,171 @@
 //!   shed counts; `shard_metrics` exposes the per-shard view.
 
 use super::engine::{EngineCore, EngineCtx, GenRequest, GenResponse, Work};
-use super::metrics::Metrics;
+use super::metrics::{labeled, Metrics};
 use super::slot::StreamEvent;
 use crate::constraint::{ArtifactStore, EngineRegistry};
 use anyhow::Context;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Hard cap on distinct per-tenant admission buckets (and shed-account
+/// keys). Tenants beyond the cap share one overflow bucket — an
+/// unauthenticated client must not be able to allocate unbounded state
+/// by inventing tenant names.
+const MAX_TENANT_BUCKETS: usize = 4096;
+
+/// Per-tenant admission and fairness policy.
+#[derive(Clone, Debug, Default)]
+pub struct TenantPolicy {
+    /// Token-bucket admission rate, requests/second per tenant. `None`
+    /// disables quota admission (every request passes). `Some(0.0)` is
+    /// burst-only: the initial burst passes, then everything sheds.
+    pub rate: Option<f64>,
+    /// Bucket capacity (max burst above the steady rate). `None`
+    /// defaults to `max(rate, 1)`; always clamped to at least 1 so a
+    /// quota can never shed every request of an idle tenant.
+    pub burst: Option<f64>,
+    /// Weighted-fair drain weights (deficit round-robin quantum) per
+    /// tenant name. Unlisted tenants get weight 1; weights are clamped
+    /// to at least 1.
+    pub weights: HashMap<String, u32>,
+}
+
+/// Classic token bucket with lazy refill. Time is an explicit argument
+/// so refill edge cases are unit-testable without sleeping.
+#[derive(Clone, Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: f64, now: Instant) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket { tokens: burst, last: now, rate: rate.max(0.0), burst }
+    }
+
+    /// Refill for the elapsed time, then try to take one token.
+    fn try_take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Deficit-round-robin queue: one FIFO lane per tenant, drained in
+/// round-robin order with a per-tenant quantum of `weight` items per
+/// turn (unit request cost). A tenant flooding its own lane lengthens
+/// only that lane; other tenants keep draining at their weighted share.
+/// Single-tenant traffic degenerates to the old FIFO exactly.
+struct FairQueue<T> {
+    lanes: HashMap<String, VecDeque<T>>,
+    /// Tenants awaiting a turn (may hold stale names whose lanes have
+    /// drained; `pop` skips those).
+    ring: VecDeque<String>,
+    /// The tenant currently spending its quantum: (name, credit left).
+    current: Option<(String, u32)>,
+    weights: Arc<HashMap<String, u32>>,
+    len: usize,
+}
+
+impl<T> FairQueue<T> {
+    fn new(weights: Arc<HashMap<String, u32>>) -> FairQueue<T> {
+        FairQueue { lanes: HashMap::new(), ring: VecDeque::new(), current: None, weights, len: 0 }
+    }
+
+    fn weight(&self, tenant: &str) -> u32 {
+        self.weights.get(tenant).copied().unwrap_or(1).max(1)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, tenant: String, item: T) {
+        let lane = self.lanes.entry(tenant.clone()).or_default();
+        if lane.is_empty()
+            && !self.ring.contains(&tenant)
+            && self.current.as_ref().map_or(true, |(c, _)| c != &tenant)
+        {
+            self.ring.push_back(tenant);
+        }
+        lane.push_back(item);
+        self.len += 1;
+    }
+
+    /// Next item under DRR order, with the tenant it belongs to.
+    fn pop(&mut self) -> Option<(String, T)> {
+        if self.len == 0 {
+            self.current = None;
+            return None;
+        }
+        loop {
+            if let Some((t, credit)) = self.current.take() {
+                let has_work = self.lanes.get(&t).is_some_and(|l| !l.is_empty());
+                if has_work && credit > 0 {
+                    let lane = self.lanes.get_mut(&t).expect("lane checked non-empty");
+                    let item = lane.pop_front().expect("lane checked non-empty");
+                    self.len -= 1;
+                    if lane.is_empty() {
+                        self.lanes.remove(&t);
+                    } else if credit > 1 {
+                        self.current = Some((t.clone(), credit - 1));
+                    } else {
+                        // Quantum spent with work left: back of the ring.
+                        self.ring.push_back(t.clone());
+                    }
+                    return Some((t, item));
+                }
+                if has_work {
+                    // Credit spent: requeue for a fresh quantum.
+                    self.ring.push_back(t);
+                }
+                // Drained lanes just drop out; push() re-rings them.
+            }
+            let t = self.ring.pop_front()?;
+            if self.lanes.get(&t).is_some_and(|l| !l.is_empty()) {
+                let w = self.weight(&t);
+                self.current = Some((t, w));
+            }
+            // Stale ring entry (lane drained or purged): skip.
+        }
+    }
+
+    /// Remove and return every queued item `dead` matches (queue-purge
+    /// of cancelled / deadline-expired work).
+    fn purge<F: FnMut(&T) -> bool>(&mut self, mut dead: F) -> Vec<(String, T)> {
+        let mut out = Vec::new();
+        for (t, lane) in self.lanes.iter_mut() {
+            let mut keep = VecDeque::with_capacity(lane.len());
+            while let Some(item) = lane.pop_front() {
+                if dead(&item) {
+                    out.push((t.clone(), item));
+                } else {
+                    keep.push_back(item);
+                }
+            }
+            *lane = keep;
+        }
+        self.len -= out.len();
+        self.lanes.retain(|_, l| !l.is_empty());
+        out
+    }
+}
 
 /// Scheduler shape knobs.
 #[derive(Clone, Debug)]
@@ -75,6 +240,10 @@ pub struct SchedulerConfig {
     /// are materialized at save time). CLI `--lazy-compile` /
     /// `$DOMINO_LAZY_COMPILE`.
     pub lazy_compile: bool,
+    /// Per-tenant admission quota + weighted-fair drain policy (CLI
+    /// `--tenant-rate` / `--tenant-burst` / `--tenant-weights`). The
+    /// default policy admits everything and weights every tenant 1.
+    pub tenants: TenantPolicy,
 }
 
 impl Default for SchedulerConfig {
@@ -87,6 +256,7 @@ impl Default for SchedulerConfig {
             registry_capacity: super::engine::DEFAULT_REGISTRY_CAPACITY,
             artifact_dir: None,
             lazy_compile: false,
+            tenants: TenantPolicy::default(),
         }
     }
 }
@@ -103,16 +273,31 @@ struct Shard {
     queued: Arc<AtomicUsize>,
     /// Slots currently decoding on this shard.
     active: Arc<AtomicUsize>,
+    /// Per-tenant share of `queued` — the queue bound is per tenant per
+    /// shard, so one tenant filling its allotment can't shed another's
+    /// traffic (entries are removed at zero to stay bounded).
+    tenant_queued: Arc<Mutex<HashMap<String, usize>>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Shard {
-    fn queue_len(&self) -> usize {
-        self.queued.load(Ordering::Relaxed)
+    fn tenant_queue_len(&self, tenant: &str) -> usize {
+        self.tenant_queued.lock().expect("tenant gauge lock").get(tenant).copied().unwrap_or(0)
     }
 
     fn load(&self) -> usize {
         self.queued.load(Ordering::Relaxed) + self.active.load(Ordering::Relaxed)
+    }
+}
+
+/// Decrement (and clean up) a shard's per-tenant queued gauge.
+fn dec_tenant_gauge(map: &Mutex<HashMap<String, usize>>, tenant: &str) {
+    let mut m = map.lock().expect("tenant gauge lock");
+    if let Some(c) = m.get_mut(tenant) {
+        *c -= 1;
+        if *c == 0 {
+            m.remove(tenant);
+        }
     }
 }
 
@@ -175,6 +360,13 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     registry: Arc<EngineRegistry>,
     shed: AtomicU64,
+    /// Per-tenant admission buckets (lazily created; capped at
+    /// [`MAX_TENANT_BUCKETS`], overflow shares one bucket).
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+    /// Scheduler-level shed accounting keyed (tenant, reason) — folded
+    /// into [`Scheduler::metrics`] as per-tenant shed counts and
+    /// `shed/<reason>` abort entries.
+    shed_by: Mutex<BTreeMap<(String, String), u64>>,
 }
 
 impl Scheduler {
@@ -206,15 +398,18 @@ impl Scheduler {
         };
         registry.set_lazy_build(cfg.lazy_compile);
         let init = Arc::new(init);
+        let weights = Arc::new(cfg.tenants.weights.clone());
         let mut shards = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {
             let (tx, rx) = mpsc::channel::<Job>();
             let queued = Arc::new(AtomicUsize::new(0));
             let active = Arc::new(AtomicUsize::new(0));
+            let tenant_queued = Arc::new(Mutex::new(HashMap::new()));
             let init = init.clone();
             let registry = registry.clone();
+            let weights = weights.clone();
             let slots = cfg.slots_per_engine;
-            let (q, a) = (queued.clone(), active.clone());
+            let (q, a, tq) = (queued.clone(), active.clone(), tenant_queued.clone());
             let handle = std::thread::Builder::new()
                 .name(format!("domino-shard-{i}"))
                 .spawn(move || {
@@ -226,6 +421,7 @@ impl Scheduler {
                             for job in rx.iter() {
                                 if let Job::Work(w) = job {
                                     q.fetch_sub(1, Ordering::Relaxed);
+                                    dec_tenant_gauge(&tq, w.req.tenant_label());
                                     let msg = format!("engine init failed: {e:#}");
                                     let _ = w.resp.send(GenResponse::failure(msg));
                                 }
@@ -233,12 +429,19 @@ impl Scheduler {
                             return;
                         }
                     };
-                    shard_loop(EngineCore::new(ctx, slots), rx, q, a, i == 0);
+                    shard_loop(EngineCore::new(ctx, slots), rx, q, a, tq, weights, i == 0);
                 })
                 .expect("spawn shard thread");
-            shards.push(Shard { tx, queued, active, handle: Some(handle) });
+            shards.push(Shard { tx, queued, active, tenant_queued, handle: Some(handle) });
         }
-        Scheduler { shards, cfg, registry, shed: AtomicU64::new(0) }
+        Scheduler {
+            shards,
+            cfg,
+            registry,
+            shed: AtomicU64::new(0),
+            buckets: Mutex::new(HashMap::new()),
+            shed_by: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// Number of engine shards.
@@ -259,17 +462,52 @@ impl Scheduler {
     fn route(&self, req: &GenRequest) -> Option<usize> {
         let n = self.shards.len();
         let spec = &req.constraint.spec;
+        // The queue bound is per tenant per shard: a tenant with its
+        // allotment queued sheds, without consuming other tenants' room
+        // (single-tenant traffic sees exactly the old shared bound).
+        let tenant = req.tenant_label();
+        let has_room = |i: usize| self.shards[i].tenant_queue_len(tenant) < self.cfg.queue_depth;
         if spec.is_grammar_backed() {
             let preferred = (spec.fingerprint() % n as u64) as usize;
-            if self.shards[preferred].queue_len() < self.cfg.queue_depth {
+            if has_room(preferred) {
                 return Some(preferred);
             }
         }
         // Spill: least-loaded among the shards that still have queue
         // room (shed only when every queue is full).
-        (0..n)
-            .filter(|&i| self.shards[i].queue_len() < self.cfg.queue_depth)
-            .min_by_key(|&i| self.shards[i].load())
+        (0..n).filter(|&i| has_room(i)).min_by_key(|&i| self.shards[i].load())
+    }
+
+    /// Token-bucket quota admission for `tenant`. `true` when no rate
+    /// is configured or the tenant's bucket has a token.
+    fn admit_quota(&self, tenant: &str) -> bool {
+        let Some(rate) = self.cfg.tenants.rate else { return true };
+        let burst = self.cfg.tenants.burst.unwrap_or_else(|| rate.max(1.0));
+        let now = Instant::now();
+        let mut buckets = self.buckets.lock().expect("bucket lock");
+        let key = if buckets.contains_key(tenant) || buckets.len() < MAX_TENANT_BUCKETS {
+            tenant
+        } else {
+            "_overflow"
+        };
+        buckets
+            .entry(key.to_string())
+            .or_insert_with(|| TokenBucket::new(rate, burst, now))
+            .try_take(now)
+    }
+
+    /// Count a scheduler-level shed for the metrics fold.
+    fn note_shed(&self, tenant: &str, reason: &str) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.shed_by.lock().expect("shed lock");
+        let key = if map.len() >= MAX_TENANT_BUCKETS
+            && !map.contains_key(&(tenant.to_string(), reason.to_string()))
+        {
+            ("_other".to_string(), reason.to_string())
+        } else {
+            (tenant.to_string(), reason.to_string())
+        };
+        *map.entry(key).or_insert(0) += 1;
     }
 
     /// Submit a request. Always returns a handle: overload and routing
@@ -302,10 +540,16 @@ impl Scheduler {
         if req.deadline.is_none() {
             req.deadline = self.cfg.default_deadline;
         }
+        let tenant = req.tenant_label().to_string();
+        if !self.admit_quota(&tenant) {
+            self.note_shed(&tenant, "tenant_quota");
+            let _ = tx.send(GenResponse::overloaded("tenant_quota"));
+            return handle;
+        }
         match self.route(&req) {
             None => {
-                self.shed.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(GenResponse::overloaded());
+                self.note_shed(&tenant, "queue_full");
+                let _ = tx.send(GenResponse::overloaded("queue_full"));
             }
             Some(i) => {
                 let deadline = req.deadline.map(|d| Instant::now() + d);
@@ -317,9 +561,15 @@ impl Scheduler {
                     enqueued: Instant::now(),
                     deadline,
                 };
+                {
+                    let mut tq =
+                        self.shards[i].tenant_queued.lock().expect("tenant gauge lock");
+                    *tq.entry(tenant.clone()).or_insert(0) += 1;
+                }
                 self.shards[i].queued.fetch_add(1, Ordering::Relaxed);
                 if self.shards[i].tx.send(Job::Work(work)).is_err() {
                     self.shards[i].queued.fetch_sub(1, Ordering::Relaxed);
+                    dec_tenant_gauge(&self.shards[i].tenant_queued, &tenant);
                     let _ = tx.send(GenResponse::failure("engine gone"));
                 }
             }
@@ -352,6 +602,10 @@ impl Scheduler {
             agg.merge(&m);
         }
         agg.requests_shed += self.shed.load(Ordering::Relaxed);
+        for ((tenant, reason), count) in self.shed_by.lock().expect("shed lock").iter() {
+            labeled(&mut agg.tenants, tenant).shed += count;
+            *labeled(&mut agg.abort_reasons, &format!("shed/{reason}")) += count;
+        }
         Ok(agg)
     }
 
@@ -383,8 +637,10 @@ impl Drop for Scheduler {
 }
 
 /// One shard's loop: drain the channel, purge dead queued work, admit
-/// into free slots (FIFO, O(1) `VecDeque` pops), step every slot one
-/// decode tick, retire finished slots. The tick is batched at the
+/// into free slots in deficit-round-robin order over per-tenant lanes
+/// (weighted by [`TenantPolicy::weights`]; a single tenant degenerates
+/// to plain FIFO), step every slot one decode tick, retire finished
+/// slots. The tick is batched at the
 /// model-call boundary — `step_all` gathers every live slot's pending
 /// extension into ONE `LmBackend::forward_batch` call (plain,
 /// speculative and deferred-correction slots in the same batch), so a
@@ -400,9 +656,11 @@ fn shard_loop(
     rx: mpsc::Receiver<Job>,
     queued_gauge: Arc<AtomicUsize>,
     active_gauge: Arc<AtomicUsize>,
+    tenant_gauge: Arc<Mutex<HashMap<String, usize>>>,
+    weights: Arc<HashMap<String, u32>>,
     primary: bool,
 ) {
-    let core = shard_loop_inner(core, rx, queued_gauge, active_gauge);
+    let core = shard_loop_inner(core, rx, queued_gauge, active_gauge, tenant_gauge, weights);
     core.ctx.flush_priors();
     if primary {
         core.ctx.registry.flush_artifacts();
@@ -414,13 +672,18 @@ fn shard_loop_inner(
     rx: mpsc::Receiver<Job>,
     queued_gauge: Arc<AtomicUsize>,
     active_gauge: Arc<AtomicUsize>,
+    tenant_gauge: Arc<Mutex<HashMap<String, usize>>>,
+    weights: Arc<HashMap<String, u32>>,
 ) -> EngineCore {
-    let mut queue: VecDeque<Work> = VecDeque::new();
+    let mut queue: FairQueue<Work> = FairQueue::new(weights);
     loop {
         // Drain the channel (block only when idle).
         if core.active_len() == 0 && queue.is_empty() {
             match rx.recv() {
-                Ok(Job::Work(w)) => queue.push_back(w),
+                Ok(Job::Work(w)) => {
+                    let tenant = w.req.tenant_label().to_string();
+                    queue.push(tenant, w);
+                }
                 Ok(Job::Stats(tx)) => {
                     let _ = tx.send(core.snapshot());
                     continue;
@@ -430,7 +693,10 @@ fn shard_loop_inner(
         }
         loop {
             match rx.try_recv() {
-                Ok(Job::Work(w)) => queue.push_back(w),
+                Ok(Job::Work(w)) => {
+                    let tenant = w.req.tenant_label().to_string();
+                    queue.push(tenant, w);
+                }
                 Ok(Job::Stats(tx)) => {
                     let _ = tx.send(core.snapshot());
                 }
@@ -442,21 +708,18 @@ fn shard_loop_inner(
 
         // Purge queued work that died waiting (cancelled / deadline
         // passed) so it neither occupies queue depth nor gets admitted.
-        for _ in 0..queue.len() {
-            let w = queue.pop_front().expect("len-bounded pop");
-            match w.dead_reason() {
-                Some(abort) => {
-                    queued_gauge.fetch_sub(1, Ordering::Relaxed);
-                    core.reject(w, abort);
-                }
-                None => queue.push_back(w),
-            }
+        for (tenant, w) in queue.purge(|w| w.dead_reason().is_some()) {
+            queued_gauge.fetch_sub(1, Ordering::Relaxed);
+            dec_tenant_gauge(&tenant_gauge, &tenant);
+            let abort = w.dead_reason().expect("purged as dead");
+            core.reject(w, abort);
         }
 
-        // Admit.
+        // Admit in weighted-fair (DRR) order over the tenant lanes.
         while core.has_capacity() {
-            let Some(work) = queue.pop_front() else { break };
+            let Some((tenant, work)) = queue.pop() else { break };
             queued_gauge.fetch_sub(1, Ordering::Relaxed);
+            dec_tenant_gauge(&tenant_gauge, &tenant);
             core.admit(work);
         }
         active_gauge.store(core.active_len(), Ordering::Relaxed);
@@ -465,5 +728,135 @@ fn shard_loop_inner(
         core.step_all();
         core.reap();
         active_gauge.store(core.active_len(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate() {
+        let t0 = Instant::now();
+        // 2 req/s, burst 2: both burst tokens, then dry until refill.
+        let mut b = TokenBucket::new(2.0, 2.0, t0);
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0), "burst spent");
+        assert!(!b.try_take(at(t0, 100)), "0.2 tokens refilled, below 1");
+        assert!(b.try_take(at(t0, 600)), "1.2 tokens refilled");
+        assert!(!b.try_take(at(t0, 600)));
+    }
+
+    #[test]
+    fn token_bucket_zero_rate_is_burst_only() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0.0, 3.0, t0);
+        for _ in 0..3 {
+            assert!(b.try_take(t0));
+        }
+        // No refill, ever — even a year later.
+        assert!(!b.try_take(t0 + Duration::from_secs(365 * 24 * 3600)));
+    }
+
+    #[test]
+    fn token_bucket_burst_clamps_to_one() {
+        let t0 = Instant::now();
+        // Degenerate burst configs still admit one request.
+        let mut b = TokenBucket::new(1.0, 0.0, t0);
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0));
+        // Refill never exceeds the clamped burst.
+        assert!(b.try_take(at(t0, 10_000)));
+        assert!(!b.try_take(at(t0, 10_000)), "burst clamp holds after long idle");
+    }
+
+    fn weights(pairs: &[(&str, u32)]) -> Arc<HashMap<String, u32>> {
+        Arc::new(pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect())
+    }
+
+    #[test]
+    fn fair_queue_single_tenant_is_fifo() {
+        let mut q: FairQueue<u32> = FairQueue::new(weights(&[]));
+        for i in 0..5 {
+            q.push("a".into(), i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fair_queue_drains_by_weight() {
+        // a weighted 3, b weighted 1: DRR serves 3 a's per b.
+        let mut q: FairQueue<u32> = FairQueue::new(weights(&[("a", 3), ("b", 1)]));
+        for i in 0..6 {
+            q.push("a".into(), i);
+            q.push("b".into(), 100 + i);
+        }
+        let order: Vec<String> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(
+            order,
+            ["a", "a", "a", "b", "a", "a", "a", "b", "b", "b", "b", "b"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fair_queue_interleaves_equal_weights() {
+        let mut q: FairQueue<u32> = FairQueue::new(weights(&[]));
+        for i in 0..4 {
+            q.push("a".into(), i);
+            q.push("b".into(), 100 + i);
+        }
+        let order: Vec<String> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec!["a", "b", "a", "b", "a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn fair_queue_no_starvation_under_flood() {
+        // Starvation regression: a hot tenant at 100× the cold tenant's
+        // arrival rate must not delay the cold tenant's single request
+        // past one DRR round.
+        let mut q: FairQueue<u32> = FairQueue::new(weights(&[]));
+        for i in 0..100 {
+            q.push("hot".into(), i);
+        }
+        q.push("cold".into(), 999);
+        let pos = std::iter::from_fn(|| q.pop())
+            .position(|(t, _)| t == "cold")
+            .expect("cold item drains");
+        assert!(pos <= 1, "cold tenant served within one round, got position {pos}");
+    }
+
+    #[test]
+    fn fair_queue_purge_removes_dead_lanes() {
+        let mut q: FairQueue<u32> = FairQueue::new(weights(&[]));
+        for i in 0..3 {
+            q.push("a".into(), i);
+        }
+        q.push("b".into(), 100);
+        let dead = q.purge(|&v| v < 100);
+        assert_eq!(dead.len(), 3);
+        assert_eq!(q.len(), 1);
+        let (t, v) = q.pop().expect("b survives");
+        assert_eq!((t.as_str(), v), ("b", 100));
+        assert!(q.pop().is_none(), "purged lanes don't resurrect");
+    }
+
+    #[test]
+    fn fair_queue_reactivates_drained_tenant() {
+        let mut q: FairQueue<u32> = FairQueue::new(weights(&[]));
+        q.push("a".into(), 1);
+        assert_eq!(q.pop().map(|(_, v)| v), Some(1));
+        assert!(q.pop().is_none());
+        q.push("a".into(), 2);
+        assert_eq!(q.pop().map(|(_, v)| v), Some(2), "tenant re-rings after draining");
     }
 }

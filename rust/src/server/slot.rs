@@ -30,6 +30,7 @@ use crate::util::Rng;
 use crate::TokenId;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// One streamed chunk of output text: the bytes a committed token (or the
 /// prompt-healing overhang) contributed to the output. Tokens are byte
@@ -176,6 +177,9 @@ pub struct SlotStats {
     pub interventions: usize,
     pub model_calls: usize,
     pub masks_computed: usize,
+    /// Wall time spent computing token masks, nanoseconds (the engine
+    /// exports the per-request mean as `domino_mask_compute_us`).
+    pub mask_ns: u64,
     pub spec_proposed: usize,
     pub spec_accepted: usize,
     pub draft_proposed: usize,
@@ -353,8 +357,10 @@ impl Slot {
             return Some(decode(logits, sampling, rng));
         };
         if full_mask {
+            let t_mask = Instant::now();
             let mask = checker.compute_mask();
             stats.masks_computed += 1;
+            stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
             if mask.is_empty() {
                 return None;
             }
@@ -372,8 +378,10 @@ impl Slot {
                 return Some(proposal);
             }
             stats.interventions += 1;
+            let t_mask = Instant::now();
             let mask = checker.compute_mask();
             stats.masks_computed += 1;
+            stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
             if mask.is_empty() {
                 return None;
             }
@@ -437,8 +445,10 @@ impl Slot {
                     proposal
                 } else {
                     self.stats.interventions += 1;
+                    let t_mask = Instant::now();
                     let mask = cached_mask(decoder, masks, *variant);
                     self.stats.masks_computed += 1;
+                    self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
                     if mask.is_empty() {
                         self.done = true;
                         return Ok(());
@@ -486,8 +496,10 @@ impl Slot {
                     proposal
                 } else {
                     self.stats.interventions += 1;
+                    let t_mask = Instant::now();
                     let mask = cached_mask(decoder, masks, *variant);
                     self.stats.masks_computed += 1;
+                    self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
                     if mask.is_empty() {
                         self.done = true;
                         return Ok(());
@@ -582,8 +594,10 @@ impl Slot {
                 choice
             } else {
                 self.stats.interventions += 1;
+                let t_mask = Instant::now();
                 let mask = cached_mask(decoder, masks, *variant);
                 self.stats.masks_computed += 1;
+                self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
                 if mask.is_empty() {
                     // Dead end mid-verify: drop the unaccepted proposal
                     // suffix from the context and let the next decide
@@ -667,8 +681,10 @@ impl Slot {
                 choice
             } else {
                 self.stats.interventions += 1;
+                let t_mask = Instant::now();
                 let mask = cached_mask(decoder, masks, *variant);
                 self.stats.masks_computed += 1;
+                self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
                 if mask.is_empty() {
                     // Dead end mid-verify: drop the unaccepted suffix and
                     // let the next decide phase conclude the dead end.

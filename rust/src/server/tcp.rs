@@ -7,9 +7,15 @@
 //! ```json
 //! {"prompt": "...", "grammar": "json", "method": "domino",
 //!  "k": null, "speculative": 8, "max_tokens": 128,
-//!  "temperature": 1.0, "seed": 7, "stream": false, "deadline_ms": 2000}
+//!  "temperature": 1.0, "seed": 7, "stream": false, "deadline_ms": 2000,
+//!  "tenant": "team-a"}
 //! ```
 //! `method`: "unconstrained" | "domino" | "domino-full" | "online".
+//!
+//! `tenant` names the accounting/fairness bucket the request is billed
+//! to (1..=64 bytes, no control characters; omitted → `"default"`). It
+//! selects the token-bucket quota and weighted-fair queue lane at the
+//! scheduler, and labels the request in the `/metrics` exporter.
 //!
 //! `"draft": K` (method "domino" only) enables the grammar-pruned draft
 //! lane: up to `K ≥ 1` tokens are proposed per engine tick from the
@@ -42,11 +48,15 @@
 //! Non-streaming response (also the terminator of a streaming response):
 //! ```json
 //! {"text": "...", "tokens": 42, "interventions": 0, "model_calls": 40,
-//!  "masks": 3, "elapsed_s": 0.8, "error": null}
+//!  "masks": 3, "elapsed_s": 0.8, "error": null, "reason": null}
 //! ```
 //! `error` is `null` on success; notable values: `"overloaded"` (the
 //! scheduler shed the request at admission — bounded-queue backpressure),
 //! `"cancelled"` (client disconnected mid-decode), `"deadline exceeded"`.
+//! `reason` refines `error` with the structured cause when one is known:
+//! `"queue_full"` / `"tenant_quota"` for sheds, `"queued"` / `"decoding"`
+//! for deadline hits, `"client_cancel"` / `"client_disconnect"` for
+//! cancellations; `null` otherwise.
 //!
 //! Streaming: with `"stream": true`, each decode step emits one event
 //! line before the final stats object:
@@ -229,6 +239,30 @@ fn positive_count(v: &Json, name: &str) -> crate::Result<Option<usize>> {
     }
 }
 
+/// Server-side ceiling on `tenant` length, bytes. Tenant names become
+/// metric label values and fairness-lane keys, so they are kept short
+/// and printable rather than trusted wholesale.
+pub const MAX_TENANT_LEN: usize = 64;
+
+/// Fetch the optional `tenant` field: a short printable identifier.
+/// Control characters are rejected (they would corrupt the line-oriented
+/// wire protocol and the Prometheus exposition alike).
+fn parse_tenant(v: &Json) -> crate::Result<Option<String>> {
+    match v.get("tenant") {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => {
+            if s.is_empty() || s.len() > MAX_TENANT_LEN {
+                anyhow::bail!("`tenant` must be 1..={MAX_TENANT_LEN} bytes, got {}", s.len());
+            }
+            if s.chars().any(|c| c.is_control()) {
+                anyhow::bail!("`tenant` must not contain control characters");
+            }
+            Ok(Some(s.clone()))
+        }
+        Some(_) => anyhow::bail!("`tenant` must be a string"),
+    }
+}
+
 fn parse_request_value(v: &Json) -> crate::Result<GenRequest> {
     let prompt = v.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string();
     let method = v.get("method").and_then(|m| m.as_str()).unwrap_or("domino");
@@ -259,6 +293,7 @@ fn parse_request_value(v: &Json) -> crate::Result<GenRequest> {
         seed: non_negative(v, "seed")?.unwrap_or(0.0) as u64,
         deadline: non_negative(v, "deadline_ms")?.map(|ms| Duration::from_millis(ms as u64)),
         stream: v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false),
+        tenant: parse_tenant(v)?,
     })
 }
 
@@ -279,6 +314,10 @@ pub fn format_response(resp: &GenResponse) -> String {
     match &resp.error {
         Some(e) => obj.push(("error", Json::str(e.clone()))),
         None => obj.push(("error", Json::Null)),
+    }
+    match &resp.reason {
+        Some(r) => obj.push(("reason", Json::str(r.clone()))),
+        None => obj.push(("reason", Json::Null)),
     }
     Json::obj(obj).to_string()
 }
@@ -303,6 +342,30 @@ fn num_or_null(v: f64) -> Json {
 /// Format the `{"op":"stats"}` reply: the aggregated cross-shard metrics
 /// snapshot.
 pub fn format_stats(m: &Metrics, engines: usize) -> String {
+    let tenants = Json::Obj(
+        m.tenants
+            .iter()
+            .map(|(t, tm)| {
+                let obj = Json::obj(vec![
+                    ("completed", Json::Num(tm.completed as f64)),
+                    ("failed", Json::Num(tm.failed as f64)),
+                    ("cancelled", Json::Num(tm.cancelled as f64)),
+                    ("deadline_exceeded", Json::Num(tm.deadline_exceeded as f64)),
+                    ("shed", Json::Num(tm.shed as f64)),
+                    ("tokens_generated", Json::Num(tm.tokens_generated as f64)),
+                    ("queue_wait_p50_s", num_or_null(tm.queue_wait.percentile(0.5))),
+                    ("queue_wait_p99_s", num_or_null(tm.queue_wait.percentile(0.99))),
+                ]);
+                (t.clone(), obj)
+            })
+            .collect(),
+    );
+    let aborts = Json::Obj(
+        m.abort_reasons
+            .iter()
+            .map(|(k, n)| (k.clone(), Json::Num(*n as f64)))
+            .collect(),
+    );
     Json::obj(vec![
         ("engines", Json::Num(engines as f64)),
         ("requests_completed", Json::Num(m.requests_completed as f64)),
@@ -340,6 +403,8 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("queue_wait_p50_s", num_or_null(m.queue_wait.percentile(0.5))),
         ("req_tps_mean", num_or_null(m.req_tps.mean())),
         ("model_time_s", Json::Num(m.model_time.as_secs_f64())),
+        ("tenants", tenants),
+        ("abort_reasons", aborts),
     ])
     .to_string()
 }
@@ -457,6 +522,90 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, defaults: ServeDefaults
     }
 }
 
+/// Route one metrics-listener request line to `(status, content-type,
+/// body)`. `render` is only invoked for `/metrics`, so a health probe
+/// never pays for a cross-shard metrics merge.
+fn metrics_route(
+    request_line: &str,
+    render: impl FnOnce() -> crate::Result<String>,
+) -> (u16, &'static str, String) {
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return (405, "text/plain; charset=utf-8", "method not allowed\n".into());
+    }
+    match path {
+        "/metrics" => match render() {
+            Ok(body) => (200, "text/plain; version=0.0.4; charset=utf-8", body),
+            Err(e) => (500, "text/plain; charset=utf-8", format!("metrics failed: {e:#}\n")),
+        },
+        "/healthz" => (200, "text/plain; charset=utf-8", "ok\n".into()),
+        _ => (404, "text/plain; charset=utf-8", "not found (try /metrics)\n".into()),
+    }
+}
+
+fn handle_metrics_conn(stream: TcpStream, sched: std::sync::Weak<Scheduler>) {
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    // Drain the (ignored) headers so well-behaved clients aren't reset
+    // mid-send; a blank line terminates the request head.
+    let mut header = String::new();
+    while reader.read_line(&mut header).is_ok() && header.trim_end() != "" {
+        header.clear();
+    }
+    let (status, ctype, body) = metrics_route(&request_line, || {
+        let sched = sched.upgrade().ok_or_else(|| anyhow::anyhow!("scheduler stopped"))?;
+        Ok(super::metrics::render_prometheus(&sched.metrics()?, sched.engines()))
+    });
+    let text = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    };
+    let mut out = stream;
+    let _ = write!(
+        out,
+        "HTTP/1.1 {status} {text}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+/// Bind `addr` and serve the Prometheus scrape endpoint (`GET /metrics`,
+/// plus `GET /healthz`) on a background accept thread; returns the bound
+/// address (use port 0 for an OS-assigned port — handy for tests).
+///
+/// Hand-rolled HTTP/1.1: one request per connection, `Connection: close`.
+/// Prometheus opens a fresh connection per scrape by default, so the
+/// short-lived connection model costs nothing at scrape rates.
+///
+/// The listener holds the scheduler only weakly, so it never keeps a
+/// shut-down scheduler alive; scrapes after the last strong reference
+/// drops answer with a 500 ("scheduler stopped").
+pub fn spawn_metrics_http(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let sched = Arc::downgrade(&sched);
+    std::thread::Builder::new()
+        .name("domino-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let sched = sched.clone();
+                std::thread::spawn(move || handle_metrics_conn(stream, sched));
+            }
+        })
+        .expect("spawn metrics thread");
+    Ok(local)
+}
+
 /// Bind `addr` and serve on a background accept thread; returns the bound
 /// address (use port 0 for an OS-assigned port — handy for tests).
 pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAddr> {
@@ -475,11 +624,12 @@ pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAdd
     Ok(local)
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7761").
-pub fn serve(sched: Scheduler, addr: &str, defaults: ServeDefaults) -> crate::Result<()> {
+/// Serve forever on `addr` (e.g. "127.0.0.1:7761"). Takes the scheduler
+/// behind an `Arc` so a metrics listener ([`spawn_metrics_http`]) can
+/// share it.
+pub fn serve(sched: Arc<Scheduler>, addr: &str, defaults: ServeDefaults) -> crate::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("domino: serving on {addr} ({} engine shard(s))", sched.engines());
-    let sched = Arc::new(sched);
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let sched = sched.clone();
@@ -706,12 +856,82 @@ mod tests {
             text: "{\"a\": 1}".into(),
             stats: Default::default(),
             error: None,
+            reason: None,
             elapsed_s: 0.25,
         };
         let line = format_response(&resp);
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("text").unwrap().as_str().unwrap(), "{\"a\": 1}");
         assert_eq!(v.get("error"), Some(&Json::Null));
+        assert_eq!(v.get("reason"), Some(&Json::Null));
+        // Structured failures carry the machine-readable cause.
+        let resp = GenResponse::overloaded("tenant_quota");
+        let v = Json::parse(&format_response(&resp)).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "tenant_quota");
+    }
+
+    #[test]
+    fn parses_and_validates_tenant() {
+        let r = parse_request(r#"{"prompt": "x", "tenant": "team-a"}"#).unwrap();
+        assert_eq!(r.tenant.as_deref(), Some("team-a"));
+        assert_eq!(r.tenant_label(), "team-a");
+        // Absent and explicit-null both mean the default bucket.
+        let r = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(r.tenant, None);
+        assert_eq!(r.tenant_label(), super::super::engine::DEFAULT_TENANT);
+        let r = parse_request(r#"{"prompt": "x", "tenant": null}"#).unwrap();
+        assert_eq!(r.tenant, None);
+        // Malformed tenants are structured errors, not silent defaults.
+        assert!(parse_request(r#"{"prompt": "x", "tenant": ""}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "tenant": 7}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "tenant": "a\tb"}"#).is_err());
+        let long = format!(r#"{{"prompt": "x", "tenant": "{}"}}"#, "t".repeat(65));
+        assert!(parse_request(&long).is_err());
+        let max = format!(r#"{{"prompt": "x", "tenant": "{}"}}"#, "t".repeat(64));
+        assert!(parse_request(&max).is_ok());
+    }
+
+    #[test]
+    fn stats_include_tenants_and_abort_reasons() {
+        let mut m = Metrics::default();
+        m.tenant("team-a").completed = 3;
+        m.tenant("team-a").queue_wait.record(0.5);
+        m.record_abort("shed", "tenant_quota");
+        let v = Json::parse(&format_stats(&m, 1)).unwrap();
+        let t = v.get("tenants").unwrap().get("team-a").unwrap();
+        assert_eq!(t.get("completed").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(t.get("queue_wait_p50_s").unwrap().as_f64().unwrap(), 0.5);
+        let a = v.get("abort_reasons").unwrap().get("shed/tenant_quota").unwrap();
+        assert_eq!(a.as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn metrics_route_serves_exposition_health_and_errors() {
+        let render = || Ok("# HELP domino_tokens_generated_total t\n".to_string());
+        let (status, ctype, body) = metrics_route("GET /metrics HTTP/1.1", render);
+        assert_eq!(status, 200);
+        assert!(ctype.contains("version=0.0.4"), "{ctype}");
+        assert!(body.starts_with("# HELP"), "{body}");
+
+        let (status, _, body) = metrics_route("GET /healthz HTTP/1.1", render);
+        assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+        let (status, _, _) = metrics_route("GET /nope HTTP/1.1", render);
+        assert_eq!(status, 404);
+        let (status, _, _) = metrics_route("POST /metrics HTTP/1.1", render);
+        assert_eq!(status, 405);
+        // A health probe must not trigger a metrics render.
+        let (status, _, _) =
+            metrics_route("GET /healthz HTTP/1.1", || -> crate::Result<String> {
+                panic!("rendered for /healthz")
+            });
+        assert_eq!(status, 200);
+        // Render failures surface as a 500, not a hung scrape.
+        let (status, _, body) =
+            metrics_route("GET /metrics HTTP/1.1", || anyhow::bail!("shard poisoned"));
+        assert_eq!(status, 500);
+        assert!(body.contains("shard poisoned"), "{body}");
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! Documentation drift gates.
+//!
+//! PROTOCOL.md documents the wire protocol field by field; these tests
+//! pin that documentation to the code so a renamed or removed field
+//! fails CI instead of rotting silently. The check is deliberately
+//! one-directional (documented ⇒ exists): new fields may land with
+//! their docs in the same PR, but docs may never describe a field the
+//! parser does not know.
+
+const PROTOCOL: &str = include_str!("../PROTOCOL.md");
+const OPERATIONS: &str = include_str!("../OPERATIONS.md");
+const TCP_SRC: &str = include_str!("../src/server/tcp.rs");
+const MAIN_SRC: &str = include_str!("../src/main.rs");
+
+/// Extract the first-column backticked identifier from markdown table
+/// rows (`| `name` | ... |`). Quoted values (error strings like
+/// `"overloaded"`) and non-identifier cells are skipped — only plain
+/// `[a-z0-9_]+` names count as wire fields.
+fn table_field_names(doc: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for line in doc.lines() {
+        let Some(rest) = line.strip_prefix("| `") else {
+            continue;
+        };
+        let Some((name, _)) = rest.split_once('`') else {
+            continue;
+        };
+        if !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            names.push(name.to_string());
+        }
+    }
+    names
+}
+
+#[test]
+fn every_documented_wire_field_exists_in_tcp() {
+    let names = table_field_names(PROTOCOL);
+    // Sanity floor: if the extraction regresses (table format change),
+    // fail loudly rather than silently checking nothing.
+    assert!(
+        names.len() >= 25,
+        "extracted only {} field names from PROTOCOL.md tables — extraction broken?",
+        names.len()
+    );
+    let missing: Vec<&String> = names
+        .iter()
+        .filter(|name| !TCP_SRC.contains(&format!("\"{name}\"")))
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "PROTOCOL.md documents wire fields absent from src/server/tcp.rs: {missing:?}"
+    );
+}
+
+#[test]
+fn every_documented_cli_flag_exists_in_main() {
+    // OPERATIONS.md's flag table cells look like `--queue-depth N`; the
+    // flag parser in main.rs strips the dashes, so check the bare name.
+    let mut flags = Vec::new();
+    for line in OPERATIONS.lines() {
+        let Some(rest) = line.strip_prefix("| `--") else {
+            continue;
+        };
+        let Some((cell, _)) = rest.split_once('`') else {
+            continue;
+        };
+        let name = cell.split_whitespace().next().unwrap_or("");
+        if !name.is_empty() {
+            flags.push(name.to_string());
+        }
+    }
+    assert!(
+        flags.len() >= 10,
+        "extracted only {} flags from OPERATIONS.md — extraction broken?",
+        flags.len()
+    );
+    let missing: Vec<&String> = flags
+        .iter()
+        .filter(|flag| !MAIN_SRC.contains(&format!("\"{flag}\"")))
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "OPERATIONS.md documents CLI flags absent from src/main.rs: {missing:?}"
+    );
+}
+
+#[test]
+fn every_documented_error_reason_exists_in_engine() {
+    // The Errors matrix documents each machine-readable `reason` value;
+    // those strings live in engine.rs (Abort::reason / overloaded calls
+    // in scheduler.rs). Check against the whole server module source.
+    let engine_src = concat!(
+        include_str!("../src/server/engine.rs"),
+        include_str!("../src/server/scheduler.rs"),
+    );
+    for reason in [
+        "queue_full",
+        "tenant_quota",
+        "queued",
+        "decoding",
+        "client_cancel",
+        "client_disconnect",
+    ] {
+        assert!(
+            PROTOCOL.contains(&format!("`\"{reason}\"`")),
+            "PROTOCOL.md no longer documents abort reason {reason:?}"
+        );
+        assert!(
+            engine_src.contains(&format!("\"{reason}\"")),
+            "documented abort reason {reason:?} not found in server sources"
+        );
+    }
+}

@@ -11,6 +11,10 @@ is even installed:
    as a quoted string in rust/src/server/tcp.rs. This duplicates the
    tier-1 test in rust/tests/docs_drift.rs on purpose: the Python copy
    catches drift in docs-only PRs that skip the Rust jobs.
+3. Every `src/*.rs` path named in rust/ARCHITECTURE.md (layer map and
+   module table) must exist under rust/ — the architecture document may
+   never describe a module that was moved or deleted. Same duplication
+   rationale as the PROTOCOL check.
 
 Usage: check_docs.py [repo_root]
 Exit 0 when clean, 1 with a per-problem report otherwise.
@@ -22,6 +26,7 @@ from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FIELD_ROW_RE = re.compile(r"^\| `([a-z0-9_]+)`")
+SRC_PATH_RE = re.compile(r"src/[A-Za-z0-9_./]*?\.rs")
 SKIP_DIRS = {".git", "target", "node_modules"}
 
 
@@ -78,9 +83,27 @@ def check_protocol_fields(root: Path) -> list:
     return problems
 
 
+def check_architecture_paths(root: Path) -> list:
+    architecture = root / "rust" / "ARCHITECTURE.md"
+    if not architecture.exists():
+        return [f"missing {architecture}"]
+    paths = sorted(set(SRC_PATH_RE.findall(architecture.read_text())))
+    problems = []
+    if len(paths) < 20:
+        problems.append(
+            f"ARCHITECTURE.md: extracted only {len(paths)} source paths — format drift?"
+        )
+    for path in paths:
+        if not (root / "rust" / path).exists():
+            problems.append(f"ARCHITECTURE.md names `{path}` but it does not exist")
+    return problems
+
+
 def main() -> int:
     root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
-    problems = check_links(root) + check_protocol_fields(root)
+    problems = (
+        check_links(root) + check_protocol_fields(root) + check_architecture_paths(root)
+    )
     for problem in problems:
         print(f"FAIL {problem}")
     if problems:

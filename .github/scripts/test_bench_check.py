@@ -147,6 +147,48 @@ class CompareTest(unittest.TestCase):
         self.assertTrue(any("fig5_speculation.acceptance_rate" in f for f in fails))
         self.assertTrue(any("fig5_speculation.draft_speedup" in f for f in fails))
 
+    def test_gateway_scale_section_orientation(self):
+        # gateway_scale mixes orientations: the admission p99s gate
+        # upward moves, idle_conns_held / scale_flatness gate downward
+        # moves; conn_thread_delta and stream_sample_ms are deliberately
+        # unseeded (gated inside the bench, reported here).
+        base = {
+            "gateway_scale": {
+                "idle_conns_held": 256.0,
+                "admission_p99_small_ms": 10.0,
+                "admission_p99_large_ms": 10.0,
+                "scale_flatness": 0.667,
+            }
+        }
+        good = {
+            "gateway_scale": {
+                "idle_conns_held": 256.0,
+                "admission_p99_small_ms": 1.0,
+                "admission_p99_large_ms": 1.2,
+                "scale_flatness": 0.83,
+                "conn_thread_delta": 0.0,
+                "stream_sample_ms": 40.0,
+            }
+        }
+        lines, fails = compare(base, good)
+        self.assertEqual(fails, [])
+        self.assertTrue(
+            any("conn_thread_delta" in l and "not gated" in l for l in lines)
+        )
+        bad = {
+            "gateway_scale": {
+                "idle_conns_held": 128.0,  # -50%: gateway held half the conns
+                "admission_p99_small_ms": 10.0,
+                "admission_p99_large_ms": 40.0,  # +300%: admission no longer flat
+                "scale_flatness": 0.25,  # -62%
+            }
+        }
+        fails = failures(base, bad)
+        self.assertEqual(len(fails), 3)
+        self.assertTrue(any("gateway_scale.idle_conns_held" in f for f in fails))
+        self.assertTrue(any("gateway_scale.admission_p99_large_ms" in f for f in fails))
+        self.assertTrue(any("gateway_scale.scale_flatness" in f for f in fails))
+
     def test_custom_threshold(self):
         base = {"s": {"tok_s_1": 100.0}}
         fresh = {"s": {"tok_s_1": 89.0}}

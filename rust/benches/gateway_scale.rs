@@ -1,0 +1,310 @@
+//! Gateway + registry scale bench: the two promises the async connection
+//! gateway makes, gated.
+//!
+//! **Phase A — idle-connection hold.** Opens `DOMINO_BENCH_GATEWAY_CONNS`
+//! (default 4096) keepalive JSONL connections against a reactor-backed
+//! server on the mock runtime and asserts the process thread count does
+//! not grow with the connection count (the thread-per-connection design
+//! this replaced would add one thread per socket): the delta while
+//! holding every connection must be zero, and the total must stay under
+//! `max(cores × 2, 16)`. While all connections are held idle, a sample
+//! of them runs streaming requests end-to-end to prove the gateway is
+//! live, not merely parked.
+//!
+//! **Phase B — registry admission at scale.** Seeds a synthetic artifact
+//! corpus at two sizes (`DOMINO_BENCH_N`, default 1000, and 100× that —
+//! 100k grammars at the default), boots a tiered registry over each
+//! (O(index) header scan, overflow parked cold), and measures admission
+//! latency — hot-tier lookups interleaved with cold artifact loads. The
+//! gate: p99 admission over the 100× corpus stays within
+//! `DOMINO_BENCH_GATEWAY_RATIO` (default 1.5) of the small-corpus p99 —
+//! flat, because neither the hot map nor a keyed O(1) disk load depends
+//! on corpus size.
+//!
+//! `cargo bench --bench gateway_scale`. Exits 1 if either gate fails.
+
+use domino::constraint::{ArtifactStore, ConstraintSpec, EngineRegistry};
+use domino::domino::decoder::Engine;
+use domino::grammar::builtin;
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::server::engine::EngineCtx;
+use domino::server::reactor::{Reactor, ReactorConfig};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::util::bench::{emit_json, Table};
+use domino::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Floor (ms) under the admission-ratio gate: individual hot lookups run
+/// in microseconds, where the ratio would amplify pure timer noise.
+const FLOOR_MS: f64 = 0.25;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Live thread count of this process (`/proc/self/status`); 0 when the
+/// platform has no procfs (the thread gates are skipped there).
+fn thread_count() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|n| n.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[((samples.len() - 1) as f64 * p).round() as usize]
+}
+
+fn mock_sched() -> Arc<Scheduler> {
+    let (vocab, model) = json_mock(512);
+    Arc::new(Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(MockFactory { model: model.clone() }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        SchedulerConfig { engines: 1, slots_per_engine: 4, ..SchedulerConfig::default() },
+    ))
+}
+
+/// Phase A: hold `target` idle connections, prove bounded threads and a
+/// live streaming path. Returns (held, thread_delta, stream_ms).
+fn idle_connection_hold(target: usize) -> (usize, i64, f64) {
+    let sched = mock_sched();
+    let cfg = ReactorConfig { max_connections: target + 64, ..ReactorConfig::default() };
+    let reactor = Reactor::start(&sched, Some("127.0.0.1:0"), None, cfg).expect("start gateway");
+    let addr = reactor.jsonl_addr().expect("jsonl addr");
+    let stats = reactor.stats();
+
+    // Warm the grammar compile so the streaming sample below measures
+    // serving, not compilation.
+    {
+        let conn = TcpStream::connect(addr).expect("warmup connect");
+        let mut r = BufReader::new(&conn);
+        writeln!(&conn, r#"{{"prompt": "", "grammar": "json", "max_tokens": 2}}"#).unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+    }
+
+    let threads_before = thread_count();
+    let mut clients = Vec::with_capacity(target);
+    for i in 0..target {
+        match TcpStream::connect(addr) {
+            Ok(c) => clients.push(c),
+            Err(e) => panic!("connect #{i} failed: {e}"),
+        }
+        if i % 512 == 511 {
+            // Let the accept loop drain the backlog.
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while (stats.open() as usize) < target {
+        assert!(
+            Instant::now() < deadline,
+            "gateway accepted only {}/{target} connections in 60s",
+            stats.open()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let threads_held = thread_count();
+    let delta = threads_held as i64 - threads_before as i64;
+
+    // Liveness under load: stream on a sample of the held connections.
+    let t0 = Instant::now();
+    for conn in clients.iter().take(4) {
+        writeln!(
+            &*conn,
+            r#"{{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 8, "temperature": 1.0}}"#
+        )
+        .expect("write streaming request");
+        let mut reader = BufReader::new(conn);
+        let mut streamed = String::new();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read stream line");
+            assert!(!line.is_empty(), "gateway closed a live streaming connection");
+            let v = Json::parse(&line).expect("stream line is JSON");
+            if let Some(tok) = v.get("token") {
+                streamed.push_str(tok.as_str().unwrap());
+            } else {
+                assert_eq!(v.get("error"), Some(&Json::Null), "{line}");
+                assert_eq!(
+                    v.get("text").unwrap().as_str().unwrap(),
+                    streamed,
+                    "stream concatenation must equal the final text"
+                );
+                break;
+            }
+        }
+    }
+    let stream_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    drop(clients);
+    reactor.stop();
+    (threads_held, delta, stream_ms)
+}
+
+struct CorpusRun {
+    size: usize,
+    seed_ms: f64,
+    warm_ms: f64,
+    cold_entries: u64,
+    p99_ms: f64,
+}
+
+/// Phase B: seed `size` synthetic artifacts, boot a tiered registry over
+/// them, and sample admission latency (hot lookups + cold keyed loads).
+fn corpus_admission(engine: &Engine, vocab: &Arc<domino::tokenizer::Vocab>, size: usize) -> CorpusRun {
+    let dir = std::env::temp_dir().join(format!("domino_gateway_scale_{}_{size}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ArtifactStore::new(&dir).expect("artifact store");
+
+    let t0 = Instant::now();
+    let keys = store.seed_synthetic_corpus(engine, size).expect("seed corpus");
+    let seed_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let registry =
+        EngineRegistry::with_tiers(64, 256, Some(ArtifactStore::new(&dir).expect("reopen store")));
+    let t0 = Instant::now();
+    let loaded = registry.warm_start(vocab);
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(loaded > 0, "warm start must load up to the hot capacity");
+
+    // Prewarm the hot-path spec once (first call compiles).
+    let spec = ConstraintSpec::builtin("fig3");
+    registry.get_or_compile(&spec, vocab, None).expect("compile fig3");
+
+    let samples = 512usize;
+    let mut lat = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let t = Instant::now();
+        if i % 2 == 0 {
+            // Hot-tier admission: the common case at steady state.
+            registry.get_or_compile(&spec, vocab, None).expect("hot lookup");
+        } else {
+            // Cold admission: keyed O(1) artifact load, independent of
+            // corpus size.
+            let key = keys[(i * 7919) % keys.len()];
+            match store.load_keyed(key, vocab) {
+                domino::constraint::ArtifactLoad::Hit { .. } => {}
+                domino::constraint::ArtifactLoad::Miss => {
+                    panic!("synthetic artifact {key:#x} missing from its own corpus")
+                }
+                domino::constraint::ArtifactLoad::Invalid { reason } => {
+                    panic!("synthetic artifact {key:#x} invalid: {reason}")
+                }
+            }
+        }
+        lat.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let p99 = percentile(&mut lat, 0.99);
+    let cold_entries = registry.stats().cold_entries as u64;
+
+    let _ = std::fs::remove_dir_all(&dir);
+    CorpusRun { size, seed_ms, warm_ms, cold_entries, p99_ms: p99 }
+}
+
+fn main() {
+    let conns = env_usize("DOMINO_BENCH_GATEWAY_CONNS", 4096);
+    let small = env_usize("DOMINO_BENCH_N", 1000).max(8);
+    let big = small * 100;
+    let max_ratio = env_f64("DOMINO_BENCH_GATEWAY_RATIO", 1.5);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let thread_cap = (cores * 2).max(16);
+
+    println!(
+        "== gateway scale: {conns} idle JSONL connections on a fixed worker pool, \
+         then registry admission over {small} vs {big} on-disk grammars ==\n"
+    );
+
+    // --- Phase A ---
+    let (threads_held, delta, stream_ms) = idle_connection_hold(conns);
+    println!(
+        "held {conns} idle connections: {threads_held} threads (delta {delta:+} while \
+         holding, cap {thread_cap}); streamed sample in {stream_ms:.1} ms"
+    );
+    let threads_known = threads_held > 0; // procfs present
+    if threads_known && (delta > 2 || threads_held > thread_cap) {
+        eprintln!(
+            "FAIL: thread count scaled with connections ({threads_held} threads, \
+             delta {delta:+} over {conns} connections, cap {thread_cap})"
+        );
+        std::process::exit(1);
+    }
+
+    // --- Phase B ---
+    let vocab = Arc::new(domino::tokenizer::bpe::synthetic_json_vocab(256));
+    let cfg = builtin::by_name("fig3").expect("builtin fig3");
+    let engine = Engine::compile(cfg, vocab.clone()).expect("compile fig3");
+
+    let runs = [
+        corpus_admission(&engine, &vocab, small),
+        corpus_admission(&engine, &vocab, big),
+    ];
+    let mut table = Table::new(&[
+        "corpus", "seed (ms)", "boot scan (ms)", "cold entries", "admission p99 (ms)",
+    ]);
+    for r in &runs {
+        table.row(&[
+            r.size.to_string(),
+            format!("{:.1}", r.seed_ms),
+            format!("{:.1}", r.warm_ms),
+            r.cold_entries.to_string(),
+            format!("{:.4}", r.p99_ms),
+        ]);
+    }
+    table.print();
+
+    let p99_small = runs[0].p99_ms.max(FLOOR_MS);
+    let p99_big = runs[1].p99_ms.max(FLOOR_MS);
+    let ratio = p99_big / p99_small;
+    // `scale_flatness` is small/large so that *higher is better* for the
+    // CI regression gate (1.0 = the 100× corpus costs admission nothing);
+    // `_ms` fields are lower-is-better by suffix.
+    let scale_flatness = p99_small / p99_big;
+    println!(
+        "\nadmission p99: {:.4} ms @ {small} -> {:.4} ms @ {big} \
+         ({ratio:.2}x, limit {max_ratio:.2}x)",
+        runs[0].p99_ms, runs[1].p99_ms
+    );
+
+    emit_json(
+        "gateway_scale",
+        &[
+            ("idle_conns_held", conns as f64),
+            ("conn_thread_delta", delta as f64),
+            ("stream_sample_ms", stream_ms),
+            ("admission_p99_small_ms", runs[0].p99_ms),
+            ("admission_p99_large_ms", runs[1].p99_ms),
+            ("scale_flatness", scale_flatness),
+        ],
+    );
+
+    if ratio > max_ratio {
+        eprintln!(
+            "FAIL: registry admission p99 degraded {ratio:.2}x from {small} to {big} \
+             grammars (limit {max_ratio:.2}x via DOMINO_BENCH_GATEWAY_RATIO)"
+        );
+        std::process::exit(1);
+    }
+    println!("gateway scale gates OK (threads bounded, admission {ratio:.2}x <= {max_ratio:.2}x)");
+}

@@ -303,6 +303,111 @@ impl ArtifactStore {
         }
         (out, invalid)
     }
+
+    /// Index every artifact valid-looking for `vocab` by reading only the
+    /// fixed [`INDEX_PREFIX_LEN`]-byte envelope prefix per file — O(index)
+    /// in file count, never O(corpus) in payload bytes, so a 100k-grammar
+    /// store is scannable at boot in milliseconds. The checksum covers the
+    /// whole body and is therefore **not** verified here; a file whose
+    /// prefix lies (truncation or corruption past byte 40) is indexed but
+    /// rejected by [`Self::load_keyed`] on first demand, which falls back
+    /// to a clean rebuild exactly like any other invalid artifact. The
+    /// second return value counts files whose prefix itself is unreadable.
+    pub fn scan_index(&self, vocab: &Arc<Vocab>) -> (Vec<ArtifactHeader>, usize) {
+        let mut out = Vec::new();
+        let mut invalid = 0usize;
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return (out, invalid) };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("domino") {
+                continue;
+            }
+            match read_index_prefix(&path) {
+                Ok(Some(h)) if h.vocab_fp == vocab.fingerprint()
+                    && h.vocab_len == vocab.len() as u64 =>
+                {
+                    out.push(h)
+                }
+                Ok(_) => {} // another model's artifact — not ours to judge
+                Err(_) => invalid += 1,
+            }
+        }
+        (out, invalid)
+    }
+
+    /// Populate the store with `count` synthetic artifacts cloned from one
+    /// compiled engine — the registry-at-scale stress corpus. The payload
+    /// is encoded **once**; each file re-wraps it under a distinct
+    /// synthetic key (`fnv1a("domino-synthetic-{i}")`) with its own valid
+    /// checksum, so every file parses, indexes, and loads like a real
+    /// artifact while generation stays I/O-bound. Synthetic keys are not
+    /// build fingerprints of any real spec, so normal traffic never
+    /// resolves to them. Returns the keys written, in write order.
+    pub fn seed_synthetic_corpus(
+        &self,
+        engine: &Engine,
+        count: usize,
+    ) -> crate::Result<Vec<u64>> {
+        let payload = encode_payload(engine, &[]);
+        let vocab_fp = engine.vocab.fingerprint();
+        let vocab_len = engine.vocab.len() as u64;
+        let mut keys = Vec::with_capacity(count);
+        for i in 0..count {
+            let key = fnv1a_64(format!("domino-synthetic-{i}").as_bytes());
+            let mut body = ByteWriter::new();
+            body.u64(key);
+            body.u64(vocab_fp);
+            body.u64(vocab_len);
+            body.str(&format!("synthetic:{i}"));
+            body.u64(payload.len() as u64);
+            body.raw(&payload);
+            let body = body.into_inner();
+            let mut w = ByteWriter::new();
+            w.raw(MAGIC);
+            w.u32(ARTIFACT_VERSION);
+            w.u64(fnv1a_64(&body));
+            w.raw(&body);
+            self.publish(key, self.path_for(key), &w.into_inner())?;
+            keys.push(key);
+        }
+        Ok(keys)
+    }
+}
+
+/// Bytes of envelope prefix read per file by [`ArtifactStore::scan_index`]:
+/// magic(4) + version(4) + checksum(8) + key(8) + vocab_fp(8) + vocab_len(8).
+pub const INDEX_PREFIX_LEN: usize = 40;
+
+/// The fixed-size slice of an artifact header recoverable from the first
+/// [`INDEX_PREFIX_LEN`] bytes alone (the label that follows is
+/// variable-length and irrelevant to admission — it rides in on the full
+/// load).
+#[derive(Clone, Copy, Debug)]
+pub struct ArtifactHeader {
+    pub key: u64,
+    pub vocab_fp: u64,
+    pub vocab_len: u64,
+}
+
+/// Read and parse the fixed index prefix of one artifact file. `Ok(None)`
+/// means the file is well-formed but not from this build (magic/version);
+/// `Err` means the prefix itself is unreadable or truncated.
+fn read_index_prefix(path: &Path) -> crate::Result<Option<ArtifactHeader>> {
+    use std::io::Read as _;
+    let mut buf = [0u8; INDEX_PREFIX_LEN];
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening artifact {}", path.display()))?;
+    f.read_exact(&mut buf)
+        .with_context(|| format!("artifact {} shorter than its header", path.display()))?;
+    let mut r = ByteReader::new(&buf);
+    if r.raw(4)? != MAGIC {
+        return Ok(None);
+    }
+    if r.u32()? != ARTIFACT_VERSION {
+        return Ok(None);
+    }
+    let _checksum = r.u64()?; // verified over the whole body at load time
+    Ok(Some(ArtifactHeader { key: r.u64()?, vocab_fp: r.u64()?, vocab_len: r.u64()? }))
 }
 
 struct Header {
@@ -841,6 +946,61 @@ mod tests {
         // Prior records don't confuse the engine warm-start scan.
         let (loaded, invalid) = store.scan(&vocab(), usize::MAX);
         assert!(loaded.is_empty() && invalid == 0, "{} {}", loaded.len(), invalid);
+    }
+
+    #[test]
+    fn scan_index_reads_headers_only_and_defers_body_validation() {
+        let store = temp_store("index");
+        let v = vocab();
+        let other = Arc::new(tokenizer::bpe::synthetic_json_vocab(320));
+        let spec = ConstraintSpec::builtin("fig3");
+        let engine = Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        let path = store.save(&spec, &v, None, &engine, &[]).unwrap();
+        let other_engine = Engine::compile(spec.to_cfg().unwrap(), other.clone()).unwrap();
+        store.save(&spec, &other, None, &other_engine, &[]).unwrap();
+        // A stray temp file, a too-short artifact, and a body-corrupt
+        // artifact whose prefix is intact.
+        std::fs::write(store.dir().join("0000.tmp-1-1"), b"junk").unwrap();
+        std::fs::write(store.dir().join("ffffffffffffffff.domino"), b"junk").unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let mut body_corrupt = good.clone();
+        let last = body_corrupt.len() - 1;
+        body_corrupt[last] ^= 0x5A;
+        let key = ConstraintSpec::builtin("json").build_fingerprint(v.fingerprint(), None);
+        std::fs::write(store.path_for(key), &body_corrupt).unwrap();
+        // Wrong-key contents under json's filename: the checksum is not
+        // read at index time, so the file indexes under its header key
+        // (fig3's) but load_keyed rejects it on demand.
+
+        let (headers, invalid) = store.scan_index(&v);
+        assert_eq!(invalid, 1, "only the prefix-unreadable file counts here");
+        assert_eq!(headers.len(), 2, "fig3 plus the body-corrupt clone; other vocab skipped");
+        for h in &headers {
+            assert_eq!((h.vocab_fp, h.vocab_len), (v.fingerprint(), v.len() as u64));
+        }
+        let (headers, _) = store.scan_index(&other);
+        assert_eq!(headers.len(), 1);
+        // The deferred validation: the corrupt clone fails at load time.
+        assert!(matches!(store.load_keyed(key, &v), ArtifactLoad::Invalid { .. }));
+    }
+
+    #[test]
+    fn synthetic_corpus_indexes_and_loads_like_real_artifacts() {
+        let store = temp_store("synthetic");
+        let v = vocab();
+        let spec = ConstraintSpec::builtin("fig3");
+        let engine = Engine::compile(spec.to_cfg().unwrap(), v.clone()).unwrap();
+        let keys = store.seed_synthetic_corpus(&engine, 25).unwrap();
+        assert_eq!(keys.len(), 25);
+        assert_eq!(keys.iter().collect::<std::collections::HashSet<_>>().len(), 25);
+        let (headers, invalid) = store.scan_index(&v);
+        assert_eq!((headers.len(), invalid), (25, 0));
+        // Every synthetic file is a fully valid artifact under its key.
+        assert!(matches!(store.load_keyed(keys[7], &v), ArtifactLoad::Hit { .. }));
+        // Idempotent: re-seeding overwrites in place, no growth.
+        store.seed_synthetic_corpus(&engine, 25).unwrap();
+        let (headers, _) = store.scan_index(&v);
+        assert_eq!(headers.len(), 25);
     }
 
     #[test]

@@ -43,7 +43,7 @@ use super::ConstraintSpec;
 use crate::domino::decoder::Engine;
 use crate::tokenizer::Vocab;
 use anyhow::bail;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -80,14 +80,29 @@ pub struct RegistryStats {
     pub warm_loaded: u64,
     /// Wall time of the warm-start scan, milliseconds.
     pub warm_start_ms: u64,
-    /// Live entries.
+    /// Live entries (hot + warm tiers).
     pub entries: usize,
+    /// Hot-tier entries (engine + mask cache resident).
+    pub hot_entries: usize,
+    /// Warm-tier entries (engine resident, mask cache dropped).
+    pub warm_entries: usize,
+    /// Cold-tier entries (artifact indexed on disk, loaded on demand).
+    pub cold_entries: usize,
 }
 
 struct Entry {
     engine: Arc<Engine>,
     masks: Arc<MaskCache>,
     /// Human tag for diagnostics and artifact re-saves.
+    label: String,
+    tick: u64,
+}
+
+/// A hot-tier entry demoted by LRU pressure: the compiled engine is kept
+/// (compiling is the expensive part) but its mask cache is dropped — a
+/// warm hit pays mask recomputation, never a recompile.
+struct WarmEntry {
+    engine: Arc<Engine>,
     label: String,
     tick: u64,
 }
@@ -105,6 +120,13 @@ struct Build {
 
 struct Inner {
     map: HashMap<u64, Entry>,
+    /// Engines demoted from the hot tier, mask caches dropped.
+    warm: HashMap<u64, WarmEntry>,
+    /// Build fingerprints known to exist on disk but not resident — the
+    /// O(index) warm-start scan parks everything past the hot capacity
+    /// here, and warm-tier evictions return keys here when a store is
+    /// attached. A cold hit is an on-demand artifact load.
+    cold: HashSet<u64>,
     building: HashMap<u64, Arc<Build>>,
     tick: u64,
     /// Mask-cache counters of evicted/cleared entries, folded in so the
@@ -117,6 +139,9 @@ struct Inner {
 /// optionally backed by a persistent [`ArtifactStore`].
 pub struct EngineRegistry {
     capacity: usize,
+    /// Warm-tier bound: engines demoted from the hot tier are kept (sans
+    /// mask cache) up to this many before being dropped entirely.
+    warm_capacity: usize,
     store: Option<ArtifactStore>,
     inner: Mutex<Inner>,
     hits: AtomicU64,
@@ -141,22 +166,41 @@ pub struct EngineRegistry {
 
 impl EngineRegistry {
     pub fn new(capacity: usize) -> Arc<EngineRegistry> {
-        Self::build(capacity, None)
+        Self::build(capacity, capacity * 4, None)
     }
 
     /// A registry whose misses consult (and whose compiles write back to)
     /// a persistent artifact store.
     pub fn with_store(capacity: usize, store: ArtifactStore) -> Arc<EngineRegistry> {
-        Self::build(capacity, Some(store))
+        Self::build(capacity, capacity * 4, Some(store))
     }
 
-    fn build(capacity: usize, store: Option<ArtifactStore>) -> Arc<EngineRegistry> {
+    /// Full tier control: `capacity` hot entries (engine + mask cache),
+    /// `warm_capacity` demoted engines kept without mask caches (0
+    /// disables the warm tier — eviction drops engines outright, the
+    /// pre-tier behavior).
+    pub fn with_tiers(
+        capacity: usize,
+        warm_capacity: usize,
+        store: Option<ArtifactStore>,
+    ) -> Arc<EngineRegistry> {
+        Self::build(capacity, warm_capacity, store)
+    }
+
+    fn build(
+        capacity: usize,
+        warm_capacity: usize,
+        store: Option<ArtifactStore>,
+    ) -> Arc<EngineRegistry> {
         assert!(capacity >= 1, "registry needs capacity >= 1");
         Arc::new(EngineRegistry {
             capacity,
+            warm_capacity,
             store,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
+                warm: HashMap::new(),
+                cold: HashSet::new(),
                 building: HashMap::new(),
                 tick: 0,
                 retired_masks: MaskCacheStats::default(),
@@ -222,6 +266,17 @@ impl EngineRegistry {
                 e.tick = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok((e.engine.clone(), e.masks.clone()));
+            }
+            if let Some(w) = inner.warm.remove(&key) {
+                // Warm hit: the compiled engine was kept through its
+                // demotion; promote it back to hot with a fresh mask
+                // cache. Costs mask recomputation, never a recompile —
+                // still an in-memory hit.
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let masks = Arc::new(MaskCache::new(MASK_CACHE_CAPACITY));
+                let engine = w.engine.clone();
+                self.insert_locked(&mut inner, key, w.engine, masks.clone(), w.label);
+                return Ok((engine, masks));
             }
             if let Some(b) = inner.building.get(&key) {
                 // Someone else is compiling (or loading) this grammar
@@ -332,11 +387,34 @@ impl EngineRegistry {
         }
     }
 
-    /// Register an engine under `key`, evicting LRU entries past capacity.
+    /// Register an engine under `key`, demoting LRU hot entries past
+    /// capacity.
     fn insert_entry(&self, key: u64, engine: Arc<Engine>, masks: Arc<MaskCache>, label: String) {
         let mut inner = self.inner.lock().expect("registry lock");
+        self.insert_locked(&mut inner, key, engine, masks, label);
+    }
+
+    /// [`Self::insert_entry`] with the registry lock already held.
+    ///
+    /// Hot-tier overflow demotes the LRU victim to the warm tier: its
+    /// mask-cache counters are retired (the cache itself is dropped) but
+    /// the compiled engine survives, so a re-request recomputes masks
+    /// instead of recompiling. Warm-tier overflow drops the engine
+    /// outright — with a store attached the key is parked in the cold set,
+    /// since its artifact (written back at compile time) can be reloaded
+    /// on demand. `evictions` counts hot-tier demotions, preserving the
+    /// pre-tier meaning of "pushed out of the hot path by LRU pressure".
+    fn insert_locked(
+        &self,
+        inner: &mut Inner,
+        key: u64,
+        engine: Arc<Engine>,
+        masks: Arc<MaskCache>,
+        label: String,
+    ) {
         inner.tick += 1;
         let tick = inner.tick;
+        inner.cold.remove(&key); // resident now, by definition not cold
         if inner.map.len() >= self.capacity && !inner.map.contains_key(&key) {
             let victim = inner.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| *k);
             if let Some(old) = victim {
@@ -344,6 +422,23 @@ impl EngineRegistry {
                     let mut s = entry.masks.stats();
                     s.entries = 0; // retired entries are no longer live
                     inner.retired_masks.merge(&s);
+                    if self.warm_capacity > 0 {
+                        if inner.warm.len() >= self.warm_capacity {
+                            let wv = inner.warm.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| *k);
+                            if let Some(wk) = wv {
+                                inner.warm.remove(&wk);
+                                if self.store.is_some() {
+                                    inner.cold.insert(wk);
+                                }
+                            }
+                        }
+                        inner.warm.insert(
+                            old,
+                            WarmEntry { engine: entry.engine, label: entry.label, tick: entry.tick },
+                        );
+                    } else if self.store.is_some() {
+                        inner.cold.insert(old);
+                    }
                 }
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
@@ -351,11 +446,13 @@ impl EngineRegistry {
         inner.map.insert(key, Entry { engine, masks, label, tick });
     }
 
-    /// Scan the artifact store and register every engine valid for
-    /// `vocab`, so the first request for each pre-compiled grammar is an
-    /// in-memory hit. Idempotent per process (only the first call scans;
-    /// every shard init may invoke it unconditionally) and bounded by the
-    /// registry capacity. Returns the number of engines loaded by *this*
+    /// Scan the artifact store's *index* (fixed-size header prefixes,
+    /// O(file count) — never O(corpus bytes)) and register engines valid
+    /// for `vocab`: up to the hot capacity they are fully loaded so the
+    /// first request for each is an in-memory hit; everything past that is
+    /// parked in the cold set and loads on demand. Idempotent per process
+    /// (only the first call scans; every shard init may invoke it
+    /// unconditionally). Returns the number of engines loaded by *this*
     /// call.
     pub fn warm_start(&self, vocab: &Arc<Vocab>) -> usize {
         let Some(store) = &self.store else { return 0 };
@@ -363,27 +460,43 @@ impl EngineRegistry {
             return 0;
         }
         let t0 = Instant::now();
-        let room = self.capacity.saturating_sub(self.len());
-        let (artifacts, invalid) = store.scan(vocab, room);
+        let (headers, invalid) = store.scan_index(vocab);
         self.artifact_invalid.fetch_add(invalid as u64, Ordering::Relaxed);
         let mut loaded = 0usize;
-        for a in artifacts {
-            if self.len() >= self.capacity {
-                break; // respect the bound; later artifacts load on demand
-            }
-            let already = {
+        for h in headers {
+            let (resident, hot_full) = {
                 let inner = self.inner.lock().expect("registry lock");
-                inner.map.contains_key(&a.key)
+                (
+                    inner.map.contains_key(&h.key) || inner.warm.contains_key(&h.key),
+                    inner.map.len() >= self.capacity,
+                )
             };
-            if already {
+            if resident {
                 continue;
             }
-            let masks = Arc::new(MaskCache::new(MASK_CACHE_CAPACITY));
-            for s in a.masks {
-                masks.put(s.variant, s.state, s.mask);
+            if hot_full {
+                // Past the hot bound: index only. A later request pays one
+                // on-demand artifact load — still no compile.
+                self.inner.lock().expect("registry lock").cold.insert(h.key);
+                continue;
             }
-            self.insert_entry(a.key, a.engine, masks, a.label);
-            loaded += 1;
+            match store.load_keyed(h.key, vocab) {
+                ArtifactLoad::Hit { engine, masks, label } => {
+                    let cache = Arc::new(MaskCache::new(MASK_CACHE_CAPACITY));
+                    for s in masks {
+                        cache.put(s.variant, s.state, s.mask);
+                    }
+                    self.insert_entry(h.key, engine, cache, label);
+                    loaded += 1;
+                }
+                ArtifactLoad::Invalid { reason } => {
+                    // The index prefix looked fine but the body didn't
+                    // verify; first real demand rebuilds from source.
+                    self.artifact_invalid.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("domino: artifact {:016x} unusable ({reason}); skipped", h.key);
+                }
+                ArtifactLoad::Miss => {} // raced with a concurrent delete
+            }
         }
         self.artifact_hits.fetch_add(loaded as u64, Ordering::Relaxed);
         self.warm_loaded.fetch_add(loaded as u64, Ordering::Relaxed);
@@ -421,22 +534,27 @@ impl EngineRegistry {
         written
     }
 
-    /// Is this build's engine currently cached (no compile triggered)?
+    /// Is this build's engine currently resident (no compile triggered)?
+    /// True for both tiers: a warm hit promotes without recompiling.
     pub fn contains(&self, spec: &ConstraintSpec, vocab: &Arc<Vocab>, k: Option<u32>) -> bool {
         let key = Self::key_for(spec, vocab, k);
-        self.inner.lock().expect("registry lock").map.contains_key(&key)
+        let inner = self.inner.lock().expect("registry lock");
+        inner.map.contains_key(&key) || inner.warm.contains_key(&key)
     }
 
+    /// Resident engines (hot + warm tiers).
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("registry lock").map.len()
+        let inner = self.inner.lock().expect("registry lock");
+        inner.map.len() + inner.warm.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drop every cached engine (counters are kept; the dropped entries'
-    /// mask-cache counters are folded into the retired aggregate).
+    /// Drop every resident engine and the cold index (counters are kept;
+    /// the dropped entries' mask-cache counters are folded into the
+    /// retired aggregate).
     pub fn clear(&self) {
         let mut inner = self.inner.lock().expect("registry lock");
         let entries: Vec<Entry> = inner.map.drain().map(|(_, e)| e).collect();
@@ -445,9 +563,15 @@ impl EngineRegistry {
             s.entries = 0;
             inner.retired_masks.merge(&s);
         }
+        inner.warm.clear();
+        inner.cold.clear();
     }
 
     pub fn stats(&self) -> RegistryStats {
+        let (hot, warm, cold) = {
+            let inner = self.inner.lock().expect("registry lock");
+            (inner.map.len(), inner.warm.len(), inner.cold.len())
+        };
         RegistryStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -459,7 +583,10 @@ impl EngineRegistry {
             artifact_invalid: self.artifact_invalid.load(Ordering::Relaxed),
             warm_loaded: self.warm_loaded.load(Ordering::Relaxed),
             warm_start_ms: self.warm_start_ms.load(Ordering::Relaxed),
-            entries: self.len(),
+            entries: hot + warm,
+            hot_entries: hot,
+            warm_entries: warm,
+            cold_entries: cold,
         }
     }
 
@@ -575,6 +702,66 @@ mod tests {
         let (engine, _) = reg2.get_or_compile(&spec, &v, None).unwrap();
         assert!(!engine.is_lazy(), "warm-started engines carry dense tables");
         assert_eq!(reg2.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hot_overflow_demotes_to_warm_and_promotes_back_without_recompile() {
+        let v = vocab();
+        let reg = EngineRegistry::with_tiers(1, 4, None);
+        let a = ConstraintSpec::builtin("fig3");
+        let b = ConstraintSpec::builtin("json");
+        let (e1, _) = reg.get_or_compile(&a, &v, None).unwrap();
+        reg.get_or_compile(&b, &v, None).unwrap(); // demotes `a` hot→warm
+        let s = reg.stats();
+        assert_eq!((s.hot_entries, s.warm_entries, s.evictions), (1, 1, 1));
+        assert!(reg.contains(&a, &v, None), "warm entries count as resident");
+        let (e2, _) = reg.get_or_compile(&a, &v, None).unwrap();
+        assert!(Arc::ptr_eq(&e1, &e2), "promotion must reuse the compiled engine");
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses), (1, 2), "a warm hit is a hit, not a recompile");
+        assert_eq!((s.hot_entries, s.warm_entries), (1, 1), "promotion demoted `b` in turn");
+    }
+
+    #[test]
+    fn zero_warm_capacity_restores_drop_on_evict() {
+        let v = vocab();
+        let reg = EngineRegistry::with_tiers(1, 0, None);
+        let a = ConstraintSpec::builtin("fig3");
+        reg.get_or_compile(&a, &v, None).unwrap();
+        reg.get_or_compile(&ConstraintSpec::builtin("json"), &v, None).unwrap();
+        assert!(!reg.contains(&a, &v, None), "no warm tier: eviction drops the engine");
+        let s = reg.stats();
+        assert_eq!((s.entries, s.warm_entries, s.evictions), (1, 0, 1));
+    }
+
+    #[test]
+    fn warm_start_parks_overflow_in_cold_and_loads_on_demand() {
+        let dir = std::env::temp_dir()
+            .join(format!("domino_registry_cold_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let v = vocab();
+        let a = ConstraintSpec::builtin("fig3");
+        let b = ConstraintSpec::builtin("json");
+        {
+            let reg = EngineRegistry::with_store(4, ArtifactStore::new(&dir).unwrap());
+            reg.get_or_compile(&a, &v, None).unwrap();
+            reg.get_or_compile(&b, &v, None).unwrap();
+        }
+        // Hot capacity 1: warm start fully loads one artifact, indexes the
+        // other cold.
+        let reg2 = EngineRegistry::with_tiers(1, 4, Some(ArtifactStore::new(&dir).unwrap()));
+        assert_eq!(reg2.warm_start(&v), 1);
+        let s = reg2.stats();
+        assert_eq!((s.hot_entries, s.cold_entries), (1, 1));
+        // Demanding both specs must never recompile: one is resident, the
+        // other is an on-demand artifact load.
+        reg2.get_or_compile(&a, &v, None).unwrap();
+        reg2.get_or_compile(&b, &v, None).unwrap();
+        let s = reg2.stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "one resident hit, one cold load");
+        assert_eq!((s.artifact_hits, s.artifact_misses), (2, 0), "cold demand hit the store");
+        assert_eq!(s.cold_entries, 0, "the cold key became resident");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -6,6 +6,9 @@
 //!              [--lazy-compile] [--draft K] [--mock]
 //!              [--metrics-port P] [--tenant-rate R] [--tenant-burst B]
 //!              [--tenant-weights "a=4,b=1"]
+//!              [--max-connections N] [--idle-timeout-ms MS]
+//!              [--read-timeout-ms MS] [--reactor-workers N]
+//!              [--registry-hot N] [--registry-warm N]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --json-schema SRC |
 //!                 --json-schema-file PATH | --regex PATTERN | --stop "a,b"]
@@ -27,6 +30,17 @@
 //! (token bucket, burst `--tenant-burst B`, default `max(R, 1)`);
 //! `--tenant-weights "a=4,b=1"` sets deficit-round-robin drain weights
 //! (unlisted tenants weigh 1). See `rust/OPERATIONS.md`.
+//!
+//! The gateway (see `rust/ARCHITECTURE.md`) multiplexes every client
+//! connection — both JSONL and the metrics endpoint — over a fixed
+//! reactor worker pool. `--max-connections N` caps concurrently open
+//! connections (over-cap accepts are refused with the structured
+//! `overloaded`/`connection_limit` reply); `--idle-timeout-ms` /
+//! `--read-timeout-ms` bound silent keepalives and stalled partial
+//! requests (`0` disables either); `--reactor-workers N` sizes the pool.
+//! `--registry-hot N` / `--registry-warm N` size the engine-registry
+//! tiers: hot entries keep engine + mask cache, warm entries keep the
+//! engine only, overflow parks on disk when `--artifact-dir` is set.
 //!
 //! `--engines N` shards the server across N engine threads sharing one
 //! compiled-grammar registry (grammar-affinity routing, bounded queues
@@ -56,6 +70,7 @@ use domino::runtime::mock::{json_mock, MockFactory};
 use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
 use domino::scanner::Scanner;
 use domino::server::engine::{EngineCtx, GenRequest};
+use domino::server::reactor::{Reactor, ReactorConfig};
 use domino::server::scheduler::{Scheduler, SchedulerConfig, TenantPolicy};
 use domino::server::tcp;
 use domino::util::Json;
@@ -130,9 +145,54 @@ fn parse_tenant_policy(flags: &HashMap<String, String>) -> domino::Result<Tenant
     Ok(TenantPolicy { rate: num("tenant-rate")?, burst: num("tenant-burst")?, weights })
 }
 
+/// Gateway shape from `--max-connections` / `--idle-timeout-ms` /
+/// `--read-timeout-ms` / `--reactor-workers` (timeouts in milliseconds;
+/// `0` disables one). Invalid values are structured errors, not silent
+/// defaults.
+fn parse_gateway(flags: &HashMap<String, String>) -> domino::Result<ReactorConfig> {
+    let mut cfg = ReactorConfig::default();
+    if let Some(s) = flags.get("max-connections") {
+        cfg.max_connections = match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => anyhow::bail!("--max-connections must be an integer ≥ 1, got `{s}`"),
+        };
+    }
+    if let Some(s) = flags.get("idle-timeout-ms") {
+        let ms: u64 = s.parse().map_err(|_| {
+            anyhow::anyhow!("--idle-timeout-ms must be an integer (ms; 0 disables), got `{s}`")
+        })?;
+        cfg.idle_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(s) = flags.get("read-timeout-ms") {
+        let ms: u64 = s.parse().map_err(|_| {
+            anyhow::anyhow!("--read-timeout-ms must be an integer (ms; 0 disables), got `{s}`")
+        })?;
+        cfg.read_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(s) = flags.get("reactor-workers") {
+        cfg.workers = match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => anyhow::bail!("--reactor-workers must be an integer ≥ 1, got `{s}`"),
+        };
+    }
+    Ok(cfg)
+}
+
 fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler> {
     let mock = flags.contains_key("mock");
+    let tier_defaults = SchedulerConfig::default();
+    let tier = |name: &str, default: usize| -> domino::Result<usize> {
+        match flags.get(name) {
+            None => Ok(default),
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) => Ok(n),
+                Err(_) => anyhow::bail!("--{name} must be a non-negative integer, got `{s}`"),
+            },
+        }
+    };
     let cfg = SchedulerConfig {
+        registry_capacity: tier("registry-hot", tier_defaults.registry_capacity)?,
+        registry_warm_capacity: tier("registry-warm", tier_defaults.registry_warm_capacity)?,
         engines: flags.get("engines").and_then(|s| s.parse().ok()).unwrap_or(1),
         slots_per_engine: flags.get("slots").and_then(|s| s.parse().ok()).unwrap_or(4),
         queue_depth: flags.get("queue-depth").and_then(|s| s.parse().ok()).unwrap_or(64),
@@ -436,31 +496,35 @@ fn main() {
     let (flags, positional) = parse_flags(&args[args.len().min(1)..]);
     let result = match cmd {
         "serve" => match parse_draft(&flags).and_then(|draft| {
+            let gateway = parse_gateway(&flags)?;
             let sched = start_scheduler(&flags)?;
-            Ok((draft, sched))
+            Ok((draft, gateway, sched))
         }) {
-            Ok((draft, sched)) => {
+            Ok((draft, mut gateway, sched)) => {
+                gateway.defaults = tcp::ServeDefaults { draft };
                 let sched = std::sync::Arc::new(sched);
-                let metrics_port = flags
+                let metrics_addr = flags
                     .get("metrics-port")
                     .cloned()
-                    .or_else(|| std::env::var("DOMINO_METRICS_PORT").ok());
-                let metrics = metrics_port.map(|p| {
-                    tcp::spawn_metrics_http(sched.clone(), &format!("0.0.0.0:{p}"))
-                });
-                match metrics {
-                    Some(Err(e)) => Err(e.context("binding --metrics-port")),
-                    Some(Ok(addr)) => {
-                        eprintln!("domino: metrics on http://{addr}/metrics");
-                        let addr =
-                            flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
-                        tcp::serve(sched, &addr, tcp::ServeDefaults { draft })
+                    .or_else(|| std::env::var("DOMINO_METRICS_PORT").ok())
+                    .map(|p| format!("0.0.0.0:{p}"));
+                let addr =
+                    flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
+                // One reactor multiplexes both listeners over the same
+                // worker pool — no per-connection (or per-scrape) threads.
+                match Reactor::start(&sched, Some(&addr), metrics_addr.as_deref(), gateway) {
+                    Ok(reactor) => {
+                        if let Some(m) = reactor.metrics_addr() {
+                            eprintln!("domino: metrics on http://{m}/metrics");
+                        }
+                        eprintln!(
+                            "domino: serving on {addr} ({} engine shard(s))",
+                            sched.engines()
+                        );
+                        reactor.join();
+                        Ok(())
                     }
-                    None => {
-                        let addr =
-                            flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7761".into());
-                        tcp::serve(sched, &addr, tcp::ServeDefaults { draft })
-                    }
+                    Err(e) => Err(e.context("binding gateway listeners")),
                 }
             }
             Err(e) => Err(e),
@@ -493,6 +557,9 @@ fn main() {
                  \u{20}          [--metrics-port P] Prometheus /metrics on 0.0.0.0:P\n\
                  \u{20}          [--tenant-rate R] [--tenant-burst B] per-tenant admission quota\n\
                  \u{20}          [--tenant-weights \"a=4,b=1\"] weighted-fair queue drain\n\
+                 \u{20}          [--max-connections N] [--idle-timeout-ms MS] [--read-timeout-ms MS]\n\
+                 \u{20}          [--reactor-workers N] gateway shape (0 ms disables a timeout)\n\
+                 \u{20}          [--registry-hot N] [--registry-warm N] engine-registry tier sizes\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --json-schema SRC | --json-schema-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\

@@ -712,6 +712,9 @@ impl EngineCore {
         m.artifact_invalid = r.artifact_invalid;
         m.warm_start_loaded = r.warm_loaded;
         m.warm_start_ms = r.warm_start_ms;
+        m.registry_hot_entries = r.hot_entries as u64;
+        m.registry_warm_entries = r.warm_entries as u64;
+        m.registry_cold_entries = r.cold_entries as u64;
         let mc = self.ctx.registry.mask_stats();
         m.mask_cache_hits = mc.hits;
         m.mask_cache_misses = mc.misses;

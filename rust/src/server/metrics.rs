@@ -247,6 +247,25 @@ pub struct Metrics {
     pub mask_cache_misses: u64,
     /// Masks dropped by LRU eviction.
     pub mask_cache_evictions: u64,
+    /// Gateway connections currently open (JSONL + metrics listeners).
+    pub connections_open: u64,
+    /// Connections accepted by the gateway since boot.
+    pub connections_accepted: u64,
+    /// Connections refused at accept because `--max-connections` was
+    /// reached (the client saw `"overloaded"`/`"connection_limit"`).
+    pub connections_rejected: u64,
+    /// Connections closed by the gateway idle timeout.
+    pub connections_idle_timeout: u64,
+    /// Connections closed by the gateway read (partial-request) timeout.
+    pub connections_read_timeout: u64,
+    /// Engines resident in the registry's hot tier (full mask caches).
+    pub registry_hot_entries: u64,
+    /// Engines resident in the warm tier (compiled, mask caches dropped).
+    pub registry_warm_entries: u64,
+    /// Artifacts indexed on disk but not resident (cold tier).
+    pub registry_cold_entries: u64,
+    /// Gateway connection lifetime, seconds (recorded at close).
+    pub conn_lifetime: Summary,
     /// Time to first token, seconds.
     pub ttft: Summary,
     /// Admission-queue wait (submit → slot admission), seconds.
@@ -330,6 +349,20 @@ impl Metrics {
         self.mask_cache_hits = self.mask_cache_hits.max(other.mask_cache_hits);
         self.mask_cache_misses = self.mask_cache_misses.max(other.mask_cache_misses);
         self.mask_cache_evictions = self.mask_cache_evictions.max(other.mask_cache_evictions);
+        // Connection counters and registry tier gauges have a single
+        // source (the gateway reactor / the shared registry), so they
+        // aggregate by max like the other shared-source fields.
+        self.connections_open = self.connections_open.max(other.connections_open);
+        self.connections_accepted = self.connections_accepted.max(other.connections_accepted);
+        self.connections_rejected = self.connections_rejected.max(other.connections_rejected);
+        self.connections_idle_timeout =
+            self.connections_idle_timeout.max(other.connections_idle_timeout);
+        self.connections_read_timeout =
+            self.connections_read_timeout.max(other.connections_read_timeout);
+        self.registry_hot_entries = self.registry_hot_entries.max(other.registry_hot_entries);
+        self.registry_warm_entries = self.registry_warm_entries.max(other.registry_warm_entries);
+        self.registry_cold_entries = self.registry_cold_entries.max(other.registry_cold_entries);
+        self.conn_lifetime.merge(&other.conn_lifetime);
         self.ttft.merge(&other.ttft);
         self.queue_wait.merge(&other.queue_wait);
         self.req_tps.merge(&other.req_tps);
@@ -623,10 +656,46 @@ pub const METRIC_DEFS: &[MetricDef] = &[
         help: "Masks dropped by mask-cache LRU eviction.",
     },
     MetricDef {
+        name: "domino_registry_tier_entries",
+        kind: MetricKind::Gauge,
+        labels: &["tier"],
+        help: "Registry residency by tier: hot (engine + mask cache), warm (engine only), cold (artifact indexed on disk, loaded on demand).",
+    },
+    MetricDef {
         name: "domino_engine_shards",
         kind: MetricKind::Gauge,
         labels: &[],
         help: "Engine shards (threads) the scheduler is running.",
+    },
+    MetricDef {
+        name: "domino_connections_open",
+        kind: MetricKind::Gauge,
+        labels: &[],
+        help: "Gateway connections currently open across the JSONL and metrics listeners.",
+    },
+    MetricDef {
+        name: "domino_connections_accepted_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Connections accepted by the gateway since boot.",
+    },
+    MetricDef {
+        name: "domino_connections_rejected_total",
+        kind: MetricKind::Counter,
+        labels: &[],
+        help: "Connections refused at accept because --max-connections was reached (the client sees overloaded/connection_limit).",
+    },
+    MetricDef {
+        name: "domino_connection_timeouts_total",
+        kind: MetricKind::Counter,
+        labels: &["kind"],
+        help: "Connections closed by a gateway timeout: kind is idle (no request activity) or read (a partial request stalled).",
+    },
+    MetricDef {
+        name: "domino_connection_lifetime_seconds",
+        kind: MetricKind::Histogram,
+        labels: &[],
+        help: "Gateway connection lifetime from accept to close.",
     },
     MetricDef {
         name: "domino_tenant_requests_total",
@@ -805,7 +874,32 @@ fn write_samples(out: &mut String, def: &MetricDef, m: &Metrics, shards: usize) 
         "domino_mask_cache_evictions_total" => {
             write_counter(out, name, "", m.mask_cache_evictions as f64)
         }
+        "domino_registry_tier_entries" => {
+            for (tier, v) in [
+                ("hot", m.registry_hot_entries),
+                ("warm", m.registry_warm_entries),
+                ("cold", m.registry_cold_entries),
+            ] {
+                write_counter(out, name, &format!("tier=\"{tier}\""), v as f64);
+            }
+        }
         "domino_engine_shards" => write_counter(out, name, "", shards as f64),
+        "domino_connections_open" => write_counter(out, name, "", m.connections_open as f64),
+        "domino_connections_accepted_total" => {
+            write_counter(out, name, "", m.connections_accepted as f64)
+        }
+        "domino_connections_rejected_total" => {
+            write_counter(out, name, "", m.connections_rejected as f64)
+        }
+        "domino_connection_timeouts_total" => {
+            for (kind, v) in [
+                ("idle", m.connections_idle_timeout),
+                ("read", m.connections_read_timeout),
+            ] {
+                write_counter(out, name, &format!("kind=\"{kind}\""), v as f64);
+            }
+        }
+        "domino_connection_lifetime_seconds" => write_hist(out, name, "", &m.conn_lifetime),
         "domino_tenant_requests_total" => {
             for (tenant, t) in &m.tenants {
                 for (outcome, v) in [

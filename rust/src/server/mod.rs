@@ -6,16 +6,17 @@
 //! lives on its own *engine thread*):
 //!
 //! ```text
-//!  clients ──TCP/JSONL──▶ router threads ──▶ Scheduler
-//!                                             │ affinity route / spill /
-//!                                             │ shed ("overloaded")
+//!  clients ──TCP/JSONL──▶ gateway reactor ──▶ Scheduler
+//!          (thousands)    (accept + fixed      │ affinity route / spill /
+//!                          worker pool)        │ shed ("overloaded")
 //!                        ┌────────────────────┼──────────────┐
 //!                        ▼                    ▼              ▼
 //!                  shard 0 thread       shard 1 thread    … shard N-1
 //!                  queue→[S0 S1 …]      queue→[S0 S1 …]
 //!                        │  each tick: purge dead, admit, step, reap
 //!                        └───────── shared EngineRegistry ───┘
-//!                                   (one compile per grammar)
+//!                                   (hot/warm/cold tiers,
+//!                                    one compile per grammar)
 //! ```
 //!
 //! * [`scheduler`] — the sharded front: grammar-affinity routing with
@@ -37,12 +38,20 @@
 //!   and a per-step token sink for streaming.
 //! * [`metrics`] — counters + latency/throughput summaries, mergeable
 //!   across shards.
-//! * [`tcp`] — a JSONL-over-TCP front end (std::net, thread per
-//!   connection; the vendored crate set has no tokio) with streaming,
-//!   `stats`, input validation and disconnect cancellation.
+//! * [`tcp`] — the JSONL wire protocol: parsing, validation, response /
+//!   event / stats formatting, and the `spawn_serve` / `serve` /
+//!   `spawn_metrics_http` entry points (now backed by the reactor; the
+//!   legacy thread-per-connection loop survives as
+//!   [`tcp::spawn_serve_threaded`] for differential testing).
+//! * [`reactor`] — the async connection gateway: nonblocking sockets
+//!   multiplexed over a fixed worker pool (std::net polling; the
+//!   vendored crate set has no tokio/mio), `--max-connections`
+//!   admission, idle/read timeouts with structured abort reasons, and
+//!   graceful drain on shutdown.
 
 pub mod engine;
 pub mod metrics;
+pub mod reactor;
 pub mod scheduler;
 pub mod slot;
 pub mod tcp;
@@ -51,5 +60,6 @@ pub use engine::{
     Constraint, ConstraintSpec, EngineCore, EngineCtx, Enforcement, GenRequest, GenResponse, Server,
 };
 pub use metrics::Metrics;
+pub use reactor::{GatewayStats, Reactor, ReactorConfig};
 pub use scheduler::{CancelToken, RequestHandle, Scheduler, SchedulerConfig};
 pub use slot::{step_batched, BatchTick, DecodeMode, Slot, StreamEvent};

@@ -1,0 +1,984 @@
+//! The async connection gateway: thousands of idle streaming clients on a
+//! fixed handful of threads.
+//!
+//! The original front end ([`tcp::spawn_serve`](super::tcp::spawn_serve))
+//! burned one OS thread per accepted connection — fine at tens of
+//! clients, fatal at the "millions of users" scale the roadmap targets,
+//! where most connections are *idle* (streaming consumers between tokens,
+//! keepalive clients between requests) and a parked thread per idle
+//! socket is pure waste. This module replaces it with a dependency-light
+//! reactor:
+//!
+//! * **one accept thread** owns the listeners (JSONL and/or the metrics
+//!   HTTP endpoint), applies the `--max-connections` admission cap, and
+//!   deals accepted sockets round-robin to the workers;
+//! * **a small worker pool** (default [`ReactorConfig::workers`]) owns
+//!   every connection as a nonblocking state machine: readiness-driven
+//!   reads assemble JSONL frames across arbitrary packet boundaries,
+//!   decode work is handed to the existing [`Scheduler`] *unchanged*
+//!   (same `submit`/`submit_streaming` calls the threaded path used),
+//!   and streaming tokens drain through buffered, nonblocking writes;
+//! * **timeouts with structured reasons**: connections over the admission
+//!   cap are refused with `"overloaded"`/`"connection_limit"`, silent
+//!   keepalive connections are closed after `idle_timeout` with
+//!   `"timeout"`/`"idle_timeout"`, and a stalled partial request (the
+//!   slow-loris shape) is closed after `read_timeout` with
+//!   `"timeout"`/`"read_timeout"` — all three documented in PROTOCOL.md
+//!   and covered by the docs-drift test;
+//! * **graceful drain**: [`Reactor::stop`] stops accepting, lets in-flight
+//!   requests finish and flush for up to `drain_grace`, then cancels the
+//!   stragglers. The workers hold the scheduler only **weakly**, so the
+//!   gateway never keeps a shut-down scheduler alive — artifact and prior
+//!   flushes run exactly as they would without a gateway in front.
+//!
+//! There is deliberately no epoll/kqueue binding here (the crate's only
+//! dependency is `anyhow`): readiness is discovered by polling nonblocking
+//! sockets with a per-connection adaptive backoff (fresh activity polls at
+//! 1 ms; a quiet connection decays to [`MAX_READ_BACKOFF`]), which keeps
+//! the syscall load of thousands of idle connections to a few hundred
+//! reads per second per worker — measured in `benches/gateway_scale.rs`,
+//! which gates ≥4k concurrent idle streaming connections on a bounded
+//! thread count.
+
+use super::metrics::{Metrics, Summary};
+use super::scheduler::{RequestHandle, Scheduler};
+use super::slot::StreamEvent;
+use super::tcp::{
+    error_line, format_event, format_response, format_stats, metrics_route, parse_line, Request,
+    ServeDefaults,
+};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+/// Ceiling on one buffered request line; a client that exceeds it gets a
+/// structured `bad request` and the connection is closed (there is no way
+/// to resynchronize mid-line).
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Ceiling on buffered unsent reply bytes per connection. A consumer that
+/// falls this far behind its own stream is treated as gone.
+const MAX_WRITE_BUF: usize = 8 << 20;
+
+/// Fastest per-connection read poll (fresh activity).
+const MIN_READ_BACKOFF: Duration = Duration::from_millis(1);
+
+/// Slowest per-connection read poll (long-idle connection). Bounds the
+/// idle-detection latency while keeping 4k idle sockets cheap.
+const MAX_READ_BACKOFF: Duration = Duration::from_millis(50);
+
+/// Accept-loop and worker-pass sleep when nothing made progress.
+const PASS_SLEEP: Duration = Duration::from_millis(1);
+
+/// Gateway shape knobs (CLI: `--max-connections`, `--idle-timeout-ms`,
+/// `--read-timeout-ms`, `--reactor-workers`).
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Admission cap across all listeners. Connections over the cap are
+    /// refused with `"overloaded"`/`"connection_limit"` (HTTP 503 on the
+    /// metrics listener) rather than queued invisibly in the backlog.
+    pub max_connections: usize,
+    /// Close connections with no in-flight request and no traffic for
+    /// this long (`None` = never): `"timeout"`/`"idle_timeout"`.
+    pub idle_timeout: Option<Duration>,
+    /// Close connections holding an *incomplete* request (a partial JSONL
+    /// line, or an unterminated HTTP request head — the slow-loris shape)
+    /// for this long (`None` = never): `"timeout"`/`"read_timeout"`.
+    pub read_timeout: Option<Duration>,
+    /// Worker threads multiplexing the connections. Each added worker
+    /// buys parallel request parsing/formatting, not decode throughput —
+    /// decoding is the scheduler's department.
+    pub workers: usize,
+    /// How long [`Reactor::stop`] lets in-flight requests finish and
+    /// flush before cancelling them.
+    pub drain_grace: Duration,
+    /// Server-side request defaults (`--draft`), applied exactly as the
+    /// threaded path applies them.
+    pub defaults: ServeDefaults,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_connections: 4096,
+            idle_timeout: Some(Duration::from_secs(300)),
+            read_timeout: Some(Duration::from_secs(30)),
+            workers: 2,
+            drain_grace: Duration::from_secs(5),
+            defaults: ServeDefaults::default(),
+        }
+    }
+}
+
+/// Shared gateway counters, snapshotted into [`Metrics`] at render time by
+/// [`GatewayStats::fill`] (the gateway is a single source, so these never
+/// ride through the shard merge).
+#[derive(Default)]
+pub struct GatewayStats {
+    open: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    idle_timeouts: AtomicU64,
+    read_timeouts: AtomicU64,
+    lifetime: Mutex<Summary>,
+}
+
+impl GatewayStats {
+    /// Fold the gateway's connection counters into a metrics snapshot
+    /// (typically the scheduler aggregate, just before rendering).
+    pub fn fill(&self, m: &mut Metrics) {
+        m.connections_open = self.open.load(Ordering::Relaxed);
+        m.connections_accepted = self.accepted.load(Ordering::Relaxed);
+        m.connections_rejected = self.rejected.load(Ordering::Relaxed);
+        m.connections_idle_timeout = self.idle_timeouts.load(Ordering::Relaxed);
+        m.connections_read_timeout = self.read_timeouts.load(Ordering::Relaxed);
+        m.conn_lifetime.merge(&self.lifetime.lock().expect("gateway lifetime lock"));
+        let rejected = m.connections_rejected;
+        if rejected > 0 {
+            *m.abort_reasons.entry("overloaded/connection_limit".into()).or_insert(0) += rejected;
+        }
+        for (reason, n) in [
+            ("timeout/idle_timeout", m.connections_idle_timeout),
+            ("timeout/read_timeout", m.connections_read_timeout),
+        ] {
+            if n > 0 {
+                *m.abort_reasons.entry(reason.into()).or_insert(0) += n;
+            }
+        }
+    }
+
+    pub fn open(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    fn record_close(&self, opened: Instant) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+        let mut lt = self.lifetime.lock().expect("gateway lifetime lock");
+        lt.record(opened.elapsed().as_secs_f64());
+    }
+}
+
+/// Which protocol a connection speaks.
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    /// JSONL request/response + token streaming.
+    Jsonl,
+    /// One hand-rolled HTTP/1.1 exchange (`GET /metrics`, `/healthz`),
+    /// `Connection: close` — folded into the reactor so a slow or hostile
+    /// metrics client can no longer spawn (or exhaust) threads.
+    Metrics,
+}
+
+/// An in-flight generation request: the scheduler handle plus, for
+/// streaming requests, the event receiver. The sink side lives in the
+/// engine slot; it is dropped when the slot retires, which is how the
+/// pump learns the stream is complete (same ordering contract as the
+/// threaded path: events first, final stats line last).
+struct InFlight {
+    handle: RequestHandle,
+    events: Option<mpsc::Receiver<StreamEvent>>,
+}
+
+/// One multiplexed connection as a nonblocking state machine.
+struct Conn {
+    stream: TcpStream,
+    kind: Kind,
+    /// Unparsed request bytes (may hold a partial line between readiness
+    /// events — frames are reassembled across arbitrary packet splits).
+    read_buf: Vec<u8>,
+    /// Reply bytes not yet accepted by the socket.
+    write_buf: VecDeque<u8>,
+    inflight: Option<InFlight>,
+    opened: Instant,
+    /// Last moment the connection did anything (bytes in, reply queued).
+    last_activity: Instant,
+    /// Set while `read_buf` holds an incomplete request; the read-timeout
+    /// clock. For metrics connections this starts at accept: the whole
+    /// request head is "incomplete" until its terminating blank line.
+    partial_since: Option<Instant>,
+    /// Next read poll and current backoff (adaptive: reset by activity,
+    /// doubled while quiet).
+    next_read: Instant,
+    read_backoff: Duration,
+    /// Peer half-closed its write side (EOF). Tolerated: in-flight work
+    /// finishes and the reply flushes before the connection closes.
+    read_closed: bool,
+    /// Flush `write_buf`, then close.
+    closing: bool,
+    /// Connection is unusable (reset, write failure, oversized buffers):
+    /// cancel in-flight work and close without flushing.
+    broken: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, kind: Kind) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            kind,
+            read_buf: Vec::new(),
+            write_buf: VecDeque::new(),
+            inflight: None,
+            opened: now,
+            last_activity: now,
+            partial_since: if kind == Kind::Metrics { Some(now) } else { None },
+            next_read: now,
+            read_backoff: MIN_READ_BACKOFF,
+            read_closed: false,
+            closing: false,
+            broken: false,
+        }
+    }
+
+    fn queue_line(&mut self, line: &str) {
+        self.write_buf.extend(line.as_bytes());
+        self.write_buf.push_back(b'\n');
+        self.last_activity = Instant::now();
+    }
+
+    fn queue_raw(&mut self, bytes: &[u8]) {
+        self.write_buf.extend(bytes);
+        self.last_activity = Instant::now();
+    }
+}
+
+/// Handle to a running gateway. Dropping it signals shutdown but does not
+/// drain — call [`Reactor::stop`] for the graceful path, or
+/// [`Reactor::join`] to serve until the scheduler goes away.
+pub struct Reactor {
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    jsonl_addr: Option<SocketAddr>,
+    metrics_addr: Option<SocketAddr>,
+    stats: Arc<GatewayStats>,
+}
+
+impl Reactor {
+    /// Bind the requested listeners and start the gateway threads: one
+    /// acceptor plus `cfg.workers` connection workers — the thread count
+    /// is fixed at startup and *independent of the connection count*.
+    /// Either address may be omitted; port 0 binds an OS-assigned port
+    /// (handy for tests — read it back with [`Reactor::jsonl_addr`] /
+    /// [`Reactor::metrics_addr`]).
+    ///
+    /// The gateway holds the scheduler only weakly: once the caller drops
+    /// its last `Arc<Scheduler>`, the shards shut down (flushing
+    /// artifacts/priors) and the gateway threads exit on their own.
+    pub fn start(
+        sched: &Arc<Scheduler>,
+        jsonl: Option<&str>,
+        metrics: Option<&str>,
+        cfg: ReactorConfig,
+    ) -> crate::Result<Reactor> {
+        let jsonl_listener = match jsonl {
+            Some(addr) => Some(TcpListener::bind(addr)?),
+            None => None,
+        };
+        let metrics_listener = match metrics {
+            Some(addr) => Some(TcpListener::bind(addr)?),
+            None => None,
+        };
+        let jsonl_addr = jsonl_listener.as_ref().map(|l| l.local_addr()).transpose()?;
+        let metrics_addr = metrics_listener.as_ref().map(|l| l.local_addr()).transpose()?;
+        for l in jsonl_listener.iter().chain(metrics_listener.iter()) {
+            l.set_nonblocking(true)?;
+        }
+
+        let cfg = ReactorConfig { workers: cfg.workers.max(1), ..cfg };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(GatewayStats::default());
+        let weak = Arc::downgrade(sched);
+
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<Conn>();
+            senders.push(tx);
+            let w = Worker {
+                conns: Vec::new(),
+                incoming: rx,
+                sched: weak.clone(),
+                stats: stats.clone(),
+                cfg: cfg.clone(),
+                shutdown: shutdown.clone(),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("domino-gateway-{i}"))
+                    .spawn(move || w.run())
+                    .expect("spawn gateway worker"),
+            );
+        }
+
+        let accept = {
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let sched = weak;
+            let max_connections = cfg.max_connections;
+            std::thread::Builder::new()
+                .name("domino-gateway-accept".into())
+                .spawn(move || {
+                    accept_loop(
+                        jsonl_listener,
+                        metrics_listener,
+                        senders,
+                        shutdown,
+                        stats,
+                        sched,
+                        max_connections,
+                    )
+                })
+                .expect("spawn gateway accept thread")
+        };
+
+        Ok(Reactor {
+            shutdown,
+            accept: Some(accept),
+            workers,
+            jsonl_addr,
+            metrics_addr,
+            stats,
+        })
+    }
+
+    /// The bound JSONL address, when a JSONL listener was requested.
+    pub fn jsonl_addr(&self) -> Option<SocketAddr> {
+        self.jsonl_addr
+    }
+
+    /// The bound metrics-HTTP address, when one was requested.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
+    /// The gateway's shared connection counters.
+    pub fn stats(&self) -> Arc<GatewayStats> {
+        self.stats.clone()
+    }
+
+    /// Graceful drain: stop accepting, let workers finish in-flight
+    /// requests and flush replies (bounded by `drain_grace`), then join
+    /// every gateway thread.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the gateway exits on its own (scheduler dropped or
+    /// shutdown signalled) — the `domino serve` foreground path.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        // Signal only: a dropped handle must not block the caller on a
+        // drain. Threads also exit once the scheduler is gone.
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    jsonl: Option<TcpListener>,
+    metrics: Option<TcpListener>,
+    senders: Vec<mpsc::Sender<Conn>>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<GatewayStats>,
+    sched: Weak<Scheduler>,
+    max_connections: usize,
+) {
+    let mut next_worker = 0usize;
+    loop {
+        if shutdown.load(Ordering::Relaxed) || sched.strong_count() == 0 {
+            // Dropping the listeners here closes the accept sockets while
+            // workers drain what's already connected.
+            return;
+        }
+        let mut progressed = false;
+        for (listener, kind) in jsonl
+            .iter()
+            .map(|l| (l, Kind::Jsonl))
+            .chain(metrics.iter().map(|l| (l, Kind::Metrics)))
+        {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        progressed = true;
+                        if stats.open.load(Ordering::Relaxed) >= max_connections as u64 {
+                            stats.rejected.fetch_add(1, Ordering::Relaxed);
+                            refuse(stream, kind);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        stats.open.fetch_add(1, Ordering::Relaxed);
+                        stats.accepted.fetch_add(1, Ordering::Relaxed);
+                        let conn = Conn::new(stream, kind);
+                        // Round-robin deal; a worker can only be gone if
+                        // we are shutting down, so a failed send just
+                        // closes the connection.
+                        if senders[next_worker % senders.len()].send(conn).is_err() {
+                            stats.record_close(Instant::now());
+                        }
+                        next_worker = next_worker.wrapping_add(1);
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+        }
+        if !progressed {
+            std::thread::sleep(PASS_SLEEP);
+        }
+    }
+}
+
+/// Refuse an over-cap connection with the structured
+/// `"overloaded"`/`"connection_limit"` abort (503 on the metrics
+/// listener). Best-effort: the socket is fresh, so the handful of bytes
+/// lands in the kernel buffer without blocking the accept loop.
+fn refuse(mut stream: TcpStream, kind: Kind) {
+    let _ = stream.set_nonblocking(true);
+    match kind {
+        Kind::Jsonl => {
+            let body = crate::util::Json::obj(vec![
+                ("error", crate::util::Json::str("overloaded")),
+                ("reason", crate::util::Json::str("connection_limit")),
+            ])
+            .to_string();
+            let _ = stream.write_all(format!("{body}\n").as_bytes());
+        }
+        Kind::Metrics => {
+            let body = "overloaded: connection_limit\n";
+            let _ = stream.write_all(
+                format!(
+                    "HTTP/1.1 503 Service Unavailable\r\nContent-Type: text/plain; \
+                     charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                )
+                .as_bytes(),
+            );
+        }
+    }
+}
+
+/// One gateway worker: owns a slice of the connections and pumps each as
+/// a state machine every pass.
+struct Worker {
+    conns: Vec<Conn>,
+    incoming: mpsc::Receiver<Conn>,
+    sched: Weak<Scheduler>,
+    stats: Arc<GatewayStats>,
+    cfg: ReactorConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Worker {
+    fn run(mut self) {
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            while let Ok(conn) = self.incoming.try_recv() {
+                self.conns.push(conn);
+            }
+            let draining = self.shutdown.load(Ordering::Relaxed);
+            if draining && drain_deadline.is_none() {
+                drain_deadline = Some(Instant::now() + self.cfg.drain_grace);
+            }
+            let Some(sched) = self.sched.upgrade() else {
+                // Scheduler gone: nothing can make progress; close
+                // everything and exit.
+                for c in self.conns.drain(..) {
+                    self.stats.record_close(c.opened);
+                }
+                return;
+            };
+            let past_grace = drain_deadline.is_some_and(|d| Instant::now() >= d);
+            let mut progressed = false;
+            let mut i = 0;
+            while i < self.conns.len() {
+                let done = {
+                    let c = &mut self.conns[i];
+                    progressed |= pump(c, &sched, &self.stats, &self.cfg, draining);
+                    if draining
+                        && c.inflight.is_none()
+                        && c.write_buf.is_empty()
+                        && !has_complete_line(&c.read_buf)
+                    {
+                        // Drain: nothing in flight, nothing buffered to
+                        // start — this connection is done; idle keepalive
+                        // clients must not hold the drain open.
+                        c.closing = true;
+                    }
+                    if past_grace && (c.inflight.is_some() || !c.write_buf.is_empty()) {
+                        // Out of drain grace: cancel and cut.
+                        if let Some(inf) = &c.inflight {
+                            inf.handle.cancel();
+                        }
+                        c.broken = true;
+                    }
+                    conn_finished(c)
+                };
+                if done {
+                    let c = self.conns.swap_remove(i);
+                    self.stats.record_close(c.opened);
+                } else {
+                    i += 1;
+                }
+            }
+            drop(sched);
+            if draining && self.conns.is_empty() {
+                return;
+            }
+            if !progressed {
+                std::thread::sleep(PASS_SLEEP);
+            }
+        }
+    }
+}
+
+/// Is this connection ready to be dropped?
+fn conn_finished(c: &Conn) -> bool {
+    if c.broken {
+        return true;
+    }
+    if (c.closing || c.read_closed) && c.inflight.is_none() && c.write_buf.is_empty() {
+        // `closing`: server decided to end it (timeout, metrics exchange
+        // complete, fatal parse error) and the reply has flushed.
+        // `read_closed`: the peer half-closed; with nothing in flight and
+        // nothing left to flush there is nothing more to say.
+        return c.closing || (c.read_closed && c.read_buf.iter().all(|b| b.is_ascii_whitespace()));
+    }
+    false
+}
+
+/// Advance one connection's state machine a step: read newly-ready bytes,
+/// start at most one request, pump streaming events, flush buffered
+/// writes, fire timeouts. Returns whether anything happened (drives the
+/// worker's sleep decision).
+fn pump(
+    c: &mut Conn,
+    sched: &Scheduler,
+    stats: &GatewayStats,
+    cfg: &ReactorConfig,
+    draining: bool,
+) -> bool {
+    let mut progressed = false;
+    let now = Instant::now();
+
+    // --- read readiness (adaptively backed off while quiet) ---
+    if !c.read_closed && !c.closing && now >= c.next_read {
+        match read_ready(c) {
+            ReadOutcome::Progress => {
+                progressed = true;
+                c.read_backoff = MIN_READ_BACKOFF;
+                c.last_activity = now;
+            }
+            ReadOutcome::Idle => {
+                c.read_backoff = (c.read_backoff * 2).min(MAX_READ_BACKOFF);
+            }
+            ReadOutcome::Eof => {
+                progressed = true;
+                c.read_closed = true;
+            }
+            ReadOutcome::Broken => {
+                if let Some(inf) = &c.inflight {
+                    inf.handle.cancel();
+                }
+                c.broken = true;
+                return true;
+            }
+        }
+        c.next_read = now + c.read_backoff;
+    }
+
+    // --- parse + dispatch (one request at a time per connection) ---
+    match c.kind {
+        Kind::Jsonl => {
+            while c.inflight.is_none() && !c.closing {
+                if draining && !has_complete_line(&c.read_buf) {
+                    break; // drain: finish what's buffered, start nothing new
+                }
+                match next_line(&mut c.read_buf) {
+                    NextLine::Line(line) => {
+                        progressed = true;
+                        dispatch_jsonl(c, &line, sched, stats, cfg);
+                    }
+                    NextLine::TooLong => {
+                        progressed = true;
+                        c.queue_line(&error_line("bad request: ", "request line too long"));
+                        c.closing = true;
+                    }
+                    NextLine::Partial => break,
+                }
+            }
+            // Partial-frame bookkeeping for the read timeout.
+            if c.read_buf.iter().any(|b| !b.is_ascii_whitespace()) {
+                c.partial_since.get_or_insert(now);
+            } else {
+                c.partial_since = None;
+            }
+        }
+        Kind::Metrics => {
+            if !c.closing {
+                if let Some(head_end) = find_head_end(&c.read_buf) {
+                    progressed = true;
+                    let head = String::from_utf8_lossy(&c.read_buf[..head_end]).into_owned();
+                    c.read_buf.clear();
+                    let request_line = head.lines().next().unwrap_or("").to_string();
+                    let (status, ctype, body) = metrics_route(&request_line, || {
+                        let mut m = sched.metrics()?;
+                        stats.fill(&mut m);
+                        Ok(super::metrics::render_prometheus(&m, sched.engines()))
+                    });
+                    queue_http(c, status, ctype, &body);
+                    c.closing = true; // Connection: close, as before
+                }
+            }
+        }
+    }
+
+    // --- streaming pump + final response ---
+    if let Some(inf) = &mut c.inflight {
+        let mut events_done = false;
+        if let Some(events) = &inf.events {
+            loop {
+                match events.try_recv() {
+                    Ok(ev) => {
+                        progressed = true;
+                        let line = format_event(&ev);
+                        c.write_buf.extend(line.as_bytes());
+                        c.write_buf.push_back(b'\n');
+                        c.last_activity = Instant::now();
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        // Slot retired: every buffered event is in, the
+                        // final stats line comes next.
+                        events_done = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if events_done {
+            inf.events = None;
+        }
+        if inf.events.is_none() {
+            match inf.handle.try_recv() {
+                Ok(resp) => {
+                    progressed = true;
+                    c.inflight = None;
+                    c.queue_line(&format_response(&resp));
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    progressed = true;
+                    c.inflight = None;
+                    c.queue_line(&error_line("", "engine gone"));
+                }
+            }
+        }
+    }
+
+    // --- write flush ---
+    if !c.write_buf.is_empty() {
+        match flush_writes(c) {
+            Ok(true) => progressed = true,
+            Ok(false) => {}
+            Err(_) => {
+                if let Some(inf) = &c.inflight {
+                    inf.handle.cancel();
+                }
+                c.broken = true;
+                return true;
+            }
+        }
+    }
+    if c.write_buf.len() > MAX_WRITE_BUF {
+        if let Some(inf) = &c.inflight {
+            inf.handle.cancel();
+        }
+        c.broken = true;
+        return true;
+    }
+
+    // --- timeouts (structured reasons; see PROTOCOL.md "Connection
+    // lifecycle") ---
+    if c.inflight.is_none() && !c.closing && !c.broken {
+        if let Some(limit) = cfg.read_timeout {
+            if c.partial_since.is_some_and(|t| t.elapsed() >= limit) {
+                stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                match c.kind {
+                    Kind::Jsonl => c.queue_line(&timeout_line("read_timeout")),
+                    Kind::Metrics => queue_http(
+                        c,
+                        408,
+                        "text/plain; charset=utf-8",
+                        "timeout: read_timeout\n",
+                    ),
+                }
+                c.closing = true;
+                progressed = true;
+            }
+        }
+        if let Some(limit) = cfg.idle_timeout {
+            if !c.closing
+                && c.partial_since.is_none()
+                && c.write_buf.is_empty()
+                && c.last_activity.elapsed() >= limit
+            {
+                stats.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                if c.kind == Kind::Jsonl {
+                    c.queue_line(&timeout_line("idle_timeout"));
+                }
+                c.closing = true;
+                progressed = true;
+            }
+        }
+    }
+
+    progressed
+}
+
+/// The structured timeout abort line: `{"error":"timeout","reason":...}`.
+fn timeout_line(reason: &str) -> String {
+    crate::util::Json::obj(vec![
+        ("error", crate::util::Json::str("timeout")),
+        ("reason", crate::util::Json::str(reason)),
+    ])
+    .to_string()
+}
+
+enum ReadOutcome {
+    Progress,
+    Idle,
+    Eof,
+    Broken,
+}
+
+/// Drain whatever the socket has ready into `read_buf` (nonblocking).
+fn read_ready(c: &mut Conn) -> ReadOutcome {
+    let mut outcome = ReadOutcome::Idle;
+    let mut chunk = [0u8; 4096];
+    loop {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Eof,
+            Ok(n) => {
+                c.read_buf.extend_from_slice(&chunk[..n]);
+                outcome = ReadOutcome::Progress;
+                if c.read_buf.len() > MAX_LINE_BYTES && !c.read_buf.contains(&b'\n') {
+                    // Let the parser surface the structured error.
+                    return outcome;
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return outcome,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return ReadOutcome::Broken,
+        }
+    }
+}
+
+enum NextLine {
+    Line(String),
+    Partial,
+    TooLong,
+}
+
+fn has_complete_line(buf: &[u8]) -> bool {
+    buf.contains(&b'\n')
+}
+
+/// Pop the next non-empty line off the buffer, tolerating partial frames
+/// (bytes after the last newline stay buffered for the next readiness
+/// event).
+fn next_line(buf: &mut Vec<u8>) -> NextLine {
+    loop {
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                let rest = buf.split_off(pos + 1);
+                let mut line = std::mem::replace(buf, rest);
+                line.pop(); // the newline
+                let line = String::from_utf8_lossy(&line).into_owned();
+                if line.trim().is_empty() {
+                    continue; // blank keepalive lines are ignored
+                }
+                return NextLine::Line(line);
+            }
+            None if buf.len() > MAX_LINE_BYTES => return NextLine::TooLong,
+            None => return NextLine::Partial,
+        }
+    }
+}
+
+/// The end of an HTTP request head (`\r\n\r\n` or `\n\n`), if complete.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4).or_else(|| {
+        buf.windows(2).position(|w| w == b"\n\n").map(|p| p + 2)
+    })
+}
+
+/// Parse one JSONL request line and either answer it inline (stats, parse
+/// errors) or hand it to the scheduler (generation — the decode work
+/// itself never runs on a gateway thread).
+fn dispatch_jsonl(
+    c: &mut Conn,
+    line: &str,
+    sched: &Scheduler,
+    stats: &GatewayStats,
+    cfg: &ReactorConfig,
+) {
+    match parse_line(line) {
+        Ok(Request::Stats) => {
+            let reply = match sched.metrics() {
+                Ok(mut m) => {
+                    stats.fill(&mut m);
+                    format_stats(&m, sched.engines())
+                }
+                Err(e) => error_line("stats failed: ", format!("{e:#}")),
+            };
+            c.queue_line(&reply);
+        }
+        Ok(Request::Generate(mut req)) => {
+            cfg.defaults.apply(&mut req);
+            let inflight = if req.stream {
+                let (stx, srx) = mpsc::channel::<StreamEvent>();
+                let handle = sched.submit_streaming(req, stx);
+                InFlight { handle, events: Some(srx) }
+            } else {
+                InFlight { handle: sched.submit(req), events: None }
+            };
+            c.inflight = Some(inflight);
+        }
+        Err(e) => c.queue_line(&error_line("bad request: ", format!("{e:#}"))),
+    }
+}
+
+/// Queue a complete HTTP/1.1 response (status line + headers + body).
+fn queue_http(c: &mut Conn, status: u16, ctype: &str, body: &str) {
+    let text = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    c.queue_raw(
+        format!(
+            "HTTP/1.1 {status} {text}\r\nContent-Type: {ctype}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    );
+}
+
+/// Push buffered reply bytes into the socket without blocking. Returns
+/// whether any bytes moved; `Err` means the peer is gone.
+fn flush_writes(c: &mut Conn) -> std::io::Result<bool> {
+    let mut moved = false;
+    while !c.write_buf.is_empty() {
+        let (front, _) = c.write_buf.as_slices();
+        match c.stream.write(front) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                c.write_buf.drain(..n);
+                moved = true;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_line_reassembles_partial_frames() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"{\"op\": ");
+        assert!(matches!(next_line(&mut buf), NextLine::Partial));
+        buf.extend_from_slice(b"\"stats\"}\n{\"pro");
+        let NextLine::Line(line) = next_line(&mut buf) else { panic!("expected a line") };
+        assert_eq!(line, "{\"op\": \"stats\"}");
+        assert!(matches!(next_line(&mut buf), NextLine::Partial));
+        assert_eq!(buf, b"{\"pro");
+        // Blank keepalive lines between requests are skipped, not errors.
+        let mut buf = b"\n \n{\"op\": \"stats\"}\n".to_vec();
+        let NextLine::Line(line) = next_line(&mut buf) else { panic!("expected a line") };
+        assert_eq!(line, "{\"op\": \"stats\"}");
+    }
+
+    #[test]
+    fn next_line_rejects_oversized_frames() {
+        let mut buf = vec![b'x'; MAX_LINE_BYTES + 1];
+        assert!(matches!(next_line(&mut buf), NextLine::TooLong));
+    }
+
+    #[test]
+    fn head_end_detection_handles_both_line_endings() {
+        assert_eq!(find_head_end(b"GET /metrics HTTP/1.1\r\n\r\n"), Some(25));
+        assert_eq!(find_head_end(b"GET /metrics HTTP/1.1\n\n"), Some(23));
+        assert_eq!(find_head_end(b"GET /metrics HTTP/1.1\r\nHost: x\r\n"), None);
+    }
+
+    #[test]
+    fn timeout_lines_carry_structured_reasons() {
+        let v = crate::util::Json::parse(&timeout_line("idle_timeout")).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "timeout");
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "idle_timeout");
+        let v = crate::util::Json::parse(&timeout_line("read_timeout")).unwrap();
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "read_timeout");
+    }
+
+    #[test]
+    fn gateway_stats_fill_snapshots_counters_and_abort_reasons() {
+        let g = GatewayStats::default();
+        g.open.store(3, Ordering::Relaxed);
+        g.accepted.store(7, Ordering::Relaxed);
+        g.rejected.store(2, Ordering::Relaxed);
+        g.idle_timeouts.store(1, Ordering::Relaxed);
+        g.lifetime.lock().unwrap().record(0.25);
+        let mut m = Metrics::default();
+        g.fill(&mut m);
+        assert_eq!(m.connections_open, 3);
+        assert_eq!(m.connections_accepted, 7);
+        assert_eq!(m.connections_rejected, 2);
+        assert_eq!(m.connections_idle_timeout, 1);
+        assert_eq!(m.connections_read_timeout, 0);
+        assert_eq!(m.conn_lifetime.count, 1);
+        assert_eq!(m.abort_reasons.get("overloaded/connection_limit"), Some(&2));
+        assert_eq!(m.abort_reasons.get("timeout/idle_timeout"), Some(&1));
+        assert_eq!(m.abort_reasons.get("timeout/read_timeout"), None);
+    }
+}

@@ -225,8 +225,14 @@ pub struct SchedulerConfig {
     pub queue_depth: usize,
     /// Deadline applied to requests that don't carry their own.
     pub default_deadline: Option<Duration>,
-    /// Capacity of the shared compiled-engine registry.
+    /// Capacity of the shared compiled-engine registry's hot tier
+    /// (engine + mask cache resident).
     pub registry_capacity: usize,
+    /// Warm-tier capacity: engines demoted from the hot tier are kept
+    /// (mask caches dropped) up to this many, so a re-request recomputes
+    /// masks instead of recompiling. 0 disables the tier. CLI
+    /// `--registry-warm`.
+    pub registry_warm_capacity: usize,
     /// Directory of persistent precompute artifacts (CLI `--artifact-dir`
     /// / `$DOMINO_ARTIFACT_DIR`). When set, the shared registry loads
     /// compiled engines from disk at boot (warm start), writes fresh
@@ -254,6 +260,7 @@ impl Default for SchedulerConfig {
             queue_depth: 64,
             default_deadline: None,
             registry_capacity: super::engine::DEFAULT_REGISTRY_CAPACITY,
+            registry_warm_capacity: super::engine::DEFAULT_REGISTRY_CAPACITY * 4,
             artifact_dir: None,
             lazy_compile: false,
             tenants: TenantPolicy::default(),
@@ -385,14 +392,15 @@ impl Scheduler {
         cfg.slots_per_engine = cfg.slots_per_engine.max(1);
         cfg.queue_depth = cfg.queue_depth.max(1);
         let capacity = cfg.registry_capacity.max(1);
+        let warm = cfg.registry_warm_capacity;
         let registry = match &cfg.artifact_dir {
-            None => EngineRegistry::new(capacity),
+            None => EngineRegistry::with_tiers(capacity, warm, None),
             Some(dir) => match ArtifactStore::new(dir) {
-                Ok(store) => EngineRegistry::with_store(capacity, store),
+                Ok(store) => EngineRegistry::with_tiers(capacity, warm, Some(store)),
                 Err(e) => {
                     // An unusable store costs warm starts, not serving.
                     eprintln!("domino: artifact store disabled: {e:#}");
-                    EngineRegistry::new(capacity)
+                    EngineRegistry::with_tiers(capacity, warm, None)
                 }
             },
         };

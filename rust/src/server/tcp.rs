@@ -390,6 +390,9 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("registry_misses", Json::Num(m.registry_misses as f64)),
         ("registry_evictions", Json::Num(m.registry_evictions as f64)),
         ("registry_coalesced", Json::Num(m.registry_coalesced as f64)),
+        ("registry_hot_entries", Json::Num(m.registry_hot_entries as f64)),
+        ("registry_warm_entries", Json::Num(m.registry_warm_entries as f64)),
+        ("registry_cold_entries", Json::Num(m.registry_cold_entries as f64)),
         ("engine_compile_ms", Json::Num(m.engine_compile_ms as f64)),
         ("artifact_hits", Json::Num(m.artifact_hits as f64)),
         ("artifact_misses", Json::Num(m.artifact_misses as f64)),
@@ -403,6 +406,13 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("queue_wait_p50_s", num_or_null(m.queue_wait.percentile(0.5))),
         ("req_tps_mean", num_or_null(m.req_tps.mean())),
         ("model_time_s", Json::Num(m.model_time.as_secs_f64())),
+        ("connections_open", Json::Num(m.connections_open as f64)),
+        ("connections_accepted", Json::Num(m.connections_accepted as f64)),
+        ("connections_rejected", Json::Num(m.connections_rejected as f64)),
+        ("connections_idle_timeout", Json::Num(m.connections_idle_timeout as f64)),
+        ("connections_read_timeout", Json::Num(m.connections_read_timeout as f64)),
+        ("conn_lifetime_p50_s", num_or_null(m.conn_lifetime.percentile(0.5))),
+        ("conn_lifetime_p99_s", num_or_null(m.conn_lifetime.percentile(0.99))),
         ("tenants", tenants),
         ("abort_reasons", aborts),
     ])
@@ -432,7 +442,7 @@ fn client_disconnected(stream: &TcpStream) -> bool {
     }
 }
 
-fn error_line(prefix: &str, e: impl std::fmt::Display) -> String {
+pub(crate) fn error_line(prefix: &str, e: impl std::fmt::Display) -> String {
     Json::obj(vec![("error", Json::str(format!("{prefix}{e}")))]).to_string()
 }
 
@@ -525,7 +535,7 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, defaults: ServeDefaults
 /// Route one metrics-listener request line to `(status, content-type,
 /// body)`. `render` is only invoked for `/metrics`, so a health probe
 /// never pays for a cross-shard metrics merge.
-fn metrics_route(
+pub(crate) fn metrics_route(
     request_line: &str,
     render: impl FnOnce() -> crate::Result<String>,
 ) -> (u16, &'static str, String) {
@@ -544,71 +554,55 @@ fn metrics_route(
     }
 }
 
-fn handle_metrics_conn(stream: TcpStream, sched: std::sync::Weak<Scheduler>) {
-    let mut reader = BufReader::new(match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    });
-    let mut request_line = String::new();
-    if reader.read_line(&mut request_line).is_err() {
-        return;
-    }
-    // Drain the (ignored) headers so well-behaved clients aren't reset
-    // mid-send; a blank line terminates the request head.
-    let mut header = String::new();
-    while reader.read_line(&mut header).is_ok() && header.trim_end() != "" {
-        header.clear();
-    }
-    let (status, ctype, body) = metrics_route(&request_line, || {
-        let sched = sched.upgrade().ok_or_else(|| anyhow::anyhow!("scheduler stopped"))?;
-        Ok(super::metrics::render_prometheus(&sched.metrics()?, sched.engines()))
-    });
-    let text = match status {
-        200 => "OK",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        _ => "Internal Server Error",
-    };
-    let mut out = stream;
-    let _ = write!(
-        out,
-        "HTTP/1.1 {status} {text}\r\nContent-Type: {ctype}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-}
-
 /// Bind `addr` and serve the Prometheus scrape endpoint (`GET /metrics`,
-/// plus `GET /healthz`) on a background accept thread; returns the bound
+/// plus `GET /healthz`) on the gateway reactor; returns the bound
 /// address (use port 0 for an OS-assigned port — handy for tests).
 ///
 /// Hand-rolled HTTP/1.1: one request per connection, `Connection: close`.
 /// Prometheus opens a fresh connection per scrape by default, so the
 /// short-lived connection model costs nothing at scrape rates.
 ///
-/// The listener holds the scheduler only weakly, so it never keeps a
-/// shut-down scheduler alive; scrapes after the last strong reference
-/// drops answer with a 500 ("scheduler stopped").
+/// Historically this path spawned one unnamed, unbounded thread per
+/// scrape connection — a hostile or merely slow client could pin threads
+/// indefinitely (the classic slow-loris shape). The reactor multiplexes
+/// scrape connections on its fixed worker pool instead, and a stalled
+/// request head is cut after the read timeout with a structured 408.
+///
+/// The reactor holds the scheduler only weakly, so it never keeps a
+/// shut-down scheduler alive; once the last strong reference drops the
+/// gateway threads exit on their own.
 pub fn spawn_metrics_http(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAddr> {
-    let listener = TcpListener::bind(addr)?;
-    let local = listener.local_addr()?;
-    let sched = Arc::downgrade(&sched);
-    std::thread::Builder::new()
-        .name("domino-metrics".into())
-        .spawn(move || {
-            for stream in listener.incoming() {
-                let Ok(stream) = stream else { continue };
-                let sched = sched.clone();
-                std::thread::spawn(move || handle_metrics_conn(stream, sched));
-            }
-        })
-        .expect("spawn metrics thread");
+    use super::reactor::{Reactor, ReactorConfig};
+    let reactor = Reactor::start(&sched, None, Some(addr), ReactorConfig::default())?;
+    let local = reactor.metrics_addr().expect("metrics listener bound");
+    // Detach: the handle is intentionally leaked (no drain on exit); the
+    // gateway threads exit once the scheduler is dropped.
+    std::mem::forget(reactor);
     Ok(local)
 }
 
-/// Bind `addr` and serve on a background accept thread; returns the bound
+/// Bind `addr` and serve JSONL on the gateway reactor; returns the bound
 /// address (use port 0 for an OS-assigned port — handy for tests).
+///
+/// Connections are multiplexed over the reactor's fixed worker pool with
+/// default [`ReactorConfig`](super::reactor::ReactorConfig) limits; the
+/// scheduler is held weakly, so dropping the caller's last `Arc` shuts
+/// the gateway down (and flushes artifacts/priors) exactly as if no
+/// server were running.
 pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAddr> {
+    use super::reactor::{Reactor, ReactorConfig};
+    let reactor = Reactor::start(&sched, Some(addr), None, ReactorConfig::default())?;
+    let local = reactor.jsonl_addr().expect("jsonl listener bound");
+    std::mem::forget(reactor);
+    Ok(local)
+}
+
+/// The pre-reactor front end: one accept loop, one OS thread per
+/// connection, blocking I/O. Retained as the differential reference for
+/// the gateway — `tests/integration_gateway.rs` proves the reactor
+/// produces byte-identical streams — and as a fallback while the reactor
+/// soaks. Not used by the CLI.
+pub fn spawn_serve_threaded(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     std::thread::Builder::new()
@@ -624,17 +618,15 @@ pub fn spawn_serve(sched: Arc<Scheduler>, addr: &str) -> crate::Result<SocketAdd
     Ok(local)
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7761"). Takes the scheduler
-/// behind an `Arc` so a metrics listener ([`spawn_metrics_http`]) can
-/// share it.
+/// Serve forever on `addr` (e.g. "127.0.0.1:7761") over the gateway
+/// reactor. Takes the scheduler behind an `Arc` so a metrics listener
+/// ([`spawn_metrics_http`]) can share it.
 pub fn serve(sched: Arc<Scheduler>, addr: &str, defaults: ServeDefaults) -> crate::Result<()> {
-    let listener = TcpListener::bind(addr)?;
+    use super::reactor::{Reactor, ReactorConfig};
+    let cfg = ReactorConfig { defaults, ..ReactorConfig::default() };
+    let reactor = Reactor::start(&sched, Some(addr), None, cfg)?;
     eprintln!("domino: serving on {addr} ({} engine shard(s))", sched.engines());
-    for stream in listener.incoming() {
-        let Ok(stream) = stream else { continue };
-        let sched = sched.clone();
-        std::thread::spawn(move || handle_conn(stream, sched, defaults));
-    }
+    reactor.join();
     Ok(())
 }
 

@@ -9,6 +9,7 @@
 
 const PROTOCOL: &str = include_str!("../PROTOCOL.md");
 const OPERATIONS: &str = include_str!("../OPERATIONS.md");
+const ARCHITECTURE: &str = include_str!("../ARCHITECTURE.md");
 const TCP_SRC: &str = include_str!("../src/server/tcp.rs");
 const MAIN_SRC: &str = include_str!("../src/main.rs");
 
@@ -92,10 +93,12 @@ fn every_documented_cli_flag_exists_in_main() {
 fn every_documented_error_reason_exists_in_engine() {
     // The Errors matrix documents each machine-readable `reason` value;
     // those strings live in engine.rs (Abort::reason / overloaded calls
-    // in scheduler.rs). Check against the whole server module source.
+    // in scheduler.rs) and, for connection-level aborts, in the gateway
+    // reactor. Check against the whole server module source.
     let engine_src = concat!(
         include_str!("../src/server/engine.rs"),
         include_str!("../src/server/scheduler.rs"),
+        include_str!("../src/server/reactor.rs"),
     );
     for reason in [
         "queue_full",
@@ -104,6 +107,9 @@ fn every_documented_error_reason_exists_in_engine() {
         "decoding",
         "client_cancel",
         "client_disconnect",
+        "connection_limit",
+        "idle_timeout",
+        "read_timeout",
     ] {
         assert!(
             PROTOCOL.contains(&format!("`\"{reason}\"`")),
@@ -114,4 +120,40 @@ fn every_documented_error_reason_exists_in_engine() {
             "documented abort reason {reason:?} not found in server sources"
         );
     }
+}
+
+#[test]
+fn every_architecture_path_exists() {
+    // ARCHITECTURE.md names source files in its module ↔ file table and
+    // layer map; each `src/...` path it mentions must exist so the map
+    // cannot describe a module that was moved or deleted.
+    let manifest_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut paths = std::collections::BTreeSet::new();
+    let mut rest = ARCHITECTURE;
+    while let Some(start) = rest.find("src/") {
+        let tail = &rest[start..];
+        let end = tail
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '/' || c == '_' || c == '.'))
+            .unwrap_or(tail.len());
+        let path = tail[..end].trim_end_matches('.');
+        if path.ends_with(".rs") {
+            paths.insert(path.to_string());
+        }
+        rest = &rest[start + 4..];
+    }
+    // Sanity floor: the layer map + table should always name a healthy
+    // number of files; near-zero means the extraction broke.
+    assert!(
+        paths.len() >= 20,
+        "extracted only {} source paths from ARCHITECTURE.md — extraction broken?",
+        paths.len()
+    );
+    let missing: Vec<&String> = paths
+        .iter()
+        .filter(|p| !manifest_dir.join(p).exists())
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "ARCHITECTURE.md names source files that do not exist: {missing:?}"
+    );
 }

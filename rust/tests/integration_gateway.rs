@@ -1,0 +1,417 @@
+//! Gateway-reactor integration over real sockets: byte-parity against
+//! the legacy thread-per-connection path, an idle-connection soak with
+//! live decode traffic and metrics consistency, admission-cap refusals,
+//! idle/read timeouts (including the metrics slow-loris regression),
+//! partial-frame reassembly, half-close, and graceful drain.
+
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::runtime::{LmFactory, LmSession};
+use domino::server::engine::EngineCtx;
+use domino::server::reactor::{Reactor, ReactorConfig};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::server::tcp;
+use domino::util::Json;
+use domino::TokenId;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn mock_sched(engines: usize, slots: usize) -> Scheduler {
+    let (vocab, model) = json_mock(512);
+    Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(MockFactory { model: model.clone() }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        SchedulerConfig { engines, slots_per_engine: slots, ..SchedulerConfig::default() },
+    )
+}
+
+/// An LM whose every forward pass takes `delay` — slow enough to observe
+/// a drain racing an in-flight stream.
+struct SlowFactory {
+    inner: MockFactory,
+    delay: Duration,
+}
+
+struct SlowSession {
+    inner: Box<dyn LmSession>,
+    delay: Duration,
+}
+
+impl LmFactory for SlowFactory {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn new_session(&self) -> domino::Result<Box<dyn LmSession>> {
+        Ok(Box::new(SlowSession { inner: self.inner.new_session()?, delay: self.delay }))
+    }
+}
+
+impl LmSession for SlowSession {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn append(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.append(tokens)
+    }
+
+    fn append_scored(&mut self, tokens: &[TokenId]) -> domino::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.append_scored(tokens)
+    }
+
+    fn rollback(&mut self, n: usize) -> domino::Result<()> {
+        self.inner.rollback(n)
+    }
+}
+
+fn slow_sched(delay_ms: u64) -> Scheduler {
+    let (vocab, model) = json_mock(512);
+    Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(SlowFactory {
+                    inner: MockFactory { model: model.clone() },
+                    delay: Duration::from_millis(delay_ms),
+                }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        SchedulerConfig { engines: 1, slots_per_engine: 2, ..SchedulerConfig::default() },
+    )
+}
+
+/// Send one streaming request and collect (event lines, final object).
+fn stream_once(addr: SocketAddr, req: &str) -> (Vec<String>, Json) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, "{req}").unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    collect_stream(reader)
+}
+
+fn collect_stream(reader: BufReader<TcpStream>) -> (Vec<String>, Json) {
+    let mut events = Vec::new();
+    for line in reader.lines() {
+        let line = line.unwrap();
+        let v = Json::parse(&line).unwrap();
+        if v.get("token").is_some() {
+            events.push(line);
+        } else {
+            return (events, v);
+        }
+    }
+    panic!("stream ended without a final stats object");
+}
+
+/// The reactor and the legacy thread-per-connection path must produce
+/// identical streams for identical requests: the same event lines byte
+/// for byte, and the same final text/token counts (`elapsed_s` is the
+/// only nondeterministic response field).
+#[test]
+fn reactor_matches_threaded_path_byte_for_byte() {
+    let reactor_sched = Arc::new(mock_sched(1, 2));
+    let threaded_sched = Arc::new(mock_sched(1, 2));
+    let reactor_addr = tcp::spawn_serve(reactor_sched.clone(), "127.0.0.1:0").unwrap();
+    let threaded_addr = tcp::spawn_serve_threaded(threaded_sched.clone(), "127.0.0.1:0").unwrap();
+
+    let req = r#"{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 24, "temperature": 1.0, "seed": 7}"#;
+    let (ev_reactor, fin_reactor) = stream_once(reactor_addr, req);
+    let (ev_threaded, fin_threaded) = stream_once(threaded_addr, req);
+
+    assert!(!ev_reactor.is_empty(), "expected token events");
+    assert_eq!(ev_reactor, ev_threaded, "event lines must be byte-identical");
+    for fin in [&fin_reactor, &fin_threaded] {
+        assert_eq!(fin.get("error"), Some(&Json::Null));
+    }
+    for field in ["text", "tokens", "interventions", "model_calls", "stopped"] {
+        assert_eq!(
+            fin_reactor.get(field),
+            fin_threaded.get(field),
+            "final `{field}` must match between reactor and threaded paths"
+        );
+    }
+}
+
+/// The soak: many parked keepalive connections stay open and *usable*
+/// while decode traffic flows, and both the stats op and the Prometheus
+/// exposition agree about the connection count.
+#[test]
+fn gateway_soaks_idle_connections_with_live_traffic() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let reactor = Reactor::start(
+        &sched,
+        Some("127.0.0.1:0"),
+        Some("127.0.0.1:0"),
+        ReactorConfig::default(),
+    )
+    .unwrap();
+    let jsonl = reactor.jsonl_addr().unwrap();
+    let metrics = reactor.metrics_addr().unwrap();
+    let stats = reactor.stats();
+
+    const IDLE: usize = 64;
+    let idle: Vec<TcpStream> = (0..IDLE).map(|_| TcpStream::connect(jsonl).unwrap()).collect();
+    let t0 = Instant::now();
+    while stats.open() < IDLE as u64 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "accept loop stalled");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Decode through a handful of *parked* connections: they are state
+    // machines mid-pool, not sockets in an accept backlog.
+    for conn in idle.iter().take(4) {
+        let mut w = conn.try_clone().unwrap();
+        writeln!(
+            w,
+            r#"{{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 8, "temperature": 1.0, "seed": 3}}"#
+        )
+        .unwrap();
+        let (events, fin) = collect_stream(BufReader::new(conn.try_clone().unwrap()));
+        assert_eq!(fin.get("error"), Some(&Json::Null));
+        let mut text = String::new();
+        for line in &events {
+            text.push_str(Json::parse(line).unwrap().get("token").unwrap().as_str().unwrap());
+        }
+        assert_eq!(fin.get("text").unwrap().as_str().unwrap(), text);
+    }
+
+    // The stats op sees the gateway counters.
+    let mut conn = TcpStream::connect(jsonl).unwrap();
+    writeln!(conn, r#"{{"op": "stats"}}"#).unwrap();
+    let mut line = String::new();
+    BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert!(
+        v.get("connections_open").unwrap().as_f64().unwrap() >= IDLE as f64,
+        "stats op must count the parked connections: {line}"
+    );
+    assert!(v.get("connections_accepted").unwrap().as_f64().unwrap() >= IDLE as f64);
+
+    // So does the Prometheus exposition.
+    let mut scrape = TcpStream::connect(metrics).unwrap();
+    scrape.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut body = String::new();
+    scrape.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 200"), "{body}");
+    let open = body
+        .lines()
+        .find(|l| l.starts_with("domino_connections_open"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or_else(|| panic!("no domino_connections_open sample in:\n{body}"));
+    assert!(open >= IDLE as f64, "exposition disagrees with held connections: {open}");
+
+    drop(idle);
+    reactor.stop();
+}
+
+/// Accepts beyond `max_connections` get the structured refusal line
+/// (JSONL) or a 503 (metrics) and an immediate close.
+#[test]
+fn over_cap_connections_are_refused_with_structured_reason() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let cfg = ReactorConfig { max_connections: 2, ..ReactorConfig::default() };
+    let reactor = Reactor::start(&sched, Some("127.0.0.1:0"), Some("127.0.0.1:0"), cfg).unwrap();
+    let jsonl = reactor.jsonl_addr().unwrap();
+    let metrics = reactor.metrics_addr().unwrap();
+    let stats = reactor.stats();
+
+    let _held: Vec<TcpStream> = (0..2).map(|_| TcpStream::connect(jsonl).unwrap()).collect();
+    let t0 = Instant::now();
+    while stats.open() < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "accept loop stalled");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let over = TcpStream::connect(jsonl).unwrap();
+    let mut reader = BufReader::new(over);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"), "{line}");
+    assert_eq!(v.get("reason").unwrap().as_str(), Some("connection_limit"), "{line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "refused conn must close");
+
+    let mut over_http = TcpStream::connect(metrics).unwrap();
+    let mut body = String::new();
+    over_http.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 503"), "{body}");
+    assert!(stats.rejected() >= 2, "refusals must be counted");
+    reactor.stop();
+}
+
+/// A silent keepalive connection is closed after the idle timeout with a
+/// final structured line.
+#[test]
+fn idle_timeout_closes_silent_connections() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let cfg = ReactorConfig {
+        idle_timeout: Some(Duration::from_millis(150)),
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::start(&sched, Some("127.0.0.1:0"), None, cfg).unwrap();
+    let conn = TcpStream::connect(reactor.jsonl_addr().unwrap()).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("error").unwrap().as_str(), Some("timeout"), "{line}");
+    assert_eq!(v.get("reason").unwrap().as_str(), Some("idle_timeout"), "{line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "timed-out conn must close");
+    reactor.stop();
+}
+
+/// A stalled partial request line — the slow-loris shape — is cut by the
+/// read timeout on the JSONL listener...
+#[test]
+fn read_timeout_cuts_stalled_partial_requests() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let cfg = ReactorConfig {
+        idle_timeout: None,
+        read_timeout: Some(Duration::from_millis(150)),
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::start(&sched, Some("127.0.0.1:0"), None, cfg).unwrap();
+    let mut conn = TcpStream::connect(reactor.jsonl_addr().unwrap()).unwrap();
+    conn.write_all(br#"{"prompt": "never fini"#).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("error").unwrap().as_str(), Some("timeout"), "{line}");
+    assert_eq!(v.get("reason").unwrap().as_str(), Some("read_timeout"), "{line}");
+    reactor.stop();
+}
+
+/// ...and on the metrics listener, where the pre-reactor implementation
+/// would have parked an unnamed thread forever (the `spawn_metrics_http`
+/// slow-loris bug this regression test pins). A healthy scrape on the
+/// same listener still succeeds first.
+#[test]
+fn metrics_slow_loris_gets_408_not_a_parked_thread() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let cfg = ReactorConfig {
+        idle_timeout: None,
+        read_timeout: Some(Duration::from_millis(150)),
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::start(&sched, None, Some("127.0.0.1:0"), cfg).unwrap();
+    let metrics = reactor.metrics_addr().unwrap();
+
+    let mut healthy = TcpStream::connect(metrics).unwrap();
+    healthy.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut body = String::new();
+    healthy.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 200"), "{body}");
+
+    let mut loris = TcpStream::connect(metrics).unwrap();
+    loris.write_all(b"GET /metrics HTT").unwrap(); // head never terminates
+    loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut body = String::new();
+    loris.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 408"), "stalled head must get a 408: {body}");
+    reactor.stop();
+}
+
+/// Frames split across arbitrary writes reassemble, and the connection
+/// stays usable for the next request (keepalive).
+#[test]
+fn partial_frames_reassemble_and_keepalive_continues() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    conn.write_all(br#"{"prompt": "", "gram"#).unwrap();
+    conn.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    conn.write_all(b"mar\": \"json\", \"max_tokens\": 8}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("error"), Some(&Json::Null), "{line}");
+
+    writeln!(conn, r#"{{"op": "stats"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        Json::parse(&line).unwrap().get("requests_completed").unwrap().as_f64().unwrap() >= 1.0,
+        "{line}"
+    );
+}
+
+/// A client that half-closes after its request still gets the full reply.
+#[test]
+fn half_close_still_receives_reply() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"prompt": "", "grammar": "json", "max_tokens": 8}}"#).unwrap();
+    conn.shutdown(Shutdown::Write).unwrap();
+    let mut body = String::new();
+    BufReader::new(conn).read_to_string(&mut body).unwrap();
+    let v = Json::parse(body.lines().next().unwrap()).unwrap();
+    assert_eq!(v.get("error"), Some(&Json::Null), "{body}");
+}
+
+/// Graceful drain: `Reactor::stop` lets an in-flight stream finish and
+/// flush (events, then the final object), then closes the connection.
+#[test]
+fn drain_finishes_inflight_streams_before_closing() {
+    let sched = Arc::new(slow_sched(3));
+    let reactor =
+        Reactor::start(&sched, Some("127.0.0.1:0"), None, ReactorConfig::default()).unwrap();
+    let addr = reactor.jsonl_addr().unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(
+        conn,
+        r#"{{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 32, "temperature": 1.0}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    // Prove decoding started before initiating the drain.
+    for _ in 0..2 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            Json::parse(&line).unwrap().get("token").is_some(),
+            "expected a token event, got {line}"
+        );
+    }
+    let stopper = std::thread::spawn(move || reactor.stop());
+
+    // The rest of the stream must arrive intact, terminated by the final
+    // object, then EOF as the drained gateway closes the connection.
+    let mut finished = false;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            break;
+        }
+        let v = Json::parse(&line).unwrap();
+        if v.get("token").is_none() {
+            assert_eq!(v.get("error"), Some(&Json::Null), "{line}");
+            finished = true;
+        }
+    }
+    assert!(finished, "drain must deliver the final stats object before closing");
+    stopper.join().unwrap();
+}

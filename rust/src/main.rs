@@ -7,7 +7,8 @@
 //!              [--metrics-port P] [--tenant-rate R] [--tenant-burst B]
 //!              [--tenant-weights "a=4,b=1"]
 //!              [--max-connections N] [--idle-timeout-ms MS]
-//!              [--read-timeout-ms MS] [--reactor-workers N]
+//!              [--read-timeout-ms MS] [--write-stall-timeout-ms MS]
+//!              [--reactor-workers N]
 //!              [--registry-hot N] [--registry-warm N]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --json-schema SRC |
@@ -37,7 +38,9 @@
 //! connections (over-cap accepts are refused with the structured
 //! `overloaded`/`connection_limit` reply); `--idle-timeout-ms` /
 //! `--read-timeout-ms` bound silent keepalives and stalled partial
-//! requests (`0` disables either); `--reactor-workers N` sizes the pool.
+//! requests, `--write-stall-timeout-ms` cuts peers that stop reading
+//! their own replies (`0` disables any); `--reactor-workers N` sizes
+//! the pool.
 //! `--registry-hot N` / `--registry-warm N` size the engine-registry
 //! tiers: hot entries keep engine + mask cache, warm entries keep the
 //! engine only, overflow parks on disk when `--artifact-dir` is set.
@@ -146,9 +149,9 @@ fn parse_tenant_policy(flags: &HashMap<String, String>) -> domino::Result<Tenant
 }
 
 /// Gateway shape from `--max-connections` / `--idle-timeout-ms` /
-/// `--read-timeout-ms` / `--reactor-workers` (timeouts in milliseconds;
-/// `0` disables one). Invalid values are structured errors, not silent
-/// defaults.
+/// `--read-timeout-ms` / `--write-stall-timeout-ms` / `--reactor-workers`
+/// (timeouts in milliseconds; `0` disables one). Invalid values are
+/// structured errors, not silent defaults.
 fn parse_gateway(flags: &HashMap<String, String>) -> domino::Result<ReactorConfig> {
     let mut cfg = ReactorConfig::default();
     if let Some(s) = flags.get("max-connections") {
@@ -168,6 +171,14 @@ fn parse_gateway(flags: &HashMap<String, String>) -> domino::Result<ReactorConfi
             anyhow::anyhow!("--read-timeout-ms must be an integer (ms; 0 disables), got `{s}`")
         })?;
         cfg.read_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(s) = flags.get("write-stall-timeout-ms") {
+        let ms: u64 = s.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "--write-stall-timeout-ms must be an integer (ms; 0 disables), got `{s}`"
+            )
+        })?;
+        cfg.write_stall_timeout = (ms > 0).then(|| Duration::from_millis(ms));
     }
     if let Some(s) = flags.get("reactor-workers") {
         cfg.workers = match s.parse::<usize>() {
@@ -558,7 +569,8 @@ fn main() {
                  \u{20}          [--tenant-rate R] [--tenant-burst B] per-tenant admission quota\n\
                  \u{20}          [--tenant-weights \"a=4,b=1\"] weighted-fair queue drain\n\
                  \u{20}          [--max-connections N] [--idle-timeout-ms MS] [--read-timeout-ms MS]\n\
-                 \u{20}          [--reactor-workers N] gateway shape (0 ms disables a timeout)\n\
+                 \u{20}          [--write-stall-timeout-ms MS] [--reactor-workers N]\n\
+                 \u{20}          gateway shape (0 ms disables a timeout)\n\
                  \u{20}          [--registry-hot N] [--registry-warm N] engine-registry tier sizes\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --json-schema SRC | --json-schema-file PATH |\n\

@@ -258,6 +258,9 @@ pub struct Metrics {
     pub connections_idle_timeout: u64,
     /// Connections closed by the gateway read (partial-request) timeout.
     pub connections_read_timeout: u64,
+    /// Connections cut by the gateway write-stall timeout (the peer
+    /// stopped reading a non-empty reply buffer).
+    pub connections_write_stall: u64,
     /// Engines resident in the registry's hot tier (full mask caches).
     pub registry_hot_entries: u64,
     /// Engines resident in the warm tier (compiled, mask caches dropped).
@@ -359,6 +362,8 @@ impl Metrics {
             self.connections_idle_timeout.max(other.connections_idle_timeout);
         self.connections_read_timeout =
             self.connections_read_timeout.max(other.connections_read_timeout);
+        self.connections_write_stall =
+            self.connections_write_stall.max(other.connections_write_stall);
         self.registry_hot_entries = self.registry_hot_entries.max(other.registry_hot_entries);
         self.registry_warm_entries = self.registry_warm_entries.max(other.registry_warm_entries);
         self.registry_cold_entries = self.registry_cold_entries.max(other.registry_cold_entries);
@@ -689,7 +694,7 @@ pub const METRIC_DEFS: &[MetricDef] = &[
         name: "domino_connection_timeouts_total",
         kind: MetricKind::Counter,
         labels: &["kind"],
-        help: "Connections closed by a gateway timeout: kind is idle (no request activity) or read (a partial request stalled).",
+        help: "Connections closed by a gateway timeout: kind is idle (no request activity), read (a partial request stalled), or write_stall (the peer stopped reading its reply).",
     },
     MetricDef {
         name: "domino_connection_lifetime_seconds",
@@ -895,6 +900,7 @@ fn write_samples(out: &mut String, def: &MetricDef, m: &Metrics, shards: usize) 
             for (kind, v) in [
                 ("idle", m.connections_idle_timeout),
                 ("read", m.connections_read_timeout),
+                ("write_stall", m.connections_write_stall),
             ] {
                 write_counter(out, name, &format!("kind=\"{kind}\""), v as f64);
             }

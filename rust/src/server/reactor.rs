@@ -21,10 +21,15 @@
 //! * **timeouts with structured reasons**: connections over the admission
 //!   cap are refused with `"overloaded"`/`"connection_limit"`, silent
 //!   keepalive connections are closed after `idle_timeout` with
-//!   `"timeout"`/`"idle_timeout"`, and a stalled partial request (the
+//!   `"timeout"`/`"idle_timeout"`, a stalled partial request (the
 //!   slow-loris shape) is closed after `read_timeout` with
-//!   `"timeout"`/`"read_timeout"` — all three documented in PROTOCOL.md
-//!   and covered by the docs-drift test;
+//!   `"timeout"`/`"read_timeout"`, and a peer that stops reading its own
+//!   non-empty reply buffer is cut after `write_stall_timeout`
+//!   (`"timeout"`/`"write_stall"`, metrics-only — nothing is deliverable
+//!   to it) — all four documented in PROTOCOL.md and covered by the
+//!   docs-drift test. Read buffers are hard-capped ([`MAX_READ_BUF`],
+//!   [`MAX_HTTP_HEAD_BYTES`]): a client that pipelines bytes faster than
+//!   the gateway parses them gets TCP backpressure, not server memory;
 //! * **graceful drain**: [`Reactor::stop`] stops accepting, lets in-flight
 //!   requests finish and flush for up to `drain_grace`, then cancels the
 //!   stragglers. The workers hold the scheduler only **weakly**, so the
@@ -59,6 +64,21 @@ use std::time::{Duration, Instant};
 /// to resynchronize mid-line).
 const MAX_LINE_BYTES: usize = 1 << 20;
 
+/// Ceiling on *total* buffered unparsed request bytes per connection.
+/// The gateway parses one request at a time, so a client that pipelines
+/// complete lines behind a long-running request could otherwise grow
+/// `read_buf` without limit; at this cap the gateway simply stops
+/// reading the socket (ordinary TCP backpressure — the client's writes
+/// stall) until parsing frees space. Must exceed [`MAX_LINE_BYTES`] so
+/// the oversized-line error path stays reachable.
+const MAX_READ_BUF: usize = 4 * MAX_LINE_BYTES;
+
+/// Ceiling on a metrics-listener HTTP request head. A head that grows
+/// past this without its terminating blank line is answered with 431
+/// and the connection is closed — newline-terminated header lines must
+/// not accumulate unboundedly (`find_head_end` never consumes them).
+const MAX_HTTP_HEAD_BYTES: usize = 16 << 10;
+
 /// Ceiling on buffered unsent reply bytes per connection. A consumer that
 /// falls this far behind its own stream is treated as gone.
 const MAX_WRITE_BUF: usize = 8 << 20;
@@ -74,7 +94,7 @@ const MAX_READ_BACKOFF: Duration = Duration::from_millis(50);
 const PASS_SLEEP: Duration = Duration::from_millis(1);
 
 /// Gateway shape knobs (CLI: `--max-connections`, `--idle-timeout-ms`,
-/// `--read-timeout-ms`, `--reactor-workers`).
+/// `--read-timeout-ms`, `--write-stall-timeout-ms`, `--reactor-workers`).
 #[derive(Clone, Debug)]
 pub struct ReactorConfig {
     /// Admission cap across all listeners. Connections over the cap are
@@ -88,6 +108,14 @@ pub struct ReactorConfig {
     /// line, or an unterminated HTTP request head — the slow-loris shape)
     /// for this long (`None` = never): `"timeout"`/`"read_timeout"`.
     pub read_timeout: Option<Duration>,
+    /// Close connections whose buffered reply bytes move nowhere for this
+    /// long (`None` = never): the peer requested work and then stopped
+    /// reading. Nothing is deliverable to such a peer, so there is no
+    /// goodbye line — the close shows up only in metrics, as
+    /// `"timeout"`/`"write_stall"`. Without this a non-reading client
+    /// escapes both other timeouts (it is neither idle nor mid-request)
+    /// and parks in a `--max-connections` slot forever.
+    pub write_stall_timeout: Option<Duration>,
     /// Worker threads multiplexing the connections. Each added worker
     /// buys parallel request parsing/formatting, not decode throughput —
     /// decoding is the scheduler's department.
@@ -106,6 +134,7 @@ impl Default for ReactorConfig {
             max_connections: 4096,
             idle_timeout: Some(Duration::from_secs(300)),
             read_timeout: Some(Duration::from_secs(30)),
+            write_stall_timeout: Some(Duration::from_secs(60)),
             workers: 2,
             drain_grace: Duration::from_secs(5),
             defaults: ServeDefaults::default(),
@@ -123,6 +152,7 @@ pub struct GatewayStats {
     rejected: AtomicU64,
     idle_timeouts: AtomicU64,
     read_timeouts: AtomicU64,
+    write_stalls: AtomicU64,
     lifetime: Mutex<Summary>,
 }
 
@@ -135,17 +165,19 @@ impl GatewayStats {
         m.connections_rejected = self.rejected.load(Ordering::Relaxed);
         m.connections_idle_timeout = self.idle_timeouts.load(Ordering::Relaxed);
         m.connections_read_timeout = self.read_timeouts.load(Ordering::Relaxed);
+        m.connections_write_stall = self.write_stalls.load(Ordering::Relaxed);
         m.conn_lifetime.merge(&self.lifetime.lock().expect("gateway lifetime lock"));
         let rejected = m.connections_rejected;
         if rejected > 0 {
             *m.abort_reasons.entry("overloaded/connection_limit".into()).or_insert(0) += rejected;
         }
         for (reason, n) in [
-            ("timeout/idle_timeout", m.connections_idle_timeout),
-            ("timeout/read_timeout", m.connections_read_timeout),
+            ("idle_timeout", m.connections_idle_timeout),
+            ("read_timeout", m.connections_read_timeout),
+            ("write_stall", m.connections_write_stall),
         ] {
             if n > 0 {
-                *m.abort_reasons.entry(reason.into()).or_insert(0) += n;
+                *m.abort_reasons.entry(format!("timeout/{reason}")).or_insert(0) += n;
             }
         }
     }
@@ -160,6 +192,12 @@ impl GatewayStats {
 
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Connections cut because their peer stopped reading a non-empty
+    /// reply buffer for `write_stall_timeout`.
+    pub fn write_stalls(&self) -> u64 {
+        self.write_stalls.load(Ordering::Relaxed)
     }
 
     fn record_close(&self, opened: Instant) {
@@ -206,7 +244,13 @@ struct Conn {
     /// Set while `read_buf` holds an incomplete request; the read-timeout
     /// clock. For metrics connections this starts at accept: the whole
     /// request head is "incomplete" until its terminating blank line.
+    /// For JSONL it tracks only a genuinely partial *tail* frame while no
+    /// request is in flight — a complete pipelined line waiting behind an
+    /// in-flight request is patience, not a slow loris.
     partial_since: Option<Instant>,
+    /// Set while `write_buf` is non-empty and the socket accepts no bytes;
+    /// the write-stall clock (a peer that stopped reading its own reply).
+    write_stalled_since: Option<Instant>,
     /// Next read poll and current backoff (adaptive: reset by activity,
     /// doubled while quiet).
     next_read: Instant,
@@ -233,6 +277,7 @@ impl Conn {
             opened: now,
             last_activity: now,
             partial_since: if kind == Kind::Metrics { Some(now) } else { None },
+            write_stalled_since: None,
             next_read: now,
             read_backoff: MIN_READ_BACKOFF,
             read_closed: false,
@@ -592,7 +637,10 @@ fn pump(
     let now = Instant::now();
 
     // --- read readiness (adaptively backed off while quiet) ---
-    if !c.read_closed && !c.closing && now >= c.next_read {
+    // A full read buffer stops the reads entirely (TCP backpressure on
+    // the pipelining client) until parsing frees space; memory per
+    // connection stays bounded no matter what the peer sends.
+    if !c.read_closed && !c.closing && now >= c.next_read && c.read_buf.len() < read_cap(c.kind) {
         match read_ready(c) {
             ReadOutcome::Progress => {
                 progressed = true;
@@ -634,11 +682,25 @@ fn pump(
                         c.queue_line(&error_line("bad request: ", "request line too long"));
                         c.closing = true;
                     }
+                    NextLine::Invalid => {
+                        progressed = true;
+                        c.queue_line(&error_line("bad request: ", "request line is not valid UTF-8"));
+                        c.closing = true;
+                    }
                     NextLine::Partial => break,
                 }
             }
-            // Partial-frame bookkeeping for the read timeout.
-            if c.read_buf.iter().any(|b| !b.is_ascii_whitespace()) {
+            // Partial-frame bookkeeping for the read timeout: the clock
+            // runs only on a genuinely partial frame — non-whitespace
+            // bytes *after the last newline* — and only while no request
+            // is in flight. A complete pipelined line parked behind an
+            // in-flight request must never start the clock: it would be
+            // stale by the time the request finishes and would cut the
+            // connection with the valid follow-up still buffered.
+            let tail_start = c.read_buf.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+            let tail_partial =
+                c.read_buf[tail_start..].iter().any(|b| !b.is_ascii_whitespace());
+            if tail_partial && c.inflight.is_none() {
                 c.partial_since.get_or_insert(now);
             } else {
                 c.partial_since = None;
@@ -658,6 +720,17 @@ fn pump(
                     });
                     queue_http(c, status, ctype, &body);
                     c.closing = true; // Connection: close, as before
+                } else if c.read_buf.len() > MAX_HTTP_HEAD_BYTES {
+                    // Endless newline-terminated header lines with no
+                    // terminating blank line must not buffer forever.
+                    progressed = true;
+                    queue_http(
+                        c,
+                        431,
+                        "text/plain; charset=utf-8",
+                        "bad request: header section too large\n",
+                    );
+                    c.closing = true;
                 }
             }
         }
@@ -709,8 +782,13 @@ fn pump(
     // --- write flush ---
     if !c.write_buf.is_empty() {
         match flush_writes(c) {
-            Ok(true) => progressed = true,
-            Ok(false) => {}
+            Ok(true) => {
+                progressed = true;
+                c.write_stalled_since = None;
+            }
+            Ok(false) => {
+                c.write_stalled_since.get_or_insert(now);
+            }
             Err(_) => {
                 if let Some(inf) = &c.inflight {
                     inf.handle.cancel();
@@ -720,12 +798,31 @@ fn pump(
             }
         }
     }
+    if c.write_buf.is_empty() {
+        c.write_stalled_since = None;
+    }
     if c.write_buf.len() > MAX_WRITE_BUF {
         if let Some(inf) = &c.inflight {
             inf.handle.cancel();
         }
         c.broken = true;
         return true;
+    }
+    // A peer that requested work and then stopped reading is neither
+    // idle (write_buf is non-empty) nor mid-request (no partial frame),
+    // so without this check it would escape every timeout and park in a
+    // `--max-connections` slot forever. Nothing is deliverable to it, so
+    // there is no goodbye line — the cut is visible in metrics as
+    // `"timeout"`/`"write_stall"`.
+    if let Some(limit) = cfg.write_stall_timeout {
+        if c.write_stalled_since.is_some_and(|t| t.elapsed() >= limit) {
+            stats.write_stalls.fetch_add(1, Ordering::Relaxed);
+            if let Some(inf) = &c.inflight {
+                inf.handle.cancel();
+            }
+            c.broken = true;
+            return true;
+        }
     }
 
     // --- timeouts (structured reasons; see PROTOCOL.md "Connection
@@ -782,7 +879,19 @@ enum ReadOutcome {
     Broken,
 }
 
-/// Drain whatever the socket has ready into `read_buf` (nonblocking).
+/// Hard ceiling on `read_buf` for a connection of this kind; reads stop
+/// at the cap (backpressure) and resume once parsing frees space.
+fn read_cap(kind: Kind) -> usize {
+    match kind {
+        Kind::Jsonl => MAX_READ_BUF,
+        // One past the head cap, so the parser can observe the overflow
+        // and answer 431.
+        Kind::Metrics => MAX_HTTP_HEAD_BYTES + 1,
+    }
+}
+
+/// Drain whatever the socket has ready into `read_buf` (nonblocking),
+/// never growing it past [`read_cap`].
 fn read_ready(c: &mut Conn) -> ReadOutcome {
     let mut outcome = ReadOutcome::Idle;
     let mut chunk = [0u8; 4096];
@@ -792,8 +901,9 @@ fn read_ready(c: &mut Conn) -> ReadOutcome {
             Ok(n) => {
                 c.read_buf.extend_from_slice(&chunk[..n]);
                 outcome = ReadOutcome::Progress;
-                if c.read_buf.len() > MAX_LINE_BYTES && !c.read_buf.contains(&b'\n') {
-                    // Let the parser surface the structured error.
+                if c.read_buf.len() >= read_cap(c.kind) {
+                    // Full: let the parser drain (or reject) what we
+                    // have before pulling more off the socket.
                     return outcome;
                 }
             }
@@ -808,6 +918,11 @@ enum NextLine {
     Line(String),
     Partial,
     TooLong,
+    /// The line is not valid UTF-8. The threaded reference path
+    /// (`BufReader::lines`) errors out and drops such connections; the
+    /// gateway matches that strictness but says why first (a structured
+    /// bad-request line, then close) — documented in PROTOCOL.md.
+    Invalid,
 }
 
 fn has_complete_line(buf: &[u8]) -> bool {
@@ -824,7 +939,9 @@ fn next_line(buf: &mut Vec<u8>) -> NextLine {
                 let rest = buf.split_off(pos + 1);
                 let mut line = std::mem::replace(buf, rest);
                 line.pop(); // the newline
-                let line = String::from_utf8_lossy(&line).into_owned();
+                let Ok(line) = String::from_utf8(line) else {
+                    return NextLine::Invalid;
+                };
                 if line.trim().is_empty() {
                     continue; // blank keepalive lines are ignored
                 }
@@ -886,6 +1003,7 @@ fn queue_http(c: &mut Conn, status: u16, ctype: &str, body: &str) {
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        431 => "Request Header Fields Too Large",
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
@@ -946,6 +1064,25 @@ mod tests {
     }
 
     #[test]
+    fn next_line_rejects_invalid_utf8() {
+        // Lone continuation byte: never valid UTF-8. The threaded path
+        // drops such connections; the gateway answers a structured bad
+        // request first — either way the bytes are not silently mangled
+        // the way `from_utf8_lossy` would.
+        let mut buf = b"{\"prompt\": \"\x80\"}\n".to_vec();
+        assert!(matches!(next_line(&mut buf), NextLine::Invalid));
+    }
+
+    #[test]
+    fn read_caps_bound_every_connection_kind() {
+        // The pipelined-backlog cap must leave the oversized-line error
+        // reachable, and the metrics cap must let the parser observe one
+        // byte past the head limit (the 431 trigger).
+        assert!(read_cap(Kind::Jsonl) > MAX_LINE_BYTES);
+        assert_eq!(read_cap(Kind::Metrics), MAX_HTTP_HEAD_BYTES + 1);
+    }
+
+    #[test]
     fn head_end_detection_handles_both_line_endings() {
         assert_eq!(find_head_end(b"GET /metrics HTTP/1.1\r\n\r\n"), Some(25));
         assert_eq!(find_head_end(b"GET /metrics HTTP/1.1\n\n"), Some(23));
@@ -968,6 +1105,7 @@ mod tests {
         g.accepted.store(7, Ordering::Relaxed);
         g.rejected.store(2, Ordering::Relaxed);
         g.idle_timeouts.store(1, Ordering::Relaxed);
+        g.write_stalls.store(4, Ordering::Relaxed);
         g.lifetime.lock().unwrap().record(0.25);
         let mut m = Metrics::default();
         g.fill(&mut m);
@@ -976,9 +1114,11 @@ mod tests {
         assert_eq!(m.connections_rejected, 2);
         assert_eq!(m.connections_idle_timeout, 1);
         assert_eq!(m.connections_read_timeout, 0);
+        assert_eq!(m.connections_write_stall, 4);
         assert_eq!(m.conn_lifetime.count, 1);
         assert_eq!(m.abort_reasons.get("overloaded/connection_limit"), Some(&2));
         assert_eq!(m.abort_reasons.get("timeout/idle_timeout"), Some(&1));
         assert_eq!(m.abort_reasons.get("timeout/read_timeout"), None);
+        assert_eq!(m.abort_reasons.get("timeout/write_stall"), Some(&4));
     }
 }

@@ -411,6 +411,7 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("connections_rejected", Json::Num(m.connections_rejected as f64)),
         ("connections_idle_timeout", Json::Num(m.connections_idle_timeout as f64)),
         ("connections_read_timeout", Json::Num(m.connections_read_timeout as f64)),
+        ("connections_write_stall", Json::Num(m.connections_write_stall as f64)),
         ("conn_lifetime_p50_s", num_or_null(m.conn_lifetime.percentile(0.5))),
         ("conn_lifetime_p99_s", num_or_null(m.conn_lifetime.percentile(0.99))),
         ("tenants", tenants),

@@ -110,6 +110,7 @@ fn every_documented_error_reason_exists_in_engine() {
         "connection_limit",
         "idle_timeout",
         "read_timeout",
+        "write_stall",
     ] {
         assert!(
             PROTOCOL.contains(&format!("`\"{reason}\"`")),

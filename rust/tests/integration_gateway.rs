@@ -330,6 +330,203 @@ fn metrics_slow_loris_gets_408_not_a_parked_thread() {
     reactor.stop();
 }
 
+/// A *complete* pipelined request parked behind a long-running in-flight
+/// one must not trip the read timeout: the timeout clock runs only on a
+/// genuinely partial tail frame while no request is in flight, so the
+/// buffered follow-up is answered once the first request finishes —
+/// even when that takes far longer than `read_timeout`.
+#[test]
+fn pipelined_request_behind_slow_inflight_survives_read_timeout() {
+    let sched = Arc::new(slow_sched(30));
+    let cfg = ReactorConfig {
+        idle_timeout: None,
+        read_timeout: Some(Duration::from_millis(150)),
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::start(&sched, Some("127.0.0.1:0"), None, cfg).unwrap();
+    let mut conn = TcpStream::connect(reactor.jsonl_addr().unwrap()).unwrap();
+    // Both requests in one write: generation (~16 x 30 ms, several times
+    // the read timeout) with the stats op pipelined behind it.
+    conn.write_all(
+        b"{\"prompt\": \"\", \"grammar\": \"json\", \"max_tokens\": 16, \"seed\": 1}\n\
+          {\"op\": \"stats\"}\n",
+    )
+    .unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("error"), Some(&Json::Null), "generation must succeed: {line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert!(
+        v.get("requests_completed").is_some(),
+        "pipelined stats request must be answered, not timed out: {line}"
+    );
+    reactor.stop();
+}
+
+/// A client that pipelines bytes faster than the gateway parses them
+/// (here: unbounded junk behind a slow in-flight generation) gets TCP
+/// backpressure, not server memory — the gateway stops reading at its
+/// buffer cap and the client's own writes stall.
+#[test]
+fn pipelined_flood_behind_inflight_is_backpressured() {
+    let sched = Arc::new(slow_sched(50));
+    let reactor =
+        Reactor::start(&sched, Some("127.0.0.1:0"), None, ReactorConfig::default()).unwrap();
+    let mut conn = TcpStream::connect(reactor.jsonl_addr().unwrap()).unwrap();
+    writeln!(
+        conn,
+        r#"{{"prompt": "", "grammar": "json", "stream": true, "max_tokens": 48, "temperature": 1.0}}"#
+    )
+    .unwrap();
+
+    // Flood complete newline-terminated junk lines without ever reading.
+    // The parse loop is parked behind the in-flight request, so an
+    // unbounded gateway would buffer all of this; the capped one stops
+    // reading within a few MiB and the flood hits a sustained WouldBlock.
+    conn.set_nonblocking(true).unwrap();
+    let mut chunk = vec![b'x'; 8192];
+    *chunk.last_mut().unwrap() = b'\n';
+    const WRITE_CEILING: usize = 32 << 20;
+    let mut total = 0usize;
+    let mut stalled_at: Option<Instant> = None;
+    let mut sustained = false;
+    let deadline = Instant::now() + Duration::from_secs(8);
+    while Instant::now() < deadline {
+        match conn.write(&chunk) {
+            Ok(n) => {
+                total += n;
+                stalled_at = None;
+                assert!(
+                    total < WRITE_CEILING,
+                    "gateway accepted {total} flood bytes behind an in-flight request — \
+                     read_buf is unbounded again"
+                );
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if stalled_at.get_or_insert(Instant::now()).elapsed()
+                    >= Duration::from_millis(500)
+                {
+                    sustained = true;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => panic!("flood write failed: {e}"),
+        }
+    }
+    assert!(sustained, "expected sustained backpressure, wrote {total} bytes");
+    // Drop the flooding client first so the drain does not wait out its
+    // buffered junk: the next streamed event write fails and the
+    // connection is reaped as broken.
+    drop(conn);
+    reactor.stop();
+}
+
+/// Newline-terminated HTTP header lines that never finish the head must
+/// not accumulate unboundedly on the metrics listener: past the head cap
+/// the client gets a 431 and the connection closes (read timeouts
+/// disabled here to prove the byte cap acts on its own).
+#[test]
+fn metrics_unterminated_header_flood_gets_431() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let cfg = ReactorConfig {
+        idle_timeout: None,
+        read_timeout: None,
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::start(&sched, None, Some("127.0.0.1:0"), cfg).unwrap();
+    let mut conn = TcpStream::connect(reactor.metrics_addr().unwrap()).unwrap();
+    conn.write_all(b"GET /metrics HTTP/1.1\r\n").unwrap();
+    let pad = format!("X-Pad: {}\r\n", "a".repeat(120));
+    for _ in 0..256 {
+        // 256 x 129 B = 32 KiB of header lines, twice the head cap.
+        if conn.write_all(pad.as_bytes()).is_err() {
+            break; // server may already have cut us off mid-flood
+        }
+    }
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut body = String::new();
+    let _ = conn.read_to_string(&mut body); // reset after close is fine
+    assert!(body.starts_with("HTTP/1.1 431"), "oversized head must get a 431: {body}");
+    reactor.stop();
+}
+
+/// A peer that requests work, lets its receive window fill, and never
+/// reads again is neither idle nor mid-request; the write-stall timeout
+/// must cut it instead of letting it park in a connection slot forever.
+#[test]
+fn write_stalled_peer_is_cut_and_counted() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let cfg = ReactorConfig {
+        idle_timeout: None,
+        read_timeout: None,
+        write_stall_timeout: Some(Duration::from_millis(150)),
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::start(&sched, Some("127.0.0.1:0"), None, cfg).unwrap();
+    let jsonl = reactor.jsonl_addr().unwrap();
+    let stats = reactor.stats();
+
+    // Measure one reply so the flood can target a total reply volume
+    // well past what the kernel socket buffers can absorb (so the write
+    // side genuinely stalls) but safely under the 8 MiB write-buffer cap
+    // (so the stall timeout, not the cap, is what fires).
+    let mut probe = TcpStream::connect(jsonl).unwrap();
+    probe.write_all(b"nope\n").unwrap();
+    let mut reply = String::new();
+    BufReader::new(probe.try_clone().unwrap()).read_line(&mut reply).unwrap();
+    assert!(reply.contains("bad request"), "probe expected a parse error: {reply}");
+    let n = (6 << 20) / reply.len() + 1;
+
+    let mut glutton = TcpStream::connect(jsonl).unwrap();
+    glutton.write_all("nope\n".repeat(n).as_bytes()).unwrap();
+    // Never read a byte of the ~6 MiB of replies.
+    let t0 = Instant::now();
+    while stats.write_stalls() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "write-stalled connection was never cut (write_stalls still 0, open={})",
+            stats.open()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // The slot is actually released, not just counted.
+    let t0 = Instant::now();
+    while stats.open() > 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "cut connection still open");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(glutton);
+    reactor.stop();
+}
+
+/// A request line that is not valid UTF-8 gets a structured bad-request
+/// reply and the connection closes — the gateway matches the threaded
+/// path's strictness (which drops such connections) instead of silently
+/// mangling bytes with a lossy decode.
+#[test]
+fn invalid_utf8_request_line_is_rejected_structurally() {
+    let sched = Arc::new(mock_sched(1, 2));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(b"{\"op\": \"stats\", \"x\": \"\x80\"}\n").unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    let err = v.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("not valid UTF-8"), "{line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close after reject");
+}
+
 /// Frames split across arbitrary writes reassemble, and the connection
 /// stays usable for the next request (keepalive).
 #[test]

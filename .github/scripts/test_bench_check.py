@@ -189,6 +189,44 @@ class CompareTest(unittest.TestCase):
         self.assertTrue(any("gateway_scale.admission_p99_large_ms" in f for f in fails))
         self.assertTrue(any("gateway_scale.scale_flatness" in f for f in fails))
 
+    def test_trace_overhead_section_orientation(self):
+        # trace_overhead mixes orientations in one section: the overhead
+        # ratios (disabled/sampled vs untraced throughput) gate downward
+        # moves, capture_ms gates upward moves, and tok_s_untraced is
+        # deliberately unseeded (absolute mock throughput is
+        # runner-dependent; reported for the trajectory only).
+        base = {
+            "trace_overhead": {
+                "disabled_ratio": 0.95,
+                "sampled_ratio": 0.90,
+                "capture_ms": 5.0,
+            }
+        }
+        good = {
+            "trace_overhead": {
+                "disabled_ratio": 0.99,
+                "sampled_ratio": 0.97,
+                "capture_ms": 1.0,
+                "tok_s_untraced": 5000.0,
+            }
+        }
+        lines, fails = compare(base, good)
+        self.assertEqual(fails, [])
+        self.assertTrue(
+            any("tok_s_untraced" in l and "not gated" in l for l in lines)
+        )
+        bad = {
+            "trace_overhead": {
+                "disabled_ratio": 0.60,  # -37%: disabled tracing got expensive
+                "sampled_ratio": 0.90,
+                "capture_ms": 20.0,  # +300%: perfetto render blew up
+            }
+        }
+        fails = failures(base, bad)
+        self.assertEqual(len(fails), 2)
+        self.assertTrue(any("trace_overhead.disabled_ratio" in f for f in fails))
+        self.assertTrue(any("trace_overhead.capture_ms" in f for f in fails))
+
     def test_custom_threshold(self):
         base = {"s": {"tok_s_1": 100.0}}
         fresh = {"s": {"tok_s_1": 89.0}}

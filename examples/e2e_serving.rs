@@ -17,6 +17,7 @@ use domino::runtime::pjrt::{artifacts_dir, load_vocab, PjrtFactory, PjrtModel};
 use domino::server::engine::{EngineCtx, GenRequest};
 use domino::server::scheduler::{Scheduler, SchedulerConfig};
 use domino::server::tcp;
+use domino::server::trace::TraceConfig;
 use domino::util::bench::Table;
 use domino::util::Rng;
 use std::io::{Read, Write};
@@ -99,11 +100,27 @@ fn main() -> domino::Result<()> {
     if let Some(dir) = &precompute_dir {
         eprintln!("persistent precompute artifacts: {}", dir.display());
     }
+    // Tracing at full sample rate: every request records its span tree
+    // and lands a Chrome trace-event JSON file for Perfetto under the
+    // trace dir ($DOMINO_TRACE_DIR overrides the per-run temp default) —
+    // the end-to-end observability artifact CI's integration tests
+    // validate the format of.
+    let trace_dir = std::env::var_os("DOMINO_TRACE_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("domino-e2e-traces-{}", std::process::id()))
+        });
+    eprintln!("perfetto trace dir: {}", trace_dir.display());
     let cfg = SchedulerConfig {
         engines,
         slots_per_engine: 4, // serving slots per shard (continuous batching)
         queue_depth: 256,
         artifact_dir: precompute_dir,
+        trace: TraceConfig {
+            sample_rate: 1.0,
+            trace_dir: Some(trace_dir.clone()),
+            ..TraceConfig::default()
+        },
         ..SchedulerConfig::default()
     };
     // One vocab Arc shared by every shard (registry keys hash the vocab
@@ -146,12 +163,18 @@ fn main() -> domino::Result<()> {
 
     // Warm the PJRT executables (first executions trigger TFRT lazy
     // initialization and would otherwise penalize the first method).
-    let _ = server.generate(GenRequest {
+    // The warmup also asks for its trace on the wire path's terms
+    // (`trace: true`), so the inline-summary plumbing is exercised
+    // end to end.
+    let warm = server.generate(GenRequest {
         prompt: "Q: warmup\nA: ".into(),
         constraint: Constraint::none(),
         max_tokens: 24,
+        trace: true,
         ..Default::default()
     })?;
+    let summary = warm.trace.ok_or_else(|| anyhow::anyhow!("warmup trace summary missing"))?;
+    eprintln!("warmup trace summary: {summary}");
 
     let n = 20usize;
     let mut rng = Rng::new(42);
@@ -243,6 +266,38 @@ fn main() -> domino::Result<()> {
     let m = server.metrics()?;
     println!("\nengine metrics (all shards): {}", m.report());
     check_metrics_endpoint(metrics_addr)?;
+
+    // Every sampled request landed a Perfetto file; prove one loads as
+    // Chrome trace-event JSON with the per-tick phase spans present
+    // (`domino trace FILE` renders any of them as a text timeline).
+    let mut traces: Vec<std::path::PathBuf> = std::fs::read_dir(&trace_dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("trace-") && n.ends_with(".json"))
+        })
+        .collect();
+    traces.sort();
+    anyhow::ensure!(!traces.is_empty(), "no trace-*.json under {}", trace_dir.display());
+    let parsed = domino::util::Json::parse(&std::fs::read_to_string(&traces[0])?)?;
+    let events = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace file is not Chrome trace-event JSON"))?;
+    for span in ["request", "decode", "tick", "decide", "gather", "forward", "finish"] {
+        anyhow::ensure!(
+            events.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some(span)),
+            "trace file missing `{span}` span"
+        );
+    }
+    println!(
+        "perfetto traces OK: {} files in {} ({} events in the first)",
+        traces.len(),
+        trace_dir.display(),
+        events.len()
+    );
     match into_inner(server) {
         Some(server) => server.shutdown(),
         None => eprintln!("warn: scrape handler still live; skipping explicit shutdown"),

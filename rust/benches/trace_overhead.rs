@@ -1,0 +1,232 @@
+//! The tracing subsystem must be paid for: this bench proves (a) the
+//! serving loop with tracing compiled in but *disabled* (the shipped
+//! default) stays within 3% of the raw untraced tick path, and (b) 1%
+//! head sampling stays within 10% — both gated (`exit 1`) so a
+//! regression that makes the hot path pay for observability fails CI.
+//!
+//! Three configurations decode the same 8-slot JSON-grammar workload
+//! with identical seeds:
+//!
+//! * **untraced** — the bare `step_batched` tick loop over pre-built
+//!   slots (no engine bookkeeping, no tracer): the pure tick-throughput
+//!   baseline, as measured by `benches/batch_step.rs`.
+//! * **disabled** — `EngineCore` with `Tracer::disabled()`:
+//!   `Tracer::begin` returns `None` for every request, so the only
+//!   tracing cost is one branch per request plus the always-on
+//!   per-phase tick timing that feeds `{"op":"stats"}`.
+//! * **sampled** — `EngineCore` at `sample_rate = 0.01`. With a fresh
+//!   tracer per run the deterministic 1-in-100 head sampler captures
+//!   request id 1, i.e. 1 of the 8 requests records spans + per-token
+//!   decisions — a conservative 12.5% effective rate, well above the
+//!   nominal 1%.
+//!
+//! Both ratios gate against the untraced baseline: disabled ≥ 0.97×,
+//! sampled ≥ 0.90× (`DOMINO_BENCH_TRACE_RATIO` overrides both bars —
+//! the bench-smoke CI job relaxes them because loaded runners
+//! time-slice the passes differently). The sampled run must also be
+//! byte-identical to the disabled run: tracing may never change tokens.
+//!
+//! `cargo bench --bench trace_overhead` (env `DOMINO_BENCH_ITERS`
+//! overrides the repetition count; `DOMINO_BENCH_JSON` appends
+//! machine-readable results for the CI trend file).
+
+use domino::constraint::{Constraint, ConstraintSpec};
+use domino::domino::generate::Prompt;
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::runtime::sampler::Sampling;
+use domino::server::engine::{EngineCore, EngineCtx, GenRequest, GenResponse, Work};
+use domino::server::slot::{step_batched, Slot};
+use domino::server::trace::{render_timeline, TraceConfig, Tracer};
+use domino::util::bench::{emit_json, Table};
+use domino::util::Json;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+const SLOTS: usize = 8;
+const MAX_TOKENS: usize = 48;
+
+fn constraint() -> Constraint {
+    Constraint::domino(ConstraintSpec::builtin("json"))
+}
+
+/// Untraced baseline: decode `SLOTS` pre-built slots to completion with
+/// the raw batched tick loop. Returns (seconds, tokens).
+fn run_untraced(ctx: &mut EngineCtx) -> (f64, usize) {
+    let c = constraint();
+    let mut slots: Vec<Slot> = (0..SLOTS)
+        .map(|i| {
+            let mode = ctx.decode_mode(&c).expect("decode mode");
+            let session = ctx.backend.new_session().expect("session");
+            let prompt = Prompt::healed(&ctx.vocab, "");
+            Slot::new(
+                i as u64,
+                session,
+                mode,
+                ctx.vocab.clone(),
+                &prompt,
+                Sampling::Greedy,
+                MAX_TOKENS,
+                i as u64,
+            )
+            .expect("slot")
+        })
+        .collect();
+    let t0 = Instant::now();
+    while slots.iter().any(|s| !s.done) {
+        let mut view: Vec<&mut Slot> = slots.iter_mut().collect();
+        let tick = step_batched(ctx.backend.as_ref(), &mut view);
+        assert!(tick.all_ok(), "untraced step failed");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, slots.iter().map(|s| s.stats.tokens_out).sum())
+}
+
+/// Traced run: the same workload through `EngineCore` wired to `tracer`.
+/// Admission (compile, prefill, trace begin) happens before the clock
+/// starts so both paths time exactly the decode loop. Returns
+/// (seconds, tokens, texts).
+fn run_core(ctx: EngineCtx, tracer: Arc<Tracer>) -> (f64, usize, Vec<String>) {
+    let mut core = EngineCore::with_tracer(ctx, SLOTS, tracer.clone());
+    let mut rxs: Vec<mpsc::Receiver<GenResponse>> = Vec::with_capacity(SLOTS);
+    for i in 0..SLOTS {
+        let req = GenRequest {
+            constraint: constraint(),
+            max_tokens: MAX_TOKENS,
+            seed: i as u64,
+            ..GenRequest::default()
+        };
+        let (tx, rx) = mpsc::channel();
+        let trace = tracer.begin(req.trace, "default");
+        core.admit(Work {
+            req,
+            resp: tx,
+            sink: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            enqueued: Instant::now(),
+            deadline: None,
+            trace,
+        });
+        rxs.push(rx);
+    }
+    assert_eq!(core.active_len(), SLOTS, "all requests admitted");
+    let t0 = Instant::now();
+    while core.active_len() > 0 {
+        core.step_all();
+        core.reap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let mut tokens = 0;
+    let mut texts = Vec::with_capacity(SLOTS);
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "traced decode failed: {:?}", resp.error);
+        tokens += resp.stats.tokens_out;
+        texts.push(resp.text);
+    }
+    (secs, tokens, texts)
+}
+
+fn main() {
+    let iters: u32 =
+        std::env::var("DOMINO_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(5).max(1);
+    let bar_override: Option<f64> =
+        std::env::var("DOMINO_BENCH_TRACE_RATIO").ok().and_then(|s| s.parse().ok());
+    let disabled_bar = bar_override.unwrap_or(0.97);
+    let sampled_bar = bar_override.unwrap_or(0.90);
+    let (vocab, model) = json_mock(2048);
+    println!(
+        "== trace overhead: {SLOTS} slots × {MAX_TOKENS} tokens, vocab {}, best of {iters} runs ==\n",
+        vocab.len()
+    );
+
+    let ctx = || EngineCtx::new(Box::new(MockFactory { model: model.clone() }), vocab.clone());
+    let mut untraced_best = f64::MAX;
+    let mut disabled_best = f64::MAX;
+    let mut sampled_best = f64::MAX;
+    let mut tokens = 0usize;
+    let mut sampled_tracer = Tracer::disabled();
+    for _ in 0..iters {
+        let (secs, toks) = run_untraced(&mut ctx());
+        untraced_best = untraced_best.min(secs);
+        tokens = toks;
+
+        let (secs, toks_d, texts_d) = run_core(ctx(), Tracer::disabled());
+        disabled_best = disabled_best.min(secs);
+        assert_eq!(toks, toks_d, "engine path must commit the same tokens as the raw loop");
+
+        // Fresh tracer each run so the deterministic sampler always
+        // captures request id 1 (1 of SLOTS traced per run).
+        let tracer = Tracer::new(TraceConfig { sample_rate: 0.01, ..TraceConfig::default() });
+        let (secs, toks_s, texts_s) = run_core(ctx(), tracer.clone());
+        sampled_best = sampled_best.min(secs);
+        assert_eq!(toks_d, toks_s, "sampling must not change the token count");
+        assert_eq!(texts_d, texts_s, "tracing on vs off must be byte-identical");
+        sampled_tracer = tracer;
+    }
+
+    let recent = sampled_tracer.recent();
+    assert_eq!(recent.len(), 1, "1-in-100 sampling captures exactly request id 1 of 8");
+    let trace = &recent[0];
+    assert_eq!(trace.decisions.len(), tokens / SLOTS, "one decision per emitted token");
+
+    // Capture cost: render the captured trace to Perfetto JSON and back
+    // through the timeline renderer — the work `--trace-dir` pays per
+    // captured request.
+    let t0 = Instant::now();
+    const RENDERS: u32 = 20;
+    for _ in 0..RENDERS {
+        let perfetto = trace.perfetto();
+        let parsed = Json::parse(&perfetto).expect("perfetto output parses");
+        let _ = render_timeline(&parsed).expect("timeline renders");
+    }
+    let capture_ms = t0.elapsed().as_secs_f64() * 1e3 / RENDERS as f64;
+
+    let tok_s_untraced = tokens as f64 / untraced_best.max(1e-9);
+    let tok_s_disabled = tokens as f64 / disabled_best.max(1e-9);
+    let tok_s_sampled = tokens as f64 / sampled_best.max(1e-9);
+    let disabled_ratio = tok_s_disabled / tok_s_untraced.max(1e-9);
+    let sampled_ratio = tok_s_sampled / tok_s_untraced.max(1e-9);
+
+    let mut table = Table::new(&["configuration", "tokens", "best (ms)", "tok/s", "vs untraced"]);
+    for (name, best, tok_s, ratio) in [
+        ("untraced (raw tick loop)", untraced_best, tok_s_untraced, 1.0),
+        ("tracer disabled (default)", disabled_best, tok_s_disabled, disabled_ratio),
+        ("1% head sampling", sampled_best, tok_s_sampled, sampled_ratio),
+    ] {
+        table.row(&[
+            name.into(),
+            tokens.to_string(),
+            format!("{:.2}", best * 1e3),
+            format!("{tok_s:.0}"),
+            format!("{ratio:.3}x"),
+        ]);
+    }
+    table.print();
+    println!("\ncapture cost (perfetto render + timeline): {capture_ms:.3} ms/trace");
+
+    emit_json(
+        "trace_overhead",
+        &[
+            ("disabled_ratio", disabled_ratio),
+            ("sampled_ratio", sampled_ratio),
+            ("tok_s_untraced", tok_s_untraced),
+            ("capture_ms", capture_ms),
+        ],
+    );
+
+    let mut pass = true;
+    for (name, ratio, bar) in
+        [("disabled", disabled_ratio, disabled_bar), ("sampled", sampled_ratio, sampled_bar)]
+    {
+        let ok = ratio >= bar;
+        println!(
+            "{name} tracing throughput: {ratio:.3}x untraced (acceptance bar: >= {bar}x) — {}",
+            if ok { "PASS" } else { "FAIL" }
+        );
+        pass &= ok;
+    }
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -35,16 +35,28 @@ const MIN_GRAM_COUNT: u64 = 2;
 /// decoder (no [`crate::constraint::CachedChecker`] wrapper), so their
 /// mask computations go through the cache explicitly.
 pub fn cached_mask(decoder: &mut DominoDecoder, masks: &MaskCache, variant: u64) -> Arc<TokenMask> {
+    cached_mask_with_hit(decoder, masks, variant).0
+}
+
+/// [`cached_mask`], also reporting the cache outcome: `Some(true)` hit,
+/// `Some(false)` computed-and-filled, `None` uncacheable (no mask key).
+/// The tracing layer records this per decode decision; the plain path
+/// ignores it.
+pub fn cached_mask_with_hit(
+    decoder: &mut DominoDecoder,
+    masks: &MaskCache,
+    variant: u64,
+) -> (Arc<TokenMask>, Option<bool>) {
     match decoder.mask_key() {
         Some(state) => match masks.get(variant, state) {
-            Some(m) => m,
+            Some(m) => (m, Some(true)),
             None => {
                 let m = decoder.compute_mask();
                 masks.put(variant, state, m.clone());
-                m
+                (m, Some(false))
             }
         },
-        None => decoder.compute_mask(),
+        None => (decoder.compute_mask(), None),
     }
 }
 

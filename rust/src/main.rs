@@ -10,6 +10,7 @@
 //!              [--read-timeout-ms MS] [--write-stall-timeout-ms MS]
 //!              [--reactor-workers N]
 //!              [--registry-hot N] [--registry-warm N]
+//!              [--trace-sample-rate R] [--trace-slow-ms MS] [--trace-dir DIR]
 //! domino generate --prompt "..." [--grammar json | --ebnf SRC |
 //!                 --ebnf-file PATH | --json-schema SRC |
 //!                 --json-schema-file PATH | --regex PATTERN | --stop "a,b"]
@@ -23,6 +24,7 @@
 //! domino grammar <name>         # inspect: terminals, tree sizes, precompute time
 //! domino grammars               # list builtin grammars
 //! domino metrics-doc            # print docs/METRICS.md from the metric registry
+//! domino trace <file.json>      # render a captured trace as a per-tick timeline
 //! ```
 //!
 //! `--metrics-port P` (or `$DOMINO_METRICS_PORT`) serves the Prometheus
@@ -44,6 +46,15 @@
 //! `--registry-hot N` / `--registry-warm N` size the engine-registry
 //! tiers: hot entries keep engine + mask cache, warm entries keep the
 //! engine only, overflow parks on disk when `--artifact-dir` is set.
+//!
+//! `--trace-sample-rate R` head-samples one request in 1/R for
+//! request-scoped tracing (span tree + per-token decode decisions);
+//! aborted and over-`--trace-slow-ms` requests are always captured
+//! (tail sampling). Captured traces land in the `{"op":"trace"}` ring
+//! and, with `--trace-dir DIR` (or `$DOMINO_TRACE_DIR`), as
+//! Perfetto-loadable Chrome trace-event JSON files. `domino trace
+//! FILE` renders one such file (or an `{"op":"trace"}` dump entry) as
+//! a per-tick timeline. See `rust/OPERATIONS.md`.
 //!
 //! `--engines N` shards the server across N engine threads sharing one
 //! compiled-grammar registry (grammar-affinity routing, bounded queues
@@ -76,6 +87,7 @@ use domino::server::engine::{EngineCtx, GenRequest};
 use domino::server::reactor::{Reactor, ReactorConfig};
 use domino::server::scheduler::{Scheduler, SchedulerConfig, TenantPolicy};
 use domino::server::tcp;
+use domino::server::trace::{render_timeline, TraceConfig};
 use domino::util::Json;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -189,6 +201,31 @@ fn parse_gateway(flags: &HashMap<String, String>) -> domino::Result<ReactorConfi
     Ok(cfg)
 }
 
+/// Tracing shape from `--trace-sample-rate` / `--trace-slow-ms` /
+/// `--trace-dir` (the trace directory falls back to `$DOMINO_TRACE_DIR`).
+/// The default config disables tracing; `"trace": true` requests still
+/// get an inline summary.
+fn parse_trace(flags: &HashMap<String, String>) -> domino::Result<TraceConfig> {
+    let mut cfg = TraceConfig::default();
+    if let Some(s) = flags.get("trace-sample-rate") {
+        cfg.sample_rate = match s.parse::<f64>() {
+            Ok(r) if r.is_finite() && (0.0..=1.0).contains(&r) => r,
+            _ => anyhow::bail!("--trace-sample-rate must be a number in [0, 1], got `{s}`"),
+        };
+    }
+    if let Some(s) = flags.get("trace-slow-ms") {
+        let ms: u64 = s.parse().map_err(|_| {
+            anyhow::anyhow!("--trace-slow-ms must be an integer (ms; 0 disables), got `{s}`")
+        })?;
+        cfg.slow = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    cfg.trace_dir = flags
+        .get("trace-dir")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var_os("DOMINO_TRACE_DIR").map(PathBuf::from));
+    Ok(cfg)
+}
+
 fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler> {
     let mock = flags.contains_key("mock");
     let tier_defaults = SchedulerConfig::default();
@@ -215,6 +252,7 @@ fn start_scheduler(flags: &HashMap<String, String>) -> domino::Result<Scheduler>
         lazy_compile: flags.contains_key("lazy-compile")
             || std::env::var_os("DOMINO_LAZY_COMPILE").is_some_and(|v| v != "0"),
         tenants: parse_tenant_policy(flags)?,
+        trace: parse_trace(flags)?,
         ..SchedulerConfig::default()
     };
     // One vocab Arc shared by every shard (registry keys hash the vocab
@@ -558,9 +596,21 @@ fn main() {
             print!("{}", domino::server::metrics::metrics_doc());
             Ok(())
         }
+        // Render a captured trace (a --trace-dir file or one entry of an
+        // {"op":"trace"} dump) as a human-readable per-tick timeline.
+        "trace" => match positional.first() {
+            Some(path) => (|| {
+                let src = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+                let v = Json::parse(&src)?;
+                println!("{}", render_timeline(&v)?.trim_end());
+                Ok(())
+            })(),
+            None => Err(anyhow::anyhow!("usage: domino trace FILE.json")),
+        },
         _ => {
             eprintln!(
-                "usage: domino <serve|generate|precompile|grammar|grammars|metrics-doc> [flags]\n\
+                "usage: domino <serve|generate|precompile|grammar|grammars|metrics-doc|trace> [flags]\n\
                  \n\
                  serve     --addr HOST:PORT [--engines N] [--slots N] [--queue-depth N]\n\
                  \u{20}          [--deadline-ms N] [--artifact-dir DIR] [--lazy-compile]\n\
@@ -572,6 +622,8 @@ fn main() {
                  \u{20}          [--write-stall-timeout-ms MS] [--reactor-workers N]\n\
                  \u{20}          gateway shape (0 ms disables a timeout)\n\
                  \u{20}          [--registry-hot N] [--registry-warm N] engine-registry tier sizes\n\
+                 \u{20}          [--trace-sample-rate R] [--trace-slow-ms MS] [--trace-dir DIR]\n\
+                 \u{20}          request tracing (head sampling + aborted/slow tail capture)\n\
                  generate  --prompt STR [--grammar NAME | --ebnf SRC | --ebnf-file PATH |\n\
                  \u{20}           --json-schema SRC | --json-schema-file PATH |\n\
                  \u{20}           --regex PATTERN | --stop \"SEQ1,SEQ2\"]\n\
@@ -588,6 +640,8 @@ fn main() {
                  grammars          list builtin grammars\n\
                  metrics-doc       print the metrics reference (docs/METRICS.md) from\n\
                  \u{20}          the in-code registry\n\
+                 trace     FILE    render a captured trace (--trace-dir file or one\n\
+                 \u{20}          {\"op\":\"trace\"} dump entry) as a per-tick timeline\n\
                  \n\
                  --artifact-dir defaults to $DOMINO_ARTIFACT_DIR when unset."
             );

@@ -25,12 +25,14 @@
 use super::metrics::Metrics;
 use super::scheduler::{RequestHandle, Scheduler, SchedulerConfig};
 use super::slot::{step_batched, DecodeMode, Slot, SlotStats, StreamEvent};
+use super::trace::{RequestTrace, SlotTrace, Tracer};
 use crate::constraint::{CachedChecker, EngineRegistry, MaskCache, StopChecker};
 use crate::domino::decoder::Lookahead;
 use crate::domino::{DominoDecoder, PriorDraft, SpeculativeModel};
 use crate::runtime::sampler::Sampling;
 use crate::runtime::LmBackend;
 use crate::tokenizer::Vocab;
+use crate::util::Json;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
@@ -67,6 +69,10 @@ pub struct GenRequest {
     /// `tenant` label on exported metrics. `None` lands under
     /// [`DEFAULT_TENANT`].
     pub tenant: Option<String>,
+    /// Wire-level tracing flag (`"trace": true`): always capture this
+    /// request's trace and attach an inline summary to the response,
+    /// regardless of the head-sampling rate.
+    pub trace: bool,
 }
 
 /// Tenant label for requests that omit the wire `tenant` field.
@@ -90,6 +96,7 @@ impl Default for GenRequest {
             deadline: None,
             stream: false,
             tenant: None,
+            trace: false,
         }
     }
 }
@@ -108,6 +115,10 @@ pub struct GenResponse {
     pub reason: Option<String>,
     /// Wall time spent generating, seconds.
     pub elapsed_s: f64,
+    /// Inline trace summary, present only when the request set
+    /// `"trace": true` (span durations, per-token decision counts,
+    /// capture cause — see [`super::trace::FinishedTrace::summary`]).
+    pub trace: Option<Json>,
 }
 
 impl GenResponse {
@@ -118,6 +129,7 @@ impl GenResponse {
             error: Some(error.into()),
             reason: None,
             elapsed_s: 0.0,
+            trace: None,
         }
     }
 
@@ -331,6 +343,10 @@ pub struct Work {
     pub enqueued: Instant,
     /// Absolute deadline resolved at submission.
     pub deadline: Option<Instant>,
+    /// Request trace under construction (None when the tracer skipped
+    /// this request). Begun at submission so queue wait is on the
+    /// timeline; finalized wherever the request is answered.
+    pub trace: Option<Box<RequestTrace>>,
 }
 
 impl Work {
@@ -407,6 +423,29 @@ struct Active {
     /// Constraint fingerprint (hex) for per-grammar metrics; `None` for
     /// unconstrained requests.
     grammar: Option<String>,
+    /// Request-side trace (span tree); the per-token decision records
+    /// accumulate on `slot.trace` and are merged at finalize.
+    trace: Option<Box<RequestTrace>>,
+}
+
+/// Finalize a request's trace wherever the request is answered: fold the
+/// slot-side decision records in, stamp the structured abort reason, and
+/// hand the trace to the shared tracer (which decides capture). Returns
+/// the inline summary when the request asked for one.
+fn finish_trace(
+    tracer: &Tracer,
+    trace: Option<Box<RequestTrace>>,
+    slot: Option<Box<SlotTrace>>,
+    abort: Option<&str>,
+) -> Option<Json> {
+    let mut trace = trace?;
+    if let Some(slot) = slot {
+        trace.merge_slot(*slot);
+    }
+    if let Some(reason) = abort {
+        trace.abort = Some(reason.to_string());
+    }
+    tracer.finish(trace)
 }
 
 /// One engine shard's state: the model context, the active slots, and the
@@ -418,16 +457,26 @@ pub struct EngineCore {
     pub metrics: Metrics,
     next_id: u64,
     max_slots: usize,
+    /// Shared request tracer (all shards hand finished traces to one
+    /// ring). A disabled tracer for cores built with [`EngineCore::new`].
+    tracer: Arc<Tracer>,
 }
 
 impl EngineCore {
     pub fn new(ctx: EngineCtx, max_slots: usize) -> EngineCore {
+        Self::with_tracer(ctx, max_slots, Tracer::disabled())
+    }
+
+    /// An engine core wired to a shared [`Tracer`] (the scheduler's
+    /// shard loops use this so every shard captures into one ring).
+    pub fn with_tracer(ctx: EngineCtx, max_slots: usize, tracer: Arc<Tracer>) -> EngineCore {
         EngineCore {
             ctx,
             active: Vec::new(),
             metrics: Metrics::default(),
             next_id: 0,
             max_slots: max_slots.max(1),
+            tracer,
         }
     }
 
@@ -456,7 +505,10 @@ impl EngineCore {
             }
         }
         self.metrics.record_abort(abort.kind(), abort.reason());
-        let _ = work.resp.send(GenResponse::failure_with_reason(abort.message(), abort.reason()));
+        let trace = finish_trace(&self.tracer, work.trace, None, Some(abort.reason()));
+        let mut resp = GenResponse::failure_with_reason(abort.message(), abort.reason());
+        resp.trace = trace;
+        let _ = work.resp.send(resp);
     }
 
     /// Admit one request into a free slot: resolve the constraint through
@@ -468,7 +520,7 @@ impl EngineCore {
             self.reject(work, abort);
             return;
         }
-        let Work { req, resp, sink, cancel, enqueued, deadline } = work;
+        let Work { req, resp, sink, cancel, enqueued, deadline, mut trace } = work;
         let tenant = req.tenant_label().to_string();
         let grammar = match &req.constraint.spec {
             ConstraintSpec::Unconstrained => None,
@@ -483,15 +535,16 @@ impl EngineCore {
         self.next_id += 1;
         let next_id = self.next_id;
         let ctx = &mut self.ctx;
-        let admit = (|| -> crate::Result<Slot> {
+        let admit = (|| -> crate::Result<(Slot, usize)> {
             let mode = ctx.decode_mode(&req.constraint)?;
             let session = ctx.backend.new_session()?;
             let prompt = crate::domino::generate::Prompt::healed(&ctx.vocab, &req.prompt);
+            let healed = prompt.forced.len();
             let sampling = match req.temperature {
                 Some(t) => Sampling::Temperature(t),
                 None => Sampling::Greedy,
             };
-            Slot::new(
+            let slot = Slot::new(
                 next_id,
                 session,
                 mode,
@@ -500,12 +553,23 @@ impl EngineCore {
                 sampling,
                 req.max_tokens,
                 req.seed,
-            )
+            )?;
+            Ok((slot, healed))
         })();
         match admit {
-            Ok(mut slot) => {
+            Ok((mut slot, healed)) => {
                 if let Some(sink) = sink {
                     slot.attach_sink(sink);
+                }
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.admitted();
+                    if healed > 0 {
+                        tr.event(format!("healed {healed} prompt bytes"));
+                    }
+                    // The slot-side recorder shares the request's submit
+                    // instant so decision timestamps land on the span
+                    // timeline.
+                    slot.trace = Some(Box::new(SlotTrace::new(tr.started)));
                 }
                 self.active.push(Active {
                     slot,
@@ -517,12 +581,15 @@ impl EngineCore {
                     responded: false,
                     tenant,
                     grammar,
+                    trace,
                 });
             }
             Err(e) => {
                 self.metrics.requests_failed += 1;
                 self.metrics.tenant(&tenant).failed += 1;
-                let _ = resp.send(GenResponse::failure(format!("{e:#}")));
+                let mut r = GenResponse::failure(format!("{e:#}"));
+                r.trace = finish_trace(&self.tracer, trace, None, None);
+                let _ = resp.send(r);
             }
         }
     }
@@ -565,12 +632,22 @@ impl EngineCore {
                 }
                 self.metrics.record_abort(abort.kind(), abort.reason());
                 a.responded = true;
+                // Flush the (tail-sampled) trace BEFORE the partial
+                // response: an aborted streaming request must land in
+                // the ring even though reap() only sweeps the slot.
+                let trace = finish_trace(
+                    &self.tracer,
+                    a.trace.take(),
+                    a.slot.trace.take(),
+                    Some(abort.reason()),
+                );
                 let _ = a.resp.send(GenResponse {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: Some(abort.message().into()),
                     reason: Some(abort.reason().into()),
                     elapsed_s: a.started.elapsed().as_secs_f64(),
+                    trace,
                 });
                 continue;
             }
@@ -603,24 +680,36 @@ impl EngineCore {
             self.metrics.forward_rows += tick.rows as u64;
             self.metrics.batch_size.record(tick.lanes as f64);
             self.metrics.tick_time.record(t0.elapsed().as_secs_f64());
+            // Per-phase attribution (decide / gather / forward / finish)
+            // is always on — it feeds `{"op":"stats"}` and the
+            // `domino_tick_phase_seconds` histogram without tracing.
+            self.metrics.tick_decide.record(tick.decide.as_secs_f64());
+            self.metrics.tick_gather.record(tick.gather.as_secs_f64());
+            self.metrics.tick_forward.record(tick.forward.as_secs_f64());
+            self.metrics.tick_finish.record(tick.finish.as_secs_f64());
         }
         // Per-slot bookkeeping: answer failures, count fresh tokens.
         for ((&i, result), &(before_tokens, before_calls)) in
             live.iter().zip(&tick.results).zip(&before)
         {
             let a = &mut self.active[i];
+            if let Some(tr) = a.trace.as_deref_mut() {
+                tr.record_tick(t0, tick.decide, tick.gather, tick.forward, tick.finish);
+            }
             if let Err(e) = result {
                 self.metrics.requests_failed += 1;
                 self.metrics.tenant(&a.tenant).failed += 1;
                 a.slot.done = true;
                 a.slot.finish_stream();
                 a.responded = true;
+                let trace = finish_trace(&self.tracer, a.trace.take(), a.slot.trace.take(), None);
                 let _ = a.resp.send(GenResponse {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: Some(format!("{e:#}")),
                     reason: None,
                     elapsed_s: a.started.elapsed().as_secs_f64(),
+                    trace,
                 });
                 continue;
             }
@@ -681,12 +770,14 @@ impl EngineCore {
                 if elapsed > 0.0 {
                     self.metrics.req_tps.record(a.slot.stats.tokens_out as f64 / elapsed);
                 }
+                let trace = finish_trace(&self.tracer, a.trace.take(), a.slot.trace.take(), None);
                 let _ = a.resp.send(GenResponse {
                     text: a.slot.text(),
                     stats: a.slot.stats.clone(),
                     error: None,
                     reason: None,
                     elapsed_s: elapsed,
+                    trace,
                 });
             } else {
                 i += 1;

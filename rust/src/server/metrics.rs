@@ -281,6 +281,27 @@ pub struct Metrics {
     /// Engine-tick wall time (one `step_all` over the live slots),
     /// seconds.
     pub tick_time: Summary,
+    /// Tick decide-phase wall time (per-slot mask/sample/commit, no
+    /// model calls), seconds. With the other three phase summaries this
+    /// gives operators phase attribution without tracing on.
+    pub tick_decide: Summary,
+    /// Tick gather-phase wall time (collecting pending extensions into
+    /// batch lanes), seconds.
+    pub tick_gather: Summary,
+    /// Tick forward-phase wall time (the single batched model call),
+    /// seconds.
+    pub tick_forward: Summary,
+    /// Tick finish-phase wall time (verify / commit / stream), seconds.
+    pub tick_finish: Summary,
+    /// Traces captured by head sampling (`--trace-sample-rate`).
+    pub traces_sampled: u64,
+    /// Traces captured because the request set `"trace": true`.
+    pub traces_requested: u64,
+    /// Traces captured tail-based because the request aborted.
+    pub traces_aborted: u64,
+    /// Traces captured tail-based because the request exceeded
+    /// `--trace-slow-ms`.
+    pub traces_slow: u64,
     /// Per-request draft acceptance ratio (accepted / proposed) for
     /// requests that ran the draft lane.
     pub draft_acceptance: Summary,
@@ -373,6 +394,17 @@ impl Metrics {
         self.req_tps.merge(&other.req_tps);
         self.mask_us.merge(&other.mask_us);
         self.tick_time.merge(&other.tick_time);
+        self.tick_decide.merge(&other.tick_decide);
+        self.tick_gather.merge(&other.tick_gather);
+        self.tick_forward.merge(&other.tick_forward);
+        self.tick_finish.merge(&other.tick_finish);
+        // Trace-capture counters have a single source (the scheduler's
+        // shared tracer fills them at aggregation), so max-merge like the
+        // other shared-source counters.
+        self.traces_sampled = self.traces_sampled.max(other.traces_sampled);
+        self.traces_requested = self.traces_requested.max(other.traces_requested);
+        self.traces_aborted = self.traces_aborted.max(other.traces_aborted);
+        self.traces_slow = self.traces_slow.max(other.traces_slow);
         self.draft_acceptance.merge(&other.draft_acceptance);
         self.model_time += other.model_time;
         for (k, v) in &other.abort_reasons {
@@ -539,6 +571,18 @@ pub const METRIC_DEFS: &[MetricDef] = &[
         kind: MetricKind::Histogram,
         labels: &[],
         help: "Engine-tick wall time (one step_all over a shard's live slots).",
+    },
+    MetricDef {
+        name: "domino_tick_phase_seconds",
+        kind: MetricKind::Histogram,
+        labels: &["phase"],
+        help: "Engine-tick phase attribution: decide (mask/sample/commit), gather (lane collection), forward (the batched model call), finish (verify/commit/stream).",
+    },
+    MetricDef {
+        name: "domino_traces_captured_total",
+        kind: MetricKind::Counter,
+        labels: &["cause"],
+        help: "Request traces captured, by cause: sampled (head sampling), requested (\"trace\": true on the wire), aborted / slow (tail-based capture).",
     },
     MetricDef {
         name: "domino_interventions_total",
@@ -829,6 +873,26 @@ fn write_samples(out: &mut String, def: &MetricDef, m: &Metrics, shards: usize) 
         "domino_forward_rows_total" => write_counter(out, name, "", m.forward_rows as f64),
         "domino_batch_width" => write_hist(out, name, "", &m.batch_size),
         "domino_tick_seconds" => write_hist(out, name, "", &m.tick_time),
+        "domino_tick_phase_seconds" => {
+            for (phase, s) in [
+                ("decide", &m.tick_decide),
+                ("gather", &m.tick_gather),
+                ("forward", &m.tick_forward),
+                ("finish", &m.tick_finish),
+            ] {
+                write_hist(out, name, &format!("phase=\"{phase}\""), s);
+            }
+        }
+        "domino_traces_captured_total" => {
+            for (cause, v) in [
+                ("sampled", m.traces_sampled),
+                ("requested", m.traces_requested),
+                ("aborted", m.traces_aborted),
+                ("slow", m.traces_slow),
+            ] {
+                write_counter(out, name, &format!("cause=\"{cause}\""), v as f64);
+            }
+        }
         "domino_interventions_total" => write_counter(out, name, "", m.interventions as f64),
         "domino_masks_computed_total" => write_counter(out, name, "", m.masks_computed as f64),
         "domino_mask_compute_us" => write_hist(out, name, "", &m.mask_us),

@@ -48,6 +48,11 @@
 //!   vendored crate set has no tokio/mio), `--max-connections`
 //!   admission, idle/read timeouts with structured abort reasons, and
 //!   graceful drain on shutdown.
+//! * [`trace`] — request-scoped tracing: span trees (queue → decode →
+//!   per-tick decide/gather/forward/finish) with per-token decode
+//!   decision records, head-sampled + tail-captured (aborted/slow) into
+//!   a shared ring, exportable as Chrome trace-event JSON (Perfetto)
+//!   and a human-readable timeline (`domino trace`).
 
 pub mod engine;
 pub mod metrics;
@@ -55,6 +60,7 @@ pub mod reactor;
 pub mod scheduler;
 pub mod slot;
 pub mod tcp;
+pub mod trace;
 
 pub use engine::{
     Constraint, ConstraintSpec, EngineCore, EngineCtx, Enforcement, GenRequest, GenResponse, Server,
@@ -63,3 +69,4 @@ pub use metrics::Metrics;
 pub use reactor::{GatewayStats, Reactor, ReactorConfig};
 pub use scheduler::{CancelToken, RequestHandle, Scheduler, SchedulerConfig};
 pub use slot::{step_batched, BatchTick, DecodeMode, Slot, StreamEvent};
+pub use trace::{TraceConfig, Tracer};

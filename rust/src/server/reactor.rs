@@ -981,6 +981,9 @@ fn dispatch_jsonl(
             };
             c.queue_line(&reply);
         }
+        Ok(Request::Trace) => {
+            c.queue_line(&super::tcp::format_trace_dump(sched.tracer()));
+        }
         Ok(Request::Generate(mut req)) => {
             cfg.defaults.apply(&mut req);
             let inflight = if req.stream {

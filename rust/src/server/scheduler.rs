@@ -50,6 +50,7 @@
 use super::engine::{EngineCore, EngineCtx, GenRequest, GenResponse, Work};
 use super::metrics::{labeled, Metrics};
 use super::slot::StreamEvent;
+use super::trace::{TraceConfig, Tracer};
 use crate::constraint::{ArtifactStore, EngineRegistry};
 use anyhow::Context;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -250,6 +251,10 @@ pub struct SchedulerConfig {
     /// `--tenant-rate` / `--tenant-burst` / `--tenant-weights`). The
     /// default policy admits everything and weights every tenant 1.
     pub tenants: TenantPolicy,
+    /// Request tracing (CLI `--trace-sample-rate` / `--trace-slow-ms` /
+    /// `--trace-dir`). The default config disables tracing entirely;
+    /// `"trace": true` requests still get an inline summary.
+    pub trace: TraceConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -264,6 +269,7 @@ impl Default for SchedulerConfig {
             artifact_dir: None,
             lazy_compile: false,
             tenants: TenantPolicy::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -374,6 +380,9 @@ pub struct Scheduler {
     /// into [`Scheduler::metrics`] as per-tenant shed counts and
     /// `shed/<reason>` abort entries.
     shed_by: Mutex<BTreeMap<(String, String), u64>>,
+    /// Shared request tracer: every shard captures into its ring, the
+    /// admission front begins traces and finalizes shed ones.
+    tracer: Arc<Tracer>,
 }
 
 impl Scheduler {
@@ -407,6 +416,7 @@ impl Scheduler {
         registry.set_lazy_build(cfg.lazy_compile);
         let init = Arc::new(init);
         let weights = Arc::new(cfg.tenants.weights.clone());
+        let tracer = Tracer::new(cfg.trace.clone());
         let mut shards = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {
             let (tx, rx) = mpsc::channel::<Job>();
@@ -417,6 +427,7 @@ impl Scheduler {
             let registry = registry.clone();
             let weights = weights.clone();
             let slots = cfg.slots_per_engine;
+            let shard_tracer = tracer.clone();
             let (q, a, tq) = (queued.clone(), active.clone(), tenant_queued.clone());
             let handle = std::thread::Builder::new()
                 .name(format!("domino-shard-{i}"))
@@ -437,7 +448,8 @@ impl Scheduler {
                             return;
                         }
                     };
-                    shard_loop(EngineCore::new(ctx, slots), rx, q, a, tq, weights, i == 0);
+                    let core = EngineCore::with_tracer(ctx, slots, shard_tracer);
+                    shard_loop(core, rx, q, a, tq, weights, i == 0);
                 })
                 .expect("spawn shard thread");
             shards.push(Shard { tx, queued, active, tenant_queued, handle: Some(handle) });
@@ -449,6 +461,7 @@ impl Scheduler {
             shed: AtomicU64::new(0),
             buckets: Mutex::new(HashMap::new()),
             shed_by: Mutex::new(BTreeMap::new()),
+            tracer,
         }
     }
 
@@ -460,6 +473,12 @@ impl Scheduler {
     /// The shared compiled-engine registry (passed to every shard init).
     pub fn registry(&self) -> Arc<EngineRegistry> {
         self.registry.clone()
+    }
+
+    /// The shared request tracer (ring of recently captured traces; the
+    /// TCP front end serves `{"op":"trace"}` from it).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// Pick the shard for `req`: preferred = constraint fingerprint mod
@@ -549,15 +568,28 @@ impl Scheduler {
             req.deadline = self.cfg.default_deadline;
         }
         let tenant = req.tenant_label().to_string();
+        // Begin the trace at submission so queue wait (and even shed
+        // decisions) land on the timeline. `shed` finalizes it with the
+        // structured reason; admitted work carries it to the shard.
+        let trace = self.tracer.begin(req.trace, &tenant);
+        let shed = |mut trace: Option<Box<super::trace::RequestTrace>>, reason: &str| {
+            let summary = trace.take().and_then(|mut t| {
+                t.abort = Some(reason.to_string());
+                self.tracer.finish(t)
+            });
+            let mut resp = GenResponse::overloaded(reason);
+            resp.trace = summary;
+            resp
+        };
         if !self.admit_quota(&tenant) {
             self.note_shed(&tenant, "tenant_quota");
-            let _ = tx.send(GenResponse::overloaded("tenant_quota"));
+            let _ = tx.send(shed(trace, "tenant_quota"));
             return handle;
         }
         match self.route(&req) {
             None => {
                 self.note_shed(&tenant, "queue_full");
-                let _ = tx.send(GenResponse::overloaded("queue_full"));
+                let _ = tx.send(shed(trace, "queue_full"));
             }
             Some(i) => {
                 let deadline = req.deadline.map(|d| Instant::now() + d);
@@ -568,6 +600,7 @@ impl Scheduler {
                     cancel,
                     enqueued: Instant::now(),
                     deadline,
+                    trace,
                 };
                 {
                     let mut tq =
@@ -614,6 +647,8 @@ impl Scheduler {
             labeled(&mut agg.tenants, tenant).shed += count;
             *labeled(&mut agg.abort_reasons, &format!("shed/{reason}")) += count;
         }
+        // Capture counters live on the shared tracer, not any shard.
+        self.tracer.fill(&mut agg);
         Ok(agg)
     }
 

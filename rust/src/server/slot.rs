@@ -20,17 +20,18 @@
 //! path (tests, benches, the batched path's parity reference).
 
 use crate::constraint::MaskCache;
-use crate::domino::draft::{adaptive_k, cached_mask, DraftModel};
+use crate::domino::draft::{adaptive_k, cached_mask_with_hit, DraftModel};
 use crate::domino::generate::Prompt;
 use crate::domino::{Checker, DominoDecoder, SpeculativeModel, TokenMask};
 use crate::runtime::sampler::{decode, log_prob, Sampling};
 use crate::runtime::{BatchLane, LmBackend, LmSession};
+use crate::server::trace::SlotTrace;
 use crate::tokenizer::{Vocab, EOS_ID};
 use crate::util::Rng;
 use crate::TokenId;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One streamed chunk of output text: the bytes a committed token (or the
 /// prompt-healing overhang) contributed to the output. Tokens are byte
@@ -220,6 +221,10 @@ pub struct Slot {
     stream: Stream,
     /// Output bytes produced by the healing phase (token overhang).
     text_prefix: Vec<u8>,
+    /// Per-token decision recorder, attached by the engine when the
+    /// owning request is traced (`server::trace`); `None` costs one
+    /// branch per decision site.
+    pub trace: Option<Box<SlotTrace>>,
 }
 
 impl Slot {
@@ -255,6 +260,7 @@ impl Slot {
             aborted: false,
             stream: Stream::default(),
             text_prefix: Vec::new(),
+            trace: None,
         };
         slot.heal(&prompt.forced)?;
         Ok(slot)
@@ -352,6 +358,7 @@ impl Slot {
         rng: &mut Rng,
         stats: &mut SlotStats,
         full_mask: bool,
+        mut trace: Option<&mut SlotTrace>,
     ) -> Option<TokenId> {
         let Some(checker) = checker else {
             return Some(decode(logits, sampling, rng));
@@ -361,6 +368,12 @@ impl Slot {
             let mask = checker.compute_mask();
             stats.masks_computed += 1;
             stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
+            if let Some(tr) = trace.as_deref_mut() {
+                // The grammar-backed checkers here are CachedChecker
+                // wrappers whose cache outcome is internal — only the
+                // cardinality is observable.
+                tr.note_mask(mask.count() as u32, None);
+            }
             if mask.is_empty() {
                 return None;
             }
@@ -369,6 +382,9 @@ impl Slot {
                 return Some(proposal);
             }
             stats.interventions += 1;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.note_intervention();
+            }
             let mut masked = logits.to_vec();
             mask.apply(&mut masked);
             Some(decode(&masked, sampling, rng))
@@ -382,6 +398,10 @@ impl Slot {
             let mask = checker.compute_mask();
             stats.masks_computed += 1;
             stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.note_intervention();
+                tr.note_mask(mask.count() as u32, None);
+            }
             if mask.is_empty() {
                 return None;
             }
@@ -406,6 +426,12 @@ impl Slot {
         }
         self.out.push(chosen);
         self.stats.tokens_out += 1;
+        if self.trace.is_some() {
+            let state = self.mode.checker().and_then(|c| c.mask_key());
+            if let Some(tr) = self.trace.as_deref_mut() {
+                tr.commit(self.out.len() - 1, chosen, "sampled", state);
+            }
+        }
         self.stream.emit_token(&self.vocab, chosen);
         if self.out.len() >= self.max_tokens {
             self.done = true;
@@ -434,6 +460,9 @@ impl Slot {
             };
             if !proposal.is_empty() {
                 self.stats.spec_proposed += proposal.len();
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.event(format!("spec proposed={}", proposal.len()));
+                }
                 self.pending = Some(Pending::Proposal(proposal));
                 return Ok(());
             }
@@ -446,9 +475,13 @@ impl Slot {
                 } else {
                     self.stats.interventions += 1;
                     let t_mask = Instant::now();
-                    let mask = cached_mask(decoder, masks, *variant);
+                    let (mask, hit) = cached_mask_with_hit(decoder, masks, *variant);
                     self.stats.masks_computed += 1;
                     self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
+                    if let Some(tr) = self.trace.as_deref_mut() {
+                        tr.note_intervention();
+                        tr.note_mask(mask.count() as u32, hit);
+                    }
                     if mask.is_empty() {
                         self.done = true;
                         return Ok(());
@@ -497,9 +530,13 @@ impl Slot {
                 } else {
                     self.stats.interventions += 1;
                     let t_mask = Instant::now();
-                    let mask = cached_mask(decoder, masks, *variant);
+                    let (mask, hit) = cached_mask_with_hit(decoder, masks, *variant);
                     self.stats.masks_computed += 1;
                     self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
+                    if let Some(tr) = self.trace.as_deref_mut() {
+                        tr.note_intervention();
+                        tr.note_mask(mask.count() as u32, hit);
+                    }
                     if mask.is_empty() {
                         self.done = true;
                         return Ok(());
@@ -525,6 +562,7 @@ impl Slot {
             &mut self.rng,
             &mut self.stats,
             full_mask,
+            self.trace.as_deref_mut(),
         );
         match chosen {
             Some(t) => self.commit_choice(t),
@@ -595,9 +633,13 @@ impl Slot {
             } else {
                 self.stats.interventions += 1;
                 let t_mask = Instant::now();
-                let mask = cached_mask(decoder, masks, *variant);
+                let (mask, hit) = cached_mask_with_hit(decoder, masks, *variant);
                 self.stats.masks_computed += 1;
                 self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.note_intervention();
+                    tr.note_mask(mask.count() as u32, hit);
+                }
                 if mask.is_empty() {
                     // Dead end mid-verify: drop the unaccepted proposal
                     // suffix from the context and let the next decide
@@ -620,6 +662,9 @@ impl Slot {
                 decoder.advance(p)?;
                 self.out.push(p);
                 self.stats.tokens_out += 1;
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.commit(self.out.len() - 1, p, "speculative", decoder.mask_key());
+                }
                 self.stream.emit_token(&self.vocab, p);
                 self.stats.spec_accepted += 1;
                 accepted += 1;
@@ -646,6 +691,9 @@ impl Slot {
                 decoder.advance(choice)?;
                 self.out.push(choice);
                 self.stats.tokens_out += 1;
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.commit(self.out.len() - 1, choice, "corrected", decoder.mask_key());
+                }
                 self.stream.emit_token(&self.vocab, choice);
                 if self.out.len() >= self.max_tokens {
                     self.done = true;
@@ -682,9 +730,13 @@ impl Slot {
             } else {
                 self.stats.interventions += 1;
                 let t_mask = Instant::now();
-                let mask = cached_mask(decoder, masks, *variant);
+                let (mask, hit) = cached_mask_with_hit(decoder, masks, *variant);
                 self.stats.masks_computed += 1;
                 self.stats.mask_ns += t_mask.elapsed().as_nanos() as u64;
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.note_intervention();
+                    tr.note_mask(mask.count() as u32, hit);
+                }
                 if mask.is_empty() {
                     // Dead end mid-verify: drop the unaccepted suffix and
                     // let the next decide phase conclude the dead end.
@@ -706,6 +758,9 @@ impl Slot {
             decoder.advance(p)?;
             self.out.push(p);
             self.stats.tokens_out += 1;
+            if let Some(tr) = self.trace.as_deref_mut() {
+                tr.commit(self.out.len() - 1, p, "drafted", decoder.mask_key());
+            }
             self.stream.emit_token(&self.vocab, p);
             self.stats.draft_accepted += 1;
             accepted += 1;
@@ -720,6 +775,9 @@ impl Slot {
         // resync with the target.
         *accept_ewma = (*accept_ewma + accepted as f64 / proposal.len() as f64) / 2.0;
         draft.commit(&proposal[..accepted], correction);
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.event(format!("draft proposed={} accepted={}", proposal.len(), accepted));
+        }
         if accepted < proposal.len() {
             self.session.rollback(proposal.len() - accepted)?;
         }
@@ -741,6 +799,9 @@ impl Slot {
         decoder.advance(choice)?;
         self.out.push(choice);
         self.stats.tokens_out += 1;
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.commit(self.out.len() - 1, choice, "corrected", decoder.mask_key());
+        }
         self.stream.emit_token(&self.vocab, choice);
         if self.out.len() >= self.max_tokens {
             self.done = true;
@@ -801,6 +862,18 @@ pub struct BatchTick {
     /// Total logit rows the forward pass produced (a speculative lane
     /// contributes one per proposed token).
     pub rows: usize,
+    /// Wall time of the decide phase (per-slot mask/sample/commit
+    /// against current logits; no model calls).
+    pub decide: Duration,
+    /// Wall time of the gather phase (collecting pending extensions
+    /// into batch lanes).
+    pub gather: Duration,
+    /// Wall time of the single batched forward pass (zero when no slot
+    /// needed one this tick).
+    pub forward: Duration,
+    /// Wall time of the finish phase (routing rows back: verify /
+    /// commit / stream).
+    pub finish: Duration,
 }
 
 impl BatchTick {
@@ -820,6 +893,7 @@ impl BatchTick {
 pub fn step_batched(backend: &dyn LmBackend, slots: &mut [&mut Slot]) -> BatchTick {
     let mut results: Vec<crate::Result<()>> = slots.iter().map(|_| Ok(())).collect();
     // Decide: no model calls.
+    let t_decide = Instant::now();
     for (i, s) in slots.iter_mut().enumerate() {
         if s.done {
             continue;
@@ -829,9 +903,13 @@ pub fn step_batched(backend: &dyn LmBackend, slots: &mut [&mut Slot]) -> BatchTi
             results[i] = Err(e);
         }
     }
+    let decide = t_decide.elapsed();
     // Gather → one batched forward. The lanes borrow the slots' sessions;
     // the returned rows are owned, so the borrow ends before finish.
     let mut lane_idx: Vec<usize> = Vec::new();
+    let t_gather = Instant::now();
+    let gather;
+    let mut forward = Duration::ZERO;
     let lane_rows = {
         let mut lanes: Vec<BatchLane<'_>> = Vec::new();
         for (i, s) in slots.iter_mut().enumerate() {
@@ -843,10 +921,14 @@ pub fn step_batched(backend: &dyn LmBackend, slots: &mut [&mut Slot]) -> BatchTi
                 lanes.push(lane);
             }
         }
+        gather = t_gather.elapsed();
         if lanes.is_empty() {
             Vec::new()
         } else {
-            backend.forward_batch(&mut lanes)
+            let t_forward = Instant::now();
+            let rows = backend.forward_batch(&mut lanes);
+            forward = t_forward.elapsed();
+            rows
         }
     };
     let lanes = lane_idx.len();
@@ -856,6 +938,7 @@ pub fn step_batched(backend: &dyn LmBackend, slots: &mut [&mut Slot]) -> BatchTi
     // breaks the one-result-per-lane contract fails the unanswered slots
     // outright — their sessions may already have advanced, so leaving
     // them silently pending would re-append the same tokens next tick.
+    let t_finish = Instant::now();
     let mut lane_results = lane_rows.into_iter();
     for i in lane_idx {
         let r = match lane_results.next() {
@@ -868,5 +951,6 @@ pub fn step_batched(backend: &dyn LmBackend, slots: &mut [&mut Slot]) -> BatchTi
             results[i] = Err(e);
         }
     }
-    BatchTick { results, lanes, rows }
+    let finish = t_finish.elapsed();
+    BatchTick { results, lanes, rows, decide, gather, forward, finish }
 }

@@ -71,6 +71,14 @@
 //! ```json
 //! {"op": "stats"}
 //! ```
+//!
+//! Tracing: `"trace": true` on a generation request always captures that
+//! request's trace and attaches an inline `trace` summary object to the
+//! final response (span durations, decision counts, capture cause).
+//! `{"op": "trace"}` dumps the ring of recently captured traces —
+//! head-sampled at `--trace-sample-rate` plus tail-captured aborted /
+//! over-`--trace-slow-ms` requests — as `{"traces": [...]}`, oldest
+//! first. See `server::trace` and `rust/OPERATIONS.md`.
 
 use super::engine::{Constraint, ConstraintSpec, GenRequest, GenResponse};
 use super::metrics::Metrics;
@@ -91,6 +99,8 @@ pub enum Request {
     Generate(GenRequest),
     /// `{"op": "stats"}` — aggregated cross-shard metrics.
     Stats,
+    /// `{"op": "trace"}` — dump the ring of recently captured traces.
+    Trace,
 }
 
 /// Server-side request defaults from CLI flags, applied to requests that
@@ -128,6 +138,7 @@ pub fn parse_line(line: &str) -> crate::Result<Request> {
     if let Some(op) = v.get("op").and_then(|o| o.as_str()) {
         return match op {
             "stats" => Ok(Request::Stats),
+            "trace" => Ok(Request::Trace),
             "generate" => Ok(Request::Generate(parse_request_value(&v)?)),
             other => anyhow::bail!("unknown op `{other}`"),
         };
@@ -294,6 +305,7 @@ fn parse_request_value(v: &Json) -> crate::Result<GenRequest> {
         deadline: non_negative(v, "deadline_ms")?.map(|ms| Duration::from_millis(ms as u64)),
         stream: v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false),
         tenant: parse_tenant(v)?,
+        trace: v.get("trace").and_then(|s| s.as_bool()).unwrap_or(false),
     })
 }
 
@@ -319,7 +331,18 @@ pub fn format_response(resp: &GenResponse) -> String {
         Some(r) => obj.push(("reason", Json::str(r.clone()))),
         None => obj.push(("reason", Json::Null)),
     }
+    // Inline trace summary, only when the request set `"trace": true`.
+    if let Some(t) = &resp.trace {
+        obj.push(("trace", t.clone()));
+    }
     Json::obj(obj).to_string()
+}
+
+/// Format the `{"op":"trace"}` reply: the ring of recently captured
+/// traces (full span trees + decision records), oldest first.
+pub fn format_trace_dump(tracer: &super::trace::Tracer) -> String {
+    let traces: Vec<Json> = tracer.recent().iter().map(|t| t.to_json()).collect();
+    Json::obj(vec![("traces", Json::Arr(traces))]).to_string()
 }
 
 /// Format one streaming token event line.
@@ -406,6 +429,30 @@ pub fn format_stats(m: &Metrics, engines: usize) -> String {
         ("queue_wait_p50_s", num_or_null(m.queue_wait.percentile(0.5))),
         ("req_tps_mean", num_or_null(m.req_tps.mean())),
         ("model_time_s", Json::Num(m.model_time.as_secs_f64())),
+        // Per-phase tick-time attribution (always on; tracing not
+        // required): where an engine tick actually goes.
+        (
+            "tick_phases",
+            Json::obj(vec![
+                ("decide_ms_mean", num_or_null(m.tick_decide.mean() * 1e3)),
+                ("gather_ms_mean", num_or_null(m.tick_gather.mean() * 1e3)),
+                ("forward_ms_mean", num_or_null(m.tick_forward.mean() * 1e3)),
+                ("finish_ms_mean", num_or_null(m.tick_finish.mean() * 1e3)),
+                ("decide_ms_p99", num_or_null(m.tick_decide.percentile(0.99) * 1e3)),
+                ("gather_ms_p99", num_or_null(m.tick_gather.percentile(0.99) * 1e3)),
+                ("forward_ms_p99", num_or_null(m.tick_forward.percentile(0.99) * 1e3)),
+                ("finish_ms_p99", num_or_null(m.tick_finish.percentile(0.99) * 1e3)),
+            ]),
+        ),
+        (
+            "traces_captured",
+            Json::obj(vec![
+                ("sampled", Json::Num(m.traces_sampled as f64)),
+                ("requested", Json::Num(m.traces_requested as f64)),
+                ("aborted", Json::Num(m.traces_aborted as f64)),
+                ("slow", Json::Num(m.traces_slow as f64)),
+            ]),
+        ),
         ("connections_open", Json::Num(m.connections_open as f64)),
         ("connections_accepted", Json::Num(m.connections_accepted as f64)),
         ("connections_rejected", Json::Num(m.connections_rejected as f64)),
@@ -521,6 +568,7 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, defaults: ServeDefaults
                 };
                 writeln!(out, "{reply}")
             }
+            Ok(Request::Trace) => writeln!(out, "{}", format_trace_dump(sched.tracer())),
             Ok(Request::Generate(mut req)) => {
                 defaults.apply(&mut req);
                 handle_generate(req, &sched, &mut out)
@@ -844,6 +892,47 @@ mod tests {
     }
 
     #[test]
+    fn parses_trace_flag_and_op() {
+        let r = parse_request(r#"{"prompt": "x", "trace": true}"#).unwrap();
+        assert!(r.trace);
+        let r = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert!(!r.trace, "trace defaults off");
+        assert!(matches!(parse_line(r#"{"op": "trace"}"#).unwrap(), Request::Trace));
+    }
+
+    #[test]
+    fn formats_inline_trace_summary() {
+        let mut resp = GenResponse::overloaded("queue_full");
+        resp.trace = Some(Json::obj(vec![("id", Json::Num(7.0))]));
+        let v = Json::parse(&format_response(&resp)).unwrap();
+        assert_eq!(v.get("trace").unwrap().get("id").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn trace_dump_formats_empty_ring() {
+        let tracer = super::super::trace::Tracer::disabled();
+        let v = Json::parse(&format_trace_dump(&tracer)).unwrap();
+        assert_eq!(v.get("traces").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn stats_include_tick_phases_and_trace_counts() {
+        let mut m = Metrics::default();
+        m.tick_forward.record(0.002);
+        m.traces_aborted = 3;
+        let v = Json::parse(&format_stats(&m, 1)).unwrap();
+        let phases = v.get("tick_phases").unwrap();
+        assert!(
+            (phases.get("forward_ms_mean").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9
+        );
+        // Unrecorded phases serialize as null, not NaN.
+        assert_eq!(phases.get("decide_ms_mean"), Some(&Json::Null));
+        let traces = v.get("traces_captured").unwrap();
+        assert_eq!(traces.get("aborted").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(traces.get("sampled").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
     fn formats_response() {
         let resp = GenResponse {
             text: "{\"a\": 1}".into(),
@@ -851,12 +940,15 @@ mod tests {
             error: None,
             reason: None,
             elapsed_s: 0.25,
+            trace: None,
         };
         let line = format_response(&resp);
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("text").unwrap().as_str().unwrap(), "{\"a\": 1}");
         assert_eq!(v.get("error"), Some(&Json::Null));
         assert_eq!(v.get("reason"), Some(&Json::Null));
+        // No trace requested → no trace key at all (not a null).
+        assert_eq!(v.get("trace"), None);
         // Structured failures carry the machine-readable cause.
         let resp = GenResponse::overloaded("tenant_quota");
         let v = Json::parse(&format_response(&resp)).unwrap();

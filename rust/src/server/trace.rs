@@ -1,0 +1,875 @@
+//! Request-scoped decode tracing: span trees + per-token decision
+//! records, cheap enough to leave on in production.
+//!
+//! Aggregate histograms (`server::metrics`) answer "how is the fleet
+//! doing"; this module answers "where did *this* request spend its
+//! time, and why did the constraint engine mask / heal / reject a draft
+//! at token 17". Every traced request records a span tree —
+//! `request` → `queue` (submit → shard admit) → `decode` → per-tick
+//! `tick` spans with `decide` / `gather` / `forward` / `finish` phase
+//! children — plus one [`Decision`] per emitted token carrying mask
+//! cardinality, mask-cache hit/miss, scanner/parser state key, token
+//! origin (sampled / speculative / drafted / corrected) and whether the
+//! grammar intervened. Healing and draft proposed-vs-accepted lengths
+//! ride as timestamped events.
+//!
+//! Capture policy is head sampling (`--trace-sample-rate`, a
+//! deterministic 1-in-N on request ids so overhead is predictable)
+//! plus tail-based always-capture for requests that abort or exceed
+//! `--trace-slow-ms` — the two classes an operator actually debugs.
+//! A request with `"trace": true` on the wire is always captured and
+//! additionally gets an inline summary in its response. Captured
+//! traces land in a bounded ring (the `{"op":"trace"}` admin dump) and,
+//! with `--trace-dir`, as one Chrome trace-event JSON file per request
+//! (loadable in Perfetto / `chrome://tracing`; `domino trace FILE`
+//! renders the same file as a per-tick text timeline).
+//!
+//! The subsystem is paid for: `benches/trace_overhead.rs` gates that a
+//! disabled tracer costs ~nothing on the tick path and 1% sampling
+//! stays within a few percent of untraced throughput.
+
+use crate::server::metrics::Metrics;
+use crate::util::Json;
+use crate::TokenId;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tracing policy — part of `SchedulerConfig`. Default = fully off:
+/// `Tracer::begin` returns `None` for every request that does not ask
+/// for a trace on the wire, and the tick path stays untouched.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Head-sampling rate in [0, 1]: 0 = off, 1 = every request.
+    /// Implemented as a deterministic 1-in-N on the request sequence
+    /// number (N = `round(1/rate)`), so overhead is predictable and
+    /// tests are reproducible.
+    pub sample_rate: f64,
+    /// Tail-based capture: any traced request slower than this is
+    /// captured even when head sampling passed it by.
+    pub slow: Option<Duration>,
+    /// Write each captured trace as Chrome trace-event JSON
+    /// (`trace-{id}.json`) into this directory.
+    pub trace_dir: Option<PathBuf>,
+    /// Captured traces retained for the `{"op":"trace"}` dump (oldest
+    /// evicted first).
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { sample_rate: 0.0, slow: None, trace_dir: None, ring_capacity: 64 }
+    }
+}
+
+impl TraceConfig {
+    /// Whether any request should be recorded without asking on the
+    /// wire. When false the tracer's only cost is one branch per
+    /// request.
+    pub fn enabled(&self) -> bool {
+        self.sample_rate > 0.0 || self.slow.is_some() || self.trace_dir.is_some()
+    }
+}
+
+/// Why a finished trace was kept. Precedence (highest first) when
+/// several apply: aborted, slow, requested, sampled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureCause {
+    /// The request ended with a structured abort (cancel / deadline /
+    /// error) — always captured so post-mortems have data.
+    Aborted,
+    /// Wall time exceeded `--trace-slow-ms`.
+    Slow,
+    /// The wire request set `"trace": true`.
+    Requested,
+    /// Head sampling picked it.
+    Sampled,
+}
+
+impl CaptureCause {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CaptureCause::Aborted => "aborted",
+            CaptureCause::Slow => "slow",
+            CaptureCause::Requested => "requested",
+            CaptureCause::Sampled => "sampled",
+        }
+    }
+}
+
+/// One closed interval on the request's timeline, microseconds since
+/// the request was submitted. Nesting is by time containment — the
+/// span names form a fixed hierarchy (`request` ⊃ `queue`/`decode`,
+/// `decode` ⊃ `tick`, `tick` ⊃ `decide`/`gather`/`forward`/`finish`),
+/// so no parent pointers are needed.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// One per-token decode decision record, attached to the `decode` span.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Output-token index (0-based).
+    pub index: usize,
+    pub token: TokenId,
+    /// Microseconds since submit when the token was committed.
+    pub at_us: u64,
+    /// Whether a grammar mask was computed for this step (the
+    /// opportunistic fast path commits without one).
+    pub masked: bool,
+    /// Mask cardinality (allowed-token count) when a mask was computed.
+    pub mask_card: Option<u32>,
+    /// Shared mask-cache outcome, when the lookup went through the
+    /// cache (speculative/drafted paths; `None` for paths that hold a
+    /// `CachedChecker` whose cache is internal).
+    pub cache_hit: Option<bool>,
+    /// The grammar rejected the LM's preferred token and the sample was
+    /// redrawn from the mask (a DOMINO intervention).
+    pub intervention: bool,
+    /// How the token was produced: `sampled`, `speculative`, `drafted`,
+    /// or `corrected` (the verifier's replacement for a rejected
+    /// speculation).
+    pub origin: &'static str,
+    /// Scanner/parser state key at commit time (`None` once the
+    /// grammar's state space is no longer hashable, e.g. unconstrained
+    /// tails).
+    pub state: Option<u64>,
+}
+
+/// Per-request trace under construction. Owned by the `Work` /
+/// `Active` bookkeeping on the shard thread; never shared.
+#[derive(Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub tenant: String,
+    /// `"trace": true` on the wire — always capture + inline summary.
+    pub requested: bool,
+    /// Head sampling picked this request.
+    pub sampled: bool,
+    pub started: Instant,
+    pub spans: Vec<Span>,
+    pub decisions: Vec<Decision>,
+    /// Timestamped point events (healing, draft outcomes, …).
+    pub events: Vec<(u64, String)>,
+    /// Structured abort reason, when the request did not complete.
+    pub abort: Option<String>,
+    pub ticks: u64,
+    decode_start: Option<u64>,
+}
+
+impl RequestTrace {
+    fn now_us(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+
+    /// The request left the fair queue and was admitted to a slot:
+    /// close the `queue` span, open `decode`.
+    pub fn admitted(&mut self) {
+        let now = self.now_us();
+        self.spans.push(Span { name: "queue", start_us: 0, end_us: now });
+        self.decode_start = Some(now);
+    }
+
+    /// Record one engine tick this request took part in: the tick span
+    /// plus its four sequential phase children. `t0` is the tick's
+    /// start instant (shared across the batch).
+    pub fn record_tick(
+        &mut self,
+        t0: Instant,
+        decide: Duration,
+        gather: Duration,
+        forward: Duration,
+        finish: Duration,
+    ) {
+        let base = t0.checked_duration_since(self.started).unwrap_or_default().as_micros() as u64;
+        let mut cur = base;
+        let mut child = |name, d: Duration, cur: &mut u64| {
+            let start = *cur;
+            *cur += d.as_micros() as u64;
+            Span { name, start_us: start, end_us: *cur }
+        };
+        let d = child("decide", decide, &mut cur);
+        let g = child("gather", gather, &mut cur);
+        let f = child("forward", forward, &mut cur);
+        let fin = child("finish", finish, &mut cur);
+        self.spans.push(Span { name: "tick", start_us: base, end_us: cur });
+        self.spans.extend([d, g, f, fin]);
+        self.ticks += 1;
+    }
+
+    /// Record a timestamped point event (healing, abort context, …).
+    pub fn event(&mut self, label: impl Into<String>) {
+        let at = self.now_us();
+        self.events.push((at, label.into()));
+    }
+
+    /// Fold a slot's per-token records into this trace (at finalize;
+    /// the slot trace lives on the decode side, the request trace on
+    /// the bookkeeping side).
+    pub fn merge_slot(&mut self, slot: SlotTrace) {
+        self.decisions.extend(slot.decisions);
+        self.events.extend(slot.events);
+    }
+}
+
+/// Per-slot decision recorder, attached to the `Slot` so the decode
+/// hot path never touches the request-side trace. Scratch fields
+/// accumulate within one decode step and are consumed by
+/// [`SlotTrace::commit`].
+#[derive(Debug)]
+pub struct SlotTrace {
+    started: Instant,
+    decisions: Vec<Decision>,
+    events: Vec<(u64, String)>,
+    mask_card: Option<u32>,
+    cache_hit: Option<bool>,
+    intervention: bool,
+}
+
+impl SlotTrace {
+    /// `started` is the owning request's submit instant, so decision
+    /// timestamps share the span timeline.
+    pub fn new(started: Instant) -> SlotTrace {
+        SlotTrace {
+            started,
+            decisions: Vec::new(),
+            events: Vec::new(),
+            mask_card: None,
+            cache_hit: None,
+            intervention: false,
+        }
+    }
+
+    /// A grammar mask was computed (or fetched) for the current step.
+    pub fn note_mask(&mut self, card: u32, cache_hit: Option<bool>) {
+        self.mask_card = Some(card);
+        self.cache_hit = cache_hit;
+    }
+
+    /// The grammar rejected the LM's preferred token this step.
+    pub fn note_intervention(&mut self) {
+        self.intervention = true;
+    }
+
+    /// A token was committed: flush the step scratch into a decision
+    /// record.
+    pub fn commit(&mut self, index: usize, token: TokenId, origin: &'static str, state: Option<u64>) {
+        let at_us = self.started.elapsed().as_micros() as u64;
+        self.decisions.push(Decision {
+            index,
+            token,
+            at_us,
+            masked: self.mask_card.is_some(),
+            mask_card: self.mask_card.take(),
+            cache_hit: self.cache_hit.take(),
+            intervention: std::mem::take(&mut self.intervention),
+            origin,
+            state,
+        });
+    }
+
+    /// Record a timestamped point event (draft outcome, healing, …).
+    pub fn event(&mut self, label: impl Into<String>) {
+        let at = self.started.elapsed().as_micros() as u64;
+        self.events.push((at, label.into()));
+    }
+}
+
+/// A finalized, captured trace (immutable; shared by the ring and any
+/// in-flight dump).
+#[derive(Debug)]
+pub struct FinishedTrace {
+    pub id: u64,
+    pub tenant: String,
+    pub cause: CaptureCause,
+    pub total_us: u64,
+    pub ticks: u64,
+    pub spans: Vec<Span>,
+    pub decisions: Vec<Decision>,
+    pub events: Vec<(u64, String)>,
+    pub abort: Option<String>,
+}
+
+fn opt_json<T, F: FnOnce(T) -> Json>(v: Option<T>, f: F) -> Json {
+    match v {
+        Some(v) => f(v),
+        None => Json::Null,
+    }
+}
+
+impl FinishedTrace {
+    /// Compact inline summary for the `"trace": true` response field:
+    /// top-level spans + decision aggregates, no per-token records.
+    pub fn summary(&self) -> Json {
+        let interventions = self.decisions.iter().filter(|d| d.intervention).count();
+        let masked = self.decisions.iter().filter(|d| d.masked).count();
+        let cache_hits = self.decisions.iter().filter(|d| d.cache_hit == Some(true)).count();
+        let cache_misses = self.decisions.iter().filter(|d| d.cache_hit == Some(false)).count();
+        let top: Vec<Json> = self
+            .spans
+            .iter()
+            .filter(|s| matches!(s.name, "request" | "queue" | "decode"))
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name)),
+                    ("start_us", Json::Num(s.start_us as f64)),
+                    ("dur_us", Json::Num(s.dur_us() as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("cause", Json::str(self.cause.as_str())),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("ticks", Json::Num(self.ticks as f64)),
+            ("decisions", Json::Num(self.decisions.len() as f64)),
+            ("masked", Json::Num(masked as f64)),
+            ("interventions", Json::Num(interventions as f64)),
+            ("mask_cache_hits", Json::Num(cache_hits as f64)),
+            ("mask_cache_misses", Json::Num(cache_misses as f64)),
+            ("abort", opt_json(self.abort.as_deref(), Json::str)),
+            ("spans", Json::Arr(top)),
+        ])
+    }
+
+    /// Full trace as JSON — the `{"op":"trace"}` dump format.
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name)),
+                    ("start_us", Json::Num(s.start_us as f64)),
+                    ("end_us", Json::Num(s.end_us as f64)),
+                ])
+            })
+            .collect();
+        let decisions: Vec<Json> = self
+            .decisions
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("index", Json::Num(d.index as f64)),
+                    ("token", Json::Num(d.token as f64)),
+                    ("at_us", Json::Num(d.at_us as f64)),
+                    ("masked", Json::Bool(d.masked)),
+                    ("mask_card", opt_json(d.mask_card, |c| Json::Num(c as f64))),
+                    ("cache_hit", opt_json(d.cache_hit, Json::Bool)),
+                    ("intervention", Json::Bool(d.intervention)),
+                    ("origin", Json::str(d.origin)),
+                    ("state", opt_json(d.state, |s| Json::Num(s as f64))),
+                ])
+            })
+            .collect();
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|(at, label)| {
+                Json::obj(vec![
+                    ("at_us", Json::Num(*at as f64)),
+                    ("label", Json::str(label.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("tenant", Json::str(self.tenant.clone())),
+            ("cause", Json::str(self.cause.as_str())),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("ticks", Json::Num(self.ticks as f64)),
+            ("abort", opt_json(self.abort.as_deref(), Json::str)),
+            ("spans", Json::Arr(spans)),
+            ("decisions", Json::Arr(decisions)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// Chrome trace-event JSON (the "JSON Array Format" wrapped in
+    /// `{"traceEvents": [...]}`) — loadable in Perfetto and
+    /// `chrome://tracing`. Spans become complete (`ph:"X"`) events,
+    /// decisions and point events become thread-scoped instants
+    /// (`ph:"i"`).
+    pub fn perfetto(&self) -> String {
+        let mut events: Vec<Json> = Vec::with_capacity(self.spans.len() + self.decisions.len());
+        for s in &self.spans {
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.name)),
+                ("cat", Json::str("request")),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(s.start_us as f64)),
+                ("dur", Json::Num(s.dur_us() as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(self.id as f64)),
+            ]));
+        }
+        for d in &self.decisions {
+            events.push(Json::obj(vec![
+                ("name", Json::str(format!("token[{}]", d.index))),
+                ("cat", Json::str("decision")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("ts", Json::Num(d.at_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(self.id as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("token", Json::Num(d.token as f64)),
+                        ("origin", Json::str(d.origin)),
+                        ("masked", Json::Bool(d.masked)),
+                        ("mask_card", opt_json(d.mask_card, |c| Json::Num(c as f64))),
+                        ("cache_hit", opt_json(d.cache_hit, Json::Bool)),
+                        ("intervention", Json::Bool(d.intervention)),
+                        ("state", opt_json(d.state, |s| Json::Num(s as f64))),
+                    ]),
+                ),
+            ]));
+        }
+        for (at, label) in &self.events {
+            events.push(Json::obj(vec![
+                ("name", Json::str(label.clone())),
+                ("cat", Json::str("event")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("ts", Json::Num(*at as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(self.id as f64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("cause", Json::str(self.cause.as_str())),
+                    ("tenant", Json::str(self.tenant.clone())),
+                    ("abort", opt_json(self.abort.as_deref(), Json::str)),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// Render a Chrome trace-event JSON value (as written by
+/// [`FinishedTrace::perfetto`] or any tool emitting the format) as a
+/// human-readable per-tick timeline — the `domino trace FILE`
+/// subcommand.
+pub fn render_timeline(v: &Json) -> crate::Result<String> {
+    let events = match v.get("traceEvents").and_then(|e| e.as_arr()) {
+        Some(a) => a,
+        None => v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("not trace-event JSON: no traceEvents array"))?,
+    };
+    struct Ev<'a> {
+        name: &'a str,
+        ts: f64,
+        dur: f64,
+        complete: bool,
+        args: Option<&'a Json>,
+    }
+    let mut evs: Vec<Ev> = Vec::new();
+    for e in events {
+        let name = e.get("name").and_then(|n| n.as_str()).unwrap_or("?");
+        let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let dur = e.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+        evs.push(Ev { name, ts, dur, complete: ph == "X", args: e.get("args") });
+    }
+    if evs.is_empty() {
+        anyhow::bail!("trace-event JSON contains no events");
+    }
+    // Sort by start time; at equal start the longer (outer) span first
+    // so the containment stack nests correctly.
+    evs.sort_by(|a, b| {
+        a.ts.partial_cmp(&b.ts)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.dur.partial_cmp(&a.dur).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    let mut out = String::new();
+    if let Some(other) = v.get("otherData") {
+        let cause = other.get("cause").and_then(|c| c.as_str()).unwrap_or("?");
+        out.push_str(&format!("captured: {cause}"));
+        if let Some(abort) = other.get("abort").and_then(|a| a.as_str()) {
+            out.push_str(&format!(" (abort: {abort})"));
+        }
+        out.push('\n');
+    }
+    let mut stack: Vec<f64> = Vec::new(); // open span end times
+    let mut tick = 0u64;
+    for e in &evs {
+        while let Some(&end) = stack.last() {
+            if e.ts >= end - 1e-9 {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        let indent = "  ".repeat(stack.len());
+        if e.complete {
+            let label = if e.name == "tick" {
+                tick += 1;
+                format!("tick #{}", tick - 1)
+            } else {
+                e.name.to_string()
+            };
+            out.push_str(&format!(
+                "{indent}{label:<12} {:>10.3} ms  +{:.3} ms\n",
+                e.ts / 1e3,
+                e.dur / 1e3
+            ));
+            stack.push(e.ts + e.dur);
+        } else {
+            let detail = e
+                .args
+                .map(|a| {
+                    let origin = a.get("origin").and_then(|o| o.as_str()).unwrap_or("");
+                    let mut d = String::new();
+                    if !origin.is_empty() {
+                        d.push_str(&format!(" {origin}"));
+                    }
+                    if let Some(c) = a.get("mask_card").and_then(|c| c.as_f64()) {
+                        d.push_str(&format!(" mask={c}"));
+                    }
+                    if let Some(h) = a.get("cache_hit").and_then(|h| h.as_bool()) {
+                        d.push_str(if h { " cache=hit" } else { " cache=miss" });
+                    }
+                    if a.get("intervention").and_then(|i| i.as_bool()) == Some(true) {
+                        d.push_str(" INTERVENED");
+                    }
+                    d
+                })
+                .unwrap_or_default();
+            out.push_str(&format!("{indent}· {:<10} {:>10.3} ms {detail}\n", e.name, e.ts / 1e3));
+        }
+    }
+    Ok(out)
+}
+
+/// The capture sink shared by every shard: sampling decision, the
+/// bounded recent-trace ring, capture counters for the metrics layer,
+/// and the optional Perfetto file writer.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    seq: AtomicU64,
+    captured_sampled: AtomicU64,
+    captured_requested: AtomicU64,
+    captured_aborted: AtomicU64,
+    captured_slow: AtomicU64,
+    ring: Mutex<VecDeque<Arc<FinishedTrace>>>,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            cfg,
+            seq: AtomicU64::new(0),
+            captured_sampled: AtomicU64::new(0),
+            captured_requested: AtomicU64::new(0),
+            captured_aborted: AtomicU64::new(0),
+            captured_slow: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        })
+    }
+
+    /// A tracer with the default (fully off) config — requests are
+    /// traced only when they ask on the wire.
+    pub fn disabled() -> Arc<Tracer> {
+        Tracer::new(TraceConfig::default())
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// Head-sampling decision for request `id` (1-based sequence
+    /// numbers): deterministic 1-in-N with N = `round(1/rate)`.
+    fn head_sampled(&self, id: u64) -> bool {
+        let rate = self.cfg.sample_rate;
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        let period = (1.0 / rate).round().max(1.0) as u64;
+        (id - 1) % period == 0
+    }
+
+    /// Start a trace for a new request, or `None` when tracing is off
+    /// and the request did not ask. When the tracer is enabled every
+    /// request records (tail-based capture needs the data to exist);
+    /// the keep/drop decision happens in [`Tracer::finish`].
+    pub fn begin(&self, requested: bool, tenant: &str) -> Option<Box<RequestTrace>> {
+        if !self.cfg.enabled() && !requested {
+            return None;
+        }
+        let id = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        Some(Box::new(RequestTrace {
+            id,
+            tenant: tenant.to_string(),
+            requested,
+            sampled: self.head_sampled(id),
+            started: Instant::now(),
+            spans: Vec::new(),
+            decisions: Vec::new(),
+            events: Vec::new(),
+            abort: None,
+            ticks: 0,
+            decode_start: None,
+        }))
+    }
+
+    /// Finalize a trace: decide capture, close the `request`/`decode`
+    /// spans, push to the ring, write the Perfetto file, and return the
+    /// inline summary when the request asked for one. Runs on the shard
+    /// thread *before* the final response is sent, so a `"trace": true`
+    /// client never races its own dump.
+    pub fn finish(&self, mut trace: Box<RequestTrace>) -> Option<Json> {
+        let total_us = trace.now_us();
+        let elapsed = trace.started.elapsed();
+        let cause = if trace.abort.is_some() {
+            Some(CaptureCause::Aborted)
+        } else if self.cfg.slow.is_some_and(|s| elapsed > s) {
+            Some(CaptureCause::Slow)
+        } else if trace.requested {
+            Some(CaptureCause::Requested)
+        } else if trace.sampled {
+            Some(CaptureCause::Sampled)
+        } else {
+            None
+        };
+        let cause = cause?;
+        let requested = trace.requested;
+        if let Some(start) = trace.decode_start {
+            trace.spans.push(Span { name: "decode", start_us: start, end_us: total_us });
+        }
+        trace.spans.push(Span { name: "request", start_us: 0, end_us: total_us });
+        // Stable render order: outer spans before their children.
+        trace
+            .spans
+            .sort_by(|a, b| a.start_us.cmp(&b.start_us).then(b.end_us.cmp(&a.end_us)));
+        trace.decisions.sort_by_key(|d| d.index);
+        trace.events.sort_by_key(|(at, _)| *at);
+        let counter = match cause {
+            CaptureCause::Aborted => &self.captured_aborted,
+            CaptureCause::Slow => &self.captured_slow,
+            CaptureCause::Requested => &self.captured_requested,
+            CaptureCause::Sampled => &self.captured_sampled,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        let finished = Arc::new(FinishedTrace {
+            id: trace.id,
+            tenant: trace.tenant,
+            cause,
+            total_us,
+            ticks: trace.ticks,
+            spans: trace.spans,
+            decisions: trace.decisions,
+            events: trace.events,
+            abort: trace.abort,
+        });
+        if let Some(dir) = &self.cfg.trace_dir {
+            let path = dir.join(format!("trace-{:08}.json", finished.id));
+            // Best-effort: a full disk must not fail the request.
+            let _ = std::fs::create_dir_all(dir);
+            let _ = std::fs::write(&path, finished.perfetto());
+        }
+        {
+            let mut ring = self.ring.lock().expect("trace ring lock");
+            while ring.len() >= self.cfg.ring_capacity.max(1) {
+                ring.pop_front();
+            }
+            ring.push_back(finished.clone());
+        }
+        // A requested trace owes the client its inline summary even
+        // when a higher-precedence cause (abort / slow) won the label.
+        if requested {
+            return Some(finished.summary());
+        }
+        None
+    }
+
+    /// Recent captured traces, oldest first.
+    pub fn recent(&self) -> Vec<Arc<FinishedTrace>> {
+        self.ring.lock().expect("trace ring lock").iter().cloned().collect()
+    }
+
+    /// Fold the capture counters into a metrics snapshot (called once
+    /// per aggregation by `Scheduler::metrics`; the tracer is the
+    /// single source, so the fields use max-merge like other
+    /// shared-source counters).
+    pub fn fill(&self, m: &mut Metrics) {
+        m.traces_sampled = self.captured_sampled.load(Ordering::Relaxed);
+        m.traces_requested = self.captured_requested.load(Ordering::Relaxed);
+        m.traces_aborted = self.captured_aborted.load(Ordering::Relaxed);
+        m.traces_slow = self.captured_slow.load(Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_all() -> TraceConfig {
+        TraceConfig { sample_rate: 1.0, ..TraceConfig::default() }
+    }
+
+    #[test]
+    fn disabled_tracer_returns_none_unless_requested() {
+        let t = Tracer::disabled();
+        assert!(t.begin(false, "default").is_none());
+        let tr = t.begin(true, "default").expect("wire-requested trace");
+        assert!(tr.requested);
+        let summary = t.finish(tr).expect("requested trace returns a summary");
+        assert_eq!(summary.get("cause").and_then(|c| c.as_str()), Some("requested"));
+        assert_eq!(t.recent().len(), 1);
+    }
+
+    #[test]
+    fn head_sampling_is_deterministic_one_in_n() {
+        let t = Tracer::new(TraceConfig { sample_rate: 0.25, ..TraceConfig::default() });
+        let sampled: Vec<bool> = (1..=8).map(|id| t.head_sampled(id)).collect();
+        assert_eq!(sampled, [true, false, false, false, true, false, false, false]);
+        let t = Tracer::new(cfg_all());
+        assert!((1..=5).all(|id| t.head_sampled(id)));
+    }
+
+    #[test]
+    fn sampled_trace_lands_in_ring_without_summary() {
+        let t = Tracer::new(cfg_all());
+        let tr = t.begin(false, "acme").unwrap();
+        assert!(t.finish(tr).is_none(), "non-requested capture returns no inline summary");
+        let recent = t.recent();
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].cause, CaptureCause::Sampled);
+        assert_eq!(recent[0].tenant, "acme");
+        let mut m = Metrics::default();
+        t.fill(&mut m);
+        assert_eq!(m.traces_sampled, 1);
+    }
+
+    #[test]
+    fn abort_beats_sampling_and_requested() {
+        let t = Tracer::new(cfg_all());
+        let mut tr = t.begin(true, "default").unwrap();
+        tr.abort = Some("client_cancel".into());
+        let summary = t.finish(tr).expect("requested trace keeps its summary on abort");
+        assert_eq!(summary.get("cause").and_then(|c| c.as_str()), Some("aborted"));
+        assert_eq!(summary.get("abort").and_then(|a| a.as_str()), Some("client_cancel"));
+        assert_eq!(t.recent()[0].cause, CaptureCause::Aborted);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let t = Tracer::new(TraceConfig { sample_rate: 1.0, ring_capacity: 3, ..TraceConfig::default() });
+        for _ in 0..5 {
+            let tr = t.begin(false, "default").unwrap();
+            t.finish(tr);
+        }
+        let ids: Vec<u64> = t.recent().iter().map(|f| f.id).collect();
+        assert_eq!(ids, [3, 4, 5], "capacity 3 keeps the newest three, oldest first");
+    }
+
+    #[test]
+    fn span_tree_is_well_formed() {
+        let t = Tracer::new(cfg_all());
+        let mut tr = t.begin(false, "default").unwrap();
+        tr.admitted();
+        let t0 = Instant::now();
+        tr.record_tick(
+            t0,
+            Duration::from_micros(10),
+            Duration::from_micros(5),
+            Duration::from_micros(100),
+            Duration::from_micros(20),
+        );
+        t.finish(tr);
+        let f = &t.recent()[0];
+        assert_eq!(f.ticks, 1);
+        let span = |name: &str| f.spans.iter().find(|s| s.name == name).unwrap().clone();
+        let (req, decode, tick) = (span("request"), span("decode"), span("tick"));
+        assert!(req.start_us <= decode.start_us && decode.end_us <= req.end_us);
+        assert!(decode.start_us <= tick.start_us && tick.end_us <= decode.end_us);
+        let mut cursor = tick.start_us;
+        for phase in ["decide", "gather", "forward", "finish"] {
+            let s = span(phase);
+            assert_eq!(s.start_us, cursor, "{phase} starts where the previous phase ended");
+            cursor = s.end_us;
+        }
+        assert_eq!(cursor, tick.end_us, "phases tile the tick exactly");
+    }
+
+    #[test]
+    fn slot_trace_scratch_flushes_per_decision() {
+        let mut st = SlotTrace::new(Instant::now());
+        st.note_mask(42, Some(true));
+        st.note_intervention();
+        st.commit(0, 7, "sampled", Some(99));
+        st.commit(1, 8, "speculative", None);
+        assert_eq!(st.decisions.len(), 2);
+        let d0 = &st.decisions[0];
+        assert!(d0.masked && d0.intervention);
+        assert_eq!((d0.mask_card, d0.cache_hit, d0.state), (Some(42), Some(true), Some(99)));
+        let d1 = &st.decisions[1];
+        assert!(!d1.masked && !d1.intervention, "scratch must not leak across commits");
+        assert_eq!(d1.origin, "speculative");
+    }
+
+    #[test]
+    fn perfetto_roundtrips_and_renders() {
+        let t = Tracer::new(cfg_all());
+        let mut tr = t.begin(false, "default").unwrap();
+        tr.admitted();
+        let mut st = SlotTrace::new(tr.started);
+        st.note_mask(12, Some(false));
+        st.commit(0, 3, "sampled", Some(1));
+        tr.record_tick(
+            Instant::now(),
+            Duration::from_micros(10),
+            Duration::from_micros(5),
+            Duration::from_micros(50),
+            Duration::from_micros(8),
+        );
+        tr.merge_slot(st);
+        tr.event("healed 2 prompt tokens");
+        t.finish(tr);
+        let f = &t.recent()[0];
+        let parsed = Json::parse(&f.perfetto()).expect("perfetto output is valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i")));
+        for name in ["request", "decode", "tick", "decide", "gather", "forward", "finish"] {
+            assert!(
+                events.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some(name)),
+                "perfetto output missing span {name}"
+            );
+        }
+        let timeline = render_timeline(&parsed).expect("timeline renders");
+        assert!(timeline.contains("tick #0"));
+        assert!(timeline.contains("forward"));
+        assert!(timeline.contains("token[0]"));
+        assert!(timeline.contains("healed 2 prompt tokens"));
+    }
+
+    #[test]
+    fn timeline_rejects_non_trace_json() {
+        assert!(render_timeline(&Json::parse("{\"a\": 1}").unwrap()).is_err());
+        assert!(render_timeline(&Json::parse("[]").unwrap()).is_err());
+    }
+}

@@ -124,6 +124,31 @@ fn every_documented_error_reason_exists_in_engine() {
 }
 
 #[test]
+fn trace_surface_is_documented_everywhere() {
+    // The tracing wire surface: every capture cause the server emits
+    // (`cause` in trace dumps and the metric label) must be documented
+    // in PROTOCOL.md and spelled identically in trace.rs, and every
+    // tracing CLI flag must hold its row in OPERATIONS.md's table.
+    let trace_src = include_str!("../src/server/trace.rs");
+    for cause in ["sampled", "requested", "slow", "aborted"] {
+        assert!(
+            trace_src.contains(&format!("\"{cause}\"")),
+            "capture cause {cause:?} not found in src/server/trace.rs"
+        );
+        assert!(
+            PROTOCOL.contains(&format!("`{cause}`")),
+            "PROTOCOL.md no longer documents trace capture cause {cause:?}"
+        );
+    }
+    for flag in ["--trace-sample-rate", "--trace-slow-ms", "--trace-dir"] {
+        assert!(
+            OPERATIONS.contains(&format!("| `{flag}")),
+            "OPERATIONS.md flag table lost {flag:?}"
+        );
+    }
+}
+
+#[test]
 fn every_architecture_path_exists() {
     // ARCHITECTURE.md names source files in its module ↔ file table and
     // layer map; each `src/...` path it mentions must exist so the map

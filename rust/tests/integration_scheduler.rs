@@ -1,7 +1,8 @@
 //! Sharded-scheduler integration over the mock LM: cross-shard registry
 //! dedup + grammar-affinity routing, work-stealing spill, queue-overflow
 //! shedding, per-request deadlines, cancellation (in-process and via TCP
-//! disconnect), streaming, and the stats op.
+//! disconnect), streaming, tail-captured traces for aborted streams, and
+//! the stats op.
 
 use domino::constraint::{Constraint, ConstraintSpec};
 use domino::runtime::mock::{json_mock, MockFactory};
@@ -9,6 +10,7 @@ use domino::runtime::{LmFactory, LmSession};
 use domino::server::engine::{EngineCtx, GenRequest};
 use domino::server::scheduler::{Scheduler, SchedulerConfig};
 use domino::server::tcp;
+use domino::server::trace::{CaptureCause, TraceConfig};
 use domino::util::Json;
 use domino::TokenId;
 use std::io::{BufRead, BufReader, Write};
@@ -308,6 +310,51 @@ fn cancellation_aborts_mid_decode() {
     let m = sched.metrics().unwrap();
     assert_eq!(m.requests_cancelled, 1);
     assert_eq!(m.requests_completed, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn cancelled_stream_flushes_tail_trace_before_reap() {
+    // Tail-based capture only (head sampling off, slow bar unreachable):
+    // a cancelled streaming request must still land its trace in the
+    // ring — flushed with the abort, before the slot is reaped.
+    let (vocab, model) = json_mock(512);
+    let mut config = cfg(1, 1, 4);
+    config.trace = TraceConfig { slow: Some(Duration::from_secs(3600)), ..TraceConfig::default() };
+    let sched = Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(SlowFactory {
+                    inner: MockFactory { model: model.clone() },
+                    delay: Duration::from_millis(5),
+                }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        config,
+    );
+    let (stx, srx) = mpsc::channel();
+    let handle = sched.submit_streaming(req("json", 400, 0), stx);
+    // Wait for a streamed token so the abort lands mid-decode.
+    let first = srx.recv_timeout(Duration::from_secs(10)).expect("decode must start");
+    assert_eq!(first.index, 1);
+    handle.cancel();
+    let r = handle.recv().unwrap();
+    assert_eq!(r.error.as_deref(), Some("cancelled"));
+
+    // The final response is sent after the trace flush, so by now the
+    // ring must hold the tail-captured trace with its abort reason and
+    // the decisions recorded up to the cancel.
+    let recent = sched.tracer().recent();
+    assert_eq!(recent.len(), 1, "aborted stream must be tail-captured");
+    let t = &recent[0];
+    assert_eq!(t.cause, CaptureCause::Aborted);
+    assert_eq!(t.abort.as_deref(), Some("client_cancel"));
+    assert!(t.ticks >= 1, "the trace must cover the ticks before the abort");
+    assert!(!t.decisions.is_empty(), "streamed tokens must have decision records");
+    assert!(t.decisions.len() < 400, "the trace ends at the abort, not max_tokens");
+    assert!(t.spans.iter().any(|s| s.name == "decode"), "decode span closed by the flush");
     sched.shutdown();
 }
 

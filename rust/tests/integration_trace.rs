@@ -1,0 +1,236 @@
+//! Tracing integration over the mock LM: span-tree well-formedness on a
+//! real decode, one decision record per emitted token, token parity with
+//! tracing on vs off, the `{"op":"trace"}` ring dump (eviction order,
+//! inline `"trace": true` summaries) over TCP, and Perfetto trace-event
+//! JSON written via `trace_dir` — the same file `e2e_serving` emits.
+
+use domino::constraint::{Constraint, ConstraintSpec};
+use domino::runtime::mock::{json_mock, MockFactory};
+use domino::server::engine::{EngineCtx, GenRequest};
+use domino::server::scheduler::{Scheduler, SchedulerConfig};
+use domino::server::tcp;
+use domino::server::trace::{render_timeline, CaptureCause, TraceConfig};
+use domino::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Mock-LM scheduler with an explicit tracing policy.
+fn traced_sched(engines: usize, slots: usize, trace: TraceConfig) -> Scheduler {
+    let (vocab, model) = json_mock(512);
+    Scheduler::start(
+        move |_shard, registry| {
+            Ok(EngineCtx::with_registry(
+                Box::new(MockFactory { model: model.clone() }),
+                vocab.clone(),
+                registry,
+            ))
+        },
+        SchedulerConfig {
+            engines,
+            slots_per_engine: slots,
+            queue_depth: 64,
+            trace,
+            ..SchedulerConfig::default()
+        },
+    )
+}
+
+fn req(grammar: &str, max_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        constraint: Constraint::domino(ConstraintSpec::builtin(grammar)),
+        max_tokens,
+        temperature: Some(1.0),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// A throwaway per-test trace directory (unique per process + label).
+fn temp_trace_dir(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("domino-trace-test-{}-{label}", std::process::id()))
+}
+
+#[test]
+fn span_tree_is_well_formed_on_a_real_decode() {
+    let sched = traced_sched(1, 2, TraceConfig { sample_rate: 1.0, ..TraceConfig::default() });
+    let r = sched.generate(req("json", 24, 1)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let recent = sched.tracer().recent();
+    assert_eq!(recent.len(), 1, "sample_rate 1.0 captures the request");
+    let t = &recent[0];
+    assert_eq!(t.cause, CaptureCause::Sampled);
+    assert!(t.ticks >= 1, "a decode must record ticks");
+
+    // Every span closes (end >= start) and sits inside the request span.
+    let span = |name: &str| t.spans.iter().find(|s| s.name == name).unwrap();
+    let request = span("request");
+    for s in &t.spans {
+        assert!(s.end_us >= s.start_us, "span {} must close", s.name);
+        assert!(
+            s.start_us >= request.start_us && s.end_us <= request.end_us,
+            "span {} must nest inside request",
+            s.name
+        );
+    }
+    // queue and decode partition the request's life; ticks nest under
+    // decode; the four phases tile each tick exactly.
+    let decode = span("decode");
+    assert!(span("queue").end_us <= decode.start_us + 1, "queue ends where decode starts");
+    let ticks: Vec<_> = t.spans.iter().filter(|s| s.name == "tick").collect();
+    assert_eq!(ticks.len() as u64, t.ticks);
+    for tick in &ticks {
+        assert!(
+            tick.start_us >= decode.start_us && tick.end_us <= decode.end_us,
+            "ticks nest under decode"
+        );
+        let mut cursor = tick.start_us;
+        for phase in ["decide", "gather", "forward", "finish"] {
+            let s = t
+                .spans
+                .iter()
+                .find(|s| s.name == phase && s.start_us == cursor && s.end_us <= tick.end_us)
+                .unwrap_or_else(|| panic!("{phase} span tiling tick at {cursor}us"));
+            cursor = s.end_us;
+        }
+        assert_eq!(cursor, tick.end_us, "phases tile the tick exactly");
+    }
+
+    // One decision record per emitted token, indices dense from 0.
+    assert_eq!(t.decisions.len(), r.stats.tokens_out, "one decision per emitted token");
+    for (i, d) in t.decisions.iter().enumerate() {
+        assert_eq!(d.index, i, "decision indices must be dense and ordered");
+        assert_eq!(d.origin, "sampled", "plain decode commits sampled tokens");
+    }
+    sched.shutdown();
+}
+
+#[test]
+fn token_stream_is_identical_with_tracing_on_and_off() {
+    let off = traced_sched(1, 2, TraceConfig::default());
+    let on = traced_sched(1, 2, TraceConfig { sample_rate: 1.0, ..TraceConfig::default() });
+    for seed in [3, 17, 99] {
+        let a = off.generate(req("json", 32, seed)).unwrap();
+        let b = on.generate(req("json", 32, seed)).unwrap();
+        assert!(a.error.is_none() && b.error.is_none());
+        assert_eq!(a.text, b.text, "tracing must never change tokens (seed {seed})");
+        assert_eq!(a.stats.tokens_out, b.stats.tokens_out);
+    }
+    assert_eq!(off.tracer().recent().len(), 0, "disabled tracer captures nothing");
+    assert_eq!(on.tracer().recent().len(), 3);
+    off.shutdown();
+    on.shutdown();
+}
+
+#[test]
+fn trace_op_dumps_ring_in_eviction_order() {
+    // Ring capacity 3, five sequential requests on one single-slot shard:
+    // the dump must hold the newest three, oldest first.
+    let trace = TraceConfig { sample_rate: 1.0, ring_capacity: 3, ..TraceConfig::default() };
+    let sched = Arc::new(traced_sched(1, 1, trace));
+    for seed in 0..5 {
+        let r = sched.generate(req("json", 8, seed)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"op": "trace"}}"#).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    let traces = v.get("traces").and_then(|t| t.as_arr()).unwrap();
+    assert_eq!(traces.len(), 3, "ring capacity bounds the dump: {line}");
+    let ids: Vec<f64> =
+        traces.iter().map(|t| t.get("id").and_then(|i| i.as_f64()).unwrap()).collect();
+    assert_eq!(ids, [3.0, 4.0, 5.0], "oldest evicted first, dump oldest-first");
+    for t in traces {
+        assert!(t.get("spans").and_then(|s| s.as_arr()).is_some_and(|s| !s.is_empty()));
+        assert!(t.get("decisions").and_then(|d| d.as_arr()).is_some_and(|d| !d.is_empty()));
+        assert_eq!(t.get("cause").and_then(|c| c.as_str()), Some("sampled"));
+    }
+}
+
+#[test]
+fn wire_trace_flag_returns_inline_summary() {
+    // Tracing otherwise fully off: a `"trace": true` request is still
+    // captured and answered with an inline summary.
+    let sched = Arc::new(traced_sched(1, 1, TraceConfig::default()));
+    let addr = tcp::spawn_serve(sched.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"prompt": "", "grammar": "json", "max_tokens": 8, "trace": true}}"#)
+        .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("error"), Some(&Json::Null), "{line}");
+    let summary = v.get("trace").expect("inline trace summary");
+    assert_eq!(summary.get("cause").and_then(|c| c.as_str()), Some("requested"));
+    assert!(summary.get("ticks").and_then(|t| t.as_f64()).is_some_and(|t| t >= 1.0));
+    assert!(summary.get("decisions").and_then(|d| d.as_f64()).is_some_and(|d| d >= 1.0));
+
+    // An untraced request on the same connection carries no trace key.
+    writeln!(conn, r#"{{"prompt": "", "grammar": "json", "max_tokens": 8}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("trace"), None, "{line}");
+    assert_eq!(sched.tracer().recent().len(), 1, "only the requested trace was captured");
+}
+
+#[test]
+fn trace_dir_writes_loadable_perfetto_json() {
+    let dir = temp_trace_dir("perfetto");
+    let _ = std::fs::remove_dir_all(&dir);
+    let trace =
+        TraceConfig { sample_rate: 1.0, trace_dir: Some(dir.clone()), ..TraceConfig::default() };
+    let sched = traced_sched(1, 1, trace);
+    let r = sched.generate(req("json", 16, 5)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    sched.shutdown();
+
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("trace dir created")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    files.sort();
+    assert_eq!(files.len(), 1, "one captured request, one trace file");
+    let name = files[0].file_name().unwrap().to_str().unwrap();
+    assert!(name.starts_with("trace-") && name.ends_with(".json"), "perfetto naming: {name}");
+
+    // The file is valid Chrome trace-event JSON with complete-event
+    // spans for every tick phase — Perfetto's loadable format.
+    let raw = std::fs::read_to_string(&files[0]).unwrap();
+    let parsed = Json::parse(&raw).expect("trace file parses as JSON");
+    let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    let complete = |name: &str| {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                    && e.get("name").and_then(|n| n.as_str()) == Some(name)
+            })
+            .count()
+    };
+    let ticks = complete("tick");
+    assert!(ticks >= 1, "decode must record ticks");
+    for phase in ["decide", "gather", "forward", "finish"] {
+        assert_eq!(complete(phase), ticks, "{phase} span present for every tick");
+    }
+    assert_eq!(complete("request"), 1);
+    assert_eq!(complete("decode"), 1);
+    let instants = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+        .count();
+    assert!(instants >= r.stats.tokens_out, "one instant per decision at minimum");
+
+    // The CLI renderer consumes the same file.
+    let timeline = render_timeline(&parsed).expect("domino trace renders the file");
+    assert!(timeline.contains("tick #0"));
+    assert!(timeline.contains("forward"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
